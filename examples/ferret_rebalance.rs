@@ -1,0 +1,49 @@
+//! The Figure-4 workflow: use per-thread CMetric to rebalance Ferret's
+//! pipeline stages until the profile flattens (paper: 2-1-18-39, ~50%
+//! faster than 15-15-15-15).
+
+use gapp::gapp::{profile, GappConfig};
+use gapp::runtime::AnalysisEngine;
+use gapp::simkernel::KernelConfig;
+use gapp::util::Summary;
+use gapp::workload::apps::{ferret, FerretConfig};
+
+fn show(label: &str, cfg: FerretConfig) -> anyhow::Result<(u64, f64)> {
+    let app = ferret(31, cfg);
+    let gcfg = GappConfig {
+        dt: 500_000,
+        ..Default::default()
+    };
+    let (report, _) = profile(&app, KernelConfig::default(), gcfg, AnalysisEngine::auto())?;
+    let cms: Vec<f64> = report.threads.iter().map(|t| t.cm_ms).collect();
+    let s = Summary::of(&cms);
+    println!(
+        "{label:<24} runtime {:>8.2} ms | CMetric mean {:>7.2} ms cv {:.3} | top {:?}",
+        report.runtime_ns as f64 / 1e6,
+        s.mean,
+        s.cv(),
+        report.top_functions(2)
+    );
+    // The Figure-4 curve: CMetric per thread, in spawn order.
+    let series: Vec<String> = report
+        .threads
+        .iter()
+        .map(|t| format!("{:.0}", t.cm_ms))
+        .collect();
+    println!("  per-thread CMetric (ms): [{}]", series.join(","));
+    Ok((report.runtime_ns, s.cv()))
+}
+
+fn main() -> anyhow::Result<()> {
+    let (t0, cv0) = show("default 15-15-15-15", FerretConfig::default())?;
+    let (t1, _) = show("[10]'s 20-1-22-21", FerretConfig::with_alloc(20, 1, 22, 21))?;
+    let (t2, cv2) = show("balanced 2-1-18-39", FerretConfig::with_alloc(2, 1, 18, 39))?;
+    println!(
+        "\nimprovement: balanced {:.1}% (paper ~50%), [10] {:.1}% (paper ~23%); CMetric CV {:.3} -> {:.3}",
+        100.0 * (t0 as f64 - t2 as f64) / t0 as f64,
+        100.0 * (t0 as f64 - t1 as f64) / t0 as f64,
+        cv0,
+        cv2
+    );
+    Ok(())
+}

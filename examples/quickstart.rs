@@ -1,0 +1,40 @@
+//! Quickstart: profile one synthetic application with GAPP and print the
+//! ranked bottleneck report.
+//!
+//! ```sh
+//! cargo run --release --example quickstart            # native backend
+//! make artifacts && cargo run --release --example quickstart  # XLA backend
+//! ```
+
+use gapp::gapp::{profile, GappConfig};
+use gapp::runtime::AnalysisEngine;
+use gapp::simkernel::KernelConfig;
+use gapp::workload::apps;
+
+fn main() -> anyhow::Result<()> {
+    // A 62-thread Dedup pipeline with the paper's 1-20-20-20-1 layout.
+    let app = apps::dedup(7, apps::DedupConfig::default());
+
+    // AnalysisEngine::auto() uses the AOT-compiled XLA artifacts when
+    // `make artifacts` has been run, else the native fallback.
+    let engine = AnalysisEngine::auto();
+    println!("analysis backend: {}", engine.backend_name());
+
+    let (report, kernel) = profile(
+        &app,
+        KernelConfig::default(), // 64 simulated CPUs
+        GappConfig::default(),   // Nmin = n/2, Δt = 3 ms
+        engine,
+    )?;
+
+    println!("{report}");
+    println!(
+        "kernel: {} context switches, {} wakeups, {} probe-ns charged",
+        kernel.stats.switches, kernel.stats.wakeups, kernel.stats.probe_ns
+    );
+    println!("\ntop critical functions (paper Table 2: deflate_slow):");
+    for (f, n) in report.top_functions(5) {
+        println!("  {n:>6}  {f}");
+    }
+    Ok(())
+}

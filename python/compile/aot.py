@@ -1,0 +1,109 @@
+"""AOT compile path: lower the Layer-2 analysis graphs to HLO *text*.
+
+HLO text — NOT ``lowered.compile().serialize()`` and NOT a serialized
+``HloModuleProto`` — is the interchange format: jax >= 0.5 emits protos
+with 64-bit instruction ids which the Rust side's xla_extension 0.5.1
+rejects (``proto.id() <= INT_MAX``). The text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts written (all consumed by ``rust/src/runtime/engine.rs``):
+
+  artifacts/cmetric_b{B}_t{T}.hlo.txt   analyze() for batch B, slots T
+  artifacts/rank_p{P}_k{K}.hlo.txt      rank() for P paths, top-K
+  artifacts/MANIFEST.txt                one line per artifact: name shape info
+
+Run once via ``make artifacts``; the Makefile skips the rebuild when inputs
+are unchanged. Python never runs on the profiling path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# Variants compiled by default. The runtime picks by batch size; the
+# multiple batch sizes exist for the §Perf batching sweep.
+ANALYZE_VARIANTS = [
+    # (B, T, b_blk)
+    (256, 128, 128),
+    (1024, 128, 256),
+    (4096, 128, 256),
+]
+RANK_VARIANTS = [
+    # (P, K)
+    (1024, 16),
+    (4096, 32),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_analyze(b: int, t: int, b_blk: int) -> str:
+    fn = functools.partial(model.analyze, b_blk=b_blk)
+    a_spec = jax.ShapeDtypeStruct((b, t), jnp.float32)
+    t_spec = jax.ShapeDtypeStruct((b,), jnp.float32)
+    return to_hlo_text(jax.jit(fn).lower(a_spec, t_spec))
+
+
+def lower_rank(p: int, k: int) -> str:
+    fn = functools.partial(model.rank, k=k)
+    s_spec = jax.ShapeDtypeStruct((p,), jnp.float32)
+    return to_hlo_text(jax.jit(fn).lower(s_spec))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts/model.hlo.txt",
+                    help="path of the primary artifact; siblings are "
+                         "written next to it")
+    args = ap.parse_args()
+
+    out_dir = os.path.dirname(os.path.abspath(args.out))
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = []
+
+    for b, t, b_blk in ANALYZE_VARIANTS:
+        name = f"cmetric_b{b}_t{t}.hlo.txt"
+        text = lower_analyze(b, t, b_blk)
+        with open(os.path.join(out_dir, name), "w") as f:
+            f.write(text)
+        manifest.append(f"analyze {name} B={b} T={t} b_blk={b_blk}")
+        print(f"wrote {name}: {len(text)} chars")
+
+    for p, k in RANK_VARIANTS:
+        name = f"rank_p{p}_k{k}.hlo.txt"
+        text = lower_rank(p, k)
+        with open(os.path.join(out_dir, name), "w") as f:
+            f.write(text)
+        manifest.append(f"rank {name} P={p} K={k}")
+        print(f"wrote {name}: {len(text)} chars")
+
+    # The Makefile's primary target: alias of the default analyze variant.
+    default = f"cmetric_b{ANALYZE_VARIANTS[1][0]}_t{ANALYZE_VARIANTS[1][1]}.hlo.txt"
+    with open(os.path.join(out_dir, default)) as f:
+        primary = f.read()
+    with open(args.out, "w") as f:
+        f.write(primary)
+    manifest.append(f"primary model.hlo.txt -> {default}")
+
+    with open(os.path.join(out_dir, "MANIFEST.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"wrote MANIFEST.txt ({len(manifest)} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

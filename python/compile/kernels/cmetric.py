@@ -1,0 +1,134 @@
+"""Layer-1 Pallas kernel: fused batched CMetric aggregation.
+
+GAPP's hot analysis step reformulated for a matrix unit (DESIGN.md
+§Hardware-Adaptation): instead of the paper's scalar per-event update
+
+    global_cm += (t - t_switch) / thread_count
+
+we aggregate a *batch* of B switching intervals at once. The batch is an
+activity matrix ``A in {0,1}^{B x T}`` (interval x thread-slot) plus a
+duration vector ``t in R^B``, and the kernel computes, in a single pass
+over ``A``:
+
+    n      = A @ 1            (active threads per interval,   [B])
+    c      = t / max(n, 1)    (interval CMetric contribution, [B])
+    cm     = A^T c            (per-thread CMetric delta,      [T])
+    wall   = A^T t            (per-thread active wall time,   [T])
+    gcm    = sum([n > 0] c)   (global_cm delta,               scalar)
+
+The two reductions share the read of ``A``: both are vector-matrix
+products against the same tile, so each ``B_blk x T`` tile is loaded from
+HBM into VMEM exactly once and hit twice by the MXU. Accumulators live in
+the (revisited) output blocks across grid steps — the standard Pallas
+"initialize at step 0, accumulate after" pattern.
+
+VMEM budget per grid step (f32): ``B_blk*T + 3*B_blk + 3*T`` words; for
+``B_blk = 256, T = 128`` that is ~131 KB — far under the ~16 MB VMEM of a
+TPU core, leaving room for double-buffering the next A tile.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; real-TPU performance is *estimated* in EXPERIMENTS.md §Perf
+from the VMEM footprint and MXU utilization, per the session contract.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Thread-slot width. 128 = TPU lane width; apps in this repo use <= 64
+# worker threads plus a few helpers, so one slot page suffices.
+DEFAULT_T = 128
+# Default interval-batch block; swept in the §Perf pass (128/256/512).
+DEFAULT_B_BLK = 256
+
+
+def _cmetric_kernel(a_ref, t_ref, cm_ref, wall_ref, gcm_ref):
+    """One grid step: fold a [B_blk, T] activity tile into the accumulators."""
+    step = pl.program_id(0)
+
+    a = a_ref[...]                                   # [B_blk, T] f32
+    t = t_ref[...]                                   # [B_blk, 1] f32
+
+    # Row statistics: active-thread count and per-interval contribution.
+    n = jnp.sum(a, axis=1, keepdims=True)            # [B_blk, 1]
+    c = t / jnp.maximum(n, 1.0)                      # [B_blk, 1]
+    active = (n > 0.0).astype(jnp.float32)           # [B_blk, 1]
+
+    # Both reductions ride the same A tile. Stacking the two row vectors
+    # gives one [2, B_blk] x [B_blk, T] matmul for the MXU instead of two
+    # vector-matrix products.
+    lhs = jnp.concatenate([c, t], axis=1).T          # [2, B_blk]
+    acc = jnp.dot(lhs, a, preferred_element_type=jnp.float32)  # [2, T]
+    gcm_blk = jnp.sum(active * c)
+
+    @pl.when(step == 0)
+    def _init():
+        cm_ref[...] = jnp.zeros_like(cm_ref)
+        wall_ref[...] = jnp.zeros_like(wall_ref)
+        gcm_ref[...] = jnp.zeros_like(gcm_ref)
+
+    cm_ref[...] += acc[0:1, :]
+    wall_ref[...] += acc[1:2, :]
+    gcm_ref[...] += gcm_blk.reshape(1, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("b_blk",))
+def cmetric_pallas(a: jnp.ndarray, t: jnp.ndarray, *, b_blk: int = DEFAULT_B_BLK):
+    """Batched CMetric aggregation via the Pallas kernel.
+
+    Args:
+      a: ``[B, T]`` float32 activity matrix (entries in {0, 1}). ``B`` must
+         be a multiple of ``b_blk``.
+      t: ``[B]`` or ``[B, 1]`` float32 interval durations.
+      b_blk: interval-block size (grid = B / b_blk steps).
+
+    Returns:
+      ``(cm, wall, global_cm)``: shapes ``[T]``, ``[T]``, ``[]``.
+    """
+    b, tt = a.shape
+    if b % b_blk != 0:
+        raise ValueError(f"batch {b} not a multiple of block {b_blk}")
+    t2 = t.reshape(b, 1).astype(jnp.float32)
+    grid = (b // b_blk,)
+
+    cm2, wall2, gcm2 = pl.pallas_call(
+        _cmetric_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b_blk, tt), lambda i: (i, 0)),
+            pl.BlockSpec((b_blk, 1), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, tt), lambda i: (0, 0)),
+            pl.BlockSpec((1, tt), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, tt), jnp.float32),
+            jax.ShapeDtypeStruct((1, tt), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        ],
+        interpret=True,
+    )(a.astype(jnp.float32), t2)
+
+    return cm2[0], wall2[0], gcm2[0, 0]
+
+
+def vmem_bytes(b_blk: int = DEFAULT_B_BLK, t: int = DEFAULT_T) -> int:
+    """Static VMEM footprint estimate (f32 words x 4) for one grid step.
+
+    Counted: the A tile, the t tile, the n/c/active row vectors, the [2, T]
+    matmul result and the three resident accumulator blocks. Used by the
+    §Perf block-size sweep and reported in EXPERIMENTS.md.
+    """
+    words = b_blk * t + b_blk + 3 * b_blk + 2 * t + (2 * t + 1)
+    return 4 * words
+
+
+def mxu_flops(b: int, t: int = DEFAULT_T) -> int:
+    """MACs issued to the MXU per batch: one [2, B] x [B, T] matmul."""
+    return 2 * 2 * b * t

@@ -1,0 +1,75 @@
+"""Layer-1 kernel: top-K selection over merged call-path CMetric scores.
+
+The paper's user-space probe (§4.4) ends with "the entries with the top N
+total CMetrics are then taken as the bottlenecks". The score vector is
+small (one entry per distinct call path), so the interesting part is not
+the matmul but doing the selection without a full sort and without leaving
+the device. We use a Pallas kernel that performs iterative
+max-extract-mask over a padded score block — K passes over a VMEM-resident
+vector — which is exact and avoids materializing an argsort of the whole
+buffer.
+
+For very large P one would tile this (per-tile top-K then merge); P here
+is <= 4096 call paths, one VMEM block.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_P = 1024
+DEFAULT_K = 16
+
+_NEG = -3.0e38  # sentinel below any real score (scores are >= 0 ns)
+
+
+def _rank_kernel(k: int, s_ref, vals_ref, idx_ref):
+    """Iterative max-extract: K rounds over a VMEM-resident score row."""
+    s = s_ref[...]                                    # [1, P]
+    p = s.shape[1]
+    iota = jax.lax.broadcasted_iota(jnp.int32, (1, p), 1)
+
+    def body(j, carry):
+        s_cur, vals, idx = carry
+        m = jnp.max(s_cur)
+        # argmax via masked iota (first occurrence wins => stable ties).
+        hit = s_cur >= m
+        am = jnp.min(jnp.where(hit, iota, jnp.int32(2**30)))
+        vals = vals.at[0, j].set(m)
+        idx = idx.at[0, j].set(am)
+        s_cur = jnp.where(iota == am, jnp.float32(_NEG), s_cur)
+        return s_cur, vals, idx
+
+    vals0 = jnp.full((1, k), jnp.float32(_NEG))
+    idx0 = jnp.zeros((1, k), jnp.int32)
+    _, vals, idx = jax.lax.fori_loop(0, k, body, (s, vals0, idx0))
+    vals_ref[...] = vals
+    idx_ref[...] = idx
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def rank_pallas(scores: jnp.ndarray, *, k: int = DEFAULT_K):
+    """Top-K (values, indices) of a score vector, descending, stable ties.
+
+    Args:
+      scores: ``[P]`` float32 merged call-path CMetric totals.
+      k: number of bottleneck candidates to emit (paper's N).
+
+    Returns:
+      ``(values [k], indices [k])``.
+    """
+    p = scores.shape[0]
+    s2 = scores.reshape(1, p).astype(jnp.float32)
+    vals, idx = pl.pallas_call(
+        functools.partial(_rank_kernel, k),
+        out_shape=[
+            jax.ShapeDtypeStruct((1, k), jnp.float32),
+            jax.ShapeDtypeStruct((1, k), jnp.int32),
+        ],
+        interpret=True,
+    )(s2)
+    return vals[0], idx[0]

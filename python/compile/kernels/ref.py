@@ -1,0 +1,61 @@
+"""Pure-jnp oracle for the CMetric aggregation and ranking kernels.
+
+This is the correctness reference for the Pallas kernels in this package.
+It implements the batched form of GAPP's CMetric bookkeeping (paper §2.1,
+§4.1):
+
+  * ``n_i``      — number of active application threads in switching
+                   interval ``i`` (row-sum of the activity matrix).
+  * ``c_i``      — the interval's CMetric contribution ``t_i / max(n_i, 1)``.
+  * ``cm_j``     — per-thread CMetric delta ``sum_i A[i, j] * c_i``
+                   (what ``cm_hash[pid] += global_cm - local_cm``
+                   accumulates in the paper).
+  * ``wall_j``   — per-thread active wall time ``sum_i A[i, j] * t_i``
+                   (used to derive ``threads_av = wall / cm``).
+  * ``global_cm``— ``sum_i [n_i > 0] * c_i`` (the paper's ``global_cm``
+                   counter over the batch).
+
+Everything is float32; intervals with no active thread contribute nothing.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cmetric_ref(a: jnp.ndarray, t: jnp.ndarray):
+    """Reference CMetric aggregation.
+
+    Args:
+      a: activity matrix, shape ``[B, T]``, entries in {0, 1} (float).
+      t: interval durations, shape ``[B]`` or ``[B, 1]`` (float, ns scaled).
+
+    Returns:
+      ``(cm, wall, global_cm)`` with shapes ``[T]``, ``[T]``, ``[]``.
+    """
+    a = a.astype(jnp.float32)
+    t = t.reshape(-1).astype(jnp.float32)
+    n = jnp.sum(a, axis=1)                      # [B]
+    c = t / jnp.maximum(n, 1.0)                  # [B]
+    active = (n > 0).astype(jnp.float32)         # [B]
+    cm = a.T @ c                                 # [T]
+    wall = a.T @ t                               # [T]
+    global_cm = jnp.sum(active * c)              # []
+    return cm, wall, global_cm
+
+
+def threads_av_ref(cm: jnp.ndarray, wall: jnp.ndarray) -> jnp.ndarray:
+    """Time-weighted harmonic mean of the active-thread count per thread.
+
+    ``threads_av_j = wall_j / cm_j`` — exactly the quantity derivable from
+    the paper's ``global_cm``/``local_cm`` counters at timeslice end
+    (§4.2). Threads with no accumulated CMetric report 0.
+    """
+    return jnp.where(cm > 0, wall / jnp.maximum(cm, 1e-30), 0.0)
+
+
+def rank_ref(scores: jnp.ndarray, k: int):
+    """Reference top-K ranking of merged call-path CMetric scores (§4.4)."""
+    order = jnp.argsort(-scores)
+    idx = order[:k]
+    return scores[idx], idx

@@ -1,0 +1,69 @@
+"""Layer-2 JAX analysis graph for GAPP's user-space engine.
+
+Two exported computations, both AOT-lowered to HLO text by ``aot.py`` and
+executed from the Rust coordinator via PJRT (Python never runs on the
+profiling path):
+
+  ``analyze(A, t)`` — the batched CMetric step. Calls the Layer-1 Pallas
+    kernel for the fused ``A^T(t/n)`` / ``A^T t`` reductions and derives
+    ``threads_av`` (the paper's §4.2 trigger quantity) on top.
+
+  ``rank(scores)`` — top-K bottleneck selection over merged call-path
+    CMetric totals (paper §4.4), via the Layer-1 iterative-max kernel.
+
+Shapes are static per artifact (one compiled executable per variant, as the
+runtime expects); the Rust side zero-pads the final partial batch, which is
+exact because empty intervals (all-zero rows, t=0) contribute nothing.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.cmetric import cmetric_pallas
+from compile.kernels.rank import rank_pallas
+
+
+def analyze(a: jnp.ndarray, t: jnp.ndarray, *, b_blk: int = 256):
+    """Batched CMetric analysis over one ring-buffer drain.
+
+    Args:
+      a: ``[B, T]`` float32 activity matrix (interval x thread-slot).
+      t: ``[B]`` float32 interval durations (ns).
+
+    Returns a 4-tuple (the runtime indexes by position):
+      cm        ``[T]`` per-thread-slot CMetric delta,
+      wall      ``[T]`` per-thread-slot active wall time,
+      threads_av``[T]`` time-weighted harmonic mean of the active count
+                        while each slot was active (0 where cm == 0),
+      global_cm ``[1]``  batch global_cm delta.
+    """
+    cm, wall, gcm = cmetric_pallas(a, t, b_blk=b_blk)
+    threads_av = jnp.where(cm > 0, wall / jnp.maximum(cm, 1e-30), 0.0)
+    return cm, wall, threads_av, gcm.reshape(1)
+
+
+def rank(scores: jnp.ndarray, *, k: int = 16):
+    """Top-K call paths by total CMetric. Returns (values [k], idx [k])."""
+    return rank_pallas(scores, k=k)
+
+
+# ---------------------------------------------------------------------------
+# Pure-jnp twins — used by the pytest suite to confirm the Pallas kernels
+# lower to the same numbers inside the jitted graph, and handy for ad-hoc
+# sanity checks when Pallas interpret mode is too slow.
+# ---------------------------------------------------------------------------
+
+def analyze_jnp(a: jnp.ndarray, t: jnp.ndarray):
+    """analyze() without Pallas, same contract."""
+    from compile.kernels.ref import cmetric_ref
+
+    cm, wall, gcm = cmetric_ref(a, t)
+    threads_av = jnp.where(cm > 0, wall / jnp.maximum(cm, 1e-30), 0.0)
+    return cm, wall, threads_av, gcm.reshape(1)
+
+
+def rank_jnp(scores: jnp.ndarray, *, k: int = 16):
+    """rank() via lax.top_k (reference)."""
+    return jax.lax.top_k(scores, k)

@@ -1,0 +1,170 @@
+"""Kernel-vs-oracle correctness: the CORE numeric signal for Layer 1.
+
+Every test compares the Pallas kernels (interpret mode) against the
+pure-jnp oracle in ``compile.kernels.ref`` with assert_allclose.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.cmetric import cmetric_pallas, vmem_bytes
+from compile.kernels.rank import rank_pallas
+from compile.kernels import ref
+
+
+def _random_batch(rng, b, t, density=0.1, dur_scale=1e6):
+    """Random activity matrix + durations shaped like real drain batches."""
+    a = (rng.random((b, t)) < density).astype(np.float32)
+    dur = rng.gamma(2.0, dur_scale, size=(b,)).astype(np.float32)
+    return jnp.asarray(a), jnp.asarray(dur)
+
+
+# ---------------------------------------------------------------------------
+# cmetric kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,t,b_blk", [
+    (128, 128, 128),
+    (256, 128, 128),
+    (256, 128, 256),
+    (512, 64, 128),
+    (1024, 128, 256),
+    (256, 8, 64),
+])
+def test_cmetric_matches_ref(b, t, b_blk):
+    rng = np.random.default_rng(b * 31 + t)
+    a, dur = _random_batch(rng, b, t)
+    cm, wall, gcm = cmetric_pallas(a, dur, b_blk=b_blk)
+    cm_r, wall_r, gcm_r = ref.cmetric_ref(a, dur)
+    np.testing.assert_allclose(cm, cm_r, rtol=1e-5, atol=1e-2)
+    np.testing.assert_allclose(wall, wall_r, rtol=1e-5, atol=1e-2)
+    np.testing.assert_allclose(gcm, gcm_r, rtol=1e-5, atol=1e-2)
+
+
+@pytest.mark.parametrize("density", [0.0, 0.01, 0.5, 1.0])
+def test_cmetric_density_extremes(density):
+    rng = np.random.default_rng(7)
+    a, dur = _random_batch(rng, 256, 128, density=density)
+    cm, wall, gcm = cmetric_pallas(a, dur)
+    cm_r, wall_r, gcm_r = ref.cmetric_ref(a, dur)
+    np.testing.assert_allclose(cm, cm_r, rtol=1e-5, atol=1e-2)
+    np.testing.assert_allclose(wall, wall_r, rtol=1e-5, atol=1e-2)
+    np.testing.assert_allclose(gcm, gcm_r, rtol=1e-5, atol=1e-2)
+
+
+def test_cmetric_zero_batch_contributes_nothing():
+    """Zero-padded rows (the runtime's partial-batch trick) are exact no-ops."""
+    rng = np.random.default_rng(3)
+    a, dur = _random_batch(rng, 256, 128)
+    # Zero out the second half of the batch entirely.
+    a = a.at[128:].set(0.0)
+    dur = dur.at[128:].set(0.0)
+    cm, wall, gcm = cmetric_pallas(a, dur)
+    cm_h, wall_h, gcm_h = ref.cmetric_ref(a[:128], dur[:128])
+    np.testing.assert_allclose(cm, cm_h, rtol=1e-5, atol=1e-2)
+    np.testing.assert_allclose(wall, wall_h, rtol=1e-5, atol=1e-2)
+    np.testing.assert_allclose(gcm, gcm_h, rtol=1e-5, atol=1e-2)
+
+
+def test_cmetric_conservation():
+    """sum_j cm_j == sum_i T_i over intervals with >= 1 active thread.
+
+    This is the paper's invariant: each interval's duration is split
+    evenly among its active threads, so summing per-thread CMetric
+    recovers total busy wall time (Amdahl bookkeeping).
+    """
+    rng = np.random.default_rng(11)
+    a, dur = _random_batch(rng, 512, 128, density=0.05)
+    cm, _, gcm = cmetric_pallas(a, dur, b_blk=128)
+    n = np.asarray(a).sum(axis=1)
+    busy = float(np.asarray(dur)[n > 0].sum())
+    np.testing.assert_allclose(float(jnp.sum(cm)), busy, rtol=1e-4)
+    # And global_cm is the serial-equivalent time: sum of T_i/n_i.
+    contrib = np.where(n > 0, np.asarray(dur) / np.maximum(n, 1), 0.0)
+    np.testing.assert_allclose(float(gcm), contrib.sum(), rtol=1e-4)
+
+
+def test_cmetric_single_thread_equals_wall():
+    """With exactly one active thread everywhere, cm == wall (n_i = 1)."""
+    b, t = 256, 128
+    a = np.zeros((b, t), np.float32)
+    a[:, 5] = 1.0
+    dur = np.linspace(1.0, 100.0, b).astype(np.float32)
+    cm, wall, gcm = cmetric_pallas(jnp.asarray(a), jnp.asarray(dur))
+    np.testing.assert_allclose(cm, wall, rtol=1e-6)
+    np.testing.assert_allclose(float(cm[5]), dur.sum(), rtol=1e-5)
+    np.testing.assert_allclose(float(gcm), dur.sum(), rtol=1e-5)
+
+
+def test_cmetric_figure1_worked_example():
+    """The paper's Figure-1 trace: Thread3's slice spans T2 (n=2), T3 (n=3).
+
+    Interval layout (rows) with threads 1..4 in slots 0..3:
+      T1: {1}        T2: {3,4}      T3: {2,3,4}
+      T4: {2,4}      T5: {2}        T6: {1,2}
+    """
+    t = 128
+    rows = [
+        ([0], 10.0),
+        ([2, 3], 8.0),
+        ([1, 2, 3], 9.0),
+        ([1, 3], 6.0),
+        ([1], 4.0),
+        ([0, 1], 5.0),
+    ]
+    b = 128
+    a = np.zeros((b, t), np.float32)
+    dur = np.zeros((b,), np.float32)
+    for i, (slots, d) in enumerate(rows):
+        a[i, slots] = 1.0
+        dur[i] = d
+    cm, wall, _ = cmetric_pallas(jnp.asarray(a), jnp.asarray(dur), b_blk=128)
+    # Thread3 (slot 2): T2/2 + T3/3 = 4 + 3 = 7
+    np.testing.assert_allclose(float(cm[2]), 7.0, rtol=1e-6)
+    # Thread2 (slot 1): 9/3 + 6/2 + 4/1 + 5/2 = 3+3+4+2.5 = 12.5
+    np.testing.assert_allclose(float(cm[1]), 12.5, rtol=1e-6)
+    # threads_av for Thread3 = wall/cm = 17/7
+    np.testing.assert_allclose(float(wall[2]) / float(cm[2]), 17.0 / 7.0,
+                               rtol=1e-6)
+
+
+def test_vmem_budget_under_16mb():
+    for b_blk in (128, 256, 512, 1024):
+        assert vmem_bytes(b_blk, 128) < 16 * 2**20
+
+
+# ---------------------------------------------------------------------------
+# rank kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("p,k", [(64, 4), (1024, 16), (4096, 32), (128, 1)])
+def test_rank_matches_ref(p, k):
+    rng = np.random.default_rng(p + k)
+    scores = jnp.asarray(rng.gamma(1.5, 1e6, size=(p,)).astype(np.float32))
+    vals, idx = rank_pallas(scores, k=k)
+    vals_r, idx_r = ref.rank_ref(scores, k)
+    np.testing.assert_allclose(vals, vals_r, rtol=1e-6)
+    # Indices must point at the same values even under ties.
+    np.testing.assert_allclose(np.asarray(scores)[np.asarray(idx)],
+                               np.asarray(vals_r), rtol=1e-6)
+
+
+def test_rank_descending_and_valid_indices():
+    rng = np.random.default_rng(5)
+    scores = jnp.asarray(rng.random(1024).astype(np.float32))
+    vals, idx = rank_pallas(scores, k=16)
+    v = np.asarray(vals)
+    assert (np.diff(v) <= 1e-9).all()
+    assert ((np.asarray(idx) >= 0) & (np.asarray(idx) < 1024)).all()
+    assert len(set(np.asarray(idx).tolist())) == 16  # distinct winners
+
+
+def test_rank_ties_stable_first_index():
+    scores = np.zeros(256, np.float32)
+    scores[[10, 20, 30]] = 5.0
+    vals, idx = rank_pallas(jnp.asarray(scores), k=3)
+    assert np.asarray(idx).tolist() == [10, 20, 30]
+    np.testing.assert_allclose(np.asarray(vals), [5.0, 5.0, 5.0])

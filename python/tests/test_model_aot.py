@@ -1,0 +1,80 @@
+"""Layer-2 model contract + AOT lowering smoke tests."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile import model
+from compile import aot
+
+
+def _batch(b=256, t=128, seed=0):
+    rng = np.random.default_rng(seed)
+    a = (rng.random((b, t)) < 0.1).astype(np.float32)
+    dur = rng.gamma(2.0, 1e6, size=(b,)).astype(np.float32)
+    return jnp.asarray(a), jnp.asarray(dur)
+
+
+def test_analyze_shapes_and_dtypes():
+    a, dur = _batch()
+    cm, wall, tav, gcm = model.analyze(a, dur)
+    assert cm.shape == (128,) and wall.shape == (128,)
+    assert tav.shape == (128,) and gcm.shape == (1,)
+    for x in (cm, wall, tav, gcm):
+        assert x.dtype == jnp.float32
+
+
+def test_analyze_matches_jnp_twin():
+    a, dur = _batch(seed=3)
+    got = model.analyze(a, dur)
+    want = model.analyze_jnp(a, dur)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(g, w, rtol=1e-4, atol=1e-2)
+
+
+def test_threads_av_bounds():
+    """threads_av in [1, T] wherever the slot accumulated CMetric."""
+    a, dur = _batch(seed=5)
+    cm, _, tav, _ = model.analyze(a, dur)
+    tav = np.asarray(tav)
+    mask = np.asarray(cm) > 0
+    assert (tav[mask] >= 1.0 - 1e-4).all()
+    assert (tav[mask] <= 128.0 + 1e-4).all()
+    assert (tav[~mask] == 0.0).all()
+
+
+def test_rank_matches_topk():
+    rng = np.random.default_rng(9)
+    scores = jnp.asarray(rng.random(1024).astype(np.float32))
+    vals, idx = model.rank(scores, k=16)
+    vals_r, _ = model.rank_jnp(scores, k=16)
+    np.testing.assert_allclose(np.asarray(vals), np.asarray(vals_r), rtol=1e-6)
+    assert (np.asarray(scores)[np.asarray(idx)] == np.asarray(vals)).all()
+
+
+@pytest.mark.parametrize("b,t,b_blk", [(256, 128, 128)])
+def test_aot_analyze_lowers_to_hlo_text(b, t, b_blk):
+    text = aot.lower_analyze(b, t, b_blk)
+    assert text.startswith("HloModule")
+    assert f"f32[{b},{t}]" in text
+    # Tuple-return convention the Rust loader unwraps.
+    assert "ROOT" in text
+
+
+def test_aot_rank_lowers_to_hlo_text():
+    text = aot.lower_rank(64, 4)
+    assert text.startswith("HloModule")
+    assert "f32[64]" in text
+
+
+def test_aot_partial_batch_padding_exact():
+    """Zero-padding the tail of a batch is exactly a no-op in analyze()."""
+    a, dur = _batch(b=1024, seed=11)
+    a = a.at[700:].set(0.0)
+    dur = dur.at[700:].set(0.0)
+    full = model.analyze(a, dur)
+    head = model.analyze_jnp(a[:700].reshape(700, 128), dur[:700])
+    for g, w in zip(full, head):
+        np.testing.assert_allclose(g, w, rtol=1e-4, atol=1e-2)

@@ -1,0 +1,76 @@
+"""Hypothesis sweeps over the Pallas kernels' shape/dtype/content space.
+
+The session contract: hypothesis sweeps the kernel's shapes/dtypes and
+assert_allclose against ref.py. Shapes are drawn so B is a multiple of the
+block size (the runtime zero-pads to guarantee this).
+"""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels.cmetric import cmetric_pallas
+from compile.kernels.rank import rank_pallas
+from compile.kernels import ref
+
+# interpret-mode Pallas is slow; keep example counts modest but meaningful.
+_SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@st.composite
+def batches(draw):
+    b_blk = draw(st.sampled_from([32, 64, 128]))
+    nblk = draw(st.integers(1, 4))
+    b = b_blk * nblk
+    t = draw(st.sampled_from([8, 64, 128]))
+    density = draw(st.floats(0.0, 1.0))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    a = (rng.random((b, t)) < density).astype(np.float32)
+    # Durations spanning ns..ms magnitudes, incl. zeros.
+    dur = rng.choice(
+        [0.0, 1.0, 37.0, 1e3, 3e6, 1e7], size=(b,)
+    ).astype(np.float32) + rng.random(b).astype(np.float32)
+    return a, dur, b_blk
+
+
+@given(batches())
+@settings(**_SETTINGS)
+def test_cmetric_property_matches_ref(batch):
+    a, dur, b_blk = batch
+    cm, wall, gcm = cmetric_pallas(jnp.asarray(a), jnp.asarray(dur), b_blk=b_blk)
+    cm_r, wall_r, gcm_r = ref.cmetric_ref(jnp.asarray(a), jnp.asarray(dur))
+    np.testing.assert_allclose(cm, cm_r, rtol=1e-4, atol=1e-2)
+    np.testing.assert_allclose(wall, wall_r, rtol=1e-4, atol=1e-2)
+    np.testing.assert_allclose(gcm, gcm_r, rtol=1e-4, atol=1e-2)
+
+
+@given(batches())
+@settings(**_SETTINGS)
+def test_cmetric_property_conservation(batch):
+    """sum_j cm_j == busy wall time; 0 <= cm_j <= wall_j; gcm <= busy."""
+    a, dur, b_blk = batch
+    cm, wall, gcm = cmetric_pallas(jnp.asarray(a), jnp.asarray(dur), b_blk=b_blk)
+    cm = np.asarray(cm)
+    wall = np.asarray(wall)
+    n = a.sum(axis=1)
+    busy = float(dur[n > 0].sum())
+    np.testing.assert_allclose(cm.sum(), busy, rtol=1e-4, atol=1e-2)
+    assert (cm >= -1e-3).all()
+    assert (cm <= wall + 1e-2).all()          # n_i >= 1 while active
+    assert float(gcm) <= busy * (1 + 1e-5) + 1e-2
+
+
+@given(st.integers(0, 2**31 - 1), st.sampled_from([16, 100, 512, 1024]),
+       st.sampled_from([1, 4, 16]))
+@settings(**_SETTINGS)
+def test_rank_property_matches_ref(seed, p, k):
+    if k > p:
+        return
+    rng = np.random.default_rng(seed)
+    scores = rng.gamma(1.0, 1e5, size=(p,)).astype(np.float32)
+    vals, idx = rank_pallas(jnp.asarray(scores), k=k)
+    vals_r, _ = ref.rank_ref(jnp.asarray(scores), k)
+    np.testing.assert_allclose(np.asarray(vals), np.asarray(vals_r), rtol=1e-6)
+    assert (scores[np.asarray(idx)] == np.asarray(vals)).all()

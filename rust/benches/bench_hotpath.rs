@@ -1,0 +1,133 @@
+//! Hot-path microbenches for the §Perf pass: the simulated kernel's
+//! event loop, the probe fast path, the ring buffer, the batched
+//! analysis engine (native vs XLA), merge, and symbolization.
+//!
+//! `cargo bench --bench bench_hotpath -- <filter>`
+
+use gapp::ebpf::RingBuf;
+use gapp::gapp::records::{mask_set, Record, SlotMask};
+use gapp::gapp::{profile, GappConfig};
+use gapp::runtime::{analysis, AnalysisEngine, BATCH, T_SLOTS};
+use gapp::simkernel::KernelConfig;
+use gapp::util::bench::{sink, Bench};
+use gapp::util::Prng;
+use gapp::workload::apps;
+
+fn random_batch(seed: u64) -> (Vec<f32>, Vec<f32>) {
+    let mut rng = Prng::new(seed);
+    let a: Vec<f32> = (0..BATCH * T_SLOTS)
+        .map(|_| if rng.chance(0.07) { 1.0 } else { 0.0 })
+        .collect();
+    let t: Vec<f32> = (0..BATCH).map(|_| rng.exp(2e6) as f32).collect();
+    (a, t)
+}
+
+fn main() {
+    let mut b = Bench::from_env("hotpath");
+
+    // --- L3: simulated kernel event throughput -------------------------
+    b.bench("sched_run_streamcluster_8t", || {
+        let app = apps::streamcluster(8, 3);
+        let mut k = gapp::simkernel::Kernel::new(KernelConfig::default());
+        app.spawn_into(&mut k);
+        sink(k.run().unwrap());
+    });
+
+    b.bench("profile_canneal_16t_end_to_end", || {
+        let app = apps::canneal(16, 3);
+        sink(
+            profile(
+                &app,
+                KernelConfig::default(),
+                GappConfig::default(),
+                AnalysisEngine::native(),
+            )
+            .unwrap()
+            .0
+            .runtime_ns,
+        );
+    });
+
+    // --- eBPF ring buffer ----------------------------------------------
+    let mut rb: RingBuf<Record> = RingBuf::new(1 << 16);
+    let mut mask: SlotMask = [0; 2];
+    mask_set(&mut mask, 3);
+    b.bench_items("ringbuf_push_pop_4096", 4096, || {
+        for _ in 0..4096 {
+            rb.push(Record::Interval { dur: 1000, mask });
+        }
+        while rb.pop().is_some() {}
+    });
+
+    // --- L1/L2: batched analysis, native vs XLA -------------------------
+    let (a, t) = random_batch(11);
+    b.bench_items("analyze_native_b1024", BATCH as u64, || {
+        sink(analysis::native_analyze(&a, &t, T_SLOTS));
+    });
+    if let Ok(mut xla) = AnalysisEngine::xla() {
+        b.bench_items("analyze_xla_b1024", BATCH as u64, || {
+            sink(xla.analyze(&a, &t).unwrap());
+        });
+        let scores: Vec<f32> = (0..1024).map(|i| (i * 37 % 1013) as f32).collect();
+        b.bench("rank_xla_p1024_k16", || {
+            sink(xla.rank(&scores, 16).unwrap());
+        });
+        // §Perf batching sweep: per-interval throughput across the
+        // compiled analyze variants (PJRT call overhead amortization).
+        for batch in [256usize, 4096] {
+            if let Ok(mut e) = gapp::runtime::XlaEngine::load_variant(
+                &gapp::runtime::artifacts_dir(),
+                batch,
+                T_SLOTS,
+            ) {
+                let mut rng = Prng::new(batch as u64);
+                let av: Vec<f32> = (0..batch * T_SLOTS)
+                    .map(|_| if rng.chance(0.07) { 1.0 } else { 0.0 })
+                    .collect();
+                let tv: Vec<f32> = (0..batch).map(|_| rng.exp(2e6) as f32).collect();
+                b.bench_items(&format!("analyze_xla_b{batch}"), batch as u64, || {
+                    sink(e.analyze(&av, &tv).unwrap());
+                });
+            }
+        }
+    } else {
+        println!("  (artifacts/ absent: run `make artifacts` for XLA benches)");
+    }
+    let scores: Vec<f32> = (0..1024).map(|i| (i * 37 % 1013) as f32).collect();
+    b.bench("rank_native_p1024_k16", || {
+        sink(analysis::native_rank(&scores, 16));
+    });
+
+    // --- user-space merge + symbolize -----------------------------------
+    b.bench("merge_rank_10k_slices", || {
+        let mut u = gapp::gapp::userspace::UserProbe::new(AnalysisEngine::native());
+        for i in 0..10_000u64 {
+            u.consume(Record::SliceEnd {
+                ts_id: i,
+                pid: (i % 64) as u32,
+                cm_ns: (i % 977) as f64,
+                threads_av: 1.0,
+                ip: 0x40_0000 + (i % 40) * 16,
+                stack: vec![0x40_0000, 0x40_1000 + (i % 8) * 4096],
+                wait: gapp::simkernel::WaitKind::Futex,
+                woken_by: ((i + 1) % 64) as u32,
+            });
+        }
+        sink(u.merge_and_rank(5));
+    });
+
+    b.bench("symbolize_1k_addrs_cached", || {
+        let mut st = gapp::workload::SymbolTable::new();
+        for i in 0..32 {
+            st.add(&format!("fn{i}"), "app.c", 10 * i);
+        }
+        let mut sym = gapp::gapp::symbolize::Symbolizer::new(&st);
+        for rep in 0..4 {
+            for i in 0..256u64 {
+                sink(sym.resolve(0x40_0000 + (i % 32) * 4096 + rep));
+            }
+        }
+    });
+
+    b.finish();
+}

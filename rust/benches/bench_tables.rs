@@ -1,0 +1,79 @@
+//! End-to-end benches: one per paper table/figure. Each bench times the
+//! full regeneration (workload + profiler + post-processing) and prints
+//! the regenerated artefact once, so `cargo bench` doubles as the
+//! reproduction run.
+//!
+//! Filter like criterion: `cargo bench --bench bench_tables -- fig4`.
+
+use gapp::experiments::{
+    baselines_cmp, dedup_alloc, fig3, fig4, fig5, fig6, fig7, overhead, sensitivity,
+    table2, EngineKind,
+};
+use gapp::util::bench::{Bench, BenchConfig};
+
+fn cfg() -> BenchConfig {
+    BenchConfig {
+        warmup_iters: 0,
+        min_samples: 2,
+        min_time: std::time::Duration::from_millis(1),
+        batch: 1,
+    }
+}
+
+fn main() {
+    let engine = EngineKind::Auto;
+    let seed = 7;
+    let mut b = Bench::new("paper-tables", cfg());
+    // Print each artefact once so bench output is self-documenting.
+    println!("{}", table2::render(&table2::run(engine, 64, seed).unwrap()));
+    b.bench("table2_full_13_apps", || {
+        gapp::util::bench::sink(table2::run(engine, 64, seed).unwrap());
+    });
+
+    println!("{}", fig3::render(&fig3::run(engine, 32, seed).unwrap()));
+    b.bench("fig3_bodytrack", || {
+        gapp::util::bench::sink(fig3::run(engine, 32, seed).unwrap());
+    });
+
+    println!("{}", fig4::render(&fig4::run(engine, seed).unwrap()));
+    b.bench("fig4_ferret_allocs", || {
+        gapp::util::bench::sink(fig4::run(engine, seed).unwrap());
+    });
+
+    println!("{}", fig5::render(&fig5::run(engine, seed).unwrap()));
+    b.bench("fig5_nektar_modes", || {
+        gapp::util::bench::sink(fig5::run(engine, seed).unwrap());
+    });
+
+    println!("{}", fig6::render(&fig6::run(engine, seed).unwrap()));
+    b.bench("fig6_nektar_blas", || {
+        gapp::util::bench::sink(fig6::run(engine, seed).unwrap());
+    });
+
+    println!("{}", fig7::render(&fig7::run(engine, seed).unwrap()));
+    b.bench("fig7_mysql_tuning", || {
+        gapp::util::bench::sink(fig7::run(engine, seed).unwrap());
+    });
+
+    println!("{}", dedup_alloc::render(&dedup_alloc::run(engine, seed).unwrap()));
+    b.bench("dedup_alloc_sweep", || {
+        gapp::util::bench::sink(dedup_alloc::run(engine, seed).unwrap());
+    });
+
+    println!("{}", sensitivity::render(&sensitivity::run(engine, seed).unwrap()));
+    b.bench("sensitivity_nmin_dt", || {
+        gapp::util::bench::sink(sensitivity::run(engine, seed).unwrap());
+    });
+
+    println!("{}", overhead::render(&overhead::run(engine, 64, seed).unwrap()));
+    b.bench("overhead_13_apps", || {
+        gapp::util::bench::sink(overhead::run(engine, 64, seed).unwrap());
+    });
+
+    println!("{}", baselines_cmp::render(&baselines_cmp::run(engine, seed).unwrap()));
+    b.bench("baselines_wperf_coz_critstacks", || {
+        gapp::util::bench::sink(baselines_cmp::run(engine, seed).unwrap());
+    });
+
+    b.finish();
+}

@@ -1,0 +1,24 @@
+//! Comparator profilers from the paper's §6 related-work discussion.
+//!
+//! Each is a real (if compact) implementation of the cited system's core
+//! mechanism, attached to the same simulated kernel through the same
+//! [`crate::simkernel::Probe`] interface, so the comparisons in
+//! `experiments/baselines_cmp.rs` measure mechanism against mechanism:
+//!
+//! * [`wperf`] — wPerf-style off-CPU analysis [31]: record waiting
+//!   segments, build the wait-for graph, detect knots. Much heavier
+//!   post-processing than GAPP (the paper quotes 271.9 s vs 3 s).
+//! * [`coz`] — Coz-style causal profiling [10]: randomized virtual-
+//!   speedup experiments; results vary across runs (the paper's
+//!   reproducibility complaint).
+//! * [`crit_stacks`] — Criticality-Stacks-style ranking [14] that counts
+//!   a thread active only while it *occupies a core*; goes wrong when
+//!   threads > CPUs (the paper's §6 argument for using TASK_RUNNING).
+
+pub mod wperf;
+pub mod coz;
+pub mod crit_stacks;
+
+pub use coz::{CozProfiler, CozResult};
+pub use crit_stacks::{CritStacksProbeHandle, CritStacksProfiler};
+pub use wperf::{WPerfProbeHandle, WPerfProfiler, WaitForGraph};

@@ -1,0 +1,183 @@
+//! eBPF map analogues: global hash maps, global scalars, per-CPU scalars.
+//!
+//! These back the Table-1 map set (`cm_hash`, `global_cm`, `local_cm`,
+//! `thread_count`, `total_count`, `thread_list`, `t_switch`). They track
+//! their own byte footprint so the profiler can report the paper's memory
+//! column (M) from mechanism rather than guesswork.
+
+use std::collections::HashMap;
+
+/// A BPF_MAP_TYPE_HASH with u64 keys and values.
+#[derive(Debug, Default)]
+pub struct HashMap64 {
+    name: &'static str,
+    inner: HashMap<u64, u64>,
+    /// High-water mark of entries, for memory accounting.
+    peak: usize,
+}
+
+impl HashMap64 {
+    pub fn new(name: &'static str) -> HashMap64 {
+        HashMap64 {
+            name,
+            inner: HashMap::new(),
+            peak: 0,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+
+    #[inline]
+    pub fn get(&self, k: u64) -> Option<u64> {
+        self.inner.get(&k).copied()
+    }
+
+    #[inline]
+    pub fn insert(&mut self, k: u64, v: u64) {
+        self.inner.insert(k, v);
+        self.peak = self.peak.max(self.inner.len());
+    }
+
+    /// `map[k] += delta` (missing key starts at 0), BPF-style.
+    #[inline]
+    pub fn add(&mut self, k: u64, delta: u64) {
+        *self.inner.entry(k).or_insert(0) += delta;
+        self.peak = self.peak.max(self.inner.len());
+    }
+
+    #[inline]
+    pub fn remove(&mut self, k: u64) -> Option<u64> {
+        self.inner.remove(&k)
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.inner.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (u64, u64)> + '_ {
+        self.inner.iter().map(|(k, v)| (*k, *v))
+    }
+
+    /// Peak memory estimate: key + value + bucket overhead per entry
+    /// (matches the 32-byte htab element the kernel allocates for 8/8).
+    pub fn peak_bytes(&self) -> u64 {
+        (self.peak as u64) * 32
+    }
+}
+
+/// A global scalar (BPF_MAP_TYPE_ARRAY of size 1).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct Scalar {
+    v: u64,
+}
+
+impl Scalar {
+    #[inline]
+    pub fn get(&self) -> u64 {
+        self.v
+    }
+
+    #[inline]
+    pub fn set(&mut self, v: u64) {
+        self.v = v;
+    }
+
+    #[inline]
+    pub fn add(&mut self, d: u64) {
+        self.v += d;
+    }
+
+    #[inline]
+    pub fn sub_sat(&mut self, d: u64) {
+        self.v = self.v.saturating_sub(d);
+    }
+}
+
+/// A per-CPU scalar (BPF_MAP_TYPE_PERCPU_ARRAY of size 1): each CPU reads
+/// and writes its own slot without synchronization, exactly how GAPP's
+/// `local_cm` and `t_switch` avoid cross-core contention.
+#[derive(Debug)]
+pub struct PerCpuScalar {
+    slots: Vec<u64>,
+}
+
+impl PerCpuScalar {
+    pub fn new(ncpu: usize) -> PerCpuScalar {
+        PerCpuScalar {
+            slots: vec![0; ncpu],
+        }
+    }
+
+    #[inline]
+    pub fn get(&self, cpu: usize) -> u64 {
+        self.slots[cpu]
+    }
+
+    #[inline]
+    pub fn set(&mut self, cpu: usize, v: u64) {
+        self.slots[cpu] = v;
+    }
+
+    pub fn bytes(&self) -> u64 {
+        (self.slots.len() * 8) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hash_basic_ops() {
+        let mut m = HashMap64::new("cm_hash");
+        assert!(m.get(5).is_none());
+        m.insert(5, 100);
+        assert_eq!(m.get(5), Some(100));
+        m.add(5, 20);
+        assert_eq!(m.get(5), Some(120));
+        m.add(9, 7);
+        assert_eq!(m.get(9), Some(7));
+        assert_eq!(m.remove(5), Some(120));
+        assert_eq!(m.len(), 1);
+    }
+
+    #[test]
+    fn hash_peak_accounting() {
+        let mut m = HashMap64::new("thread_list");
+        for i in 0..100 {
+            m.insert(i, 1);
+        }
+        for i in 0..50 {
+            m.remove(i);
+        }
+        assert_eq!(m.len(), 50);
+        assert_eq!(m.peak_bytes(), 100 * 32);
+    }
+
+    #[test]
+    fn scalar_ops() {
+        let mut s = Scalar::default();
+        s.add(5);
+        s.sub_sat(2);
+        assert_eq!(s.get(), 3);
+        s.sub_sat(10);
+        assert_eq!(s.get(), 0); // never negative, like the paper's counters
+    }
+
+    #[test]
+    fn per_cpu_independent() {
+        let mut p = PerCpuScalar::new(4);
+        p.set(0, 10);
+        p.set(3, 30);
+        assert_eq!(p.get(0), 10);
+        assert_eq!(p.get(1), 0);
+        assert_eq!(p.get(3), 30);
+        assert_eq!(p.bytes(), 32);
+    }
+}

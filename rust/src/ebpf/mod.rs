@@ -1,0 +1,26 @@
+//! eBPF-like tracing substrate.
+//!
+//! The real GAPP is a set of eBPF programs attached to kernel tracepoints,
+//! communicating with a bcc user-space process through eBPF *maps* and a
+//! circular (perf) buffer. This module reproduces those mechanisms so the
+//! profiler layer above is written against the same primitives the paper
+//! describes (Table 1, Figure 2):
+//!
+//! * [`maps`] — hash/array/scalar maps with global and per-CPU flavours and
+//!   byte-accounting (the paper's memory column M).
+//! * [`ringbuf`] — the bounded circular buffer kernel probes write and the
+//!   user-space probe drains; overflow drops records, as perf buffers do.
+//! * [`verifier`] — a verifier-lite enforcing the static resource bounds
+//!   eBPF would (map counts/sizes, stack-capture depth, sampling period).
+//!
+//! Probe *cost* is not modeled here — it is charged by the simulated
+//! kernel when probes return their handler cost (see
+//! `simkernel::tracepoint::cost`).
+
+pub mod maps;
+pub mod ringbuf;
+pub mod verifier;
+
+pub use maps::{HashMap64, PerCpuScalar, Scalar};
+pub use ringbuf::{RingBuf, RingBufStats};
+pub use verifier::{ProgramSpec, Verifier, VerifierError};

@@ -1,0 +1,143 @@
+//! The circular buffer between kernel probes and the user-space probe
+//! (paper Figure 2). Bounded like a perf ring buffer: when the consumer
+//! falls behind, new records are *dropped* and counted, which is exactly
+//! the failure mode a real deployment tunes buffer pages against.
+
+/// Drop/throughput statistics for a ring buffer.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RingBufStats {
+    pub pushed: u64,
+    pub dropped: u64,
+    pub drained: u64,
+    /// High-water mark of queued records.
+    pub peak: usize,
+}
+
+/// Bounded FIFO of records of type `T`.
+#[derive(Debug)]
+pub struct RingBuf<T> {
+    buf: std::collections::VecDeque<T>,
+    capacity: usize,
+    pub stats: RingBufStats,
+    /// Approximate bytes per record, for memory accounting.
+    record_bytes: u64,
+}
+
+impl<T> RingBuf<T> {
+    pub fn new(capacity: usize) -> RingBuf<T> {
+        RingBuf {
+            buf: std::collections::VecDeque::with_capacity(capacity.min(1 << 16)),
+            capacity,
+            stats: RingBufStats::default(),
+            record_bytes: std::mem::size_of::<T>() as u64,
+        }
+    }
+
+    /// Push a record; returns false (and counts a drop) when full.
+    #[inline]
+    pub fn push(&mut self, rec: T) -> bool {
+        if self.buf.len() >= self.capacity {
+            self.stats.dropped += 1;
+            return false;
+        }
+        self.buf.push_back(rec);
+        self.stats.pushed += 1;
+        self.stats.peak = self.stats.peak.max(self.buf.len());
+        true
+    }
+
+    /// Pop the oldest record.
+    #[inline]
+    pub fn pop(&mut self) -> Option<T> {
+        let r = self.buf.pop_front();
+        if r.is_some() {
+            self.stats.drained += 1;
+        }
+        r
+    }
+
+    /// Drain up to `max` records into `out` (reuses the caller's vector —
+    /// the hot path never allocates).
+    pub fn drain_into(&mut self, max: usize, out: &mut Vec<T>) -> usize {
+        let n = max.min(self.buf.len());
+        for _ in 0..n {
+            out.push(self.buf.pop_front().unwrap());
+        }
+        self.stats.drained += n as u64;
+        n
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Peak memory footprint estimate.
+    pub fn peak_bytes(&self) -> u64 {
+        self.stats.peak as u64 * self.record_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_order() {
+        let mut rb = RingBuf::new(8);
+        for i in 0..5 {
+            assert!(rb.push(i));
+        }
+        for i in 0..5 {
+            assert_eq!(rb.pop(), Some(i));
+        }
+        assert!(rb.pop().is_none());
+    }
+
+    #[test]
+    fn overflow_drops_and_counts() {
+        let mut rb = RingBuf::new(3);
+        for i in 0..5 {
+            rb.push(i);
+        }
+        assert_eq!(rb.len(), 3);
+        assert_eq!(rb.stats.dropped, 2);
+        assert_eq!(rb.pop(), Some(0)); // oldest survives; new arrivals dropped
+    }
+
+    #[test]
+    fn drain_into_reuses_vec() {
+        let mut rb = RingBuf::new(16);
+        for i in 0..10 {
+            rb.push(i);
+        }
+        let mut out = Vec::with_capacity(16);
+        let n = rb.drain_into(4, &mut out);
+        assert_eq!(n, 4);
+        assert_eq!(out, vec![0, 1, 2, 3]);
+        let n2 = rb.drain_into(100, &mut out);
+        assert_eq!(n2, 6);
+        assert_eq!(rb.len(), 0);
+        assert_eq!(rb.stats.drained, 10);
+    }
+
+    #[test]
+    fn peak_tracking() {
+        let mut rb = RingBuf::new(100);
+        for i in 0..50 {
+            rb.push(i);
+        }
+        for _ in 0..50 {
+            rb.pop();
+        }
+        assert_eq!(rb.stats.peak, 50);
+        assert!(rb.peak_bytes() >= 50 * 4);
+    }
+}

@@ -1,0 +1,213 @@
+//! Verifier-lite: static admission checks for probe programs.
+//!
+//! The real eBPF verifier proves memory safety and bounded execution
+//! before a program may attach to a live kernel — the property the paper
+//! leans on in §7 ("the verifier in the eBPF framework ensures that the
+//! probes are safe to attach"). Our probes are Rust, so memory safety is
+//! the compiler's job; what we keep is the *resource admission* role: a
+//! probe declares its static resource spec and the verifier rejects specs
+//! that would be rejected (or dangerous) in a real deployment. Every GAPP
+//! configuration is passed through this check before attaching.
+
+use std::fmt;
+
+/// Static resource declaration for a probe program.
+#[derive(Clone, Debug)]
+pub struct ProgramSpec {
+    pub name: &'static str,
+    /// Number of eBPF maps the program creates.
+    pub maps: usize,
+    /// Total bytes of map value storage requested up front.
+    pub map_bytes: u64,
+    /// Ring-buffer capacity in records.
+    pub ringbuf_records: usize,
+    /// Deepest stack capture requested (the paper's M).
+    pub stack_depth: usize,
+    /// Sampling period requested, if any (the paper's Δt).
+    pub sample_period_ns: Option<u64>,
+    /// Upper bound on instructions per handler invocation (loop-free
+    /// eBPF programs have a static bound; we require the declaration).
+    pub max_insns: u32,
+}
+
+/// Rejection reasons.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum VerifierError {
+    TooManyMaps { got: usize, limit: usize },
+    MapBytesExceeded { got: u64, limit: u64 },
+    RingBufTooLarge { got: usize, limit: usize },
+    StackDepthExceeded { got: usize, limit: usize },
+    SamplePeriodTooSmall { got: u64, floor: u64 },
+    ProgramTooLong { got: u32, limit: u32 },
+    ZeroInstructionProgram,
+}
+
+impl fmt::Display for VerifierError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            VerifierError::TooManyMaps { got, limit } => {
+                write!(f, "too many maps: {got} > {limit}")
+            }
+            VerifierError::MapBytesExceeded { got, limit } => {
+                write!(f, "map storage {got} B exceeds {limit} B")
+            }
+            VerifierError::RingBufTooLarge { got, limit } => {
+                write!(f, "ring buffer {got} records exceeds {limit}")
+            }
+            VerifierError::StackDepthExceeded { got, limit } => {
+                write!(f, "stack capture depth {got} exceeds {limit}")
+            }
+            VerifierError::SamplePeriodTooSmall { got, floor } => {
+                write!(f, "sampling period {got} ns below floor {floor} ns")
+            }
+            VerifierError::ProgramTooLong { got, limit } => {
+                write!(f, "program length {got} insns exceeds {limit}")
+            }
+            VerifierError::ZeroInstructionProgram => {
+                write!(f, "empty probe program")
+            }
+        }
+    }
+}
+
+impl std::error::Error for VerifierError {}
+
+/// Admission limits (defaults mirror kernel-era eBPF constants where one
+/// exists: 1M instructions, 127-frame stack captures).
+#[derive(Clone, Debug)]
+pub struct Verifier {
+    pub max_maps: usize,
+    pub max_map_bytes: u64,
+    pub max_ringbuf_records: usize,
+    pub max_stack_depth: usize,
+    /// Floor on Δt: sampling faster than this would dominate runtime.
+    pub min_sample_period_ns: u64,
+    pub max_insns: u32,
+}
+
+impl Default for Verifier {
+    fn default() -> Self {
+        Verifier {
+            max_maps: 64,
+            max_map_bytes: 1 << 30,       // 1 GB of map storage
+            max_ringbuf_records: 1 << 24, // 16M records
+            max_stack_depth: 127,         // PERF_MAX_STACK_DEPTH
+            min_sample_period_ns: 10_000, // 10 µs
+            max_insns: 1_000_000,         // BPF_COMPLEXITY_LIMIT_INSNS
+        }
+    }
+}
+
+impl Verifier {
+    /// Check a program spec; `Ok(())` admits it for attachment.
+    pub fn check(&self, spec: &ProgramSpec) -> Result<(), VerifierError> {
+        if spec.max_insns == 0 {
+            return Err(VerifierError::ZeroInstructionProgram);
+        }
+        if spec.maps > self.max_maps {
+            return Err(VerifierError::TooManyMaps {
+                got: spec.maps,
+                limit: self.max_maps,
+            });
+        }
+        if spec.map_bytes > self.max_map_bytes {
+            return Err(VerifierError::MapBytesExceeded {
+                got: spec.map_bytes,
+                limit: self.max_map_bytes,
+            });
+        }
+        if spec.ringbuf_records > self.max_ringbuf_records {
+            return Err(VerifierError::RingBufTooLarge {
+                got: spec.ringbuf_records,
+                limit: self.max_ringbuf_records,
+            });
+        }
+        if spec.stack_depth > self.max_stack_depth {
+            return Err(VerifierError::StackDepthExceeded {
+                got: spec.stack_depth,
+                limit: self.max_stack_depth,
+            });
+        }
+        if let Some(p) = spec.sample_period_ns {
+            if p < self.min_sample_period_ns {
+                return Err(VerifierError::SamplePeriodTooSmall {
+                    got: p,
+                    floor: self.min_sample_period_ns,
+                });
+            }
+        }
+        if spec.max_insns > self.max_insns {
+            return Err(VerifierError::ProgramTooLong {
+                got: spec.max_insns,
+                limit: self.max_insns,
+            });
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ok_spec() -> ProgramSpec {
+        ProgramSpec {
+            name: "gapp",
+            maps: 7,
+            map_bytes: 1 << 20,
+            ringbuf_records: 1 << 16,
+            stack_depth: 16,
+            sample_period_ns: Some(3_000_000),
+            max_insns: 4096,
+        }
+    }
+
+    #[test]
+    fn admits_gapp_like_spec() {
+        assert!(Verifier::default().check(&ok_spec()).is_ok());
+    }
+
+    #[test]
+    fn rejects_deep_stacks() {
+        let mut s = ok_spec();
+        s.stack_depth = 500;
+        let e = Verifier::default().check(&s).unwrap_err();
+        assert!(matches!(e, VerifierError::StackDepthExceeded { .. }));
+    }
+
+    #[test]
+    fn rejects_hot_sampler() {
+        let mut s = ok_spec();
+        s.sample_period_ns = Some(100);
+        let e = Verifier::default().check(&s).unwrap_err();
+        assert!(matches!(e, VerifierError::SamplePeriodTooSmall { .. }));
+        assert!(e.to_string().contains("sampling period"));
+    }
+
+    #[test]
+    fn rejects_monster_maps() {
+        let mut s = ok_spec();
+        s.map_bytes = 1 << 40;
+        assert!(matches!(
+            Verifier::default().check(&s),
+            Err(VerifierError::MapBytesExceeded { .. })
+        ));
+    }
+
+    #[test]
+    fn rejects_empty_program() {
+        let mut s = ok_spec();
+        s.max_insns = 0;
+        assert_eq!(
+            Verifier::default().check(&s),
+            Err(VerifierError::ZeroInstructionProgram)
+        );
+    }
+
+    #[test]
+    fn no_sampler_is_fine() {
+        let mut s = ok_spec();
+        s.sample_period_ns = None;
+        assert!(Verifier::default().check(&s).is_ok());
+    }
+}

@@ -1,0 +1,102 @@
+//! Figure 6 + §5.3 Nektar++: dgemv_ is the top critical function under
+//! reference BLAS; relinking with OpenBLAS improves runtime ~27% and
+//! moves the bottleneck to Vmath::Dot2.
+
+use anyhow::Result;
+
+use crate::gapp::GappConfig;
+use crate::simkernel::KernelConfig;
+use crate::workload::apps::{nektar, BlasImpl, NektarConfig};
+
+use super::runner::{profiled_run, EngineKind};
+
+#[derive(Clone, Debug)]
+pub struct Fig6Result {
+    pub reference_top: Vec<(String, u64)>,
+    pub openblas_top: Vec<(String, u64)>,
+    pub reference_runtime_ns: u64,
+    pub openblas_runtime_ns: u64,
+    pub improvement_pct: f64,
+}
+
+pub fn run(engine: EngineKind, seed: u64) -> Result<Fig6Result> {
+    let gcfg = GappConfig {
+        dt: 500_000, // dgemv_ slices are ~1.5 ms here; sample well inside
+        ..Default::default()
+    };
+    let reference = profiled_run(
+        || nektar(seed, NektarConfig::default()),
+        KernelConfig::default(),
+        gcfg.clone(),
+        engine,
+    )?;
+    let openblas = profiled_run(
+        || {
+            nektar(
+                seed,
+                NektarConfig {
+                    blas: BlasImpl::OpenBlas,
+                    ..Default::default()
+                },
+            )
+        },
+        KernelConfig::default(),
+        gcfg,
+        engine,
+    )?;
+    let improvement = 100.0
+        * (reference.base_ns as f64 - openblas.base_ns as f64)
+        / reference.base_ns as f64;
+    Ok(Fig6Result {
+        reference_top: reference.report.top_functions(4),
+        openblas_top: openblas.report.top_functions(4),
+        reference_runtime_ns: reference.base_ns,
+        openblas_runtime_ns: openblas.base_ns,
+        improvement_pct: improvement,
+    })
+}
+
+pub fn render(r: &Fig6Result) -> String {
+    format!(
+        "== Figure 6 / §5.3 Nektar++ BLAS ==\n\
+         reference BLAS top: {:?}\n\
+         OpenBLAS top:       {:?}\n\
+         runtime {:.1} ms -> {:.1} ms ({:.1}% better; paper: 27%)\n",
+        r.reference_top,
+        r.openblas_top,
+        r.reference_runtime_ns as f64 / 1e6,
+        r.openblas_runtime_ns as f64 / 1e6,
+        r.improvement_pct
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rank_of(top: &[(String, u64)], f: &str) -> Option<usize> {
+        top.iter().position(|(n, _)| n == f)
+    }
+
+    #[test]
+    fn fig6_bottleneck_moves_with_blas() {
+        let r = run(EngineKind::Native, 7).unwrap();
+        // dgemv_ leads under reference BLAS.
+        assert_eq!(
+            rank_of(&r.reference_top, "dgemv_"),
+            Some(0),
+            "reference top: {:?}",
+            r.reference_top
+        );
+        // With OpenBLAS, Vmath::Dot2 overtakes dgemv_.
+        let dot2 = rank_of(&r.openblas_top, "Vmath::Dot2").expect("Dot2 present");
+        let dgemv = rank_of(&r.openblas_top, "dgemv_").unwrap_or(usize::MAX);
+        assert!(dot2 < dgemv, "openblas top: {:?}", r.openblas_top);
+        // Runtime gain near the paper's 27%.
+        assert!(
+            (15.0..40.0).contains(&r.improvement_pct),
+            "improvement={:.1}%",
+            r.improvement_pct
+        );
+    }
+}

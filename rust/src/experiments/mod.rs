@@ -1,0 +1,20 @@
+//! Experiment harness: one module per paper table/figure (DESIGN.md §4).
+//!
+//! Every experiment is a function returning structured results plus a
+//! rendered text block; the CLI (`gapp <exp>`), the benches and the
+//! end-to-end example all call the same code, so the numbers in
+//! EXPERIMENTS.md are regenerated rather than transcribed.
+
+pub mod runner;
+pub mod table2;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+pub mod fig7;
+pub mod dedup_alloc;
+pub mod sensitivity;
+pub mod overhead;
+pub mod baselines_cmp;
+
+pub use runner::{profiled_run, EngineKind, ProfiledRun};

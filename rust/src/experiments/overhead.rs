@@ -1,0 +1,109 @@
+//! §5.4 overhead study: per-app runtime overhead with its drivers. The
+//! paper reports avg ≈4%, max ≈13%, and that overhead tracks the
+//! critical-slice ratio, stack depth and number of distinct stacks — all
+//! of which emerge from the probe cost model here.
+
+use anyhow::Result;
+
+use crate::gapp::GappConfig;
+use crate::simkernel::KernelConfig;
+use crate::util::stats::Table;
+use crate::workload::apps;
+
+use super::runner::{profiled_run, EngineKind};
+
+#[derive(Clone, Debug)]
+pub struct OverheadRow {
+    pub app: String,
+    pub overhead_pct: f64,
+    pub critical_ratio_pct: f64,
+    pub switches_per_ms: f64,
+    pub probe_cost_ms: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct OverheadResult {
+    pub rows: Vec<OverheadRow>,
+    pub mean_pct: f64,
+    pub max_pct: f64,
+    /// Pearson correlation between CR and overhead across apps.
+    pub cr_correlation: f64,
+}
+
+pub fn run(engine: EngineKind, threads: usize, seed: u64) -> Result<OverheadResult> {
+    let mut rows = Vec::new();
+    for name in apps::ALL_APPS {
+        let r = profiled_run(
+            || apps::by_name(name, threads, seed).expect("known app"),
+            KernelConfig::default(),
+            GappConfig::default(),
+            engine,
+        )?;
+        rows.push(OverheadRow {
+            app: name.to_string(),
+            overhead_pct: r.overhead_pct,
+            critical_ratio_pct: 100.0 * r.report.critical_ratio(),
+            switches_per_ms: r.report.total_slices as f64
+                / (r.report.runtime_ns as f64 / 1e6),
+            probe_cost_ms: r.report.probe_cost_ns as f64 / 1e6,
+        });
+    }
+    let ohs: Vec<f64> = rows.iter().map(|r| r.overhead_pct).collect();
+    let crs: Vec<f64> = rows.iter().map(|r| r.critical_ratio_pct).collect();
+    let mean_pct = ohs.iter().sum::<f64>() / ohs.len() as f64;
+    let max_pct = ohs.iter().cloned().fold(0.0, f64::max);
+    Ok(OverheadResult {
+        rows,
+        mean_pct,
+        max_pct,
+        cr_correlation: pearson(&crs, &ohs),
+    })
+}
+
+fn pearson(x: &[f64], y: &[f64]) -> f64 {
+    let n = x.len() as f64;
+    let mx = x.iter().sum::<f64>() / n;
+    let my = y.iter().sum::<f64>() / n;
+    let cov: f64 = x.iter().zip(y).map(|(a, b)| (a - mx) * (b - my)).sum();
+    let sx: f64 = x.iter().map(|a| (a - mx) * (a - mx)).sum::<f64>().sqrt();
+    let sy: f64 = y.iter().map(|b| (b - my) * (b - my)).sum::<f64>().sqrt();
+    if sx * sy == 0.0 {
+        0.0
+    } else {
+        cov / (sx * sy)
+    }
+}
+
+pub fn render(r: &OverheadResult) -> String {
+    let mut t = Table::new(&["Application", "O/H", "CR", "switch/ms", "probe (ms)"]);
+    for row in &r.rows {
+        t.row(&[
+            row.app.clone(),
+            format!("{:.2}%", row.overhead_pct),
+            format!("{:.2}%", row.critical_ratio_pct),
+            format!("{:.1}", row.switches_per_ms),
+            format!("{:.2}", row.probe_cost_ms),
+        ]);
+    }
+    format!(
+        "== §5.4 overhead ==\n{}mean {:.2}% (paper ≈4%) | max {:.2}% (paper ≈13%) | corr(CR, O/H) = {:.2}\n",
+        t.render(),
+        r.mean_pct,
+        r.max_pct,
+        r.cr_correlation
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn overhead_band_matches_paper_shape() {
+        let r = run(EngineKind::Native, 16, 7).unwrap();
+        assert!(r.mean_pct < 8.0, "mean={:.2}%", r.mean_pct);
+        assert!(r.max_pct < 18.0, "max={:.2}%", r.max_pct);
+        // Overhead should broadly track the event/critical-slice volume.
+        assert!(r.cr_correlation > 0.0, "corr={:.2}", r.cr_correlation);
+    }
+}

@@ -1,0 +1,86 @@
+//! Shared experiment plumbing: run an app with and without GAPP, compute
+//! overhead, and pick the analysis backend.
+
+use anyhow::Result;
+
+use crate::gapp::{profile, run_unprofiled, GappConfig, Report};
+use crate::runtime::AnalysisEngine;
+use crate::simkernel::KernelConfig;
+use crate::workload::App;
+
+/// Which analysis backend experiments use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineKind {
+    /// XLA when artifacts are present, otherwise native (default).
+    Auto,
+    Native,
+    Xla,
+}
+
+impl EngineKind {
+    pub fn make(self) -> Result<AnalysisEngine> {
+        Ok(match self {
+            EngineKind::Auto => AnalysisEngine::auto(),
+            EngineKind::Native => AnalysisEngine::native(),
+            EngineKind::Xla => AnalysisEngine::xla()?,
+        })
+    }
+
+    pub fn from_flag(use_xla: bool, use_native: bool) -> EngineKind {
+        match (use_xla, use_native) {
+            (true, _) => EngineKind::Xla,
+            (_, true) => EngineKind::Native,
+            _ => EngineKind::Auto,
+        }
+    }
+}
+
+/// A profiled run with its unprofiled baseline.
+pub struct ProfiledRun {
+    pub report: Report,
+    /// Unprofiled runtime (ns) of an identical app instance.
+    pub base_ns: u64,
+    /// Runtime overhead of profiling, percent.
+    pub overhead_pct: f64,
+}
+
+/// Run `mk()` twice — once bare, once under GAPP — and report both.
+pub fn profiled_run(
+    mk: impl Fn() -> App,
+    kcfg: KernelConfig,
+    gcfg: GappConfig,
+    engine: EngineKind,
+) -> Result<ProfiledRun> {
+    let (base_ns, _) = run_unprofiled(&mk(), kcfg.clone())?;
+    let (report, _) = profile(&mk(), kcfg, gcfg, engine.make()?)?;
+    let overhead_pct = if base_ns > 0 {
+        (report.runtime_ns as f64 - base_ns as f64) / base_ns as f64 * 100.0
+    } else {
+        0.0
+    };
+    Ok(ProfiledRun {
+        report,
+        base_ns,
+        overhead_pct,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::apps;
+
+    #[test]
+    fn profiled_run_reports_overhead() {
+        let r = profiled_run(
+            || apps::blackscholes(8, 3),
+            KernelConfig::default(),
+            GappConfig::default(),
+            EngineKind::Native,
+        )
+        .unwrap();
+        assert!(r.base_ns > 0);
+        assert!(r.overhead_pct >= 0.0);
+        assert!(r.overhead_pct < 30.0, "oh={}", r.overhead_pct);
+    }
+}

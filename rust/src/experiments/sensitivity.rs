@@ -1,0 +1,126 @@
+//! §5.1 parameter sensitivity: N_min (default n/2) and Δt (default 3 ms).
+//! The paper defers the sweep to its repository README; we regenerate it:
+//! CR and overhead grow with N_min; sample volume grows as Δt shrinks;
+//! the *identity of the top bottleneck* should be stable across a wide
+//! band (that robustness is the reason the defaults are usable).
+
+use anyhow::Result;
+
+use crate::gapp::GappConfig;
+use crate::simkernel::KernelConfig;
+use crate::workload::apps::{bodytrack, BodytrackConfig};
+
+use super::runner::{profiled_run, EngineKind};
+
+#[derive(Clone, Debug)]
+pub struct SweepPoint {
+    pub param: String,
+    pub critical_ratio_pct: f64,
+    pub samples: u64,
+    pub overhead_pct: f64,
+    pub top_function: Option<String>,
+}
+
+#[derive(Clone, Debug)]
+pub struct SensitivityResult {
+    pub nmin_sweep: Vec<SweepPoint>,
+    pub dt_sweep: Vec<SweepPoint>,
+}
+
+const THREADS: usize = 16;
+
+fn point(engine: EngineKind, seed: u64, label: String, gcfg: GappConfig) -> Result<SweepPoint> {
+    let r = profiled_run(
+        || bodytrack(THREADS, seed, BodytrackConfig::default()),
+        KernelConfig::default(),
+        gcfg,
+        engine,
+    )?;
+    Ok(SweepPoint {
+        param: label,
+        critical_ratio_pct: 100.0 * r.report.critical_ratio(),
+        samples: r.report.samples,
+        overhead_pct: r.overhead_pct,
+        top_function: r.report.top_functions(1).first().map(|(f, _)| f.clone()),
+    })
+}
+
+pub fn run(engine: EngineKind, seed: u64) -> Result<SensitivityResult> {
+    let n = (THREADS + 1) as f64;
+    let mut nmin_sweep = Vec::new();
+    for frac in [0.125, 0.25, 0.5, 0.75, 1.0] {
+        let gcfg = GappConfig {
+            nmin: Some(n * frac),
+            dt: 200_000,
+            ..Default::default()
+        };
+        nmin_sweep.push(point(engine, seed, format!("Nmin = {frac} n"), gcfg)?);
+    }
+    let mut dt_sweep = Vec::new();
+    for dt_us in [100u64, 300, 1000, 3000, 10_000] {
+        let gcfg = GappConfig {
+            dt: dt_us * 1000,
+            ..Default::default()
+        };
+        dt_sweep.push(point(engine, seed, format!("dt = {dt_us} us"), gcfg)?);
+    }
+    Ok(SensitivityResult {
+        nmin_sweep,
+        dt_sweep,
+    })
+}
+
+pub fn render(r: &SensitivityResult) -> String {
+    let mut s = String::from("== §5.1 sensitivity (bodytrack) ==\n");
+    for (name, sweep) in [("Nmin", &r.nmin_sweep), ("dt", &r.dt_sweep)] {
+        s.push_str(&format!("-- {name} sweep --\n"));
+        for p in sweep {
+            s.push_str(&format!(
+                "{:<16} CR {:>6.2}%  samples {:>6}  O/H {:>5.2}%  top {:?}\n",
+                p.param, p.critical_ratio_pct, p.samples, p.overhead_pct, p.top_function
+            ));
+        }
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nmin_monotonicity_and_stability() {
+        let r = run(EngineKind::Native, 21).unwrap();
+        // CR grows (weakly) with Nmin: a higher threshold marks more
+        // slices critical.
+        let crs: Vec<f64> = r.nmin_sweep.iter().map(|p| p.critical_ratio_pct).collect();
+        assert!(
+            crs.windows(2).all(|w| w[1] >= w[0] - 0.5),
+            "CR not monotone: {crs:?}"
+        );
+        // The detected top function is stable across the useful band
+        // (n/4 .. 3n/4); the extremes legitimately change what counts
+        // as "critical".
+        let tops: Vec<_> = r.nmin_sweep[1..4]
+            .iter()
+            .filter_map(|p| p.top_function.clone())
+            .collect();
+        assert!(!tops.is_empty());
+        assert!(
+            tops.windows(2).all(|w| w[0] == w[1]),
+            "unstable tops: {tops:?}"
+        );
+    }
+
+    #[test]
+    fn dt_drives_sample_volume() {
+        let r = run(EngineKind::Native, 21).unwrap();
+        // Finer sampling → at least as many samples.
+        let samples: Vec<u64> = r.dt_sweep.iter().map(|p| p.samples).collect();
+        assert!(
+            samples.windows(2).all(|w| w[0] >= w[1]),
+            "samples not decreasing with dt: {samples:?}"
+        );
+        assert!(samples[0] > samples[samples.len() - 1]);
+    }
+}

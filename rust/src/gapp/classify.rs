@@ -1,0 +1,117 @@
+//! Bottleneck classification — the paper's §7 future-work extension,
+//! implemented: "in order to automate the process of bottleneck
+//! classification we have recently experimented with tracking I/O system
+//! calls … and tracing kernel-level synchronization ('futex') calls …
+//! by combining GAPP's existing criticality information with an analysis
+//! of futex 'wakers' it is relatively easy to distinguish critical from
+//! non-critical lock holders."
+//!
+//! The kernel probe records, per critical timeslice, the wait class the
+//! thread blocked into (futex / barrier / queue / I/O / channel — what a
+//! real deployment learns from the futex + syscall tracepoints) and the
+//! pid whose wakeup *started* the slice (the waker). Classification is
+//! then a per-call-path majority vote, and the waker histogram names the
+//! lock-holder threads that gate each bottleneck.
+
+use crate::simkernel::WaitKind;
+
+use super::userspace::MergedPath;
+
+/// High-level bottleneck class for a merged call path.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BottleneckClass {
+    /// Lock/condvar (futex) contention.
+    Synchronization,
+    /// Barrier / fork-join imbalance.
+    Imbalance,
+    /// Pipeline-queue backpressure or starvation.
+    Pipeline,
+    /// Blocking I/O.
+    Io,
+    /// Message-passing wait.
+    Messaging,
+    /// CPU-bound work (slices ending by preemption/exit) — includes
+    /// busy-wait loops, which never block.
+    Compute,
+}
+
+impl BottleneckClass {
+    pub fn label(self) -> &'static str {
+        match self {
+            BottleneckClass::Synchronization => "synchronization (futex)",
+            BottleneckClass::Imbalance => "barrier / load imbalance",
+            BottleneckClass::Pipeline => "pipeline queue",
+            BottleneckClass::Io => "blocking I/O",
+            BottleneckClass::Messaging => "message passing",
+            BottleneckClass::Compute => "compute / busy-wait",
+        }
+    }
+}
+
+/// Classify a merged path by majority wait kind over its slices.
+pub fn classify(path: &MergedPath) -> BottleneckClass {
+    let mut best = (WaitKind::None, 0u64);
+    for (k, n) in &path.wait_hist {
+        if *n > best.1 {
+            best = (*k, *n);
+        }
+    }
+    match best.0 {
+        WaitKind::Futex => BottleneckClass::Synchronization,
+        WaitKind::Barrier => BottleneckClass::Imbalance,
+        WaitKind::Queue => BottleneckClass::Pipeline,
+        WaitKind::Io => BottleneckClass::Io,
+        WaitKind::Channel => BottleneckClass::Messaging,
+        WaitKind::None => BottleneckClass::Compute,
+    }
+}
+
+/// Top wakers of a path, descending — "critical lock holders" (§7).
+pub fn top_wakers(path: &MergedPath, n: usize) -> Vec<(u32, u64)> {
+    let mut v: Vec<(u32, u64)> = path.wakers.iter().map(|(p, c)| (*p, *c)).collect();
+    v.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+    v.truncate(n);
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashMap;
+
+    fn path(waits: &[(WaitKind, u64)], wakers: &[(u32, u64)]) -> MergedPath {
+        MergedPath {
+            stack: vec![1],
+            total_cm_ns: 1.0,
+            slices: waits.iter().map(|(_, n)| n).sum(),
+            addr_freq: HashMap::new(),
+            stack_top_samples: 0,
+            wait_hist: waits.iter().copied().collect(),
+            wakers: wakers.iter().copied().collect(),
+        }
+    }
+
+    #[test]
+    fn majority_vote_classification() {
+        let p = path(&[(WaitKind::Futex, 10), (WaitKind::Io, 3)], &[]);
+        assert_eq!(classify(&p), BottleneckClass::Synchronization);
+        let p = path(&[(WaitKind::Queue, 5)], &[]);
+        assert_eq!(classify(&p), BottleneckClass::Pipeline);
+        let p = path(&[(WaitKind::None, 2), (WaitKind::Barrier, 7)], &[]);
+        assert_eq!(classify(&p), BottleneckClass::Imbalance);
+        let p = path(&[], &[]);
+        assert_eq!(classify(&p), BottleneckClass::Compute);
+    }
+
+    #[test]
+    fn wakers_ranked() {
+        let p = path(&[(WaitKind::Futex, 3)], &[(9, 5), (2, 11), (4, 1)]);
+        assert_eq!(top_wakers(&p, 2), vec![(2, 11), (9, 5)]);
+    }
+
+    #[test]
+    fn labels_are_informative() {
+        assert!(BottleneckClass::Io.label().contains("I/O"));
+        assert!(BottleneckClass::Synchronization.label().contains("futex"));
+    }
+}

@@ -1,0 +1,47 @@
+//! GAPP configuration: the paper's tunables.
+
+use crate::simkernel::Time;
+
+/// Profiler configuration (§5.1 defaults).
+#[derive(Clone, Debug)]
+pub struct GappConfig {
+    /// Parallelism threshold N_min. `None` → n/2 where n is the number
+    /// of application threads observed so far (the paper's default).
+    pub nmin: Option<f64>,
+    /// Sampling period Δt (default 3 ms).
+    pub dt: Time,
+    /// Stack-capture depth M (top entries kept per trace).
+    pub stack_depth: usize,
+    /// Number of bottleneck call paths reported (top N).
+    pub top_n: usize,
+    /// Ring-buffer capacity (records).
+    pub ring_capacity: usize,
+    /// Drain the ring buffer into the user-space engine when it holds at
+    /// least this many records (the paper's concurrent user probe).
+    pub drain_threshold: usize,
+}
+
+impl Default for GappConfig {
+    fn default() -> Self {
+        GappConfig {
+            nmin: None,
+            dt: 3_000_000, // 3 ms
+            stack_depth: 16,
+            top_n: 5,
+            ring_capacity: 1 << 20,
+            drain_threshold: 1 << 14,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper() {
+        let c = GappConfig::default();
+        assert_eq!(c.dt, 3_000_000);
+        assert!(c.nmin.is_none());
+    }
+}

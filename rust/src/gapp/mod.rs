@@ -1,0 +1,278 @@
+//! GAPP — the paper's profiler, assembled.
+//!
+//! [`probes`] implements the kernel side (§3–4.3), [`userspace`] the
+//! user-space probe (§4.4), [`symbolize`] the addr2line step, and
+//! [`report`] the final frequency tables. [`profile`] wires a synthetic
+//! application, the simulated kernel and the profiler together and
+//! returns the [`report::Report`] plus the kernel for post-run queries.
+
+pub mod config;
+pub mod records;
+pub mod probes;
+pub mod userspace;
+pub mod symbolize;
+pub mod report;
+pub mod classify;
+
+use std::cell::RefCell;
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::runtime::AnalysisEngine;
+use crate::simkernel::{Event, Kernel, KernelConfig, Probe, Time};
+use crate::workload::App;
+
+pub use config::GappConfig;
+pub use report::{Bottleneck, Report, SampleLine, ThreadCm};
+
+/// Kernel-side + user-side state behind one shared handle.
+pub struct GappCore {
+    pub kernel: probes::KernelProbes,
+    pub user: userspace::UserProbe,
+    drain_threshold: usize,
+}
+
+impl GappCore {
+    /// Move buffered records from the circular buffer into the
+    /// user-space engine (the paper's concurrently-running user probe).
+    pub fn drain(&mut self) {
+        while let Some(rec) = self.kernel.ring.pop() {
+            self.user.consume(rec);
+        }
+    }
+}
+
+/// The probe object attached to the simulated kernel.
+pub struct GappProbeHandle {
+    core: Rc<RefCell<GappCore>>,
+    dt: Time,
+}
+
+impl Probe for GappProbeHandle {
+    fn on_event(&mut self, ev: &Event) -> u64 {
+        let mut core = self.core.borrow_mut();
+        let cost = core.kernel.handle(ev);
+        // The user-space probe drains the buffer concurrently with the
+        // application (it runs on spare cores); its work is therefore
+        // not charged to the traced CPUs.
+        if core.kernel.ring.len() >= core.drain_threshold {
+            core.drain();
+        }
+        cost
+    }
+
+    fn sample_period(&self) -> Option<Time> {
+        Some(self.dt)
+    }
+}
+
+/// A GAPP profiling session.
+pub struct GappSession {
+    pub core: Rc<RefCell<GappCore>>,
+    cfg: GappConfig,
+}
+
+impl GappSession {
+    pub fn new(cfg: GappConfig, ncpu: usize, engine: AnalysisEngine) -> Result<GappSession> {
+        let kernel = probes::KernelProbes::new(cfg.clone(), ncpu)?;
+        let user = userspace::UserProbe::new(engine);
+        Ok(GappSession {
+            core: Rc::new(RefCell::new(GappCore {
+                kernel,
+                user,
+                drain_threshold: cfg.drain_threshold,
+            })),
+            cfg,
+        })
+    }
+
+    /// The probe to attach to a [`Kernel`].
+    pub fn probe(&self) -> Box<dyn Probe> {
+        Box::new(GappProbeHandle {
+            core: self.core.clone(),
+            dt: self.cfg.dt,
+        })
+    }
+
+    /// Post-process after the run: drain, merge, rank, symbolize.
+    /// `runtime_ns` is the profiled run's simulated end time.
+    pub fn finish(&self, app: &App, kernel: &Kernel, runtime_ns: u64) -> Report {
+        let ppt_start = Instant::now();
+        let mut core = self.core.borrow_mut();
+        core.drain();
+        core.user.flush_batch();
+        let merged = core.user.merge_and_rank(self.cfg.top_n);
+
+        let mut sym = symbolize::Symbolizer::new(&app.symtab);
+        let bottlenecks: Vec<Bottleneck> = merged
+            .iter()
+            .enumerate()
+            .map(|(i, m)| {
+                let mut samples: Vec<(u64, u64)> =
+                    m.addr_freq.iter().map(|(a, c)| (*a, *c)).collect();
+                samples.sort_by(|x, y| y.1.cmp(&x.1).then(x.0.cmp(&y.0)));
+                Bottleneck {
+                    rank: i + 1,
+                    total_cm_ms: m.total_cm_ns / 1e6,
+                    slices: m.slices,
+                    class: classify::classify(m),
+                    top_wakers: classify::top_wakers(m, 3)
+                        .into_iter()
+                        .map(|(pid, n)| {
+                            let comm = kernel
+                                .task(pid)
+                                .map(|t| t.comm.clone())
+                                .unwrap_or_else(|| format!("pid{pid}"));
+                            (comm, n)
+                        })
+                        .collect(),
+                    call_path: sym.render_path(&m.stack),
+                    samples: samples
+                        .into_iter()
+                        .map(|(a, c)| SampleLine {
+                            rendered: sym.render(a),
+                            function: sym
+                                .resolve(a)
+                                .map(|l| l.function)
+                                .or_else(|| {
+                                    app.symtab.sym_name(a).map(|s| s.to_string())
+                                }),
+                            count: c,
+                        })
+                        .collect(),
+                    stack_top_samples: m.stack_top_samples,
+                }
+            })
+            .collect();
+
+        // Per-thread CMetric totals (Figures 4/5).
+        let mut threads: Vec<ThreadCm> = core
+            .user
+            .totals
+            .iter()
+            .map(|(pid, t)| ThreadCm {
+                pid: *pid,
+                comm: kernel
+                    .task(*pid)
+                    .map(|t| t.comm.clone())
+                    .unwrap_or_default(),
+                cm_ms: t.cm_ns / 1e6,
+                wall_ms: t.wall_ns / 1e6,
+            })
+            .collect();
+        threads.sort_by_key(|t| t.pid);
+
+        let stats = core.kernel.stats.clone();
+        Report {
+            app: app.name.clone(),
+            backend: core.user.backend_name(),
+            runtime_ns,
+            bottlenecks,
+            threads,
+            total_slices: stats.total_slices,
+            critical_slices: stats.critical_slices,
+            samples: stats.samples_recorded,
+            intervals: stats.intervals_emitted,
+            ring_dropped: core.kernel.ring.stats.dropped,
+            memory_bytes: core.kernel.memory_bytes() + core.user.memory_bytes(),
+            ppt_seconds: ppt_start.elapsed().as_secs_f64(),
+            probe_cost_ns: kernel.stats.probe_ns,
+        }
+    }
+}
+
+/// Run `app` under GAPP and return the report plus the kernel.
+pub fn profile(
+    app: &App,
+    kcfg: KernelConfig,
+    gcfg: GappConfig,
+    engine: AnalysisEngine,
+) -> Result<(Report, Kernel)> {
+    let session = GappSession::new(gcfg, kcfg.cpus, engine)?;
+    let mut kernel = Kernel::new(kcfg);
+    kernel.attach_probe(session.probe());
+    app.spawn_into(&mut kernel);
+    let end = kernel.run()?;
+    let report = session.finish(app, &kernel, end);
+    Ok((report, kernel))
+}
+
+/// Run `app` without any profiler (baseline for overhead measurement).
+pub fn run_unprofiled(app: &App, kcfg: KernelConfig) -> Result<(u64, Kernel)> {
+    let mut kernel = Kernel::new(kcfg);
+    app.spawn_into(&mut kernel);
+    let end = kernel.run()?;
+    Ok((end, kernel))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::apps;
+
+    #[test]
+    fn profile_blackscholes_finds_cndf() {
+        let app = apps::blackscholes(16, 3);
+        let (report, _) = profile(
+            &app,
+            KernelConfig::default(),
+            GappConfig::default(),
+            AnalysisEngine::native(),
+        )
+        .unwrap();
+        assert!(report.total_slices > 0);
+        assert!(!report.bottlenecks.is_empty());
+        // CNDF (or its serial main) must appear among top samples.
+        let top = report.top_functions(5);
+        assert!(
+            top.iter().any(|(f, _)| f == "CNDF" || f == "main"),
+            "top={top:?}"
+        );
+    }
+
+    #[test]
+    fn overhead_is_positive_but_small() {
+        let app = apps::blackscholes(16, 3);
+        let (base, _) = run_unprofiled(&app, KernelConfig::default()).unwrap();
+        let app2 = apps::blackscholes(16, 3);
+        let (report, _) = profile(
+            &app2,
+            KernelConfig::default(),
+            GappConfig::default(),
+            AnalysisEngine::native(),
+        )
+        .unwrap();
+        assert!(report.runtime_ns >= base);
+        let oh = (report.runtime_ns - base) as f64 / base as f64;
+        assert!(oh < 0.25, "overhead {oh:.3}");
+    }
+
+    #[test]
+    fn user_and_kernel_cmetric_agree() {
+        // The batched (user-space) CMetric totals must match the paper's
+        // in-kernel scalar accumulation (within f32 batch error).
+        let app = apps::canneal(8, 5);
+        let gcfg = GappConfig::default();
+        let session =
+            GappSession::new(gcfg.clone(), 64, AnalysisEngine::native()).unwrap();
+        let mut kernel = Kernel::new(KernelConfig::default());
+        kernel.attach_probe(session.probe());
+        app.spawn_into(&mut kernel);
+        let end = kernel.run().unwrap();
+        let report = session.finish(&app, &kernel, end);
+        assert!(!report.threads.is_empty());
+        let core = session.core.borrow();
+        for t in &report.threads {
+            let kernel_cm = core.kernel.cm_hash_ns.get(&t.pid).copied().unwrap_or(0.0);
+            let user_cm = t.cm_ms * 1e6;
+            let rel = (kernel_cm - user_cm).abs() / kernel_cm.max(1.0);
+            assert!(
+                rel < 0.02,
+                "pid {}: kernel {kernel_cm:.0} vs user {user_cm:.0} (rel {rel:.4})",
+                t.pid
+            );
+        }
+    }
+}

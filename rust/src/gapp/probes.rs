@@ -1,0 +1,499 @@
+//! The GAPP kernel probes (paper §3–4): sched_switch / sched_wakeup /
+//! task lifecycle handlers maintaining the Table-1 map set, triggering
+//! stack captures on critical timeslices, and the Δt sampling probe.
+//!
+//! Each handler returns its cost (ns), which the simulated kernel
+//! charges to the CPU that fired the event — the paper's overhead column
+//! is therefore an *output* of this cost model, not an input.
+
+use crate::ebpf::maps::{HashMap64, Scalar};
+use crate::ebpf::ringbuf::RingBuf;
+use crate::ebpf::verifier::{ProgramSpec, Verifier};
+use crate::simkernel::tracepoint::cost;
+use crate::simkernel::{Event, Pid, TaskState, Time, WaitKind};
+
+use super::config::GappConfig;
+use super::records::{mask_clear, mask_count, mask_set, Record, SlotMask};
+
+/// Counters describing one profiled run.
+#[derive(Clone, Debug, Default)]
+pub struct ProbeStats {
+    pub total_slices: u64,
+    pub critical_slices: u64,
+    pub samples_recorded: u64,
+    pub sample_ticks_checked: u64,
+    pub stack_frames_captured: u64,
+    pub intervals_emitted: u64,
+    pub switch_events: u64,
+    pub wakeup_events: u64,
+}
+
+/// Kernel-side state: the Table-1 eBPF maps plus slot management for the
+/// batched activity matrix.
+pub struct KernelProbes {
+    pub cfg: GappConfig,
+    // ---- Table-1 maps -------------------------------------------------
+    /// pid → 1 if active (TASK_RUNNING), 0 otherwise.
+    pub thread_list: HashMap64,
+    /// pid → accumulated CMetric (ns) — the paper's in-kernel cm_hash.
+    /// Kept alongside the XLA path as the cross-check reference.
+    pub cm_hash_ns: std::collections::HashMap<Pid, f64>,
+    /// Number of active application threads right now.
+    pub thread_count: Scalar,
+    /// Total application threads alive.
+    pub total_count: Scalar,
+    /// Peak of `total_count` — the paper's n (threads in the app),
+    /// from which the default N_min = n/2 is derived.
+    pub peak_total: u64,
+    /// Cumulative Σ T_i / n_i over all switching intervals (ns).
+    pub global_cm: f64,
+    /// Timestamp of the most recent switching event.
+    pub t_switch: Time,
+    /// Per-CPU: global_cm value when the current app thread switched in.
+    local_cm: Vec<f64>,
+    /// Per-CPU: switch-in time of the current app thread's timeslice.
+    slice_start: Vec<Time>,
+    // ---- slots ---------------------------------------------------------
+    slot_of: std::collections::HashMap<Pid, usize>,
+    free_slots: Vec<usize>,
+    active_mask: SlotMask,
+    /// Threads that exited but whose final timeslice is still open.
+    exiting: std::collections::HashSet<Pid>,
+    /// Task currently on each CPU (to attribute wakers, §7 extension).
+    running: Vec<Pid>,
+    /// pid → thread that issued its most recent wakeup.
+    last_waker: std::collections::HashMap<Pid, Pid>,
+    /// Per-CPU: waker of the thread currently in its timeslice.
+    slice_waker: Vec<Pid>,
+    // ---- output ---------------------------------------------------------
+    pub ring: RingBuf<Record>,
+    next_ts_id: u64,
+    pub stats: ProbeStats,
+}
+
+impl KernelProbes {
+    /// Build and verifier-check the probe set for an `ncpu`-CPU kernel.
+    pub fn new(cfg: GappConfig, ncpu: usize) -> anyhow::Result<KernelProbes> {
+        let spec = ProgramSpec {
+            name: "gapp",
+            maps: 7,
+            map_bytes: 1 << 22,
+            ringbuf_records: cfg.ring_capacity,
+            stack_depth: cfg.stack_depth,
+            sample_period_ns: Some(cfg.dt),
+            max_insns: 4096,
+        };
+        Verifier::default()
+            .check(&spec)
+            .map_err(|e| anyhow::anyhow!("verifier rejected GAPP probes: {e}"))?;
+        Ok(KernelProbes {
+            ring: RingBuf::new(cfg.ring_capacity),
+            cfg,
+            thread_list: HashMap64::new("thread_list"),
+            cm_hash_ns: std::collections::HashMap::new(),
+            thread_count: Scalar::default(),
+            total_count: Scalar::default(),
+            peak_total: 0,
+            global_cm: 0.0,
+            t_switch: 0,
+            local_cm: vec![0.0; ncpu],
+            slice_start: vec![0; ncpu],
+            running: vec![0; ncpu],
+            last_waker: std::collections::HashMap::new(),
+            slice_waker: vec![0; ncpu],
+            slot_of: std::collections::HashMap::new(),
+            free_slots: (0..crate::runtime::T_SLOTS).rev().collect(),
+            active_mask: [0; 2],
+            exiting: std::collections::HashSet::new(),
+            next_ts_id: 0,
+            stats: ProbeStats::default(),
+        })
+    }
+
+    /// Effective N_min: configured, or n/2 where n is the application's
+    /// thread count (peak observed — §5.1's "n is the number of
+    /// application threads").
+    pub fn nmin(&self) -> f64 {
+        self.cfg
+            .nmin
+            .unwrap_or_else(|| (self.peak_total as f64 / 2.0).max(1.0))
+    }
+
+    /// Close the current switching interval at `now`: update global_cm
+    /// and emit the interval row for the batched analysis.
+    fn advance_interval(&mut self, now: Time) -> u64 {
+        let dur = now.saturating_sub(self.t_switch);
+        self.t_switch = now;
+        let n = self.thread_count.get();
+        if dur == 0 || n == 0 {
+            return 0;
+        }
+        self.global_cm += dur as f64 / n as f64;
+        debug_assert_eq!(n as u32, mask_count(&self.active_mask));
+        self.ring.push(Record::Interval {
+            dur,
+            mask: self.active_mask,
+        });
+        self.stats.intervals_emitted += 1;
+        cost::RINGBUF_RECORD
+    }
+
+    fn mark_active(&mut self, pid: Pid) {
+        if self.thread_list.get(pid as u64) == Some(0) {
+            self.thread_list.insert(pid as u64, 1);
+            self.thread_count.add(1);
+            if let Some(slot) = self.slot_of.get(&pid) {
+                mask_set(&mut self.active_mask, *slot);
+            }
+        }
+    }
+
+    fn mark_inactive(&mut self, pid: Pid) {
+        if self.thread_list.get(pid as u64) == Some(1) {
+            self.thread_list.insert(pid as u64, 0);
+            self.thread_count.sub_sat(1);
+            if let Some(slot) = self.slot_of.get(&pid) {
+                mask_clear(&mut self.active_mask, *slot);
+            }
+        }
+    }
+
+    /// task_newtask / task_rename: register an application thread.
+    pub fn on_task_new(&mut self, pid: Pid, now: Time) -> u64 {
+        let mut c = cost::LIFECYCLE + self.advance_interval(now);
+        let slot = match self.free_slots.pop() {
+            Some(s) => s,
+            None => {
+                // Slot pages are 128 wide; apps here stay under that.
+                // Fall back to dropping matrix attribution for overflow.
+                usize::MAX
+            }
+        };
+        self.total_count.add(1);
+        self.peak_total = self.peak_total.max(self.total_count.get());
+        self.thread_list.insert(pid as u64, 0);
+        if slot != usize::MAX {
+            self.slot_of.insert(pid, slot);
+            self.ring.push(Record::SlotAssign { pid, slot });
+            c += cost::RINGBUF_RECORD;
+        }
+        // New tasks are runnable immediately.
+        self.mark_active(pid);
+        c
+    }
+
+    /// sched_process_exit: the final timeslice is still open; defer the
+    /// cleanup to the context switch that follows.
+    pub fn on_process_exit(&mut self, pid: Pid, _now: Time) -> u64 {
+        self.exiting.insert(pid);
+        cost::LIFECYCLE
+    }
+
+    /// sched_wakeup: a blocked thread became runnable — this changes the
+    /// degree of parallelism *now*, before the thread is switched in.
+    /// `cpu` is the waking CPU: whatever runs there is the waker.
+    pub fn on_wakeup_from(&mut self, pid: Pid, now: Time, waker_cpu: usize) -> u64 {
+        let waker = self.running.get(waker_cpu).copied().unwrap_or(0);
+        if waker != 0 && waker != pid {
+            self.last_waker.insert(pid, waker);
+        }
+        self.on_wakeup(pid, now)
+    }
+
+    /// sched_wakeup handler body (waker attribution done by the caller).
+    pub fn on_wakeup(&mut self, pid: Pid, now: Time) -> u64 {
+        self.stats.wakeup_events += 1;
+        if self.thread_list.get(pid as u64).is_none() {
+            return cost::WAKEUP; // not an application thread
+        }
+        let c = self.advance_interval(now);
+        self.mark_active(pid);
+        cost::WAKEUP + c
+    }
+
+    /// sched_switch: the core probe (paper §4.1–4.2).
+    #[allow(clippy::too_many_arguments)]
+    pub fn on_switch(
+        &mut self,
+        now: Time,
+        cpu: usize,
+        prev_pid: Pid,
+        prev_state: TaskState,
+        next_pid: Pid,
+        prev_ip: u64,
+        prev_stack: &[u64],
+        prev_wait: WaitKind,
+    ) -> u64 {
+        self.stats.switch_events += 1;
+        if cpu < self.running.len() {
+            self.running[cpu] = next_pid;
+        }
+        let prev_is_app = self.thread_list.get(prev_pid as u64).is_some();
+        let next_is_app = self.thread_list.get(next_pid as u64).is_some();
+        if !prev_is_app && !next_is_app {
+            return cost::SWITCH_FAST_PATH;
+        }
+        let mut c = cost::SWITCH_FAST_PATH + self.advance_interval(now);
+
+        if prev_is_app {
+            c += cost::SWITCH_APP_PATH;
+            // Close the timeslice: cm_hash[prev] += global_cm - local_cm.
+            let cm_delta = (self.global_cm - self.local_cm[cpu]).max(0.0);
+            *self.cm_hash_ns.entry(prev_pid).or_insert(0.0) += cm_delta;
+            let wall = now.saturating_sub(self.slice_start[cpu]) as f64;
+            self.stats.total_slices += 1;
+
+            if prev_state == TaskState::Blocked {
+                self.mark_inactive(prev_pid);
+            }
+
+            // threads_av: time-weighted harmonic mean of the active count
+            // over the slice, derived from the counters we already have.
+            let threads_av = if cm_delta > 0.0 { wall / cm_delta } else { 0.0 };
+            let critical = cm_delta > 0.0 && threads_av < self.nmin();
+            if critical {
+                self.stats.critical_slices += 1;
+                let depth = prev_stack.len().min(self.cfg.stack_depth);
+                let stack = prev_stack[prev_stack.len() - depth..].to_vec();
+                self.stats.stack_frames_captured += depth as u64;
+                self.next_ts_id += 1;
+                let woken_by = self.slice_waker.get(cpu).copied().unwrap_or(0);
+                self.ring.push(Record::SliceEnd {
+                    ts_id: self.next_ts_id,
+                    pid: prev_pid,
+                    cm_ns: cm_delta,
+                    threads_av,
+                    ip: prev_ip,
+                    stack,
+                    wait: prev_wait,
+                    woken_by,
+                });
+                c += cost::STACK_FRAME * depth as u64 + cost::RINGBUF_RECORD;
+            } else {
+                self.ring.push(Record::SliceDiscard { pid: prev_pid });
+                c += cost::RINGBUF_RECORD;
+            }
+
+            // Deferred exit cleanup.
+            if self.exiting.remove(&prev_pid) {
+                self.mark_inactive(prev_pid);
+                self.thread_list.remove(prev_pid as u64);
+                self.total_count.sub_sat(1);
+                if let Some(slot) = self.slot_of.remove(&prev_pid) {
+                    self.ring.push(Record::SlotFree {
+                        pid: prev_pid,
+                        slot,
+                    });
+                    self.free_slots.push(slot);
+                    c += cost::RINGBUF_RECORD;
+                }
+            }
+        }
+
+        if next_is_app {
+            // Open the next timeslice: local_cm = global_cm.
+            self.local_cm[cpu] = self.global_cm;
+            self.slice_start[cpu] = now;
+            self.slice_waker[cpu] = self.last_waker.remove(&next_pid).unwrap_or(0);
+            // Safety net from the paper: a switched-in thread must be
+            // active even if we missed its wakeup.
+            self.mark_active(next_pid);
+        }
+        c
+    }
+
+    /// The Δt sampling probe (§4.3).
+    pub fn on_sample(&mut self, pid: Pid, ip: u64) -> u64 {
+        self.stats.sample_ticks_checked += 1;
+        let is_app = self.thread_list.get(pid as u64).is_some();
+        if is_app && (self.thread_count.get() as f64) < self.nmin() {
+            self.ring.push(Record::Sample { pid, ip });
+            self.stats.samples_recorded += 1;
+            cost::SAMPLE_RECORD
+        } else {
+            cost::SAMPLE_FAST_PATH
+        }
+    }
+
+    /// Route a kernel tracepoint event to its handler. Returns the cost.
+    pub fn handle(&mut self, ev: &Event) -> u64 {
+        match ev {
+            Event::TaskNew { time, pid, .. } => self.on_task_new(*pid, *time),
+            Event::ProcessExit { time, pid } => self.on_process_exit(*pid, *time),
+            Event::SchedWakeup { time, pid, cpu } => {
+                self.on_wakeup_from(*pid, *time, *cpu)
+            }
+            Event::SchedSwitch {
+                time,
+                cpu,
+                prev_pid,
+                prev_state,
+                next_pid,
+                prev_ip,
+                prev_stack,
+                prev_wait,
+            } => self.on_switch(
+                *time,
+                *cpu,
+                *prev_pid,
+                *prev_state,
+                *next_pid,
+                *prev_ip,
+                prev_stack,
+                *prev_wait,
+            ),
+            Event::SampleTick { view, .. } => self.on_sample(view.pid, view.ip),
+        }
+    }
+
+    /// Peak kernel-side memory estimate (maps + ring buffer), bytes.
+    pub fn memory_bytes(&self) -> u64 {
+        self.thread_list.peak_bytes()
+            + (self.cm_hash_ns.len() as u64) * 32
+            + self.ring.peak_bytes()
+            + (self.local_cm.len() as u64) * 16
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn probes() -> KernelProbes {
+        KernelProbes::new(GappConfig::default(), 4).unwrap()
+    }
+
+    #[test]
+    fn figure1_worked_example_in_kernel_path() {
+        // Reproduce the paper's Figure 1 with the actual probe handlers:
+        // 4 threads; E1..E7; check Thread3's cm after its timeslice.
+        let mut p = probes();
+        // Register threads 1..4 at t=0 (all runnable).
+        for pid in 1..=4 {
+            p.on_task_new(pid, 0);
+        }
+        // Make 2 and 3 and 4 inactive first so we can control intervals.
+        // E1 (t=10): thread1 had run alone [0,10]; switch out blocked.
+        // Setup: only thread 1 active in [0,10].
+        p.mark_inactive(2);
+        p.mark_inactive(3);
+        p.mark_inactive(4);
+        assert_eq!(p.thread_count.get(), 1);
+        // Thread 1 switched in on cpu0 at 0.
+        p.on_switch(0, 0, 0, TaskState::Runnable, 1, 0, &[], WaitKind::Futex);
+        // E2 (t=10): threads 3 and 4 wake; thread 1 blocks.
+        p.on_wakeup(3, 10);
+        p.on_wakeup(4, 10);
+        p.on_switch(10, 0, 1, TaskState::Blocked, 3, 0, &[], WaitKind::Futex);
+        p.on_switch(10, 1, 0, TaskState::Runnable, 4, 0, &[], WaitKind::Futex);
+        // interval [0,10]: n=1 → global_cm=10.
+        assert!((p.global_cm - 10.0).abs() < 1e-9);
+        // E3 (t=18): thread 2 wakes (n was 2 during [10,18]).
+        p.on_wakeup(2, 18);
+        // E4 (t=27): thread 3 blocks after [18,27] with n=3.
+        p.on_switch(27, 0, 3, TaskState::Blocked, 2, 0, &[], WaitKind::Futex);
+        // Thread3 cm = T2/2 + T3/3 = 8/2 + 9/3 = 7.
+        assert!((p.cm_hash_ns[&3] - 7.0).abs() < 1e-9, "{}", p.cm_hash_ns[&3]);
+    }
+
+    #[test]
+    fn critical_slice_triggers_stack_record() {
+        let mut p = KernelProbes::new(
+            GappConfig {
+                nmin: Some(2.0),
+                ..Default::default()
+            },
+            2,
+        )
+        .unwrap();
+        p.on_task_new(1, 0);
+        p.on_switch(0, 0, 0, TaskState::Runnable, 1, 0, &[], WaitKind::Futex);
+        // Thread 1 alone for 1 ms → threads_av = 1 < 2 → critical.
+        p.on_switch(1_000_000, 0, 1, TaskState::Blocked, 0, 0xABC, &[0x400000], WaitKind::Futex);
+        assert_eq!(p.stats.critical_slices, 1);
+        let mut saw_slice = false;
+        while let Some(r) = p.ring.pop() {
+            if let Record::SliceEnd { pid, cm_ns, ip, .. } = r {
+                assert_eq!(pid, 1);
+                assert!((cm_ns - 1e6).abs() < 1.0);
+                assert_eq!(ip, 0xABC);
+                saw_slice = true;
+            }
+        }
+        assert!(saw_slice);
+    }
+
+    #[test]
+    fn non_critical_slice_discards() {
+        let mut p = KernelProbes::new(
+            GappConfig {
+                nmin: Some(1.0), // nothing is ever below 1 thread
+                ..Default::default()
+            },
+            2,
+        )
+        .unwrap();
+        p.on_task_new(1, 0);
+        p.on_switch(0, 0, 0, TaskState::Runnable, 1, 0, &[], WaitKind::Futex);
+        p.on_switch(1_000, 0, 1, TaskState::Blocked, 0, 0, &[], WaitKind::Futex);
+        assert_eq!(p.stats.critical_slices, 0);
+        let mut saw_discard = false;
+        while let Some(r) = p.ring.pop() {
+            if matches!(r, Record::SliceDiscard { pid: 1 }) {
+                saw_discard = true;
+            }
+        }
+        assert!(saw_discard);
+    }
+
+    #[test]
+    fn sampler_respects_nmin_gate() {
+        let mut p = KernelProbes::new(
+            GappConfig {
+                nmin: Some(2.0),
+                ..Default::default()
+            },
+            2,
+        )
+        .unwrap();
+        p.on_task_new(1, 0);
+        p.on_task_new(2, 0);
+        // Both active: count=2 ≥ nmin → fast path.
+        assert_eq!(p.on_sample(1, 0x1), cost::SAMPLE_FAST_PATH);
+        p.mark_inactive(2);
+        // One active: record.
+        assert_eq!(p.on_sample(1, 0x2), cost::SAMPLE_RECORD);
+        assert_eq!(p.stats.samples_recorded, 1);
+    }
+
+    #[test]
+    fn exit_frees_slot_after_final_slice() {
+        let mut p = probes();
+        p.on_task_new(7, 0);
+        let slots_before = p.free_slots.len();
+        p.on_switch(0, 0, 0, TaskState::Runnable, 7, 0, &[], WaitKind::Futex);
+        p.on_process_exit(7, 500);
+        p.on_switch(500, 0, 7, TaskState::Blocked, 0, 0, &[], WaitKind::Futex);
+        assert_eq!(p.free_slots.len(), slots_before + 1);
+        assert!(p.thread_list.get(7).is_none());
+        assert_eq!(p.total_count.get(), 0);
+    }
+
+    #[test]
+    fn interval_mask_matches_count() {
+        let mut p = probes();
+        for pid in 1..=5 {
+            p.on_task_new(pid, 0);
+        }
+        p.on_wakeup(1, 100); // no-op (already active), but advances time
+        p.on_switch(200, 0, 0, TaskState::Runnable, 1, 0, &[], WaitKind::Futex);
+        let mut rows = 0;
+        while let Some(r) = p.ring.pop() {
+            if let Record::Interval { mask, .. } = r {
+                assert_eq!(mask_count(&mask), 5);
+                rows += 1;
+            }
+        }
+        assert!(rows >= 1);
+    }
+}

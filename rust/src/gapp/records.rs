@@ -1,0 +1,76 @@
+//! Records exchanged between the kernel probes and the user-space probe
+//! through the eBPF circular buffer (paper Figure 2).
+
+use crate::simkernel::{Pid, Time, WaitKind};
+
+/// Bitmask over the 128 thread slots of one activity-matrix row.
+pub type SlotMask = [u64; 2];
+
+#[inline]
+pub fn mask_set(m: &mut SlotMask, slot: usize) {
+    m[slot / 64] |= 1 << (slot % 64);
+}
+
+#[inline]
+pub fn mask_clear(m: &mut SlotMask, slot: usize) {
+    m[slot / 64] &= !(1 << (slot % 64));
+}
+
+#[inline]
+pub fn mask_count(m: &SlotMask) -> u32 {
+    m[0].count_ones() + m[1].count_ones()
+}
+
+/// One circular-buffer record.
+#[derive(Clone, Debug)]
+pub enum Record {
+    /// A thread slot was assigned to / freed from a pid (lets the
+    /// user-space side attribute activity-matrix columns to threads).
+    SlotAssign { pid: Pid, slot: usize },
+    SlotFree { pid: Pid, slot: usize },
+    /// One switching interval: duration and the set of active app
+    /// threads during it. These rows feed the batched XLA analysis.
+    Interval { dur: Time, mask: SlotMask },
+    /// End of a *critical* timeslice (threads_av < N_min): CMetric delta,
+    /// the stack walked at the switch, and the IP at switch-out.
+    SliceEnd {
+        ts_id: u64,
+        pid: Pid,
+        cm_ns: f64,
+        threads_av: f64,
+        ip: u64,
+        stack: Vec<u64>,
+        /// What the thread blocked on at the end of this slice (§7
+        /// classification extension; None = preempted/exited).
+        wait: WaitKind,
+        /// The thread whose wakeup started this slice (0 = none/timer) —
+        /// the §7 "futex waker" attribution that separates critical from
+        /// non-critical lock holders.
+        woken_by: Pid,
+    },
+    /// End of a non-critical timeslice: the user probe must discard any
+    /// sampled instruction pointers accumulated for this thread (§4.4).
+    SliceDiscard { pid: Pid },
+    /// Sampling-probe hit: IP of an app thread while the active-thread
+    /// count was below N_min (§4.3).
+    Sample { pid: Pid, ip: u64 },
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mask_ops() {
+        let mut m: SlotMask = [0; 2];
+        mask_set(&mut m, 0);
+        mask_set(&mut m, 63);
+        mask_set(&mut m, 64);
+        mask_set(&mut m, 127);
+        assert_eq!(mask_count(&m), 4);
+        mask_clear(&mut m, 63);
+        assert_eq!(mask_count(&m), 3);
+        assert_eq!(m[0], 1);
+        assert_eq!(m[1], 1 | (1 << 63));
+    }
+}

@@ -1,0 +1,237 @@
+//! The final profile: a frequency table of functions and source lines
+//! per critical call path, plus the run statistics behind Table 2.
+
+use std::collections::HashMap;
+use std::fmt;
+
+use crate::simkernel::Pid;
+
+use super::classify::BottleneckClass;
+
+/// One resolved sample line in a bottleneck entry.
+#[derive(Clone, Debug)]
+pub struct SampleLine {
+    pub rendered: String,
+    /// Bare function name when resolvable (used by assertions/benches).
+    pub function: Option<String>,
+    pub count: u64,
+}
+
+/// One ranked bottleneck (a merged call path).
+#[derive(Clone, Debug)]
+pub struct Bottleneck {
+    pub rank: usize,
+    pub total_cm_ms: f64,
+    pub slices: u64,
+    /// §7 extension: the bottleneck's class (futex / barrier / queue /
+    /// I/O / messaging / compute), from the per-slice wait kinds.
+    pub class: BottleneckClass,
+    /// §7 extension: threads whose wakeups gated these slices
+    /// ("critical lock holders"), as (comm, count), descending.
+    pub top_wakers: Vec<(String, u64)>,
+    /// Symbolized call path, outermost → innermost.
+    pub call_path: Vec<String>,
+    /// Sample frequency table, descending by count.
+    pub samples: Vec<SampleLine>,
+    pub stack_top_samples: u64,
+}
+
+/// Per-thread CMetric totals (Figures 4 and 5 are plots of this).
+#[derive(Clone, Debug)]
+pub struct ThreadCm {
+    pub pid: Pid,
+    pub comm: String,
+    pub cm_ms: f64,
+    pub wall_ms: f64,
+}
+
+/// Full profiling report.
+#[derive(Clone, Debug, Default)]
+pub struct Report {
+    pub app: String,
+    pub backend: &'static str,
+    /// Simulated application runtime under the profiler (ns).
+    pub runtime_ns: u64,
+    pub bottlenecks: Vec<Bottleneck>,
+    pub threads: Vec<ThreadCm>,
+    // ---- Table-2 style statistics --------------------------------------
+    pub total_slices: u64,
+    pub critical_slices: u64,
+    pub samples: u64,
+    pub intervals: u64,
+    pub ring_dropped: u64,
+    /// Peak memory estimate, bytes (column M).
+    pub memory_bytes: u64,
+    /// Post-processing time, host seconds (column PPT).
+    pub ppt_seconds: f64,
+    /// Total probe cost charged to the app's CPUs (ns).
+    pub probe_cost_ns: u64,
+}
+
+impl Report {
+    /// Critical ratio CR (critical / total timeslices).
+    pub fn critical_ratio(&self) -> f64 {
+        if self.total_slices == 0 {
+            0.0
+        } else {
+            self.critical_slices as f64 / self.total_slices as f64
+        }
+    }
+
+    /// Top critical *functions* across all ranked paths — the headline
+    /// the paper quotes per app in Table 2. Aggregates sample counts by
+    /// function name over all bottleneck entries.
+    pub fn top_functions(&self, n: usize) -> Vec<(String, u64)> {
+        let mut freq: HashMap<&str, u64> = HashMap::new();
+        for b in &self.bottlenecks {
+            for s in &b.samples {
+                if let Some(f) = &s.function {
+                    *freq.entry(f.as_str()).or_insert(0) += s.count;
+                }
+            }
+        }
+        let mut v: Vec<(String, u64)> =
+            freq.into_iter().map(|(k, c)| (k.to_string(), c)).collect();
+        v.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        v.truncate(n);
+        v
+    }
+
+    /// Total sample count attributed to a given function name.
+    pub fn samples_of(&self, function: &str) -> u64 {
+        self.bottlenecks
+            .iter()
+            .flat_map(|b| b.samples.iter())
+            .filter(|s| s.function.as_deref() == Some(function))
+            .map(|s| s.count)
+            .sum()
+    }
+
+    /// CMetric per thread as (comm, cm_ms), in pid order.
+    pub fn thread_cm_series(&self) -> Vec<(String, f64)> {
+        self.threads
+            .iter()
+            .map(|t| (t.comm.clone(), t.cm_ms))
+            .collect()
+    }
+}
+
+impl fmt::Display for Report {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "== GAPP profile: {} (backend: {}) ==", self.app, self.backend)?;
+        writeln!(
+            f,
+            "runtime {:.1} ms | slices {} (critical {} = {:.2}%) | samples {} | mem {:.1} MB | ppt {:.2} s",
+            self.runtime_ns as f64 / 1e6,
+            self.total_slices,
+            self.critical_slices,
+            100.0 * self.critical_ratio(),
+            self.samples,
+            self.memory_bytes as f64 / (1024.0 * 1024.0),
+            self.ppt_seconds,
+        )?;
+        for b in &self.bottlenecks {
+            writeln!(
+                f,
+                "\n#{} [{}] CMetric {:.2} ms over {} slices{}",
+                b.rank,
+                b.class.label(),
+                b.total_cm_ms,
+                b.slices,
+                if b.stack_top_samples > 0 {
+                    format!(" ({} stack-top)", b.stack_top_samples)
+                } else {
+                    String::new()
+                }
+            )?;
+            writeln!(f, "  call path:")?;
+            for (i, frame) in b.call_path.iter().enumerate() {
+                writeln!(f, "    {:indent$}{}", "", frame, indent = i)?;
+            }
+            if !b.top_wakers.is_empty() {
+                let wk: Vec<String> = b
+                    .top_wakers
+                    .iter()
+                    .map(|(c, n)| format!("{c} x{n}"))
+                    .collect();
+                writeln!(f, "  woken by: {}", wk.join(", "))?;
+            }
+            writeln!(f, "  samples:")?;
+            for s in b.samples.iter().take(6) {
+                writeln!(f, "    {:>6}  {}", s.count, s.rendered)?;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report() -> Report {
+        Report {
+            app: "test".into(),
+            bottlenecks: vec![
+                Bottleneck {
+                    rank: 1,
+                    total_cm_ms: 10.0,
+                    slices: 5,
+                    class: BottleneckClass::Synchronization,
+                    top_wakers: vec![("parent".into(), 4)],
+                    call_path: vec!["main".into(), "emd".into()],
+                    samples: vec![
+                        SampleLine {
+                            rendered: "emd (emd.c:57)".into(),
+                            function: Some("emd".into()),
+                            count: 7,
+                        },
+                        SampleLine {
+                            rendered: "dist (d.c:9)".into(),
+                            function: Some("dist".into()),
+                            count: 3,
+                        },
+                    ],
+                    stack_top_samples: 0,
+                },
+                Bottleneck {
+                    rank: 2,
+                    total_cm_ms: 4.0,
+                    slices: 2,
+                    class: BottleneckClass::Compute,
+                    top_wakers: vec![],
+                    call_path: vec!["main".into()],
+                    samples: vec![SampleLine {
+                        rendered: "emd (emd.c:60)".into(),
+                        function: Some("emd".into()),
+                        count: 2,
+                    }],
+                    stack_top_samples: 1,
+                },
+            ],
+            total_slices: 100,
+            critical_slices: 7,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn critical_ratio_and_top_functions() {
+        let r = report();
+        assert!((r.critical_ratio() - 0.07).abs() < 1e-12);
+        let top = r.top_functions(2);
+        assert_eq!(top[0], ("emd".to_string(), 9));
+        assert_eq!(top[1], ("dist".to_string(), 3));
+        assert_eq!(r.samples_of("emd"), 9);
+    }
+
+    #[test]
+    fn display_renders() {
+        let s = report().to_string();
+        assert!(s.contains("GAPP profile"));
+        assert!(s.contains("emd (emd.c:57)"));
+        assert!(s.contains("stack-top"));
+        assert!(s.contains("synchronization (futex)"));
+        assert!(s.contains("woken by: parent x4"));
+    }
+}

@@ -1,0 +1,91 @@
+//! Address → source-line mapping with a cache (paper §5.4: "GAPP caches
+//! address-to-symbol mapping, and hence the mapping time will be less
+//! when stack traces are identical").
+
+use std::collections::HashMap;
+
+use crate::workload::symbols::{Location, SymbolTable};
+
+/// Caching wrapper over the app's `addr2line`.
+pub struct Symbolizer<'a> {
+    symtab: &'a SymbolTable,
+    cache: HashMap<u64, Option<Location>>,
+    pub lookups: u64,
+    pub cache_hits: u64,
+}
+
+impl<'a> Symbolizer<'a> {
+    pub fn new(symtab: &'a SymbolTable) -> Symbolizer<'a> {
+        Symbolizer {
+            symtab,
+            cache: HashMap::new(),
+            lookups: 0,
+            cache_hits: 0,
+        }
+    }
+
+    /// Resolve an address (None for PIE / out-of-image, per §6.1).
+    pub fn resolve(&mut self, addr: u64) -> Option<Location> {
+        self.lookups += 1;
+        if let Some(hit) = self.cache.get(&addr) {
+            self.cache_hits += 1;
+            return hit.clone();
+        }
+        let loc = self.symtab.addr2line(addr);
+        self.cache.insert(addr, loc.clone());
+        loc
+    }
+
+    /// Render an address as "func (file:line)" or a raw fallback.
+    pub fn render(&mut self, addr: u64) -> String {
+        match self.resolve(addr) {
+            Some(l) => format!("{} ({}:{})", l.function, l.file, l.line),
+            None => match self.symtab.sym_name(addr) {
+                Some(n) => format!("{n} (+0x{:x})", addr),
+                None => format!("0x{addr:x}"),
+            },
+        }
+    }
+
+    /// Render a call path, outermost → innermost.
+    pub fn render_path(&mut self, stack: &[u64]) -> Vec<String> {
+        stack.iter().map(|a| self.render(*a)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn caches_repeated_lookups() {
+        let mut st = SymbolTable::new();
+        let f = st.add("emd", "emd.c", 55);
+        let addr = st.ip(f, 32);
+        let mut s = Symbolizer::new(&st);
+        let a = s.resolve(addr).unwrap();
+        let b = s.resolve(addr).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(s.lookups, 2);
+        assert_eq!(s.cache_hits, 1);
+    }
+
+    #[test]
+    fn renders_paths() {
+        let mut st = SymbolTable::new();
+        let main = st.add("main", "a.c", 1);
+        let inner = st.add("worker", "a.c", 50);
+        let mut s = Symbolizer::new(&st);
+        let path = s.render_path(&[st.addr_of(main), st.addr_of(inner)]);
+        assert_eq!(path.len(), 2);
+        assert!(path[0].starts_with("main"));
+        assert!(path[1].starts_with("worker"));
+    }
+
+    #[test]
+    fn unknown_address_rendered_raw() {
+        let st = SymbolTable::new();
+        let mut s = Symbolizer::new(&st);
+        assert_eq!(s.render(0x123), "0x123");
+    }
+}

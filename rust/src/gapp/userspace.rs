@@ -1,0 +1,422 @@
+//! The user-space probe (paper §4.4): drains the circular buffer,
+//! assembles sampled instruction pointers per timeslice, merges
+//! identical call paths, and ranks the merged entries by total CMetric.
+//!
+//! This is where the three-layer architecture bites: the per-thread
+//! CMetric accumulation (the paper's kernel-side `cm_hash`) is computed
+//! here by streaming interval rows through the AOT-compiled XLA analysis
+//! program in fixed-size batches. The in-kernel scalar path is retained
+//! as a cross-check (`KernelProbes::cm_hash_ns`), and an integration
+//! test asserts the two agree.
+
+use std::collections::HashMap;
+
+use crate::runtime::{AnalysisEngine, T_SLOTS};
+use crate::simkernel::{Pid, WaitKind};
+
+use super::records::Record;
+
+/// A critical timeslice awaiting the merge phase.
+#[derive(Clone, Debug)]
+pub struct SliceEntry {
+    pub ts_id: u64,
+    pub pid: Pid,
+    pub cm_ns: f64,
+    pub threads_av: f64,
+    /// Call path (outermost → innermost) captured at the switch.
+    pub stack: Vec<u64>,
+    /// Sampled IPs attributed to this slice (plus the switch IP).
+    pub addrs: Vec<u64>,
+    /// True when no samples landed and the stack top was substituted
+    /// (the paper's "from stack top" label).
+    pub from_stack_top: bool,
+    /// What the slice ended waiting on (§7 classification).
+    pub wait: WaitKind,
+    /// Thread whose wakeup started this slice (0 = none/timer).
+    pub woken_by: Pid,
+}
+
+/// A merged call path: summed CMetric + address frequency table.
+#[derive(Clone, Debug)]
+pub struct MergedPath {
+    pub stack: Vec<u64>,
+    pub total_cm_ns: f64,
+    pub slices: u64,
+    pub addr_freq: HashMap<u64, u64>,
+    pub stack_top_samples: u64,
+    /// Wait-kind histogram over the merged slices (§7 classification).
+    pub wait_hist: HashMap<WaitKind, u64>,
+    /// Waker histogram: who ended the waits that started these slices.
+    pub wakers: HashMap<Pid, u64>,
+}
+
+/// Per-thread totals from the batched XLA analysis.
+#[derive(Clone, Debug, Default)]
+pub struct ThreadTotals {
+    pub cm_ns: f64,
+    pub wall_ns: f64,
+}
+
+/// User-space engine state.
+pub struct UserProbe {
+    engine: AnalysisEngine,
+    // Batch under construction (reused across drains: zero-alloc path).
+    a_flat: Vec<f32>,
+    t_vec: Vec<f32>,
+    rows: usize,
+    // pid ↔ slot attribution over time (slots are recycled).
+    slot_owner: Vec<Option<Pid>>,
+    /// Accumulated per-pid totals (committed when slots are freed or at
+    /// flush time).
+    pub totals: HashMap<Pid, ThreadTotals>,
+    // Pending per-batch slot owner snapshot: totals must be attributed
+    // to the owner at batch-build time, so each batch is flushed before
+    // any slot in it is reassigned.
+    pending_samples: HashMap<Pid, Vec<u64>>,
+    pub slices: Vec<SliceEntry>,
+    pub records_processed: u64,
+    pub batch_flushes: u64,
+}
+
+impl UserProbe {
+    pub fn new(engine: AnalysisEngine) -> UserProbe {
+        let batch = engine.batch;
+        let t_slots = engine.t_slots;
+        UserProbe {
+            engine,
+            a_flat: vec![0.0; batch * t_slots],
+            t_vec: vec![0.0; batch],
+            rows: 0,
+            slot_owner: vec![None; T_SLOTS],
+            totals: HashMap::new(),
+            pending_samples: HashMap::new(),
+            slices: Vec::new(),
+            records_processed: 0,
+            batch_flushes: 0,
+        }
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.engine.backend_name()
+    }
+
+    /// Consume one record from the circular buffer.
+    pub fn consume(&mut self, rec: Record) {
+        self.records_processed += 1;
+        match rec {
+            Record::SlotAssign { pid, slot } => {
+                // A reassignment invalidates per-slot accumulation —
+                // flush the open batch first.
+                if slot < self.slot_owner.len() {
+                    if self.slot_owner[slot].is_some() {
+                        self.flush_batch();
+                    }
+                    self.slot_owner[slot] = Some(pid);
+                }
+            }
+            Record::SlotFree { pid, slot } => {
+                // Commit what this slot accumulated so far.
+                self.flush_batch();
+                if slot < self.slot_owner.len() {
+                    debug_assert_eq!(self.slot_owner[slot], Some(pid));
+                    self.slot_owner[slot] = None;
+                }
+            }
+            Record::Interval { dur, mask } => {
+                let t_slots = self.engine.t_slots;
+                let row = self.rows;
+                let base = row * t_slots;
+                for w in 0..2 {
+                    let mut bits = mask[w];
+                    while bits != 0 {
+                        let b = bits.trailing_zeros() as usize;
+                        let slot = w * 64 + b;
+                        if slot < t_slots {
+                            self.a_flat[base + slot] = 1.0;
+                        }
+                        bits &= bits - 1;
+                    }
+                }
+                self.t_vec[row] = dur as f32;
+                self.rows += 1;
+                if self.rows == self.engine.batch {
+                    self.flush_batch();
+                }
+            }
+            Record::Sample { pid, ip } => {
+                self.pending_samples.entry(pid).or_default().push(ip);
+            }
+            Record::SliceDiscard { pid } => {
+                // Reject pending samples for this thread (§4.4).
+                if let Some(v) = self.pending_samples.get_mut(&pid) {
+                    v.clear();
+                }
+            }
+            Record::SliceEnd {
+                ts_id,
+                pid,
+                cm_ns,
+                threads_av,
+                ip,
+                stack,
+                wait,
+                woken_by,
+            } => {
+                let mut addrs = self
+                    .pending_samples
+                    .remove(&pid)
+                    .unwrap_or_default();
+                // The IP at the switch itself is a valid sample.
+                if ip != 0 {
+                    addrs.push(ip);
+                }
+                // Fallback: no samples → attribute to the stack top
+                // (return address of the caller), labelled as such.
+                let from_stack_top = addrs.is_empty();
+                if from_stack_top {
+                    if let Some(top) = stack.last() {
+                        addrs.push(*top);
+                    }
+                }
+                self.slices.push(SliceEntry {
+                    ts_id,
+                    pid,
+                    cm_ns,
+                    threads_av,
+                    stack,
+                    addrs,
+                    from_stack_top,
+                    wait,
+                    woken_by,
+                });
+            }
+        }
+    }
+
+    /// Run the open batch through the analysis engine and fold the
+    /// per-slot outputs into per-pid totals.
+    pub fn flush_batch(&mut self) {
+        if self.rows == 0 {
+            return;
+        }
+        // Zero-padding the tail is exact (empty rows contribute nothing).
+        let out = self
+            .engine
+            .analyze(&self.a_flat, &self.t_vec)
+            .expect("analysis engine");
+        for (slot, owner) in self.slot_owner.iter().enumerate() {
+            if let Some(pid) = owner {
+                if out.cm[slot] > 0.0 {
+                    let t = self.totals.entry(*pid).or_default();
+                    t.cm_ns += out.cm[slot] as f64;
+                    t.wall_ns += out.wall[slot] as f64;
+                }
+            }
+        }
+        self.batch_flushes += 1;
+        self.a_flat.fill(0.0);
+        self.t_vec.fill(0.0);
+        self.rows = 0;
+    }
+
+    /// Merge identical call paths (paper §4.4 post-processing) and rank
+    /// by total CMetric via the compiled top-K artifact.
+    pub fn merge_and_rank(&mut self, top_n: usize) -> Vec<MergedPath> {
+        self.flush_batch();
+        let mut merged: HashMap<&[u64], MergedPath> = HashMap::new();
+        for s in &self.slices {
+            let e = merged
+                .entry(s.stack.as_slice())
+                .or_insert_with(|| MergedPath {
+                    stack: s.stack.clone(),
+                    total_cm_ns: 0.0,
+                    slices: 0,
+                    addr_freq: HashMap::new(),
+                    stack_top_samples: 0,
+                    wait_hist: HashMap::new(),
+                    wakers: HashMap::new(),
+                });
+            e.total_cm_ns += s.cm_ns;
+            e.slices += 1;
+            for a in &s.addrs {
+                *e.addr_freq.entry(*a).or_insert(0) += 1;
+            }
+            if s.from_stack_top {
+                e.stack_top_samples += 1;
+            }
+            *e.wait_hist.entry(s.wait).or_insert(0) += 1;
+            if s.woken_by != 0 {
+                *e.wakers.entry(s.woken_by).or_insert(0) += 1;
+            }
+        }
+        let mut paths: Vec<MergedPath> = merged.into_values().collect();
+        // Deterministic order before ranking.
+        paths.sort_by(|a, b| a.stack.cmp(&b.stack));
+        let scores: Vec<f32> = paths.iter().map(|p| p.total_cm_ns as f32).collect();
+        let ranked = self
+            .engine
+            .rank(&scores, top_n)
+            .expect("rank engine");
+        ranked
+            .into_iter()
+            .map(|(i, _)| paths[i].clone())
+            .collect()
+    }
+
+    /// Approximate user-space memory footprint (paper column M).
+    pub fn memory_bytes(&self) -> u64 {
+        let slices: u64 = self
+            .slices
+            .iter()
+            .map(|s| 64 + 8 * (s.stack.len() + s.addrs.len()) as u64)
+            .sum();
+        let batch = (self.a_flat.len() * 4 + self.t_vec.len() * 4) as u64;
+        let samples: u64 = self
+            .pending_samples
+            .values()
+            .map(|v| 8 * v.len() as u64)
+            .sum();
+        slices + batch + samples
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gapp::records::{mask_set, SlotMask};
+
+    fn probe() -> UserProbe {
+        UserProbe::new(AnalysisEngine::native())
+    }
+
+    fn interval(slots: &[usize], dur: u64) -> Record {
+        let mut mask: SlotMask = [0; 2];
+        for s in slots {
+            mask_set(&mut mask, *s);
+        }
+        Record::Interval { dur, mask }
+    }
+
+    #[test]
+    fn totals_accumulate_per_pid() {
+        let mut u = probe();
+        u.consume(Record::SlotAssign { pid: 10, slot: 0 });
+        u.consume(Record::SlotAssign { pid: 11, slot: 1 });
+        u.consume(interval(&[0, 1], 100));
+        u.consume(interval(&[0], 50));
+        u.flush_batch();
+        assert!((u.totals[&10].cm_ns - 100.0).abs() < 1e-3); // 50 + 50
+        assert!((u.totals[&11].cm_ns - 50.0).abs() < 1e-3);
+        assert!((u.totals[&10].wall_ns - 150.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn slot_recycling_flushes_first() {
+        let mut u = probe();
+        u.consume(Record::SlotAssign { pid: 1, slot: 0 });
+        u.consume(interval(&[0], 100));
+        u.consume(Record::SlotFree { pid: 1, slot: 0 });
+        u.consume(Record::SlotAssign { pid: 2, slot: 0 });
+        u.consume(interval(&[0], 70));
+        u.flush_batch();
+        assert!((u.totals[&1].cm_ns - 100.0).abs() < 1e-3);
+        assert!((u.totals[&2].cm_ns - 70.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn discard_rejects_pending_samples() {
+        let mut u = probe();
+        u.consume(Record::Sample { pid: 5, ip: 0xA });
+        u.consume(Record::SliceDiscard { pid: 5 });
+        u.consume(Record::Sample { pid: 5, ip: 0xB });
+        u.consume(Record::SliceEnd {
+            ts_id: 1,
+            pid: 5,
+            cm_ns: 10.0,
+            threads_av: 1.0,
+            ip: 0,
+            stack: vec![0x100],
+            wait: WaitKind::Futex,
+            woken_by: 0,
+        });
+        assert_eq!(u.slices.len(), 1);
+        assert_eq!(u.slices[0].addrs, vec![0xB]); // 0xA was rejected
+        assert!(!u.slices[0].from_stack_top);
+    }
+
+    #[test]
+    fn stack_top_fallback_when_no_samples() {
+        let mut u = probe();
+        u.consume(Record::SliceEnd {
+            ts_id: 1,
+            pid: 5,
+            cm_ns: 10.0,
+            threads_av: 1.0,
+            ip: 0,
+            stack: vec![0x100, 0x200],
+            wait: WaitKind::Io,
+            woken_by: 0,
+        });
+        assert!(u.slices[0].from_stack_top);
+        assert_eq!(u.slices[0].addrs, vec![0x200]);
+    }
+
+    #[test]
+    fn merge_sums_identical_call_paths() {
+        let mut u = probe();
+        for i in 0..3 {
+            u.consume(Record::SliceEnd {
+                ts_id: i,
+                pid: 1,
+                cm_ns: 100.0,
+                threads_av: 1.0,
+                ip: 0xAA,
+                stack: vec![0x100, 0x200],
+                wait: WaitKind::Futex,
+                woken_by: 9,
+            });
+        }
+        u.consume(Record::SliceEnd {
+            ts_id: 9,
+            pid: 2,
+            cm_ns: 50.0,
+            threads_av: 1.0,
+            ip: 0xBB,
+            stack: vec![0x100, 0x300],
+            wait: WaitKind::Queue,
+            woken_by: 0,
+        });
+        let top = u.merge_and_rank(5);
+        assert_eq!(top.len(), 2);
+        assert_eq!(top[0].stack, vec![0x100, 0x200]);
+        assert!((top[0].total_cm_ns - 300.0).abs() < 1e-6);
+        assert_eq!(top[0].slices, 3);
+        assert_eq!(top[0].addr_freq[&0xAA], 3);
+        assert_eq!(top[0].wait_hist[&WaitKind::Futex], 3);
+        assert_eq!(top[0].wakers[&9], 3);
+        assert_eq!(top[1].stack, vec![0x100, 0x300]);
+        assert_eq!(top[1].wait_hist[&WaitKind::Queue], 1);
+    }
+
+    #[test]
+    fn rank_respects_top_n() {
+        let mut u = probe();
+        for p in 0..10u64 {
+            u.consume(Record::SliceEnd {
+                ts_id: p,
+                pid: 1,
+                cm_ns: (p + 1) as f64,
+                threads_av: 1.0,
+                ip: 1,
+                stack: vec![0x100 + p],
+                wait: WaitKind::None,
+                woken_by: 0,
+            });
+        }
+        let top = u.merge_and_rank(3);
+        assert_eq!(top.len(), 3);
+        assert!(top[0].total_cm_ns >= top[1].total_cm_ns);
+        assert!(top[1].total_cm_ns >= top[2].total_cm_ns);
+        assert!((top[0].total_cm_ns - 10.0).abs() < 1e-6);
+    }
+}

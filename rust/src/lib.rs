@@ -1,0 +1,37 @@
+//! # GAPP — Generic Automatic Parallel Profiler (ICPE '20 reproduction)
+//!
+//! A full-system reproduction of *GAPP: A Fast Profiler for Detecting
+//! Serialization Bottlenecks in Parallel Linux Applications* (Nair & Field,
+//! ICPE 2020), built as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the profiler pipeline and every substrate it
+//!   needs: a discrete-event Linux-scheduler simulator ([`simkernel`]), an
+//!   eBPF-like tracing framework ([`ebpf`]), a synthetic parallel-workload
+//!   system with 13 applications ([`workload`]), the GAPP probes and
+//!   user-space engine ([`gapp`]), baseline profilers ([`baselines`]) and
+//!   the experiment harness ([`experiments`]).
+//! * **Layer 2** — a JAX analysis graph (`python/compile/model.py`) that
+//!   batches GAPP's CMetric bookkeeping into activity-matrix reductions,
+//!   AOT-lowered to HLO text at build time.
+//! * **Layer 1** — Pallas kernels (`python/compile/kernels/`) for the fused
+//!   `Aᵀ(t/n)` / `Aᵀt` aggregation and top-K ranking.
+//!
+//! The [`runtime`] module loads the AOT artifacts via PJRT (`xla` crate) and
+//! serves them on the profiling hot path — Python never runs at profile
+//! time.
+//!
+//! See `DESIGN.md` for the substitution table (real kernel/eBPF/Parsec →
+//! simulated substrates) and the per-experiment index, and `EXPERIMENTS.md`
+//! for paper-vs-measured results.
+
+pub mod util;
+pub mod simkernel;
+pub mod ebpf;
+pub mod workload;
+pub mod gapp;
+pub mod runtime;
+pub mod baselines;
+pub mod experiments;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

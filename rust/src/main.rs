@@ -1,0 +1,116 @@
+//! GAPP command-line interface: profile synthetic applications and
+//! regenerate every table/figure from the paper.
+//!
+//! ```text
+//! gapp list-apps
+//! gapp profile --app dedup [--threads 64] [--seed 7] [--nmin 8] [--dt-us 3000]
+//! gapp run --app ferret            # unprofiled baseline run
+//! gapp table2 [--threads 64]       # Table 2
+//! gapp fig3 | fig4 | fig5 | fig6 | fig7
+//! gapp dedup-alloc                 # §5.2 Dedup allocations
+//! gapp sweep                       # §5.1 Nmin / Δt sensitivity
+//! gapp overhead                    # §5.4 overhead study
+//! gapp baselines                   # §6 wPerf / Coz / CritStacks
+//! gapp all                         # everything above, in order
+//! Backend: --xla forces the AOT artifacts, --native the Rust fallback;
+//! default auto-detects artifacts/.
+//! ```
+
+use gapp::experiments::{
+    baselines_cmp, dedup_alloc, fig3, fig4, fig5, fig6, fig7, overhead, sensitivity,
+    table2, EngineKind,
+};
+use gapp::gapp::{profile, run_unprofiled, GappConfig};
+use gapp::simkernel::KernelConfig;
+use gapp::util::cli::Args;
+use gapp::workload::apps;
+
+fn main() {
+    let args = Args::from_env();
+    let engine = EngineKind::from_flag(args.flag("xla"), args.flag("native"));
+    let threads: usize = args.opt("threads", 64);
+    let seed: u64 = args.opt("seed", 7);
+
+    let result = match args.subcommand() {
+        Some("list-apps") => {
+            for a in apps::ALL_APPS {
+                println!("{a}");
+            }
+            Ok(())
+        }
+        Some("run") => cmd_run(&args, threads, seed),
+        Some("profile") => cmd_profile(&args, engine, threads, seed),
+        Some("table2") => table2::run(engine, threads, seed)
+            .map(|rows| println!("{}", table2::render(&rows))),
+        Some("fig3") => fig3::run(engine, threads.min(32), seed)
+            .map(|r| println!("{}", fig3::render(&r))),
+        Some("fig4") => fig4::run(engine, seed).map(|r| println!("{}", fig4::render(&r))),
+        Some("fig5") => fig5::run(engine, seed).map(|r| println!("{}", fig5::render(&r))),
+        Some("fig6") => fig6::run(engine, seed).map(|r| println!("{}", fig6::render(&r))),
+        Some("fig7") => fig7::run(engine, seed).map(|r| println!("{}", fig7::render(&r))),
+        Some("dedup-alloc") => {
+            dedup_alloc::run(engine, seed).map(|r| println!("{}", dedup_alloc::render(&r)))
+        }
+        Some("sweep") => {
+            sensitivity::run(engine, seed).map(|r| println!("{}", sensitivity::render(&r)))
+        }
+        Some("overhead") => overhead::run(engine, threads, seed)
+            .map(|r| println!("{}", overhead::render(&r))),
+        Some("baselines") => baselines_cmp::run(engine, seed)
+            .map(|r| println!("{}", baselines_cmp::render(&r))),
+        Some("all") => cmd_all(engine, threads, seed),
+        _ => {
+            eprintln!("usage: see `gapp --help` header in rust/src/main.rs");
+            eprintln!("subcommands: list-apps run profile table2 fig3 fig4 fig5 fig6 fig7 dedup-alloc sweep overhead baselines all");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn cmd_run(args: &Args, threads: usize, seed: u64) -> anyhow::Result<()> {
+    let name = args.opt_str("app", "blackscholes");
+    let app = apps::by_name(&name, threads, seed)
+        .ok_or_else(|| anyhow::anyhow!("unknown app {name:?} (try list-apps)"))?;
+    let (end, kernel) = run_unprofiled(&app, KernelConfig::default())?;
+    println!(
+        "{name}: {:.2} ms simulated | {} switches | {} wakeups | {} threads",
+        end as f64 / 1e6,
+        kernel.stats.switches,
+        kernel.stats.wakeups,
+        app.num_threads()
+    );
+    Ok(())
+}
+
+fn cmd_profile(args: &Args, engine: EngineKind, threads: usize, seed: u64) -> anyhow::Result<()> {
+    let name = args.opt_str("app", "blackscholes");
+    let app = apps::by_name(&name, threads, seed)
+        .ok_or_else(|| anyhow::anyhow!("unknown app {name:?} (try list-apps)"))?;
+    let mut gcfg = GappConfig::default();
+    if let Some(nmin) = args.get("nmin") {
+        gcfg.nmin = Some(nmin.parse()?);
+    }
+    gcfg.dt = args.opt::<u64>("dt-us", gcfg.dt / 1000) * 1000;
+    gcfg.top_n = args.opt("top", gcfg.top_n);
+    let (report, _) = profile(&app, KernelConfig::default(), gcfg, engine.make()?)?;
+    println!("{report}");
+    Ok(())
+}
+
+fn cmd_all(engine: EngineKind, threads: usize, seed: u64) -> anyhow::Result<()> {
+    println!("{}", table2::render(&table2::run(engine, threads, seed)?));
+    println!("{}", fig3::render(&fig3::run(engine, threads.min(32), seed)?));
+    println!("{}", fig4::render(&fig4::run(engine, seed)?));
+    println!("{}", fig5::render(&fig5::run(engine, seed)?));
+    println!("{}", fig6::render(&fig6::run(engine, seed)?));
+    println!("{}", fig7::render(&fig7::run(engine, seed)?));
+    println!("{}", dedup_alloc::render(&dedup_alloc::run(engine, seed)?));
+    println!("{}", sensitivity::render(&sensitivity::run(engine, seed)?));
+    println!("{}", overhead::render(&overhead::run(engine, threads, seed)?));
+    println!("{}", baselines_cmp::render(&baselines_cmp::run(engine, seed)?));
+    Ok(())
+}

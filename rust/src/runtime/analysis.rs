@@ -1,0 +1,214 @@
+//! The analysis engine used by GAPP's user-space probe: XLA-backed when
+//! artifacts are present, with a bit-equivalent native fallback.
+//!
+//! The native backend exists for three reasons: (a) `cargo test` must
+//! pass in a tree where `make artifacts` has not run; (b) the
+//! Rust-vs-XLA equivalence test is the end-to-end numeric check of the
+//! whole AOT path; (c) the §Perf pass compares the two on the same
+//! batches.
+
+use anyhow::Result;
+
+use super::engine::{AnalyzeRaw, XlaEngine};
+use super::{artifacts_dir, BATCH, RANK_K, RANK_P, T_SLOTS};
+
+/// Which implementation serves the analysis.
+pub enum Backend {
+    /// AOT-compiled XLA executables via PJRT.
+    Xla(Box<XlaEngine>),
+    /// Pure-Rust reference implementation of the same math.
+    Native,
+}
+
+/// Outputs of one analyze() batch (native or XLA).
+pub type AnalyzeOut = AnalyzeRaw;
+
+/// Batched CMetric analysis + top-K ranking.
+pub struct AnalysisEngine {
+    pub backend: Backend,
+    pub batch: usize,
+    pub t_slots: usize,
+    /// Batches analyzed (perf accounting).
+    pub batches: u64,
+}
+
+impl AnalysisEngine {
+    /// Prefer XLA when artifacts exist; fall back to native.
+    pub fn auto() -> AnalysisEngine {
+        match XlaEngine::load(&artifacts_dir()) {
+            Ok(e) => AnalysisEngine {
+                batch: e.batch,
+                t_slots: e.t_slots,
+                backend: Backend::Xla(Box::new(e)),
+                batches: 0,
+            },
+            Err(_) => AnalysisEngine::native(),
+        }
+    }
+
+    pub fn native() -> AnalysisEngine {
+        AnalysisEngine {
+            backend: Backend::Native,
+            batch: BATCH,
+            t_slots: T_SLOTS,
+            batches: 0,
+        }
+    }
+
+    pub fn xla() -> Result<AnalysisEngine> {
+        let e = XlaEngine::load(&artifacts_dir())?;
+        Ok(AnalysisEngine {
+            batch: e.batch,
+            t_slots: e.t_slots,
+            backend: Backend::Xla(Box::new(e)),
+            batches: 0,
+        })
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        match self.backend {
+            Backend::Xla(_) => "xla",
+            Backend::Native => "native",
+        }
+    }
+
+    /// Analyze one (possibly zero-padded) batch: `a` row-major
+    /// `[batch × t_slots]`, `t` `[batch]`.
+    pub fn analyze(&mut self, a: &[f32], t: &[f32]) -> Result<AnalyzeOut> {
+        self.batches += 1;
+        match &mut self.backend {
+            Backend::Xla(e) => e.analyze(a, t),
+            Backend::Native => Ok(native_analyze(a, t, self.t_slots)),
+        }
+    }
+
+    /// Top-K over call-path scores (padded/truncated to the artifact's P).
+    pub fn rank(&mut self, scores: &[f32], k: usize) -> Result<Vec<(usize, f32)>> {
+        match &mut self.backend {
+            Backend::Xla(e) => {
+                let mut padded = vec![0f32; RANK_P];
+                let n = scores.len().min(RANK_P);
+                padded[..n].copy_from_slice(&scores[..n]);
+                let mut out = e.rank(&padded)?;
+                out.truncate(k.min(RANK_K));
+                // Drop zero-padded winners beyond the real entries.
+                out.retain(|(i, v)| *i < scores.len() && *v > 0.0);
+                Ok(out)
+            }
+            Backend::Native => Ok(native_rank(scores, k)),
+        }
+    }
+}
+
+/// Native twin of the Layer-1/2 analysis (same contract as model.analyze).
+pub fn native_analyze(a: &[f32], t: &[f32], t_slots: usize) -> AnalyzeOut {
+    let b = t.len();
+    debug_assert_eq!(a.len(), b * t_slots);
+    let mut cm = vec![0f32; t_slots];
+    let mut wall = vec![0f32; t_slots];
+    let mut gcm = 0f32;
+    for i in 0..b {
+        let row = &a[i * t_slots..(i + 1) * t_slots];
+        let n: f32 = row.iter().sum();
+        if n <= 0.0 {
+            continue;
+        }
+        let c = t[i] / n.max(1.0);
+        gcm += c;
+        for (j, aij) in row.iter().enumerate() {
+            if *aij > 0.0 {
+                cm[j] += c;
+                wall[j] += t[i];
+            }
+        }
+    }
+    let threads_av = cm
+        .iter()
+        .zip(&wall)
+        .map(|(c, w)| if *c > 0.0 { w / c.max(1e-30) } else { 0.0 })
+        .collect();
+    AnalyzeOut {
+        cm,
+        wall,
+        threads_av,
+        global_cm: gcm,
+    }
+}
+
+/// Native top-K: descending, stable on ties, zero scores excluded.
+pub fn native_rank(scores: &[f32], k: usize) -> Vec<(usize, f32)> {
+    let mut idx: Vec<usize> = (0..scores.len()).collect();
+    idx.sort_by(|x, y| {
+        scores[*y]
+            .partial_cmp(&scores[*x])
+            .unwrap()
+            .then(x.cmp(y))
+    });
+    idx.into_iter()
+        .take(k)
+        .filter(|i| scores[*i] > 0.0)
+        .map(|i| (i, scores[i]))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Prng;
+
+    fn random_batch(seed: u64, b: usize, t_slots: usize) -> (Vec<f32>, Vec<f32>) {
+        let mut rng = Prng::new(seed);
+        let a: Vec<f32> = (0..b * t_slots)
+            .map(|_| if rng.chance(0.08) { 1.0 } else { 0.0 })
+            .collect();
+        let t: Vec<f32> = (0..b).map(|_| rng.exp(1e6) as f32).collect();
+        (a, t)
+    }
+
+    #[test]
+    fn native_conservation() {
+        let (a, t) = random_batch(3, 256, 64);
+        let out = native_analyze(&a, &t, 64);
+        let busy: f32 = (0..256)
+            .filter(|i| a[i * 64..(i + 1) * 64].iter().sum::<f32>() > 0.0)
+            .map(|i| t[i])
+            .sum();
+        let total_cm: f32 = out.cm.iter().sum();
+        assert!((total_cm - busy).abs() / busy.max(1.0) < 1e-3);
+    }
+
+    #[test]
+    fn native_threads_av_bounds() {
+        let (a, t) = random_batch(5, 128, 32);
+        let out = native_analyze(&a, &t, 32);
+        for (j, tav) in out.threads_av.iter().enumerate() {
+            if out.cm[j] > 0.0 {
+                assert!(*tav >= 1.0 - 1e-4 && *tav <= 32.0 + 1e-4);
+            } else {
+                assert_eq!(*tav, 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn native_rank_ordering() {
+        let scores = vec![3.0, 0.0, 9.0, 9.0, 1.0];
+        let r = native_rank(&scores, 4);
+        assert_eq!(r[0].0, 2); // stable tie: first index wins
+        assert_eq!(r[1].0, 3);
+        assert_eq!(r[2].0, 0);
+        assert_eq!(r[3].0, 4); // zero excluded entirely
+        assert_eq!(r.len(), 4);
+    }
+
+    #[test]
+    fn engine_native_analyze_works() {
+        let mut e = AnalysisEngine::native();
+        let b = e.batch;
+        let ts = e.t_slots;
+        let (a, t) = random_batch(7, b, ts);
+        let out = e.analyze(&a, &t).unwrap();
+        assert_eq!(out.cm.len(), ts);
+        assert!(out.global_cm > 0.0);
+    }
+}

@@ -1,0 +1,130 @@
+//! The XLA/PJRT execution engine: one compiled executable per artifact.
+//!
+//! Interchange is HLO *text* — the image's xla_extension 0.5.1 rejects
+//! jax ≥ 0.5 serialized protos (64-bit instruction ids); the text parser
+//! reassigns ids (see /opt/xla-example/README.md). Executables are
+//! compiled once at load; per-batch work is literal creation + execute.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::{BATCH, RANK_K, RANK_P, T_SLOTS};
+
+/// Outputs of one analyze() batch.
+#[derive(Clone, Debug, Default)]
+pub struct AnalyzeRaw {
+    pub cm: Vec<f32>,
+    pub wall: Vec<f32>,
+    pub threads_av: Vec<f32>,
+    pub global_cm: f32,
+}
+
+/// Compiled PJRT executables for the analysis graphs.
+pub struct XlaEngine {
+    client: xla::PjRtClient,
+    analyze: xla::PjRtLoadedExecutable,
+    rank: xla::PjRtLoadedExecutable,
+    pub batch: usize,
+    pub t_slots: usize,
+    pub rank_p: usize,
+    pub rank_k: usize,
+    /// Number of execute() calls (for perf accounting).
+    pub executions: u64,
+}
+
+impl XlaEngine {
+    /// Load and compile the primary artifacts from `dir`.
+    pub fn load(dir: &Path) -> Result<XlaEngine> {
+        let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
+        let analyze_path = dir.join(format!("cmetric_b{BATCH}_t{T_SLOTS}.hlo.txt"));
+        let rank_path = dir.join(format!("rank_p{RANK_P}_k{RANK_K}.hlo.txt"));
+        let analyze = Self::compile(&client, &analyze_path)?;
+        let rank = Self::compile(&client, &rank_path)?;
+        Ok(XlaEngine {
+            client,
+            analyze,
+            rank,
+            batch: BATCH,
+            t_slots: T_SLOTS,
+            rank_p: RANK_P,
+            rank_k: RANK_K,
+            executions: 0,
+        })
+    }
+
+    /// Load a specific analyze variant (batch-size sweep in §Perf).
+    pub fn load_variant(dir: &Path, batch: usize, t_slots: usize) -> Result<XlaEngine> {
+        let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
+        let analyze_path = dir.join(format!("cmetric_b{batch}_t{t_slots}.hlo.txt"));
+        let rank_path = dir.join(format!("rank_p{RANK_P}_k{RANK_K}.hlo.txt"));
+        let analyze = Self::compile(&client, &analyze_path)?;
+        let rank = Self::compile(&client, &rank_path)?;
+        Ok(XlaEngine {
+            client,
+            analyze,
+            rank,
+            batch,
+            t_slots,
+            rank_p: RANK_P,
+            rank_k: RANK_K,
+            executions: 0,
+        })
+    }
+
+    fn compile(
+        client: &xla::PjRtClient,
+        path: &Path,
+    ) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not UTF-8")?,
+        )
+        .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        client
+            .compile(&comp)
+            .with_context(|| format!("compile {}", path.display()))
+    }
+
+    /// Run the batched CMetric analysis: `a` is row-major `[batch × T]`
+    /// in {0,1}, `t` is `[batch]` durations (ns as f32).
+    pub fn analyze(&mut self, a: &[f32], t: &[f32]) -> Result<AnalyzeRaw> {
+        anyhow::ensure!(a.len() == self.batch * self.t_slots, "bad A shape");
+        anyhow::ensure!(t.len() == self.batch, "bad t shape");
+        let a_lit = xla::Literal::vec1(a)
+            .reshape(&[self.batch as i64, self.t_slots as i64])?;
+        let t_lit = xla::Literal::vec1(t);
+        let result = self.analyze.execute::<xla::Literal>(&[a_lit, t_lit])?[0][0]
+            .to_literal_sync()?;
+        self.executions += 1;
+        let (cm, wall, tav, gcm) = result.to_tuple4()?;
+        Ok(AnalyzeRaw {
+            cm: cm.to_vec::<f32>()?,
+            wall: wall.to_vec::<f32>()?,
+            threads_av: tav.to_vec::<f32>()?,
+            global_cm: gcm.to_vec::<f32>()?[0],
+        })
+    }
+
+    /// Top-K over a padded score vector: returns (index, value) pairs,
+    /// descending.
+    pub fn rank(&mut self, scores: &[f32]) -> Result<Vec<(usize, f32)>> {
+        anyhow::ensure!(scores.len() == self.rank_p, "bad scores shape");
+        let s_lit = xla::Literal::vec1(scores);
+        let result = self.rank.execute::<xla::Literal>(&[s_lit])?[0][0]
+            .to_literal_sync()?;
+        self.executions += 1;
+        let (vals, idx) = result.to_tuple2()?;
+        let vals = vals.to_vec::<f32>()?;
+        let idx = idx.to_vec::<i32>()?;
+        Ok(idx
+            .into_iter()
+            .zip(vals)
+            .map(|(i, v)| (i as usize, v))
+            .collect())
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}

@@ -1,0 +1,32 @@
+//! PJRT runtime: load the AOT-compiled analysis artifacts and serve them
+//! on the profiling hot path.
+//!
+//! `make artifacts` runs Python once (jax → StableHLO → HLO text, see
+//! `python/compile/aot.py`); this module loads those files with
+//! `HloModuleProto::from_text_file`, compiles them on the PJRT CPU
+//! client, and executes them from Rust. Python never runs at profile
+//! time. A pure-Rust native backend implements the identical math so
+//! the system degrades gracefully when `artifacts/` is absent — and so
+//! tests can assert Rust-vs-XLA equality.
+
+pub mod engine;
+pub mod analysis;
+
+pub use analysis::{AnalysisEngine, AnalyzeOut, Backend};
+pub use engine::XlaEngine;
+
+/// Thread-slot width of the compiled artifacts (matches python DEFAULT_T).
+pub const T_SLOTS: usize = 128;
+/// Interval-batch size of the primary analyze artifact.
+pub const BATCH: usize = 1024;
+/// Call-path capacity of the primary rank artifact.
+pub const RANK_P: usize = 1024;
+/// K of the primary rank artifact.
+pub const RANK_K: usize = 16;
+
+/// Locate the artifacts directory: $GAPP_ARTIFACTS or ./artifacts.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var_os("GAPP_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| std::path::PathBuf::from("artifacts"))
+}

@@ -1,0 +1,26 @@
+//! Discrete-event Linux-scheduler simulator — the "kernel" substrate.
+//!
+//! The real GAPP hooks four kernel tracepoints (`sched_switch`,
+//! `sched_wakeup`, `task_newtask`/`task_rename`, `sched_process_exit`).
+//! This module provides a deterministic scheduler that emits exactly those
+//! events with the same argument shapes, so the profiler layers above run
+//! unmodified logic against simulated workloads (DESIGN.md §1).
+//!
+//! Model: `cpus` symmetric CPUs share a global vruntime-ordered runqueue
+//! (CFS-like). Tasks are driven by a [`TaskLogic`] implementation supplied
+//! by the workload layer; each scheduling segment runs until the task's
+//! current step completes, its quantum expires (preempt only when someone
+//! else is waiting, as CFS does), or it blocks. Probe costs returned by
+//! attached [`Probe`]s are charged to the emitting CPU's timeline, which is
+//! how profiler overhead arises *mechanically* rather than being assumed.
+
+pub mod task;
+pub mod tracepoint;
+pub mod kernel;
+
+pub use kernel::{Kernel, KernelConfig, StepCtx, Step, TaskLogic};
+pub use task::{Pid, Task, TaskState, WaitKind, IDLE_PID};
+pub use tracepoint::{Event, Probe, ProbeCost, SampleView};
+
+/// Simulated time in nanoseconds since boot.
+pub type Time = u64;

@@ -1,0 +1,133 @@
+//! Task control blocks for the simulated kernel.
+
+use super::Time;
+
+/// Process/thread identifier. Pid 0 is the idle task ("swapper").
+pub type Pid = u32;
+
+/// The idle task: what a CPU "runs" when the runqueue is empty.
+pub const IDLE_PID: Pid = 0;
+
+/// What a blocked task is waiting on — the kernel-visible wait class
+/// GAPP's §7 "bottleneck classification" extension keys on (futex vs
+/// I/O vs pipeline etc., as a real deployment would learn from the
+/// syscall/futex tracepoints the paper describes experimenting with).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum WaitKind {
+    /// Not waiting (running/runnable) — slices ending by preemption.
+    #[default]
+    None,
+    /// Futex-backed mutex/condvar/rwlock park.
+    Futex,
+    /// Barrier rendezvous.
+    Barrier,
+    /// Bounded pipeline queue (full/empty).
+    Queue,
+    /// Blocking I/O or timer sleep.
+    Io,
+    /// Message-passing receive.
+    Channel,
+}
+
+/// Scheduler state of a task. `Running` and `Runnable` together correspond
+/// to Linux's `TASK_RUNNING` — the state GAPP treats as *active* (§2.1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TaskState {
+    /// Currently executing on a CPU.
+    Running,
+    /// In the runqueue, waiting for a CPU (still TASK_RUNNING in Linux).
+    Runnable,
+    /// Blocked: sleeping, waiting on a futex, or in simulated I/O
+    /// (TASK_INTERRUPTIBLE / TASK_UNINTERRUPTIBLE).
+    Blocked,
+    /// Exited; the TCB is kept for post-mortem queries.
+    Exited,
+}
+
+impl TaskState {
+    /// Linux `TASK_RUNNING`?
+    pub fn is_running_state(self) -> bool {
+        matches!(self, TaskState::Running | TaskState::Runnable)
+    }
+}
+
+/// Task control block.
+#[derive(Clone, Debug)]
+pub struct Task {
+    pub pid: Pid,
+    /// Command name (`comm`), as `task_rename` would report.
+    pub comm: String,
+    pub state: TaskState,
+    /// CFS-style virtual runtime (ns of CPU consumed; no nice weighting).
+    pub vruntime: Time,
+    /// Total CPU time consumed.
+    pub cpu_time: Time,
+    /// Remaining nanoseconds of the task's current compute step.
+    pub remaining: Time,
+    /// CPU the task is currently on (valid while `Running`).
+    pub cpu: usize,
+    /// Event-generation counter: invalidates stale segment-end events.
+    pub genseq: u64,
+    /// Time the task last started a timeslice (switched in).
+    pub slice_start: Time,
+    /// Quantum budget left in the current timeslice.
+    pub quantum_left: Time,
+    /// Simulated instruction pointer (set by the workload's current op).
+    pub ip: u64,
+    /// What the task is blocked on (valid while `Blocked`).
+    pub wait_kind: WaitKind,
+    /// Simulated call stack, innermost last (symbol addresses).
+    pub stack: Vec<u64>,
+    /// Creation and exit timestamps.
+    pub created_at: Time,
+    pub exited_at: Option<Time>,
+    /// Number of voluntary (blocking) and involuntary (preempt) switches.
+    pub nvcsw: u64,
+    pub nivcsw: u64,
+}
+
+impl Task {
+    pub fn new(pid: Pid, comm: &str, now: Time) -> Task {
+        Task {
+            pid,
+            comm: comm.to_string(),
+            state: TaskState::Runnable,
+            vruntime: 0,
+            cpu_time: 0,
+            remaining: 0,
+            cpu: usize::MAX,
+            genseq: 0,
+            slice_start: 0,
+            quantum_left: 0,
+            ip: 0,
+            wait_kind: WaitKind::None,
+            stack: Vec::new(),
+            created_at: now,
+            exited_at: None,
+            nvcsw: 0,
+            nivcsw: 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn running_states() {
+        assert!(TaskState::Running.is_running_state());
+        assert!(TaskState::Runnable.is_running_state());
+        assert!(!TaskState::Blocked.is_running_state());
+        assert!(!TaskState::Exited.is_running_state());
+    }
+
+    #[test]
+    fn new_task_defaults() {
+        let t = Task::new(3, "worker", 100);
+        assert_eq!(t.pid, 3);
+        assert_eq!(t.state, TaskState::Runnable);
+        assert_eq!(t.created_at, 100);
+        assert!(t.exited_at.is_none());
+    }
+}

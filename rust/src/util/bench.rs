@@ -1,0 +1,195 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Usage inside a `[[bench]] harness = false` target:
+//!
+//! ```ignore
+//! let mut b = Bench::from_env("ringbuf");
+//! b.bench("push_pop", || { /* work */ });
+//! b.finish();
+//! ```
+//!
+//! Each benchmark is warmed up, then run in timed batches until both a
+//! minimum sample count and a minimum measuring time are reached; the
+//! report prints mean/p50/p99 per iteration plus throughput when the
+//! caller declares per-iteration items.
+
+use std::time::{Duration, Instant};
+
+use super::stats::{fmt_ns, Summary};
+
+/// Harness configuration (override via env: BENCH_MIN_SAMPLES, BENCH_MIN_MS).
+#[derive(Clone, Debug)]
+pub struct BenchConfig {
+    pub warmup_iters: u64,
+    pub min_samples: usize,
+    pub min_time: Duration,
+    pub batch: u64,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            warmup_iters: 3,
+            min_samples: 20,
+            min_time: Duration::from_millis(300),
+            batch: 1,
+        }
+    }
+}
+
+/// One benchmark group, printing rows as it goes.
+pub struct Bench {
+    group: String,
+    cfg: BenchConfig,
+    results: Vec<(String, Summary)>,
+    filter: Option<String>,
+}
+
+impl Bench {
+    pub fn new(group: &str, cfg: BenchConfig) -> Bench {
+        println!("\n== bench group: {group} ==");
+        Bench {
+            group: group.to_string(),
+            cfg,
+            results: Vec::new(),
+            filter: None,
+        }
+    }
+
+    /// Construct honoring env overrides and an optional name filter in
+    /// argv[1] (mirrors `cargo bench -- <filter>`).
+    pub fn from_env(group: &str) -> Bench {
+        let mut cfg = BenchConfig::default();
+        if let Ok(v) = std::env::var("BENCH_MIN_SAMPLES") {
+            if let Ok(n) = v.parse() {
+                cfg.min_samples = n;
+            }
+        }
+        if let Ok(v) = std::env::var("BENCH_MIN_MS") {
+            if let Ok(n) = v.parse() {
+                cfg.min_time = Duration::from_millis(n);
+            }
+        }
+        let filter = std::env::args().skip(1).find(|a| !a.starts_with('-'));
+        let mut b = Bench::new(group, cfg);
+        b.filter = filter;
+        b
+    }
+
+    fn skip(&self, name: &str) -> bool {
+        match &self.filter {
+            Some(f) => !name.contains(f.as_str()) && !self.group.contains(f.as_str()),
+            None => false,
+        }
+    }
+
+    /// Time `f`, reporting per-iteration latency.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> Option<Summary> {
+        self.bench_items(name, 1, move || {
+            f();
+        })
+    }
+
+    /// Time `f`, additionally reporting items/second given `items` units of
+    /// work per call.
+    pub fn bench_items<F: FnMut()>(
+        &mut self,
+        name: &str,
+        items: u64,
+        mut f: F,
+    ) -> Option<Summary> {
+        if self.skip(name) {
+            return None;
+        }
+        for _ in 0..self.cfg.warmup_iters {
+            f();
+        }
+        let mut samples = Vec::new();
+        let start = Instant::now();
+        while samples.len() < self.cfg.min_samples || start.elapsed() < self.cfg.min_time
+        {
+            let t0 = Instant::now();
+            for _ in 0..self.cfg.batch {
+                f();
+            }
+            let per = t0.elapsed().as_nanos() as f64 / self.cfg.batch as f64;
+            samples.push(per);
+            if samples.len() >= 10_000 {
+                break;
+            }
+        }
+        let s = Summary::of(&samples);
+        let mut line = format!(
+            "  {:<40} mean {:>12}  p50 {:>12}  p99 {:>12}  (n={})",
+            name,
+            fmt_ns(s.mean as u64),
+            fmt_ns(s.p50 as u64),
+            fmt_ns(s.p99 as u64),
+            s.n
+        );
+        if items > 1 {
+            let per_sec = items as f64 / (s.mean / 1e9);
+            line.push_str(&format!("  {:.2} Mitems/s", per_sec / 1e6));
+        }
+        println!("{line}");
+        self.results.push((name.to_string(), s.clone()));
+        Some(s)
+    }
+
+    /// Print a closing line; returns collected summaries for programmatic
+    /// use (e.g. regression assertions in the perf pass).
+    pub fn finish(self) -> Vec<(String, Summary)> {
+        println!("== end group: {} ({} benchmarks) ==", self.group, self.results.len());
+        self.results
+    }
+}
+
+/// Opaque value sink to prevent the optimizer deleting benched work
+/// (std::hint::black_box is stable but this keeps call sites tidy).
+#[inline]
+pub fn sink<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_cfg() -> BenchConfig {
+        BenchConfig {
+            warmup_iters: 1,
+            min_samples: 3,
+            min_time: Duration::from_millis(1),
+            batch: 1,
+        }
+    }
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let mut b = Bench::new("test", quick_cfg());
+        let s = b
+            .bench("noop_sum", || {
+                let mut acc = 0u64;
+                for i in 0..100 {
+                    acc = acc.wrapping_add(i);
+                }
+                sink(acc);
+            })
+            .unwrap();
+        assert!(s.n >= 3);
+        assert!(s.mean > 0.0);
+        let results = b.finish();
+        assert_eq!(results.len(), 1);
+    }
+
+    #[test]
+    fn items_throughput_positive() {
+        let mut b = Bench::new("test2", quick_cfg());
+        let s = b
+            .bench_items("items", 64, || {
+                sink(1 + 1);
+            })
+            .unwrap();
+        assert!(s.mean > 0.0);
+    }
+}

@@ -1,0 +1,111 @@
+//! Property-testing mini-framework (proptest is unavailable offline).
+//!
+//! A property is a closure over a [`Prng`]-driven generator; the runner
+//! executes it for N seeds and, on failure, re-runs with the failing seed
+//! reported so the case is reproducible:
+//!
+//! ```ignore
+//! property("cmetric conservation", 200, |rng| {
+//!     let batch = gen_batch(rng);
+//!     check(batch.invariant_holds(), "invariant");
+//! });
+//! ```
+
+use super::prng::Prng;
+
+/// Number of cases per property unless the env overrides it.
+pub fn default_cases() -> u64 {
+    std::env::var("CHECK_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(128)
+}
+
+/// Run `f` for `cases` deterministic seeds; panic with the seed on failure.
+pub fn property<F: Fn(&mut Prng)>(name: &str, cases: u64, f: F) {
+    let base = 0xC0FFEE_u64;
+    for case in 0..cases {
+        let seed = base.wrapping_add(case.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut rng = Prng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            f(&mut rng)
+        }));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property {name:?} failed at case {case} (seed {seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Shrink helper: given a failing vector input, try removing chunks while
+/// the predicate still fails; returns a (locally) minimal failing input.
+pub fn shrink_vec<T: Clone, P: Fn(&[T]) -> bool>(input: &[T], fails: P) -> Vec<T> {
+    let mut cur: Vec<T> = input.to_vec();
+    let mut chunk = cur.len() / 2;
+    while chunk >= 1 {
+        let mut i = 0;
+        while i + chunk <= cur.len() {
+            let mut candidate = cur.clone();
+            candidate.drain(i..i + chunk);
+            if fails(&candidate) {
+                cur = candidate;
+            } else {
+                i += chunk;
+            }
+        }
+        if chunk == 1 {
+            break;
+        }
+        chunk /= 2;
+    }
+    cur
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn property_passes_quietly() {
+        property("sum commutative", 50, |rng| {
+            let a = rng.below(1000) as i64;
+            let b = rng.below(1000) as i64;
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn property_reports_seed_on_failure() {
+        property("always fails", 3, |_| {
+            panic!("boom");
+        });
+    }
+
+    #[test]
+    fn shrink_finds_minimal() {
+        // Failing predicate: contains a 7.
+        let input: Vec<u32> = (0..100).collect();
+        let min = shrink_vec(&input, |v| v.contains(&7));
+        assert_eq!(min, vec![7]);
+    }
+
+    #[test]
+    fn deterministic_case_seeds() {
+        let seen: Vec<u64> = Vec::new();
+        property("record", 5, |rng| {
+            seen.len(); // no-op; seeds derived deterministically
+            let _ = rng.next_u64();
+        });
+        property("record2", 5, |rng| {
+            seen.len();
+            let _ = rng.next_u64();
+        });
+    }
+}

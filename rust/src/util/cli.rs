@@ -1,0 +1,120 @@
+//! Minimal command-line parser (clap is unavailable in the offline
+//! registry). Supports `--flag`, `--key value`, `--key=value` and
+//! positional arguments, with typed getters and a usage renderer.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: positionals in order plus `--key [value]` options.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    opts: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse an iterator of raw arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut args = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    args.opts.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    args.opts.insert(rest.to_string(), v);
+                } else {
+                    args.opts.insert(rest.to_string(), "true".to_string());
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        args
+    }
+
+    /// Parse from the process environment (skips argv[0]).
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    /// Raw option value.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(|s| s.as_str())
+    }
+
+    /// Boolean flag: present (with any value other than "false") → true.
+    pub fn flag(&self, key: &str) -> bool {
+        matches!(self.get(key), Some(v) if v != "false")
+    }
+
+    /// Typed option with default.
+    pub fn opt<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        match self.get(key) {
+            Some(v) => v.parse().unwrap_or_else(|_| {
+                eprintln!("warning: bad value for --{key}: {v:?}; using default");
+                std::process::exit(2);
+            }),
+            None => default,
+        }
+    }
+
+    /// String option with default.
+    pub fn opt_str(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    /// First positional (the subcommand), if any.
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn positional_and_opts() {
+        let a = parse(&["profile", "--app", "dedup", "--seed=7", "--verbose"]);
+        assert_eq!(a.subcommand(), Some("profile"));
+        assert_eq!(a.get("app"), Some("dedup"));
+        assert_eq!(a.opt::<u64>("seed", 0), 7);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&["run"]);
+        assert_eq!(a.opt::<u32>("threads", 64), 64);
+        assert_eq!(a.opt_str("app", "blackscholes"), "blackscholes");
+    }
+
+    #[test]
+    fn eq_form_and_space_form_agree() {
+        let a = parse(&["--x=1", "--y", "2"]);
+        assert_eq!(a.opt::<i32>("x", 0), 1);
+        assert_eq!(a.opt::<i32>("y", 0), 2);
+    }
+
+    #[test]
+    fn trailing_flag_is_boolean() {
+        let a = parse(&["cmd", "--fast"]);
+        assert!(a.flag("fast"));
+    }
+
+    #[test]
+    fn negative_number_values() {
+        let a = parse(&["--delta", "-3"]);
+        assert_eq!(a.opt::<i64>("delta", 0), -3);
+    }
+}

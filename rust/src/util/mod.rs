@@ -1,0 +1,13 @@
+//! Offline-build substrate: the crates this repo would normally pull from
+//! crates.io (clap, criterion, proptest, rand) are unavailable in the
+//! vendored offline registry, so the small pieces we need are implemented
+//! here and tested like everything else.
+
+pub mod prng;
+pub mod stats;
+pub mod cli;
+pub mod bench;
+pub mod check;
+
+pub use prng::Prng;
+pub use stats::Summary;

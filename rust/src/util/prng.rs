@@ -1,0 +1,186 @@
+//! Deterministic pseudo-random numbers: SplitMix64 seeding + xoshiro256**.
+//!
+//! Every stochastic choice in the simulator and the synthetic workloads
+//! draws from a [`Prng`] seeded from the experiment seed, so runs are
+//! bit-reproducible (the paper's "results are consistent across multiple
+//! runs" claim is testable here by construction — and we also reproduce
+//! the *Coz* baseline's run-to-run variance by giving it fresh seeds).
+
+/// xoshiro256** PRNG with SplitMix64 seed expansion.
+#[derive(Clone, Debug)]
+pub struct Prng {
+    s: [u64; 4],
+}
+
+#[inline]
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+impl Prng {
+    /// Create a generator from a 64-bit seed.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Prng { s }
+    }
+
+    /// Derive an independent child stream (e.g. one per simulated thread).
+    pub fn fork(&mut self, tag: u64) -> Prng {
+        Prng::new(self.next_u64() ^ tag.wrapping_mul(0x9E3779B97F4A7C15))
+    }
+
+    /// Next raw 64-bit value (xoshiro256**).
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[1]
+            .wrapping_mul(5)
+            .rotate_left(7)
+            .wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in `[0, n)`. `n` must be non-zero.
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        // Lemire's multiply-shift rejection-free approximation is fine for
+        // simulation purposes; bias is < 2^-32 for n < 2^32.
+        ((self.next_u64() >> 32).wrapping_mul(n)) >> 32
+    }
+
+    /// Uniform integer in `[lo, hi]` inclusive.
+    #[inline]
+    pub fn range(&mut self, lo: u64, hi: u64) -> u64 {
+        debug_assert!(hi >= lo);
+        lo + self.below(hi - lo + 1)
+    }
+
+    /// Uniform f64 in `[0, 1)`.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Exponentially distributed with the given mean.
+    #[inline]
+    pub fn exp(&mut self, mean: f64) -> f64 {
+        let u = 1.0 - self.f64(); // (0, 1]
+        -mean * u.ln()
+    }
+
+    /// Normal via Box–Muller (single value; the pair's twin is discarded —
+    /// simplicity over throughput, this is not on the hot path).
+    pub fn normal(&mut self, mean: f64, sd: f64) -> f64 {
+        let u1 = 1.0 - self.f64();
+        let u2 = self.f64();
+        mean + sd * (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Duration in ns: normal around `mean_ns` with `cv` coefficient of
+    /// variation, clamped to `>= 1`.
+    pub fn dur(&mut self, mean_ns: u64, cv: f64) -> u64 {
+        let d = self.normal(mean_ns as f64, mean_ns as f64 * cv);
+        d.max(1.0) as u64
+    }
+
+    /// True with probability `p`.
+    #[inline]
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Pick a uniformly random element index of a slice length.
+    #[inline]
+    pub fn pick(&mut self, len: usize) -> usize {
+        self.below(len as u64) as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = Prng::new(42);
+        let mut b = Prng::new(42);
+        for _ in 0..1000 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let mut a = Prng::new(1);
+        let mut b = Prng::new(2);
+        let same = (0..100).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn below_in_range() {
+        let mut p = Prng::new(7);
+        for _ in 0..10_000 {
+            assert!(p.below(10) < 10);
+        }
+    }
+
+    #[test]
+    fn f64_unit_interval() {
+        let mut p = Prng::new(9);
+        for _ in 0..10_000 {
+            let x = p.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn f64_roughly_uniform() {
+        let mut p = Prng::new(11);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| p.f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn exp_mean_close() {
+        let mut p = Prng::new(13);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| p.exp(5.0)).sum::<f64>() / n as f64;
+        assert!((mean - 5.0).abs() < 0.15, "mean={mean}");
+    }
+
+    #[test]
+    fn fork_streams_independent() {
+        let mut root = Prng::new(5);
+        let mut a = root.fork(1);
+        let mut b = root.fork(2);
+        let same = (0..100).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same <= 1);
+    }
+
+    #[test]
+    fn dur_positive() {
+        let mut p = Prng::new(17);
+        for _ in 0..1000 {
+            assert!(p.dur(1000, 0.5) >= 1);
+        }
+    }
+}

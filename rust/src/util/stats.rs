@@ -1,0 +1,226 @@
+//! Small statistics toolkit for experiment reporting: summaries,
+//! percentiles, coefficient of variation, and fixed-width table printing.
+
+/// Summary statistics over a sample.
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub sd: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+}
+
+impl Summary {
+    /// Compute a summary of `xs` (empty input → all zeros).
+    pub fn of(xs: &[f64]) -> Summary {
+        if xs.is_empty() {
+            return Summary::default();
+        }
+        let n = xs.len();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+            / n.max(1) as f64;
+        let mut sorted = xs.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Summary {
+            n,
+            mean,
+            sd: var.sqrt(),
+            min: sorted[0],
+            max: sorted[n - 1],
+            p50: percentile_sorted(&sorted, 0.50),
+            p95: percentile_sorted(&sorted, 0.95),
+            p99: percentile_sorted(&sorted, 0.99),
+        }
+    }
+
+    /// Coefficient of variation (sd/mean); 0 for a zero mean.
+    pub fn cv(&self) -> f64 {
+        if self.mean.abs() < f64::EPSILON {
+            0.0
+        } else {
+            self.sd / self.mean
+        }
+    }
+}
+
+/// Percentile by linear interpolation over a pre-sorted slice.
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let pos = q.clamp(0.0, 1.0) * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let w = pos - lo as f64;
+        sorted[lo] * (1.0 - w) + sorted[hi] * w
+    }
+}
+
+/// Relative change `(new - old) / old` in percent.
+pub fn pct_change(old: f64, new: f64) -> f64 {
+    if old.abs() < f64::EPSILON {
+        0.0
+    } else {
+        (new - old) / old * 100.0
+    }
+}
+
+/// Geometric mean of positive values (ignores non-positive entries).
+pub fn geomean(xs: &[f64]) -> f64 {
+    let logs: Vec<f64> = xs.iter().filter(|x| **x > 0.0).map(|x| x.ln()).collect();
+    if logs.is_empty() {
+        0.0
+    } else {
+        (logs.iter().sum::<f64>() / logs.len() as f64).exp()
+    }
+}
+
+/// Format nanoseconds human-readably (ns/µs/ms/s).
+pub fn fmt_ns(ns: u64) -> String {
+    match ns {
+        0..=999 => format!("{ns} ns"),
+        1_000..=999_999 => format!("{:.1} µs", ns as f64 / 1e3),
+        1_000_000..=999_999_999 => format!("{:.1} ms", ns as f64 / 1e6),
+        _ => format!("{:.3} s", ns as f64 / 1e9),
+    }
+}
+
+/// Format bytes human-readably (B/KB/MB/GB).
+pub fn fmt_bytes(b: u64) -> String {
+    const K: u64 = 1024;
+    match b {
+        0..=1023 => format!("{b} B"),
+        _ if b < K * K => format!("{:.1} KB", b as f64 / K as f64),
+        _ if b < K * K * K => format!("{:.1} MB", b as f64 / (K * K) as f64),
+        _ => format!("{:.2} GB", b as f64 / (K * K * K) as f64),
+    }
+}
+
+/// A minimal fixed-width table printer for experiment output.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Render with per-column auto-width, markdown-pipe style.
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut width = vec![0usize; ncol];
+        for (i, h) in self.headers.iter().enumerate() {
+            width[i] = h.len();
+        }
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                width[i] = width[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let line = |cells: &[String], width: &[usize], out: &mut String| {
+            out.push('|');
+            for (i, c) in cells.iter().enumerate() {
+                out.push_str(&format!(" {:<w$} |", c, w = width[i]));
+            }
+            out.push('\n');
+        };
+        line(&self.headers, &width, &mut out);
+        out.push('|');
+        for w in &width {
+            out.push_str(&format!("{}-|", "-".repeat(w + 1)));
+        }
+        out.push('\n');
+        for row in &self.rows {
+            line(row, &width, &mut out);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert!((s.p50 - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_empty() {
+        let s = Summary::of(&[]);
+        assert_eq!(s.n, 0);
+        assert_eq!(s.mean, 0.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [0.0, 10.0];
+        assert!((percentile_sorted(&xs, 0.5) - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pct_change_signs() {
+        assert!((pct_change(100.0, 122.0) - 22.0).abs() < 1e-9);
+        assert!((pct_change(100.0, 86.0) + 14.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn geomean_positive_only() {
+        let g = geomean(&[1.0, 100.0, 0.0, -5.0]);
+        assert!((g - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert_eq!(fmt_ns(12), "12 ns");
+        assert_eq!(fmt_ns(1_500), "1.5 µs");
+        assert_eq!(fmt_ns(2_500_000), "2.5 ms");
+        assert_eq!(fmt_ns(3_000_000_000), "3.000 s");
+    }
+
+    #[test]
+    fn fmt_bytes_units() {
+        assert_eq!(fmt_bytes(10), "10 B");
+        assert_eq!(fmt_bytes(2048), "2.0 KB");
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["app", "o/h"]);
+        t.row(&["dedup".into(), "12%".into()]);
+        let r = t.render();
+        assert!(r.contains("| app   | o/h |"));
+        assert!(r.contains("| dedup | 12% |"));
+    }
+
+    #[test]
+    fn cv_of_constant_zero() {
+        let s = Summary::of(&[5.0, 5.0, 5.0]);
+        assert!(s.cv() < 1e-12);
+    }
+}

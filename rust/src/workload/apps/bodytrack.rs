@@ -1,0 +1,140 @@
+//! Bodytrack: per-frame command/response between a parent and a worker
+//! pool — the paper's Figure-3 case study.
+//!
+//! Structure (paper §5.2): the parent broadcasts a per-frame command;
+//! workers process the frame (`ProcessFrame` via `ExecCmd`) and wait for
+//! the next command in `RecvCmd()` (condition-variable wait). The parent
+//! then runs `OutputBMP()` *serially* while every worker sits in
+//! RecvCmd — that serial section is the previously-unreported bottleneck
+//! GAPP found. Two knobs reproduce the paper's two interventions:
+//!
+//! * `skip_output` — "comment out OutputBMP": RecvCmd samples drop ~45%.
+//! * `offload_writer` — move OutputBMP to a dedicated writerThread fed by
+//!   a queue (Figure 3 right): ~22% faster end-to-end.
+
+use crate::workload::{App, AppBuilder, ProgramBuilder};
+
+/// Experiment knobs for the Figure-3 study.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BodytrackConfig {
+    /// Offload OutputBMP to a writer thread (the paper's fix).
+    pub offload_writer: bool,
+    /// Comment out OutputBMP entirely (the paper's confirmation run).
+    pub skip_output: bool,
+}
+
+pub const FRAMES: u64 = 40;
+/// Per-worker frame processing cost (ns).
+pub const FRAME_WORK_NS: u64 = 4_000_000;
+/// Serial OutputBMP cost per frame (ns).
+pub const OUTPUT_BMP_NS: u64 = 1_150_000;
+
+/// Build bodytrack with `threads` workers (+ parent, + optional writer).
+pub fn bodytrack(threads: usize, seed: u64, cfg: BodytrackConfig) -> App {
+    let mut ab = AppBuilder::new("bodytrack", seed);
+    // Command distribution: the parent pushes one command token per
+    // worker per frame; workers wait in RecvCmd with a backoff-polling
+    // loop (check, sleep, re-check) — which is why RecvCmd shows up in
+    // IP samples in proportion to the time workers spend waiting, and
+    // why removing OutputBMP cut RecvCmd samples ~45% in the paper.
+    let cmd_queue = ab.world.new_queue(usize::MAX >> 1);
+    let done_barrier = ab.world.new_barrier(threads + 1);
+    let bmp_queue = ab.world.new_queue(8);
+
+    for i in 0..threads {
+        let mut b = ProgramBuilder::new(&mut ab.symtab);
+        b.call("WorkerThread::Run", "WorkerThread.cpp", 150)
+            .loop_start(FRAMES);
+        // Wait for the parent's command (the paper's RecvCmd wait).
+        b.call("condition_variable::RecvCmd", "WorkerThread.cpp", 78)
+            .queue_poll_pop(cmd_queue, 25_000, 280_000)
+            .ret();
+        b.call("ExecCmd", "WorkerThread.cpp", 101)
+            .call("ParticleFilter::Update", "ParticleFilter.h", 330)
+            .compute(FRAME_WORK_NS, 0.08)
+            .ret()
+            .ret();
+        // Signal frame completion back to the parent.
+        b.call("condition_variable::NotifyDone", "WorkerThread.cpp", 92)
+            .barrier(done_barrier)
+            .ret();
+        b.loop_end().ret();
+        let prog_ = b.build();
+        ab.thread(&format!("bodytrack-w{i}"), prog_);
+    }
+
+    // Parent thread.
+    let mut p = ProgramBuilder::new(&mut ab.symtab);
+    p.call("mainPthreads", "main.cpp", 250).loop_start(FRAMES);
+    p.compute(120_000, 0.05); // per-frame setup / command preparation
+    p.call("TrackingModelPthread::SendCmd", "TrackingModelPthread.cpp", 60);
+    for _ in 0..threads {
+        p.queue_push(cmd_queue);
+    }
+    p.ret();
+    // Workers process the frame; the parent joins the done rendezvous.
+    p.barrier(done_barrier);
+    if cfg.offload_writer {
+        // Fix: hand the image to writerThread and move straight on.
+        p.queue_push(bmp_queue);
+    } else if !cfg.skip_output {
+        p.call("TrackingModel::OutputBMP", "TrackingModel.cpp", 178)
+            .compute(OUTPUT_BMP_NS, 0.05)
+            .ret();
+    }
+    p.loop_end().ret();
+    let prog_ = p.build();
+        ab.thread("bodytrack", prog_);
+
+    if cfg.offload_writer {
+        let mut w = ProgramBuilder::new(&mut ab.symtab);
+        w.call("writerThread", "main.cpp", 420).loop_start(FRAMES);
+        w.queue_pop(bmp_queue);
+        w.call("TrackingModel::OutputBMP", "TrackingModel.cpp", 178)
+            .compute(OUTPUT_BMP_NS, 0.05)
+            .ret();
+        w.loop_end().ret();
+        let prog_ = w.build();
+        ab.thread("writerThread", prog_);
+    }
+
+    ab.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simkernel::{Kernel, KernelConfig};
+
+    fn run(cfg: BodytrackConfig) -> u64 {
+        let app = bodytrack(16, 21, cfg);
+        let mut k = Kernel::new(KernelConfig::default());
+        app.spawn_into(&mut k);
+        k.run().unwrap()
+    }
+
+    #[test]
+    fn writer_offload_speeds_up_like_figure3() {
+        let base = run(BodytrackConfig::default());
+        let fixed = run(BodytrackConfig {
+            offload_writer: true,
+            ..Default::default()
+        });
+        let gain = (base as f64 - fixed as f64) / base as f64;
+        // Paper: 22% improvement. Shape check: 10%..35%.
+        assert!(
+            (0.10..0.35).contains(&gain),
+            "base={base} fixed={fixed} gain={gain:.3}"
+        );
+    }
+
+    #[test]
+    fn skip_output_removes_serial_section() {
+        let base = run(BodytrackConfig::default());
+        let skipped = run(BodytrackConfig {
+            skip_output: true,
+            ..Default::default()
+        });
+        assert!(skipped < base);
+    }
+}

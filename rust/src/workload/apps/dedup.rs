@@ -1,0 +1,192 @@
+//! Dedup: 5-stage deduplication/compression pipeline — the paper's
+//! thread-allocation case study.
+//!
+//! Stages: Fragment (1) → FragmentRefine (n) → Deduplicate (n) →
+//! Compress (n) → Reorder (1). `deflate_slow` in Compress (Table-2
+//! critical function) contains an allocator critical section whose
+//! effective cost *grows with the number of waiters* (cache-line
+//! bouncing of the lock word — see `Op::ComputeScaled`), which is why
+//! the paper found:
+//!
+//! * 1-16-16-28-1 (more Compress threads) — *slower* than the default,
+//! * 1-20-20-15-1 (fewer Compress threads) — ~14% *faster*.
+//!
+//! Reorder's `write_file` is the known serial bottleneck [12] and shows
+//! up as the second critical path.
+
+use crate::workload::{App, AppBuilder, ProgramBuilder};
+
+/// Thread allocation across the three parallel stages.
+#[derive(Clone, Copy, Debug)]
+pub struct DedupConfig {
+    pub refine: usize,
+    pub dedup: usize,
+    pub compress: usize,
+    pub chunks: u64,
+}
+
+impl Default for DedupConfig {
+    fn default() -> Self {
+        // The paper's initial allocation: 1-20-20-20-1.
+        DedupConfig {
+            refine: 20,
+            dedup: 20,
+            compress: 20,
+            chunks: 400,
+        }
+    }
+}
+
+impl DedupConfig {
+    pub fn with_alloc(refine: usize, dedup: usize, compress: usize) -> Self {
+        DedupConfig {
+            refine,
+            dedup,
+            compress,
+            ..Default::default()
+        }
+    }
+}
+
+fn split(total: u64, parts: usize) -> Vec<u64> {
+    let base = total / parts as u64;
+    let extra = (total % parts as u64) as usize;
+    (0..parts).map(|i| base + u64::from(i < extra)).collect()
+}
+
+pub fn dedup(seed: u64, cfg: DedupConfig) -> App {
+    let mut ab = AppBuilder::new("dedup", seed);
+    let q1 = ab.world.new_queue(32); // Fragment -> Refine
+    let q2 = ab.world.new_queue(32); // Refine -> Dedup
+    let q3 = ab.world.new_queue(32); // Dedup -> Compress
+    let q4 = ab.world.new_queue(32); // Compress -> Reorder
+    let hash_lock = ab.world.new_mutex(); // dedup hash-table lock
+    let alloc_lock = ab.world.new_mutex(); // allocator lock in compress
+    let n = cfg.chunks;
+
+    // Fragment: single thread, cheap chunking.
+    let mut frag = ProgramBuilder::new(&mut ab.symtab);
+    frag.call("Fragment", "dedup.c", 210)
+        .loop_start(n)
+        .compute(25_000, 0.05)
+        .queue_push(q1)
+        .loop_end()
+        .ret();
+    let prog_ = frag.build();
+        ab.thread("dedup-frag", prog_);
+
+    // FragmentRefine: rolling-hash sub-chunking.
+    for (i, mine) in split(n, cfg.refine).iter().enumerate() {
+        let mut b = ProgramBuilder::new(&mut ab.symtab);
+        b.call("FragmentRefine", "dedup.c", 260)
+            .loop_start(*mine)
+            .queue_pop(q1)
+            .compute(150_000, 0.10)
+            .queue_push(q2)
+            .loop_end()
+            .ret();
+        let prog_ = b.build();
+        ab.thread(&format!("dedup-refine{i}"), prog_);
+    }
+
+    // Deduplicate: hash lookup under a short lock.
+    for (i, mine) in split(n, cfg.dedup).iter().enumerate() {
+        let mut b = ProgramBuilder::new(&mut ab.symtab);
+        b.call("Deduplicate", "dedup.c", 310)
+            .loop_start(*mine)
+            .queue_pop(q2)
+            .compute(110_000, 0.10)
+            .lock(hash_lock)
+            .compute(6_000, 0.10)
+            .unlock(hash_lock)
+            .queue_push(q3)
+            .loop_end()
+            .ret();
+        let prog_ = b.build();
+        ab.thread(&format!("dedup-dedup{i}"), prog_);
+    }
+
+    // Compress: deflate_slow with the contention-scaled allocator
+    // critical section.
+    for (i, mine) in split(n, cfg.compress).iter().enumerate() {
+        let mut b = ProgramBuilder::new(&mut ab.symtab);
+        b.call("Compress", "dedup.c", 360).loop_start(*mine);
+        b.queue_pop(q3);
+        b.call("deflate_slow", "deflate.c", 1045)
+            .compute(360_000, 0.08)
+            .lock(alloc_lock)
+            .compute_scaled(22_000, 1_800, alloc_lock, 0.05)
+            .unlock(alloc_lock)
+            .ret();
+        b.queue_push(q4);
+        b.loop_end().ret();
+        let prog_ = b.build();
+        ab.thread(&format!("dedup-comp{i}"), prog_);
+    }
+
+    // Reorder: single thread, writes compressed chunks to disk.
+    let mut reorder = ProgramBuilder::new(&mut ab.symtab);
+    reorder
+        .call("Reorder", "dedup.c", 410)
+        .loop_start(n)
+        .queue_pop(q4)
+        .call("write_file", "dedup.c", 150)
+        .compute(18_000, 0.08)
+        .sleep(12_000, 0.2) // async write completion
+        .ret()
+        .loop_end()
+        .ret();
+    let prog_ = reorder.build();
+        ab.thread("dedup-reorder", prog_);
+
+    ab.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simkernel::{Kernel, KernelConfig};
+
+    fn run(cfg: DedupConfig) -> u64 {
+        let app = dedup(17, cfg);
+        let mut k = Kernel::new(KernelConfig::default());
+        app.spawn_into(&mut k);
+        k.run().unwrap()
+    }
+
+    #[test]
+    fn fewer_compress_threads_run_faster() {
+        let base = run(DedupConfig::default()); // 20-20-20
+        let fewer = run(DedupConfig::with_alloc(20, 20, 15)); // paper's fix
+        let gain = (base as f64 - fewer as f64) / base as f64;
+        // Paper: 14% improvement. Shape: 5%..30%.
+        assert!(
+            (0.05..0.30).contains(&gain),
+            "base={base} fewer={fewer} gain={gain:.3}"
+        );
+    }
+
+    #[test]
+    fn more_compress_threads_run_slower() {
+        let base = run(DedupConfig::default());
+        let more = run(DedupConfig::with_alloc(16, 16, 28)); // paper's misstep
+        assert!(more > base, "more={more} base={base}");
+    }
+
+    #[test]
+    fn pipeline_conserves_chunks() {
+        let cfg = DedupConfig {
+            chunks: 80,
+            ..DedupConfig::with_alloc(4, 4, 4)
+        };
+        let app = dedup(3, cfg);
+        let mut k = Kernel::new(KernelConfig::default());
+        app.spawn_into(&mut k);
+        k.run().unwrap();
+        let w = app.world.borrow();
+        for q in 0..4 {
+            assert_eq!(w.queues[q].total_pushed, 80, "queue {q}");
+            assert_eq!(w.queues[q].tokens, 0, "queue {q}");
+        }
+    }
+}

@@ -1,0 +1,67 @@
+//! Facesim: physics simulation of a human face, iterative with
+//! fork-join phases.
+//!
+//! Each frame runs a parallel `Update_Position_Based_State_Helper`
+//! (Table-2 critical function) over statically-partitioned mesh regions
+//! whose sizes are *not* uniform — the thread owning the densest region
+//! finishes last and is sampled with low parallelism while the rest wait
+//! at the frame barrier. CR is very small (paper: 0.004%).
+
+use crate::util::Prng;
+use crate::workload::{App, AppBuilder, ProgramBuilder};
+
+pub fn facesim(threads: usize, seed: u64) -> App {
+    let mut ab = AppBuilder::new("facesim", seed);
+    let frame_barrier = ab.world.new_barrier(threads);
+    let mut rng = Prng::new(seed ^ 0xFACE);
+
+    // Static region weights: mostly ~1.0, one hot region ~1.5.
+    let mut weights: Vec<f64> = (0..threads)
+        .map(|_| 1.0 + 0.12 * (rng.f64() - 0.5))
+        .collect();
+    weights[0] = 1.5;
+
+    for (i, w) in weights.iter().enumerate() {
+        let mut b = ProgramBuilder::new(&mut ab.symtab);
+        b.call("TaskQ_worker", "taskq.c", 30).loop_start(24); // frames
+        b.call(
+            "Update_Position_Based_State_Helper",
+            "FACE_EXAMPLE.h",
+            420,
+        )
+        .compute((2_200_000.0 * w) as u64, 0.05)
+        .ret();
+        b.call("parsec_barrier_wait", "parsec_barrier.c", 80)
+            .barrier(frame_barrier)
+            .ret();
+        b.loop_end().ret();
+        let prog_ = b.build();
+        ab.thread(&format!("facesim-{i}"), prog_);
+    }
+
+    ab.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simkernel::{Kernel, KernelConfig};
+
+    #[test]
+    fn slowest_region_bounds_frame_time() {
+        let app = facesim(16, 9);
+        let mut k = Kernel::new(KernelConfig::default());
+        app.spawn_into(&mut k);
+        let end = k.run().unwrap();
+        // 24 frames × ~(1.5 × 2.2 ms) for the hot region.
+        assert!(end >= 24 * 3_000_000, "end={end}");
+        // The hot thread has the most CPU time.
+        let hottest = k
+            .all_tasks()
+            .max_by_key(|t| t.cpu_time)
+            .unwrap()
+            .comm
+            .clone();
+        assert_eq!(hottest, "facesim-0");
+    }
+}

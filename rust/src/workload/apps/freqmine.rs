@@ -1,0 +1,81 @@
+//! Freqmine: FP-growth frequent-itemset mining (the only OpenMP app in
+//! the suite).
+//!
+//! OpenMP `parallel for` regions with *static* chunking over items whose
+//! cost is heavy-tailed: `FPArray_scan2_DB` (Table-2 critical function)
+//! takes much longer for dense transaction groups, so some chunks run
+//! far past the implicit region barrier where every other thread waits.
+//! CR ≈ 13% in the paper — much higher than the other data-parallel
+//! apps, because the tail is long.
+
+use crate::util::Prng;
+use crate::workload::{App, AppBuilder, ProgramBuilder};
+
+pub fn freqmine(threads: usize, seed: u64) -> App {
+    let mut ab = AppBuilder::new("freqmine", seed);
+    let region_barrier = ab.world.new_barrier(threads);
+    let mut rng = Prng::new(seed ^ 0xF4E9);
+
+    // 6 parallel regions (database scan passes); in each, thread i's
+    // static chunk has a heavy-tailed cost: ~15% of chunks are 3-6× the
+    // base cost.
+    let regions = 6;
+    let costs: Vec<Vec<u64>> = (0..regions)
+        .map(|_| {
+            (0..threads)
+                .map(|_| {
+                    let base = 800_000.0;
+                    let mult = if rng.chance(0.15) {
+                        3.0 + 3.0 * rng.f64()
+                    } else {
+                        0.8 + 0.4 * rng.f64()
+                    };
+                    (base * mult) as u64
+                })
+                .collect()
+        })
+        .collect();
+
+    for i in 0..threads {
+        let mut b = ProgramBuilder::new(&mut ab.symtab);
+        b.call("FP_growth", "fp_tree.cpp", 1900);
+        for r in 0..regions {
+            b.call("FPArray_scan2_DB", "fp_tree.cpp", 810)
+                .compute(costs[r][i], 0.06)
+                .ret();
+            // OpenMP implicit barrier at region end.
+            b.call("__kmp_join_barrier", "kmp_barrier.cpp", 1400)
+                .barrier(region_barrier)
+                .ret();
+        }
+        // Serial tree-build section executed by thread 0 only while the
+        // team waits in the next region's fork barrier.
+        if i == 0 {
+            b.call("FPTree_insert", "fp_tree.cpp", 500)
+                .compute(2_500_000, 0.05)
+                .ret();
+        }
+        b.ret();
+        let prog_ = b.build();
+        ab.thread(&format!("freqmine-{i}"), prog_);
+    }
+
+    ab.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simkernel::{Kernel, KernelConfig};
+
+    #[test]
+    fn heavy_tail_dominates_regions() {
+        let app = freqmine(16, 11);
+        let mut k = Kernel::new(KernelConfig::default());
+        app.spawn_into(&mut k);
+        let end = k.run().unwrap();
+        // Every region is at least base cost; tails push well past it.
+        assert!(end >= 6 * 800_000, "end={end}");
+        assert_eq!(app.world.borrow().barriers[0].generation, 6);
+    }
+}

@@ -1,0 +1,78 @@
+//! The 13 synthetic applications of Table 2 (11 × Parsec 3.0 + MySQL +
+//! Nektar++). Each constructor returns an [`crate::workload::App`] whose
+//! thread programs reproduce the *structure* that creates the published
+//! bottleneck; knobs mirror the paper's tuning experiments.
+
+mod blackscholes;
+mod bodytrack;
+mod canneal;
+mod dedup;
+mod facesim;
+mod ferret;
+mod fluidanimate;
+mod freqmine;
+mod mysql;
+mod nektar;
+mod streamcluster;
+mod swaptions;
+mod vips;
+
+pub use blackscholes::blackscholes;
+pub use bodytrack::{bodytrack, BodytrackConfig};
+pub use canneal::canneal;
+pub use dedup::{dedup, DedupConfig};
+pub use facesim::facesim;
+pub use ferret::{ferret, FerretConfig};
+pub use fluidanimate::fluidanimate;
+pub use freqmine::freqmine;
+pub use mysql::{mysql, run_oltp, MysqlConfig, OltpOutcome};
+pub use nektar::{
+    nektar, partition_weights, run_nektar, BlasImpl, MeshKind, MpiMode, NektarConfig,
+};
+pub use streamcluster::streamcluster;
+pub use swaptions::swaptions;
+pub use vips::vips;
+
+use crate::workload::App;
+
+/// Scale factor applied to all workload sizes (1.0 ≈ a few hundred ms of
+/// simulated runtime per app; the paper's native inputs run tens of
+/// seconds — shape is preserved, constants are scaled for CI).
+pub const DEFAULT_SCALE: f64 = 1.0;
+
+/// Construct a Table-2 application by name with default configuration.
+pub fn by_name(name: &str, threads: usize, seed: u64) -> Option<App> {
+    Some(match name {
+        "blackscholes" => blackscholes(threads, seed),
+        "bodytrack" => bodytrack(threads, seed, BodytrackConfig::default()),
+        "canneal" => canneal(threads, seed),
+        "dedup" => dedup(seed, DedupConfig::default()),
+        "facesim" => facesim(threads, seed),
+        "ferret" => ferret(seed, FerretConfig::default()),
+        "fluidanimate" => fluidanimate(threads, seed),
+        "freqmine" => freqmine(threads, seed),
+        "mysql" => mysql(threads, seed, MysqlConfig::default()),
+        "nektar" => nektar(seed, NektarConfig::default()),
+        "streamcluster" => streamcluster(threads, seed),
+        "swaptions" => swaptions(threads, seed),
+        "vips" => vips(threads, seed),
+        _ => return None,
+    })
+}
+
+/// All Table-2 application names, in the paper's order.
+pub const ALL_APPS: [&str; 13] = [
+    "blackscholes",
+    "bodytrack",
+    "canneal",
+    "dedup",
+    "facesim",
+    "ferret",
+    "fluidanimate",
+    "freqmine",
+    "streamcluster",
+    "swaptions",
+    "vips",
+    "mysql",
+    "nektar",
+];

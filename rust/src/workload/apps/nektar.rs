@@ -1,0 +1,230 @@
+//! Nektar++ IncNSS (Incompressible Navier–Stokes Solver) over MPI — the
+//! paper's Figure-5/6 case study.
+//!
+//! `ranks` MPI processes each own a mesh partition; every timestep they
+//! run the elemental matrix-vector kernel `dgemv_` (BLAS, Table-2
+//! critical function) plus `Vmath::Dot2`, then exchange halo data with
+//! ring neighbours. Knobs reproduce the paper's three experiments:
+//!
+//! * **Progress mode** (Figure 5): `Aggressive` busy-spins in
+//!   `opal_progress` (OpenMPI default) — every rank looks 100% active
+//!   and the CMetric profile is flat, *masking* the imbalance;
+//!   `Blocking` (MPICH ch3:sock) parks the receiver, exposing it.
+//! * **Mesh** (Figure 5): `Cylinder` (unstructured) gives non-uniform
+//!   partition weights; `Cuboid` (structured, hand-partitioned) is
+//!   uniform and the CMetric flattens for the right reason.
+//! * **BLAS** (Figure 6): `OpenBlas` cuts dgemv_ cost ~45%, moving the
+//!   top bottleneck to `Vmath::Dot2` and improving runtime ~27%.
+
+use crate::util::Prng;
+use crate::workload::{App, AppBuilder, ProgramBuilder};
+
+/// MPI progress mode.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MpiMode {
+    /// OpenMPI default: spin in opal_progress while waiting.
+    Aggressive,
+    /// MPICH --with-device=ch3:sock: block in the kernel while waiting.
+    Blocking,
+}
+
+/// Mesh/partition structure.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MeshKind {
+    /// Unstructured cylinder surface: non-uniform partitions (±35%).
+    Cylinder,
+    /// Structured cuboid, uniformly partitioned by hand.
+    Cuboid,
+}
+
+/// BLAS implementation linked into the solver.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BlasImpl {
+    /// Reference netlib BLAS.
+    Reference,
+    /// OpenBLAS: optimized dgemv_.
+    OpenBlas,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct NektarConfig {
+    pub ranks: usize,
+    pub mode: MpiMode,
+    pub mesh: MeshKind,
+    pub blas: BlasImpl,
+    pub timesteps: u64,
+}
+
+impl Default for NektarConfig {
+    fn default() -> Self {
+        NektarConfig {
+            ranks: 16,
+            mode: MpiMode::Blocking,
+            mesh: MeshKind::Cylinder,
+            blas: BlasImpl::Reference,
+            timesteps: 40,
+        }
+    }
+}
+
+/// Base per-timestep dgemv_ cost for an average partition (ns).
+const DGEMV_NS: f64 = 1_500_000.0;
+/// Vmath::Dot2 cost relative to dgemv (reference BLAS).
+const DOT2_FRAC: f64 = 0.40;
+/// OpenBLAS dgemv speedup factor.
+const OPENBLAS_FACTOR: f64 = 0.55;
+/// Busy-poll granularity in opal_progress (ns).
+const POLL_NS: u64 = 2_000;
+
+/// Partition weights per rank for a mesh kind (deterministic per seed).
+pub fn partition_weights(mesh: MeshKind, ranks: usize, seed: u64) -> Vec<f64> {
+    match mesh {
+        MeshKind::Cuboid => vec![1.0; ranks],
+        MeshKind::Cylinder => {
+            let mut rng = Prng::new(seed ^ 0x4E4B);
+            (0..ranks).map(|_| 0.65 + 0.7 * rng.f64()).collect()
+        }
+    }
+}
+
+pub fn nektar(seed: u64, cfg: NektarConfig) -> App {
+    let mut ab = AppBuilder::new("nektar", seed);
+    let weights = partition_weights(cfg.mesh, cfg.ranks, seed);
+    let blas_factor = match cfg.blas {
+        BlasImpl::Reference => 1.0,
+        BlasImpl::OpenBlas => OPENBLAS_FACTOR,
+    };
+
+    // Ring halo-exchange channels: ch[r] carries messages INTO rank r
+    // from each neighbour (one channel per (src → dst) direction).
+    let mut ch_from_left = Vec::new(); // ch_from_left[r]: (r-1) -> r
+    let mut ch_from_right = Vec::new(); // ch_from_right[r]: (r+1) -> r
+    for _ in 0..cfg.ranks {
+        ch_from_left.push(ab.world.new_channel());
+        ch_from_right.push(ab.world.new_channel());
+    }
+
+    let spin = cfg.mode == MpiMode::Aggressive;
+    for r in 0..cfg.ranks {
+        let left = (r + cfg.ranks - 1) % cfg.ranks;
+        let right = (r + 1) % cfg.ranks;
+        let w = weights[r];
+        let mut b = ProgramBuilder::new(&mut ab.symtab);
+        b.call("IncNavierStokesSolver", "IncNavierStokesSolver.cpp", 90)
+            .loop_start(cfg.timesteps);
+        // Elemental operator evaluation: dgemv_ is the hot kernel.
+        b.call("GlobalLinSysIterative::DoMatrixMultiply", "GlobalLinSysIterative.cpp", 230)
+            .call("dgemv_", "libblas", 1)
+            .compute((DGEMV_NS * w * blas_factor) as u64, 0.05)
+            .ret()
+            .call("Vmath::Dot2", "Vmath.cpp", 1070)
+            .compute((DGEMV_NS * DOT2_FRAC * w) as u64, 0.05)
+            .ret()
+            .ret();
+        // Halo exchange: send to both neighbours, then receive from both.
+        b.call("MPI_Sendrecv", "libmpi", 1)
+            .send(ch_from_left[right]) // we are `right`'s left neighbour
+            .send(ch_from_right[left]) // we are `left`'s right neighbour
+            .call("opal_progress", "opal_progress.c", 180)
+            .recv(ch_from_left[r], spin, POLL_NS)
+            .recv(ch_from_right[r], spin, POLL_NS)
+            .ret()
+            .ret();
+        b.loop_end().ret();
+        let prog_ = b.build();
+        ab.thread(&format!("IncNSS-{r}"), prog_);
+    }
+
+    ab.finish()
+}
+
+/// Run once (no profiler) and return (runtime_ns, per-rank cpu_time).
+pub fn run_nektar(seed: u64, cfg: NektarConfig) -> (u64, Vec<u64>) {
+    use crate::simkernel::{Kernel, KernelConfig};
+    let app = nektar(seed, cfg);
+    let mut k = Kernel::new(KernelConfig::default());
+    let pids = app.spawn_into(&mut k);
+    let end = k.run().expect("nektar run");
+    let cpu = pids
+        .iter()
+        .map(|p| k.task(*p).unwrap().cpu_time)
+        .collect();
+    (end, cpu)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Summary;
+
+    #[test]
+    fn aggressive_mode_masks_imbalance_in_cpu_time() {
+        let (_, cpu_spin) = run_nektar(
+            7,
+            NektarConfig {
+                mode: MpiMode::Aggressive,
+                timesteps: 10,
+                ..Default::default()
+            },
+        );
+        let (_, cpu_block) = run_nektar(
+            7,
+            NektarConfig {
+                mode: MpiMode::Blocking,
+                timesteps: 10,
+                ..Default::default()
+            },
+        );
+        let cv = |xs: &[u64]| {
+            Summary::of(&xs.iter().map(|x| *x as f64).collect::<Vec<_>>()).cv()
+        };
+        // Spinning ranks all burn CPU until the slowest finishes: flat.
+        // Blocking ranks' CPU time tracks their partition weight: spread.
+        assert!(
+            cv(&cpu_spin) < 0.5 * cv(&cpu_block),
+            "cv_spin={:.3} cv_block={:.3}",
+            cv(&cpu_spin),
+            cv(&cpu_block)
+        );
+    }
+
+    #[test]
+    fn structured_mesh_flattens_load() {
+        let (_, cyl) = run_nektar(
+            7,
+            NektarConfig {
+                timesteps: 10,
+                ..Default::default()
+            },
+        );
+        let (_, cub) = run_nektar(
+            7,
+            NektarConfig {
+                mesh: MeshKind::Cuboid,
+                ranks: 8,
+                timesteps: 10,
+                ..Default::default()
+            },
+        );
+        let cv = |xs: &[u64]| {
+            Summary::of(&xs.iter().map(|x| *x as f64).collect::<Vec<_>>()).cv()
+        };
+        assert!(cv(&cub) < 0.05, "cv_cuboid={:.3}", cv(&cub));
+        assert!(cv(&cyl) > 0.10, "cv_cylinder={:.3}", cv(&cyl));
+    }
+
+    #[test]
+    fn openblas_improves_runtime_about_27pct() {
+        let (base, _) = run_nektar(7, NektarConfig::default());
+        let (fast, _) = run_nektar(
+            7,
+            NektarConfig {
+                blas: BlasImpl::OpenBlas,
+                ..Default::default()
+            },
+        );
+        let gain = (base as f64 - fast as f64) / base as f64;
+        // Paper: 27%. Shape: 15%..40%.
+        assert!((0.15..0.40).contains(&gain), "gain={gain:.3}");
+    }
+}

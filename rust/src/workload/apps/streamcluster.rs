@@ -1,0 +1,69 @@
+//! Streamcluster: online clustering, barrier-heavy.
+//!
+//! The paper's Table 2 lists `parsec_barrier_wait` *and* `dist` as the
+//! critical functions and the highest critical-slice count of the suite
+//! (CR ≈ 10.6%, 2.2M timeslices): the algorithm alternates very short
+//! `dist()` evaluation phases with barriers many times per iteration, so
+//! threads cross the low-parallelism boundary constantly.
+
+use crate::util::Prng;
+use crate::workload::{App, AppBuilder, ProgramBuilder};
+
+pub fn streamcluster(threads: usize, seed: u64) -> App {
+    let mut ab = AppBuilder::new("streamcluster", seed);
+    let bar = ab.world.new_barrier(threads);
+    let mut rng = Prng::new(seed ^ 0x5C);
+
+    let weights: Vec<f64> = (0..threads)
+        .map(|_| 1.0 + 0.3 * (rng.f64() - 0.5))
+        .collect();
+
+    for (i, w) in weights.iter().enumerate() {
+        let mut b = ProgramBuilder::new(&mut ab.symtab);
+        b.call("localSearchSub", "streamcluster.cpp", 1750)
+            .loop_start(120); // pgain iterations
+        // Phase 1: distance evaluation sweep.
+        b.call("dist", "streamcluster.cpp", 160)
+            .compute((280_000.0 * w) as u64, 0.10)
+            .ret();
+        b.call("parsec_barrier_wait", "parsec_barrier.c", 80)
+            .barrier(bar)
+            .ret();
+        // Phase 2: cost accumulation — thread 0 carries a serial section
+        // (center opening decision) while the team waits again.
+        if i == 0 {
+            b.call("pgain", "streamcluster.cpp", 1000)
+                .compute(150_000, 0.08)
+                .ret();
+        } else {
+            b.call("pgain", "streamcluster.cpp", 1000)
+                .compute((40_000.0 * w) as u64, 0.10)
+                .ret();
+        }
+        b.call("parsec_barrier_wait", "parsec_barrier.c", 80)
+            .barrier(bar)
+            .ret();
+        b.loop_end().ret();
+        let prog_ = b.build();
+        ab.thread(&format!("stream-{i}"), prog_);
+    }
+
+    ab.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simkernel::{Kernel, KernelConfig};
+
+    #[test]
+    fn many_barrier_crossings() {
+        let app = streamcluster(8, 4);
+        let mut k = Kernel::new(KernelConfig::default());
+        app.spawn_into(&mut k);
+        let end = k.run().unwrap();
+        assert_eq!(app.world.borrow().barriers[0].generation, 240);
+        // Serial pgain on thread 0 stretches every iteration.
+        assert!(end >= 120 * (280_000 + 150_000), "end={end}");
+    }
+}

@@ -1,0 +1,65 @@
+//! Swaptions: Monte-Carlo swaption pricing with *block* partitioning.
+//!
+//! 96 swaptions over N threads: the block split gives some threads two
+//! swaptions and some one — a 2× load imbalance that leaves the heavy
+//! half executing `HJM_SimPath_Forward_Blocking` (Table-2 critical
+//! function) while the light half has exited. CR is tiny (paper: 0.07%)
+//! because the imbalance tail is short relative to the run.
+
+use crate::workload::{App, AppBuilder, ProgramBuilder};
+
+pub const NUM_SWAPTIONS: usize = 96;
+
+pub fn swaptions(threads: usize, seed: u64) -> App {
+    let mut ab = AppBuilder::new("swaptions", seed);
+    let done = ab.world.new_latch(threads as u64);
+
+    // Block partition, exactly like the Parsec kernel: thread i gets
+    // ceil/floor share of contiguous swaptions.
+    let base = NUM_SWAPTIONS / threads;
+    let extra = NUM_SWAPTIONS % threads;
+    for i in 0..threads {
+        let mine = base + usize::from(i < extra);
+        let mut b = ProgramBuilder::new(&mut ab.symtab);
+        b.call("worker", "HJM_Securities.cpp", 90)
+            .loop_start(mine as u64);
+        b.call("HJM_Swaption_Blocking", "HJM_Swaption_Blocking.cpp", 56)
+            .call("HJM_SimPath_Forward_Blocking", "HJM_SimPath_Forward_Blocking.cpp", 45)
+            .compute(2_600_000, 0.04)
+            .ret()
+            .compute(300_000, 0.04)
+            .ret();
+        b.loop_end().latch_signal(done).ret();
+        let prog_ = b.build();
+        ab.thread(&format!("swapt-{i}"), prog_);
+    }
+
+    let mut m = ProgramBuilder::new(&mut ab.symtab);
+    m.call("main", "HJM_Securities.cpp", 300)
+        .compute(300_000, 0.02)
+        .latch_wait(done)
+        .compute(120_000, 0.02)
+        .ret();
+    let prog_ = m.build();
+        ab.thread("swaptions", prog_);
+
+    ab.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simkernel::{Kernel, KernelConfig};
+
+    #[test]
+    fn block_partition_imbalance_shows_in_runtime() {
+        // 64 threads, 96 swaptions: 32 threads get 2, 32 get 1.
+        let app = swaptions(64, 5);
+        let mut k = Kernel::new(KernelConfig::default());
+        app.spawn_into(&mut k);
+        let end = k.run().unwrap();
+        // Runtime tracks the 2-swaption threads: ≥ 2 × ~2.9 ms.
+        assert!(end >= 5_000_000, "end={end}");
+        assert!(end <= 9_000_000, "end={end}");
+    }
+}

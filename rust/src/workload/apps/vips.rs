@@ -1,0 +1,80 @@
+//! Vips: image-processing pipeline (libvips-style fused operations).
+//!
+//! Worker threads pull tile work from a shared queue guarded by a pool
+//! lock; the colour-space conversion `imb_LabQ2Lab` (Table-2 critical
+//! function) dominates tile cost. Serialization comes from the work-pool
+//! lock plus the single-threaded image writeback that drains completed
+//! tiles. CR ≈ 3.2% in the paper.
+
+use crate::workload::{App, AppBuilder, ProgramBuilder};
+
+pub fn vips(threads: usize, seed: u64) -> App {
+    let mut ab = AppBuilder::new("vips", seed);
+    let tiles = ab.world.new_queue(64);
+    let done_q = ab.world.new_queue(usize::MAX >> 1);
+    let pool_lock = ab.world.new_mutex();
+
+    let total_tiles: u64 = 600;
+    let per = total_tiles / threads as u64;
+    let extra = (total_tiles % threads as u64) as usize;
+
+    // Main thread: generates tile descriptors (cheap), then drains
+    // completed tiles and writes the output image (serial).
+    let mut m = ProgramBuilder::new(&mut ab.symtab);
+    m.call("main", "vips.c", 90)
+        .loop_start(total_tiles)
+        .compute(2_000, 0.05) // demand-generate a tile descriptor
+        .queue_push(tiles)
+        .loop_end();
+    m.call("write_vips", "vips.c", 300)
+        .loop_start(total_tiles)
+        .queue_pop(done_q)
+        .compute(25_000, 0.08) // serial writeback per tile
+        .loop_end()
+        .ret()
+        .ret();
+    let prog_ = m.build();
+        ab.thread("vips", prog_);
+
+    for i in 0..threads {
+        let mine = per + u64::from(i < extra);
+        let mut b = ProgramBuilder::new(&mut ab.symtab);
+        b.call("vips_thread_main_loop", "threadpool.c", 120)
+            .loop_start(mine);
+        // Fetch work under the pool lock (short, moderately contended).
+        b.lock(pool_lock).compute(3_000, 0.1).unlock(pool_lock);
+        b.queue_pop(tiles);
+        // Process the tile: LabQ→Lab conversion dominates.
+        b.call("imb_LabQ2Lab", "LabQ2Lab.c", 64)
+            .compute(160_000, 0.12)
+            .ret();
+        b.call("imb_XYZ2Lab", "XYZ2Lab.c", 110)
+            .compute(40_000, 0.10)
+            .ret();
+        b.queue_push(done_q);
+        b.loop_end().ret();
+        let prog_ = b.build();
+        ab.thread(&format!("vips-w{i}"), prog_);
+    }
+
+    ab.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simkernel::{Kernel, KernelConfig};
+
+    #[test]
+    fn all_tiles_processed() {
+        let app = vips(8, 13);
+        let mut k = Kernel::new(KernelConfig::default());
+        app.spawn_into(&mut k);
+        let end = k.run().unwrap();
+        let w = app.world.borrow();
+        assert_eq!(w.queues[0].total_pushed, 600);
+        assert_eq!(w.queues[1].total_pushed, 600);
+        // Serial writeback floor: 600 × 25 µs.
+        assert!(end >= 15_000_000, "end={end}");
+    }
+}

@@ -1,0 +1,97 @@
+//! Synthetic parallel-application substrate.
+//!
+//! The paper evaluates GAPP on Parsec 3.0, MySQL and Nektar++ — none of
+//! which can run here. Each is rebuilt as a synthetic application: an
+//! op-level program per thread ([`program`]) over shared synchronization
+//! objects ([`world`]) with a synthetic binary image ([`symbols`]) so
+//! samples resolve to functions and source lines. The *structure that
+//! creates each bottleneck* (pipeline shapes, serial phases, spin loops,
+//! lock protocols, partition imbalance) is reproduced from the paper's
+//! description, so GAPP's detections emerge from mechanism.
+//!
+//! [`apps`] contains the 13 applications of Table 2.
+
+pub mod symbols;
+pub mod world;
+pub mod program;
+pub mod apps;
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use crate::simkernel::{Kernel, Pid};
+use crate::util::Prng;
+
+pub use program::{Inst, Op, ProgramBuilder, ThreadLogic};
+pub use symbols::{Location, SymId, SymbolTable};
+pub use world::{ObjId, World};
+
+/// A fully-assembled synthetic application ready to load into a kernel.
+pub struct App {
+    pub name: String,
+    pub symtab: Rc<SymbolTable>,
+    pub world: Rc<RefCell<World>>,
+    /// (comm, program) per thread, spawn order preserved.
+    pub threads: Vec<(String, Rc<Vec<Inst>>)>,
+    pub seed: u64,
+}
+
+impl App {
+    /// Spawn every thread into `k` (tracking all of them) and return pids.
+    pub fn spawn_into(&self, k: &mut Kernel) -> Vec<Pid> {
+        let mut rng = Prng::new(self.seed);
+        let mut pids = Vec::with_capacity(self.threads.len());
+        for (i, (comm, prog)) in self.threads.iter().enumerate() {
+            let logic = ThreadLogic::new(
+                prog.clone(),
+                self.world.clone(),
+                self.symtab.clone(),
+                rng.fork(i as u64 + 1),
+            );
+            let pid = k.spawn(comm, logic);
+            k.track(pid);
+            pids.push(pid);
+        }
+        pids
+    }
+
+    pub fn num_threads(&self) -> usize {
+        self.threads.len()
+    }
+}
+
+/// Helper for app constructors: collect built programs + shared state
+/// into an [`App`].
+pub struct AppBuilder {
+    pub name: String,
+    pub symtab: SymbolTable,
+    pub world: World,
+    pub threads: Vec<(String, Rc<Vec<Inst>>)>,
+    pub seed: u64,
+}
+
+impl AppBuilder {
+    pub fn new(name: &str, seed: u64) -> AppBuilder {
+        AppBuilder {
+            name: name.to_string(),
+            symtab: SymbolTable::new(),
+            world: World::new(),
+            threads: Vec::new(),
+            seed,
+        }
+    }
+
+    pub fn thread(&mut self, comm: &str, prog: Rc<Vec<Inst>>) {
+        self.threads.push((comm.to_string(), prog));
+    }
+
+    pub fn finish(self) -> App {
+        App {
+            name: self.name,
+            symtab: Rc::new(self.symtab),
+            world: Rc::new(RefCell::new(self.world)),
+            threads: self.threads,
+            seed: self.seed,
+        }
+    }
+}

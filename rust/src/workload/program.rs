@@ -1,0 +1,1048 @@
+//! The op-level program DSL and its interpreter.
+//!
+//! Synthetic application threads are small programs over ops: compute
+//! bursts, pthread-style synchronization, pipeline-queue transfers, MPI
+//! messages, spin loops, simulated I/O and transaction markers. The
+//! interpreter implements [`TaskLogic`], translating ops into scheduler
+//! actions; every op carries an instruction-pointer offset inside its
+//! enclosing function so the profiler's samples and stack walks resolve
+//! to plausible source lines via the app's [`SymbolTable`].
+//!
+//! Blocking protocols mirror the real primitives' futex behaviour:
+//! mutexes hand off directly to the oldest waiter; condvars requeue onto
+//! the mutex; queues and channels use wake-and-retry; InnoDB-style
+//! rwlocks spin (`spin_rounds × spin_delay`) before parking — the
+//! spin/park split is exactly what MySQL's `INNODB_SPIN_WAIT_DELAY`
+//! experiment (§5.3) tunes.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use crate::simkernel::{Pid, Step, StepCtx, TaskLogic, Time};
+use crate::util::Prng;
+
+use super::symbols::{SymId, SymbolTable, BYTES_PER_LINE};
+use super::world::{ObjId, World};
+
+/// One instruction: an op plus its IP offset within the current function.
+#[derive(Clone, Debug)]
+pub struct Inst {
+    pub op: Op,
+    pub ip_off: u64,
+}
+
+/// Program operations.
+#[derive(Clone, Debug)]
+pub enum Op {
+    /// Enter a function (pushes a stack frame).
+    Call(SymId),
+    /// Leave the current function.
+    Ret,
+    /// Burn CPU: duration ~ Normal(mean, cv·mean), clamped ≥ 1 ns.
+    Compute { mean_ns: u64, cv: f64 },
+    /// Burn CPU for `base_ns + per_waiter_ns × (waiters on lock)`.
+    /// Models cache-coherence degradation of a contended critical
+    /// section: every waiter polling the lock word adds invalidation
+    /// traffic that slows the holder (the Dedup §5.2 mechanism).
+    ComputeScaled {
+        base_ns: u64,
+        per_waiter_ns: u64,
+        lock: ObjId,
+        cv: f64,
+    },
+    Lock(ObjId),
+    Unlock(ObjId),
+    /// Atomically release `mutex` and wait on `cond`; reacquires on wake.
+    CondWait { cond: ObjId, mutex: ObjId },
+    CondSignal(ObjId),
+    CondBroadcast(ObjId),
+    Barrier(ObjId),
+    /// Push a token into a bounded queue (blocks while full).
+    QueuePush(ObjId),
+    /// Pop a token (blocks while empty).
+    QueuePop(ObjId),
+    /// Pop a token by *polling*: if the queue is empty, burn `poll_ns`
+    /// checking (visible to the sampling profiler at this op's line),
+    /// sleep `sleep_ns`, and retry. Models backoff-polling waits such as
+    /// bodytrack's command wait, where the waiting function shows up in
+    /// IP samples in proportion to the time spent waiting.
+    QueuePollPop {
+        q: ObjId,
+        poll_ns: u64,
+        sleep_ns: u64,
+    },
+    LatchSignal(ObjId),
+    LatchWait(ObjId),
+    /// Post an MPI-style message.
+    Send(ObjId),
+    /// Receive a message; `spin` busy-waits (aggressive MPI mode),
+    /// otherwise the receiver blocks.
+    Recv { chan: ObjId, spin: bool, poll_ns: u64 },
+    /// InnoDB-style rwlock acquire: spin `spin_rounds × spin_delay_ns`
+    /// then park.
+    RwLock {
+        lock: ObjId,
+        write: bool,
+        spin_rounds: u32,
+        spin_delay_ns: u64,
+    },
+    RwUnlock { lock: ObjId, write: bool },
+    /// Simulated blocking I/O or timer sleep.
+    Sleep { mean_ns: u64, cv: f64 },
+    SetFlag(ObjId),
+    /// Busy-wait until the flag is set, polling every `poll_ns`.
+    SpinUntilFlag { flag: ObjId, poll_ns: u64 },
+    TxnStart,
+    TxnEnd,
+    /// Repeat the enclosed region `count` times.
+    LoopStart { count: u64 },
+    LoopEnd,
+}
+
+/// Interpreter resume state across a block/wake boundary.
+#[derive(Clone, Debug, PartialEq)]
+enum Resume {
+    None,
+    /// Re-execute the current instruction from scratch.
+    Retry,
+    /// Woken with the resource already owned: advance past the op.
+    Advance,
+    /// Condvar wake: reacquire the mutex, then advance.
+    Reacquire(ObjId),
+    /// Mid-spin on an rwlock: `left` spin rounds remain.
+    RwSpin { left: u32 },
+    /// Spin exhausted; the park overhead has been paid and the next step
+    /// enqueues the task in the lock's wait array.
+    RwPark,
+    /// Poll burst done; sleep before re-checking the polled queue.
+    PollSleep,
+}
+
+/// Cost of parking on a contended rwlock: futex syscall + reserving a
+/// cell in the sync array (InnoDB's `sync_array_reserve_cell`). This is
+/// what a larger `INNODB_SPIN_WAIT_DELAY` buys its way out of (§5.3).
+const PARK_NS: u64 = 4_500;
+
+/// A thread program bound to its app's shared state.
+pub struct ThreadLogic {
+    prog: Rc<Vec<Inst>>,
+    pc: usize,
+    loops: Vec<(usize, u64)>,
+    world: Rc<RefCell<World>>,
+    symtab: Rc<SymbolTable>,
+    rng: Prng,
+    resume: Resume,
+    frames: Vec<SymId>,
+    /// Ops executed (for debugging/telemetry).
+    pub ops_executed: u64,
+}
+
+impl ThreadLogic {
+    pub fn new(
+        prog: Rc<Vec<Inst>>,
+        world: Rc<RefCell<World>>,
+        symtab: Rc<SymbolTable>,
+        rng: Prng,
+    ) -> Box<ThreadLogic> {
+        Box::new(ThreadLogic {
+            prog,
+            pc: 0,
+            loops: Vec::new(),
+            world,
+            symtab,
+            rng,
+            resume: Resume::None,
+            frames: Vec::new(),
+            ops_executed: 0,
+        })
+    }
+
+    fn cur_sym(&self) -> Option<SymId> {
+        self.frames.last().copied()
+    }
+
+    /// Set the task's visible IP to this instruction's location.
+    fn set_ip(&self, ctx: &mut StepCtx, ip_off: u64) {
+        if let Some(sym) = self.cur_sym() {
+            *ctx.ip = self.symtab.ip(sym, ip_off);
+        }
+    }
+
+    /// Skip from a `LoopStart` at `pc` to just past its matching `LoopEnd`.
+    fn skip_loop(&self) -> usize {
+        let mut depth = 0usize;
+        let mut i = self.pc;
+        loop {
+            match &self.prog[i].op {
+                Op::LoopStart { .. } => depth += 1,
+                Op::LoopEnd => {
+                    depth -= 1;
+                    if depth == 0 {
+                        return i + 1;
+                    }
+                }
+                _ => {}
+            }
+            i += 1;
+        }
+    }
+}
+
+impl TaskLogic for ThreadLogic {
+    fn step(&mut self, ctx: &mut StepCtx) -> Step {
+        let pid: Pid = ctx.pid;
+        let now: Time = ctx.now;
+        // Handle pending resume state first.
+        match std::mem::replace(&mut self.resume, Resume::None) {
+            Resume::None => {}
+            Resume::Retry => { /* fall through: re-execute current inst */ }
+            Resume::Advance => {
+                self.pc += 1;
+            }
+            Resume::Reacquire(m) => {
+                let got = self.world.borrow_mut().mutex_lock(m, pid);
+                if got {
+                    self.pc += 1;
+                } else {
+                    // Queued on the mutex; handoff grants ownership.
+                    self.resume = Resume::Advance;
+                    return Step::Block;
+                }
+            }
+            Resume::RwSpin { left } => {
+                // Re-enter the RwLock op with the spin counter restored.
+                self.resume = Resume::RwSpin { left };
+            }
+            Resume::RwPark => {
+                // Re-enter the RwLock op in the parking phase.
+                self.resume = Resume::RwPark;
+            }
+            Resume::PollSleep => {
+                self.resume = Resume::PollSleep;
+            }
+        }
+
+        let mut guard = 0u32;
+        loop {
+            guard += 1;
+            if guard > 100_000 {
+                panic!("thread {pid} stuck in zero-time op loop at pc={}", self.pc);
+            }
+            if self.pc >= self.prog.len() {
+                return Step::Exit;
+            }
+            let inst = self.prog[self.pc].clone();
+            self.ops_executed += 1;
+            self.set_ip(ctx, inst.ip_off);
+            match inst.op {
+                Op::Call(sym) => {
+                    self.frames.push(sym);
+                    ctx.stack.push(self.symtab.addr_of(sym));
+                    *ctx.ip = self.symtab.addr_of(sym);
+                    self.pc += 1;
+                }
+                Op::Ret => {
+                    self.frames.pop();
+                    ctx.stack.pop();
+                    self.pc += 1;
+                }
+                Op::Compute { mean_ns, cv } => {
+                    self.pc += 1;
+                    let ns = if cv == 0.0 {
+                        mean_ns.max(1)
+                    } else {
+                        self.rng.dur(mean_ns, cv)
+                    };
+                    return Step::Compute { ns };
+                }
+                Op::ComputeScaled {
+                    base_ns,
+                    per_waiter_ns,
+                    lock,
+                    cv,
+                } => {
+                    self.pc += 1;
+                    let waiters =
+                        self.world.borrow().mutexes[lock].waiters.len() as u64;
+                    let mean = base_ns + per_waiter_ns * waiters;
+                    let ns = if cv == 0.0 {
+                        mean.max(1)
+                    } else {
+                        self.rng.dur(mean, cv)
+                    };
+                    return Step::Compute { ns };
+                }
+                Op::Lock(m) => {
+                    let got = self.world.borrow_mut().mutex_lock(m, pid);
+                    if got {
+                        self.pc += 1;
+                    } else {
+                        self.resume = Resume::Advance; // handoff grants lock
+                        *ctx.wait_kind = crate::simkernel::WaitKind::Futex;
+                        return Step::Block;
+                    }
+                }
+                Op::Unlock(m) => {
+                    if let Some(next) = self.world.borrow_mut().mutex_unlock(m, pid) {
+                        ctx.wake(next);
+                    }
+                    self.pc += 1;
+                }
+                Op::CondWait { cond, mutex } => {
+                    let mut w = self.world.borrow_mut();
+                    w.cond_enqueue(cond, pid);
+                    if let Some(next) = w.mutex_unlock(mutex, pid) {
+                        ctx.wake(next);
+                    }
+                    drop(w);
+                    self.resume = Resume::Reacquire(mutex);
+                    *ctx.wait_kind = crate::simkernel::WaitKind::Futex;
+                    return Step::Block;
+                }
+                Op::CondSignal(c) => {
+                    if let Some(p) = self.world.borrow_mut().cond_signal(c) {
+                        ctx.wake(p);
+                    }
+                    self.pc += 1;
+                }
+                Op::CondBroadcast(c) => {
+                    for p in self.world.borrow_mut().cond_broadcast(c) {
+                        ctx.wake(p);
+                    }
+                    self.pc += 1;
+                }
+                Op::Barrier(b) => {
+                    match self.world.borrow_mut().barrier_arrive(b, pid) {
+                        Some(waiters) => {
+                            for p in waiters {
+                                ctx.wake(p);
+                            }
+                            self.pc += 1;
+                        }
+                        None => {
+                            self.resume = Resume::Advance;
+                            *ctx.wait_kind = crate::simkernel::WaitKind::Barrier;
+                            return Step::Block;
+                        }
+                    }
+                }
+                Op::QueuePush(q) => {
+                    match self.world.borrow_mut().queue_try_push(q, pid) {
+                        Ok(woken) => {
+                            if let Some(p) = woken {
+                                ctx.wake(p);
+                            }
+                            self.pc += 1;
+                        }
+                        Err(()) => {
+                            self.resume = Resume::Retry;
+                            *ctx.wait_kind = crate::simkernel::WaitKind::Queue;
+                            return Step::Block;
+                        }
+                    }
+                }
+                Op::QueuePollPop { q, poll_ns, sleep_ns } => {
+                    if matches!(self.resume, Resume::PollSleep) {
+                        // Burst finished: sleep, then retry the pop. The
+                        // ±25% jitter mirrors real timer slack and keeps
+                        // co-released pollers from phase-locking.
+                        self.resume = Resume::None;
+                        return Step::Sleep {
+                            ns: self.rng.dur(sleep_ns.max(1), 0.25),
+                        };
+                    }
+                    let got = {
+                        let mut w = self.world.borrow_mut();
+                        match w.queue_try_pop(q, pid) {
+                            Ok(woken) => {
+                                if let Some(p) = woken {
+                                    ctx.wake(p);
+                                }
+                                true
+                            }
+                            Err(()) => {
+                                // queue_try_pop queued us, but polling
+                                // waits are not woken by pushers —
+                                // remove the registration again.
+                                if let Some(pos) = w.queues[q]
+                                    .pop_waiters
+                                    .iter()
+                                    .position(|p| *p == pid)
+                                {
+                                    w.queues[q].pop_waiters.remove(pos);
+                                }
+                                false
+                            }
+                        }
+                    };
+                    if got {
+                        self.pc += 1;
+                    } else {
+                        self.resume = Resume::PollSleep;
+                        return Step::Compute { ns: poll_ns.max(1) };
+                    }
+                }
+                Op::QueuePop(q) => {
+                    match self.world.borrow_mut().queue_try_pop(q, pid) {
+                        Ok(woken) => {
+                            if let Some(p) = woken {
+                                ctx.wake(p);
+                            }
+                            self.pc += 1;
+                        }
+                        Err(()) => {
+                            self.resume = Resume::Retry;
+                            *ctx.wait_kind = crate::simkernel::WaitKind::Queue;
+                            return Step::Block;
+                        }
+                    }
+                }
+                Op::LatchSignal(l) => {
+                    for p in self.world.borrow_mut().latch_signal(l) {
+                        ctx.wake(p);
+                    }
+                    self.pc += 1;
+                }
+                Op::LatchWait(l) => {
+                    let open = self.world.borrow_mut().latch_wait(l, pid);
+                    if open {
+                        self.pc += 1;
+                    } else {
+                        self.resume = Resume::Advance;
+                        *ctx.wait_kind = crate::simkernel::WaitKind::Barrier;
+                        return Step::Block;
+                    }
+                }
+                Op::Send(ch) => {
+                    if let Some(p) = self.world.borrow_mut().chan_send(ch) {
+                        ctx.wake(p);
+                    }
+                    self.pc += 1;
+                }
+                Op::Recv { chan, spin, poll_ns } => {
+                    let got = self
+                        .world
+                        .borrow_mut()
+                        .chan_try_recv(chan, pid, !spin);
+                    if got {
+                        self.pc += 1;
+                    } else if spin {
+                        // Busy-wait: stay on this op, consume CPU polling.
+                        return Step::Compute { ns: poll_ns.max(1) };
+                    } else {
+                        self.resume = Resume::Retry;
+                        *ctx.wait_kind = crate::simkernel::WaitKind::Channel;
+                        return Step::Block;
+                    }
+                }
+                Op::RwLock {
+                    lock,
+                    write,
+                    spin_rounds,
+                    spin_delay_ns,
+                } => {
+                    let state = std::mem::replace(&mut self.resume, Resume::None);
+                    let got = self.world.borrow_mut().rw_try(lock, pid, write);
+                    if got {
+                        self.pc += 1;
+                        continue;
+                    }
+                    if matches!(state, Resume::RwPark) {
+                        // Park overhead already paid: join the wait array.
+                        self.world.borrow_mut().rw_enqueue(lock, pid, write);
+                        self.resume = Resume::Retry;
+                        *ctx.wait_kind = crate::simkernel::WaitKind::Futex;
+                        return Step::Block;
+                    }
+                    // Spin phase, then pay the park overhead.
+                    let left = match state {
+                        Resume::RwSpin { left } => left,
+                        _ => spin_rounds,
+                    };
+                    if left > 0 {
+                        self.resume = Resume::RwSpin { left: left - 1 };
+                        return Step::Compute {
+                            ns: spin_delay_ns.max(1),
+                        };
+                    }
+                    self.resume = Resume::RwPark;
+                    return Step::Compute { ns: PARK_NS };
+                }
+                Op::RwUnlock { lock, write } => {
+                    for p in self.world.borrow_mut().rw_unlock(lock, pid, write) {
+                        ctx.wake(p);
+                    }
+                    self.pc += 1;
+                }
+                Op::Sleep { mean_ns, cv } => {
+                    self.pc += 1;
+                    let ns = if cv == 0.0 {
+                        mean_ns.max(1)
+                    } else {
+                        self.rng.dur(mean_ns, cv)
+                    };
+                    return Step::Sleep { ns };
+                }
+                Op::SetFlag(f) => {
+                    self.world.borrow_mut().set_flag(f);
+                    self.pc += 1;
+                }
+                Op::SpinUntilFlag { flag, poll_ns } => {
+                    if self.world.borrow().flag(flag) {
+                        self.pc += 1;
+                    } else {
+                        return Step::Compute { ns: poll_ns.max(1) };
+                    }
+                }
+                Op::TxnStart => {
+                    self.world.borrow_mut().txn_start(pid, now);
+                    self.pc += 1;
+                }
+                Op::TxnEnd => {
+                    self.world.borrow_mut().txn_end(pid, now);
+                    self.pc += 1;
+                }
+                Op::LoopStart { count } => {
+                    if count == 0 {
+                        self.pc = self.skip_loop();
+                    } else {
+                        self.loops.push((self.pc, count));
+                        self.pc += 1;
+                    }
+                }
+                Op::LoopEnd => {
+                    let (start, left) = self.loops.pop().expect("LoopEnd without LoopStart");
+                    if left > 1 {
+                        self.loops.push((start, left - 1));
+                        self.pc = start + 1;
+                    } else {
+                        self.pc += 1;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Builder for thread programs: assigns IP offsets sequentially within
+/// the current function so every op lands on its own source line.
+pub struct ProgramBuilder<'a> {
+    symtab: &'a mut SymbolTable,
+    insts: Vec<Inst>,
+    /// (sym, next line-slot) per open frame.
+    frames: Vec<(SymId, u64)>,
+}
+
+impl<'a> ProgramBuilder<'a> {
+    pub fn new(symtab: &'a mut SymbolTable) -> ProgramBuilder<'a> {
+        ProgramBuilder {
+            symtab,
+            insts: Vec::new(),
+            frames: Vec::new(),
+        }
+    }
+
+    fn next_off(&mut self) -> u64 {
+        match self.frames.last_mut() {
+            Some((_, slot)) => {
+                let off = *slot * BYTES_PER_LINE;
+                *slot += 1;
+                off
+            }
+            None => 0,
+        }
+    }
+
+    fn push(&mut self, op: Op) -> &mut Self {
+        let ip_off = self.next_off();
+        self.insts.push(Inst { op, ip_off });
+        self
+    }
+
+    /// Enter a function, registering the symbol on first use.
+    pub fn call(&mut self, name: &str, file: &str, line: u32) -> &mut Self {
+        // Reuse an existing symbol with this name if present (functions
+        // are shared across threads).
+        let sym = (0..self.symtab.len())
+            .find(|i| self.symtab.func(*i).name == name)
+            .unwrap_or_else(|| self.symtab.add(name, file, line));
+        self.insts.push(Inst {
+            op: Op::Call(sym),
+            ip_off: 0,
+        });
+        self.frames.push((sym, 1));
+        self
+    }
+
+    pub fn ret(&mut self) -> &mut Self {
+        self.insts.push(Inst { op: Op::Ret, ip_off: 0 });
+        self.frames.pop();
+        self
+    }
+
+    pub fn compute(&mut self, mean_ns: u64, cv: f64) -> &mut Self {
+        self.push(Op::Compute { mean_ns, cv })
+    }
+
+    /// Compute whose duration grows with the number of waiters on `lock`
+    /// (see [`Op::ComputeScaled`]).
+    pub fn compute_scaled(
+        &mut self,
+        base_ns: u64,
+        per_waiter_ns: u64,
+        lock: ObjId,
+        cv: f64,
+    ) -> &mut Self {
+        self.push(Op::ComputeScaled {
+            base_ns,
+            per_waiter_ns,
+            lock,
+            cv,
+        })
+    }
+
+    pub fn lock(&mut self, m: ObjId) -> &mut Self {
+        self.push(Op::Lock(m))
+    }
+
+    pub fn unlock(&mut self, m: ObjId) -> &mut Self {
+        self.push(Op::Unlock(m))
+    }
+
+    pub fn cond_wait(&mut self, cond: ObjId, mutex: ObjId) -> &mut Self {
+        self.push(Op::CondWait { cond, mutex })
+    }
+
+    pub fn cond_signal(&mut self, c: ObjId) -> &mut Self {
+        self.push(Op::CondSignal(c))
+    }
+
+    pub fn cond_broadcast(&mut self, c: ObjId) -> &mut Self {
+        self.push(Op::CondBroadcast(c))
+    }
+
+    pub fn barrier(&mut self, b: ObjId) -> &mut Self {
+        self.push(Op::Barrier(b))
+    }
+
+    pub fn queue_push(&mut self, q: ObjId) -> &mut Self {
+        self.push(Op::QueuePush(q))
+    }
+
+    pub fn queue_pop(&mut self, q: ObjId) -> &mut Self {
+        self.push(Op::QueuePop(q))
+    }
+
+    pub fn queue_poll_pop(&mut self, q: ObjId, poll_ns: u64, sleep_ns: u64) -> &mut Self {
+        self.push(Op::QueuePollPop { q, poll_ns, sleep_ns })
+    }
+
+    pub fn latch_signal(&mut self, l: ObjId) -> &mut Self {
+        self.push(Op::LatchSignal(l))
+    }
+
+    pub fn latch_wait(&mut self, l: ObjId) -> &mut Self {
+        self.push(Op::LatchWait(l))
+    }
+
+    pub fn send(&mut self, ch: ObjId) -> &mut Self {
+        self.push(Op::Send(ch))
+    }
+
+    pub fn recv(&mut self, chan: ObjId, spin: bool, poll_ns: u64) -> &mut Self {
+        self.push(Op::Recv { chan, spin, poll_ns })
+    }
+
+    pub fn rw_lock(
+        &mut self,
+        lock: ObjId,
+        write: bool,
+        spin_rounds: u32,
+        spin_delay_ns: u64,
+    ) -> &mut Self {
+        self.push(Op::RwLock {
+            lock,
+            write,
+            spin_rounds,
+            spin_delay_ns,
+        })
+    }
+
+    pub fn rw_unlock(&mut self, lock: ObjId, write: bool) -> &mut Self {
+        self.push(Op::RwUnlock { lock, write })
+    }
+
+    pub fn sleep(&mut self, mean_ns: u64, cv: f64) -> &mut Self {
+        self.push(Op::Sleep { mean_ns, cv })
+    }
+
+    pub fn set_flag(&mut self, f: ObjId) -> &mut Self {
+        self.push(Op::SetFlag(f))
+    }
+
+    pub fn spin_until(&mut self, flag: ObjId, poll_ns: u64) -> &mut Self {
+        self.push(Op::SpinUntilFlag { flag, poll_ns })
+    }
+
+    pub fn txn_start(&mut self) -> &mut Self {
+        self.push(Op::TxnStart)
+    }
+
+    pub fn txn_end(&mut self) -> &mut Self {
+        self.push(Op::TxnEnd)
+    }
+
+    pub fn loop_start(&mut self, count: u64) -> &mut Self {
+        self.push(Op::LoopStart { count })
+    }
+
+    pub fn loop_end(&mut self) -> &mut Self {
+        self.push(Op::LoopEnd)
+    }
+
+    pub fn build(&mut self) -> Rc<Vec<Inst>> {
+        Rc::new(std::mem::take(&mut self.insts))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simkernel::{Kernel, KernelConfig};
+
+    fn harness(
+        cpus: usize,
+        build: impl FnOnce(&mut SymbolTable, &mut World) -> Vec<(String, Rc<Vec<Inst>>)>,
+    ) -> (Kernel, Rc<RefCell<World>>, u64) {
+        let mut st = SymbolTable::new();
+        let mut w = World::new();
+        let progs = build(&mut st, &mut w);
+        let symtab = Rc::new(st);
+        let world = Rc::new(RefCell::new(w));
+        let mut k = Kernel::new(KernelConfig {
+            cpus,
+            switch_cost_ns: 0,
+            ..Default::default()
+        });
+        let mut rng = Prng::new(1);
+        for (comm, prog) in progs {
+            let logic = ThreadLogic::new(
+                prog,
+                world.clone(),
+                symtab.clone(),
+                rng.fork(comm.len() as u64),
+            );
+            let pid = k.spawn(&comm, logic);
+            k.track(pid);
+        }
+        let end = k.run().unwrap();
+        (k, world, end)
+    }
+
+    #[test]
+    fn compute_loop_runs_to_completion() {
+        let (_, _, end) = harness(1, |st, _| {
+            let mut b = ProgramBuilder::new(st);
+            b.call("main", "t.c", 1)
+                .loop_start(10)
+                .compute(1_000, 0.0)
+                .loop_end()
+                .ret();
+            vec![("t".to_string(), b.build())]
+        });
+        assert_eq!(end, 10_000);
+    }
+
+    #[test]
+    fn mutex_serializes_critical_sections() {
+        let (_, world, end) = harness(4, |st, w| {
+            let m = w.new_mutex();
+            let mut progs = Vec::new();
+            for i in 0..4 {
+                let mut b = ProgramBuilder::new(st);
+                b.call("worker", "t.c", 1)
+                    .loop_start(5)
+                    .lock(m)
+                    .compute(10_000, 0.0)
+                    .unlock(m)
+                    .loop_end()
+                    .ret();
+                progs.push((format!("w{i}"), b.build()));
+            }
+            progs
+        });
+        // 4 threads × 5 critical sections × 10 µs, fully serialized.
+        assert!(end >= 200_000, "end={end}");
+        let w = world.borrow();
+        assert_eq!(w.mutexes[0].acquisitions, 20);
+        assert!(w.mutexes[0].contended > 0);
+    }
+
+    #[test]
+    fn condvar_producer_consumer() {
+        let (_, _, end) = harness(2, |st, w| {
+            let m = w.new_mutex();
+            let c = w.new_cond();
+            let f = w.new_flag();
+            let mut prod = ProgramBuilder::new(st);
+            prod.call("producer", "t.c", 1)
+                .compute(50_000, 0.0)
+                .lock(m)
+                .set_flag(f)
+                .cond_signal(c)
+                .unlock(m)
+                .ret();
+            let prod_prog = prod.build();
+            let mut cons = ProgramBuilder::new(st);
+            cons.call("consumer", "t.c", 20)
+                .lock(m)
+                .cond_wait(c, m) // flag is never set before the wait here
+                .unlock(m)
+                .compute(10_000, 0.0)
+                .ret();
+            vec![
+                ("cons".to_string(), cons.build()),
+                ("prod".to_string(), prod_prog),
+            ]
+        });
+        // Consumer waits ~50 µs for the producer, then 10 µs of work.
+        assert!(end >= 60_000, "end={end}");
+    }
+
+    #[test]
+    fn barrier_synchronizes_phases() {
+        let (k, _, end) = harness(4, |st, w| {
+            let b = w.new_barrier(4);
+            let mut progs = Vec::new();
+            for i in 0..4u64 {
+                let mut pb = ProgramBuilder::new(st);
+                pb.call("phase_worker", "t.c", 1)
+                    .compute(10_000 * (i + 1), 0.0) // imbalanced
+                    .barrier(b)
+                    .compute(5_000, 0.0)
+                    .ret();
+                progs.push((format!("w{i}"), pb.build()));
+            }
+            progs
+        });
+        // All wait for the slowest (40 µs), then 5 µs more.
+        assert!(end >= 45_000, "end={end}");
+        assert!(end < 60_000, "end={end}");
+        assert!(k.stats.wakeups >= 3);
+    }
+
+    #[test]
+    fn queue_pipeline_transfers_all_items() {
+        let (_, world, _) = harness(2, |st, w| {
+            let q = w.new_queue(4);
+            let mut prod = ProgramBuilder::new(st);
+            prod.call("producer", "t.c", 1)
+                .loop_start(20)
+                .compute(1_000, 0.0)
+                .queue_push(q)
+                .loop_end()
+                .ret();
+            let prod_prog = prod.build();
+            let mut cons = ProgramBuilder::new(st);
+            cons.call("consumer", "t.c", 10)
+                .loop_start(20)
+                .queue_pop(q)
+                .compute(2_000, 0.0)
+                .loop_end()
+                .ret();
+            vec![
+                ("prod".to_string(), prod_prog),
+                ("cons".to_string(), cons.build()),
+            ]
+        });
+        assert_eq!(world.borrow().queues[0].total_pushed, 20);
+        assert_eq!(world.borrow().queues[0].tokens, 0);
+    }
+
+    #[test]
+    fn spin_wait_consumes_cpu_while_waiting() {
+        let (k, _, _) = harness(2, |st, w| {
+            let f = w.new_flag();
+            let mut setter = ProgramBuilder::new(st);
+            setter
+                .call("setter", "t.c", 1)
+                .compute(100_000, 0.0)
+                .set_flag(f)
+                .ret();
+            let setter_prog = setter.build();
+            let mut spinner = ProgramBuilder::new(st);
+            spinner
+                .call("spinner", "t.c", 10)
+                .spin_until(f, 1_000)
+                .ret();
+            vec![
+                ("set".to_string(), setter_prog),
+                ("spin".to_string(), spinner.build()),
+            ]
+        });
+        // The spinner burned ~100 µs of CPU while "waiting".
+        let spinner = k.all_tasks().find(|t| t.comm == "spin").unwrap();
+        assert!(spinner.cpu_time >= 90_000, "cpu={}", spinner.cpu_time);
+    }
+
+    #[test]
+    fn rwlock_spin_then_block() {
+        let (_, world, _) = harness(2, |st, w| {
+            let rw = w.new_rwlock();
+            let mut writer = ProgramBuilder::new(st);
+            writer
+                .call("writer", "t.c", 1)
+                .rw_lock(rw, true, 0, 0)
+                .compute(200_000, 0.0)
+                .rw_unlock(rw, true)
+                .ret();
+            let writer_prog = writer.build();
+            let mut reader = ProgramBuilder::new(st);
+            reader
+                .call("reader", "t.c", 10)
+                .compute(1_000, 0.0) // let the writer go first
+                .rw_lock(rw, false, 6, 2_000) // spins 6×2 µs, then parks
+                .compute(1_000, 0.0)
+                .rw_unlock(rw, false)
+                .ret();
+            vec![
+                ("wr".to_string(), writer_prog),
+                ("rd".to_string(), reader.build()),
+            ]
+        });
+        assert!(world.borrow().rwlocks[0].contended > 0);
+        assert!(world.borrow().rwlocks[0].writer.is_none());
+        assert_eq!(world.borrow().rwlocks[0].readers, 0);
+    }
+
+    #[test]
+    fn mpi_blocking_recv() {
+        let (_, _, end) = harness(2, |st, w| {
+            let ch = w.new_channel();
+            let mut sender = ProgramBuilder::new(st);
+            sender
+                .call("rank0", "mpi.c", 1)
+                .compute(30_000, 0.0)
+                .send(ch)
+                .ret();
+            let sender_prog = sender.build();
+            let mut recver = ProgramBuilder::new(st);
+            recver
+                .call("rank1", "mpi.c", 10)
+                .recv(ch, false, 0)
+                .compute(5_000, 0.0)
+                .ret();
+            vec![
+                ("r0".to_string(), sender_prog),
+                ("r1".to_string(), recver.build()),
+            ]
+        });
+        assert!(end >= 35_000, "end={end}");
+    }
+
+    #[test]
+    fn mpi_spinning_recv_is_active() {
+        let (k, _, _) = harness(2, |st, w| {
+            let ch = w.new_channel();
+            let mut sender = ProgramBuilder::new(st);
+            sender
+                .call("rank0", "mpi.c", 1)
+                .compute(50_000, 0.0)
+                .send(ch)
+                .ret();
+            let sender_prog = sender.build();
+            let mut recver = ProgramBuilder::new(st);
+            recver
+                .call("rank1", "mpi.c", 10)
+                .recv(ch, true, 500)
+                .ret();
+            vec![
+                ("r0".to_string(), sender_prog),
+                ("r1".to_string(), recver.build()),
+            ]
+        });
+        let spinner = k.all_tasks().find(|t| t.comm == "r1").unwrap();
+        // Aggressive mode: receiver consumed CPU the entire wait.
+        assert!(spinner.cpu_time >= 45_000, "cpu={}", spinner.cpu_time);
+    }
+
+    #[test]
+    fn latch_join_semantics() {
+        let (_, _, end) = harness(4, |st, w| {
+            let l = w.new_latch(3);
+            let mut progs = Vec::new();
+            for i in 0..3u64 {
+                let mut b = ProgramBuilder::new(st);
+                b.call("worker", "t.c", 1)
+                    .compute(10_000 + i * 5_000, 0.0)
+                    .latch_signal(l)
+                    .ret();
+                progs.push((format!("w{i}"), b.build()));
+            }
+            let mut main = ProgramBuilder::new(st);
+            main.call("main", "t.c", 50)
+                .latch_wait(l)
+                .compute(1_000, 0.0)
+                .ret();
+            progs.push(("main".to_string(), main.build()));
+            progs
+        });
+        // Main waits for the slowest worker (20 µs) then runs 1 µs.
+        assert!(end >= 21_000, "end={end}");
+    }
+
+    #[test]
+    fn txn_latencies_collected() {
+        let (_, world, _) = harness(1, |st, w| {
+            let _ = w;
+            let mut b = ProgramBuilder::new(st);
+            b.call("client", "t.c", 1)
+                .loop_start(5)
+                .txn_start()
+                .compute(10_000, 0.0)
+                .txn_end()
+                .loop_end()
+                .ret();
+            vec![("c".to_string(), b.build())]
+        });
+        let lat = world.borrow().latencies.clone();
+        assert_eq!(lat.len(), 5);
+        assert!(lat.iter().all(|l| *l >= 10_000));
+    }
+
+    #[test]
+    fn nested_loops_and_zero_loops() {
+        let (_, _, end) = harness(1, |st, _| {
+            let mut b = ProgramBuilder::new(st);
+            b.call("main", "t.c", 1)
+                .loop_start(3)
+                .loop_start(2)
+                .compute(1_000, 0.0)
+                .loop_end()
+                .loop_end()
+                .loop_start(0) // skipped entirely
+                .compute(1_000_000, 0.0)
+                .loop_end()
+                .ret();
+            vec![("t".to_string(), b.build())]
+        });
+        assert_eq!(end, 6_000);
+    }
+
+    #[test]
+    fn ip_and_stack_tracked() {
+        let (k, _, _) = harness(1, |st, _| {
+            let mut b = ProgramBuilder::new(st);
+            b.call("main", "t.c", 1)
+                .call("inner", "t.c", 100)
+                .compute(1_000, 0.0)
+                .ret()
+                .ret();
+            vec![("t".to_string(), b.build())]
+        });
+        // After exit the stack is empty, but the task ran: ip was set.
+        let t = k.all_tasks().next().unwrap();
+        assert!(t.ip != 0);
+        assert!(t.stack.is_empty());
+    }
+}

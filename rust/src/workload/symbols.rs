@@ -1,0 +1,172 @@
+//! Synthetic binary images: symbol tables and `addr2line`-style mapping.
+//!
+//! Each synthetic application carries a symbol table assigning every
+//! function an address range, source file and base line. The profiler's
+//! symbolization step resolves sampled instruction pointers through this
+//! table exactly as GAPP shells out to `addr2line` (paper §4.4), including
+//! the PIE failure mode of §6.1: when the "binary" is position-independent
+//! and no load bias is known, resolution fails and samples stay raw.
+
+/// Index of a function symbol in its [`SymbolTable`].
+pub type SymId = usize;
+
+/// Bytes of address space given to each function.
+pub const FUNC_SIZE: u64 = 4096;
+/// Address-to-line granularity: one source line per 16 bytes of text.
+pub const BYTES_PER_LINE: u64 = 16;
+/// Base load address of non-PIE text segments (x86-64 convention).
+pub const TEXT_BASE: u64 = 0x40_0000;
+
+/// One function symbol.
+#[derive(Clone, Debug)]
+pub struct FuncSym {
+    pub name: String,
+    pub file: String,
+    pub base_line: u32,
+    pub addr: u64,
+    pub size: u64,
+}
+
+/// A synthetic binary's symbol table.
+#[derive(Clone, Debug, Default)]
+pub struct SymbolTable {
+    funcs: Vec<FuncSym>,
+    /// Position-independent executable: addresses are unresolvable until
+    /// the load bias is known (the gcc default the paper must override).
+    pub pie: bool,
+}
+
+/// A resolved source location.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Location {
+    pub function: String,
+    pub file: String,
+    pub line: u32,
+}
+
+impl SymbolTable {
+    pub fn new() -> SymbolTable {
+        SymbolTable::default()
+    }
+
+    /// Register a function; returns its symbol id.
+    pub fn add(&mut self, name: &str, file: &str, base_line: u32) -> SymId {
+        let addr = TEXT_BASE + (self.funcs.len() as u64) * FUNC_SIZE;
+        self.funcs.push(FuncSym {
+            name: name.to_string(),
+            file: file.to_string(),
+            base_line,
+            addr,
+            size: FUNC_SIZE,
+        });
+        self.funcs.len() - 1
+    }
+
+    pub fn len(&self) -> usize {
+        self.funcs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.funcs.is_empty()
+    }
+
+    /// Base address of a function (what `Call` pushes on the stack).
+    pub fn addr_of(&self, id: SymId) -> u64 {
+        self.funcs[id].addr
+    }
+
+    /// Instruction pointer for byte offset `off` within function `id`.
+    pub fn ip(&self, id: SymId, off: u64) -> u64 {
+        let f = &self.funcs[id];
+        f.addr + off.min(f.size - 1)
+    }
+
+    pub fn func(&self, id: SymId) -> &FuncSym {
+        &self.funcs[id]
+    }
+
+    /// Find the symbol containing `addr`.
+    pub fn find(&self, addr: u64) -> Option<(SymId, &FuncSym)> {
+        if self.funcs.is_empty() || addr < TEXT_BASE {
+            return None;
+        }
+        let idx = ((addr - TEXT_BASE) / FUNC_SIZE) as usize;
+        let f = self.funcs.get(idx)?;
+        if addr < f.addr + f.size {
+            Some((idx, f))
+        } else {
+            None
+        }
+    }
+
+    /// `addr2line`: resolve an address to function/file/line. Fails for
+    /// PIE binaries (paper §6.1) and for addresses outside the image
+    /// (shared-library / kernel samples, paper §4.4).
+    pub fn addr2line(&self, addr: u64) -> Option<Location> {
+        if self.pie {
+            return None;
+        }
+        let (_, f) = self.find(addr)?;
+        let line = f.base_line + ((addr - f.addr) / BYTES_PER_LINE) as u32;
+        Some(Location {
+            function: f.name.clone(),
+            file: f.file.clone(),
+            line,
+        })
+    }
+
+    /// Function name only (bcc's `sym()` can do this even for PIE, which
+    /// is the paper's suggested workaround).
+    pub fn sym_name(&self, addr: u64) -> Option<&str> {
+        self.find(addr).map(|(_, f)| f.name.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn addresses_disjoint_and_ordered() {
+        let mut st = SymbolTable::new();
+        let a = st.add("f", "a.c", 10);
+        let b = st.add("g", "a.c", 50);
+        assert_eq!(st.addr_of(b), st.addr_of(a) + FUNC_SIZE);
+    }
+
+    #[test]
+    fn addr2line_maps_offsets_to_lines() {
+        let mut st = SymbolTable::new();
+        let f = st.add("CNDF", "blackscholes.c", 100);
+        let loc = st.addr2line(st.ip(f, 0)).unwrap();
+        assert_eq!(loc.function, "CNDF");
+        assert_eq!(loc.line, 100);
+        let loc2 = st.addr2line(st.ip(f, 5 * BYTES_PER_LINE)).unwrap();
+        assert_eq!(loc2.line, 105);
+        assert_eq!(loc2.file, "blackscholes.c");
+    }
+
+    #[test]
+    fn pie_defeats_addr2line_but_not_sym() {
+        let mut st = SymbolTable::new();
+        let f = st.add("emd", "ferret.c", 1);
+        st.pie = true;
+        assert!(st.addr2line(st.ip(f, 0)).is_none());
+        assert_eq!(st.sym_name(st.ip(f, 0)), Some("emd"));
+    }
+
+    #[test]
+    fn out_of_image_addresses_unresolved() {
+        let mut st = SymbolTable::new();
+        st.add("f", "a.c", 1);
+        assert!(st.addr2line(0x10).is_none()); // below text base
+        assert!(st.addr2line(TEXT_BASE + 100 * FUNC_SIZE).is_none()); // beyond
+    }
+
+    #[test]
+    fn ip_clamped_to_function() {
+        let mut st = SymbolTable::new();
+        let f = st.add("f", "a.c", 1);
+        assert_eq!(st.ip(f, 1 << 30), st.addr_of(f) + FUNC_SIZE - 1);
+    }
+}

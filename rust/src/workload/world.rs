@@ -1,0 +1,515 @@
+//! Shared synchronization objects for synthetic applications.
+//!
+//! These model the user-space primitives the Parsec/MySQL/Nektar++
+//! workloads exercise (pthread mutex/condvar/barrier, bounded pipeline
+//! queues, latches, MPI point-to-point channels, and InnoDB-style
+//! spin-then-block rwlocks). Blocking and waking are mediated by the
+//! program interpreter, which translates "must wait" into kernel blocks —
+//! exactly the futex round-trip the real primitives compile down to, and
+//! the only thing GAPP observes.
+
+use std::collections::VecDeque;
+
+use crate::simkernel::{Pid, Time};
+
+/// Index of a sync object within its pool.
+pub type ObjId = usize;
+
+/// pthread_mutex with direct handoff: unlock passes ownership to the
+/// oldest waiter (avoids barging nondeterminism in the simulation).
+#[derive(Debug, Default)]
+pub struct MutexObj {
+    pub holder: Option<Pid>,
+    pub waiters: VecDeque<Pid>,
+    /// Contention statistics (used by tests and the SyncPerf-style report).
+    pub acquisitions: u64,
+    pub contended: u64,
+}
+
+/// pthread_cond.
+#[derive(Debug, Default)]
+pub struct CondObj {
+    pub waiters: VecDeque<Pid>,
+}
+
+/// pthread_barrier (reusable, generation-counted).
+#[derive(Debug, Default)]
+pub struct BarrierObj {
+    pub parties: usize,
+    pub waiting: Vec<Pid>,
+    pub generation: u64,
+}
+
+/// Bounded token queue (pipeline stage connector). Tokens are counts —
+/// payloads don't matter to scheduling behaviour.
+#[derive(Debug, Default)]
+pub struct QueueObj {
+    pub capacity: usize,
+    pub tokens: usize,
+    pub push_waiters: VecDeque<Pid>,
+    pub pop_waiters: VecDeque<Pid>,
+    pub total_pushed: u64,
+}
+
+/// Count-down latch (thread join, phase completion).
+#[derive(Debug, Default)]
+pub struct LatchObj {
+    pub count: u64,
+    pub waiters: Vec<Pid>,
+}
+
+/// MPI-style point-to-point message channel (sender never blocks; the
+/// receiver blocks or busy-spins depending on the MPI progress mode).
+#[derive(Debug, Default)]
+pub struct ChanObj {
+    pub msgs: u64,
+    pub recv_waiters: VecDeque<Pid>,
+}
+
+/// Reader-writer lock with InnoDB-style spin-then-block acquisition
+/// (the `rw_lock_s_lock_spin` / `sync_array_reserve_cell` path of §5.3).
+#[derive(Debug, Default)]
+pub struct RwLockObj {
+    pub writer: Option<Pid>,
+    pub readers: usize,
+    pub waiters: VecDeque<(Pid, bool)>, // (pid, wants_write)
+    pub contended: u64,
+}
+
+/// The shared world all threads of one application see.
+#[derive(Debug, Default)]
+pub struct World {
+    pub mutexes: Vec<MutexObj>,
+    pub conds: Vec<CondObj>,
+    pub barriers: Vec<BarrierObj>,
+    pub queues: Vec<QueueObj>,
+    pub latches: Vec<LatchObj>,
+    pub channels: Vec<ChanObj>,
+    pub rwlocks: Vec<RwLockObj>,
+    pub flags: Vec<bool>,
+    /// Transaction latencies (ns), recorded by TxnStart/TxnEnd ops.
+    pub latencies: Vec<u64>,
+    txn_start: std::collections::HashMap<Pid, Time>,
+    /// Rwlock ownership grants handed to parked waiters at wake time
+    /// (direct handoff, so a woken waiter cannot lose the lock again —
+    /// and so waking a reader parked behind a writer cannot deadlock).
+    rw_granted: std::collections::HashSet<(ObjId, Pid)>,
+}
+
+impl World {
+    pub fn new() -> World {
+        World::default()
+    }
+
+    // ---- constructors --------------------------------------------------
+
+    pub fn new_mutex(&mut self) -> ObjId {
+        self.mutexes.push(MutexObj::default());
+        self.mutexes.len() - 1
+    }
+
+    pub fn new_cond(&mut self) -> ObjId {
+        self.conds.push(CondObj::default());
+        self.conds.len() - 1
+    }
+
+    pub fn new_barrier(&mut self, parties: usize) -> ObjId {
+        self.barriers.push(BarrierObj {
+            parties,
+            ..Default::default()
+        });
+        self.barriers.len() - 1
+    }
+
+    pub fn new_queue(&mut self, capacity: usize) -> ObjId {
+        self.queues.push(QueueObj {
+            capacity,
+            ..Default::default()
+        });
+        self.queues.len() - 1
+    }
+
+    pub fn new_latch(&mut self, count: u64) -> ObjId {
+        self.latches.push(LatchObj {
+            count,
+            ..Default::default()
+        });
+        self.latches.len() - 1
+    }
+
+    pub fn new_channel(&mut self) -> ObjId {
+        self.channels.push(ChanObj::default());
+        self.channels.len() - 1
+    }
+
+    pub fn new_rwlock(&mut self) -> ObjId {
+        self.rwlocks.push(RwLockObj::default());
+        self.rwlocks.len() - 1
+    }
+
+    pub fn new_flag(&mut self) -> ObjId {
+        self.flags.push(false);
+        self.flags.len() - 1
+    }
+
+    // ---- mutex ----------------------------------------------------------
+
+    /// Try to acquire; on failure the caller is queued and must block.
+    pub fn mutex_lock(&mut self, m: ObjId, pid: Pid) -> bool {
+        let mx = &mut self.mutexes[m];
+        if mx.holder.is_none() {
+            mx.holder = Some(pid);
+            mx.acquisitions += 1;
+            true
+        } else {
+            mx.contended += 1;
+            mx.waiters.push_back(pid);
+            false
+        }
+    }
+
+    /// Release; hands off to the oldest waiter and returns it for waking.
+    pub fn mutex_unlock(&mut self, m: ObjId, pid: Pid) -> Option<Pid> {
+        let mx = &mut self.mutexes[m];
+        debug_assert_eq!(mx.holder, Some(pid), "unlock by non-holder");
+        match mx.waiters.pop_front() {
+            Some(next) => {
+                mx.holder = Some(next);
+                mx.acquisitions += 1;
+                Some(next)
+            }
+            None => {
+                mx.holder = None;
+                None
+            }
+        }
+    }
+
+    // ---- condvar ---------------------------------------------------------
+
+    pub fn cond_enqueue(&mut self, c: ObjId, pid: Pid) {
+        self.conds[c].waiters.push_back(pid);
+    }
+
+    pub fn cond_signal(&mut self, c: ObjId) -> Option<Pid> {
+        self.conds[c].waiters.pop_front()
+    }
+
+    pub fn cond_broadcast(&mut self, c: ObjId) -> Vec<Pid> {
+        self.conds[c].waiters.drain(..).collect()
+    }
+
+    // ---- barrier -----------------------------------------------------------
+
+    /// Arrive at the barrier. Returns `Some(waiters)` when this arrival
+    /// releases the barrier (the arriving thread does NOT appear in the
+    /// returned list); `None` means the caller must block.
+    pub fn barrier_arrive(&mut self, b: ObjId, pid: Pid) -> Option<Vec<Pid>> {
+        let bar = &mut self.barriers[b];
+        if bar.waiting.len() + 1 >= bar.parties {
+            bar.generation += 1;
+            Some(std::mem::take(&mut bar.waiting))
+        } else {
+            bar.waiting.push(pid);
+            None
+        }
+    }
+
+    // ---- queue --------------------------------------------------------------
+
+    /// Try to push a token; returns waiters to wake on success, or queues
+    /// the caller (retry semantics) on failure.
+    pub fn queue_try_push(&mut self, q: ObjId, pid: Pid) -> Result<Option<Pid>, ()> {
+        let qu = &mut self.queues[q];
+        if qu.tokens < qu.capacity {
+            qu.tokens += 1;
+            qu.total_pushed += 1;
+            Ok(qu.pop_waiters.pop_front())
+        } else {
+            qu.push_waiters.push_back(pid);
+            Err(())
+        }
+    }
+
+    pub fn queue_try_pop(&mut self, q: ObjId, pid: Pid) -> Result<Option<Pid>, ()> {
+        let qu = &mut self.queues[q];
+        if qu.tokens > 0 {
+            qu.tokens -= 1;
+            Ok(qu.push_waiters.pop_front())
+        } else {
+            qu.pop_waiters.push_back(pid);
+            Err(())
+        }
+    }
+
+    // ---- latch ------------------------------------------------------------
+
+    /// Count down; returns all waiters when the latch opens.
+    pub fn latch_signal(&mut self, l: ObjId) -> Vec<Pid> {
+        let la = &mut self.latches[l];
+        la.count = la.count.saturating_sub(1);
+        if la.count == 0 {
+            std::mem::take(&mut la.waiters)
+        } else {
+            Vec::new()
+        }
+    }
+
+    /// Returns true if the latch is already open; otherwise queues caller.
+    pub fn latch_wait(&mut self, l: ObjId, pid: Pid) -> bool {
+        let la = &mut self.latches[l];
+        if la.count == 0 {
+            true
+        } else {
+            la.waiters.push(pid);
+            false
+        }
+    }
+
+    // ---- channel ----------------------------------------------------------
+
+    /// Post a message; returns a blocked receiver to wake, if any.
+    pub fn chan_send(&mut self, ch: ObjId) -> Option<Pid> {
+        let c = &mut self.channels[ch];
+        c.msgs += 1;
+        c.recv_waiters.pop_front()
+    }
+
+    /// Try to consume a message (true on success). On failure the caller
+    /// either blocks (queued here) or busy-spins (not queued).
+    pub fn chan_try_recv(&mut self, ch: ObjId, pid: Pid, queue_on_fail: bool) -> bool {
+        let c = &mut self.channels[ch];
+        if c.msgs > 0 {
+            c.msgs -= 1;
+            true
+        } else {
+            if queue_on_fail {
+                c.recv_waiters.push_back(pid);
+            }
+            false
+        }
+    }
+
+    // ---- rwlock -------------------------------------------------------------
+
+    /// Try to acquire (read or write). No queuing here — the interpreter
+    /// implements the InnoDB spin loop and calls [`World::rw_enqueue`]
+    /// when it gives up spinning. Writer-preferring: a parked writer
+    /// blocks new readers from barging (InnoDB's SX-latch fairness), so
+    /// aggressive reader spinning cannot starve writers.
+    pub fn rw_try(&mut self, rw: ObjId, pid: Pid, write: bool) -> bool {
+        if self.rw_granted.remove(&(rw, pid)) {
+            return true; // ownership was handed off at wake time
+        }
+        let l = &mut self.rwlocks[rw];
+        if write {
+            if l.writer.is_none() && l.readers == 0 {
+                l.writer = Some(pid);
+                true
+            } else {
+                l.contended += 1;
+                false
+            }
+        } else if l.writer.is_none() && !l.waiters.iter().any(|(_, w)| *w) {
+            l.readers += 1;
+            true
+        } else {
+            l.contended += 1;
+            false
+        }
+    }
+
+    pub fn rw_enqueue(&mut self, rw: ObjId, pid: Pid, write: bool) {
+        self.rwlocks[rw].waiters.push_back((pid, write));
+    }
+
+    /// Release; when the lock becomes free, ownership is granted directly
+    /// to the front of the queue: either the first parked writer, or the
+    /// leading run of parked readers (all admitted together). Returns the
+    /// pids to wake.
+    pub fn rw_unlock(&mut self, rw: ObjId, pid: Pid, write: bool) -> Vec<Pid> {
+        {
+            let l = &mut self.rwlocks[rw];
+            if write {
+                debug_assert_eq!(l.writer, Some(pid));
+                l.writer = None;
+            } else {
+                debug_assert!(l.readers > 0);
+                l.readers -= 1;
+                if l.readers > 0 {
+                    return Vec::new();
+                }
+            }
+        }
+        self.rw_grant_next(rw)
+    }
+
+    /// Grant the freed lock to the queue front (writer, or reader run).
+    fn rw_grant_next(&mut self, rw: ObjId) -> Vec<Pid> {
+        let mut granted = Vec::new();
+        {
+            let l = &mut self.rwlocks[rw];
+            match l.waiters.front() {
+                None => return granted,
+                Some(&(_, true)) => {
+                    let (p, _) = l.waiters.pop_front().unwrap();
+                    l.writer = Some(p);
+                    granted.push(p);
+                }
+                Some(&(_, false)) => {
+                    while let Some(&(p, w)) = l.waiters.front() {
+                        if w {
+                            break;
+                        }
+                        l.waiters.pop_front();
+                        l.readers += 1;
+                        granted.push(p);
+                    }
+                }
+            }
+        }
+        for p in &granted {
+            self.rw_granted.insert((rw, *p));
+        }
+        granted
+    }
+
+    // ---- flags / txn metrics ----------------------------------------------
+
+    pub fn set_flag(&mut self, f: ObjId) {
+        self.flags[f] = true;
+    }
+
+    pub fn flag(&self, f: ObjId) -> bool {
+        self.flags[f]
+    }
+
+    pub fn txn_start(&mut self, pid: Pid, now: Time) {
+        self.txn_start.insert(pid, now);
+    }
+
+    pub fn txn_end(&mut self, pid: Pid, now: Time) {
+        if let Some(t0) = self.txn_start.remove(&pid) {
+            self.latencies.push(now.saturating_sub(t0));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mutex_handoff_fifo() {
+        let mut w = World::new();
+        let m = w.new_mutex();
+        assert!(w.mutex_lock(m, 1));
+        assert!(!w.mutex_lock(m, 2));
+        assert!(!w.mutex_lock(m, 3));
+        assert_eq!(w.mutex_unlock(m, 1), Some(2));
+        assert_eq!(w.mutexes[m].holder, Some(2));
+        assert_eq!(w.mutex_unlock(m, 2), Some(3));
+        assert_eq!(w.mutex_unlock(m, 3), None);
+        assert!(w.mutexes[m].holder.is_none());
+        assert_eq!(w.mutexes[m].contended, 2);
+    }
+
+    #[test]
+    fn barrier_releases_at_parties() {
+        let mut w = World::new();
+        let b = w.new_barrier(3);
+        assert!(w.barrier_arrive(b, 1).is_none());
+        assert!(w.barrier_arrive(b, 2).is_none());
+        let woken = w.barrier_arrive(b, 3).unwrap();
+        assert_eq!(woken, vec![1, 2]);
+        // Reusable: next generation starts empty.
+        assert!(w.barrier_arrive(b, 4).is_none());
+        assert_eq!(w.barriers[b].generation, 1);
+    }
+
+    #[test]
+    fn queue_bounded_push_pop() {
+        let mut w = World::new();
+        let q = w.new_queue(2);
+        assert!(w.queue_try_push(q, 1).is_ok());
+        assert!(w.queue_try_push(q, 1).is_ok());
+        assert!(w.queue_try_push(q, 1).is_err()); // full; pid 1 queued
+        assert_eq!(w.queues[q].push_waiters.len(), 1);
+        // Pop frees a slot and hands the waiter back for waking.
+        let woken = w.queue_try_pop(q, 2).unwrap();
+        assert_eq!(woken, Some(1));
+    }
+
+    #[test]
+    fn queue_pop_blocks_when_empty() {
+        let mut w = World::new();
+        let q = w.new_queue(4);
+        assert!(w.queue_try_pop(q, 9).is_err());
+        let woken = w.queue_try_push(q, 1).unwrap();
+        assert_eq!(woken, Some(9));
+    }
+
+    #[test]
+    fn latch_opens_once() {
+        let mut w = World::new();
+        let l = w.new_latch(2);
+        assert!(!w.latch_wait(l, 5));
+        assert!(w.latch_signal(l).is_empty());
+        assert_eq!(w.latch_signal(l), vec![5]);
+        assert!(w.latch_wait(l, 6)); // already open
+    }
+
+    #[test]
+    fn channel_send_recv() {
+        let mut w = World::new();
+        let ch = w.new_channel();
+        assert!(!w.chan_try_recv(ch, 1, true)); // blocked receiver queued
+        assert_eq!(w.chan_send(ch), Some(1));
+        assert!(w.chan_try_recv(ch, 1, true)); // message available now
+    }
+
+    #[test]
+    fn channel_spin_mode_does_not_queue() {
+        let mut w = World::new();
+        let ch = w.new_channel();
+        assert!(!w.chan_try_recv(ch, 1, false));
+        assert_eq!(w.chan_send(ch), None); // no one to wake: spinner polls
+    }
+
+    #[test]
+    fn rwlock_readers_share_writers_exclude() {
+        let mut w = World::new();
+        let rw = w.new_rwlock();
+        assert!(w.rw_try(rw, 1, false));
+        assert!(w.rw_try(rw, 2, false));
+        assert!(!w.rw_try(rw, 3, true)); // writer blocked by readers
+        assert!(w.rw_unlock(rw, 1, false).is_empty());
+        w.rw_enqueue(rw, 3, true);
+        let woken = w.rw_unlock(rw, 2, false);
+        assert_eq!(woken, vec![3]);
+        assert!(w.rw_try(rw, 3, true));
+        assert!(!w.rw_try(rw, 4, false)); // reader blocked by writer
+        let woken2 = w.rw_unlock(rw, 3, true);
+        assert!(woken2.is_empty()); // pid 4 spun, never enqueued
+    }
+
+    #[test]
+    fn rwlock_parked_writer_blocks_new_readers() {
+        let mut w = World::new();
+        let rw = w.new_rwlock();
+        assert!(w.rw_try(rw, 1, false)); // reader in
+        assert!(!w.rw_try(rw, 2, true)); // writer fails…
+        w.rw_enqueue(rw, 2, true); // …and parks
+        assert!(!w.rw_try(rw, 3, false)); // new reader cannot barge
+        let woken = w.rw_unlock(rw, 1, false);
+        assert_eq!(woken, vec![2]); // writer gets its turn
+    }
+
+    #[test]
+    fn txn_latency_recorded() {
+        let mut w = World::new();
+        w.txn_start(1, 100);
+        w.txn_end(1, 350);
+        assert_eq!(w.latencies, vec![250]);
+    }
+}

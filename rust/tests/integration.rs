@@ -1,0 +1,357 @@
+//! Cross-module integration and property tests.
+//!
+//! Property tests use the in-crate mini-framework (`util::check`) since
+//! proptest is unavailable in the offline registry; failures report the
+//! case seed for reproduction.
+
+use gapp::gapp::{profile, run_unprofiled, GappConfig};
+use gapp::runtime::{analysis, AnalysisEngine};
+use gapp::simkernel::{Kernel, KernelConfig};
+use gapp::util::check::property;
+use gapp::workload::apps;
+
+// ---------------------------------------------------------------------
+// Property: CMetric conservation through the full probe pipeline.
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_cmetric_conservation_through_probes() {
+    property("cmetric conservation", 12, |rng| {
+        let threads = 4 + rng.pick(12);
+        let seed = rng.next_u64();
+        let app = apps::blackscholes(threads, seed);
+        let (report, kernel) = profile(
+            &app,
+            KernelConfig::default(),
+            GappConfig::default(),
+            AnalysisEngine::native(),
+        )
+        .unwrap();
+        // Σ per-thread CMetric == Σ busy wall time / ... conservation:
+        // the user-space totals must equal the serial-equivalent busy
+        // time distribution: Σ cm_j == Σ_i T_i over busy intervals, and
+        // each thread's cm ≤ its wall.
+        for t in &report.threads {
+            assert!(
+                t.cm_ms <= t.wall_ms + 1e-6,
+                "thread {} cm {} > wall {}",
+                t.pid,
+                t.cm_ms,
+                t.wall_ms
+            );
+        }
+        // Total CPU time across tasks bounds total wall attribution.
+        let total_cpu: u64 = kernel.all_tasks().map(|t| t.cpu_time).sum();
+        let total_wall: f64 = report.threads.iter().map(|t| t.wall_ms * 1e6).sum();
+        // wall counts runnable (not just running) time, so it's ≥ cpu.
+        assert!(
+            total_wall >= 0.9 * total_cpu as f64,
+            "wall {total_wall} vs cpu {total_cpu}"
+        );
+    });
+}
+
+// ---------------------------------------------------------------------
+// Property: scheduler sanity across random workload mixes.
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_scheduler_invariants_random_apps() {
+    property("scheduler invariants", 10, |rng| {
+        let names = ["canneal", "swaptions", "fluidanimate", "vips"];
+        let name = names[rng.pick(names.len())];
+        let threads = 4 + rng.pick(12);
+        let seed = rng.next_u64();
+        let app = apps::by_name(name, threads, seed).unwrap();
+        let mut k = Kernel::new(KernelConfig::default());
+        let pids = app.spawn_into(&mut k);
+        let end = k.run().unwrap();
+        assert!(end > 0);
+        for pid in pids {
+            let t = k.task(pid).unwrap();
+            // Everyone tracked exited, consumed CPU, and stayed causal.
+            assert_eq!(t.state, gapp::simkernel::TaskState::Exited, "{name}");
+            assert!(t.cpu_time > 0, "{name} pid {pid} never ran");
+            assert!(t.exited_at.unwrap() <= end);
+            assert!(t.cpu_time <= end, "cpu_time exceeds wallclock");
+        }
+    });
+}
+
+// ---------------------------------------------------------------------
+// Property: profiling never changes the workload's logical results,
+// only its timing (observer effect is bounded).
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_profiling_preserves_work_and_bounds_slowdown() {
+    property("bounded observer effect", 8, |rng| {
+        let threads = 8 + rng.pick(8);
+        let seed = rng.next_u64();
+        let mk = || apps::vips(threads, seed);
+        let (base, kb) = run_unprofiled(&mk(), KernelConfig::default()).unwrap();
+        let (report, kp) = profile(
+            &mk(),
+            KernelConfig::default(),
+            GappConfig::default(),
+            AnalysisEngine::native(),
+        )
+        .unwrap();
+        // Same amount of work happened (same spawned/exited counts).
+        assert_eq!(kb.stats.spawned, kp.stats.spawned);
+        assert_eq!(kb.stats.exited, kp.stats.exited);
+        // Profiled run stays within a sane envelope. (It can be a hair
+        // *faster*: probe delays perturb queue orderings, and a perturbed
+        // schedule occasionally dodges a convoy — a real observer effect.)
+        assert!((report.runtime_ns as f64) >= base as f64 * 0.97);
+        assert!((report.runtime_ns as f64) < base as f64 * 1.5);
+    });
+}
+
+// ---------------------------------------------------------------------
+// Property: native analysis matches a direct per-row computation for
+// arbitrary batches (the rust twin of the hypothesis sweep).
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_native_analyze_matches_direct() {
+    property("native analyze vs direct", 100, |rng| {
+        let b = 1 + rng.pick(64);
+        let ts = [8, 32, 128][rng.pick(3)];
+        let mut a = vec![0f32; b * ts];
+        let mut t = vec![0f32; b];
+        for i in 0..b {
+            t[i] = rng.below(1_000_000) as f32;
+            for j in 0..ts {
+                if rng.chance(0.2) {
+                    a[i * ts + j] = 1.0;
+                }
+            }
+        }
+        let out = analysis::native_analyze(&a, &t, ts);
+        let mut cm = vec![0f64; ts];
+        let mut gcm = 0f64;
+        for i in 0..b {
+            let n: f32 = a[i * ts..(i + 1) * ts].iter().sum();
+            if n == 0.0 {
+                continue;
+            }
+            gcm += (t[i] / n) as f64;
+            for j in 0..ts {
+                if a[i * ts + j] > 0.0 {
+                    cm[j] += (t[i] / n) as f64;
+                }
+            }
+        }
+        for j in 0..ts {
+            assert!(
+                (out.cm[j] as f64 - cm[j]).abs() <= 1e-2 + cm[j] * 1e-4,
+                "slot {j}: {} vs {}",
+                out.cm[j],
+                cm[j]
+            );
+        }
+        assert!((out.global_cm as f64 - gcm).abs() <= 1e-2 + gcm * 1e-4);
+    });
+}
+
+// ---------------------------------------------------------------------
+// Determinism: same seed → identical profile; different seed → same
+// detected bottleneck (robustness), different timings.
+// ---------------------------------------------------------------------
+
+#[test]
+fn profiles_are_deterministic_per_seed() {
+    let run = || {
+        let app = apps::dedup(9, apps::DedupConfig {
+            chunks: 120,
+            ..apps::DedupConfig::with_alloc(8, 8, 8)
+        });
+        let (r, _) = profile(
+            &app,
+            KernelConfig::default(),
+            GappConfig::default(),
+            AnalysisEngine::native(),
+        )
+        .unwrap();
+        (
+            r.runtime_ns,
+            r.total_slices,
+            r.critical_slices,
+            r.top_functions(3),
+        )
+    };
+    assert_eq!(run(), run());
+}
+
+#[test]
+fn detection_robust_across_seeds() {
+    for seed in [1u64, 2, 3] {
+        let app = apps::bodytrack(16, seed, apps::BodytrackConfig::default());
+        let (r, _) = profile(
+            &app,
+            KernelConfig::default(),
+            GappConfig {
+                dt: 200_000,
+                ..Default::default()
+            },
+            AnalysisEngine::native(),
+        )
+        .unwrap();
+        let tops = r.top_functions(2);
+        assert!(
+            tops.iter().any(|(f, _)| f.contains("RecvCmd") || f.contains("OutputBMP")),
+            "seed {seed}: top={tops:?}"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// Full pipeline on every app: no panics, non-empty reports, bounded
+// ring-buffer drops.
+// ---------------------------------------------------------------------
+
+#[test]
+fn every_app_profiles_cleanly() {
+    for name in apps::ALL_APPS {
+        let app = apps::by_name(name, 16, 5).unwrap();
+        let (r, _) = profile(
+            &app,
+            KernelConfig::default(),
+            GappConfig::default(),
+            AnalysisEngine::native(),
+        )
+        .unwrap();
+        assert!(r.total_slices > 0, "{name}: no timeslices observed");
+        assert_eq!(r.ring_dropped, 0, "{name}: ring buffer dropped records");
+        assert!(!r.threads.is_empty(), "{name}: no per-thread CMetric");
+        assert!(r.memory_bytes > 0);
+    }
+}
+
+// ---------------------------------------------------------------------
+// PIE limitation (§6.1): position-independent binaries defeat addr2line
+// but sym() still names functions.
+// ---------------------------------------------------------------------
+
+#[test]
+fn pie_binaries_degrade_to_symbol_names() {
+    let mut app = apps::blackscholes(8, 3);
+    // Rebuild the symbol table in PIE mode (the gcc default the paper
+    // overrides with -no-pie).
+    let mut symtab = (*app.symtab).clone();
+    symtab.pie = true;
+    app.symtab = std::rc::Rc::new(symtab);
+    let (r, _) = profile(
+        &app,
+        KernelConfig::default(),
+        GappConfig::default(),
+        AnalysisEngine::native(),
+    )
+    .unwrap();
+    // Bottlenecks still found; rendered samples have no file:line but
+    // carry the bare symbol name fallback.
+    assert!(!r.bottlenecks.is_empty());
+    for b in &r.bottlenecks {
+        for s in &b.samples {
+            assert!(
+                !s.rendered.contains(".c:"),
+                "PIE run leaked a line mapping: {}",
+                s.rendered
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Ring-buffer sizing: a deliberately tiny buffer drops records and the
+// report says so (perf-buffer tuning failure mode).
+// ---------------------------------------------------------------------
+
+#[test]
+fn tiny_ring_buffer_reports_drops() {
+    let app = apps::streamcluster(16, 3);
+    let (r, _) = profile(
+        &app,
+        KernelConfig::default(),
+        GappConfig {
+            ring_capacity: 64,
+            drain_threshold: usize::MAX, // never drain mid-run
+            ..Default::default()
+        },
+        AnalysisEngine::native(),
+    )
+    .unwrap();
+    assert!(r.ring_dropped > 0);
+}
+
+// ---------------------------------------------------------------------
+// §7 extension: bottleneck classification + waker attribution.
+// ---------------------------------------------------------------------
+
+#[test]
+fn classification_labels_match_mechanisms() {
+    use gapp::gapp::classify::BottleneckClass;
+    // Fluidanimate's top bottleneck is the barrier → Imbalance.
+    let app = apps::fluidanimate(16, 2);
+    let (r, _) = profile(
+        &app,
+        KernelConfig::default(),
+        GappConfig::default(),
+        AnalysisEngine::native(),
+    )
+    .unwrap();
+    let classes: Vec<_> = r.bottlenecks.iter().map(|b| b.class).collect();
+    assert!(
+        classes.contains(&BottleneckClass::Imbalance),
+        "fluidanimate classes: {classes:?}"
+    );
+
+    // MySQL's flush path is I/O; its rwlock path is Synchronization.
+    let app = apps::mysql(16, 41, apps::MysqlConfig::default());
+    let (r, _) = profile(
+        &app,
+        KernelConfig::default(),
+        GappConfig::default(),
+        AnalysisEngine::native(),
+    )
+    .unwrap();
+    let classes: Vec<_> = r.bottlenecks.iter().map(|b| b.class).collect();
+    assert!(
+        classes.iter().any(|c| matches!(
+            c,
+            BottleneckClass::Io | BottleneckClass::Synchronization
+        )),
+        "mysql classes: {classes:?}"
+    );
+}
+
+#[test]
+fn waker_attribution_names_the_parent_in_bodytrack() {
+    // Workers waiting in NotifyDone/RecvCmd are gated by the parent
+    // thread ("bodytrack") — the §7 critical-waker analysis should name
+    // it on at least one worker-side bottleneck path.
+    let app = apps::bodytrack(16, 21, apps::BodytrackConfig::default());
+    let (r, _) = profile(
+        &app,
+        KernelConfig::default(),
+        GappConfig {
+            dt: 200_000,
+            ..Default::default()
+        },
+        AnalysisEngine::native(),
+    )
+    .unwrap();
+    let worker_paths_with_wakers: Vec<_> = r
+        .bottlenecks
+        .iter()
+        .filter(|b| b.call_path.iter().any(|f| f.contains("WorkerThread")))
+        .flat_map(|b| b.top_wakers.iter())
+        .collect();
+    assert!(
+        worker_paths_with_wakers
+            .iter()
+            .any(|(comm, _)| comm == "bodytrack" || comm.starts_with("bodytrack-w")),
+        "wakers: {worker_paths_with_wakers:?}"
+    );
+}

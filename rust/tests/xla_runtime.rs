@@ -1,0 +1,99 @@
+//! End-to-end AOT integration: load the jax/Pallas-lowered HLO artifacts
+//! via PJRT, execute them from Rust, and check them against the native
+//! twin — the numeric proof that all three layers compose.
+//!
+//! These tests are skipped (not failed) when `artifacts/` has not been
+//! built yet: run `make artifacts` first.
+
+use gapp::runtime::{analysis, AnalysisEngine, XlaEngine, BATCH, T_SLOTS};
+use gapp::util::Prng;
+
+fn artifacts_present() -> bool {
+    gapp::runtime::artifacts_dir()
+        .join(format!("cmetric_b{BATCH}_t{T_SLOTS}.hlo.txt"))
+        .exists()
+}
+
+fn random_batch(seed: u64) -> (Vec<f32>, Vec<f32>) {
+    let mut rng = Prng::new(seed);
+    let a: Vec<f32> = (0..BATCH * T_SLOTS)
+        .map(|_| if rng.chance(0.07) { 1.0 } else { 0.0 })
+        .collect();
+    let t: Vec<f32> = (0..BATCH).map(|_| rng.exp(2e6) as f32).collect();
+    (a, t)
+}
+
+#[test]
+fn xla_analyze_matches_native() {
+    if !artifacts_present() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let mut e = XlaEngine::load(&gapp::runtime::artifacts_dir()).expect("load artifacts");
+    for seed in [1u64, 7, 42] {
+        let (a, t) = random_batch(seed);
+        let xla = e.analyze(&a, &t).expect("xla analyze");
+        let nat = analysis::native_analyze(&a, &t, T_SLOTS);
+        for j in 0..T_SLOTS {
+            let rel = (xla.cm[j] - nat.cm[j]).abs() / nat.cm[j].abs().max(1.0);
+            assert!(rel < 1e-3, "cm[{j}]: {} vs {}", xla.cm[j], nat.cm[j]);
+            let relw = (xla.wall[j] - nat.wall[j]).abs() / nat.wall[j].abs().max(1.0);
+            assert!(relw < 1e-3, "wall[{j}]");
+        }
+        let relg =
+            (xla.global_cm - nat.global_cm).abs() / nat.global_cm.abs().max(1.0);
+        assert!(relg < 1e-3, "gcm: {} vs {}", xla.global_cm, nat.global_cm);
+    }
+}
+
+#[test]
+fn xla_rank_matches_native() {
+    if !artifacts_present() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let mut e = XlaEngine::load(&gapp::runtime::artifacts_dir()).expect("load artifacts");
+    let mut rng = Prng::new(9);
+    let scores: Vec<f32> = (0..1024).map(|_| rng.exp(1e6) as f32).collect();
+    let xla = e.rank(&scores).expect("xla rank");
+    let nat = analysis::native_rank(&scores, 16);
+    assert_eq!(xla.len(), nat.len());
+    for (x, n) in xla.iter().zip(&nat) {
+        assert_eq!(x.0, n.0, "index mismatch: {xla:?} vs {nat:?}");
+        assert!((x.1 - n.1).abs() < 1e-3);
+    }
+}
+
+#[test]
+fn full_profile_with_xla_backend_matches_kernel_cm_hash() {
+    if !artifacts_present() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    use gapp::gapp::{GappConfig, GappSession};
+    use gapp::simkernel::{Kernel, KernelConfig};
+    use gapp::workload::apps;
+
+    let app = apps::canneal(8, 5);
+    let engine = AnalysisEngine::xla().expect("xla engine");
+    assert_eq!(engine.backend_name(), "xla");
+    let session = GappSession::new(GappConfig::default(), 64, engine).unwrap();
+    let mut kernel = Kernel::new(KernelConfig::default());
+    kernel.attach_probe(session.probe());
+    app.spawn_into(&mut kernel);
+    let end = kernel.run().unwrap();
+    let report = session.finish(&app, &kernel, end);
+    assert_eq!(report.backend, "xla");
+    assert!(!report.threads.is_empty());
+    let core = session.core.borrow();
+    for t in &report.threads {
+        let kernel_cm = core.kernel.cm_hash_ns.get(&t.pid).copied().unwrap_or(0.0);
+        let user_cm = t.cm_ms * 1e6;
+        let rel = (kernel_cm - user_cm).abs() / kernel_cm.max(1.0);
+        assert!(
+            rel < 0.02,
+            "pid {}: kernel {kernel_cm:.0} vs xla {user_cm:.0} (rel {rel:.4})",
+            t.pid
+        );
+    }
+}
