@@ -1,14 +1,18 @@
 //! Hot-path microbenches for the §Perf pass: the simulated kernel's
-//! event loop, the probe fast path, the ring buffer, the batched
-//! analysis engine (native vs XLA), merge, and symbolization.
+//! event loop, the probe fast path (per-event `handle()` cost), the
+//! ring buffer, stack interning, the batched analysis engine (native vs
+//! XLA), merge, and symbolization.
 //!
 //! `cargo bench --bench bench_hotpath -- <filter>`
+//!
+//! `Bench::finish` writes `BENCH_hotpath.json` at the repo root so the
+//! perf trajectory of these numbers is tracked across PRs.
 
-use gapp::ebpf::RingBuf;
+use gapp::ebpf::{RingBuf, StackMap};
 use gapp::gapp::records::{mask_set, Record, SlotMask};
 use gapp::gapp::{profile, GappConfig};
 use gapp::runtime::{analysis, AnalysisEngine, BATCH, T_SLOTS};
-use gapp::simkernel::KernelConfig;
+use gapp::simkernel::{KernelConfig, TaskState, WaitKind};
 use gapp::util::bench::{sink, Bench};
 use gapp::util::Prng;
 use gapp::workload::apps;
@@ -20,6 +24,22 @@ fn random_batch(seed: u64) -> (Vec<f32>, Vec<f32>) {
         .collect();
     let t: Vec<f32> = (0..BATCH).map(|_| rng.exp(2e6) as f32).collect();
     (a, t)
+}
+
+/// Probes preloaded with `nthreads` registered app threads.
+fn loaded_probes(nmin: f64, nthreads: u32) -> gapp::gapp::probes::KernelProbes {
+    let mut p = gapp::gapp::probes::KernelProbes::new(
+        GappConfig {
+            nmin: Some(nmin),
+            ..Default::default()
+        },
+        4,
+    )
+    .unwrap();
+    for pid in 1..=nthreads {
+        p.on_task_new(pid, 0);
+    }
+    p
 }
 
 fn main() {
@@ -47,6 +67,76 @@ fn main() {
             .runtime_ns,
         );
     });
+
+    // --- probe handlers: per-event cost ---------------------------------
+    // Discard path (nmin=1 → no slice is ever critical).
+    {
+        let mut p = loaded_probes(1.0, 8);
+        let stack = [0x40_0000u64, 0x40_1000, 0x40_2000, 0x40_3000];
+        let mut now = 0u64;
+        let mut i = 0u64;
+        b.bench_items("probe_switch_discard_4096", 4096, || {
+            for _ in 0..4096 {
+                now += 1_000;
+                let prev = 1 + (i % 8) as u32;
+                let next = 1 + ((i + 1) % 8) as u32;
+                sink(p.on_switch(
+                    now,
+                    0,
+                    prev,
+                    TaskState::Runnable,
+                    next,
+                    0xAB,
+                    &stack,
+                    WaitKind::Futex,
+                ));
+                i += 1;
+            }
+            while p.ring.pop().is_some() {}
+        });
+    }
+    // Critical path (nmin high → every slice captures + interns a stack).
+    {
+        let mut p = loaded_probes(64.0, 8);
+        let stacks: Vec<[u64; 4]> = (0..32u64)
+            .map(|s| [0x40_0000, 0x40_1000 + s * 64, 0x40_2000, 0x40_3000 + s])
+            .collect();
+        let mut now = 0u64;
+        let mut i = 0u64;
+        b.bench_items("probe_switch_critical_4096", 4096, || {
+            for _ in 0..4096 {
+                now += 1_000;
+                let prev = 1 + (i % 8) as u32;
+                let next = 1 + ((i + 1) % 8) as u32;
+                sink(p.on_switch(
+                    now,
+                    0,
+                    prev,
+                    TaskState::Runnable,
+                    next,
+                    0xAB,
+                    &stacks[(i % 32) as usize],
+                    WaitKind::Futex,
+                ));
+                i += 1;
+            }
+            while p.ring.pop().is_some() {}
+        });
+    }
+
+    // --- eBPF stack map: intern + resolve -------------------------------
+    {
+        let mut sm = StackMap::new("bench_stacks", 1 << 14);
+        let stacks: Vec<Vec<u64>> = (0..256u64)
+            .map(|s| (0..8).map(|d| 0x40_0000 + s * 4096 + d * 8).collect())
+            .collect();
+        b.bench_items("stackmap_intern_resolve_4096", 4096, || {
+            for i in 0..4096u64 {
+                let id = sm.intern(&stacks[(i % 256) as usize]);
+                sink(sm.resolve(id).len());
+            }
+        });
+    }
 
     // --- eBPF ring buffer ----------------------------------------------
     let mut rb: RingBuf<Record> = RingBuf::new(1 << 16);
@@ -108,8 +198,9 @@ fn main() {
                 cm_ns: (i % 977) as f64,
                 threads_av: 1.0,
                 ip: 0x40_0000 + (i % 40) * 16,
-                stack: vec![0x40_0000, 0x40_1000 + (i % 8) * 4096],
-                wait: gapp::simkernel::WaitKind::Futex,
+                stack_id: (i % 8) as u32,
+                stack_top: 0x40_1000 + (i % 8) * 4096,
+                wait: WaitKind::Futex,
                 woken_by: ((i + 1) % 64) as u32,
             });
         }

@@ -17,6 +17,7 @@ fn cfg() -> BenchConfig {
         min_samples: 2,
         min_time: std::time::Duration::from_millis(1),
         batch: 1,
+        ..Default::default()
     }
 }
 

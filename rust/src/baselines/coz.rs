@@ -60,7 +60,7 @@ pub struct CozProbeHandle {
 }
 
 impl Probe for CozProbeHandle {
-    fn on_event(&mut self, ev: &Event) -> u64 {
+    fn on_event(&mut self, ev: &Event<'_>) -> u64 {
         let Event::SampleTick { time, view } = ev else {
             return 100;
         };

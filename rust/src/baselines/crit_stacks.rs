@@ -46,7 +46,7 @@ pub struct CritStacksProbeHandle {
 }
 
 impl Probe for CritStacksProbeHandle {
-    fn on_event(&mut self, ev: &Event) -> u64 {
+    fn on_event(&mut self, ev: &Event<'_>) -> u64 {
         let mut s = self.state.borrow_mut();
         match ev {
             Event::TaskNew { pid, .. } => {

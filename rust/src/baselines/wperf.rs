@@ -126,7 +126,7 @@ pub struct WPerfProbeHandle {
 }
 
 impl Probe for WPerfProbeHandle {
-    fn on_event(&mut self, ev: &Event) -> u64 {
+    fn on_event(&mut self, ev: &Event<'_>) -> u64 {
         let mut s = self.state.borrow_mut();
         s.events += 1;
         match ev {
@@ -140,8 +140,10 @@ impl Probe for WPerfProbeHandle {
                 ..
             } => {
                 if *prev_state == TaskState::Blocked && *prev_pid != 0 {
+                    // Events borrow the stack; wPerf keeps per-segment
+                    // copies (the memory cost §6 attributes to it).
                     s.blocked
-                        .insert(*prev_pid, (*time, prev_stack.clone()));
+                        .insert(*prev_pid, (*time, prev_stack.to_vec()));
                 }
                 if *cpu < s.running.len() {
                     s.running[*cpu] = *next_pid;

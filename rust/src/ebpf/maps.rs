@@ -5,13 +5,17 @@
 //! their own byte footprint so the profiler can report the paper's memory
 //! column (M) from mechanism rather than guesswork.
 
-use std::collections::HashMap;
+use crate::util::fxhash::FxHashMap;
 
 /// A BPF_MAP_TYPE_HASH with u64 keys and values.
+///
+/// Backed by an [`FxHashMap`]: the kernel's htab uses a cheap jhash, not
+/// a keyed SipHash, and these maps sit on the per-event probe hot path
+/// (`thread_list` is consulted on every sched_switch).
 #[derive(Debug, Default)]
 pub struct HashMap64 {
     name: &'static str,
-    inner: HashMap<u64, u64>,
+    inner: FxHashMap<u64, u64>,
     /// High-water mark of entries, for memory accounting.
     peak: usize,
 }
@@ -20,7 +24,7 @@ impl HashMap64 {
     pub fn new(name: &'static str) -> HashMap64 {
         HashMap64 {
             name,
-            inner: HashMap::new(),
+            inner: FxHashMap::default(),
             peak: 0,
         }
     }

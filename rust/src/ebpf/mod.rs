@@ -10,8 +10,12 @@
 //!   byte-accounting (the paper's memory column M).
 //! * [`ringbuf`] — the bounded circular buffer kernel probes write and the
 //!   user-space probe drains; overflow drops records, as perf buffers do.
+//! * [`stackmap`] — the `BPF_MAP_TYPE_STACK_TRACE` analogue: probes intern
+//!   walked stacks to dense `u32` ids at capture time so ring records stay
+//!   fixed-size POD; user space resolves ids only at report time.
 //! * [`verifier`] — a verifier-lite enforcing the static resource bounds
-//!   eBPF would (map counts/sizes, stack-capture depth, sampling period).
+//!   eBPF would (map counts/sizes, stack-capture depth and stack-map
+//!   capacity, sampling period).
 //!
 //! Probe *cost* is not modeled here — it is charged by the simulated
 //! kernel when probes return their handler cost (see
@@ -19,8 +23,10 @@
 
 pub mod maps;
 pub mod ringbuf;
+pub mod stackmap;
 pub mod verifier;
 
 pub use maps::{HashMap64, PerCpuScalar, Scalar};
 pub use ringbuf::{RingBuf, RingBufStats};
+pub use stackmap::{StackMap, StackMapStats, STACK_ID_DROPPED};
 pub use verifier::{ProgramSpec, Verifier, VerifierError};

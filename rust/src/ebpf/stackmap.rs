@@ -1,0 +1,213 @@
+//! Stack-trace interning map — the analogue of `BPF_MAP_TYPE_STACK_TRACE`.
+//!
+//! The real GAPP never ships raw stacks through the perf buffer: the
+//! `sched_switch` probe calls `bpf_get_stackid()`, which walks the
+//! stack, hashes the frames and stores them in a bounded kernel map,
+//! returning a small integer id. Ring-buffer records then carry the id
+//! (4 bytes) instead of up to 127 frames, and user space resolves ids
+//! back to frames only when a call path actually reaches the report.
+//! That interning is a big part of the paper's ~4% overhead claim.
+//!
+//! This map reproduces the mechanism: frames are stored once in a flat
+//! arena, an FxHash bucket index (hash → chain of candidate ids) gives
+//! O(1) expected lookup with exact frame comparison, and capacity is
+//! bounded — once `max_entries` distinct stacks exist, further *new*
+//! stacks are dropped and counted (the `bpf_get_stackid` failure mode a
+//! deployment tunes `max_entries` against), while known stacks keep
+//! resolving. Ids are dense (0, 1, 2, …) in first-capture order, so the
+//! user-space merge can group by id with a dense table.
+
+use crate::util::fxhash::{hash_words, FxHashMap};
+
+/// Sentinel id returned when the map is full and the stack is new
+/// (mirrors `bpf_get_stackid()` returning `-ENOMEM`). Resolves to an
+/// empty frame slice.
+pub const STACK_ID_DROPPED: u32 = u32::MAX;
+
+const NO_NEXT: u32 = u32::MAX;
+
+/// Hit/insert/drop counters for one stack map.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StackMapStats {
+    /// Lookups that found an existing id.
+    pub hits: u64,
+    /// New stacks interned.
+    pub inserts: u64,
+    /// New stacks dropped because the map was full.
+    pub drops: u64,
+}
+
+/// Bounded stack-trace interner: `&[u64]` frames → dense `u32` id.
+#[derive(Debug)]
+pub struct StackMap {
+    name: &'static str,
+    max_entries: usize,
+    /// Flat frame arena; spans index into it.
+    frames: Vec<u64>,
+    /// id → (offset, len) into `frames`.
+    spans: Vec<(u32, u32)>,
+    /// id → next id in the same hash bucket (NO_NEXT terminates).
+    chain: Vec<u32>,
+    /// frame-hash → chain head id.
+    heads: FxHashMap<u64, u32>,
+    pub stats: StackMapStats,
+}
+
+impl StackMap {
+    pub fn new(name: &'static str, max_entries: usize) -> StackMap {
+        StackMap {
+            name,
+            max_entries,
+            frames: Vec::new(),
+            spans: Vec::new(),
+            chain: Vec::new(),
+            heads: FxHashMap::default(),
+            stats: StackMapStats::default(),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+
+    /// Intern a stack, returning its id — an existing id when the exact
+    /// frame sequence was seen before, a fresh dense id otherwise, or
+    /// [`STACK_ID_DROPPED`] when the map is at capacity. The steady-state
+    /// path (known stack) performs no allocation.
+    pub fn intern(&mut self, stack: &[u64]) -> u32 {
+        let h = hash_words(stack);
+        let mut cur = self.heads.get(&h).copied();
+        while let Some(id) = cur {
+            if self.frames_of(id) == stack {
+                self.stats.hits += 1;
+                return id;
+            }
+            let next = self.chain[id as usize];
+            cur = if next == NO_NEXT { None } else { Some(next) };
+        }
+        if self.spans.len() >= self.max_entries || self.frames.len() > u32::MAX as usize
+        {
+            self.stats.drops += 1;
+            return STACK_ID_DROPPED;
+        }
+        let id = self.spans.len() as u32;
+        let offset = self.frames.len() as u32;
+        self.frames.extend_from_slice(stack);
+        self.spans.push((offset, stack.len() as u32));
+        // Link into the bucket chain (new entry becomes the head).
+        let prev_head = self.heads.insert(h, id).unwrap_or(NO_NEXT);
+        self.chain.push(prev_head);
+        self.stats.inserts += 1;
+        id
+    }
+
+    /// Resolve an id back to its frames; unknown or dropped ids resolve
+    /// to the empty slice.
+    #[inline]
+    pub fn resolve(&self, id: u32) -> &[u64] {
+        match self.spans.get(id as usize) {
+            Some(&(off, len)) => &self.frames[off as usize..(off + len) as usize],
+            None => &[],
+        }
+    }
+
+    fn frames_of(&self, id: u32) -> &[u64] {
+        let (off, len) = self.spans[id as usize];
+        &self.frames[off as usize..(off + len) as usize]
+    }
+
+    /// Number of distinct stacks interned.
+    pub fn len(&self) -> usize {
+        self.spans.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.spans.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.max_entries
+    }
+
+    /// Current storage footprint: arena + spans + chain + bucket index
+    /// (≈32 B of `HashMap` overhead per bucket entry).
+    pub fn bytes(&self) -> u64 {
+        (self.frames.len() * 8 + self.spans.len() * 8 + self.chain.len() * 4) as u64
+            + (self.heads.len() as u64) * 32
+    }
+
+    /// Static admission estimate for the verifier: what a fully-loaded
+    /// map of `entries` stacks at capture depth `depth` would occupy.
+    pub fn bytes_for(entries: usize, depth: usize) -> u64 {
+        (entries as u64) * (depth as u64 * 8 + 44)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn interns_and_resolves() {
+        let mut m = StackMap::new("stacks", 16);
+        let a = m.intern(&[0x100, 0x200, 0x300]);
+        let b = m.intern(&[0x100, 0x200, 0x300]);
+        let c = m.intern(&[0x100, 0x200]);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert_eq!(m.resolve(a), &[0x100, 0x200, 0x300]);
+        assert_eq!(m.resolve(c), &[0x100, 0x200]);
+        assert_eq!(m.len(), 2);
+        assert_eq!(m.stats.hits, 1);
+        assert_eq!(m.stats.inserts, 2);
+        assert_eq!(m.stats.drops, 0);
+    }
+
+    #[test]
+    fn ids_are_dense_in_first_capture_order() {
+        let mut m = StackMap::new("stacks", 16);
+        for i in 0..5u64 {
+            assert_eq!(m.intern(&[i]), i as u32);
+        }
+    }
+
+    #[test]
+    fn empty_stack_is_a_valid_entry() {
+        let mut m = StackMap::new("stacks", 4);
+        let id = m.intern(&[]);
+        assert_eq!(m.resolve(id), &[] as &[u64]);
+        assert_eq!(m.intern(&[]), id);
+    }
+
+    #[test]
+    fn capacity_drops_new_stacks_but_keeps_old_ones() {
+        let mut m = StackMap::new("stacks", 2);
+        let a = m.intern(&[1]);
+        let b = m.intern(&[2]);
+        let d = m.intern(&[3]); // full → dropped
+        assert_eq!(d, STACK_ID_DROPPED);
+        assert_eq!(m.stats.drops, 1);
+        // Known stacks still hit.
+        assert_eq!(m.intern(&[1]), a);
+        assert_eq!(m.intern(&[2]), b);
+        // The sentinel resolves to nothing.
+        assert_eq!(m.resolve(STACK_ID_DROPPED), &[] as &[u64]);
+    }
+
+    #[test]
+    fn colliding_bucket_chains_stay_exact() {
+        // Force many entries through; exactness must hold regardless of
+        // how FxHash buckets them.
+        let mut m = StackMap::new("stacks", 4096);
+        let mut ids = Vec::new();
+        for i in 0..1000u64 {
+            ids.push(m.intern(&[i, i ^ 0xABCD, i.wrapping_mul(31)]));
+        }
+        for (i, id) in ids.iter().enumerate() {
+            let i = i as u64;
+            assert_eq!(m.resolve(*id), &[i, i ^ 0xABCD, i.wrapping_mul(31)]);
+        }
+        assert!(m.bytes() > 0);
+        assert!(StackMap::bytes_for(1000, 3) >= 1000 * 24);
+    }
+}

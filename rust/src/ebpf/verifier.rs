@@ -23,6 +23,9 @@ pub struct ProgramSpec {
     pub ringbuf_records: usize,
     /// Deepest stack capture requested (the paper's M).
     pub stack_depth: usize,
+    /// Capacity of the stack-trace interning map in distinct stacks
+    /// (`BPF_MAP_TYPE_STACK_TRACE` max_entries); 0 = no stack map.
+    pub stack_map_entries: usize,
     /// Sampling period requested, if any (the paper's Δt).
     pub sample_period_ns: Option<u64>,
     /// Upper bound on instructions per handler invocation (loop-free
@@ -37,6 +40,7 @@ pub enum VerifierError {
     MapBytesExceeded { got: u64, limit: u64 },
     RingBufTooLarge { got: usize, limit: usize },
     StackDepthExceeded { got: usize, limit: usize },
+    StackMapTooLarge { got: usize, limit: usize },
     SamplePeriodTooSmall { got: u64, floor: u64 },
     ProgramTooLong { got: u32, limit: u32 },
     ZeroInstructionProgram,
@@ -56,6 +60,9 @@ impl fmt::Display for VerifierError {
             }
             VerifierError::StackDepthExceeded { got, limit } => {
                 write!(f, "stack capture depth {got} exceeds {limit}")
+            }
+            VerifierError::StackMapTooLarge { got, limit } => {
+                write!(f, "stack map capacity {got} entries exceeds {limit}")
             }
             VerifierError::SamplePeriodTooSmall { got, floor } => {
                 write!(f, "sampling period {got} ns below floor {floor} ns")
@@ -80,6 +87,8 @@ pub struct Verifier {
     pub max_map_bytes: u64,
     pub max_ringbuf_records: usize,
     pub max_stack_depth: usize,
+    /// Cap on stack-map capacity (distinct interned stacks).
+    pub max_stack_map_entries: usize,
     /// Floor on Δt: sampling faster than this would dominate runtime.
     pub min_sample_period_ns: u64,
     pub max_insns: u32,
@@ -92,6 +101,7 @@ impl Default for Verifier {
             max_map_bytes: 1 << 30,       // 1 GB of map storage
             max_ringbuf_records: 1 << 24, // 16M records
             max_stack_depth: 127,         // PERF_MAX_STACK_DEPTH
+            max_stack_map_entries: 1 << 20, // 1M distinct stacks
             min_sample_period_ns: 10_000, // 10 µs
             max_insns: 1_000_000,         // BPF_COMPLEXITY_LIMIT_INSNS
         }
@@ -128,6 +138,12 @@ impl Verifier {
                 limit: self.max_stack_depth,
             });
         }
+        if spec.stack_map_entries > self.max_stack_map_entries {
+            return Err(VerifierError::StackMapTooLarge {
+                got: spec.stack_map_entries,
+                limit: self.max_stack_map_entries,
+            });
+        }
         if let Some(p) = spec.sample_period_ns {
             if p < self.min_sample_period_ns {
                 return Err(VerifierError::SamplePeriodTooSmall {
@@ -157,6 +173,7 @@ mod tests {
             map_bytes: 1 << 20,
             ringbuf_records: 1 << 16,
             stack_depth: 16,
+            stack_map_entries: 1 << 14,
             sample_period_ns: Some(3_000_000),
             max_insns: 4096,
         }
@@ -182,6 +199,15 @@ mod tests {
         let e = Verifier::default().check(&s).unwrap_err();
         assert!(matches!(e, VerifierError::SamplePeriodTooSmall { .. }));
         assert!(e.to_string().contains("sampling period"));
+    }
+
+    #[test]
+    fn rejects_oversized_stack_map() {
+        let mut s = ok_spec();
+        s.stack_map_entries = 1 << 22;
+        let e = Verifier::default().check(&s).unwrap_err();
+        assert!(matches!(e, VerifierError::StackMapTooLarge { .. }));
+        assert!(e.to_string().contains("stack map"));
     }
 
     #[test]

@@ -77,14 +77,14 @@ pub fn top_wakers(path: &MergedPath, n: usize) -> Vec<(u32, u64)> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::collections::HashMap;
+    use crate::util::FxHashMap;
 
     fn path(waits: &[(WaitKind, u64)], wakers: &[(u32, u64)]) -> MergedPath {
         MergedPath {
-            stack: vec![1],
+            stack_id: 0,
             total_cm_ns: 1.0,
             slices: waits.iter().map(|(_, n)| n).sum(),
-            addr_freq: HashMap::new(),
+            addr_freq: FxHashMap::default(),
             stack_top_samples: 0,
             wait_hist: waits.iter().copied().collect(),
             wakers: wakers.iter().copied().collect(),

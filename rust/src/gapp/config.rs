@@ -16,6 +16,9 @@ pub struct GappConfig {
     pub top_n: usize,
     /// Ring-buffer capacity (records).
     pub ring_capacity: usize,
+    /// Stack-trace map capacity: distinct critical-slice call paths the
+    /// kernel can intern before new stacks are dropped (and counted).
+    pub stack_map_entries: usize,
     /// Drain the ring buffer into the user-space engine when it holds at
     /// least this many records (the paper's concurrent user probe).
     pub drain_threshold: usize,
@@ -29,6 +32,7 @@ impl Default for GappConfig {
             stack_depth: 16,
             top_n: 5,
             ring_capacity: 1 << 20,
+            stack_map_entries: 1 << 14,
             drain_threshold: 1 << 14,
         }
     }

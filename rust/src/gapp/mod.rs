@@ -51,7 +51,7 @@ pub struct GappProbeHandle {
 }
 
 impl Probe for GappProbeHandle {
-    fn on_event(&mut self, ev: &Event) -> u64 {
+    fn on_event(&mut self, ev: &Event<'_>) -> u64 {
         let mut core = self.core.borrow_mut();
         let cost = core.kernel.handle(ev);
         // The user-space probe drains the buffer concurrently with the
@@ -113,6 +113,9 @@ impl GappSession {
                 let mut samples: Vec<(u64, u64)> =
                     m.addr_freq.iter().map(|(a, c)| (*a, *c)).collect();
                 samples.sort_by(|x, y| y.1.cmp(&x.1).then(x.0.cmp(&y.0)));
+                // Resolve the interned stack id back to frames — the only
+                // point in the pipeline where ids become call paths.
+                let frames = core.kernel.stacks.resolve(m.stack_id);
                 Bottleneck {
                     rank: i + 1,
                     total_cm_ms: m.total_cm_ns / 1e6,
@@ -128,7 +131,7 @@ impl GappSession {
                             (comm, n)
                         })
                         .collect(),
-                    call_path: sym.render_path(&m.stack),
+                    call_path: sym.render_path(frames),
                     samples: samples
                         .into_iter()
                         .map(|(a, c)| SampleLine {
@@ -147,24 +150,25 @@ impl GappSession {
             })
             .collect();
 
-        // Per-thread CMetric totals (Figures 4/5).
-        let mut threads: Vec<ThreadCm> = core
+        // Per-thread CMetric totals (Figures 4/5). PidMap iteration is
+        // already ascending by pid.
+        let threads: Vec<ThreadCm> = core
             .user
             .totals
             .iter()
             .map(|(pid, t)| ThreadCm {
-                pid: *pid,
+                pid,
                 comm: kernel
-                    .task(*pid)
+                    .task(pid)
                     .map(|t| t.comm.clone())
                     .unwrap_or_default(),
                 cm_ms: t.cm_ns / 1e6,
                 wall_ms: t.wall_ns / 1e6,
             })
             .collect();
-        threads.sort_by_key(|t| t.pid);
 
         let stats = core.kernel.stats.clone();
+        let sstats = core.kernel.stacks.stats;
         Report {
             app: app.name.clone(),
             backend: core.user.backend_name(),
@@ -176,6 +180,8 @@ impl GappSession {
             samples: stats.samples_recorded,
             intervals: stats.intervals_emitted,
             ring_dropped: core.kernel.ring.stats.dropped,
+            stack_ids: sstats.inserts,
+            stack_drops: sstats.drops,
             memory_bytes: core.kernel.memory_bytes() + core.user.memory_bytes(),
             ppt_seconds: ppt_start.elapsed().as_secs_f64(),
             probe_cost_ns: kernel.stats.probe_ns,
@@ -265,7 +271,7 @@ mod tests {
         assert!(!report.threads.is_empty());
         let core = session.core.borrow();
         for t in &report.threads {
-            let kernel_cm = core.kernel.cm_hash_ns.get(&t.pid).copied().unwrap_or(0.0);
+            let kernel_cm = core.kernel.cm_hash(t.pid);
             let user_cm = t.cm_ms * 1e6;
             let rel = (kernel_cm - user_cm).abs() / kernel_cm.max(1.0);
             assert!(

@@ -5,12 +5,20 @@
 //! Each handler returns its cost (ns), which the simulated kernel
 //! charges to the CPU that fired the event — the paper's overhead column
 //! is therefore an *output* of this cost model, not an input.
+//!
+//! The handlers are allocation-free on the steady-state path: per-pid
+//! state lives in dense [`PidMap`] tables (no hashing), critical-slice
+//! stacks are interned to `u32` ids through the bounded [`StackMap`]
+//! (`bpf_get_stackid()`), and every ring-buffer record is fixed-size
+//! `Copy` POD.
 
 use crate::ebpf::maps::{HashMap64, Scalar};
 use crate::ebpf::ringbuf::RingBuf;
+use crate::ebpf::stackmap::StackMap;
 use crate::ebpf::verifier::{ProgramSpec, Verifier};
 use crate::simkernel::tracepoint::cost;
 use crate::simkernel::{Event, Pid, TaskState, Time, WaitKind};
+use crate::util::PidMap;
 
 use super::config::GappConfig;
 use super::records::{mask_clear, mask_count, mask_set, Record, SlotMask};
@@ -37,7 +45,8 @@ pub struct KernelProbes {
     pub thread_list: HashMap64,
     /// pid → accumulated CMetric (ns) — the paper's in-kernel cm_hash.
     /// Kept alongside the XLA path as the cross-check reference.
-    pub cm_hash_ns: std::collections::HashMap<Pid, f64>,
+    /// Dense pid-indexed table (no hashing on the hot path).
+    cm_ns: PidMap<f64>,
     /// Number of active application threads right now.
     pub thread_count: Scalar,
     /// Total application threads alive.
@@ -53,16 +62,21 @@ pub struct KernelProbes {
     local_cm: Vec<f64>,
     /// Per-CPU: switch-in time of the current app thread's timeslice.
     slice_start: Vec<Time>,
+    // ---- stack interning ------------------------------------------------
+    /// Bounded stack-trace interner (BPF_MAP_TYPE_STACK_TRACE): walked
+    /// stacks become `u32` ids at capture time; user space resolves ids
+    /// back to frames only at report time.
+    pub stacks: StackMap,
     // ---- slots ---------------------------------------------------------
-    slot_of: std::collections::HashMap<Pid, usize>,
+    slot_of: PidMap<usize>,
     free_slots: Vec<usize>,
     active_mask: SlotMask,
     /// Threads that exited but whose final timeslice is still open.
-    exiting: std::collections::HashSet<Pid>,
+    exiting: PidMap<()>,
     /// Task currently on each CPU (to attribute wakers, §7 extension).
     running: Vec<Pid>,
     /// pid → thread that issued its most recent wakeup.
-    last_waker: std::collections::HashMap<Pid, Pid>,
+    last_waker: PidMap<Pid>,
     /// Per-CPU: waker of the thread currently in its timeslice.
     slice_waker: Vec<Pid>,
     // ---- output ---------------------------------------------------------
@@ -76,10 +90,12 @@ impl KernelProbes {
     pub fn new(cfg: GappConfig, ncpu: usize) -> anyhow::Result<KernelProbes> {
         let spec = ProgramSpec {
             name: "gapp",
-            maps: 7,
-            map_bytes: 1 << 22,
+            maps: 8, // Table-1 set + the stack-trace map
+            map_bytes: (1 << 22)
+                + StackMap::bytes_for(cfg.stack_map_entries, cfg.stack_depth),
             ringbuf_records: cfg.ring_capacity,
             stack_depth: cfg.stack_depth,
+            stack_map_entries: cfg.stack_map_entries,
             sample_period_ns: Some(cfg.dt),
             max_insns: 4096,
         };
@@ -88,9 +104,10 @@ impl KernelProbes {
             .map_err(|e| anyhow::anyhow!("verifier rejected GAPP probes: {e}"))?;
         Ok(KernelProbes {
             ring: RingBuf::new(cfg.ring_capacity),
+            stacks: StackMap::new("stack_traces", cfg.stack_map_entries),
             cfg,
             thread_list: HashMap64::new("thread_list"),
-            cm_hash_ns: std::collections::HashMap::new(),
+            cm_ns: PidMap::new(),
             thread_count: Scalar::default(),
             total_count: Scalar::default(),
             peak_total: 0,
@@ -99,12 +116,12 @@ impl KernelProbes {
             local_cm: vec![0.0; ncpu],
             slice_start: vec![0; ncpu],
             running: vec![0; ncpu],
-            last_waker: std::collections::HashMap::new(),
+            last_waker: PidMap::new(),
             slice_waker: vec![0; ncpu],
-            slot_of: std::collections::HashMap::new(),
+            slot_of: PidMap::new(),
             free_slots: (0..crate::runtime::T_SLOTS).rev().collect(),
             active_mask: [0; 2],
-            exiting: std::collections::HashSet::new(),
+            exiting: PidMap::new(),
             next_ts_id: 0,
             stats: ProbeStats::default(),
         })
@@ -117,6 +134,11 @@ impl KernelProbes {
         self.cfg
             .nmin
             .unwrap_or_else(|| (self.peak_total as f64 / 2.0).max(1.0))
+    }
+
+    /// In-kernel CMetric accumulated for `pid` (the paper's cm_hash).
+    pub fn cm_hash(&self, pid: Pid) -> f64 {
+        self.cm_ns.get(pid).copied().unwrap_or(0.0)
     }
 
     /// Close the current switching interval at `now`: update global_cm
@@ -142,7 +164,7 @@ impl KernelProbes {
         if self.thread_list.get(pid as u64) == Some(0) {
             self.thread_list.insert(pid as u64, 1);
             self.thread_count.add(1);
-            if let Some(slot) = self.slot_of.get(&pid) {
+            if let Some(slot) = self.slot_of.get(pid) {
                 mask_set(&mut self.active_mask, *slot);
             }
         }
@@ -152,7 +174,7 @@ impl KernelProbes {
         if self.thread_list.get(pid as u64) == Some(1) {
             self.thread_list.insert(pid as u64, 0);
             self.thread_count.sub_sat(1);
-            if let Some(slot) = self.slot_of.get(&pid) {
+            if let Some(slot) = self.slot_of.get(pid) {
                 mask_clear(&mut self.active_mask, *slot);
             }
         }
@@ -185,7 +207,7 @@ impl KernelProbes {
     /// sched_process_exit: the final timeslice is still open; defer the
     /// cleanup to the context switch that follows.
     pub fn on_process_exit(&mut self, pid: Pid, _now: Time) -> u64 {
-        self.exiting.insert(pid);
+        self.exiting.insert(pid, ());
         cost::LIFECYCLE
     }
 
@@ -239,7 +261,7 @@ impl KernelProbes {
             c += cost::SWITCH_APP_PATH;
             // Close the timeslice: cm_hash[prev] += global_cm - local_cm.
             let cm_delta = (self.global_cm - self.local_cm[cpu]).max(0.0);
-            *self.cm_hash_ns.entry(prev_pid).or_insert(0.0) += cm_delta;
+            self.cm_ns.add(prev_pid, cm_delta);
             let wall = now.saturating_sub(self.slice_start[cpu]) as f64;
             self.stats.total_slices += 1;
 
@@ -254,8 +276,12 @@ impl KernelProbes {
             if critical {
                 self.stats.critical_slices += 1;
                 let depth = prev_stack.len().min(self.cfg.stack_depth);
-                let stack = prev_stack[prev_stack.len() - depth..].to_vec();
+                let frames = &prev_stack[prev_stack.len() - depth..];
                 self.stats.stack_frames_captured += depth as u64;
+                // bpf_get_stackid(): walk + hash + intern; the record
+                // carries the 4-byte id, never the frames.
+                let stack_id = self.stacks.intern(frames);
+                let stack_top = frames.last().copied().unwrap_or(0);
                 self.next_ts_id += 1;
                 let woken_by = self.slice_waker.get(cpu).copied().unwrap_or(0);
                 self.ring.push(Record::SliceEnd {
@@ -264,22 +290,25 @@ impl KernelProbes {
                     cm_ns: cm_delta,
                     threads_av,
                     ip: prev_ip,
-                    stack,
+                    stack_id,
+                    stack_top,
                     wait: prev_wait,
                     woken_by,
                 });
-                c += cost::STACK_FRAME * depth as u64 + cost::RINGBUF_RECORD;
+                c += cost::STACK_FRAME * depth as u64
+                    + cost::STACKMAP_LOOKUP
+                    + cost::RINGBUF_RECORD;
             } else {
                 self.ring.push(Record::SliceDiscard { pid: prev_pid });
                 c += cost::RINGBUF_RECORD;
             }
 
             // Deferred exit cleanup.
-            if self.exiting.remove(&prev_pid) {
+            if self.exiting.remove(prev_pid).is_some() {
                 self.mark_inactive(prev_pid);
                 self.thread_list.remove(prev_pid as u64);
                 self.total_count.sub_sat(1);
-                if let Some(slot) = self.slot_of.remove(&prev_pid) {
+                if let Some(slot) = self.slot_of.remove(prev_pid) {
                     self.ring.push(Record::SlotFree {
                         pid: prev_pid,
                         slot,
@@ -294,7 +323,7 @@ impl KernelProbes {
             // Open the next timeslice: local_cm = global_cm.
             self.local_cm[cpu] = self.global_cm;
             self.slice_start[cpu] = now;
-            self.slice_waker[cpu] = self.last_waker.remove(&next_pid).unwrap_or(0);
+            self.slice_waker[cpu] = self.last_waker.remove(next_pid).unwrap_or(0);
             // Safety net from the paper: a switched-in thread must be
             // active even if we missed its wakeup.
             self.mark_active(next_pid);
@@ -316,7 +345,7 @@ impl KernelProbes {
     }
 
     /// Route a kernel tracepoint event to its handler. Returns the cost.
-    pub fn handle(&mut self, ev: &Event) -> u64 {
+    pub fn handle(&mut self, ev: &Event<'_>) -> u64 {
         match ev {
             Event::TaskNew { time, pid, .. } => self.on_task_new(*pid, *time),
             Event::ProcessExit { time, pid } => self.on_process_exit(*pid, *time),
@@ -346,10 +375,16 @@ impl KernelProbes {
         }
     }
 
-    /// Peak kernel-side memory estimate (maps + ring buffer), bytes.
+    /// Peak kernel-side memory estimate (maps + stack map + ring), bytes.
+    /// Dense pid tables are charged at their backing-vector size, since
+    /// that is what they actually allocate (pid-indexed, not per-entry).
     pub fn memory_bytes(&self) -> u64 {
         self.thread_list.peak_bytes()
-            + (self.cm_hash_ns.len() as u64) * 32
+            + self.cm_ns.approx_bytes()
+            + self.slot_of.approx_bytes()
+            + self.last_waker.approx_bytes()
+            + self.exiting.approx_bytes()
+            + self.stacks.bytes()
             + self.ring.peak_bytes()
             + (self.local_cm.len() as u64) * 16
     }
@@ -393,7 +428,7 @@ mod tests {
         // E4 (t=27): thread 3 blocks after [18,27] with n=3.
         p.on_switch(27, 0, 3, TaskState::Blocked, 2, 0, &[], WaitKind::Futex);
         // Thread3 cm = T2/2 + T3/3 = 8/2 + 9/3 = 7.
-        assert!((p.cm_hash_ns[&3] - 7.0).abs() < 1e-9, "{}", p.cm_hash_ns[&3]);
+        assert!((p.cm_hash(3) - 7.0).abs() < 1e-9, "{}", p.cm_hash(3));
     }
 
     #[test]
@@ -409,18 +444,71 @@ mod tests {
         p.on_task_new(1, 0);
         p.on_switch(0, 0, 0, TaskState::Runnable, 1, 0, &[], WaitKind::Futex);
         // Thread 1 alone for 1 ms → threads_av = 1 < 2 → critical.
-        p.on_switch(1_000_000, 0, 1, TaskState::Blocked, 0, 0xABC, &[0x400000], WaitKind::Futex);
+        p.on_switch(
+            1_000_000,
+            0,
+            1,
+            TaskState::Blocked,
+            0,
+            0xABC,
+            &[0x400000],
+            WaitKind::Futex,
+        );
         assert_eq!(p.stats.critical_slices, 1);
         let mut saw_slice = false;
         while let Some(r) = p.ring.pop() {
-            if let Record::SliceEnd { pid, cm_ns, ip, .. } = r {
+            if let Record::SliceEnd {
+                pid,
+                cm_ns,
+                ip,
+                stack_id,
+                stack_top,
+                ..
+            } = r
+            {
                 assert_eq!(pid, 1);
                 assert!((cm_ns - 1e6).abs() < 1.0);
                 assert_eq!(ip, 0xABC);
+                // The record carries the id; the map resolves the frames.
+                assert_eq!(p.stacks.resolve(stack_id), &[0x400000]);
+                assert_eq!(stack_top, 0x400000);
                 saw_slice = true;
             }
         }
         assert!(saw_slice);
+    }
+
+    #[test]
+    fn identical_stacks_share_one_id() {
+        let mut p = KernelProbes::new(
+            GappConfig {
+                nmin: Some(2.0),
+                ..Default::default()
+            },
+            2,
+        )
+        .unwrap();
+        p.on_task_new(1, 0);
+        let stack = [0x400000u64, 0x401000];
+        let mut t = 0u64;
+        for _ in 0..5 {
+            p.on_switch(t, 0, 0, TaskState::Runnable, 1, 0, &[], WaitKind::Futex);
+            t += 1_000_000;
+            p.on_switch(t, 0, 1, TaskState::Blocked, 0, 0xA, &stack, WaitKind::Futex);
+            p.on_wakeup(1, t);
+        }
+        assert_eq!(p.stats.critical_slices, 5);
+        // One interned stack, five hits-or-inserts totalling 5 lookups.
+        assert_eq!(p.stacks.len(), 1);
+        assert_eq!(p.stacks.stats.inserts, 1);
+        assert_eq!(p.stacks.stats.hits, 4);
+        let mut ids = std::collections::BTreeSet::new();
+        while let Some(r) = p.ring.pop() {
+            if let Record::SliceEnd { stack_id, .. } = r {
+                ids.insert(stack_id);
+            }
+        }
+        assert_eq!(ids.len(), 1);
     }
 
     #[test]

@@ -1,5 +1,11 @@
 //! Records exchanged between the kernel probes and the user-space probe
 //! through the eBPF circular buffer (paper Figure 2).
+//!
+//! Every record is fixed-size `Copy` POD — exactly what a real perf/BPF
+//! ring buffer carries. Critical-slice records reference their call path
+//! by stack id (interned in-kernel by [`crate::ebpf::StackMap`], the
+//! `bpf_get_stackid()` mechanism) instead of owning a frame vector, so
+//! pushing and popping records never touches the heap.
 
 use crate::simkernel::{Pid, Time, WaitKind};
 
@@ -21,8 +27,8 @@ pub fn mask_count(m: &SlotMask) -> u32 {
     m[0].count_ones() + m[1].count_ones()
 }
 
-/// One circular-buffer record.
-#[derive(Clone, Debug)]
+/// One circular-buffer record (fixed-size, `Copy`, no heap fields).
+#[derive(Clone, Copy, Debug)]
 pub enum Record {
     /// A thread slot was assigned to / freed from a pid (lets the
     /// user-space side attribute activity-matrix columns to threads).
@@ -32,14 +38,20 @@ pub enum Record {
     /// threads during it. These rows feed the batched XLA analysis.
     Interval { dur: Time, mask: SlotMask },
     /// End of a *critical* timeslice (threads_av < N_min): CMetric delta,
-    /// the stack walked at the switch, and the IP at switch-out.
+    /// the interned id of the stack walked at the switch, and the IP at
+    /// switch-out.
     SliceEnd {
         ts_id: u64,
         pid: Pid,
         cm_ns: f64,
         threads_av: f64,
         ip: u64,
-        stack: Vec<u64>,
+        /// Stack id from the in-kernel stack map
+        /// ([`crate::ebpf::STACK_ID_DROPPED`] when interning failed).
+        stack_id: u32,
+        /// Innermost captured frame, carried inline so the user probe's
+        /// "from stack top" fallback (§4.4) needs no map lookup.
+        stack_top: u64,
         /// What the thread blocked on at the end of this slice (§7
         /// classification extension; None = preempted/exited).
         wait: WaitKind,
@@ -55,6 +67,14 @@ pub enum Record {
     /// count was below N_min (§4.3).
     Sample { pid: Pid, ip: u64 },
 }
+
+// Compile-time guarantees: records stay POD-sized and trivially
+// copyable (the zero-allocation ring-buffer contract).
+const _: () = {
+    const fn assert_copy<T: Copy>() {}
+    assert_copy::<Record>();
+    assert!(std::mem::size_of::<Record>() <= 64);
+};
 
 #[cfg(test)]
 mod tests {
@@ -72,5 +92,10 @@ mod tests {
         assert_eq!(mask_count(&m), 3);
         assert_eq!(m[0], 1);
         assert_eq!(m[1], 1 | (1 << 63));
+    }
+
+    #[test]
+    fn record_is_one_cacheline() {
+        assert!(std::mem::size_of::<Record>() <= 64);
     }
 }

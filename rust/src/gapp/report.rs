@@ -60,6 +60,13 @@ pub struct Report {
     pub samples: u64,
     pub intervals: u64,
     pub ring_dropped: u64,
+    /// Distinct call paths interned by the in-kernel stack map
+    /// (`bpf_get_stackid`-style ids carried by ring records).
+    pub stack_ids: u64,
+    /// New stacks dropped because the stack map hit capacity — nonzero
+    /// means `GappConfig::stack_map_entries` needs raising, exactly like
+    /// tuning a real `BPF_MAP_TYPE_STACK_TRACE` max_entries.
+    pub stack_drops: u64,
     /// Peak memory estimate, bytes (column M).
     pub memory_bytes: u64,
     /// Post-processing time, host seconds (column PPT).
@@ -121,12 +128,18 @@ impl fmt::Display for Report {
         writeln!(f, "== GAPP profile: {} (backend: {}) ==", self.app, self.backend)?;
         writeln!(
             f,
-            "runtime {:.1} ms | slices {} (critical {} = {:.2}%) | samples {} | mem {:.1} MB | ppt {:.2} s",
+            "runtime {:.1} ms | slices {} (critical {} = {:.2}%) | samples {} | stacks {}{} | mem {:.1} MB | ppt {:.2} s",
             self.runtime_ns as f64 / 1e6,
             self.total_slices,
             self.critical_slices,
             100.0 * self.critical_ratio(),
             self.samples,
+            self.stack_ids,
+            if self.stack_drops > 0 {
+                format!(" (+{} dropped)", self.stack_drops)
+            } else {
+                String::new()
+            },
             self.memory_bytes as f64 / (1024.0 * 1024.0),
             self.ppt_seconds,
         )?;

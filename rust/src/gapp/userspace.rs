@@ -6,13 +6,17 @@
 //! CMetric accumulation (the paper's kernel-side `cm_hash`) is computed
 //! here by streaming interval rows through the AOT-compiled XLA analysis
 //! program in fixed-size batches. The in-kernel scalar path is retained
-//! as a cross-check (`KernelProbes::cm_hash_ns`), and an integration
+//! as a cross-check (`KernelProbes::cm_hash`), and an integration
 //! test asserts the two agree.
-
-use std::collections::HashMap;
+//!
+//! Call paths arrive as interned `u32` stack ids (see
+//! [`crate::ebpf::StackMap`]), so the merge groups by id — an integer
+//! key — instead of hashing full frame vectors; ids are resolved back
+//! to frames only when a path reaches the final report.
 
 use crate::runtime::{AnalysisEngine, T_SLOTS};
 use crate::simkernel::{Pid, WaitKind};
+use crate::util::{FxHashMap, PidMap};
 
 use super::records::Record;
 
@@ -23,8 +27,8 @@ pub struct SliceEntry {
     pub pid: Pid,
     pub cm_ns: f64,
     pub threads_av: f64,
-    /// Call path (outermost → innermost) captured at the switch.
-    pub stack: Vec<u64>,
+    /// Interned id of the call path captured at the switch.
+    pub stack_id: u32,
     /// Sampled IPs attributed to this slice (plus the switch IP).
     pub addrs: Vec<u64>,
     /// True when no samples landed and the stack top was substituted
@@ -39,15 +43,30 @@ pub struct SliceEntry {
 /// A merged call path: summed CMetric + address frequency table.
 #[derive(Clone, Debug)]
 pub struct MergedPath {
-    pub stack: Vec<u64>,
+    /// Interned call-path id (resolve via the kernel stack map).
+    pub stack_id: u32,
     pub total_cm_ns: f64,
     pub slices: u64,
-    pub addr_freq: HashMap<u64, u64>,
+    pub addr_freq: FxHashMap<u64, u64>,
     pub stack_top_samples: u64,
     /// Wait-kind histogram over the merged slices (§7 classification).
-    pub wait_hist: HashMap<WaitKind, u64>,
+    pub wait_hist: FxHashMap<WaitKind, u64>,
     /// Waker histogram: who ended the waits that started these slices.
-    pub wakers: HashMap<Pid, u64>,
+    pub wakers: FxHashMap<Pid, u64>,
+}
+
+impl MergedPath {
+    fn new(stack_id: u32) -> MergedPath {
+        MergedPath {
+            stack_id,
+            total_cm_ns: 0.0,
+            slices: 0,
+            addr_freq: FxHashMap::default(),
+            stack_top_samples: 0,
+            wait_hist: FxHashMap::default(),
+            wakers: FxHashMap::default(),
+        }
+    }
 }
 
 /// Per-thread totals from the batched XLA analysis.
@@ -67,12 +86,12 @@ pub struct UserProbe {
     // pid ↔ slot attribution over time (slots are recycled).
     slot_owner: Vec<Option<Pid>>,
     /// Accumulated per-pid totals (committed when slots are freed or at
-    /// flush time).
-    pub totals: HashMap<Pid, ThreadTotals>,
-    // Pending per-batch slot owner snapshot: totals must be attributed
-    // to the owner at batch-build time, so each batch is flushed before
-    // any slot in it is reassigned.
-    pending_samples: HashMap<Pid, Vec<u64>>,
+    /// flush time). Dense pid table: iteration is pid-ordered.
+    pub totals: PidMap<ThreadTotals>,
+    // Pending per-pid sample buffers. Dense table; a slice end *moves*
+    // the buffer into its SliceEntry, a discard clears it in place, so
+    // the steady state re-uses allocations.
+    pending_samples: PidMap<Vec<u64>>,
     pub slices: Vec<SliceEntry>,
     pub records_processed: u64,
     pub batch_flushes: u64,
@@ -88,8 +107,8 @@ impl UserProbe {
             t_vec: vec![0.0; batch],
             rows: 0,
             slot_owner: vec![None; T_SLOTS],
-            totals: HashMap::new(),
-            pending_samples: HashMap::new(),
+            totals: PidMap::new(),
+            pending_samples: PidMap::new(),
             slices: Vec::new(),
             records_processed: 0,
             batch_flushes: 0,
@@ -144,11 +163,11 @@ impl UserProbe {
                 }
             }
             Record::Sample { pid, ip } => {
-                self.pending_samples.entry(pid).or_default().push(ip);
+                self.pending_samples.get_mut_or(pid, Vec::new).push(ip);
             }
             Record::SliceDiscard { pid } => {
                 // Reject pending samples for this thread (§4.4).
-                if let Some(v) = self.pending_samples.get_mut(&pid) {
+                if let Some(v) = self.pending_samples.get_mut(pid) {
                     v.clear();
                 }
             }
@@ -158,13 +177,15 @@ impl UserProbe {
                 cm_ns,
                 threads_av,
                 ip,
-                stack,
+                stack_id,
+                stack_top,
                 wait,
                 woken_by,
             } => {
                 let mut addrs = self
                     .pending_samples
-                    .remove(&pid)
+                    .get_mut(pid)
+                    .map(std::mem::take)
                     .unwrap_or_default();
                 // The IP at the switch itself is a valid sample.
                 if ip != 0 {
@@ -173,17 +194,15 @@ impl UserProbe {
                 // Fallback: no samples → attribute to the stack top
                 // (return address of the caller), labelled as such.
                 let from_stack_top = addrs.is_empty();
-                if from_stack_top {
-                    if let Some(top) = stack.last() {
-                        addrs.push(*top);
-                    }
+                if from_stack_top && stack_top != 0 {
+                    addrs.push(stack_top);
                 }
                 self.slices.push(SliceEntry {
                     ts_id,
                     pid,
                     cm_ns,
                     threads_av,
-                    stack,
+                    stack_id,
                     addrs,
                     from_stack_top,
                     wait,
@@ -207,7 +226,7 @@ impl UserProbe {
         for (slot, owner) in self.slot_owner.iter().enumerate() {
             if let Some(pid) = owner {
                 if out.cm[slot] > 0.0 {
-                    let t = self.totals.entry(*pid).or_default();
+                    let t = self.totals.get_mut_or(*pid, ThreadTotals::default);
                     t.cm_ns += out.cm[slot] as f64;
                     t.wall_ns += out.wall[slot] as f64;
                 }
@@ -220,22 +239,36 @@ impl UserProbe {
     }
 
     /// Merge identical call paths (paper §4.4 post-processing) and rank
-    /// by total CMetric via the compiled top-K artifact.
+    /// by total CMetric via the compiled top-K artifact. Grouping is by
+    /// interned stack id — one integer compare per slice — in
+    /// first-seen order (deterministic: ids are assigned in capture
+    /// order by the kernel).
     pub fn merge_and_rank(&mut self, top_n: usize) -> Vec<MergedPath> {
         self.flush_batch();
-        let mut merged: HashMap<&[u64], MergedPath> = HashMap::new();
+        // Stack ids are dense (0, 1, 2, … in capture order), so the
+        // grouping index is a plain vector: slot_for[id] = merged index
+        // + 1 (0 = unseen). Slices whose stack was dropped at stack-map
+        // capacity carry STACK_ID_DROPPED and are *excluded* — distinct
+        // overflowed paths must not be conflated into one bogus entry
+        // (the kernel's `stack_drops` counter reports the loss).
+        let mut slot_for: Vec<u32> = Vec::new();
+        let mut paths: Vec<MergedPath> = Vec::new();
         for s in &self.slices {
-            let e = merged
-                .entry(s.stack.as_slice())
-                .or_insert_with(|| MergedPath {
-                    stack: s.stack.clone(),
-                    total_cm_ns: 0.0,
-                    slices: 0,
-                    addr_freq: HashMap::new(),
-                    stack_top_samples: 0,
-                    wait_hist: HashMap::new(),
-                    wakers: HashMap::new(),
-                });
+            if s.stack_id == crate::ebpf::STACK_ID_DROPPED {
+                continue;
+            }
+            let idx = s.stack_id as usize;
+            if idx >= slot_for.len() {
+                slot_for.resize(idx + 1, 0);
+            }
+            let i = if slot_for[idx] == 0 {
+                paths.push(MergedPath::new(s.stack_id));
+                slot_for[idx] = paths.len() as u32;
+                paths.len() - 1
+            } else {
+                (slot_for[idx] - 1) as usize
+            };
+            let e = &mut paths[i];
             e.total_cm_ns += s.cm_ns;
             e.slices += 1;
             for a in &s.addrs {
@@ -249,9 +282,6 @@ impl UserProbe {
                 *e.wakers.entry(s.woken_by).or_insert(0) += 1;
             }
         }
-        let mut paths: Vec<MergedPath> = merged.into_values().collect();
-        // Deterministic order before ranking.
-        paths.sort_by(|a, b| a.stack.cmp(&b.stack));
         let scores: Vec<f32> = paths.iter().map(|p| p.total_cm_ns as f32).collect();
         let ranked = self
             .engine
@@ -268,13 +298,13 @@ impl UserProbe {
         let slices: u64 = self
             .slices
             .iter()
-            .map(|s| 64 + 8 * (s.stack.len() + s.addrs.len()) as u64)
+            .map(|s| 64 + 8 * s.addrs.len() as u64)
             .sum();
         let batch = (self.a_flat.len() * 4 + self.t_vec.len() * 4) as u64;
         let samples: u64 = self
             .pending_samples
-            .values()
-            .map(|v| 8 * v.len() as u64)
+            .iter()
+            .map(|(_, v)| 8 * v.len() as u64)
             .sum();
         slices + batch + samples
     }
@@ -297,6 +327,20 @@ mod tests {
         Record::Interval { dur, mask }
     }
 
+    fn slice_end(ts_id: u64, pid: Pid, cm_ns: f64, stack_id: u32) -> Record {
+        Record::SliceEnd {
+            ts_id,
+            pid,
+            cm_ns,
+            threads_av: 1.0,
+            ip: 0,
+            stack_id,
+            stack_top: 0,
+            wait: WaitKind::Futex,
+            woken_by: 0,
+        }
+    }
+
     #[test]
     fn totals_accumulate_per_pid() {
         let mut u = probe();
@@ -305,9 +349,11 @@ mod tests {
         u.consume(interval(&[0, 1], 100));
         u.consume(interval(&[0], 50));
         u.flush_batch();
-        assert!((u.totals[&10].cm_ns - 100.0).abs() < 1e-3); // 50 + 50
-        assert!((u.totals[&11].cm_ns - 50.0).abs() < 1e-3);
-        assert!((u.totals[&10].wall_ns - 150.0).abs() < 1e-3);
+        let t10 = u.totals.get(10).unwrap();
+        let t11 = u.totals.get(11).unwrap();
+        assert!((t10.cm_ns - 100.0).abs() < 1e-3); // 50 + 50
+        assert!((t11.cm_ns - 50.0).abs() < 1e-3);
+        assert!((t10.wall_ns - 150.0).abs() < 1e-3);
     }
 
     #[test]
@@ -319,8 +365,8 @@ mod tests {
         u.consume(Record::SlotAssign { pid: 2, slot: 0 });
         u.consume(interval(&[0], 70));
         u.flush_batch();
-        assert!((u.totals[&1].cm_ns - 100.0).abs() < 1e-3);
-        assert!((u.totals[&2].cm_ns - 70.0).abs() < 1e-3);
+        assert!((u.totals.get(1).unwrap().cm_ns - 100.0).abs() < 1e-3);
+        assert!((u.totals.get(2).unwrap().cm_ns - 70.0).abs() < 1e-3);
     }
 
     #[test]
@@ -335,7 +381,8 @@ mod tests {
             cm_ns: 10.0,
             threads_av: 1.0,
             ip: 0,
-            stack: vec![0x100],
+            stack_id: 7,
+            stack_top: 0x100,
             wait: WaitKind::Futex,
             woken_by: 0,
         });
@@ -353,7 +400,8 @@ mod tests {
             cm_ns: 10.0,
             threads_av: 1.0,
             ip: 0,
-            stack: vec![0x100, 0x200],
+            stack_id: 3,
+            stack_top: 0x200,
             wait: WaitKind::Io,
             woken_by: 0,
         });
@@ -371,7 +419,8 @@ mod tests {
                 cm_ns: 100.0,
                 threads_av: 1.0,
                 ip: 0xAA,
-                stack: vec![0x100, 0x200],
+                stack_id: 1,
+                stack_top: 0x200,
                 wait: WaitKind::Futex,
                 woken_by: 9,
             });
@@ -382,19 +431,20 @@ mod tests {
             cm_ns: 50.0,
             threads_av: 1.0,
             ip: 0xBB,
-            stack: vec![0x100, 0x300],
+            stack_id: 2,
+            stack_top: 0x300,
             wait: WaitKind::Queue,
             woken_by: 0,
         });
         let top = u.merge_and_rank(5);
         assert_eq!(top.len(), 2);
-        assert_eq!(top[0].stack, vec![0x100, 0x200]);
+        assert_eq!(top[0].stack_id, 1);
         assert!((top[0].total_cm_ns - 300.0).abs() < 1e-6);
         assert_eq!(top[0].slices, 3);
         assert_eq!(top[0].addr_freq[&0xAA], 3);
         assert_eq!(top[0].wait_hist[&WaitKind::Futex], 3);
         assert_eq!(top[0].wakers[&9], 3);
-        assert_eq!(top[1].stack, vec![0x100, 0x300]);
+        assert_eq!(top[1].stack_id, 2);
         assert_eq!(top[1].wait_hist[&WaitKind::Queue], 1);
     }
 
@@ -402,21 +452,38 @@ mod tests {
     fn rank_respects_top_n() {
         let mut u = probe();
         for p in 0..10u64 {
-            u.consume(Record::SliceEnd {
-                ts_id: p,
-                pid: 1,
-                cm_ns: (p + 1) as f64,
-                threads_av: 1.0,
-                ip: 1,
-                stack: vec![0x100 + p],
-                wait: WaitKind::None,
-                woken_by: 0,
-            });
+            u.consume(slice_end(p, 1, (p + 1) as f64, p as u32));
         }
         let top = u.merge_and_rank(3);
         assert_eq!(top.len(), 3);
         assert!(top[0].total_cm_ns >= top[1].total_cm_ns);
         assert!(top[1].total_cm_ns >= top[2].total_cm_ns);
         assert!((top[0].total_cm_ns - 10.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn dropped_stack_ids_are_excluded_from_merge() {
+        let mut u = probe();
+        u.consume(slice_end(1, 1, 100.0, 0));
+        // Two slices whose stacks overflowed the kernel stack map: they
+        // may be *different* call paths, so they must not merge.
+        u.consume(slice_end(2, 1, 500.0, crate::ebpf::STACK_ID_DROPPED));
+        u.consume(slice_end(3, 2, 600.0, crate::ebpf::STACK_ID_DROPPED));
+        let top = u.merge_and_rank(5);
+        assert_eq!(top.len(), 1);
+        assert_eq!(top[0].stack_id, 0);
+        assert!((top[0].total_cm_ns - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sample_buffers_are_reused_across_slices() {
+        let mut u = probe();
+        u.consume(Record::Sample { pid: 3, ip: 0x1 });
+        u.consume(slice_end(1, 3, 5.0, 0));
+        // Buffer moved into the slice; a fresh sample starts a new one.
+        u.consume(Record::Sample { pid: 3, ip: 0x2 });
+        u.consume(slice_end(2, 3, 5.0, 0));
+        assert_eq!(u.slices[0].addrs, vec![0x1]);
+        assert_eq!(u.slices[1].addrs, vec![0x2]);
     }
 }

@@ -7,9 +7,15 @@
 //! behaviour through [`Probe`]s whose per-event costs are charged to the
 //! emitting CPU — the profiled application literally runs slower when a
 //! probe is expensive, which is how the Table-2 O/H column is measured.
+//!
+//! Hot-path design: the runqueue is a lazy-deletion binary min-heap
+//! keyed on `(vruntime, pid)` with O(1) membership tokens (no `BTreeSet`
+//! rebalancing per switch), and tracepoint events borrow the outgoing
+//! task's stack/comm instead of cloning them, so steady-state switching
+//! allocates nothing.
 
 use std::cmp::Reverse;
-use std::collections::{BTreeSet, BinaryHeap};
+use std::collections::BinaryHeap;
 
 use anyhow::{bail, Result};
 
@@ -114,6 +120,77 @@ struct Cpu {
     pending_lag: Time,
 }
 
+/// Global runqueue: a binary min-heap over `(vruntime, pid)` with lazy
+/// deletion. Each pid holds at most one *live* entry, identified by a
+/// per-push token; superseded or removed entries stay in the heap and
+/// are skipped when they surface. Compared to the previous
+/// `BTreeSet<(Time, Pid)>`, push/remove are O(1)/O(log n) with no node
+/// rebalancing, min-peek is O(1) amortized, and the `(vruntime, pid)`
+/// ordering (ties broken by pid) is preserved exactly.
+#[derive(Default)]
+struct RunQueue {
+    heap: BinaryHeap<Reverse<(Time, Pid, u64)>>,
+    /// pid → token of its live heap entry (0 = not queued).
+    token: Vec<u64>,
+    next_token: u64,
+    live: usize,
+}
+
+impl RunQueue {
+    /// Queue `pid` at `vruntime` (superseding any previous entry).
+    fn push(&mut self, pid: Pid, vruntime: Time) {
+        self.next_token += 1;
+        let tok = self.next_token;
+        let i = pid as usize;
+        if i >= self.token.len() {
+            self.token.resize(i + 1, 0);
+        }
+        if self.token[i] == 0 {
+            self.live += 1;
+        }
+        self.token[i] = tok;
+        self.heap.push(Reverse((vruntime, pid, tok)));
+    }
+
+    /// Drop `pid`'s live entry, if any (O(1): token invalidation).
+    fn remove(&mut self, pid: Pid) {
+        if let Some(slot) = self.token.get_mut(pid as usize) {
+            if *slot != 0 {
+                *slot = 0;
+                self.live -= 1;
+            }
+        }
+    }
+
+    /// Pop the leftmost (min `(vruntime, pid)`) runnable task.
+    fn pop_min(&mut self) -> Option<(Time, Pid)> {
+        while let Some(Reverse((vr, pid, tok))) = self.heap.pop() {
+            if self.token[pid as usize] == tok {
+                self.token[pid as usize] = 0;
+                self.live -= 1;
+                return Some((vr, pid));
+            }
+        }
+        None
+    }
+
+    /// Leftmost entry without removing it (skims stale heap tops).
+    fn peek_min(&mut self) -> Option<(Time, Pid)> {
+        while let Some(&Reverse((vr, pid, tok))) = self.heap.peek() {
+            if self.token[pid as usize] == tok {
+                return Some((vr, pid));
+            }
+            self.heap.pop();
+        }
+        None
+    }
+
+    #[inline]
+    fn is_empty(&self) -> bool {
+        self.live == 0
+    }
+}
+
 /// Aggregate run statistics.
 #[derive(Clone, Debug, Default)]
 pub struct KernelStats {
@@ -133,7 +210,7 @@ pub struct Kernel {
     pub cfg: KernelConfig,
     tasks: Vec<Option<Task>>,
     logic: Vec<Option<Box<dyn TaskLogic>>>,
-    runqueue: BTreeSet<(Time, Pid)>,
+    runqueue: RunQueue,
     cpus: Vec<Cpu>,
     heap: BinaryHeap<Reverse<(Time, u64, EvKind)>>,
     seq: u64,
@@ -152,7 +229,7 @@ impl Kernel {
             cfg,
             tasks: Vec::new(),
             logic: Vec::new(),
-            runqueue: BTreeSet::new(),
+            runqueue: RunQueue::default(),
             cpus: (0..ncpu)
                 .map(|_| Cpu { current: None, pending_lag: 0 })
                 .collect(),
@@ -221,13 +298,24 @@ impl Kernel {
     }
 
     /// Emit a tracepoint event to all probes; returns total cost (ns).
-    fn emit(&mut self, ev: Event) -> Time {
+    /// An associated fn over the two fields it touches, so callers may
+    /// emit events that borrow *other* fields of `self` (e.g. a task's
+    /// stack) without cloning.
+    fn emit_to(
+        probes: &mut [Box<dyn Probe>],
+        stats: &mut KernelStats,
+        ev: &Event<'_>,
+    ) -> Time {
         let mut cost = 0;
-        for p in &mut self.probes {
-            cost += p.on_event(&ev);
+        for p in probes.iter_mut() {
+            cost += p.on_event(ev);
         }
-        self.stats.probe_ns += cost;
+        stats.probe_ns += cost;
         cost
+    }
+
+    fn emit(&mut self, ev: &Event<'_>) -> Time {
+        Self::emit_to(&mut self.probes, &mut self.stats, ev)
     }
 
     fn admit(&mut self, pid: Pid, comm: &str, logic: Box<dyn TaskLogic>, now: Time, parent: Pid) {
@@ -238,19 +326,19 @@ impl Kernel {
         // New tasks start at the minimum runqueue vruntime so they are
         // scheduled promptly but cannot starve existing tasks (CFS places
         // new tasks near min_vruntime).
-        let min_vr = self.runqueue.iter().next().map(|(v, _)| *v).unwrap_or(0);
+        let min_vr = self.runqueue.peek_min().map(|(v, _)| v).unwrap_or(0);
         let mut t = Task::new(pid, comm, now);
         t.vruntime = min_vr;
         self.tasks[pid as usize] = Some(t);
         self.logic[pid as usize] = Some(logic);
         self.stats.spawned += 1;
-        self.emit(Event::TaskNew {
+        self.emit(&Event::TaskNew {
             time: now,
             pid,
             parent,
-            comm: comm.to_string(),
+            comm,
         });
-        self.runqueue.insert((min_vr, pid));
+        self.runqueue.push(pid, min_vr);
     }
 
     fn task_mut(&mut self, pid: Pid) -> &mut Task {
@@ -258,23 +346,13 @@ impl Kernel {
     }
 
     /// Dispatch the next runnable task onto `cpu` (which must be idle),
-    /// emitting the sched_switch from `prev`. Returns probe cost charged.
-    fn dispatch(
-        &mut self,
-        cpu: usize,
-        now: Time,
-        prev_pid: Pid,
-        prev_state: TaskState,
-        prev_ip: u64,
-        prev_stack: Vec<u64>,
-    ) {
+    /// emitting the sched_switch from `prev`. The event borrows the
+    /// outgoing task's ip/stack snapshot straight from its TCB — no
+    /// per-switch clone.
+    fn dispatch(&mut self, cpu: usize, now: Time, prev_pid: Pid, prev_state: TaskState) {
         debug_assert!(self.cpus[cpu].current.is_none());
-        let next = self.runqueue.iter().next().copied();
-        let next_pid = match next {
-            Some((vr, pid)) => {
-                self.runqueue.remove(&(vr, pid));
-                pid
-            }
+        let next_pid = match self.runqueue.pop_min() {
+            Some((_, pid)) => pid,
             None => IDLE_PID,
         };
         if next_pid == IDLE_PID && prev_pid == IDLE_PID {
@@ -284,23 +362,32 @@ impl Kernel {
         if next_pid == IDLE_PID {
             self.stats.idle_switches += 1;
         }
+        let prev = if prev_pid == IDLE_PID {
+            None
+        } else {
+            self.tasks.get(prev_pid as usize).and_then(|t| t.as_ref())
+        };
+        let prev_ip = prev.map_or(0, |t| t.ip);
+        let prev_stack: &[u64] = prev.map_or(&[], |t| t.stack.as_slice());
         let prev_wait = if prev_state == TaskState::Blocked {
-            self.task(prev_pid)
-                .map(|t| t.wait_kind)
-                .unwrap_or_default()
+            prev.map(|t| t.wait_kind).unwrap_or_default()
         } else {
             super::task::WaitKind::None
         };
-        let cost = self.emit(Event::SchedSwitch {
-            time: now,
-            cpu,
-            prev_pid,
-            prev_state,
-            next_pid,
-            prev_ip,
-            prev_stack,
-            prev_wait,
-        }) + self.cfg.switch_cost_ns;
+        let cost = Self::emit_to(
+            &mut self.probes,
+            &mut self.stats,
+            &Event::SchedSwitch {
+                time: now,
+                cpu,
+                prev_pid,
+                prev_state,
+                next_pid,
+                prev_ip,
+                prev_stack,
+                prev_wait,
+            },
+        ) + self.cfg.switch_cost_ns;
         if next_pid == IDLE_PID {
             self.cpus[cpu].current = None;
             return;
@@ -344,17 +431,17 @@ impl Kernel {
         t.wait_kind = super::task::WaitKind::None;
         // Re-key into the runqueue at max(own vruntime, min_vruntime):
         // sleepers get a fair re-entry without hoarding credit.
-        let min_vr = self.runqueue.iter().next().map(|(v, _)| *v).unwrap_or(0);
+        let min_vr = self.runqueue.peek_min().map(|(v, _)| v).unwrap_or(0);
         let vr = self.tasks[pid as usize].as_ref().unwrap().vruntime.max(min_vr);
         self.tasks[pid as usize].as_mut().unwrap().vruntime = vr;
-        self.runqueue.insert((vr, pid));
+        self.runqueue.push(pid, vr);
         self.stats.wakeups += 1;
-        let cost = self.emit(Event::SchedWakeup { time: now, cpu: waker_cpu, pid });
+        let cost = self.emit(&Event::SchedWakeup { time: now, cpu: waker_cpu, pid });
         self.cpus[waker_cpu].pending_lag += cost;
         // Pull onto an idle CPU immediately if one exists.
         if let Some(idle) = (0..self.cpus.len()).find(|c| self.cpus[*c].current.is_none())
         {
-            self.dispatch(idle, now, IDLE_PID, TaskState::Runnable, 0, Vec::new());
+            self.dispatch(idle, now, IDLE_PID, TaskState::Runnable);
         }
     }
 
@@ -371,7 +458,7 @@ impl Kernel {
         let ncpu = self.cpus.len();
         for c in 0..ncpu {
             if self.cpus[c].current.is_none() && !self.runqueue.is_empty() {
-                self.dispatch(c, 0, IDLE_PID, TaskState::Runnable, 0, Vec::new());
+                self.dispatch(c, 0, IDLE_PID, TaskState::Runnable);
             }
         }
         if let Some(p) = self.sample_period {
@@ -422,7 +509,7 @@ impl Kernel {
                     ip: t.ip,
                     stack_top: t.stack.last().copied().unwrap_or(0),
                 };
-                let cost = self.emit(Event::SampleTick { time: now, view });
+                let cost = self.emit(&Event::SampleTick { time: now, view });
                 self.cpus[cpu].pending_lag += cost;
             }
         }
@@ -469,16 +556,16 @@ impl Kernel {
                 t.slice_start = now;
                 self.schedule_segment(cpu, pid, now);
             } else {
-                let (ip, stack, vr) = {
+                let vr = {
                     let t = self.task_mut(pid);
                     t.state = TaskState::Runnable;
                     t.nivcsw += 1;
                     t.genseq += 1;
-                    (t.ip, t.stack.clone(), t.vruntime)
+                    t.vruntime
                 };
-                self.runqueue.insert((vr, pid));
+                self.runqueue.push(pid, vr);
                 self.cpus[cpu].current = None;
-                self.dispatch(cpu, now, pid, TaskState::Runnable, ip, stack);
+                self.dispatch(cpu, now, pid, TaskState::Runnable);
             }
             return Ok(());
         }
@@ -520,7 +607,7 @@ impl Kernel {
                     if let Some(idle) =
                         (0..self.cpus.len()).find(|c| self.cpus[*c].current.is_none())
                     {
-                        self.dispatch(idle, now, IDLE_PID, TaskState::Runnable, 0, Vec::new());
+                        self.dispatch(idle, now, IDLE_PID, TaskState::Runnable);
                     }
                 }
                 for w in wakes {
@@ -547,21 +634,20 @@ impl Kernel {
                     return Ok(());
                 }
                 Step::Yield => {
-                    let (ip, stack, vr) = {
+                    let vr = {
                         let t = self.task_mut(pid);
                         t.state = TaskState::Runnable;
                         t.nvcsw += 1;
                         t.genseq += 1;
-                        (t.ip, t.stack.clone(), t.vruntime)
+                        t.vruntime
                     };
-                    self.runqueue.insert((vr, pid));
+                    self.runqueue.push(pid, vr);
                     self.cpus[cpu].current = None;
                     // CFS: if we are still the leftmost task, keep running
-                    // (dispatch handles prev == next by re-selecting us).
-                    if let Some(&(_, next)) = self.runqueue.iter().next() {
+                    // (no switch event, same as prev == next re-selection).
+                    if let Some((_, next)) = self.runqueue.peek_min() {
                         if next == pid {
-                            let vr2 = self.task(pid).unwrap().vruntime;
-                            self.runqueue.remove(&(vr2, pid));
+                            self.runqueue.remove(pid);
                             let q = self.cfg.quantum_ns;
                             let t = self.task_mut(pid);
                             t.state = TaskState::Running;
@@ -571,7 +657,7 @@ impl Kernel {
                             continue; // keep stepping at the same instant
                         }
                     }
-                    self.dispatch(cpu, now, pid, TaskState::Runnable, ip, stack);
+                    self.dispatch(cpu, now, pid, TaskState::Runnable);
                     return Ok(());
                 }
                 Step::Block | Step::Sleep { .. } => {
@@ -582,15 +668,14 @@ impl Kernel {
                             t.wait_kind = super::task::WaitKind::Io;
                         }
                     }
-                    let (ip, stack) = {
+                    {
                         let t = self.task_mut(pid);
                         t.state = TaskState::Blocked;
                         t.nvcsw += 1;
                         t.genseq += 1;
-                        (t.ip, t.stack.clone())
-                    };
+                    }
                     self.cpus[cpu].current = None;
-                    self.dispatch(cpu, now, pid, TaskState::Blocked, ip, stack);
+                    self.dispatch(cpu, now, pid, TaskState::Blocked);
                     return Ok(());
                 }
                 Step::Exit => {
@@ -602,14 +687,10 @@ impl Kernel {
                     }
                     self.logic[pid as usize] = None;
                     self.stats.exited += 1;
-                    self.emit(Event::ProcessExit { time: now, pid });
+                    self.emit(&Event::ProcessExit { time: now, pid });
                     self.on_tracked_exit(pid);
-                    let (ip, stack) = {
-                        let t = self.task(pid).unwrap();
-                        (t.ip, t.stack.clone())
-                    };
                     self.cpus[cpu].current = None;
-                    self.dispatch(cpu, now, pid, TaskState::Blocked, ip, stack);
+                    self.dispatch(cpu, now, pid, TaskState::Blocked);
                     return Ok(());
                 }
             }
@@ -659,6 +740,35 @@ mod tests {
             switch_cost_ns: 0,
             ..Default::default()
         }
+    }
+
+    #[test]
+    fn runqueue_orders_by_vruntime_then_pid() {
+        let mut rq = RunQueue::default();
+        rq.push(5, 100);
+        rq.push(3, 100);
+        rq.push(9, 50);
+        assert_eq!(rq.peek_min(), Some((50, 9)));
+        assert_eq!(rq.pop_min(), Some((50, 9)));
+        // Tie on vruntime: lower pid wins (the BTreeSet ordering).
+        assert_eq!(rq.pop_min(), Some((100, 3)));
+        assert_eq!(rq.pop_min(), Some((100, 5)));
+        assert_eq!(rq.pop_min(), None);
+        assert!(rq.is_empty());
+    }
+
+    #[test]
+    fn runqueue_lazy_deletion_skips_stale_entries() {
+        let mut rq = RunQueue::default();
+        rq.push(1, 10);
+        rq.push(2, 20);
+        rq.remove(1);
+        assert_eq!(rq.peek_min(), Some((20, 2)));
+        // Re-push supersedes: only the newest entry for a pid is live.
+        rq.push(2, 5);
+        assert_eq!(rq.pop_min(), Some((5, 2)));
+        assert_eq!(rq.pop_min(), None);
+        assert!(rq.is_empty());
     }
 
     #[test]
@@ -766,7 +876,7 @@ mod tests {
     struct CostProbe;
 
     impl Probe for CostProbe {
-        fn on_event(&mut self, ev: &Event) -> u64 {
+        fn on_event(&mut self, ev: &Event<'_>) -> u64 {
             match ev {
                 Event::SchedSwitch { .. } => 10_000,
                 _ => 0,
@@ -795,7 +905,7 @@ mod tests {
     }
 
     impl Probe for SamplerProbe {
-        fn on_event(&mut self, ev: &Event) -> u64 {
+        fn on_event(&mut self, ev: &Event<'_>) -> u64 {
             if matches!(ev, Event::SampleTick { .. }) {
                 *self.ticks.borrow_mut() += 1;
             }

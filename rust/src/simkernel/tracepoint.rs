@@ -26,8 +26,15 @@ pub struct SampleView {
 }
 
 /// A kernel tracepoint event, with the arguments the real ABI provides.
+///
+/// Borrowed, not owned: a real tracepoint hands probes pointers into
+/// kernel structures valid for the handler's duration, and the event
+/// fan-out must not allocate. `prev_stack` and `comm` are therefore
+/// slices borrowed from the emitting kernel; probes that need to keep
+/// them copy explicitly (as a real BPF program would with
+/// `bpf_probe_read`).
 #[derive(Clone, Debug)]
-pub enum Event {
+pub enum Event<'a> {
     /// Context switch on `cpu`: `prev` out (in `prev_state`), `next` in.
     /// `prev_stack`/`prev_ip` snapshot what a kernel stack walk would see
     /// for the outgoing task (empty for the idle task).
@@ -38,7 +45,7 @@ pub enum Event {
         prev_state: TaskState,
         next_pid: Pid,
         prev_ip: u64,
-        prev_stack: Vec<u64>,
+        prev_stack: &'a [u64],
         /// What `prev` blocked on when `prev_state == Blocked` (the §7
         /// classification extension's input; a real deployment derives
         /// it from futex/syscall tracepoints).
@@ -51,7 +58,7 @@ pub enum Event {
         time: Time,
         pid: Pid,
         parent: Pid,
-        comm: String,
+        comm: &'a str,
     },
     /// Task exited (`sched_process_exit`).
     ProcessExit { time: Time, pid: Pid },
@@ -59,7 +66,7 @@ pub enum Event {
     SampleTick { time: Time, view: SampleView },
 }
 
-impl Event {
+impl<'a> Event<'a> {
     pub fn time(&self) -> Time {
         match self {
             Event::SchedSwitch { time, .. }
@@ -78,7 +85,7 @@ pub type ProbeCost = u64;
 /// (`gapp::probes`), baseline profilers, and test instrumentation.
 pub trait Probe {
     /// Handle an event; return the handler's cost in nanoseconds.
-    fn on_event(&mut self, ev: &Event) -> ProbeCost;
+    fn on_event(&mut self, ev: &Event<'_>) -> ProbeCost;
 
     /// Sampling period, if this probe wants `SampleTick`s (paper's Δt).
     fn sample_period(&self) -> Option<Time> {
@@ -103,8 +110,12 @@ pub mod cost {
     pub const WAKEUP: u64 = 180;
     /// task_newtask / task_rename / exit bookkeeping.
     pub const LIFECYCLE: u64 = 400;
-    /// Capturing one stack frame into the ring buffer.
+    /// Walking one stack frame during capture.
     pub const STACK_FRAME: u64 = 80;
+    /// `bpf_get_stackid()`-style intern: hash the walked frames and
+    /// look them up in the bounded stack map (the record then carries a
+    /// 4-byte id instead of the frames).
+    pub const STACKMAP_LOOKUP: u64 = 120;
     /// Ring-buffer reserve/commit for one record.
     pub const RINGBUF_RECORD: u64 = 150;
     /// Sampling interrupt fast path (thread_count compare).
@@ -122,7 +133,7 @@ mod tests {
     }
 
     impl Probe for CountingProbe {
-        fn on_event(&mut self, ev: &Event) -> ProbeCost {
+        fn on_event(&mut self, ev: &Event<'_>) -> ProbeCost {
             if matches!(ev, Event::SchedSwitch { .. }) {
                 self.switches += 1;
             }
@@ -140,7 +151,7 @@ mod tests {
             prev_state: TaskState::Blocked,
             next_pid: 2,
             prev_ip: 0,
-            prev_stack: vec![],
+            prev_stack: &[],
             prev_wait: super::super::task::WaitKind::Futex,
         };
         assert_eq!(p.on_event(&ev), 100);

@@ -17,13 +17,17 @@ use std::time::{Duration, Instant};
 
 use super::stats::{fmt_ns, Summary};
 
-/// Harness configuration (override via env: BENCH_MIN_SAMPLES, BENCH_MIN_MS).
+/// Harness configuration (override via env: BENCH_MIN_SAMPLES,
+/// BENCH_MIN_MS, BENCH_WARMUP).
 #[derive(Clone, Debug)]
 pub struct BenchConfig {
     pub warmup_iters: u64,
     pub min_samples: usize,
     pub min_time: Duration,
     pub batch: u64,
+    /// Write `BENCH_<group>.json` at the repo root on `finish()` so the
+    /// perf trajectory is tracked across PRs (disable for unit tests).
+    pub emit_json: bool,
 }
 
 impl Default for BenchConfig {
@@ -33,6 +37,7 @@ impl Default for BenchConfig {
             min_samples: 20,
             min_time: Duration::from_millis(300),
             batch: 1,
+            emit_json: true,
         }
     }
 }
@@ -41,8 +46,16 @@ impl Default for BenchConfig {
 pub struct Bench {
     group: String,
     cfg: BenchConfig,
-    results: Vec<(String, Summary)>,
+    results: Vec<BenchResult>,
     filter: Option<String>,
+}
+
+/// One finished benchmark: name, declared per-iteration items, summary.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub items: u64,
+    pub summary: Summary,
 }
 
 impl Bench {
@@ -68,6 +81,11 @@ impl Bench {
         if let Ok(v) = std::env::var("BENCH_MIN_MS") {
             if let Ok(n) = v.parse() {
                 cfg.min_time = Duration::from_millis(n);
+            }
+        }
+        if let Ok(v) = std::env::var("BENCH_WARMUP") {
+            if let Ok(n) = v.parse() {
+                cfg.warmup_iters = n;
             }
         }
         let filter = std::env::args().skip(1).find(|a| !a.starts_with('-'));
@@ -132,16 +150,88 @@ impl Bench {
             line.push_str(&format!("  {:.2} Mitems/s", per_sec / 1e6));
         }
         println!("{line}");
-        self.results.push((name.to_string(), s.clone()));
+        self.results.push(BenchResult {
+            name: name.to_string(),
+            items,
+            summary: s.clone(),
+        });
         Some(s)
     }
 
-    /// Print a closing line; returns collected summaries for programmatic
-    /// use (e.g. regression assertions in the perf pass).
+    /// Print a closing line and (unless disabled) write the
+    /// machine-readable `BENCH_<group>.json`; returns collected
+    /// summaries for programmatic use (e.g. regression assertions in
+    /// the perf pass).
     pub fn finish(self) -> Vec<(String, Summary)> {
         println!("== end group: {} ({} benchmarks) ==", self.group, self.results.len());
+        if self.filter.is_some() {
+            // A filtered run covers a subset; writing the JSON would make
+            // PR-to-PR diffs of the trajectory file compare different
+            // bench sets, so skip emission.
+            println!("(name filter active: not writing BENCH_{}.json)", self.group);
+        } else if self.cfg.emit_json && !self.results.is_empty() {
+            let path = json_out_path(&self.group);
+            match std::fs::write(&path, render_json(&self.group, &self.results)) {
+                Ok(()) => println!("wrote {}", path.display()),
+                Err(e) => eprintln!("could not write {}: {e}", path.display()),
+            }
+        }
         self.results
+            .into_iter()
+            .map(|r| (r.name, r.summary))
+            .collect()
     }
+}
+
+/// `BENCH_<group>.json` goes to $BENCH_JSON_DIR when set, else the repo
+/// root (nearest ancestor holding ROADMAP.md), else the current dir.
+/// Cargo runs bench binaries with cwd = package root, so the repo root
+/// is normally one level up.
+fn json_out_path(group: &str) -> std::path::PathBuf {
+    let file = format!("BENCH_{group}.json");
+    if let Some(dir) = std::env::var_os("BENCH_JSON_DIR") {
+        return std::path::PathBuf::from(dir).join(file);
+    }
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    for _ in 0..4 {
+        if dir.join("ROADMAP.md").exists() {
+            return dir.join(file);
+        }
+        if !dir.pop() {
+            break;
+        }
+    }
+    std::path::PathBuf::from(file)
+}
+
+/// Hand-rolled JSON (no serde in the offline registry): a stable schema
+/// the perf pass diffs across PRs.
+fn render_json(group: &str, results: &[BenchResult]) -> String {
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str(&format!("  \"group\": \"{group}\",\n"));
+    out.push_str("  \"schema\": 1,\n");
+    out.push_str("  \"benches\": [\n");
+    for (i, r) in results.iter().enumerate() {
+        let s = &r.summary;
+        out.push_str(&format!(
+            "    {{\"name\": \"{}\", \"n\": {}, \"mean_ns\": {:.1}, \"p50_ns\": {:.1}, \"p99_ns\": {:.1}, \"items\": {}, \"items_per_sec\": {:.1}}}{}\n",
+            r.name,
+            s.n,
+            s.mean,
+            s.p50,
+            s.p99,
+            r.items,
+            if s.mean > 0.0 {
+                r.items as f64 / (s.mean / 1e9)
+            } else {
+                0.0
+            },
+            if i + 1 < results.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    out
 }
 
 /// Opaque value sink to prevent the optimizer deleting benched work
@@ -161,6 +251,7 @@ mod tests {
             min_samples: 3,
             min_time: Duration::from_millis(1),
             batch: 1,
+            emit_json: false,
         }
     }
 
@@ -191,5 +282,22 @@ mod tests {
             })
             .unwrap();
         assert!(s.mean > 0.0);
+    }
+
+    #[test]
+    fn json_rendering_is_wellformed() {
+        let results = vec![BenchResult {
+            name: "push_pop".into(),
+            items: 4096,
+            summary: Summary::of(&[100.0, 110.0, 120.0]),
+        }];
+        let j = render_json("hotpath", &results);
+        assert!(j.contains("\"group\": \"hotpath\""));
+        assert!(j.contains("\"name\": \"push_pop\""));
+        assert!(j.contains("\"items\": 4096"));
+        assert!(j.trim_end().ends_with('}'));
+        // Balanced braces/brackets (cheap well-formedness check).
+        assert_eq!(j.matches('{').count(), j.matches('}').count());
+        assert_eq!(j.matches('[').count(), j.matches(']').count());
     }
 }

@@ -1,0 +1,161 @@
+//! Dense pid-indexed map.
+//!
+//! The simulated kernel allocates pids densely from 1, so per-pid probe
+//! state (`cm_hash`, slot assignment, last waker, exit flags) is best
+//! served by a plain vector indexed by pid: O(1) with no hashing at all,
+//! the analogue of a `BPF_MAP_TYPE_ARRAY` keyed by pid. Iteration is in
+//! ascending pid order, which makes downstream reports deterministic
+//! without a sort.
+
+/// Vector-backed map from `u32` pids to `T`.
+#[derive(Clone, Debug, Default)]
+pub struct PidMap<T> {
+    slots: Vec<Option<T>>,
+    len: usize,
+    /// High-water mark of occupied entries (memory accounting).
+    peak: usize,
+}
+
+impl<T> PidMap<T> {
+    pub fn new() -> PidMap<T> {
+        PidMap {
+            slots: Vec::new(),
+            len: 0,
+            peak: 0,
+        }
+    }
+
+    #[inline]
+    pub fn get(&self, pid: u32) -> Option<&T> {
+        self.slots.get(pid as usize).and_then(|s| s.as_ref())
+    }
+
+    #[inline]
+    pub fn get_mut(&mut self, pid: u32) -> Option<&mut T> {
+        self.slots.get_mut(pid as usize).and_then(|s| s.as_mut())
+    }
+
+    #[inline]
+    pub fn contains(&self, pid: u32) -> bool {
+        self.get(pid).is_some()
+    }
+
+    /// Insert, growing the backing vector as needed; returns the old
+    /// value, if any.
+    pub fn insert(&mut self, pid: u32, v: T) -> Option<T> {
+        let i = pid as usize;
+        if i >= self.slots.len() {
+            self.slots.resize_with(i + 1, || None);
+        }
+        let old = self.slots[i].replace(v);
+        if old.is_none() {
+            self.len += 1;
+            self.peak = self.peak.max(self.len);
+        }
+        old
+    }
+
+    pub fn remove(&mut self, pid: u32) -> Option<T> {
+        let old = self.slots.get_mut(pid as usize).and_then(|s| s.take());
+        if old.is_some() {
+            self.len -= 1;
+        }
+        old
+    }
+
+    /// Mutable access to the entry, inserting `default()` if vacant
+    /// (the `entry().or_insert_with()` idiom without hashing).
+    pub fn get_mut_or(&mut self, pid: u32, default: impl FnOnce() -> T) -> &mut T {
+        let i = pid as usize;
+        if i >= self.slots.len() {
+            self.slots.resize_with(i + 1, || None);
+        }
+        let slot = &mut self.slots[i];
+        if slot.is_none() {
+            *slot = Some(default());
+            self.len += 1;
+            self.peak = self.peak.max(self.len);
+        }
+        slot.as_mut().unwrap()
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Occupied entries in ascending pid order.
+    pub fn iter(&self) -> impl Iterator<Item = (u32, &T)> + '_ {
+        self.slots
+            .iter()
+            .enumerate()
+            .filter_map(|(i, s)| s.as_ref().map(|v| (i as u32, v)))
+    }
+
+    /// Peak occupancy (for the paper's memory column).
+    pub fn peak_len(&self) -> usize {
+        self.peak
+    }
+
+    /// Approximate backing storage in bytes.
+    pub fn approx_bytes(&self) -> u64 {
+        (self.slots.capacity() * std::mem::size_of::<Option<T>>()) as u64
+    }
+}
+
+impl PidMap<f64> {
+    /// `map[pid] += delta`, inserting 0.0 first — BPF-style accumulate.
+    #[inline]
+    pub fn add(&mut self, pid: u32, delta: f64) {
+        *self.get_mut_or(pid, || 0.0) += delta;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_get_remove() {
+        let mut m: PidMap<u32> = PidMap::new();
+        assert!(m.get(5).is_none());
+        assert_eq!(m.insert(5, 50), None);
+        assert_eq!(m.insert(5, 51), Some(50));
+        assert_eq!(m.get(5), Some(&51));
+        assert_eq!(m.len(), 1);
+        assert_eq!(m.remove(5), Some(51));
+        assert!(m.is_empty());
+        assert_eq!(m.remove(5), None);
+        assert_eq!(m.peak_len(), 1);
+    }
+
+    #[test]
+    fn iter_is_pid_ordered() {
+        let mut m: PidMap<&str> = PidMap::new();
+        m.insert(9, "c");
+        m.insert(1, "a");
+        m.insert(4, "b");
+        let got: Vec<(u32, &&str)> = m.iter().collect();
+        assert_eq!(got, vec![(1, &"a"), (4, &"b"), (9, &"c")]);
+    }
+
+    #[test]
+    fn accumulate_f64() {
+        let mut m: PidMap<f64> = PidMap::new();
+        m.add(3, 1.5);
+        m.add(3, 2.5);
+        assert_eq!(m.get(3), Some(&4.0));
+    }
+
+    #[test]
+    fn get_mut_or_inserts_once() {
+        let mut m: PidMap<Vec<u32>> = PidMap::new();
+        m.get_mut_or(2, Vec::new).push(7);
+        m.get_mut_or(2, Vec::new).push(8);
+        assert_eq!(m.get(2), Some(&vec![7, 8]));
+        assert_eq!(m.len(), 1);
+    }
+}

@@ -8,6 +8,10 @@ pub mod stats;
 pub mod cli;
 pub mod bench;
 pub mod check;
+pub mod fxhash;
+pub mod densemap;
 
+pub use densemap::PidMap;
+pub use fxhash::{BuildFxHasher, FxHashMap, FxHashSet, FxHasher};
 pub use prng::Prng;
 pub use stats::Summary;

@@ -1,0 +1,124 @@
+//! Golden-report regression tests for the stack-interning refactor.
+//!
+//! Critical-slice call paths travel through the pipeline as interned
+//! `u32` stack ids instead of owned frame vectors. These tests pin down
+//! that this changed the *representation*, not the *results*:
+//!
+//! 1. Profiling a fixed-seed app twice yields byte-identical ranked
+//!    call paths and per-thread CMetric totals (determinism golden).
+//! 2. Merging by stack id is exactly equivalent to merging by resolved
+//!    frames — recomputed independently from the raw slices against the
+//!    kernel stack map (semantic golden: interning is lossless).
+
+use std::collections::BTreeMap;
+
+use gapp::gapp::{profile, GappConfig, GappSession};
+use gapp::runtime::AnalysisEngine;
+use gapp::simkernel::{Kernel, KernelConfig};
+use gapp::workload::apps;
+use gapp::workload::App;
+
+/// The stable fingerprint of a profile: ranked symbolized call paths
+/// with their CMetric/slice totals, plus per-thread CMetric totals.
+fn fingerprint(app: &App) -> (Vec<(Vec<String>, u64, u64)>, Vec<(u32, u64, u64)>) {
+    let (report, _) = profile(
+        app,
+        KernelConfig::default(),
+        GappConfig::default(),
+        AnalysisEngine::native(),
+    )
+    .unwrap();
+    let paths = report
+        .bottlenecks
+        .iter()
+        .map(|b| {
+            (
+                b.call_path.clone(),
+                // Round through fixed-point so the fingerprint is exact.
+                (b.total_cm_ms * 1e6) as u64,
+                b.slices,
+            )
+        })
+        .collect();
+    let threads = report
+        .threads
+        .iter()
+        .map(|t| (t.pid, (t.cm_ms * 1e6) as u64, (t.wall_ms * 1e6) as u64))
+        .collect();
+    (paths, threads)
+}
+
+#[test]
+fn fixed_seed_profiles_are_byte_identical() {
+    for mk in [
+        (|| apps::blackscholes(8, 3)) as fn() -> App,
+        || apps::canneal(8, 5),
+    ] {
+        let a = fingerprint(&mk());
+        let b = fingerprint(&mk());
+        assert_eq!(a, b, "profile fingerprint changed between identical runs");
+        assert!(!a.0.is_empty(), "no bottlenecks found");
+        assert!(!a.1.is_empty(), "no per-thread totals");
+    }
+}
+
+#[test]
+fn merge_by_stack_id_equals_merge_by_frames() {
+    for mk in [
+        (|| apps::blackscholes(8, 3)) as fn() -> App,
+        || apps::canneal(8, 5),
+    ] {
+        let app = mk();
+        let session =
+            GappSession::new(GappConfig::default(), 64, AnalysisEngine::native())
+                .unwrap();
+        let mut kernel = Kernel::new(KernelConfig::default());
+        kernel.attach_probe(session.probe());
+        app.spawn_into(&mut kernel);
+        let end = kernel.run().unwrap();
+        let _report = session.finish(&app, &kernel, end);
+
+        let mut core = session.core.borrow_mut();
+        // These runs must fit the stack map: interning may never have
+        // dropped a path, or the comparison below is vacuous.
+        assert_eq!(core.kernel.stacks.stats.drops, 0);
+        assert!(core.kernel.stacks.len() > 0, "no stacks interned");
+
+        // Reference: group raw slices by *resolved frames* (exactly what
+        // the pre-interning pipeline hashed on).
+        let mut by_frames: BTreeMap<Vec<u64>, (f64, u64)> = BTreeMap::new();
+        for s in core.user.slices.clone() {
+            let frames = core.kernel.stacks.resolve(s.stack_id).to_vec();
+            let e = by_frames.entry(frames).or_insert((0.0, 0));
+            e.0 += s.cm_ns;
+            e.1 += 1;
+        }
+
+        // Under test: the id-grouped merge, over ALL paths (top_n large
+        // enough to rank everything the native backend returns).
+        let merged = core.user.merge_and_rank(usize::MAX / 2);
+        let mut by_id: BTreeMap<Vec<u64>, (f64, u64)> = BTreeMap::new();
+        for m in &merged {
+            let frames = core.kernel.stacks.resolve(m.stack_id).to_vec();
+            let prev = by_id.insert(frames, (m.total_cm_ns, m.slices));
+            assert!(prev.is_none(), "two merged paths resolved to one stack");
+        }
+
+        // Ranking excludes zero-CMetric paths; mirror that in the
+        // reference before comparing.
+        by_frames.retain(|_, (cm, _)| *cm > 0.0);
+        assert_eq!(
+            by_frames.keys().collect::<Vec<_>>(),
+            by_id.keys().collect::<Vec<_>>(),
+            "id-merge and frame-merge disagree on the path set"
+        );
+        for (frames, (cm, n)) in &by_frames {
+            let (cm2, n2) = by_id[frames];
+            assert_eq!(*n, n2, "slice count differs for {frames:?}");
+            assert!(
+                (cm - cm2).abs() < 1e-6 * cm.max(1.0),
+                "CMetric differs for {frames:?}: {cm} vs {cm2}"
+            );
+        }
+    }
+}

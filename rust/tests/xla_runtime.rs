@@ -8,10 +8,20 @@
 use gapp::runtime::{analysis, AnalysisEngine, XlaEngine, BATCH, T_SLOTS};
 use gapp::util::Prng;
 
-fn artifacts_present() -> bool {
-    gapp::runtime::artifacts_dir()
+/// XLA runs need both the compiled crate feature and built artifacts;
+/// missing either skips (does not fail) these tests.
+fn xla_available() -> bool {
+    if !cfg!(feature = "xla") {
+        eprintln!("skipping: built without the `xla` feature");
+        return false;
+    }
+    let present = gapp::runtime::artifacts_dir()
         .join(format!("cmetric_b{BATCH}_t{T_SLOTS}.hlo.txt"))
-        .exists()
+        .exists();
+    if !present {
+        eprintln!("skipping: run `make artifacts` first");
+    }
+    present
 }
 
 fn random_batch(seed: u64) -> (Vec<f32>, Vec<f32>) {
@@ -25,8 +35,7 @@ fn random_batch(seed: u64) -> (Vec<f32>, Vec<f32>) {
 
 #[test]
 fn xla_analyze_matches_native() {
-    if !artifacts_present() {
-        eprintln!("skipping: run `make artifacts` first");
+    if !xla_available() {
         return;
     }
     let mut e = XlaEngine::load(&gapp::runtime::artifacts_dir()).expect("load artifacts");
@@ -48,8 +57,7 @@ fn xla_analyze_matches_native() {
 
 #[test]
 fn xla_rank_matches_native() {
-    if !artifacts_present() {
-        eprintln!("skipping: run `make artifacts` first");
+    if !xla_available() {
         return;
     }
     let mut e = XlaEngine::load(&gapp::runtime::artifacts_dir()).expect("load artifacts");
@@ -66,8 +74,7 @@ fn xla_rank_matches_native() {
 
 #[test]
 fn full_profile_with_xla_backend_matches_kernel_cm_hash() {
-    if !artifacts_present() {
-        eprintln!("skipping: run `make artifacts` first");
+    if !xla_available() {
         return;
     }
     use gapp::gapp::{GappConfig, GappSession};
@@ -87,7 +94,7 @@ fn full_profile_with_xla_backend_matches_kernel_cm_hash() {
     assert!(!report.threads.is_empty());
     let core = session.core.borrow();
     for t in &report.threads {
-        let kernel_cm = core.kernel.cm_hash_ns.get(&t.pid).copied().unwrap_or(0.0);
+        let kernel_cm = core.kernel.cm_hash(t.pid);
         let user_cm = t.cm_ms * 1e6;
         let rel = (kernel_cm - user_cm).abs() / kernel_cm.max(1.0);
         assert!(

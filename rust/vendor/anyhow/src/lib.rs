@@ -1,0 +1,197 @@
+//! Offline stand-in for the `anyhow` crate.
+//!
+//! The vendored offline registry this workspace builds against does not
+//! carry `anyhow`, so this crate implements the (small) subset the
+//! workspace uses with the same names and semantics: [`Error`],
+//! [`Result`], the [`anyhow!`]/[`bail!`]/[`ensure!`] macros and the
+//! [`Context`] extension trait. Like the real crate, `Error` does *not*
+//! implement `std::error::Error` (that is what makes the blanket
+//! `From<E: std::error::Error>` impl legal), `{:#}` renders the full
+//! context chain and `{}` only the outermost message.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// A dynamically-typed error with a context chain.
+pub struct Error {
+    /// Root message (innermost cause we were constructed from).
+    msg: String,
+    /// Contexts added via [`Context`], innermost first.
+    context: Vec<String>,
+    /// Original error object, kept for its `source()` chain.
+    source: Option<Box<dyn StdError + Send + Sync + 'static>>,
+}
+
+impl Error {
+    /// Construct from a displayable message (what `anyhow!` expands to).
+    pub fn msg(m: impl fmt::Display) -> Error {
+        Error {
+            msg: m.to_string(),
+            context: Vec::new(),
+            source: None,
+        }
+    }
+
+    /// Attach an outer context message.
+    pub fn context(mut self, c: impl fmt::Display) -> Error {
+        self.context.push(c.to_string());
+        self
+    }
+
+    /// Root cause message (innermost).
+    pub fn root_cause_msg(&self) -> &str {
+        &self.msg
+    }
+
+    fn write_chain(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for c in self.context.iter().rev() {
+            write!(f, "{c}: ")?;
+        }
+        write!(f, "{}", self.msg)?;
+        // Walk the wrapped error's own source chain, if any.
+        let mut src = self.source.as_ref().and_then(|e| e.source());
+        while let Some(s) = src {
+            write!(f, ": {s}")?;
+            src = s.source();
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Display for Error {
+    /// `{}` renders the outermost message, `{:#}` the full chain —
+    /// matching the real anyhow's formatting contract.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            self.write_chain(f)
+        } else {
+            match self.context.last() {
+                Some(c) => write!(f, "{c}"),
+                None => write!(f, "{}", self.msg),
+            }
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        self.write_chain(f)
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error {
+            msg: e.to_string(),
+            context: Vec::new(),
+            source: Some(Box::new(e)),
+        }
+    }
+}
+
+/// `anyhow::Result<T>`: `std::result::Result` defaulting to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(...)` / `.with_context(...)`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| e.into().context(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => { $crate::Error::msg(format!($msg)) };
+    ($fmt:literal, $($arg:tt)*) => { $crate::Error::msg(format!($fmt, $($arg)*)) };
+    ($err:expr $(,)?) => { $crate::Error::msg($err) };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)+) => { return Err($crate::anyhow!($($t)+)) };
+}
+
+/// Return early with an error when a condition does not hold.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($rest:tt)+) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($rest)+));
+        }
+    };
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::anyhow!("condition failed: {}", stringify!($cond)));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails_io() -> Result<()> {
+        let e = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        Err(e).context("opening artifact")
+    }
+
+    #[test]
+    fn context_chain_renders() {
+        let e = fails_io().unwrap_err();
+        assert_eq!(format!("{e}"), "opening artifact");
+        assert_eq!(format!("{e:#}"), "opening artifact: gone");
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        let e = anyhow!("bad {}", 7);
+        assert_eq!(format!("{e}"), "bad 7");
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x > 2, "x too small: {x}");
+            if x > 100 {
+                bail!("x too big");
+            }
+            Ok(x)
+        }
+        assert!(f(5).is_ok());
+        assert!(format!("{}", f(1).unwrap_err()).contains("too small"));
+        assert!(format!("{}", f(101).unwrap_err()).contains("too big"));
+    }
+
+    #[test]
+    fn question_mark_converts() {
+        fn g() -> Result<String> {
+            let s = std::str::from_utf8(&[0xff])?;
+            Ok(s.to_string())
+        }
+        assert!(g().is_err());
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("missing").unwrap_err();
+        assert_eq!(format!("{e}"), "missing");
+    }
+}
