@@ -68,6 +68,59 @@ fn main() {
         );
     });
 
+    // Streaming-vs-batch: the same profile driven through the online
+    // analyzer in 5 ms epoch windows (drain + window merge + per-window
+    // top-K each epoch). Compare against profile_canneal_16t_end_to_end
+    // to read the streaming overhead directly from BENCH_hotpath.json.
+    b.bench("live_canneal_16t_w5ms_end_to_end", || {
+        let app = apps::canneal(16, 3);
+        let run = gapp::gapp::stream::run_live(
+            std::slice::from_ref(&app),
+            KernelConfig::default(),
+            GappConfig::default(),
+            AnalysisEngine::native(),
+            gapp::gapp::stream::LiveConfig {
+                window_ns: 5_000_000,
+                ..Default::default()
+            },
+            |w| sink(w.top.len()),
+        )
+        .unwrap();
+        sink(run.report.runtime_ns);
+    });
+
+    // The window-merge primitive on its own: fold 64 snapshots of 8
+    // paths each into the cumulative merge.
+    {
+        use gapp::gapp::userspace::{PathAccumulator, SliceEntry};
+        let mut windows = Vec::new();
+        for w in 0..64u64 {
+            let mut acc = PathAccumulator::new();
+            for i in 0..256u64 {
+                acc.add_slice(
+                    &SliceEntry {
+                        ts_id: w * 256 + i,
+                        pid: (i % 16) as u32,
+                        cm_ns: 1000.0 + i as f64,
+                        threads_av: 1.0,
+                        stack_id: (i % 8) as u32,
+                        addrs: vec![0x40_0000 + (i % 32) * 8],
+                        from_stack_top: false,
+                        wait: WaitKind::Futex,
+                        woken_by: 0,
+                    },
+                    0,
+                );
+            }
+            windows.push(acc.take_paths());
+        }
+        b.bench_items("window_merge_64x8_paths", 64 * 8, || {
+            sink(gapp::gapp::stream::merge_snapshots(
+                windows.iter().map(|w| w.as_slice()),
+            ));
+        });
+    }
+
     // --- probe handlers: per-event cost ---------------------------------
     // Discard path (nmin=1 → no slice is ever critical).
     {

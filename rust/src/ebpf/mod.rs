@@ -27,6 +27,6 @@ pub mod stackmap;
 pub mod verifier;
 
 pub use maps::{HashMap64, PerCpuScalar, Scalar};
-pub use ringbuf::{RingBuf, RingBufStats};
-pub use stackmap::{StackMap, StackMapStats, STACK_ID_DROPPED};
+pub use ringbuf::{EpochDelta, RingBuf, RingBufStats, RingCursor};
+pub use stackmap::{EvictPolicy, StackMap, StackMapStats, STACK_ID_DROPPED};
 pub use verifier::{ProgramSpec, Verifier, VerifierError};

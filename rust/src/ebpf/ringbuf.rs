@@ -2,6 +2,11 @@
 //! (paper Figure 2). Bounded like a perf ring buffer: when the consumer
 //! falls behind, new records are *dropped* and counted, which is exactly
 //! the failure mode a real deployment tunes buffer pages against.
+//!
+//! Epoch-based consumers (the streaming analyzer's poll loop) read the
+//! producer counters through a [`RingCursor`], which attributes pushes,
+//! drains and — crucially — *drops* to the epoch in which they occurred
+//! instead of one run-global total.
 
 /// Drop/throughput statistics for a ring buffer.
 #[derive(Clone, Copy, Debug, Default)]
@@ -11,6 +16,47 @@ pub struct RingBufStats {
     pub drained: u64,
     /// High-water mark of queued records.
     pub peak: usize,
+}
+
+/// Producer-side activity observed by a [`RingCursor`] over one epoch.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct EpochDelta {
+    /// Records successfully pushed during the epoch.
+    pub pushed: u64,
+    /// Records dropped at capacity during the epoch — the per-window
+    /// drop figure the streaming report surfaces.
+    pub dropped: u64,
+    /// Records drained by consumers during the epoch.
+    pub drained: u64,
+}
+
+/// Consumer cursor: a snapshot of a ring buffer's monotonic counters.
+///
+/// An epoch-windowed consumer calls [`RingCursor::advance`] once per
+/// epoch; the returned [`EpochDelta`] charges exactly the activity since
+/// the previous call, so drops land in the window where they happened
+/// (previously only a single run-global counter existed).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RingCursor {
+    pushed_seen: u64,
+    dropped_seen: u64,
+    drained_seen: u64,
+}
+
+impl RingCursor {
+    /// Advance to `rb`'s current counters, returning the deltas since
+    /// this cursor last observed them.
+    pub fn advance<T>(&mut self, rb: &RingBuf<T>) -> EpochDelta {
+        let d = EpochDelta {
+            pushed: rb.stats.pushed - self.pushed_seen,
+            dropped: rb.stats.dropped - self.dropped_seen,
+            drained: rb.stats.drained - self.drained_seen,
+        };
+        self.pushed_seen = rb.stats.pushed;
+        self.dropped_seen = rb.stats.dropped;
+        self.drained_seen = rb.stats.drained;
+        d
+    }
 }
 
 /// Bounded FIFO of records of type `T`.
@@ -83,6 +129,17 @@ impl<T> RingBuf<T> {
     pub fn peak_bytes(&self) -> u64 {
         self.stats.peak as u64 * self.record_bytes
     }
+
+    /// A cursor positioned at the buffer's *current* counters (an epoch
+    /// starting now). Use `RingCursor::default()` for a cursor that
+    /// charges everything since buffer creation to its first epoch.
+    pub fn cursor(&self) -> RingCursor {
+        RingCursor {
+            pushed_seen: self.stats.pushed,
+            dropped_seen: self.stats.dropped,
+            drained_seen: self.stats.drained,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -126,6 +183,47 @@ mod tests {
         assert_eq!(n2, 6);
         assert_eq!(rb.len(), 0);
         assert_eq!(rb.stats.drained, 10);
+    }
+
+    #[test]
+    fn cursor_attributes_drops_to_their_epoch() {
+        let mut rb = RingBuf::new(4);
+        let mut cur = RingCursor::default();
+        // Epoch 1: 6 pushes into a 4-slot ring → 2 drops.
+        for i in 0..6 {
+            rb.push(i);
+        }
+        let e1 = cur.advance(&rb);
+        assert_eq!(e1.pushed, 4);
+        assert_eq!(e1.dropped, 2);
+        assert_eq!(e1.drained, 0);
+        // Consumer catches up, then epoch 2 overflows by exactly 1.
+        while rb.pop().is_some() {}
+        for i in 0..5 {
+            rb.push(i);
+        }
+        let e2 = cur.advance(&rb);
+        assert_eq!(e2.pushed, 4);
+        assert_eq!(e2.dropped, 1);
+        assert_eq!(e2.drained, 4);
+        // Per-epoch drops sum to the global counter.
+        assert_eq!(e1.dropped + e2.dropped, rb.stats.dropped);
+        // A quiet epoch reports all-zero deltas.
+        assert_eq!(cur.advance(&rb), EpochDelta::default());
+    }
+
+    #[test]
+    fn fresh_cursor_starts_at_current_counters() {
+        let mut rb = RingBuf::new(2);
+        for i in 0..5 {
+            rb.push(i);
+        }
+        // `cursor()` skips history; `default()` charges it to epoch 1.
+        let mut at_now = rb.cursor();
+        let mut from_start = RingCursor::default();
+        rb.push(9);
+        assert_eq!(at_now.advance(&rb).dropped, 1);
+        assert_eq!(from_start.advance(&rb).dropped, 4);
     }
 
     #[test]

@@ -11,11 +11,23 @@
 //! This map reproduces the mechanism: frames are stored once in a flat
 //! arena, an FxHash bucket index (hash → chain of candidate ids) gives
 //! O(1) expected lookup with exact frame comparison, and capacity is
-//! bounded — once `max_entries` distinct stacks exist, further *new*
-//! stacks are dropped and counted (the `bpf_get_stackid` failure mode a
-//! deployment tunes `max_entries` against), while known stacks keep
-//! resolving. Ids are dense (0, 1, 2, …) in first-capture order, so the
-//! user-space merge can group by id with a dense table.
+//! bounded. What happens at capacity is the [`EvictPolicy`]:
+//!
+//! * [`EvictPolicy::DropNew`] (default, the `bpf_get_stackid` `-ENOMEM`
+//!   behaviour): further *new* stacks are dropped and counted, while
+//!   known stacks keep resolving.
+//! * [`EvictPolicy::Lru`]: the least-recently-seen stack is evicted and
+//!   its id recycled — what a long-running daemon under the streaming
+//!   analyzer needs so the map never saturates. A recycled id resolves
+//!   to its *new* owner, so consumers must not key long-lived state on
+//!   raw ids: the streaming analyzer re-interns each window snapshot
+//!   into a stable userspace map at window close, leaving only the
+//!   within-window capture-to-read race (the same race a real BPF
+//!   stack-map consumer has between `bpf_get_stackid` and reading the
+//!   map).
+//!
+//! Ids are dense (0, 1, 2, …) in first-capture order, so the user-space
+//! merge can group by id with a dense table.
 
 use crate::util::fxhash::{hash_words, FxHashMap};
 
@@ -26,15 +38,29 @@ pub const STACK_ID_DROPPED: u32 = u32::MAX;
 
 const NO_NEXT: u32 = u32::MAX;
 
+/// What to do with a *new* stack once `max_entries` distinct stacks
+/// exist (the knob a deployment turns for long-running daemons).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum EvictPolicy {
+    /// Drop the new stack and count it (`bpf_get_stackid` `-ENOMEM`).
+    #[default]
+    DropNew,
+    /// Evict the least-recently-seen stack and recycle its id.
+    Lru,
+}
+
 /// Hit/insert/drop counters for one stack map.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct StackMapStats {
     /// Lookups that found an existing id.
     pub hits: u64,
-    /// New stacks interned.
+    /// New stacks interned (under LRU this counts recycles too, so it
+    /// may exceed the number of distinct live ids).
     pub inserts: u64,
     /// New stacks dropped because the map was full.
     pub drops: u64,
+    /// Stacks evicted to recycle their id (LRU policy only).
+    pub evictions: u64,
 }
 
 /// Bounded stack-trace interner: `&[u64]` frames → dense `u32` id.
@@ -42,26 +68,52 @@ pub struct StackMapStats {
 pub struct StackMap {
     name: &'static str,
     max_entries: usize,
+    policy: EvictPolicy,
     /// Flat frame arena; spans index into it.
     frames: Vec<u64>,
     /// id → (offset, len) into `frames`.
     spans: Vec<(u32, u32)>,
+    /// id → words reserved for it in the arena. A recycled id reuses its
+    /// reservation when the new stack fits and grows it otherwise, so
+    /// the reservation is monotone and total arena size stays bounded by
+    /// Σ per-id maximum length.
+    caps: Vec<u32>,
     /// id → next id in the same hash bucket (NO_NEXT terminates).
     chain: Vec<u32>,
     /// frame-hash → chain head id.
     heads: FxHashMap<u64, u32>,
+    /// Intrusive recency list (LRU policy): prev points toward the
+    /// most-recently-seen end, next toward the least-recently-seen end.
+    lru_prev: Vec<u32>,
+    lru_next: Vec<u32>,
+    lru_head: u32,
+    lru_tail: u32,
     pub stats: StackMapStats,
 }
 
 impl StackMap {
     pub fn new(name: &'static str, max_entries: usize) -> StackMap {
+        StackMap::with_policy(name, max_entries, EvictPolicy::DropNew)
+    }
+
+    pub fn with_policy(
+        name: &'static str,
+        max_entries: usize,
+        policy: EvictPolicy,
+    ) -> StackMap {
         StackMap {
             name,
             max_entries,
+            policy,
             frames: Vec::new(),
             spans: Vec::new(),
+            caps: Vec::new(),
             chain: Vec::new(),
             heads: FxHashMap::default(),
+            lru_prev: Vec::new(),
+            lru_next: Vec::new(),
+            lru_head: NO_NEXT,
+            lru_tail: NO_NEXT,
             stats: StackMapStats::default(),
         }
     }
@@ -70,9 +122,14 @@ impl StackMap {
         self.name
     }
 
+    pub fn policy(&self) -> EvictPolicy {
+        self.policy
+    }
+
     /// Intern a stack, returning its id — an existing id when the exact
-    /// frame sequence was seen before, a fresh dense id otherwise, or
-    /// [`STACK_ID_DROPPED`] when the map is at capacity. The steady-state
+    /// frame sequence was seen before, a fresh dense id otherwise. At
+    /// capacity the [`EvictPolicy`] decides: [`STACK_ID_DROPPED`]
+    /// (drop-new, counted) or a recycled id (LRU). The steady-state
     /// path (known stack) performs no allocation.
     pub fn intern(&mut self, stack: &[u64]) -> u32 {
         let h = hash_words(stack);
@@ -80,25 +137,152 @@ impl StackMap {
         while let Some(id) = cur {
             if self.frames_of(id) == stack {
                 self.stats.hits += 1;
+                if self.policy == EvictPolicy::Lru {
+                    self.lru_touch(id);
+                }
                 return id;
             }
             let next = self.chain[id as usize];
             cur = if next == NO_NEXT { None } else { Some(next) };
         }
-        if self.spans.len() >= self.max_entries || self.frames.len() > u32::MAX as usize
+        if self.spans.len() < self.max_entries
+            && self.frames.len() + stack.len() <= u32::MAX as usize
         {
-            self.stats.drops += 1;
-            return STACK_ID_DROPPED;
+            return self.insert_fresh(h, stack);
         }
+        match self.policy {
+            EvictPolicy::DropNew => {
+                self.stats.drops += 1;
+                STACK_ID_DROPPED
+            }
+            EvictPolicy::Lru => self.evict_and_recycle(h, stack),
+        }
+    }
+
+    /// Fresh insert below capacity: append to the arena, link the bucket
+    /// chain (new entry becomes the head) and the recency list.
+    fn insert_fresh(&mut self, h: u64, stack: &[u64]) -> u32 {
         let id = self.spans.len() as u32;
         let offset = self.frames.len() as u32;
         self.frames.extend_from_slice(stack);
         self.spans.push((offset, stack.len() as u32));
-        // Link into the bucket chain (new entry becomes the head).
+        self.caps.push(stack.len() as u32);
         let prev_head = self.heads.insert(h, id).unwrap_or(NO_NEXT);
         self.chain.push(prev_head);
+        self.lru_prev.push(NO_NEXT);
+        self.lru_next.push(NO_NEXT);
+        if self.policy == EvictPolicy::Lru {
+            self.lru_link_front(id);
+        }
         self.stats.inserts += 1;
         id
+    }
+
+    /// LRU at capacity: evict the least-recently-seen stack and hand its
+    /// id to the new one.
+    fn evict_and_recycle(&mut self, h: u64, stack: &[u64]) -> u32 {
+        let victim = self.lru_tail;
+        if victim == NO_NEXT {
+            // max_entries == 0: nothing to recycle.
+            self.stats.drops += 1;
+            return STACK_ID_DROPPED;
+        }
+        let vi = victim as usize;
+        if stack.len() as u32 > self.caps[vi]
+            && self.frames.len() + stack.len() > u32::MAX as usize
+        {
+            // Arena cannot address the replacement span.
+            self.stats.drops += 1;
+            return STACK_ID_DROPPED;
+        }
+        // Unlink the victim from its hash bucket (its hash is recomputed
+        // from the frames it still owns).
+        let vh = hash_words(self.frames_of(victim));
+        self.bucket_unlink(vh, victim);
+        // Write the new frames, reusing the victim's reservation when
+        // they fit.
+        if stack.len() as u32 <= self.caps[vi] {
+            let off = self.spans[vi].0 as usize;
+            self.frames[off..off + stack.len()].copy_from_slice(stack);
+            self.spans[vi] = (off as u32, stack.len() as u32);
+        } else {
+            let offset = self.frames.len() as u32;
+            self.frames.extend_from_slice(stack);
+            self.spans[vi] = (offset, stack.len() as u32);
+            self.caps[vi] = stack.len() as u32;
+        }
+        let prev_head = self.heads.insert(h, victim).unwrap_or(NO_NEXT);
+        self.chain[vi] = prev_head;
+        self.lru_unlink(victim);
+        self.lru_link_front(victim);
+        self.stats.evictions += 1;
+        self.stats.inserts += 1;
+        victim
+    }
+
+    /// Remove `id` from the bucket chain whose hash is `h`.
+    fn bucket_unlink(&mut self, h: u64, id: u32) {
+        let Some(&head) = self.heads.get(&h) else { return };
+        if head == id {
+            let next = self.chain[id as usize];
+            if next == NO_NEXT {
+                self.heads.remove(&h);
+            } else {
+                self.heads.insert(h, next);
+            }
+            return;
+        }
+        let mut cur = head;
+        loop {
+            let next = self.chain[cur as usize];
+            if next == NO_NEXT {
+                return; // not in this bucket (should not happen)
+            }
+            if next == id {
+                self.chain[cur as usize] = self.chain[id as usize];
+                return;
+            }
+            cur = next;
+        }
+    }
+
+    fn lru_link_front(&mut self, id: u32) {
+        let i = id as usize;
+        self.lru_prev[i] = NO_NEXT;
+        self.lru_next[i] = self.lru_head;
+        if self.lru_head != NO_NEXT {
+            self.lru_prev[self.lru_head as usize] = id;
+        }
+        self.lru_head = id;
+        if self.lru_tail == NO_NEXT {
+            self.lru_tail = id;
+        }
+    }
+
+    fn lru_unlink(&mut self, id: u32) {
+        let i = id as usize;
+        let p = self.lru_prev[i];
+        let n = self.lru_next[i];
+        if p == NO_NEXT {
+            self.lru_head = n;
+        } else {
+            self.lru_next[p as usize] = n;
+        }
+        if n == NO_NEXT {
+            self.lru_tail = p;
+        } else {
+            self.lru_prev[n as usize] = p;
+        }
+        self.lru_prev[i] = NO_NEXT;
+        self.lru_next[i] = NO_NEXT;
+    }
+
+    fn lru_touch(&mut self, id: u32) {
+        if self.lru_head == id {
+            return;
+        }
+        self.lru_unlink(id);
+        self.lru_link_front(id);
     }
 
     /// Resolve an id back to its frames; unknown or dropped ids resolve
@@ -129,10 +313,16 @@ impl StackMap {
         self.max_entries
     }
 
-    /// Current storage footprint: arena + spans + chain + bucket index
-    /// (≈32 B of `HashMap` overhead per bucket entry).
+    /// Current storage footprint: arena + spans/caps + chain + recency
+    /// list + bucket index (≈32 B of `HashMap` overhead per bucket
+    /// entry).
     pub fn bytes(&self) -> u64 {
-        (self.frames.len() * 8 + self.spans.len() * 8 + self.chain.len() * 4) as u64
+        (self.frames.len() * 8
+            + self.spans.len() * 8
+            + self.caps.len() * 4
+            + self.chain.len() * 4
+            + self.lru_prev.len() * 4
+            + self.lru_next.len() * 4) as u64
             + (self.heads.len() as u64) * 32
     }
 
@@ -192,6 +382,67 @@ mod tests {
         assert_eq!(m.intern(&[2]), b);
         // The sentinel resolves to nothing.
         assert_eq!(m.resolve(STACK_ID_DROPPED), &[] as &[u64]);
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_seen_and_recycles_id() {
+        let mut m = StackMap::with_policy("stacks", 2, EvictPolicy::Lru);
+        let a = m.intern(&[1, 1]);
+        let b = m.intern(&[2, 2]);
+        assert_eq!((a, b), (0, 1));
+        // Touch A so B becomes the LRU entry, then overflow with C.
+        assert_eq!(m.intern(&[1, 1]), a);
+        let c = m.intern(&[3, 3]);
+        assert_eq!(c, b, "C must recycle B's id");
+        assert_eq!(m.resolve(c), &[3, 3]);
+        assert_eq!(m.resolve(a), &[1, 1]);
+        // B is gone: interning it again evicts A (now least recent).
+        let b2 = m.intern(&[2, 2]);
+        assert_eq!(b2, a);
+        assert_eq!(m.resolve(b2), &[2, 2]);
+        assert_eq!(m.stats.evictions, 2);
+        assert_eq!(m.stats.drops, 0);
+        assert_eq!(m.len(), 2);
+    }
+
+    #[test]
+    fn lru_recycle_handles_longer_replacement_stacks() {
+        let mut m = StackMap::with_policy("stacks", 2, EvictPolicy::Lru);
+        m.intern(&[1]);
+        m.intern(&[2]);
+        // Longer than the victim's reservation: span grows, id reused.
+        let id = m.intern(&[7, 8, 9, 10]);
+        assert_eq!(id, 0);
+        assert_eq!(m.resolve(id), &[7, 8, 9, 10]);
+        // A short stack then reuses the grown reservation in place.
+        let id2 = m.intern(&[5]);
+        assert_eq!(id2, 1);
+        let id3 = m.intern(&[6, 6]);
+        assert_eq!(id3, 0);
+        assert_eq!(m.resolve(id3), &[6, 6]);
+        assert_eq!(m.resolve(id2), &[5]);
+    }
+
+    #[test]
+    fn lru_bucket_chains_survive_eviction() {
+        // Cycle many stacks through a tiny LRU map: every survivor must
+        // still resolve exactly and every re-intern must hit.
+        let mut m = StackMap::with_policy("stacks", 8, EvictPolicy::Lru);
+        for round in 0..50u64 {
+            for i in 0..8u64 {
+                let s = [round * 8 + i, round ^ i, i.wrapping_mul(0x9E37)];
+                let id = m.intern(&s);
+                assert_ne!(id, STACK_ID_DROPPED);
+                assert_eq!(m.resolve(id), &s);
+                assert_eq!(m.intern(&s), id, "immediate re-intern must hit");
+            }
+        }
+        assert_eq!(m.len(), 8);
+        assert_eq!(m.stats.drops, 0);
+        assert!(m.stats.evictions > 0);
+        // Arena growth is bounded by Σ per-id reservations (3 words
+        // each here), not by the number of evictions.
+        assert!(m.bytes() < 8 * (3 * 8 + 64) + 1024);
     }
 
     #[test]

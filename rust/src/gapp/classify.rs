@@ -48,12 +48,25 @@ impl BottleneckClass {
     }
 }
 
-/// Classify a merged path by majority wait kind over its slices.
+/// Classify a merged path by majority wait kind over its slices. The
+/// vote walks a fixed variant order so ties resolve deterministically
+/// (map iteration order must not leak into reports — the streaming
+/// analyzer's window-merged histograms are built in a different
+/// insertion order than the batch ones).
 pub fn classify(path: &MergedPath) -> BottleneckClass {
+    const ORDER: [WaitKind; 6] = [
+        WaitKind::Futex,
+        WaitKind::Barrier,
+        WaitKind::Queue,
+        WaitKind::Io,
+        WaitKind::Channel,
+        WaitKind::None,
+    ];
     let mut best = (WaitKind::None, 0u64);
-    for (k, n) in &path.wait_hist {
-        if *n > best.1 {
-            best = (*k, *n);
+    for k in ORDER {
+        let n = path.wait_hist.get(&k).copied().unwrap_or(0);
+        if n > best.1 {
+            best = (k, n);
         }
     }
     match best.0 {
@@ -82,12 +95,14 @@ mod tests {
     fn path(waits: &[(WaitKind, u64)], wakers: &[(u32, u64)]) -> MergedPath {
         MergedPath {
             stack_id: 0,
+            cm_fs: 1_000_000,
             total_cm_ns: 1.0,
             slices: waits.iter().map(|(_, n)| n).sum(),
             addr_freq: FxHashMap::default(),
             stack_top_samples: 0,
             wait_hist: waits.iter().copied().collect(),
             wakers: wakers.iter().copied().collect(),
+            app_slices: FxHashMap::default(),
         }
     }
 
@@ -101,6 +116,14 @@ mod tests {
         assert_eq!(classify(&p), BottleneckClass::Imbalance);
         let p = path(&[], &[]);
         assert_eq!(classify(&p), BottleneckClass::Compute);
+    }
+
+    #[test]
+    fn tied_votes_resolve_by_fixed_variant_order() {
+        // Io and Futex tie; Futex precedes Io in the canonical order, so
+        // the class must not depend on map iteration order.
+        let p = path(&[(WaitKind::Io, 4), (WaitKind::Futex, 4)], &[]);
+        assert_eq!(classify(&p), BottleneckClass::Synchronization);
     }
 
     #[test]

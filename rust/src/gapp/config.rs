@@ -17,8 +17,17 @@ pub struct GappConfig {
     /// Ring-buffer capacity (records).
     pub ring_capacity: usize,
     /// Stack-trace map capacity: distinct critical-slice call paths the
-    /// kernel can intern before new stacks are dropped (and counted).
+    /// kernel can intern before the eviction policy kicks in.
     pub stack_map_entries: usize,
+    /// At stack-map capacity: `false` (default) drops new stacks and
+    /// counts them (`bpf_get_stackid` `-ENOMEM`); `true` evicts the
+    /// least-recently-seen stack and recycles its id — what long-running
+    /// daemons under `gapp live` need so the map never saturates.
+    /// Intended for `gapp live`, which re-interns window snapshots into
+    /// a stable userspace map at window close; a *batch* profile keyed
+    /// on recycled ids can conflate evicted paths, so leave this off
+    /// for batch runs.
+    pub stack_lru: bool,
     /// Drain the ring buffer into the user-space engine when it holds at
     /// least this many records (the paper's concurrent user probe).
     pub drain_threshold: usize,
@@ -33,6 +42,7 @@ impl Default for GappConfig {
             top_n: 5,
             ring_capacity: 1 << 20,
             stack_map_entries: 1 << 14,
+            stack_lru: false,
             drain_threshold: 1 << 14,
         }
     }

@@ -5,6 +5,13 @@
 //! [`report`] the final frequency tables. [`profile`] wires a synthetic
 //! application, the simulated kernel and the profiler together and
 //! returns the [`report::Report`] plus the kernel for post-run queries.
+//!
+//! [`stream`] is the *online* half of the system: an epoch-windowed
+//! analyzer that drains the ring concurrently with simulation progress,
+//! aggregates incrementally per window, and profiles several
+//! applications system-wide at once. The batch path here is its
+//! one-window special case (proven equivalent by the streaming golden
+//! tests).
 
 pub mod config;
 pub mod records;
@@ -13,6 +20,7 @@ pub mod userspace;
 pub mod symbolize;
 pub mod report;
 pub mod classify;
+pub mod stream;
 
 use std::cell::RefCell;
 use std::rc::Rc;
@@ -20,9 +28,12 @@ use std::time::Instant;
 
 use anyhow::Result;
 
+use crate::ebpf::StackMap;
 use crate::runtime::AnalysisEngine;
 use crate::simkernel::{Event, Kernel, KernelConfig, Probe, Time};
-use crate::workload::App;
+use crate::workload::{App, SymbolTable};
+
+use userspace::MergedPath;
 
 pub use config::GappConfig;
 pub use report::{Bottleneck, Report, SampleLine, ThreadCm};
@@ -104,88 +115,154 @@ impl GappSession {
         core.drain();
         core.user.flush_batch();
         let merged = core.user.merge_and_rank(self.cfg.top_n);
+        let ctx = ReportCtx {
+            label: app.name.clone(),
+            syms: vec![(app.name.as_str(), app.symtab.as_ref())],
+            multi_app: false,
+            window_drops: Vec::new(),
+            stacks: None,
+        };
+        build_report(&core, kernel, runtime_ns, &merged, ctx, ppt_start)
+    }
+}
 
-        let mut sym = symbolize::Symbolizer::new(&app.symtab);
-        let bottlenecks: Vec<Bottleneck> = merged
-            .iter()
-            .enumerate()
-            .map(|(i, m)| {
-                let mut samples: Vec<(u64, u64)> =
-                    m.addr_freq.iter().map(|(a, c)| (*a, *c)).collect();
-                samples.sort_by(|x, y| y.1.cmp(&x.1).then(x.0.cmp(&y.0)));
-                // Resolve the interned stack id back to frames — the only
-                // point in the pipeline where ids become call paths.
-                let frames = core.kernel.stacks.resolve(m.stack_id);
-                Bottleneck {
-                    rank: i + 1,
-                    total_cm_ms: m.total_cm_ns / 1e6,
-                    slices: m.slices,
-                    class: classify::classify(m),
-                    top_wakers: classify::top_wakers(m, 3)
-                        .into_iter()
-                        .map(|(pid, n)| {
-                            let comm = kernel
-                                .task(pid)
-                                .map(|t| t.comm.clone())
-                                .unwrap_or_else(|| format!("pid{pid}"));
-                            (comm, n)
-                        })
-                        .collect(),
-                    call_path: sym.render_path(frames),
-                    samples: samples
-                        .into_iter()
-                        .map(|(a, c)| SampleLine {
-                            rendered: sym.render(a),
-                            function: sym
-                                .resolve(a)
-                                .map(|l| l.function)
-                                .or_else(|| {
-                                    app.symtab.sym_name(a).map(|s| s.to_string())
-                                }),
-                            count: c,
-                        })
-                        .collect(),
-                    stack_top_samples: m.stack_top_samples,
-                }
-            })
-            .collect();
+/// Everything the report assembler needs besides the merged paths.
+/// `syms` maps application id → (name, symbol table); the batch path
+/// passes exactly one entry, the system-wide streaming path one per
+/// profiled application.
+pub(crate) struct ReportCtx<'a> {
+    pub label: String,
+    pub syms: Vec<(&'a str, &'a SymbolTable)>,
+    pub multi_app: bool,
+    pub window_drops: Vec<u64>,
+    /// Resolve stack ids against this map instead of the kernel's. The
+    /// streaming analyzer re-interns window snapshots into a stable
+    /// userspace map when kernel-side LRU recycling is on (a recycled
+    /// kernel id changes owner mid-run, so resolving it at report time
+    /// would mis-attribute evicted paths). `None` = kernel map.
+    pub stacks: Option<&'a StackMap>,
+}
 
-        // Per-thread CMetric totals (Figures 4/5). PidMap iteration is
-        // already ascending by pid.
-        let threads: Vec<ThreadCm> = core
-            .user
-            .totals
-            .iter()
-            .map(|(pid, t)| ThreadCm {
-                pid,
-                comm: kernel
-                    .task(pid)
-                    .map(|t| t.comm.clone())
-                    .unwrap_or_default(),
-                cm_ms: t.cm_ns / 1e6,
-                wall_ms: t.wall_ns / 1e6,
-            })
-            .collect();
+/// Assemble a [`Report`] from ranked merged paths. Shared by the batch
+/// `finish` and the streaming analyzer so that equivalent merges render
+/// byte-identical reports.
+pub(crate) fn build_report(
+    core: &GappCore,
+    kernel: &Kernel,
+    runtime_ns: u64,
+    merged: &[MergedPath],
+    ctx: ReportCtx<'_>,
+    ppt_start: Instant,
+) -> Report {
+    let mut syms: Vec<symbolize::Symbolizer<'_>> = ctx
+        .syms
+        .iter()
+        .map(|(_, st)| symbolize::Symbolizer::new(st))
+        .collect();
+    let stacks = ctx.stacks.unwrap_or(&core.kernel.stacks);
+    let bottlenecks: Vec<Bottleneck> = merged
+        .iter()
+        .enumerate()
+        .map(|(i, m)| {
+            let mut samples: Vec<(u64, u64)> =
+                m.addr_freq.iter().map(|(a, c)| (*a, *c)).collect();
+            samples.sort_by(|x, y| y.1.cmp(&x.1).then(x.0.cmp(&y.0)));
+            // Symbolize against the app that owns most of the path's
+            // slices (single-app profiles always resolve to app 0).
+            let owner = m.owner_app(ctx.multi_app, syms.len());
+            let symtab = ctx.syms[owner].1;
+            let sym = &mut syms[owner];
+            // Resolve the interned stack id back to frames — the only
+            // point in the pipeline where ids become call paths.
+            let frames = stacks.resolve(m.stack_id);
+            let apps = if ctx.multi_app {
+                let mut v: Vec<(String, u64)> = m
+                    .app_slices
+                    .iter()
+                    .map(|(a, n)| {
+                        let name = ctx
+                            .syms
+                            .get(*a as usize)
+                            .map(|(nm, _)| nm.to_string())
+                            .unwrap_or_else(|| format!("app{a}"));
+                        (name, *n)
+                    })
+                    .collect();
+                v.sort_by(|x, y| y.1.cmp(&x.1).then(x.0.cmp(&y.0)));
+                v
+            } else {
+                Vec::new()
+            };
+            Bottleneck {
+                rank: i + 1,
+                total_cm_ms: m.total_cm_ns / 1e6,
+                slices: m.slices,
+                class: classify::classify(m),
+                top_wakers: classify::top_wakers(m, 3)
+                    .into_iter()
+                    .map(|(pid, n)| {
+                        let comm = kernel
+                            .task(pid)
+                            .map(|t| t.comm.clone())
+                            .unwrap_or_else(|| format!("pid{pid}"));
+                        (comm, n)
+                    })
+                    .collect(),
+                apps,
+                call_path: sym.render_path(frames),
+                samples: samples
+                    .into_iter()
+                    .map(|(a, c)| SampleLine {
+                        rendered: sym.render(a),
+                        function: sym
+                            .resolve(a)
+                            .map(|l| l.function)
+                            .or_else(|| symtab.sym_name(a).map(|s| s.to_string())),
+                        count: c,
+                    })
+                    .collect(),
+                stack_top_samples: m.stack_top_samples,
+            }
+        })
+        .collect();
 
-        let stats = core.kernel.stats.clone();
-        let sstats = core.kernel.stacks.stats;
-        Report {
-            app: app.name.clone(),
-            backend: core.user.backend_name(),
-            runtime_ns,
-            bottlenecks,
-            threads,
-            total_slices: stats.total_slices,
-            critical_slices: stats.critical_slices,
-            samples: stats.samples_recorded,
-            intervals: stats.intervals_emitted,
-            ring_dropped: core.kernel.ring.stats.dropped,
-            stack_ids: sstats.inserts,
-            stack_drops: sstats.drops,
-            memory_bytes: core.kernel.memory_bytes() + core.user.memory_bytes(),
-            ppt_seconds: ppt_start.elapsed().as_secs_f64(),
-            probe_cost_ns: kernel.stats.probe_ns,
-        }
+    // Per-thread CMetric totals (Figures 4/5). PidMap iteration is
+    // already ascending by pid.
+    let threads: Vec<ThreadCm> = core
+        .user
+        .totals
+        .iter()
+        .map(|(pid, t)| ThreadCm {
+            pid,
+            comm: kernel
+                .task(pid)
+                .map(|t| t.comm.clone())
+                .unwrap_or_default(),
+            cm_ms: t.cm_ns / 1e6,
+            wall_ms: t.wall_ns / 1e6,
+        })
+        .collect();
+
+    let stats = core.kernel.stats.clone();
+    let sstats = core.kernel.stacks.stats;
+    Report {
+        app: ctx.label,
+        backend: core.user.backend_name(),
+        runtime_ns,
+        bottlenecks,
+        threads,
+        total_slices: stats.total_slices,
+        critical_slices: stats.critical_slices,
+        samples: stats.samples_recorded,
+        intervals: stats.intervals_emitted,
+        ring_dropped: core.kernel.ring.stats.dropped,
+        stack_ids: sstats.inserts,
+        stack_drops: sstats.drops,
+        stack_evictions: sstats.evictions,
+        window_drops: ctx.window_drops,
+        memory_bytes: core.kernel.memory_bytes() + core.user.memory_bytes(),
+        ppt_seconds: ppt_start.elapsed().as_secs_f64(),
+        probe_cost_ns: kernel.stats.probe_ns,
     }
 }
 

@@ -14,7 +14,7 @@
 
 use crate::ebpf::maps::{HashMap64, Scalar};
 use crate::ebpf::ringbuf::RingBuf;
-use crate::ebpf::stackmap::StackMap;
+use crate::ebpf::stackmap::{EvictPolicy, StackMap};
 use crate::ebpf::verifier::{ProgramSpec, Verifier};
 use crate::simkernel::tracepoint::cost;
 use crate::simkernel::{Event, Pid, TaskState, Time, WaitKind};
@@ -102,9 +102,14 @@ impl KernelProbes {
         Verifier::default()
             .check(&spec)
             .map_err(|e| anyhow::anyhow!("verifier rejected GAPP probes: {e}"))?;
+        let evict = if cfg.stack_lru {
+            EvictPolicy::Lru
+        } else {
+            EvictPolicy::DropNew
+        };
         Ok(KernelProbes {
             ring: RingBuf::new(cfg.ring_capacity),
-            stacks: StackMap::new("stack_traces", cfg.stack_map_entries),
+            stacks: StackMap::with_policy("stack_traces", cfg.stack_map_entries, evict),
             cfg,
             thread_list: HashMap64::new("thread_list"),
             cm_ns: PidMap::new(),

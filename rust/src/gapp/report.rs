@@ -29,6 +29,9 @@ pub struct Bottleneck {
     /// §7 extension: threads whose wakeups gated these slices
     /// ("critical lock holders"), as (comm, count), descending.
     pub top_wakers: Vec<(String, u64)>,
+    /// System-wide mode: slice counts per application, descending
+    /// (empty for single-app profiles, so batch reports are unchanged).
+    pub apps: Vec<(String, u64)>,
     /// Symbolized call path, outermost → innermost.
     pub call_path: Vec<String>,
     /// Sample frequency table, descending by count.
@@ -63,10 +66,18 @@ pub struct Report {
     /// Distinct call paths interned by the in-kernel stack map
     /// (`bpf_get_stackid`-style ids carried by ring records).
     pub stack_ids: u64,
-    /// New stacks dropped because the stack map hit capacity — nonzero
+    /// New stacks dropped because a stack map hit capacity — nonzero
     /// means `GappConfig::stack_map_entries` needs raising, exactly like
-    /// tuning a real `BPF_MAP_TYPE_STACK_TRACE` max_entries.
+    /// tuning a real `BPF_MAP_TYPE_STACK_TRACE` max_entries. In `live`
+    /// LRU mode this also includes drops from the stable userspace
+    /// re-intern map, so saturation anywhere in the pipeline is visible.
     pub stack_drops: u64,
+    /// Stacks evicted to recycle their ids (`GappConfig::stack_lru`).
+    pub stack_evictions: u64,
+    /// Streaming analyzer only: ring-buffer drops attributed to the
+    /// epoch window in which they occurred (index = window). Empty for
+    /// batch profiles, whose single global figure is `ring_dropped`.
+    pub window_drops: Vec<u64>,
     /// Peak memory estimate, bytes (column M).
     pub memory_bytes: u64,
     /// Post-processing time, host seconds (column PPT).
@@ -143,6 +154,17 @@ impl fmt::Display for Report {
             self.memory_bytes as f64 / (1024.0 * 1024.0),
             self.ppt_seconds,
         )?;
+        if !self.window_drops.is_empty() {
+            let total: u64 = self.window_drops.iter().sum();
+            let lossy = self.window_drops.iter().filter(|d| **d > 0).count();
+            writeln!(
+                f,
+                "windows {} | ring drops {} in {} window(s)",
+                self.window_drops.len(),
+                total,
+                lossy,
+            )?;
+        }
         for b in &self.bottlenecks {
             writeln!(
                 f,
@@ -160,6 +182,14 @@ impl fmt::Display for Report {
             writeln!(f, "  call path:")?;
             for (i, frame) in b.call_path.iter().enumerate() {
                 writeln!(f, "    {:indent$}{}", "", frame, indent = i)?;
+            }
+            if !b.apps.is_empty() {
+                let ap: Vec<String> = b
+                    .apps
+                    .iter()
+                    .map(|(a, n)| format!("{a} x{n}"))
+                    .collect();
+                writeln!(f, "  apps: {}", ap.join(", "))?;
             }
             if !b.top_wakers.is_empty() {
                 let wk: Vec<String> = b
@@ -192,6 +222,7 @@ mod tests {
                     slices: 5,
                     class: BottleneckClass::Synchronization,
                     top_wakers: vec![("parent".into(), 4)],
+                    apps: vec![("mysql".into(), 4), ("dedup".into(), 1)],
                     call_path: vec!["main".into(), "emd".into()],
                     samples: vec![
                         SampleLine {
@@ -213,6 +244,7 @@ mod tests {
                     slices: 2,
                     class: BottleneckClass::Compute,
                     top_wakers: vec![],
+                    apps: vec![],
                     call_path: vec!["main".into()],
                     samples: vec![SampleLine {
                         rendered: "emd (emd.c:60)".into(),
@@ -246,5 +278,16 @@ mod tests {
         assert!(s.contains("stack-top"));
         assert!(s.contains("synchronization (futex)"));
         assert!(s.contains("woken by: parent x4"));
+        assert!(s.contains("apps: mysql x4, dedup x1"));
+        // Batch report: no window line.
+        assert!(!s.contains("windows "));
+    }
+
+    #[test]
+    fn display_window_drops_line_only_when_streaming() {
+        let mut r = report();
+        r.window_drops = vec![0, 3, 0, 2];
+        let s = r.to_string();
+        assert!(s.contains("windows 4 | ring drops 5 in 2 window(s)"));
     }
 }

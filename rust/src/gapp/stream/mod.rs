@@ -1,0 +1,341 @@
+//! The streaming online analyzer — GAPP's always-on half.
+//!
+//! The batch pipeline (`gapp::profile`) drains the ring buffer once at
+//! the end of a run and merges everything in one pass, which caps it at
+//! post-mortem use. This subsystem inverts that control flow, the way
+//! the paper's deployment runs against long-lived daemons (§4: the
+//! user-space probe "runs concurrently with the application"):
+//!
+//! * [`consumer`] — an epoch-based ring consumer (the
+//!   `BPF_MAP_TYPE_RINGBUF` poll-loop analogue) that drains once per
+//!   simulation epoch and attributes ring drops to the epoch in which
+//!   they occurred.
+//! * [`window`] — per-window incremental aggregation with mergeable
+//!   snapshots: all aggregates are associative, so concatenated window
+//!   snapshots merge to *exactly* the batch result (golden-tested).
+//! * [`topk`] — a bounded space-saving sketch for cumulative top-K over
+//!   unbounded runs in O(K) memory.
+//! * [`multi`] — system-wide mode: several applications share one
+//!   kernel, with per-app attribution learned from `task_newtask`.
+//! * [`live`] — per-window top-K report rendering.
+//!
+//! [`run_live`] wires it all together: simulate one epoch window
+//! (`Kernel::run_until`), drain, aggregate, report, repeat. Memory
+//! stays O(top-K + live stack ids) regardless of run length — no
+//! per-slice state survives its window.
+
+pub mod consumer;
+pub mod live;
+pub mod multi;
+pub mod topk;
+pub mod window;
+
+pub use consumer::{EpochConsumer, EpochStats};
+pub use live::{LiveLine, WindowReport};
+use live::live_lines;
+pub use multi::{AppRegistry, RegistryProbe};
+pub use topk::SpaceSaving;
+pub use window::{merge_snapshots, WindowAccumulator};
+
+use std::cell::RefCell;
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::ebpf::StackMap;
+use crate::runtime::AnalysisEngine;
+use crate::simkernel::{Kernel, KernelConfig, RunOutcome, Time};
+use crate::workload::App;
+
+use super::symbolize::Symbolizer;
+use super::userspace::{PathAccumulator, SliceEntry};
+use super::{build_report, GappConfig, GappSession, Report, ReportCtx};
+
+/// Streaming-analyzer configuration.
+#[derive(Clone, Debug)]
+pub struct LiveConfig {
+    /// Epoch window length (simulated ns). The CLI flag is `--window-us`.
+    pub window_ns: Time,
+    /// Bottleneck lines per window report.
+    pub top_k: usize,
+    /// Capacity of the cumulative space-saving sketch.
+    pub sketch_entries: usize,
+}
+
+impl Default for LiveConfig {
+    fn default() -> Self {
+        LiveConfig {
+            window_ns: 5_000_000, // 5 ms
+            top_k: 5,
+            sketch_entries: 64,
+        }
+    }
+}
+
+/// Compact per-window record retained after the window's full report
+/// has been handed to the callback (keeps `LiveRun` O(windows), not
+/// O(windows × paths)).
+#[derive(Clone, Copy, Debug)]
+pub struct WindowSummary {
+    pub index: u64,
+    pub slices: u64,
+    pub drained: u64,
+    pub drops: u64,
+}
+
+/// Result of one streaming session.
+pub struct LiveRun {
+    /// Final report, built from the *merged window snapshots* — proven
+    /// byte-identical to the batch report by the streaming golden test.
+    pub report: Report,
+    pub windows: Vec<WindowSummary>,
+    /// Cumulative top-K from the space-saving sketch:
+    /// `(stack_id, cm_fs_upper_bound, max_overestimate_fs)`. Ids are
+    /// stable (re-interned under kernel-side LRU recycling); app
+    /// attribution lives in the merged paths, not the sketch key, so a
+    /// path whose dominant app shifts between windows still accumulates
+    /// under one counter.
+    pub sketch_top: Vec<(u32, u64, u64)>,
+    /// `sketch_top` rendered for display (`gapp live` prints these as
+    /// the cumulative tail of the session).
+    pub sketch_lines: Vec<String>,
+    pub runtime_ns: Time,
+}
+
+/// Profile one or more applications *online*: simulate epoch windows,
+/// drain the ring each epoch, aggregate incrementally, and emit one
+/// [`WindowReport`] per window through `on_window`. With several apps
+/// the kernel hosts them concurrently (system-wide mode) and every
+/// bottleneck is attributed to its owning application.
+pub fn run_live(
+    apps: &[App],
+    kcfg: KernelConfig,
+    gcfg: GappConfig,
+    engine: AnalysisEngine,
+    lcfg: LiveConfig,
+    mut on_window: impl FnMut(&WindowReport),
+) -> Result<LiveRun> {
+    anyhow::ensure!(!apps.is_empty(), "live mode needs at least one app");
+    anyhow::ensure!(lcfg.window_ns > 0, "window length must be positive");
+    let top_n = gcfg.top_n;
+    let stack_lru = gcfg.stack_lru;
+    let session = GappSession::new(gcfg, kcfg.cpus, engine)?;
+    let mut kernel = Kernel::new(kcfg);
+    kernel.attach_probe(session.probe());
+    // System-wide attribution: a zero-cost probe tags every task with
+    // its application (children inherit), so attaching it cannot
+    // perturb the simulated timeline relative to a batch run.
+    let registry = Rc::new(RefCell::new(AppRegistry::new()));
+    kernel.attach_probe(Box::new(RegistryProbe::new(registry.clone())));
+    for app in apps {
+        registry.borrow_mut().begin_app(&app.name);
+        app.spawn_into(&mut kernel);
+        registry.borrow_mut().end_spawn();
+    }
+    let names: Vec<String> = registry.borrow().names().to_vec();
+    let multi_app = apps.len() > 1;
+    let mut syms: Vec<Symbolizer<'_>> = apps
+        .iter()
+        .map(|a| Symbolizer::new(a.symtab.as_ref()))
+        .collect();
+
+    let mut consumer = EpochConsumer::new();
+    let mut wacc = WindowAccumulator::new();
+    let mut cumulative = PathAccumulator::new();
+    let mut sketch: SpaceSaving<u32> = SpaceSaving::new(lcfg.sketch_entries);
+    let mut scratch: Vec<SliceEntry> = Vec::new();
+    let mut summaries: Vec<WindowSummary> = Vec::new();
+    let mut window_drops: Vec<u64> = Vec::new();
+    // Kernel-side LRU recycles stack ids mid-run, so everything that
+    // outlives a window (cumulative merge, sketch, final report) must
+    // not key on raw kernel ids. Snapshots are re-interned here — at
+    // window close, while id → frames is still fresh — into a stable
+    // userspace map. Without LRU, kernel ids are already stable and
+    // this stays `None`.
+    let mut user_stacks: Option<StackMap> = if stack_lru {
+        Some(StackMap::new("live_user_stacks", 1 << 20))
+    } else {
+        None
+    };
+
+    let mut epoch: u64 = 0;
+    let runtime_ns = loop {
+        epoch += 1;
+        let limit = lcfg.window_ns.saturating_mul(epoch);
+        let outcome = kernel.run_until(limit)?;
+        let (end_ns, done) = match outcome {
+            RunOutcome::Done(t) => (t, true),
+            RunOutcome::Paused(t) => (t, false),
+        };
+        let start_ns = lcfg.window_ns.saturating_mul(epoch - 1).min(end_ns);
+        let wr = {
+            let mut core = session.core.borrow_mut();
+            let estats = consumer.drain_epoch(&mut core);
+            scratch.clear();
+            core.user.drain_slices_into(&mut scratch);
+            {
+                let reg = registry.borrow();
+                for s in &scratch {
+                    wacc.add_slice(s, reg.app_of(s.pid));
+                }
+            }
+            let slices_in = wacc.slices_in;
+            let mut snapshot = wacc.snapshot();
+            if let Some(us) = user_stacks.as_mut() {
+                for p in &mut snapshot {
+                    let frames = core.kernel.stacks.resolve(p.stack_id);
+                    p.stack_id = us.intern(frames);
+                }
+            }
+            let ranked = core.user.rank_merged(&snapshot, lcfg.top_k);
+            let stacks = user_stacks.as_ref().unwrap_or(&core.kernel.stacks);
+            let top = live_lines(&ranked, stacks, &names, &mut syms, multi_app);
+            WindowReport {
+                index: epoch,
+                start_ns,
+                end_ns,
+                slices: slices_in,
+                drained: estats.delta.drained,
+                drops: estats.delta.dropped,
+                top,
+                snapshot,
+            }
+        };
+        on_window(&wr);
+        // Fold the window into the cumulative state; the snapshot dies
+        // here, keeping resident memory O(top-K + live stack ids).
+        for p in &wr.snapshot {
+            cumulative.merge_path(p);
+            sketch.add(p.stack_id, p.cm_fs);
+        }
+        window_drops.push(wr.drops);
+        summaries.push(WindowSummary {
+            index: wr.index,
+            slices: wr.slices,
+            drained: wr.drained,
+            drops: wr.drops,
+        });
+        if done {
+            break end_ns;
+        }
+    };
+
+    // Final report from the merged window snapshots (post-processing
+    // proper starts here, mirroring the batch `finish`).
+    let ppt_start = Instant::now();
+    let mut core = session.core.borrow_mut();
+    core.user.flush_batch();
+    let merged = cumulative.take_paths();
+    let ranked = core.user.rank_merged(&merged, top_n);
+    // Cumulative sketch tail: the sketch tracks raw stack ids; app
+    // ownership comes from the cumulative merge (address spaces may
+    // overlap between apps in system-wide mode, so each site must be
+    // symbolized through the app that owns the path).
+    let sketch_top = sketch.top(lcfg.top_k);
+    let sketch_lines: Vec<String> = {
+        let stacks = user_stacks.as_ref().unwrap_or(&core.kernel.stacks);
+        let owner_of: crate::util::FxHashMap<u32, usize> = merged
+            .iter()
+            .map(|p| (p.stack_id, p.owner_app(multi_app, syms.len())))
+            .collect();
+        sketch_top
+            .iter()
+            .map(|(id, cm_fs, err_fs)| {
+                let owner = owner_of.get(id).copied().unwrap_or(0);
+                let site = match stacks.resolve(*id).last() {
+                    Some(a) => syms[owner].render(*a),
+                    None => "<no frames>".to_string(),
+                };
+                let app_name = names
+                    .get(owner)
+                    .cloned()
+                    .unwrap_or_else(|| format!("app{owner}"));
+                format!(
+                    "{:<14} {:>9.3} ms (+{:.3} max over)  {}",
+                    app_name,
+                    *cm_fs as f64 / 1e12,
+                    *err_fs as f64 / 1e12,
+                    site,
+                )
+            })
+            .collect()
+    };
+    let ctx = ReportCtx {
+        label: names.join("+"),
+        syms: apps
+            .iter()
+            .map(|a| (a.name.as_str(), a.symtab.as_ref()))
+            .collect(),
+        multi_app,
+        window_drops,
+        stacks: user_stacks.as_ref(),
+    };
+    let mut report = build_report(&core, &kernel, runtime_ns, &ranked, ctx, ppt_start);
+    if let Some(us) = user_stacks.as_ref() {
+        // The stable userspace re-intern map is part of the analyzer:
+        // if it saturates on a long run, the loss must be as visible as
+        // the kernel map's own drop counter.
+        report.stack_drops += us.stats.drops;
+    }
+    Ok(LiveRun {
+        report,
+        windows: summaries,
+        sketch_top,
+        sketch_lines,
+        runtime_ns,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::apps;
+
+    #[test]
+    fn live_single_app_produces_windows_and_report() {
+        let app = apps::canneal(8, 5);
+        let mut seen = 0u64;
+        let run = run_live(
+            std::slice::from_ref(&app),
+            KernelConfig::default(),
+            GappConfig::default(),
+            AnalysisEngine::native(),
+            LiveConfig {
+                window_ns: 2_000_000,
+                ..Default::default()
+            },
+            |w| {
+                seen += 1;
+                assert_eq!(w.index, seen);
+                assert!(w.end_ns >= w.start_ns);
+            },
+        )
+        .unwrap();
+        assert!(seen > 1, "expected multiple windows, got {seen}");
+        assert_eq!(run.windows.len() as u64, seen);
+        assert_eq!(run.report.window_drops.len() as u64, seen);
+        assert!(!run.report.bottlenecks.is_empty());
+        assert_eq!(run.report.app, "canneal");
+        // Ring never overflowed at default capacity.
+        assert_eq!(run.report.ring_dropped, 0);
+        // The sketch tracked cumulative paths and rendered them.
+        assert!(!run.sketch_top.is_empty());
+        assert_eq!(run.sketch_top.len(), run.sketch_lines.len());
+        assert!(run.sketch_lines[0].contains("ms"));
+    }
+
+    #[test]
+    fn live_rejects_empty_app_list() {
+        let err = run_live(
+            &[],
+            KernelConfig::default(),
+            GappConfig::default(),
+            AnalysisEngine::native(),
+            LiveConfig::default(),
+            |_| {},
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("at least one app"));
+    }
+}

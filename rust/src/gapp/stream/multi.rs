@@ -1,0 +1,147 @@
+//! System-wide mode: several applications share one simulated kernel,
+//! and every bottleneck in the live report is attributed to the
+//! application that owns it.
+//!
+//! Attribution is learned the way a real system-wide deployment learns
+//! it — from the `task_newtask` tracepoint. Root threads are tagged with
+//! the application being spawned; children inherit their parent's tag,
+//! so whole process trees attribute correctly without any cooperation
+//! from the workload.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use crate::simkernel::{Event, Pid, Probe};
+use crate::util::PidMap;
+
+/// pid → application-id registry for one system-wide session.
+#[derive(Debug, Default)]
+pub struct AppRegistry {
+    names: Vec<String>,
+    of: PidMap<u16>,
+    /// Application currently being spawned (root-thread tagging window).
+    spawning: Option<u16>,
+}
+
+impl AppRegistry {
+    pub fn new() -> AppRegistry {
+        AppRegistry::default()
+    }
+
+    /// Open the tagging window for one application's root threads.
+    /// Returns its application id.
+    pub fn begin_app(&mut self, name: &str) -> u16 {
+        let id = self.names.len() as u16;
+        self.names.push(name.to_string());
+        self.spawning = Some(id);
+        id
+    }
+
+    /// Close the tagging window (after `App::spawn_into` returns).
+    pub fn end_spawn(&mut self) {
+        self.spawning = None;
+    }
+
+    /// `task_newtask` handler: tag roots with the app being spawned,
+    /// children with their parent's app.
+    pub fn on_task_new(&mut self, pid: Pid, parent: Pid) {
+        let app = match self.spawning {
+            Some(a) => Some(a),
+            None => self.of.get(parent).copied(),
+        };
+        if let Some(a) = app {
+            self.of.insert(pid, a);
+        }
+    }
+
+    /// Application id of `pid` (0 — the first app — when unknown).
+    pub fn app_of(&self, pid: Pid) -> u16 {
+        self.of.get(pid).copied().unwrap_or(0)
+    }
+
+    pub fn names(&self) -> &[String] {
+        &self.names
+    }
+
+    pub fn len(&self) -> usize {
+        self.names.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.names.is_empty()
+    }
+}
+
+/// Zero-cost probe feeding `task_newtask` events into the registry.
+/// Costs nothing on the simulated timeline, so attaching it cannot
+/// perturb a run relative to a single-app batch profile (the streaming
+/// golden tests depend on that).
+pub struct RegistryProbe {
+    reg: Rc<RefCell<AppRegistry>>,
+}
+
+impl RegistryProbe {
+    pub fn new(reg: Rc<RefCell<AppRegistry>>) -> RegistryProbe {
+        RegistryProbe { reg }
+    }
+}
+
+impl Probe for RegistryProbe {
+    fn on_event(&mut self, ev: &Event<'_>) -> u64 {
+        if let Event::TaskNew { pid, parent, .. } = ev {
+            self.reg.borrow_mut().on_task_new(*pid, *parent);
+        }
+        0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roots_tagged_children_inherit() {
+        let mut r = AppRegistry::new();
+        let a = r.begin_app("mysql");
+        r.on_task_new(1, 0);
+        r.on_task_new(2, 0);
+        r.end_spawn();
+        let b = r.begin_app("dedup");
+        r.on_task_new(3, 0);
+        r.end_spawn();
+        // Children spawned during the run inherit their parent's app.
+        r.on_task_new(10, 2);
+        r.on_task_new(11, 3);
+        r.on_task_new(12, 10);
+        assert_eq!((a, b), (0, 1));
+        assert_eq!(r.app_of(1), 0);
+        assert_eq!(r.app_of(2), 0);
+        assert_eq!(r.app_of(3), 1);
+        assert_eq!(r.app_of(10), 0);
+        assert_eq!(r.app_of(11), 1);
+        assert_eq!(r.app_of(12), 0);
+        assert_eq!(r.names(), &["mysql".to_string(), "dedup".to_string()]);
+    }
+
+    #[test]
+    fn unknown_pids_default_to_app_zero() {
+        let r = AppRegistry::new();
+        assert_eq!(r.app_of(99), 0);
+    }
+
+    #[test]
+    fn probe_feeds_registry_at_zero_cost() {
+        let reg = Rc::new(RefCell::new(AppRegistry::new()));
+        reg.borrow_mut().begin_app("a");
+        let mut probe = RegistryProbe::new(reg.clone());
+        let cost = probe.on_event(&Event::TaskNew {
+            time: 0,
+            pid: 5,
+            parent: 0,
+            comm: "t",
+        });
+        assert_eq!(cost, 0);
+        reg.borrow_mut().end_spawn();
+        assert_eq!(reg.borrow().app_of(5), 0);
+    }
+}

@@ -1,0 +1,156 @@
+//! Bounded top-K tracking — a *space-saving* sketch (Metwally et al.,
+//! "Efficient computation of frequent and top-k elements in data
+//! streams").
+//!
+//! The streaming analyzer must report cumulative top-K bottlenecks over
+//! an unbounded run while holding O(K) state, no matter how many
+//! distinct call paths flow past (stack-map LRU recycling means the id
+//! space itself can churn). The sketch keeps `cap` counters; a new key
+//! arriving at capacity seizes the minimum counter, inheriting its
+//! count as the overestimation error. Guarantees: every tracked count
+//! is an upper bound on the true count, off by at most its recorded
+//! `err`, and any key whose true count exceeds the minimum counter is
+//! guaranteed to be tracked.
+
+use std::hash::Hash;
+
+use crate::util::FxHashMap;
+
+/// One tracked counter.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+struct Counter {
+    count: u64,
+    /// Maximum overestimation inherited when the key seized a slot.
+    err: u64,
+}
+
+/// Space-saving top-K sketch over keys of type `K`.
+///
+/// `K: Ord` is required so minimum-victim selection and reporting break
+/// ties deterministically (reports must not depend on map iteration
+/// order).
+#[derive(Clone, Debug)]
+pub struct SpaceSaving<K: Eq + Hash + Copy + Ord> {
+    cap: usize,
+    counters: FxHashMap<K, Counter>,
+}
+
+impl<K: Eq + Hash + Copy + Ord> SpaceSaving<K> {
+    /// A sketch tracking at most `cap` keys (`cap >= 1`).
+    pub fn new(cap: usize) -> SpaceSaving<K> {
+        SpaceSaving {
+            cap: cap.max(1),
+            counters: FxHashMap::default(),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn len(&self) -> usize {
+        self.counters.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.counters.is_empty()
+    }
+
+    /// Add `weight` to `key` (weighted increments: the analyzer feeds
+    /// per-window CMetric femtoseconds, not unit counts).
+    pub fn add(&mut self, key: K, weight: u64) {
+        if let Some(c) = self.counters.get_mut(&key) {
+            c.count += weight;
+            return;
+        }
+        if self.counters.len() < self.cap {
+            self.counters.insert(key, Counter { count: weight, err: 0 });
+            return;
+        }
+        // Seize the minimum counter (ties: smallest key — deterministic).
+        let (&vk, &vc) = self
+            .counters
+            .iter()
+            .min_by(|(ka, ca), (kb, cb)| ca.count.cmp(&cb.count).then(ka.cmp(kb)))
+            .expect("cap >= 1");
+        self.counters.remove(&vk);
+        self.counters.insert(
+            key,
+            Counter {
+                count: vc.count + weight,
+                err: vc.count,
+            },
+        );
+    }
+
+    /// Top `n` keys as `(key, count_upper_bound, max_overestimate)`,
+    /// descending by count (ties: smallest key first).
+    pub fn top(&self, n: usize) -> Vec<(K, u64, u64)> {
+        let mut v: Vec<(K, u64, u64)> = self
+            .counters
+            .iter()
+            .map(|(k, c)| (*k, c.count, c.err))
+            .collect();
+        v.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        v.truncate(n);
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_below_capacity() {
+        let mut s: SpaceSaving<u32> = SpaceSaving::new(8);
+        for (k, w) in [(1u32, 10u64), (2, 5), (1, 7), (3, 1)] {
+            s.add(k, w);
+        }
+        assert_eq!(s.top(3), vec![(1, 17, 0), (2, 5, 0), (3, 1, 0)]);
+    }
+
+    #[test]
+    fn heavy_hitters_survive_at_capacity() {
+        // Two heavy keys plus a stream of distinct light keys through a
+        // 4-slot sketch: the heavy keys must stay tracked and ranked on
+        // top, with counts bounded by true + err.
+        let mut s: SpaceSaving<u32> = SpaceSaving::new(4);
+        for i in 0..200u32 {
+            s.add(1000, 50);
+            s.add(2000, 30);
+            s.add(i, 1); // light churn
+        }
+        let top = s.top(2);
+        assert_eq!(top[0].0, 1000);
+        assert_eq!(top[1].0, 2000);
+        for (_, count, err) in &s.top(4) {
+            assert!(count >= err, "count is an upper bound: {count} >= {err}");
+        }
+        // Upper-bound property for the heavy keys.
+        assert!(top[0].1 >= 200 * 50);
+        assert!(top[1].1 >= 200 * 30);
+        assert_eq!(s.len(), 4);
+    }
+
+    #[test]
+    fn eviction_inherits_minimum_count_as_error() {
+        let mut s: SpaceSaving<u32> = SpaceSaving::new(2);
+        s.add(1, 10);
+        s.add(2, 3);
+        s.add(3, 1); // seizes key 2's slot (min count 3)
+        let top = s.top(2);
+        assert_eq!(top[0], (1, 10, 0));
+        assert_eq!(top[1], (3, 4, 3)); // 3 inherited + 1 own, err 3
+    }
+
+    #[test]
+    fn min_victim_tie_breaks_by_smallest_key() {
+        let mut s: SpaceSaving<u32> = SpaceSaving::new(2);
+        s.add(7, 5);
+        s.add(3, 5);
+        s.add(9, 1); // tie on count 5 → key 3 is the victim
+        let keys: Vec<u32> = s.top(2).into_iter().map(|(k, _, _)| k).collect();
+        assert!(keys.contains(&7) && keys.contains(&9), "{keys:?}");
+    }
+}

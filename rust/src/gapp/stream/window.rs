@@ -1,0 +1,132 @@
+//! Per-window incremental aggregation.
+//!
+//! Each epoch window folds its critical slices into a
+//! [`WindowAccumulator`]; closing the window yields a *snapshot* — a
+//! `Vec<MergedPath>` whose aggregates are all associative (integer
+//! CMetric femtoseconds, integer counts). [`merge_snapshots`] folds any
+//! sequence of snapshots back into one merge that is bit-identical to a
+//! single batch merge over the concatenated slice stream, which is what
+//! lets the streaming analyzer report per-window *and* cumulative
+//! results without ever retaining per-slice state.
+
+use crate::gapp::userspace::{MergedPath, PathAccumulator, SliceEntry};
+
+/// One window's aggregation state. Memory is O(distinct stack ids seen
+/// this window); `snapshot()` resets it for the next window while
+/// keeping allocations.
+#[derive(Default)]
+pub struct WindowAccumulator {
+    acc: PathAccumulator,
+    /// Slices fed this window (including ones excluded from the merge
+    /// because their stack id was dropped at stack-map capacity).
+    pub slices_in: u64,
+}
+
+impl WindowAccumulator {
+    pub fn new() -> WindowAccumulator {
+        WindowAccumulator::default()
+    }
+
+    /// Fold one critical slice, attributed to application `app`.
+    pub fn add_slice(&mut self, s: &SliceEntry, app: u16) {
+        self.acc.add_slice(s, app);
+        self.slices_in += 1;
+    }
+
+    /// Distinct call paths merged so far this window.
+    pub fn paths(&self) -> usize {
+        self.acc.len()
+    }
+
+    /// Close the window: take its merged paths (first-seen order) and
+    /// reset for the next window.
+    pub fn snapshot(&mut self) -> Vec<MergedPath> {
+        self.slices_in = 0;
+        self.acc.take_paths()
+    }
+}
+
+/// Fold window snapshots, in window order, into one merged path list.
+/// The result is exactly — bit for bit — what a single batch merge over
+/// the concatenated slice stream produces, because every per-path
+/// aggregate is associative and first-seen order is preserved across
+/// windows.
+pub fn merge_snapshots<'a, I>(snapshots: I) -> Vec<MergedPath>
+where
+    I: IntoIterator<Item = &'a [MergedPath]>,
+{
+    let mut acc = PathAccumulator::new();
+    for snap in snapshots {
+        for p in snap {
+            acc.merge_path(p);
+        }
+    }
+    acc.take_paths()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simkernel::WaitKind;
+
+    fn slice(i: u64) -> SliceEntry {
+        SliceEntry {
+            ts_id: i,
+            pid: 1 + (i % 4) as u32,
+            cm_ns: 5.0 + i as f64 * 1.375,
+            threads_av: 1.0,
+            stack_id: (i % 3) as u32,
+            addrs: vec![0x100 + i % 5],
+            from_stack_top: false,
+            wait: WaitKind::Futex,
+            woken_by: 0,
+        }
+    }
+
+    #[test]
+    fn snapshot_resets_for_the_next_window() {
+        let mut w = WindowAccumulator::new();
+        for i in 0..6 {
+            w.add_slice(&slice(i), 0);
+        }
+        assert_eq!(w.slices_in, 6);
+        assert_eq!(w.paths(), 3);
+        let snap = w.snapshot();
+        assert_eq!(snap.len(), 3);
+        assert_eq!(w.slices_in, 0);
+        assert_eq!(w.paths(), 0);
+        // Next window starts clean and re-keys the same ids.
+        w.add_slice(&slice(0), 0);
+        assert_eq!(w.paths(), 1);
+        assert_eq!(w.snapshot()[0].stack_id, 0);
+    }
+
+    #[test]
+    fn merged_snapshots_equal_one_big_window() {
+        let slices: Vec<SliceEntry> = (0..40).map(slice).collect();
+        // One big window.
+        let mut big = WindowAccumulator::new();
+        for s in &slices {
+            big.add_slice(s, 0);
+        }
+        let batch = big.snapshot();
+        // Three ragged windows.
+        let mut w = WindowAccumulator::new();
+        let mut snaps: Vec<Vec<MergedPath>> = Vec::new();
+        for (i, s) in slices.iter().enumerate() {
+            w.add_slice(s, 0);
+            if i == 7 || i == 23 {
+                snaps.push(w.snapshot());
+            }
+        }
+        snaps.push(w.snapshot());
+        let merged = merge_snapshots(snaps.iter().map(|s| s.as_slice()));
+        assert_eq!(merged.len(), batch.len());
+        for (a, b) in batch.iter().zip(&merged) {
+            assert_eq!(a.stack_id, b.stack_id);
+            assert_eq!(a.cm_fs, b.cm_fs, "integer CMetric must match exactly");
+            assert_eq!(a.slices, b.slices);
+            assert_eq!(a.addr_freq, b.addr_freq);
+        }
+    }
+}

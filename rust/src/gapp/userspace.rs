@@ -13,6 +13,14 @@
 //! [`crate::ebpf::StackMap`]), so the merge groups by id — an integer
 //! key — instead of hashing full frame vectors; ids are resolved back
 //! to frames only when a path reaches the final report.
+//!
+//! The merge itself is *incremental*: a [`PathAccumulator`] folds slices
+//! (or previously-folded [`MergedPath`] snapshots) in arrival order, and
+//! every aggregate it keeps is associative — CMetric totals accumulate
+//! in integer femtoseconds, counts in integers — so the streaming
+//! analyzer's window snapshots merge to *exactly* what one batch merge
+//! over the concatenated stream produces. The batch path below is the
+//! one-window special case; `gapp::stream` drives the many-window case.
 
 use crate::runtime::{AnalysisEngine, T_SLOTS};
 use crate::simkernel::{Pid, WaitKind};
@@ -41,10 +49,20 @@ pub struct SliceEntry {
 }
 
 /// A merged call path: summed CMetric + address frequency table.
+///
+/// Every field is an associative aggregate, so two `MergedPath`s for the
+/// same stack id combine losslessly with [`MergedPath::merge_from`] —
+/// the property the streaming analyzer's window snapshots rely on.
 #[derive(Clone, Debug)]
 pub struct MergedPath {
     /// Interned call-path id (resolve via the kernel stack map).
     pub stack_id: u32,
+    /// Total CMetric in femtoseconds. This integer is the authoritative
+    /// accumulator: integer addition is associative, so window-merged
+    /// totals are bit-identical to batch totals regardless of where the
+    /// window boundaries fell.
+    pub cm_fs: u64,
+    /// Total CMetric in ns — derived from [`MergedPath::cm_fs`].
     pub total_cm_ns: f64,
     pub slices: u64,
     pub addr_freq: FxHashMap<u64, u64>,
@@ -53,19 +71,177 @@ pub struct MergedPath {
     pub wait_hist: FxHashMap<WaitKind, u64>,
     /// Waker histogram: who ended the waits that started these slices.
     pub wakers: FxHashMap<Pid, u64>,
+    /// Slice counts per application id (system-wide mode attribution;
+    /// single-app profiles put everything under app 0).
+    pub app_slices: FxHashMap<u16, u64>,
+}
+
+/// CMetric quantization: ns (f64) → femtoseconds (u64). Sub-femtosecond
+/// CMetric error is far below anything the report renders, and integer
+/// femtoseconds make the merge associative.
+#[inline]
+fn cm_fs_of(cm_ns: f64) -> u64 {
+    (cm_ns * 1e6).round() as u64
 }
 
 impl MergedPath {
     fn new(stack_id: u32) -> MergedPath {
         MergedPath {
             stack_id,
+            cm_fs: 0,
             total_cm_ns: 0.0,
             slices: 0,
             addr_freq: FxHashMap::default(),
             stack_top_samples: 0,
             wait_hist: FxHashMap::default(),
             wakers: FxHashMap::default(),
+            app_slices: FxHashMap::default(),
         }
+    }
+
+    /// Fold one critical slice into this path.
+    fn absorb(&mut self, s: &SliceEntry, app: u16) {
+        self.cm_fs += cm_fs_of(s.cm_ns);
+        self.total_cm_ns = self.cm_fs as f64 / 1e6;
+        self.slices += 1;
+        for a in &s.addrs {
+            *self.addr_freq.entry(*a).or_insert(0) += 1;
+        }
+        if s.from_stack_top {
+            self.stack_top_samples += 1;
+        }
+        *self.wait_hist.entry(s.wait).or_insert(0) += 1;
+        if s.woken_by != 0 {
+            *self.wakers.entry(s.woken_by).or_insert(0) += 1;
+        }
+        *self.app_slices.entry(app).or_insert(0) += 1;
+    }
+
+    /// Fold another merged snapshot of the *same* stack id into this
+    /// one (window-snapshot concatenation).
+    pub fn merge_from(&mut self, o: &MergedPath) {
+        debug_assert_eq!(self.stack_id, o.stack_id);
+        self.cm_fs += o.cm_fs;
+        self.total_cm_ns = self.cm_fs as f64 / 1e6;
+        self.slices += o.slices;
+        for (a, n) in &o.addr_freq {
+            *self.addr_freq.entry(*a).or_insert(0) += n;
+        }
+        self.stack_top_samples += o.stack_top_samples;
+        for (k, n) in &o.wait_hist {
+            *self.wait_hist.entry(*k).or_insert(0) += n;
+        }
+        for (p, n) in &o.wakers {
+            *self.wakers.entry(*p).or_insert(0) += n;
+        }
+        for (a, n) in &o.app_slices {
+            *self.app_slices.entry(*a).or_insert(0) += n;
+        }
+    }
+
+    /// Application owning the most slices of this path (ties go to the
+    /// lowest app id — deterministic regardless of map iteration order).
+    pub fn dominant_app(&self) -> u16 {
+        let mut best: Option<(u16, u64)> = None;
+        for (a, n) in &self.app_slices {
+            let better = match best {
+                None => true,
+                Some((ba, bn)) => *n > bn || (*n == bn && *a < ba),
+            };
+            if better {
+                best = Some((*a, *n));
+            }
+        }
+        best.map(|(a, _)| a).unwrap_or(0)
+    }
+
+    /// Index of the symbol source / display name to attribute this path
+    /// to, clamped to the `napps` tables available. The single shared
+    /// owner rule for report assembly *and* live window lines — the two
+    /// must never disagree about who owns a path.
+    pub fn owner_app(&self, multi_app: bool, napps: usize) -> usize {
+        if !multi_app || napps == 0 {
+            return 0;
+        }
+        (self.dominant_app() as usize).min(napps - 1)
+    }
+}
+
+/// Incremental stack-id-keyed merge: feeds on slices (or window
+/// snapshots) in arrival order and keeps one [`MergedPath`] per distinct
+/// id, in first-seen order. Memory is O(distinct live stack ids), never
+/// O(slices) — the invariant that lets the streaming analyzer run
+/// unbounded. The grouping index is a dense id → slot vector (ids are
+/// assigned densely by the kernel stack map).
+#[derive(Default)]
+pub struct PathAccumulator {
+    /// stack_id → merged index + 1 (0 = unseen). Reset lazily by
+    /// `take_paths`, so repeated window snapshots reuse the allocation.
+    slot_for: Vec<u32>,
+    paths: Vec<MergedPath>,
+}
+
+impl PathAccumulator {
+    pub fn new() -> PathAccumulator {
+        PathAccumulator::default()
+    }
+
+    /// Slot index for `stack_id`, creating the path on first sight.
+    /// Slices whose stack was dropped at stack-map capacity carry
+    /// [`crate::ebpf::STACK_ID_DROPPED`] and are excluded by callers —
+    /// distinct overflowed paths must not be conflated.
+    fn slot(&mut self, stack_id: u32) -> usize {
+        let idx = stack_id as usize;
+        if idx >= self.slot_for.len() {
+            self.slot_for.resize(idx + 1, 0);
+        }
+        if self.slot_for[idx] == 0 {
+            self.paths.push(MergedPath::new(stack_id));
+            self.slot_for[idx] = self.paths.len() as u32;
+            self.paths.len() - 1
+        } else {
+            (self.slot_for[idx] - 1) as usize
+        }
+    }
+
+    /// Fold one critical slice, attributed to application `app`.
+    pub fn add_slice(&mut self, s: &SliceEntry, app: u16) {
+        if s.stack_id == crate::ebpf::STACK_ID_DROPPED {
+            return;
+        }
+        let i = self.slot(s.stack_id);
+        self.paths[i].absorb(s, app);
+    }
+
+    /// Fold one already-merged path (window-snapshot concatenation).
+    pub fn merge_path(&mut self, p: &MergedPath) {
+        if p.stack_id == crate::ebpf::STACK_ID_DROPPED {
+            return;
+        }
+        let i = self.slot(p.stack_id);
+        self.paths[i].merge_from(p);
+    }
+
+    /// Merged paths so far, in first-seen order.
+    pub fn paths(&self) -> &[MergedPath] {
+        &self.paths
+    }
+
+    pub fn len(&self) -> usize {
+        self.paths.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.paths.is_empty()
+    }
+
+    /// Take the merged paths, resetting the accumulator for the next
+    /// window while keeping the dense-index allocation.
+    pub fn take_paths(&mut self) -> Vec<MergedPath> {
+        for p in &self.paths {
+            self.slot_for[p.stack_id as usize] = 0;
+        }
+        std::mem::take(&mut self.paths)
     }
 }
 
@@ -242,55 +418,38 @@ impl UserProbe {
     /// by total CMetric via the compiled top-K artifact. Grouping is by
     /// interned stack id — one integer compare per slice — in
     /// first-seen order (deterministic: ids are assigned in capture
-    /// order by the kernel).
+    /// order by the kernel). This is the one-window special case of the
+    /// incremental merge: all buffered slices fold into a single
+    /// [`PathAccumulator`]. Slices whose stack was dropped at stack-map
+    /// capacity are excluded (the kernel's `stack_drops` counter reports
+    /// the loss).
     pub fn merge_and_rank(&mut self, top_n: usize) -> Vec<MergedPath> {
         self.flush_batch();
-        // Stack ids are dense (0, 1, 2, … in capture order), so the
-        // grouping index is a plain vector: slot_for[id] = merged index
-        // + 1 (0 = unseen). Slices whose stack was dropped at stack-map
-        // capacity carry STACK_ID_DROPPED and are *excluded* — distinct
-        // overflowed paths must not be conflated into one bogus entry
-        // (the kernel's `stack_drops` counter reports the loss).
-        let mut slot_for: Vec<u32> = Vec::new();
-        let mut paths: Vec<MergedPath> = Vec::new();
+        let mut acc = PathAccumulator::new();
         for s in &self.slices {
-            if s.stack_id == crate::ebpf::STACK_ID_DROPPED {
-                continue;
-            }
-            let idx = s.stack_id as usize;
-            if idx >= slot_for.len() {
-                slot_for.resize(idx + 1, 0);
-            }
-            let i = if slot_for[idx] == 0 {
-                paths.push(MergedPath::new(s.stack_id));
-                slot_for[idx] = paths.len() as u32;
-                paths.len() - 1
-            } else {
-                (slot_for[idx] - 1) as usize
-            };
-            let e = &mut paths[i];
-            e.total_cm_ns += s.cm_ns;
-            e.slices += 1;
-            for a in &s.addrs {
-                *e.addr_freq.entry(*a).or_insert(0) += 1;
-            }
-            if s.from_stack_top {
-                e.stack_top_samples += 1;
-            }
-            *e.wait_hist.entry(s.wait).or_insert(0) += 1;
-            if s.woken_by != 0 {
-                *e.wakers.entry(s.woken_by).or_insert(0) += 1;
-            }
+            acc.add_slice(s, 0);
         }
+        let paths = acc.take_paths();
+        self.rank_merged(&paths, top_n)
+    }
+
+    /// Rank already-merged paths by total CMetric through the analysis
+    /// engine's top-K artifact, preserving first-seen order on ties.
+    pub fn rank_merged(&mut self, paths: &[MergedPath], top_n: usize) -> Vec<MergedPath> {
         let scores: Vec<f32> = paths.iter().map(|p| p.total_cm_ns as f32).collect();
-        let ranked = self
-            .engine
-            .rank(&scores, top_n)
-            .expect("rank engine");
+        let ranked = self.engine.rank(&scores, top_n).expect("rank engine");
         ranked
             .into_iter()
             .map(|(i, _)| paths[i].clone())
             .collect()
+    }
+
+    /// Move buffered slice entries into `out` (arrival order preserved).
+    /// The streaming analyzer drains per epoch so resident slice memory
+    /// stays bounded by one window; the batch path never calls this and
+    /// keeps slices in place for `merge_and_rank`.
+    pub fn drain_slices_into(&mut self, out: &mut Vec<SliceEntry>) {
+        out.append(&mut self.slices);
     }
 
     /// Approximate user-space memory footprint (paper column M).
@@ -473,6 +632,73 @@ mod tests {
         assert_eq!(top.len(), 1);
         assert_eq!(top[0].stack_id, 0);
         assert!((top[0].total_cm_ns - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn window_snapshots_merge_to_the_batch_merge() {
+        // Split one slice stream at arbitrary window boundaries: the
+        // merged snapshots must equal the one-window (batch) merge
+        // bit-for-bit, including the integer CMetric accumulator.
+        let mk = |i: u64| SliceEntry {
+            ts_id: i,
+            pid: (1 + i % 3) as Pid,
+            cm_ns: 10.0 + (i as f64) * 0.737,
+            threads_av: 1.0,
+            stack_id: (i % 5) as u32,
+            addrs: vec![0x400 + i % 7],
+            from_stack_top: i % 4 == 0,
+            wait: if i % 2 == 0 { WaitKind::Futex } else { WaitKind::Queue },
+            woken_by: (i % 2) as Pid,
+        };
+        let slices: Vec<SliceEntry> = (0..100).map(mk).collect();
+        let mut batch = PathAccumulator::new();
+        for s in &slices {
+            batch.add_slice(s, (s.pid % 2) as u16);
+        }
+        let batch_paths = batch.take_paths();
+
+        let mut windows: Vec<Vec<MergedPath>> = Vec::new();
+        let mut w = PathAccumulator::new();
+        for (i, s) in slices.iter().enumerate() {
+            w.add_slice(s, (s.pid % 2) as u16);
+            // Ragged boundaries: 13, 13+29, … (same accumulator reused).
+            if i % 29 == 12 {
+                windows.push(w.take_paths());
+            }
+        }
+        windows.push(w.take_paths());
+        assert!(windows.len() > 2);
+
+        let mut merged = PathAccumulator::new();
+        for win in &windows {
+            for p in win {
+                merged.merge_path(p);
+            }
+        }
+        let merged_paths = merged.take_paths();
+        assert_eq!(merged_paths.len(), batch_paths.len());
+        for (a, b) in batch_paths.iter().zip(&merged_paths) {
+            assert_eq!(a.stack_id, b.stack_id, "first-seen order must match");
+            assert_eq!(a.cm_fs, b.cm_fs);
+            assert_eq!(a.slices, b.slices);
+            assert_eq!(a.addr_freq, b.addr_freq);
+            assert_eq!(a.stack_top_samples, b.stack_top_samples);
+            assert_eq!(a.wait_hist, b.wait_hist);
+            assert_eq!(a.wakers, b.wakers);
+            assert_eq!(a.app_slices, b.app_slices);
+        }
+    }
+
+    #[test]
+    fn dominant_app_breaks_ties_deterministically() {
+        let mut p = MergedPath::new(0);
+        *p.app_slices.entry(3).or_insert(0) += 2;
+        *p.app_slices.entry(1).or_insert(0) += 2;
+        *p.app_slices.entry(2).or_insert(0) += 1;
+        assert_eq!(p.dominant_app(), 1); // tie on 2 slices → lowest id
+        *p.app_slices.entry(3).or_insert(0) += 1;
+        assert_eq!(p.dominant_app(), 3);
+        assert_eq!(MergedPath::new(9).dominant_app(), 0);
     }
 
     #[test]

@@ -4,6 +4,10 @@
 //! ```text
 //! gapp list-apps
 //! gapp profile --app dedup [--threads 64] [--seed 7] [--nmin 8] [--dt-us 3000]
+//! gapp live --app mysql --app dedup --window-us 5000 [--top 5] [--lru]
+//!                                  # streaming analyzer: epoch-windowed
+//!                                  # per-window top-K; repeat --app for
+//!                                  # system-wide multi-app profiling
 //! gapp run --app ferret            # unprofiled baseline run
 //! gapp table2 [--threads 64]       # Table 2
 //! gapp fig3 | fig4 | fig5 | fig6 | fig7
@@ -20,10 +24,12 @@ use gapp::experiments::{
     baselines_cmp, dedup_alloc, fig3, fig4, fig5, fig6, fig7, overhead, sensitivity,
     table2, EngineKind,
 };
+use gapp::gapp::stream::{run_live, LiveConfig};
 use gapp::gapp::{profile, run_unprofiled, GappConfig};
 use gapp::simkernel::KernelConfig;
 use gapp::util::cli::Args;
 use gapp::workload::apps;
+use gapp::workload::App;
 
 fn main() {
     let args = Args::from_env();
@@ -36,10 +42,14 @@ fn main() {
             for a in apps::ALL_APPS {
                 println!("{a}");
             }
+            println!();
+            println!("profile one:      gapp profile --app <name>");
+            println!("profile several:  gapp live --app <name> --app <name> --window-us 5000");
             Ok(())
         }
         Some("run") => cmd_run(&args, threads, seed),
         Some("profile") => cmd_profile(&args, engine, threads, seed),
+        Some("live") => cmd_live(&args, engine, threads, seed),
         Some("table2") => table2::run(engine, threads, seed)
             .map(|rows| println!("{}", table2::render(&rows))),
         Some("fig3") => fig3::run(engine, threads.min(32), seed)
@@ -61,7 +71,15 @@ fn main() {
         Some("all") => cmd_all(engine, threads, seed),
         _ => {
             eprintln!("usage: see `gapp --help` header in rust/src/main.rs");
-            eprintln!("subcommands: list-apps run profile table2 fig3 fig4 fig5 fig6 fig7 dedup-alloc sweep overhead baselines all");
+            eprintln!(
+                "subcommands: list-apps run profile live table2 fig3 fig4 fig5 fig6 \
+                 fig7 dedup-alloc sweep overhead baselines all"
+            );
+            eprintln!(
+                "live mode: gapp live --app mysql --app dedup --window-us 5000 \
+                 [--top 5] [--lru]"
+            );
+            eprintln!("           (repeat --app to profile several applications system-wide)");
             std::process::exit(2);
         }
     };
@@ -98,6 +116,63 @@ fn cmd_profile(args: &Args, engine: EngineKind, threads: usize, seed: u64) -> an
     gcfg.top_n = args.opt("top", gcfg.top_n);
     let (report, _) = profile(&app, KernelConfig::default(), gcfg, engine.make()?)?;
     println!("{report}");
+    Ok(())
+}
+
+/// The streaming analyzer: epoch-windowed per-window top-K, optionally
+/// over several applications sharing the kernel (system-wide mode).
+fn cmd_live(args: &Args, engine: EngineKind, threads: usize, seed: u64) -> anyhow::Result<()> {
+    let mut names: Vec<String> =
+        args.get_all("app").into_iter().map(String::from).collect();
+    if names.is_empty() {
+        names.push("mysql".to_string());
+    }
+    let apps: Vec<App> = names
+        .iter()
+        .map(|n| {
+            apps::by_name(n, threads, seed)
+                .ok_or_else(|| anyhow::anyhow!("unknown app {n:?} (try list-apps)"))
+        })
+        .collect::<anyhow::Result<_>>()?;
+    let mut gcfg = GappConfig::default();
+    if let Some(nmin) = args.get("nmin") {
+        gcfg.nmin = Some(nmin.parse()?);
+    }
+    gcfg.dt = args.opt::<u64>("dt-us", gcfg.dt / 1000) * 1000;
+    gcfg.top_n = args.opt("top", gcfg.top_n);
+    gcfg.stack_lru = args.flag("lru");
+    let lcfg = LiveConfig {
+        window_ns: args.opt::<u64>("window-us", 5000) * 1000,
+        top_k: args.opt("top", 5),
+        sketch_entries: args.opt("sketch", 64),
+    };
+    let run = run_live(
+        &apps,
+        KernelConfig::default(),
+        gcfg,
+        engine.make()?,
+        lcfg,
+        |w| print!("{w}"),
+    )?;
+    println!();
+    println!("== final (merged from {} windows) ==", run.windows.len());
+    print!("{}", run.report);
+    if !run.sketch_lines.is_empty() {
+        println!();
+        println!(
+            "cumulative top-{} (space-saving sketch; counts are upper bounds):",
+            run.sketch_lines.len()
+        );
+        for l in &run.sketch_lines {
+            println!("  {l}");
+        }
+    }
+    let lossy: u64 = run.windows.iter().map(|w| w.drops).sum();
+    if lossy > 0 {
+        println!(
+            "note: {lossy} ring drops occurred; see per-window attribution above"
+        );
+    }
     Ok(())
 }
 

@@ -30,6 +30,10 @@ pub struct AnalysisEngine {
     pub t_slots: usize,
     /// Batches analyzed (perf accounting).
     pub batches: u64,
+    /// Reused padding buffer for XLA rank calls. The streaming analyzer
+    /// ranks once per epoch window, so the pad must not be a fresh
+    /// allocation per call.
+    rank_pad: Vec<f32>,
 }
 
 impl AnalysisEngine {
@@ -41,6 +45,7 @@ impl AnalysisEngine {
                 t_slots: e.t_slots,
                 backend: Backend::Xla(Box::new(e)),
                 batches: 0,
+                rank_pad: Vec::new(),
             },
             Err(_) => AnalysisEngine::native(),
         }
@@ -52,6 +57,7 @@ impl AnalysisEngine {
             batch: BATCH,
             t_slots: T_SLOTS,
             batches: 0,
+            rank_pad: Vec::new(),
         }
     }
 
@@ -62,6 +68,7 @@ impl AnalysisEngine {
             t_slots: e.t_slots,
             backend: Backend::Xla(Box::new(e)),
             batches: 0,
+            rank_pad: Vec::new(),
         })
     }
 
@@ -86,10 +93,11 @@ impl AnalysisEngine {
     pub fn rank(&mut self, scores: &[f32], k: usize) -> Result<Vec<(usize, f32)>> {
         match &mut self.backend {
             Backend::Xla(e) => {
-                let mut padded = vec![0f32; RANK_P];
+                self.rank_pad.clear();
+                self.rank_pad.resize(RANK_P, 0.0);
                 let n = scores.len().min(RANK_P);
-                padded[..n].copy_from_slice(&scores[..n]);
-                let mut out = e.rank(&padded)?;
+                self.rank_pad[..n].copy_from_slice(&scores[..n]);
+                let mut out = e.rank(&self.rank_pad)?;
                 out.truncate(k.min(RANK_K));
                 // Drop zero-padded winners beyond the real entries.
                 out.retain(|(i, v)| *i < scores.len() && *v > 0.0);

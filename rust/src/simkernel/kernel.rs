@@ -191,6 +191,16 @@ impl RunQueue {
     }
 }
 
+/// Outcome of one [`Kernel::run_until`] epoch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RunOutcome {
+    /// The tracked group exited (or the event queue drained) at `.0`.
+    Done(Time),
+    /// Simulated time reached the epoch limit; more events pending.
+    /// Call `run_until` again to continue.
+    Paused(Time),
+}
+
 /// Aggregate run statistics.
 #[derive(Clone, Debug, Default)]
 pub struct KernelStats {
@@ -219,6 +229,13 @@ pub struct Kernel {
     sample_period: Option<Time>,
     tracked: Vec<Pid>,
     tracked_live: usize,
+    /// Simulated clock: advances as events are processed and pauses at
+    /// epoch limits (see [`Kernel::run_until`]).
+    clock: Time,
+    /// Initial dispatch + sampler arming performed (first run epoch).
+    started: bool,
+    /// Run completed; further `run_until` calls return `Done` at once.
+    finished: bool,
     pub stats: KernelStats,
 }
 
@@ -240,6 +257,9 @@ impl Kernel {
             sample_period: None,
             tracked: Vec::new(),
             tracked_live: 0,
+            clock: 0,
+            started: false,
+            finished: false,
             stats: KernelStats::default(),
         };
         // Pid 0: the idle task placeholder.
@@ -454,25 +474,60 @@ impl Kernel {
     /// Run until the tracked group exits, the event queue drains, or the
     /// safety limits trip. Returns final simulated time.
     pub fn run(&mut self) -> Result<Time> {
-        // Initial dispatch across idle CPUs.
+        match self.run_until(Time::MAX)? {
+            RunOutcome::Done(t) | RunOutcome::Paused(t) => Ok(t),
+        }
+    }
+
+    /// Current simulated time (the epoch driver's clock source).
+    pub fn now(&self) -> Time {
+        self.clock
+    }
+
+    /// Run events with `time <= limit`, then pause — the epoch hook the
+    /// streaming analyzer drives: simulate one window, drain the probe
+    /// ring, repeat. The first call performs the initial dispatch; a
+    /// call after `Done` is a no-op returning `Done` again. Event
+    /// processing is identical to an uninterrupted [`Kernel::run`], so
+    /// epoch boundaries cannot perturb the simulated timeline.
+    pub fn run_until(&mut self, limit: Time) -> Result<RunOutcome> {
+        if self.finished {
+            return Ok(RunOutcome::Done(self.stats.finished_at));
+        }
         let ncpu = self.cpus.len();
-        for c in 0..ncpu {
-            if self.cpus[c].current.is_none() && !self.runqueue.is_empty() {
-                self.dispatch(c, 0, IDLE_PID, TaskState::Runnable);
+        if !self.started {
+            self.started = true;
+            // Initial dispatch across idle CPUs.
+            for c in 0..ncpu {
+                if self.cpus[c].current.is_none() && !self.runqueue.is_empty() {
+                    self.dispatch(c, 0, IDLE_PID, TaskState::Runnable);
+                }
+            }
+            if let Some(p) = self.sample_period {
+                self.push_ev(p, EvKind::SampleTick);
             }
         }
-        if let Some(p) = self.sample_period {
-            self.push_ev(p, EvKind::SampleTick);
-        }
-        let mut now = 0;
-        while let Some(Reverse((t, _seq, kind))) = self.heap.pop() {
+        loop {
             // Stop BEFORE advancing the clock to a future event: once the
             // tracked group has exited, pending timer ticks must not
             // inflate the reported runtime.
             if self.tracked_live == 0 && !self.tracked.is_empty() {
                 break;
             }
-            now = t;
+            let Some(&Reverse((t, _, _))) = self.heap.peek() else {
+                break;
+            };
+            if t > limit {
+                // Epoch boundary: leave the event queued for the next
+                // epoch and report the pause.
+                self.clock = limit;
+                return Ok(RunOutcome::Paused(limit));
+            }
+            let Some(Reverse((t, _seq, kind))) = self.heap.pop() else {
+                break;
+            };
+            let now = t;
+            self.clock = now;
             if now > self.cfg.max_time_ns {
                 bail!("simulation exceeded max_time_ns at {now} ns (deadlock or runaway?)");
             }
@@ -490,12 +545,13 @@ impl Kernel {
                 EvKind::SampleTick => self.on_sample_tick(now),
             }
         }
-        self.stats.finished_at = now;
-        let finals = now;
+        self.finished = true;
+        self.stats.finished_at = self.clock;
+        let finals = self.clock;
         for p in &mut self.probes {
             p.on_finish(finals);
         }
-        Ok(finals)
+        Ok(RunOutcome::Done(finals))
     }
 
     fn on_sample_tick(&mut self, now: Time) {
@@ -975,6 +1031,47 @@ mod tests {
         for p in pids {
             assert_eq!(k.task(p).unwrap().state, TaskState::Exited);
         }
+    }
+
+    #[test]
+    fn run_until_pauses_and_resumes_without_perturbing_the_timeline() {
+        let build = || {
+            let mut k = Kernel::new(small_cfg(2));
+            for i in 0..4 {
+                let p = k.spawn(
+                    &format!("t{i}"),
+                    Script::new(vec![
+                        Step::Compute { ns: 900_000 + i * 133 },
+                        Step::Sleep { ns: 400_000 },
+                        Step::Compute { ns: 700_000 },
+                    ]),
+                );
+                k.track(p);
+            }
+            k
+        };
+        // Reference: one uninterrupted run.
+        let mut k1 = build();
+        let end1 = k1.run().unwrap();
+        // Same workload, driven in 250 µs epochs.
+        let mut k2 = build();
+        let mut epochs = 0u32;
+        let end2 = loop {
+            epochs += 1;
+            let limit = 250_000u64 * epochs as u64;
+            match k2.run_until(limit).unwrap() {
+                RunOutcome::Done(t) => break t,
+                RunOutcome::Paused(t) => assert_eq!(t, limit),
+            }
+        };
+        assert!(epochs > 3, "expected several epochs, got {epochs}");
+        assert_eq!(end1, end2);
+        assert_eq!(k1.stats.switches, k2.stats.switches);
+        assert_eq!(k1.stats.wakeups, k2.stats.wakeups);
+        assert_eq!(k1.stats.sample_ticks, k2.stats.sample_ticks);
+        // After Done, further epochs are no-ops.
+        assert_eq!(k2.run_until(u64::MAX).unwrap(), RunOutcome::Done(end2));
+        assert_eq!(k2.now(), end2);
     }
 
     #[test]

@@ -18,7 +18,7 @@ pub mod task;
 pub mod tracepoint;
 pub mod kernel;
 
-pub use kernel::{Kernel, KernelConfig, StepCtx, Step, TaskLogic};
+pub use kernel::{Kernel, KernelConfig, RunOutcome, Step, StepCtx, TaskLogic};
 pub use task::{Pid, Task, TaskState, WaitKind, IDLE_PID};
 pub use tracepoint::{Event, Probe, ProbeCost, SampleView};
 

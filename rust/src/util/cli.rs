@@ -1,14 +1,17 @@
 //! Minimal command-line parser (clap is unavailable in the offline
-//! registry). Supports `--flag`, `--key value`, `--key=value` and
-//! positional arguments, with typed getters and a usage renderer.
+//! registry). Supports `--flag`, `--key value`, `--key=value`, repeated
+//! options (`--app a --app b`) and positional arguments, with typed
+//! getters and a usage renderer.
 
 use std::collections::BTreeMap;
 
 /// Parsed arguments: positionals in order plus `--key [value]` options.
+/// A repeated key keeps every value in order; single-value getters
+/// return the last occurrence (so overrides behave as expected).
 #[derive(Debug, Default, Clone)]
 pub struct Args {
     pub positional: Vec<String>,
-    opts: BTreeMap<String, String>,
+    opts: BTreeMap<String, Vec<String>>,
 }
 
 impl Args {
@@ -19,16 +22,16 @@ impl Args {
         while let Some(a) = it.next() {
             if let Some(rest) = a.strip_prefix("--") {
                 if let Some((k, v)) = rest.split_once('=') {
-                    args.opts.insert(k.to_string(), v.to_string());
+                    args.push_opt(k, v.to_string());
                 } else if it
                     .peek()
                     .map(|n| !n.starts_with("--"))
                     .unwrap_or(false)
                 {
                     let v = it.next().unwrap();
-                    args.opts.insert(rest.to_string(), v);
+                    args.push_opt(rest, v);
                 } else {
-                    args.opts.insert(rest.to_string(), "true".to_string());
+                    args.push_opt(rest, "true".to_string());
                 }
             } else {
                 args.positional.push(a);
@@ -37,14 +40,29 @@ impl Args {
         args
     }
 
+    fn push_opt(&mut self, key: &str, value: String) {
+        self.opts.entry(key.to_string()).or_default().push(value);
+    }
+
     /// Parse from the process environment (skips argv[0]).
     pub fn from_env() -> Args {
         Args::parse(std::env::args().skip(1))
     }
 
-    /// Raw option value.
+    /// Raw option value (last occurrence when repeated).
     pub fn get(&self, key: &str) -> Option<&str> {
-        self.opts.get(key).map(|s| s.as_str())
+        self.opts
+            .get(key)
+            .and_then(|v| v.last())
+            .map(|s| s.as_str())
+    }
+
+    /// Every value given for `key`, in order (`--app a --app b`).
+    pub fn get_all(&self, key: &str) -> Vec<&str> {
+        self.opts
+            .get(key)
+            .map(|v| v.iter().map(|s| s.as_str()).collect())
+            .unwrap_or_default()
     }
 
     /// Boolean flag: present (with any value other than "false") → true.
@@ -116,5 +134,14 @@ mod tests {
     fn negative_number_values() {
         let a = parse(&["--delta", "-3"]);
         assert_eq!(a.opt::<i64>("delta", 0), -3);
+    }
+
+    #[test]
+    fn repeated_options_collect_in_order() {
+        let a = parse(&["live", "--app", "mysql", "--app=dedup", "--app", "vips"]);
+        assert_eq!(a.get_all("app"), vec!["mysql", "dedup", "vips"]);
+        // Single-value getter sees the last occurrence.
+        assert_eq!(a.get("app"), Some("vips"));
+        assert_eq!(a.get_all("missing"), Vec::<&str>::new());
     }
 }
