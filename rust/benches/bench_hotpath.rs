@@ -8,7 +8,7 @@
 //! `Bench::finish` writes `BENCH_hotpath.json` at the repo root so the
 //! perf trajectory of these numbers is tracked across PRs.
 
-use gapp::ebpf::{RingBuf, StackMap};
+use gapp::ebpf::{RingBuf, ShardedRing, StackMap};
 use gapp::gapp::records::{mask_set, Record, SlotMask};
 use gapp::gapp::{profile, GappConfig};
 use gapp::runtime::{analysis, AnalysisEngine, BATCH, T_SLOTS};
@@ -37,7 +37,7 @@ fn loaded_probes(nmin: f64, nthreads: u32) -> gapp::gapp::probes::KernelProbes {
     )
     .unwrap();
     for pid in 1..=nthreads {
-        p.on_task_new(pid, 0);
+        p.on_task_new(pid, 0, 0);
     }
     p
 }
@@ -88,6 +88,35 @@ fn main() {
         .unwrap();
         sink(run.report.runtime_ns);
     });
+
+    // Sharded vs single-ring end-to-end pair: same run, transport forced
+    // to one shared ring vs 4 per-CPU shards. The outputs are provably
+    // byte-identical (golden-tested); this row pair tracks the *cost* of
+    // the per-shard routing + timestamp-merge drain across PRs.
+    for (name, shards) in [
+        ("live_canneal_16t_w5ms_ring1_end_to_end", 1usize),
+        ("live_canneal_16t_w5ms_shards4_end_to_end", 4),
+    ] {
+        b.bench(name, || {
+            let app = apps::canneal(16, 3);
+            let run = gapp::gapp::stream::run_live(
+                std::slice::from_ref(&app),
+                KernelConfig::default(),
+                GappConfig {
+                    shards: Some(shards),
+                    ..Default::default()
+                },
+                AnalysisEngine::native(),
+                gapp::gapp::stream::LiveConfig {
+                    window_ns: 5_000_000,
+                    ..Default::default()
+                },
+                |w| sink(w.top.len()),
+            )
+            .unwrap();
+            sink(run.report.runtime_ns);
+        });
+    }
 
     // The window-merge primitive on its own: fold 64 snapshots of 8
     // paths each into the cumulative merge.
@@ -145,7 +174,7 @@ fn main() {
                 ));
                 i += 1;
             }
-            while p.ring.pop().is_some() {}
+            while p.rings.pop_global().is_some() {}
         });
     }
     // Critical path (nmin high → every slice captures + interns a stack).
@@ -173,7 +202,7 @@ fn main() {
                 ));
                 i += 1;
             }
-            while p.ring.pop().is_some() {}
+            while p.rings.pop_global().is_some() {}
         });
     }
 
@@ -200,6 +229,16 @@ fn main() {
             rb.push(Record::Interval { dur: 1000, mask });
         }
         while rb.pop().is_some() {}
+    });
+
+    // Per-CPU sharded transport: route by CPU, drain in global
+    // timestamp order (the perf_event_array read path).
+    let mut srb: ShardedRing<Record> = ShardedRing::new(4, 1 << 16);
+    b.bench_items("ringbuf_sharded4_push_popglobal_4096", 4096, || {
+        for i in 0..4096u64 {
+            srb.push((i % 4) as usize, i, Record::Interval { dur: 1000, mask });
+        }
+        while srb.pop_global().is_some() {}
     });
 
     // --- L1/L2: batched analysis, native vs XLA -------------------------

@@ -8,8 +8,11 @@
 //!
 //! * [`maps`] — hash/array/scalar maps with global and per-CPU flavours and
 //!   byte-accounting (the paper's memory column M).
-//! * [`ringbuf`] — the bounded circular buffer kernel probes write and the
-//!   user-space probe drains; overflow drops records, as perf buffers do.
+//! * [`ringbuf`] — the bounded circular buffers kernel probes write and
+//!   the user-space probe drains; overflow drops records, as perf
+//!   buffers do. [`ShardedRing`] is the per-CPU `PERF_EVENT_ARRAY`
+//!   flavour: one FIFO per CPU, globally re-ordered at read time by the
+//!   records' capture timestamps.
 //! * [`stackmap`] — the `BPF_MAP_TYPE_STACK_TRACE` analogue: probes intern
 //!   walked stacks to dense `u32` ids at capture time so ring records stay
 //!   fixed-size POD; user space resolves ids only at report time.
@@ -27,6 +30,6 @@ pub mod stackmap;
 pub mod verifier;
 
 pub use maps::{HashMap64, PerCpuScalar, Scalar};
-pub use ringbuf::{EpochDelta, RingBuf, RingBufStats, RingCursor};
+pub use ringbuf::{EpochDelta, RingBuf, RingBufStats, RingCursor, ShardedRing, Stamped};
 pub use stackmap::{EvictPolicy, StackMap, StackMapStats, STACK_ID_DROPPED};
 pub use verifier::{ProgramSpec, Verifier, VerifierError};

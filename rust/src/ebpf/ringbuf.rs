@@ -3,6 +3,15 @@
 //! falls behind, new records are *dropped* and counted, which is exactly
 //! the failure mode a real deployment tunes buffer pages against.
 //!
+//! Two transports are provided:
+//!
+//! * [`RingBuf`] — one bounded FIFO (the `BPF_MAP_TYPE_RINGBUF` shape).
+//! * [`ShardedRing`] — one [`RingBuf`] per CPU, the `PERF_EVENT_ARRAY`
+//!   shape GAPP's real deployment reads from. Producers push to the
+//!   shard of the CPU the event fired on (preserving per-CPU FIFO
+//!   order); consumers re-establish the global order from the records'
+//!   capture timestamps via [`ShardedRing::pop_global`].
+//!
 //! Epoch-based consumers (the streaming analyzer's poll loop) read the
 //! producer counters through a [`RingCursor`], which attributes pushes,
 //! drains and — crucially — *drops* to the epoch in which they occurred
@@ -18,6 +27,18 @@ pub struct RingBufStats {
     pub peak: usize,
 }
 
+impl RingBufStats {
+    /// Fold another ring's counters into this one (multi-ring
+    /// aggregation). `peak` sums: the shards buffer independently, so
+    /// the summed high-water marks bound the combined footprint.
+    pub fn absorb(&mut self, o: &RingBufStats) {
+        self.pushed += o.pushed;
+        self.dropped += o.dropped;
+        self.drained += o.drained;
+        self.peak += o.peak;
+    }
+}
+
 /// Producer-side activity observed by a [`RingCursor`] over one epoch.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct EpochDelta {
@@ -28,6 +49,15 @@ pub struct EpochDelta {
     pub dropped: u64,
     /// Records drained by consumers during the epoch.
     pub drained: u64,
+}
+
+impl EpochDelta {
+    /// Sum another shard's epoch activity into this one.
+    pub fn absorb(&mut self, o: &EpochDelta) {
+        self.pushed += o.pushed;
+        self.dropped += o.dropped;
+        self.drained += o.drained;
+    }
 }
 
 /// Consumer cursor: a snapshot of a ring buffer's monotonic counters.
@@ -71,8 +101,18 @@ pub struct RingBuf<T> {
 
 impl<T> RingBuf<T> {
     pub fn new(capacity: usize) -> RingBuf<T> {
+        RingBuf::with_reserve(capacity, capacity.min(1 << 16))
+    }
+
+    /// A ring with an explicit initial backing reservation (sharded
+    /// transports split one reservation budget across many rings).
+    /// A zero-capacity ring would silently drop every record, so it is
+    /// rejected here; user-facing knobs reject it earlier with a real
+    /// error (`GappConfig::validate`).
+    pub fn with_reserve(capacity: usize, reserve: usize) -> RingBuf<T> {
+        assert!(capacity >= 1, "ring capacity must be >= 1");
         RingBuf {
-            buf: std::collections::VecDeque::with_capacity(capacity.min(1 << 16)),
+            buf: std::collections::VecDeque::with_capacity(reserve.min(capacity)),
             capacity,
             stats: RingBufStats::default(),
             record_bytes: std::mem::size_of::<T>() as u64,
@@ -100,6 +140,13 @@ impl<T> RingBuf<T> {
             self.stats.drained += 1;
         }
         r
+    }
+
+    /// The oldest buffered record without consuming it (what a merging
+    /// multi-ring consumer compares timestamps on).
+    #[inline]
+    pub fn peek(&self) -> Option<&T> {
+        self.buf.front()
     }
 
     /// Drain up to `max` records into `out` (reuses the caller's vector —
@@ -139,6 +186,165 @@ impl<T> RingBuf<T> {
             dropped_seen: self.stats.dropped,
             drained_seen: self.stats.drained,
         }
+    }
+}
+
+/// A record carried by a sharded ring, with its capture timestamp.
+///
+/// `t` is the simulated time the producing tracepoint fired; `seq` is a
+/// strictly monotone global capture sequence — the sub-nanosecond
+/// tiebreak a real monotonic clock provides for free, and what lets a
+/// consumer merge shard FIFOs back into the exact production order.
+#[derive(Clone, Copy, Debug)]
+pub struct Stamped<T> {
+    pub t: u64,
+    pub seq: u64,
+    pub rec: T,
+}
+
+/// One bounded ring per CPU — the `PERF_EVENT_ARRAY` transport shape.
+///
+/// Producers route each record to the shard of the CPU the event fired
+/// on (`cpu % shards`), so every shard is a per-CPU FIFO exactly like a
+/// real perf buffer page set. Capacity is *per shard*, matching how
+/// perf buffer pages are sized per CPU. Consumers either walk shards
+/// individually (per-shard cursors) or call [`ShardedRing::pop_global`]
+/// to re-establish the global order from the `(t, seq)` stamps.
+#[derive(Debug)]
+pub struct ShardedRing<T> {
+    shards: Vec<RingBuf<Stamped<T>>>,
+    seq: u64,
+}
+
+impl<T> ShardedRing<T> {
+    /// `nshards` rings of `capacity` records each. The initial backing
+    /// reservation is split across shards so a many-shard transport
+    /// pre-allocates no more than a single ring used to.
+    pub fn new(nshards: usize, capacity: usize) -> ShardedRing<T> {
+        assert!(nshards >= 1, "sharded ring needs at least one shard");
+        let reserve = ((1 << 16) / nshards).max(64);
+        ShardedRing {
+            shards: (0..nshards)
+                .map(|_| RingBuf::with_reserve(capacity, reserve))
+                .collect(),
+            seq: 0,
+        }
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Per-shard capacity (records).
+    pub fn capacity(&self) -> usize {
+        self.shards[0].capacity()
+    }
+
+    /// Read access to one shard (per-shard cursors, stats, tests).
+    pub fn shard(&self, i: usize) -> &RingBuf<Stamped<T>> {
+        &self.shards[i]
+    }
+
+    /// Push a record captured on `cpu` at time `t`; returns false (and
+    /// counts a drop on the owning shard) when that shard is full.
+    #[inline]
+    pub fn push(&mut self, cpu: usize, t: u64, rec: T) -> bool {
+        self.seq += 1;
+        let i = cpu % self.shards.len();
+        self.shards[i].push(Stamped { t, seq: self.seq, rec })
+    }
+
+    /// Pop the globally-oldest buffered record: the minimum `(t, seq)`
+    /// stamp across all shard heads. Because `seq` is globally monotone,
+    /// draining to empty replays records exactly in production order —
+    /// the property the sharded-vs-single-ring golden tests pin down.
+    pub fn pop_global_stamped(&mut self) -> Option<Stamped<T>> {
+        let mut best: Option<(usize, (u64, u64))> = None;
+        for (i, s) in self.shards.iter().enumerate() {
+            if let Some(head) = s.peek() {
+                let key = (head.t, head.seq);
+                if best.map_or(true, |(_, bk)| key < bk) {
+                    best = Some((i, key));
+                }
+            }
+        }
+        best.and_then(|(i, _)| self.shards[i].pop())
+    }
+
+    /// [`ShardedRing::pop_global_stamped`], unwrapped to the record.
+    /// Linear in the shard count per pop — fine for tests and small
+    /// drains; bulk consumers use [`ShardedRing::drain_global`].
+    #[inline]
+    pub fn pop_global(&mut self) -> Option<T> {
+        self.pop_global_stamped().map(|s| s.rec)
+    }
+
+    /// Drain *everything* buffered, invoking `f` on each record in
+    /// global `(t, seq)` order: a k-way merge over the shard heads,
+    /// O(records · log shards) instead of pop_global's
+    /// O(records · shards). The tiny head-heap (≤ shards entries) is
+    /// the only allocation, amortized over the whole drain.
+    pub fn drain_global(&mut self, mut f: impl FnMut(T)) {
+        use std::cmp::Reverse;
+        let mut heads: std::collections::BinaryHeap<Reverse<(u64, u64, usize)>> =
+            std::collections::BinaryHeap::with_capacity(self.shards.len());
+        for (i, s) in self.shards.iter().enumerate() {
+            if let Some(h) = s.peek() {
+                heads.push(Reverse((h.t, h.seq, i)));
+            }
+        }
+        while let Some(Reverse((_, _, i))) = heads.pop() {
+            let rec = self.shards[i].pop().expect("head tracked a nonempty shard");
+            f(rec.rec);
+            if let Some(h) = self.shards[i].peek() {
+                heads.push(Reverse((h.t, h.seq, i)));
+            }
+        }
+    }
+
+    /// Total records currently buffered across all shards.
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.shards.iter().all(|s| s.is_empty())
+    }
+
+    /// True when any shard has reached `threshold` records — the
+    /// per-shard drain watermark (each CPU's buffer signals its reader
+    /// independently in a real perf setup). O(shards): use
+    /// [`ShardedRing::len_for_cpu`] on the hot path, where the CPU that
+    /// just pushed is known.
+    pub fn any_at_or_above(&self, threshold: usize) -> bool {
+        self.shards.iter().any(|s| s.len() >= threshold)
+    }
+
+    /// Buffered records on the shard owning `cpu` — the O(1) watermark
+    /// probe for the event hot path (only the shard an event pushed to
+    /// can have grown since it was last checked).
+    #[inline]
+    pub fn len_for_cpu(&self, cpu: usize) -> usize {
+        self.shards[cpu % self.shards.len()].len()
+    }
+
+    /// Counters aggregated across shards.
+    pub fn stats(&self) -> RingBufStats {
+        let mut agg = RingBufStats::default();
+        for s in &self.shards {
+            agg.absorb(&s.stats);
+        }
+        agg
+    }
+
+    /// Per-shard counters, indexed by shard (the report's breakdown).
+    pub fn shard_stats(&self) -> Vec<RingBufStats> {
+        self.shards.iter().map(|s| s.stats).collect()
+    }
+
+    /// Peak memory footprint estimate, summed over shards.
+    pub fn peak_bytes(&self) -> u64 {
+        self.shards.iter().map(|s| s.peak_bytes()).sum()
     }
 }
 
@@ -237,5 +443,104 @@ mod tests {
         }
         assert_eq!(rb.stats.peak, 50);
         assert!(rb.peak_bytes() >= 50 * 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "capacity must be >= 1")]
+    fn zero_capacity_ring_is_rejected() {
+        let _ = RingBuf::<u32>::new(0);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one shard")]
+    fn zero_shard_ring_is_rejected() {
+        let _ = ShardedRing::<u32>::new(0, 8);
+    }
+
+    #[test]
+    fn sharded_preserves_per_cpu_fifo_and_global_order() {
+        let mut sr: ShardedRing<u32> = ShardedRing::new(3, 8);
+        // Interleave pushes across CPUs, some at the same timestamp —
+        // the global pop order must equal production order.
+        let plan = [(0usize, 10u64), (2, 10), (1, 11), (0, 12), (2, 12), (2, 13)];
+        for (i, (cpu, t)) in plan.iter().enumerate() {
+            assert!(sr.push(*cpu, *t, i as u32));
+        }
+        assert_eq!(sr.len(), 6);
+        // Per-shard FIFO: shard 2 holds records 1, 4, 5 in push order.
+        assert_eq!(sr.shard(2).len(), 3);
+        assert_eq!(sr.shard(2).peek().unwrap().rec, 1);
+        let mut order = Vec::new();
+        while let Some(r) = sr.pop_global() {
+            order.push(r);
+        }
+        assert_eq!(order, vec![0, 1, 2, 3, 4, 5]);
+        assert!(sr.is_empty());
+    }
+
+    #[test]
+    fn drain_global_matches_pop_global_order() {
+        let fill = |sr: &mut ShardedRing<u32>| {
+            for i in 0..30u64 {
+                sr.push((i % 5) as usize, i / 3, i as u32);
+            }
+        };
+        let mut a: ShardedRing<u32> = ShardedRing::new(5, 16);
+        let mut b: ShardedRing<u32> = ShardedRing::new(5, 16);
+        fill(&mut a);
+        fill(&mut b);
+        let mut via_pop = Vec::new();
+        while let Some(r) = a.pop_global() {
+            via_pop.push(r);
+        }
+        let mut via_drain = Vec::new();
+        b.drain_global(|r| via_drain.push(r));
+        assert_eq!(via_pop, via_drain);
+        assert_eq!(via_drain, (0..30).collect::<Vec<u32>>());
+        assert!(b.is_empty());
+        assert_eq!(b.stats().drained, 30);
+        // O(1) per-CPU watermark probe agrees with the shard lengths.
+        b.push(7, 99, 1234); // cpu 7 → shard 2
+        assert_eq!(b.len_for_cpu(7), 1);
+        assert_eq!(b.len_for_cpu(0), 0);
+    }
+
+    #[test]
+    fn sharded_drops_count_on_the_owning_shard() {
+        let mut sr: ShardedRing<u32> = ShardedRing::new(2, 2);
+        // CPU 0 overflows its shard; CPU 1 stays within capacity.
+        for i in 0..5 {
+            sr.push(0, i, i as u32);
+        }
+        sr.push(1, 9, 99);
+        let per = sr.shard_stats();
+        assert_eq!(per[0].dropped, 3);
+        assert_eq!(per[1].dropped, 0);
+        let agg = sr.stats();
+        assert_eq!(agg.pushed, 3);
+        assert_eq!(agg.dropped, 3);
+        assert_eq!(agg.peak, 3); // 2 on shard 0 + 1 on shard 1
+        // The watermark is per shard, not total.
+        assert!(sr.any_at_or_above(2));
+        assert!(!sr.any_at_or_above(3));
+    }
+
+    #[test]
+    fn sharded_cursors_attribute_per_shard_epochs() {
+        let mut sr: ShardedRing<u32> = ShardedRing::new(2, 2);
+        let mut cursors = [RingCursor::default(), RingCursor::default()];
+        for i in 0..4 {
+            sr.push(0, i, i as u32); // 2 pushed, 2 dropped on shard 0
+        }
+        sr.push(1, 9, 9);
+        while sr.pop_global().is_some() {}
+        let d0 = cursors[0].advance(sr.shard(0));
+        let d1 = cursors[1].advance(sr.shard(1));
+        assert_eq!((d0.pushed, d0.dropped, d0.drained), (2, 2, 2));
+        assert_eq!((d1.pushed, d1.dropped, d1.drained), (1, 0, 1));
+        let mut total = EpochDelta::default();
+        total.absorb(&d0);
+        total.absorb(&d1);
+        assert_eq!(total.dropped, sr.stats().dropped);
     }
 }

@@ -14,8 +14,13 @@ pub struct GappConfig {
     pub stack_depth: usize,
     /// Number of bottleneck call paths reported (top N).
     pub top_n: usize,
-    /// Ring-buffer capacity (records).
+    /// Ring-buffer capacity in records, *per shard* — matching how real
+    /// perf buffer pages are sized per CPU.
     pub ring_capacity: usize,
+    /// Ring shards (per-CPU perf buffers). `None` → one per simulated
+    /// CPU, the `PERF_EVENT_ARRAY` deployment shape; `Some(1)` is the
+    /// single shared ring. The CLI flag is `--shards`.
+    pub shards: Option<usize>,
     /// Stack-trace map capacity: distinct critical-slice call paths the
     /// kernel can intern before the eviction policy kicks in.
     pub stack_map_entries: usize,
@@ -28,8 +33,9 @@ pub struct GappConfig {
     /// on recycled ids can conflate evicted paths, so leave this off
     /// for batch runs.
     pub stack_lru: bool,
-    /// Drain the ring buffer into the user-space engine when it holds at
-    /// least this many records (the paper's concurrent user probe).
+    /// Drain a ring shard into the user-space engine when it holds at
+    /// least this many records (the paper's concurrent user probe; the
+    /// watermark is per shard, like a real per-CPU buffer's wakeup).
     pub drain_threshold: usize,
 }
 
@@ -41,10 +47,44 @@ impl Default for GappConfig {
             stack_depth: 16,
             top_n: 5,
             ring_capacity: 1 << 20,
+            shards: None,
             stack_map_entries: 1 << 14,
             stack_lru: false,
             drain_threshold: 1 << 14,
         }
+    }
+}
+
+impl GappConfig {
+    /// Reject configurations that would silently produce a useless run:
+    /// a 0-capacity ring drops every record, `top_n = 0` reports
+    /// nothing, a zero sampling period or drain threshold makes no
+    /// sense. Called by `KernelProbes::new`, so every construction path
+    /// (CLI, tests, library users) gets a real error instead of quiet
+    /// misbehaviour.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.ring_capacity >= 1,
+            "ring_capacity must be >= 1 (a 0-capacity ring drops every record)"
+        );
+        anyhow::ensure!(
+            self.top_n >= 1,
+            "top_n must be >= 1 (--top 0 would report nothing)"
+        );
+        anyhow::ensure!(self.stack_depth >= 1, "stack_depth must be >= 1");
+        anyhow::ensure!(
+            self.stack_map_entries >= 1,
+            "stack_map_entries must be >= 1"
+        );
+        anyhow::ensure!(self.dt >= 1, "dt (sampling period) must be positive");
+        anyhow::ensure!(
+            self.drain_threshold >= 1,
+            "drain_threshold must be >= 1 (use usize::MAX to disable mid-epoch drains)"
+        );
+        if let Some(s) = self.shards {
+            anyhow::ensure!(s >= 1, "shards must be >= 1 (--shards 0 is meaningless)");
+        }
+        Ok(())
     }
 }
 
@@ -57,5 +97,66 @@ mod tests {
         let c = GappConfig::default();
         assert_eq!(c.dt, 3_000_000);
         assert!(c.nmin.is_none());
+        assert!(c.shards.is_none()); // per-CPU perf buffers by default
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn zero_knobs_are_rejected_with_real_errors() {
+        let cases: Vec<(GappConfig, &str)> = vec![
+            (
+                GappConfig {
+                    ring_capacity: 0,
+                    ..Default::default()
+                },
+                "ring_capacity",
+            ),
+            (
+                GappConfig {
+                    top_n: 0,
+                    ..Default::default()
+                },
+                "top_n",
+            ),
+            (
+                GappConfig {
+                    dt: 0,
+                    ..Default::default()
+                },
+                "dt",
+            ),
+            (
+                GappConfig {
+                    drain_threshold: 0,
+                    ..Default::default()
+                },
+                "drain_threshold",
+            ),
+            (
+                GappConfig {
+                    shards: Some(0),
+                    ..Default::default()
+                },
+                "shards",
+            ),
+            (
+                GappConfig {
+                    stack_depth: 0,
+                    ..Default::default()
+                },
+                "stack_depth",
+            ),
+            (
+                GappConfig {
+                    stack_map_entries: 0,
+                    ..Default::default()
+                },
+                "stack_map_entries",
+            ),
+        ];
+        for (cfg, what) in cases {
+            let err = cfg.validate().unwrap_err().to_string();
+            assert!(err.contains(what), "error {err:?} should name {what}");
+        }
     }
 }

@@ -42,16 +42,18 @@ pub use report::{Bottleneck, Report, SampleLine, ThreadCm};
 pub struct GappCore {
     pub kernel: probes::KernelProbes,
     pub user: userspace::UserProbe,
-    drain_threshold: usize,
 }
 
 impl GappCore {
-    /// Move buffered records from the circular buffer into the
+    /// Move buffered records from the per-CPU ring shards into the
     /// user-space engine (the paper's concurrently-running user probe).
+    /// Drains all shards in one k-way merge, re-establishing the global
+    /// record order from the capture timestamps — so a sharded
+    /// transport feeds the analysis the exact sequence a single shared
+    /// ring would have.
     pub fn drain(&mut self) {
-        while let Some(rec) = self.kernel.ring.pop() {
-            self.user.consume(rec);
-        }
+        let user = &mut self.user;
+        self.kernel.rings.drain_global(|rec| user.consume(rec));
     }
 }
 
@@ -65,10 +67,13 @@ impl Probe for GappProbeHandle {
     fn on_event(&mut self, ev: &Event<'_>) -> u64 {
         let mut core = self.core.borrow_mut();
         let cost = core.kernel.handle(ev);
-        // The user-space probe drains the buffer concurrently with the
+        // The user-space probe drains the buffers concurrently with the
         // application (it runs on spare cores); its work is therefore
-        // not charged to the traced CPUs.
-        if core.kernel.ring.len() >= core.drain_threshold {
+        // not charged to the traced CPUs. The watermark is per shard —
+        // each CPU's buffer wakes the reader independently — and only
+        // the shard this event pushed to can have grown, so one O(1)
+        // length probe suffices.
+        if core.kernel.rings.len_for_cpu(ev.cpu()) >= core.kernel.cfg.drain_threshold {
             core.drain();
         }
         cost
@@ -90,11 +95,7 @@ impl GappSession {
         let kernel = probes::KernelProbes::new(cfg.clone(), ncpu)?;
         let user = userspace::UserProbe::new(engine);
         Ok(GappSession {
-            core: Rc::new(RefCell::new(GappCore {
-                kernel,
-                user,
-                drain_threshold: cfg.drain_threshold,
-            })),
+            core: Rc::new(RefCell::new(GappCore { kernel, user })),
             cfg,
         })
     }
@@ -255,7 +256,8 @@ pub(crate) fn build_report(
         critical_slices: stats.critical_slices,
         samples: stats.samples_recorded,
         intervals: stats.intervals_emitted,
-        ring_dropped: core.kernel.ring.stats.dropped,
+        ring_dropped: core.kernel.rings.stats().dropped,
+        ring_shards: core.kernel.rings.shard_stats(),
         stack_ids: sstats.inserts,
         stack_drops: sstats.drops,
         stack_evictions: sstats.evictions,

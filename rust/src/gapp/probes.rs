@@ -11,9 +11,14 @@
 //! stacks are interned to `u32` ids through the bounded [`StackMap`]
 //! (`bpf_get_stackid()`), and every ring-buffer record is fixed-size
 //! `Copy` POD.
+//!
+//! Transport is sharded per CPU ([`ShardedRing`], the `PERF_EVENT_ARRAY`
+//! shape): each handler pushes to the ring of the CPU its event fired
+//! on, preserving per-CPU FIFO order; consumers re-establish the global
+//! order from the records' capture timestamps.
 
 use crate::ebpf::maps::{HashMap64, Scalar};
-use crate::ebpf::ringbuf::RingBuf;
+use crate::ebpf::ringbuf::ShardedRing;
 use crate::ebpf::stackmap::{EvictPolicy, StackMap};
 use crate::ebpf::verifier::{ProgramSpec, Verifier};
 use crate::simkernel::tracepoint::cost;
@@ -80,7 +85,8 @@ pub struct KernelProbes {
     /// Per-CPU: waker of the thread currently in its timeslice.
     slice_waker: Vec<Pid>,
     // ---- output ---------------------------------------------------------
-    pub ring: RingBuf<Record>,
+    /// Per-CPU ring shards (`--shards`, default one per simulated CPU).
+    pub rings: ShardedRing<Record>,
     next_ts_id: u64,
     pub stats: ProbeStats,
 }
@@ -88,6 +94,8 @@ pub struct KernelProbes {
 impl KernelProbes {
     /// Build and verifier-check the probe set for an `ncpu`-CPU kernel.
     pub fn new(cfg: GappConfig, ncpu: usize) -> anyhow::Result<KernelProbes> {
+        cfg.validate()
+            .map_err(|e| anyhow::anyhow!("invalid GAPP configuration: {e}"))?;
         let spec = ProgramSpec {
             name: "gapp",
             maps: 8, // Table-1 set + the stack-trace map
@@ -107,8 +115,9 @@ impl KernelProbes {
         } else {
             EvictPolicy::DropNew
         };
+        let nshards = cfg.shards.unwrap_or(ncpu).max(1);
         Ok(KernelProbes {
-            ring: RingBuf::new(cfg.ring_capacity),
+            rings: ShardedRing::new(nshards, cfg.ring_capacity),
             stacks: StackMap::with_policy("stack_traces", cfg.stack_map_entries, evict),
             cfg,
             thread_list: HashMap64::new("thread_list"),
@@ -147,8 +156,9 @@ impl KernelProbes {
     }
 
     /// Close the current switching interval at `now`: update global_cm
-    /// and emit the interval row for the batched analysis.
-    fn advance_interval(&mut self, now: Time) -> u64 {
+    /// and emit the interval row for the batched analysis. The row is
+    /// routed to `cpu`'s ring shard (the CPU whose event closed it).
+    fn advance_interval(&mut self, now: Time, cpu: usize) -> u64 {
         let dur = now.saturating_sub(self.t_switch);
         self.t_switch = now;
         let n = self.thread_count.get();
@@ -157,10 +167,14 @@ impl KernelProbes {
         }
         self.global_cm += dur as f64 / n as f64;
         debug_assert_eq!(n as u32, mask_count(&self.active_mask));
-        self.ring.push(Record::Interval {
-            dur,
-            mask: self.active_mask,
-        });
+        self.rings.push(
+            cpu,
+            now,
+            Record::Interval {
+                dur,
+                mask: self.active_mask,
+            },
+        );
         self.stats.intervals_emitted += 1;
         cost::RINGBUF_RECORD
     }
@@ -186,8 +200,9 @@ impl KernelProbes {
     }
 
     /// task_newtask / task_rename: register an application thread.
-    pub fn on_task_new(&mut self, pid: Pid, now: Time) -> u64 {
-        let mut c = cost::LIFECYCLE + self.advance_interval(now);
+    /// `cpu` is where the spawning context ran (ring routing).
+    pub fn on_task_new(&mut self, pid: Pid, now: Time, cpu: usize) -> u64 {
+        let mut c = cost::LIFECYCLE + self.advance_interval(now, cpu);
         let slot = match self.free_slots.pop() {
             Some(s) => s,
             None => {
@@ -201,7 +216,7 @@ impl KernelProbes {
         self.thread_list.insert(pid as u64, 0);
         if slot != usize::MAX {
             self.slot_of.insert(pid, slot);
-            self.ring.push(Record::SlotAssign { pid, slot });
+            self.rings.push(cpu, now, Record::SlotAssign { pid, slot });
             c += cost::RINGBUF_RECORD;
         }
         // New tasks are runnable immediately.
@@ -224,16 +239,17 @@ impl KernelProbes {
         if waker != 0 && waker != pid {
             self.last_waker.insert(pid, waker);
         }
-        self.on_wakeup(pid, now)
+        self.on_wakeup(pid, now, waker_cpu)
     }
 
-    /// sched_wakeup handler body (waker attribution done by the caller).
-    pub fn on_wakeup(&mut self, pid: Pid, now: Time) -> u64 {
+    /// sched_wakeup handler body (waker attribution done by the caller);
+    /// `cpu` is the waking CPU, whose ring shard takes the interval row.
+    pub fn on_wakeup(&mut self, pid: Pid, now: Time, cpu: usize) -> u64 {
         self.stats.wakeup_events += 1;
         if self.thread_list.get(pid as u64).is_none() {
             return cost::WAKEUP; // not an application thread
         }
-        let c = self.advance_interval(now);
+        let c = self.advance_interval(now, cpu);
         self.mark_active(pid);
         cost::WAKEUP + c
     }
@@ -260,7 +276,7 @@ impl KernelProbes {
         if !prev_is_app && !next_is_app {
             return cost::SWITCH_FAST_PATH;
         }
-        let mut c = cost::SWITCH_FAST_PATH + self.advance_interval(now);
+        let mut c = cost::SWITCH_FAST_PATH + self.advance_interval(now, cpu);
 
         if prev_is_app {
             c += cost::SWITCH_APP_PATH;
@@ -289,22 +305,26 @@ impl KernelProbes {
                 let stack_top = frames.last().copied().unwrap_or(0);
                 self.next_ts_id += 1;
                 let woken_by = self.slice_waker.get(cpu).copied().unwrap_or(0);
-                self.ring.push(Record::SliceEnd {
-                    ts_id: self.next_ts_id,
-                    pid: prev_pid,
-                    cm_ns: cm_delta,
-                    threads_av,
-                    ip: prev_ip,
-                    stack_id,
-                    stack_top,
-                    wait: prev_wait,
-                    woken_by,
-                });
+                self.rings.push(
+                    cpu,
+                    now,
+                    Record::SliceEnd {
+                        ts_id: self.next_ts_id,
+                        pid: prev_pid,
+                        cm_ns: cm_delta,
+                        threads_av,
+                        ip: prev_ip,
+                        stack_id,
+                        stack_top,
+                        wait: prev_wait,
+                        woken_by,
+                    },
+                );
                 c += cost::STACK_FRAME * depth as u64
                     + cost::STACKMAP_LOOKUP
                     + cost::RINGBUF_RECORD;
             } else {
-                self.ring.push(Record::SliceDiscard { pid: prev_pid });
+                self.rings.push(cpu, now, Record::SliceDiscard { pid: prev_pid });
                 c += cost::RINGBUF_RECORD;
             }
 
@@ -314,10 +334,14 @@ impl KernelProbes {
                 self.thread_list.remove(prev_pid as u64);
                 self.total_count.sub_sat(1);
                 if let Some(slot) = self.slot_of.remove(prev_pid) {
-                    self.ring.push(Record::SlotFree {
-                        pid: prev_pid,
-                        slot,
-                    });
+                    self.rings.push(
+                        cpu,
+                        now,
+                        Record::SlotFree {
+                            pid: prev_pid,
+                            slot,
+                        },
+                    );
                     self.free_slots.push(slot);
                     c += cost::RINGBUF_RECORD;
                 }
@@ -336,12 +360,12 @@ impl KernelProbes {
         c
     }
 
-    /// The Δt sampling probe (§4.3).
-    pub fn on_sample(&mut self, pid: Pid, ip: u64) -> u64 {
+    /// The Δt sampling probe (§4.3); `cpu` is the sampled CPU.
+    pub fn on_sample(&mut self, pid: Pid, ip: u64, now: Time, cpu: usize) -> u64 {
         self.stats.sample_ticks_checked += 1;
         let is_app = self.thread_list.get(pid as u64).is_some();
         if is_app && (self.thread_count.get() as f64) < self.nmin() {
-            self.ring.push(Record::Sample { pid, ip });
+            self.rings.push(cpu, now, Record::Sample { pid, ip });
             self.stats.samples_recorded += 1;
             cost::SAMPLE_RECORD
         } else {
@@ -352,8 +376,8 @@ impl KernelProbes {
     /// Route a kernel tracepoint event to its handler. Returns the cost.
     pub fn handle(&mut self, ev: &Event<'_>) -> u64 {
         match ev {
-            Event::TaskNew { time, pid, .. } => self.on_task_new(*pid, *time),
-            Event::ProcessExit { time, pid } => self.on_process_exit(*pid, *time),
+            Event::TaskNew { time, cpu, pid, .. } => self.on_task_new(*pid, *time, *cpu),
+            Event::ProcessExit { time, pid, .. } => self.on_process_exit(*pid, *time),
             Event::SchedWakeup { time, pid, cpu } => {
                 self.on_wakeup_from(*pid, *time, *cpu)
             }
@@ -376,7 +400,9 @@ impl KernelProbes {
                 prev_stack,
                 *prev_wait,
             ),
-            Event::SampleTick { view, .. } => self.on_sample(view.pid, view.ip),
+            Event::SampleTick { time, view } => {
+                self.on_sample(view.pid, view.ip, *time, view.cpu)
+            }
         }
     }
 
@@ -390,7 +416,7 @@ impl KernelProbes {
             + self.last_waker.approx_bytes()
             + self.exiting.approx_bytes()
             + self.stacks.bytes()
-            + self.ring.peak_bytes()
+            + self.rings.peak_bytes()
             + (self.local_cm.len() as u64) * 16
     }
 }
@@ -410,7 +436,7 @@ mod tests {
         let mut p = probes();
         // Register threads 1..4 at t=0 (all runnable).
         for pid in 1..=4 {
-            p.on_task_new(pid, 0);
+            p.on_task_new(pid, 0, 0);
         }
         // Make 2 and 3 and 4 inactive first so we can control intervals.
         // E1 (t=10): thread1 had run alone [0,10]; switch out blocked.
@@ -422,14 +448,14 @@ mod tests {
         // Thread 1 switched in on cpu0 at 0.
         p.on_switch(0, 0, 0, TaskState::Runnable, 1, 0, &[], WaitKind::Futex);
         // E2 (t=10): threads 3 and 4 wake; thread 1 blocks.
-        p.on_wakeup(3, 10);
-        p.on_wakeup(4, 10);
+        p.on_wakeup(3, 10, 0);
+        p.on_wakeup(4, 10, 0);
         p.on_switch(10, 0, 1, TaskState::Blocked, 3, 0, &[], WaitKind::Futex);
         p.on_switch(10, 1, 0, TaskState::Runnable, 4, 0, &[], WaitKind::Futex);
         // interval [0,10]: n=1 → global_cm=10.
         assert!((p.global_cm - 10.0).abs() < 1e-9);
         // E3 (t=18): thread 2 wakes (n was 2 during [10,18]).
-        p.on_wakeup(2, 18);
+        p.on_wakeup(2, 18, 0);
         // E4 (t=27): thread 3 blocks after [18,27] with n=3.
         p.on_switch(27, 0, 3, TaskState::Blocked, 2, 0, &[], WaitKind::Futex);
         // Thread3 cm = T2/2 + T3/3 = 8/2 + 9/3 = 7.
@@ -446,7 +472,7 @@ mod tests {
             2,
         )
         .unwrap();
-        p.on_task_new(1, 0);
+        p.on_task_new(1, 0, 0);
         p.on_switch(0, 0, 0, TaskState::Runnable, 1, 0, &[], WaitKind::Futex);
         // Thread 1 alone for 1 ms → threads_av = 1 < 2 → critical.
         p.on_switch(
@@ -461,7 +487,7 @@ mod tests {
         );
         assert_eq!(p.stats.critical_slices, 1);
         let mut saw_slice = false;
-        while let Some(r) = p.ring.pop() {
+        while let Some(r) = p.rings.pop_global() {
             if let Record::SliceEnd {
                 pid,
                 cm_ns,
@@ -493,14 +519,14 @@ mod tests {
             2,
         )
         .unwrap();
-        p.on_task_new(1, 0);
+        p.on_task_new(1, 0, 0);
         let stack = [0x400000u64, 0x401000];
         let mut t = 0u64;
         for _ in 0..5 {
             p.on_switch(t, 0, 0, TaskState::Runnable, 1, 0, &[], WaitKind::Futex);
             t += 1_000_000;
             p.on_switch(t, 0, 1, TaskState::Blocked, 0, 0xA, &stack, WaitKind::Futex);
-            p.on_wakeup(1, t);
+            p.on_wakeup(1, t, 0);
         }
         assert_eq!(p.stats.critical_slices, 5);
         // One interned stack, five hits-or-inserts totalling 5 lookups.
@@ -508,7 +534,7 @@ mod tests {
         assert_eq!(p.stacks.stats.inserts, 1);
         assert_eq!(p.stacks.stats.hits, 4);
         let mut ids = std::collections::BTreeSet::new();
-        while let Some(r) = p.ring.pop() {
+        while let Some(r) = p.rings.pop_global() {
             if let Record::SliceEnd { stack_id, .. } = r {
                 ids.insert(stack_id);
             }
@@ -526,12 +552,12 @@ mod tests {
             2,
         )
         .unwrap();
-        p.on_task_new(1, 0);
+        p.on_task_new(1, 0, 0);
         p.on_switch(0, 0, 0, TaskState::Runnable, 1, 0, &[], WaitKind::Futex);
         p.on_switch(1_000, 0, 1, TaskState::Blocked, 0, 0, &[], WaitKind::Futex);
         assert_eq!(p.stats.critical_slices, 0);
         let mut saw_discard = false;
-        while let Some(r) = p.ring.pop() {
+        while let Some(r) = p.rings.pop_global() {
             if matches!(r, Record::SliceDiscard { pid: 1 }) {
                 saw_discard = true;
             }
@@ -549,20 +575,20 @@ mod tests {
             2,
         )
         .unwrap();
-        p.on_task_new(1, 0);
-        p.on_task_new(2, 0);
+        p.on_task_new(1, 0, 0);
+        p.on_task_new(2, 0, 0);
         // Both active: count=2 ≥ nmin → fast path.
-        assert_eq!(p.on_sample(1, 0x1), cost::SAMPLE_FAST_PATH);
+        assert_eq!(p.on_sample(1, 0x1, 100, 0), cost::SAMPLE_FAST_PATH);
         p.mark_inactive(2);
         // One active: record.
-        assert_eq!(p.on_sample(1, 0x2), cost::SAMPLE_RECORD);
+        assert_eq!(p.on_sample(1, 0x2, 200, 0), cost::SAMPLE_RECORD);
         assert_eq!(p.stats.samples_recorded, 1);
     }
 
     #[test]
     fn exit_frees_slot_after_final_slice() {
         let mut p = probes();
-        p.on_task_new(7, 0);
+        p.on_task_new(7, 0, 0);
         let slots_before = p.free_slots.len();
         p.on_switch(0, 0, 0, TaskState::Runnable, 7, 0, &[], WaitKind::Futex);
         p.on_process_exit(7, 500);
@@ -576,17 +602,70 @@ mod tests {
     fn interval_mask_matches_count() {
         let mut p = probes();
         for pid in 1..=5 {
-            p.on_task_new(pid, 0);
+            p.on_task_new(pid, 0, 0);
         }
-        p.on_wakeup(1, 100); // no-op (already active), but advances time
+        p.on_wakeup(1, 100, 0); // no-op (already active), but advances time
         p.on_switch(200, 0, 0, TaskState::Runnable, 1, 0, &[], WaitKind::Futex);
         let mut rows = 0;
-        while let Some(r) = p.ring.pop() {
+        while let Some(r) = p.rings.pop_global() {
             if let Record::Interval { mask, .. } = r {
                 assert_eq!(mask_count(&mask), 5);
                 rows += 1;
             }
         }
         assert!(rows >= 1);
+    }
+
+    #[test]
+    fn records_route_to_the_firing_cpus_shard() {
+        // Per-CPU sharding: switches on CPUs 0 and 1 must land on their
+        // own shards, and the global drain must replay them in event
+        // order (the perf-buffer merge a real consumer performs).
+        let mut p = KernelProbes::new(
+            GappConfig {
+                nmin: Some(4.0), // everything is critical
+                ..Default::default()
+            },
+            2,
+        )
+        .unwrap();
+        assert_eq!(p.rings.num_shards(), 2);
+        p.on_task_new(1, 0, 0);
+        p.on_task_new(2, 0, 0);
+        p.on_switch(0, 0, 0, TaskState::Runnable, 1, 0, &[], WaitKind::Futex);
+        p.on_switch(0, 1, 0, TaskState::Runnable, 2, 0, &[], WaitKind::Futex);
+        // Slices end on different CPUs at different times.
+        p.on_switch(
+            1_000,
+            1,
+            2,
+            TaskState::Blocked,
+            0,
+            0xB,
+            &[0x500000],
+            WaitKind::Futex,
+        );
+        p.on_switch(
+            2_000,
+            0,
+            1,
+            TaskState::Blocked,
+            0,
+            0xA,
+            &[0x400000],
+            WaitKind::Futex,
+        );
+        // Shard 1 got CPU 1's records, shard 0 CPU 0's.
+        assert!(p.rings.shard(1).stats.pushed > 0);
+        assert!(p.rings.shard(0).stats.pushed > 0);
+        // Global drain re-establishes timestamp order: pid 2's slice
+        // (t=1000, cpu 1) comes out before pid 1's (t=2000, cpu 0).
+        let mut slice_pids = Vec::new();
+        while let Some(r) = p.rings.pop_global() {
+            if let Record::SliceEnd { pid, .. } = r {
+                slice_pids.push(pid);
+            }
+        }
+        assert_eq!(slice_pids, vec![2, 1]);
     }
 }

@@ -69,11 +69,16 @@ pub enum Record {
 }
 
 // Compile-time guarantees: records stay POD-sized and trivially
-// copyable (the zero-allocation ring-buffer contract).
+// copyable (the zero-allocation ring-buffer contract). The sharded
+// transport wraps each record in a 16-byte `(time, seq)` capture stamp
+// — the perf-record-header analogue — which must keep the wire size
+// within two cache lines.
 const _: () = {
     const fn assert_copy<T: Copy>() {}
     assert_copy::<Record>();
+    assert_copy::<crate::ebpf::Stamped<Record>>();
     assert!(std::mem::size_of::<Record>() <= 64);
+    assert!(std::mem::size_of::<crate::ebpf::Stamped<Record>>() <= 80);
 };
 
 #[cfg(test)]

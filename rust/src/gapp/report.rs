@@ -63,6 +63,11 @@ pub struct Report {
     pub samples: u64,
     pub intervals: u64,
     pub ring_dropped: u64,
+    /// Per-shard ring counters (one entry per per-CPU ring; a single
+    /// entry for `--shards 1`). `ring_dropped` is their summed drops;
+    /// the breakdown shows *which* CPU's buffer needs more pages when
+    /// records were lost.
+    pub ring_shards: Vec<crate::ebpf::RingBufStats>,
     /// Distinct call paths interned by the in-kernel stack map
     /// (`bpf_get_stackid`-style ids carried by ring records).
     pub stack_ids: u64,
@@ -164,6 +169,19 @@ impl fmt::Display for Report {
                 total,
                 lossy,
             )?;
+        }
+        // Per-shard breakdown, only when records were actually lost on a
+        // multi-ring transport (lossless runs render identically across
+        // shard counts — the sharded-vs-single-ring golden relies on it).
+        if self.ring_dropped > 0 && self.ring_shards.len() > 1 {
+            let lossy: Vec<String> = self
+                .ring_shards
+                .iter()
+                .enumerate()
+                .filter(|(_, s)| s.dropped > 0)
+                .map(|(i, s)| format!("s{i} dropped {} (peak {})", s.dropped, s.peak))
+                .collect();
+            writeln!(f, "ring shards: {}", lossy.join(", "))?;
         }
         for b in &self.bottlenecks {
             writeln!(
@@ -289,5 +307,29 @@ mod tests {
         r.window_drops = vec![0, 3, 0, 2];
         let s = r.to_string();
         assert!(s.contains("windows 4 | ring drops 5 in 2 window(s)"));
+    }
+
+    #[test]
+    fn display_shard_breakdown_only_when_lossy_and_sharded() {
+        use crate::ebpf::RingBufStats;
+        let shard = |dropped: u64, peak: usize| RingBufStats {
+            pushed: 10,
+            dropped,
+            drained: 10,
+            peak,
+        };
+        // Lossless sharded run: no breakdown (byte-stable rendering).
+        let mut r = report();
+        r.ring_shards = vec![shard(0, 4), shard(0, 7)];
+        assert!(!r.to_string().contains("ring shards"));
+        // Lossy sharded run: only the lossy shards are listed.
+        r.ring_dropped = 5;
+        r.ring_shards = vec![shard(0, 4), shard(5, 9)];
+        let s = r.to_string();
+        assert!(s.contains("ring shards: s1 dropped 5 (peak 9)"), "{s}");
+        assert!(!s.contains("s0 dropped"));
+        // Lossy single ring: no breakdown line (nothing to break down).
+        r.ring_shards = vec![shard(5, 9)];
+        assert!(!r.to_string().contains("ring shards"));
     }
 }

@@ -1,54 +1,84 @@
 //! The epoch-based ring-buffer consumer — the poll-loop analogue of a
-//! `BPF_MAP_TYPE_RINGBUF` / `PERF_EVENT_ARRAY` user-space reader.
+//! `PERF_EVENT_ARRAY` user-space reader.
 //!
-//! The batch profiler drains the ring once at `finish()`; the streaming
-//! analyzer instead interleaves simulation epochs with full drains, and
-//! uses a [`RingCursor`] so producer-side drops are charged to the
-//! epoch in which they occurred rather than one run-global counter.
+//! The batch profiler drains the rings once at `finish()`; the streaming
+//! analyzer instead interleaves simulation epochs with full drains. The
+//! transport is sharded per CPU, so a [`ShardedConsumer`] holds one
+//! [`RingCursor`] per shard: each epoch it drains every shard (the drain
+//! itself re-establishes the global record order from the capture
+//! timestamps) and reads per-shard [`EpochDelta`]s, so producer-side
+//! drops are charged both to the epoch in which they occurred *and* to
+//! the CPU buffer that overflowed — the two axes a real deployment tunes
+//! buffer pages against.
 
 use crate::ebpf::ringbuf::{EpochDelta, RingCursor};
 
 use super::super::GappCore;
 
 /// Per-epoch drain statistics (one entry per window in the live report).
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Debug, Default)]
 pub struct EpochStats {
     /// Epoch index (1-based, matching window numbering).
     pub epoch: u64,
-    /// Ring activity attributed to this epoch.
+    /// Ring activity attributed to this epoch, summed across shards.
     pub delta: EpochDelta,
+    /// The same activity broken down by shard (indexed by shard id).
+    pub per_shard: Vec<EpochDelta>,
 }
 
-/// Drains the shared kernel/user core once per epoch.
+/// Drains the shared kernel/user core once per epoch, one cursor per
+/// ring shard.
 #[derive(Debug, Default)]
-pub struct EpochConsumer {
-    cursor: RingCursor,
+pub struct ShardedConsumer {
+    cursors: Vec<RingCursor>,
     /// Epochs completed so far.
     pub epochs: u64,
-    /// Total drops observed across all epochs (must equal the ring's
-    /// global counter — the accounting identity the tests pin down).
+    /// Total drops observed across all epochs and shards (must equal
+    /// the rings' aggregated counter — the accounting identity the
+    /// tests pin down).
     pub total_dropped: u64,
+    /// Cumulative drops per shard (sums to `total_dropped`).
+    pub shard_dropped: Vec<u64>,
 }
 
-impl EpochConsumer {
-    /// A consumer whose first epoch is charged everything since the
-    /// ring was created (cursor starts at zero).
-    pub fn new() -> EpochConsumer {
-        EpochConsumer::default()
+impl ShardedConsumer {
+    /// A consumer for `nshards` ring shards whose first epoch is charged
+    /// everything since the rings were created (cursors start at zero).
+    pub fn new(nshards: usize) -> ShardedConsumer {
+        ShardedConsumer {
+            cursors: vec![RingCursor::default(); nshards],
+            epochs: 0,
+            total_dropped: 0,
+            shard_dropped: vec![0; nshards],
+        }
     }
 
-    /// Drain everything currently buffered into the user-space probe and
-    /// close the epoch: returns the ring activity since the previous
-    /// call. Mid-epoch drains triggered by the kernel probe's
+    pub fn num_shards(&self) -> usize {
+        self.cursors.len()
+    }
+
+    /// Drain everything currently buffered (all shards, globally
+    /// re-ordered) into the user-space probe and close the epoch:
+    /// returns the per-shard ring activity since the previous call.
+    /// Mid-epoch drains triggered by the kernel probe's per-shard
     /// drain-threshold are included (they belong to this epoch).
     pub fn drain_epoch(&mut self, core: &mut GappCore) -> EpochStats {
+        debug_assert_eq!(self.cursors.len(), core.kernel.rings.num_shards());
         core.drain();
-        let delta = self.cursor.advance(&core.kernel.ring);
+        let mut total = EpochDelta::default();
+        let mut per_shard = Vec::with_capacity(self.cursors.len());
+        for (i, cur) in self.cursors.iter_mut().enumerate() {
+            let d = cur.advance(core.kernel.rings.shard(i));
+            total.absorb(&d);
+            self.shard_dropped[i] += d.dropped;
+            per_shard.push(d);
+        }
         self.epochs += 1;
-        self.total_dropped += delta.dropped;
+        self.total_dropped += total.dropped;
         EpochStats {
             epoch: self.epochs,
-            delta,
+            delta: total,
+            per_shard,
         }
     }
 }
@@ -60,17 +90,19 @@ mod tests {
     use crate::gapp::GappConfig;
     use crate::runtime::AnalysisEngine;
 
-    fn tiny_core(ring_capacity: usize) -> GappCore {
+    fn tiny_core(ring_capacity: usize, shards: usize) -> GappCore {
         let cfg = GappConfig {
             ring_capacity,
-            // The consumer under test is the only drainer.
+            shards: Some(shards),
+            // The consumer under test is the only drainer; the single
+            // `drain_threshold` knob now lives in `GappConfig` alone
+            // (it used to be duplicated into `GappCore`).
             drain_threshold: usize::MAX,
             ..Default::default()
         };
         GappCore {
             kernel: crate::gapp::probes::KernelProbes::new(cfg, 2).unwrap(),
             user: crate::gapp::userspace::UserProbe::new(AnalysisEngine::native()),
-            drain_threshold: usize::MAX,
         }
     }
 
@@ -80,30 +112,30 @@ mod tests {
 
     #[test]
     fn drops_are_charged_to_their_epoch() {
-        let mut core = tiny_core(4);
-        let mut cons = EpochConsumer::new();
+        let mut core = tiny_core(4, 1);
+        let mut cons = ShardedConsumer::new(1);
         // Epoch 1: overflow by 2.
         for i in 0..6 {
-            core.kernel.ring.push(sample(1, i));
+            core.kernel.rings.push(0, i, sample(1, i));
         }
         let e1 = cons.drain_epoch(&mut core);
         assert_eq!(e1.epoch, 1);
         assert_eq!(e1.delta.dropped, 2);
         assert_eq!(e1.delta.drained, 4);
-        assert_eq!(core.kernel.ring.len(), 0);
+        assert_eq!(core.kernel.rings.len(), 0);
         // Epoch 2: no overflow.
-        core.kernel.ring.push(sample(1, 9));
+        core.kernel.rings.push(0, 9, sample(1, 9));
         let e2 = cons.drain_epoch(&mut core);
         assert_eq!(e2.delta.dropped, 0);
         assert_eq!(e2.delta.drained, 1);
         // Epoch 3: overflow by 1.
         for i in 0..5 {
-            core.kernel.ring.push(sample(1, 20 + i));
+            core.kernel.rings.push(0, 20 + i, sample(1, 20 + i));
         }
         let e3 = cons.drain_epoch(&mut core);
         assert_eq!(e3.delta.dropped, 1);
         // Accounting identity: per-epoch drops sum to the global figure.
-        assert_eq!(cons.total_dropped, core.kernel.ring.stats.dropped);
+        assert_eq!(cons.total_dropped, core.kernel.rings.stats().dropped);
         assert_eq!(cons.epochs, 3);
         // Everything drained reached the user probe.
         assert_eq!(core.user.records_processed, 4 + 1 + 4);
@@ -111,12 +143,48 @@ mod tests {
 
     #[test]
     fn quiet_epoch_reports_zero_deltas() {
-        let mut core = tiny_core(8);
-        let mut cons = EpochConsumer::new();
-        core.kernel.ring.push(Record::SliceDiscard { pid: 3 });
+        let mut core = tiny_core(8, 1);
+        let mut cons = ShardedConsumer::new(1);
+        core.kernel.rings.push(0, 5, Record::SliceDiscard { pid: 3 });
         assert_eq!(cons.drain_epoch(&mut core).delta.drained, 1);
         let quiet = cons.drain_epoch(&mut core);
         assert_eq!(quiet.delta, crate::ebpf::EpochDelta::default());
+        assert_eq!(quiet.per_shard, vec![crate::ebpf::EpochDelta::default()]);
         assert_eq!(cons.epochs, 2);
+    }
+
+    #[test]
+    fn sharded_drops_attribute_to_shard_and_epoch() {
+        let mut core = tiny_core(2, 2);
+        let mut cons = ShardedConsumer::new(2);
+        // Epoch 1: CPU 0 overflows its shard by 3; CPU 1 stays clean.
+        for i in 0..5 {
+            core.kernel.rings.push(0, i, sample(1, i));
+        }
+        core.kernel.rings.push(1, 9, sample(2, 9));
+        let e1 = cons.drain_epoch(&mut core);
+        assert_eq!(e1.per_shard.len(), 2);
+        assert_eq!(e1.per_shard[0].dropped, 3);
+        assert_eq!(e1.per_shard[1].dropped, 0);
+        assert_eq!(e1.delta.dropped, 3);
+        // Epoch 2: the other shard overflows by 1.
+        for i in 0..3 {
+            core.kernel.rings.push(1, 20 + i, sample(2, 20 + i));
+        }
+        let e2 = cons.drain_epoch(&mut core);
+        assert_eq!(e2.per_shard[0].dropped, 0);
+        assert_eq!(e2.per_shard[1].dropped, 1);
+        // Accounting identity, both axes: per-shard per-epoch drop
+        // deltas sum to the global dropped counter.
+        assert_eq!(cons.shard_dropped, vec![3, 1]);
+        assert_eq!(
+            cons.shard_dropped.iter().sum::<u64>(),
+            core.kernel.rings.stats().dropped
+        );
+        assert_eq!(cons.total_dropped, core.kernel.rings.stats().dropped);
+        // Per-shard counters on the rings agree with the cursors.
+        let per = core.kernel.rings.shard_stats();
+        assert_eq!(per[0].dropped, 3);
+        assert_eq!(per[1].dropped, 1);
     }
 }

@@ -37,10 +37,13 @@ pub struct WindowReport {
     pub end_ns: u64,
     /// Critical slices aggregated this window.
     pub slices: u64,
-    /// Ring records drained during this window's epoch.
+    /// Ring records drained during this window's epoch (all shards).
     pub drained: u64,
-    /// Ring drops attributed to this window's epoch.
+    /// Ring drops attributed to this window's epoch (all shards).
     pub drops: u64,
+    /// The same drops broken down by ring shard (indexed by shard id);
+    /// rendered only when the window actually lost records.
+    pub shard_drops: Vec<u64>,
     /// Top-K bottlenecks of the window, ranked by window CMetric.
     pub top: Vec<LiveLine>,
     /// The full window merge snapshot (first-seen order). The driver
@@ -52,7 +55,7 @@ pub struct WindowReport {
 
 impl fmt::Display for WindowReport {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        writeln!(
+        write!(
             f,
             "[w{:>4} {:>10.3}-{:>10.3} ms] slices {} | paths {} | drained {} | drops {}",
             self.index,
@@ -63,6 +66,22 @@ impl fmt::Display for WindowReport {
             self.drained,
             self.drops,
         )?;
+        // Shard breakdown only when lossy AND actually sharded — a
+        // single-ring total has nothing to break down (mirrors
+        // `Report`'s guard, and keeps `--shards 1` output unchanged).
+        if self.drops > 0 && self.shard_drops.len() > 1 {
+            let lossy: Vec<String> = self
+                .shard_drops
+                .iter()
+                .enumerate()
+                .filter(|(_, d)| **d > 0)
+                .map(|(i, d)| format!("s{i}:{d}"))
+                .collect();
+            if !lossy.is_empty() {
+                write!(f, " [{}]", lossy.join(" "))?;
+            }
+        }
+        writeln!(f)?;
         if self.top.is_empty() {
             writeln!(f, "  (no critical slices this window)")?;
         }
@@ -159,6 +178,7 @@ mod tests {
             slices: 1,
             drained: 12,
             drops: 0,
+            shard_drops: vec![0, 0],
             top: lines,
             snapshot: paths,
         };
@@ -167,6 +187,8 @@ mod tests {
         assert!(s.contains("drops 0"));
         assert!(s.contains("dedup"));
         assert!(s.contains("anchor_hash"));
+        // A lossless window never renders a shard breakdown.
+        assert!(!s.contains("[s"));
     }
 
     #[test]
@@ -178,9 +200,33 @@ mod tests {
             slices: 0,
             drained: 0,
             drops: 0,
+            shard_drops: Vec::new(),
             top: Vec::new(),
             snapshot: Vec::new(),
         };
         assert!(wr.to_string().contains("no critical slices"));
+    }
+
+    #[test]
+    fn lossy_window_renders_per_shard_drops() {
+        let mut wr = WindowReport {
+            index: 2,
+            start_ns: 0,
+            end_ns: 5_000_000,
+            slices: 0,
+            drained: 9,
+            drops: 4,
+            shard_drops: vec![0, 3, 0, 1],
+            top: Vec::new(),
+            snapshot: Vec::new(),
+        };
+        let s = wr.to_string();
+        assert!(s.contains("drops 4 [s1:3 s3:1]"), "{s}");
+        // A lossy single-ring window keeps the pre-shard format: the
+        // breakdown would just restate the total.
+        wr.shard_drops = vec![4];
+        let s = wr.to_string();
+        assert!(s.contains("drops 4\n"), "{s}");
+        assert!(!s.contains("[s0"), "{s}");
     }
 }

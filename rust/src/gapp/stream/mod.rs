@@ -6,10 +6,11 @@
 //! the paper's deployment runs against long-lived daemons (§4: the
 //! user-space probe "runs concurrently with the application"):
 //!
-//! * [`consumer`] — an epoch-based ring consumer (the
-//!   `BPF_MAP_TYPE_RINGBUF` poll-loop analogue) that drains once per
-//!   simulation epoch and attributes ring drops to the epoch in which
-//!   they occurred.
+//! * [`consumer`] — an epoch-based consumer over the *sharded* per-CPU
+//!   rings (the `PERF_EVENT_ARRAY` poll-loop analogue): one cursor per
+//!   shard, drained together once per simulation epoch with the global
+//!   record order re-established from capture timestamps, attributing
+//!   ring drops to both the epoch and the CPU buffer they occurred in.
 //! * [`window`] — per-window incremental aggregation with mergeable
 //!   snapshots: all aggregates are associative, so concatenated window
 //!   snapshots merge to *exactly* the batch result (golden-tested).
@@ -30,7 +31,7 @@ pub mod multi;
 pub mod topk;
 pub mod window;
 
-pub use consumer::{EpochConsumer, EpochStats};
+pub use consumer::{EpochStats, ShardedConsumer};
 pub use live::{LiveLine, WindowReport};
 use live::live_lines;
 pub use multi::{AppRegistry, RegistryProbe};
@@ -117,7 +118,18 @@ pub fn run_live(
     mut on_window: impl FnMut(&WindowReport),
 ) -> Result<LiveRun> {
     anyhow::ensure!(!apps.is_empty(), "live mode needs at least one app");
-    anyhow::ensure!(lcfg.window_ns > 0, "window length must be positive");
+    anyhow::ensure!(
+        lcfg.window_ns > 0,
+        "window length must be positive (--window-us 0 would never close a window)"
+    );
+    anyhow::ensure!(
+        lcfg.top_k >= 1,
+        "top_k must be >= 1 (--top 0 would report nothing)"
+    );
+    anyhow::ensure!(
+        lcfg.sketch_entries >= 1,
+        "sketch_entries must be >= 1 (--sketch 0 cannot track anything)"
+    );
     let top_n = gcfg.top_n;
     let stack_lru = gcfg.stack_lru;
     let session = GappSession::new(gcfg, kcfg.cpus, engine)?;
@@ -140,7 +152,9 @@ pub fn run_live(
         .map(|a| Symbolizer::new(a.symtab.as_ref()))
         .collect();
 
-    let mut consumer = EpochConsumer::new();
+    // One cursor per ring shard: the transport is per-CPU perf buffers,
+    // drained together at each epoch boundary.
+    let mut consumer = ShardedConsumer::new(session.core.borrow().kernel.rings.num_shards());
     let mut wacc = WindowAccumulator::new();
     let mut cumulative = PathAccumulator::new();
     let mut sketch: SpaceSaving<u32> = SpaceSaving::new(lcfg.sketch_entries);
@@ -198,6 +212,7 @@ pub fn run_live(
                 slices: slices_in,
                 drained: estats.delta.drained,
                 drops: estats.delta.dropped,
+                shard_drops: estats.per_shard.iter().map(|d| d.dropped).collect(),
                 top,
                 snapshot,
             }

@@ -136,6 +136,7 @@ mod tests {
         let mut probe = RegistryProbe::new(reg.clone());
         let cost = probe.on_event(&Event::TaskNew {
             time: 0,
+            cpu: 0,
             pid: 5,
             parent: 0,
             comm: "t",

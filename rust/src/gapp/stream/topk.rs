@@ -11,10 +11,24 @@
 //! is an upper bound on the true count, off by at most its recorded
 //! `err`, and any key whose true count exceeds the minimum counter is
 //! guaranteed to be tracked.
+//!
+//! Eviction is O(log cap) amortized: minimum-victim selection goes
+//! through a lazy-deletion min-heap over `(count, key)` instead of a
+//! full O(cap) scan per insert, so churn-heavy streams (many distinct
+//! light keys) no longer degrade to O(n·cap). Stale heap entries are
+//! skipped on pop and compacted away when they outnumber the live
+//! counters by 8×.
+//!
+//! Weights accumulate with saturating adds (debug builds assert):
+//! the analyzer feeds integer-femtosecond CMetric weights, and at
+//! 1e15 fs/s a long multi-app run can reach the top of `u64` — a wrap
+//! there would silently reorder the top-K.
 
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
 use std::hash::Hash;
 
-use crate::util::FxHashMap;
+use crate::util::{FxHashMap, sat_add};
 
 /// One tracked counter.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -22,6 +36,9 @@ struct Counter {
     count: u64,
     /// Maximum overestimation inherited when the key seized a slot.
     err: u64,
+    /// Incarnation of this key's map entry: heap entries from before an
+    /// eviction recycled the key are recognized as stale by it.
+    gen: u64,
 }
 
 /// Space-saving top-K sketch over keys of type `K`.
@@ -33,14 +50,26 @@ struct Counter {
 pub struct SpaceSaving<K: Eq + Hash + Copy + Ord> {
     cap: usize,
     counters: FxHashMap<K, Counter>,
+    /// Lazy min-heap over `(count, key, gen)`. Every counter mutation
+    /// pushes its latest state; an entry is live iff it matches the
+    /// map's current `(count, gen)` for its key. The heap top therefore
+    /// yields the true minimum counter, ties broken by smallest key —
+    /// the same victim the old full scan picked.
+    heap: BinaryHeap<Reverse<(u64, K, u64)>>,
+    next_gen: u64,
 }
 
 impl<K: Eq + Hash + Copy + Ord> SpaceSaving<K> {
-    /// A sketch tracking at most `cap` keys (`cap >= 1`).
+    /// A sketch tracking at most `cap` keys. `cap = 0` is rejected
+    /// loudly (it used to be silently bumped to 1): user-facing knobs
+    /// validate earlier with a real error message.
     pub fn new(cap: usize) -> SpaceSaving<K> {
+        assert!(cap >= 1, "SpaceSaving capacity must be >= 1");
         SpaceSaving {
-            cap: cap.max(1),
+            cap,
             counters: FxHashMap::default(),
+            heap: BinaryHeap::new(),
+            next_gen: 0,
         }
     }
 
@@ -60,27 +89,58 @@ impl<K: Eq + Hash + Copy + Ord> SpaceSaving<K> {
     /// per-window CMetric femtoseconds, not unit counts).
     pub fn add(&mut self, key: K, weight: u64) {
         if let Some(c) = self.counters.get_mut(&key) {
-            c.count += weight;
+            c.count = sat_add(c.count, weight);
+            self.heap.push(Reverse((c.count, key, c.gen)));
+            self.maybe_compact();
             return;
         }
         if self.counters.len() < self.cap {
-            self.counters.insert(key, Counter { count: weight, err: 0 });
+            self.next_gen += 1;
+            let c = Counter {
+                count: weight,
+                err: 0,
+                gen: self.next_gen,
+            };
+            self.counters.insert(key, c);
+            self.heap.push(Reverse((weight, key, c.gen)));
+            self.maybe_compact();
             return;
         }
         // Seize the minimum counter (ties: smallest key — deterministic).
-        let (&vk, &vc) = self
-            .counters
-            .iter()
-            .min_by(|(ka, ca), (kb, cb)| ca.count.cmp(&cb.count).then(ka.cmp(kb)))
-            .expect("cap >= 1");
+        // Stale heap entries (superseded counts, evicted keys) are
+        // popped and discarded; every live counter always has its
+        // latest state in the heap, so this cannot run dry.
+        let (vk, vcount) = loop {
+            let Reverse((cnt, k, g)) =
+                self.heap.pop().expect("live counters always have heap entries");
+            match self.counters.get(&k) {
+                Some(c) if c.gen == g && c.count == cnt => break (k, cnt),
+                _ => continue,
+            }
+        };
         self.counters.remove(&vk);
-        self.counters.insert(
-            key,
-            Counter {
-                count: vc.count + weight,
-                err: vc.count,
-            },
-        );
+        self.next_gen += 1;
+        let c = Counter {
+            count: sat_add(vcount, weight),
+            err: vcount,
+            gen: self.next_gen,
+        };
+        self.counters.insert(key, c);
+        self.heap.push(Reverse((c.count, key, c.gen)));
+        self.maybe_compact();
+    }
+
+    /// Rebuild the heap from live counters when stale entries dominate
+    /// (amortized O(1) per add; bounds heap memory at O(cap)).
+    fn maybe_compact(&mut self) {
+        if self.heap.len() > (self.cap * 8).max(64) {
+            self.heap.clear();
+            self.heap.extend(
+                self.counters
+                    .iter()
+                    .map(|(k, c)| Reverse((c.count, *k, c.gen))),
+            );
+        }
     }
 
     /// Top `n` keys as `(key, count_upper_bound, max_overestimate)`,
@@ -100,6 +160,7 @@ impl<K: Eq + Hash + Copy + Ord> SpaceSaving<K> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::Prng;
 
     #[test]
     fn exact_below_capacity() {
@@ -152,5 +213,102 @@ mod tests {
         s.add(9, 1); // tie on count 5 → key 3 is the victim
         let keys: Vec<u32> = s.top(2).into_iter().map(|(k, _, _)| k).collect();
         assert!(keys.contains(&7) && keys.contains(&9), "{keys:?}");
+    }
+
+    #[test]
+    #[should_panic(expected = "capacity must be >= 1")]
+    fn zero_capacity_sketch_is_rejected() {
+        let _ = SpaceSaving::<u32>::new(0);
+    }
+
+    /// The old implementation, verbatim in behaviour: O(cap) min scan
+    /// per eviction. The heap-backed version must pick bit-identical
+    /// victims (including the smallest-key tie-break) on any stream.
+    struct NaiveRef {
+        cap: usize,
+        counters: Vec<(u32, u64, u64)>, // (key, count, err)
+    }
+
+    impl NaiveRef {
+        fn add(&mut self, key: u32, weight: u64) {
+            if let Some(c) = self.counters.iter_mut().find(|c| c.0 == key) {
+                c.1 += weight;
+                return;
+            }
+            if self.counters.len() < self.cap {
+                self.counters.push((key, weight, 0));
+                return;
+            }
+            let vi = (0..self.counters.len())
+                .min_by(|&a, &b| {
+                    let (ka, ca) = (self.counters[a].0, self.counters[a].1);
+                    let (kb, cb) = (self.counters[b].0, self.counters[b].1);
+                    ca.cmp(&cb).then(ka.cmp(&kb))
+                })
+                .unwrap();
+            let vc = self.counters[vi].1;
+            self.counters[vi] = (key, vc + weight, vc);
+        }
+
+        fn top(&self) -> Vec<(u32, u64, u64)> {
+            let mut v = self.counters.clone();
+            v.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+            v
+        }
+    }
+
+    #[test]
+    fn indexed_eviction_matches_the_naive_min_scan_under_churn() {
+        // Churn-heavy random streams: the lazy-heap eviction must stay
+        // exactly equivalent to the full-scan reference, compaction and
+        // re-insertion of previously evicted keys included.
+        let mut rng = Prng::new(0xD1CE);
+        for case in 0..20 {
+            let cap = 1 + rng.pick(8);
+            let mut fast: SpaceSaving<u32> = SpaceSaving::new(cap);
+            let mut slow = NaiveRef {
+                cap,
+                counters: Vec::new(),
+            };
+            for _ in 0..400 {
+                // Small key space → heavy reuse of evicted keys.
+                let key = rng.below(24) as u32;
+                let w = 1 + rng.below(9);
+                fast.add(key, w);
+                slow.add(key, w);
+            }
+            assert_eq!(
+                fast.top(cap),
+                slow.top(),
+                "case {case} (cap {cap}) diverged from the reference"
+            );
+            assert!(
+                fast.heap.len() <= (cap * 8).max(64) + 1,
+                "stale entries must be compacted away"
+            );
+        }
+    }
+
+    #[test]
+    fn near_max_weights_never_wrap_the_ranking() {
+        let mut s: SpaceSaving<u32> = SpaceSaving::new(4);
+        // Exact accumulation at the extreme end of u64: no wrap.
+        s.add(1, u64::MAX - 10);
+        s.add(2, 100);
+        assert_eq!(s.top(2), vec![(1, u64::MAX - 10, 0), (2, 100, 0)]);
+        s.add(1, 10); // lands exactly on u64::MAX — still exact
+        assert_eq!(s.top(1), vec![(1, u64::MAX, 0)]);
+        // One more add would overflow: release builds saturate at MAX
+        // (key 1 stays on top) instead of wrapping to a tiny count and
+        // silently reordering the top-K; debug builds assert.
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            s.add(1, 10);
+            s.top(1)
+        }));
+        if cfg!(debug_assertions) {
+            assert!(r.is_err(), "debug builds must flag counter saturation");
+        } else {
+            assert_eq!(r.unwrap(), vec![(1, u64::MAX, 0)]);
+        }
     }
 }

@@ -24,7 +24,7 @@
 
 use crate::runtime::{AnalysisEngine, T_SLOTS};
 use crate::simkernel::{Pid, WaitKind};
-use crate::util::{FxHashMap, PidMap};
+use crate::util::{FxHashMap, PidMap, sat_add};
 
 use super::records::Record;
 
@@ -99,9 +99,12 @@ impl MergedPath {
         }
     }
 
-    /// Fold one critical slice into this path.
+    /// Fold one critical slice into this path. The integer-femtosecond
+    /// CMetric accumulates saturating: at 1e15 fs/s a long multi-app
+    /// run can reach the top of `u64`, and a wrap would silently demote
+    /// the heaviest path in the ranking.
     fn absorb(&mut self, s: &SliceEntry, app: u16) {
-        self.cm_fs += cm_fs_of(s.cm_ns);
+        self.cm_fs = sat_add(self.cm_fs, cm_fs_of(s.cm_ns));
         self.total_cm_ns = self.cm_fs as f64 / 1e6;
         self.slices += 1;
         for a in &s.addrs {
@@ -121,7 +124,7 @@ impl MergedPath {
     /// one (window-snapshot concatenation).
     pub fn merge_from(&mut self, o: &MergedPath) {
         debug_assert_eq!(self.stack_id, o.stack_id);
-        self.cm_fs += o.cm_fs;
+        self.cm_fs = sat_add(self.cm_fs, o.cm_fs);
         self.total_cm_ns = self.cm_fs as f64 / 1e6;
         self.slices += o.slices;
         for (a, n) in &o.addr_freq {
@@ -699,6 +702,41 @@ mod tests {
         *p.app_slices.entry(3).or_insert(0) += 1;
         assert_eq!(p.dominant_app(), 3);
         assert_eq!(MergedPath::new(9).dominant_app(), 0);
+    }
+
+    #[test]
+    fn near_max_cm_weights_never_wrap_the_accumulator() {
+        // Regression for the unchecked `cm_fs +=`: two window snapshots
+        // of the same path whose integer-femtosecond totals sit near
+        // u64::MAX. Exact up to the boundary; past it, release builds
+        // saturate (path stays ranked on top) and debug builds assert.
+        let near = |cm_fs: u64| MergedPath {
+            stack_id: 1,
+            cm_fs,
+            total_cm_ns: cm_fs as f64 / 1e6,
+            slices: 1,
+            addr_freq: FxHashMap::default(),
+            stack_top_samples: 0,
+            wait_hist: FxHashMap::default(),
+            wakers: FxHashMap::default(),
+            app_slices: FxHashMap::default(),
+        };
+        let mut acc = PathAccumulator::new();
+        acc.merge_path(&near(u64::MAX - 100));
+        acc.merge_path(&near(100)); // lands exactly on u64::MAX
+        assert_eq!(acc.paths()[0].cm_fs, u64::MAX);
+
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut acc = PathAccumulator::new();
+            acc.merge_path(&near(u64::MAX - 100));
+            acc.merge_path(&near(200)); // overflows
+            acc.take_paths()[0].cm_fs
+        }));
+        if cfg!(debug_assertions) {
+            assert!(r.is_err(), "debug builds must flag CMetric saturation");
+        } else {
+            assert_eq!(r.unwrap(), u64::MAX, "release builds must saturate");
+        }
     }
 
     #[test]

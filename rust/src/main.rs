@@ -4,10 +4,17 @@
 //! ```text
 //! gapp list-apps
 //! gapp profile --app dedup [--threads 64] [--seed 7] [--nmin 8] [--dt-us 3000]
+//!              [--shards N] [--ring-capacity R]
 //! gapp live --app mysql --app dedup --window-us 5000 [--top 5] [--lru]
+//!           [--shards N] [--ring-capacity R]
 //!                                  # streaming analyzer: epoch-windowed
 //!                                  # per-window top-K; repeat --app for
 //!                                  # system-wide multi-app profiling
+//! Transport is sharded per CPU (PERF_EVENT_ARRAY-style): one ring of
+//! --ring-capacity records per shard, records routed to the CPU they
+//! fired on and globally re-ordered by timestamp at read time.
+//! --shards defaults to the CPU count; --shards 1 is the single shared
+//! ring (provably equivalent output — only buffering behaviour differs).
 //! gapp run --app ferret            # unprofiled baseline run
 //! gapp table2 [--threads 64]       # Table 2
 //! gapp fig3 | fig4 | fig5 | fig6 | fig7
@@ -77,9 +84,13 @@ fn main() {
             );
             eprintln!(
                 "live mode: gapp live --app mysql --app dedup --window-us 5000 \
-                 [--top 5] [--lru]"
+                 [--top 5] [--lru] [--shards N] [--ring-capacity R]"
             );
-            eprintln!("           (repeat --app to profile several applications system-wide)");
+            eprintln!("           (repeat --app to profile several applications system-wide;");
+            eprintln!(
+                "            transport is per-CPU ring shards — --shards defaults to the \
+                 CPU count, --shards 1 is one shared ring)"
+            );
             std::process::exit(2);
         }
     };
@@ -104,16 +115,29 @@ fn cmd_run(args: &Args, threads: usize, seed: u64) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_profile(args: &Args, engine: EngineKind, threads: usize, seed: u64) -> anyhow::Result<()> {
-    let name = args.opt_str("app", "blackscholes");
-    let app = apps::by_name(&name, threads, seed)
-        .ok_or_else(|| anyhow::anyhow!("unknown app {name:?} (try list-apps)"))?;
+/// Shared `GappConfig` flags (`profile` and `live`), validated at parse
+/// time: zero values get a real error naming the flag.
+fn gapp_config_from(args: &Args) -> anyhow::Result<GappConfig> {
     let mut gcfg = GappConfig::default();
     if let Some(nmin) = args.get("nmin") {
         gcfg.nmin = Some(nmin.parse()?);
     }
-    gcfg.dt = args.opt::<u64>("dt-us", gcfg.dt / 1000) * 1000;
-    gcfg.top_n = args.opt("top", gcfg.top_n);
+    let bad = |e: String| anyhow::anyhow!(e);
+    gcfg.dt = args.opt_min1("dt-us", gcfg.dt / 1000).map_err(bad)? * 1000;
+    gcfg.top_n = args.opt_min1("top", gcfg.top_n as u64).map_err(bad)? as usize;
+    gcfg.ring_capacity =
+        args.opt_min1("ring-capacity", gcfg.ring_capacity as u64).map_err(bad)? as usize;
+    if args.get("shards").is_some() {
+        gcfg.shards = Some(args.opt_min1("shards", 0).map_err(bad)? as usize);
+    }
+    Ok(gcfg)
+}
+
+fn cmd_profile(args: &Args, engine: EngineKind, threads: usize, seed: u64) -> anyhow::Result<()> {
+    let name = args.opt_str("app", "blackscholes");
+    let app = apps::by_name(&name, threads, seed)
+        .ok_or_else(|| anyhow::anyhow!("unknown app {name:?} (try list-apps)"))?;
+    let gcfg = gapp_config_from(args)?;
     let (report, _) = profile(&app, KernelConfig::default(), gcfg, engine.make()?)?;
     println!("{report}");
     Ok(())
@@ -134,17 +158,13 @@ fn cmd_live(args: &Args, engine: EngineKind, threads: usize, seed: u64) -> anyho
                 .ok_or_else(|| anyhow::anyhow!("unknown app {n:?} (try list-apps)"))
         })
         .collect::<anyhow::Result<_>>()?;
-    let mut gcfg = GappConfig::default();
-    if let Some(nmin) = args.get("nmin") {
-        gcfg.nmin = Some(nmin.parse()?);
-    }
-    gcfg.dt = args.opt::<u64>("dt-us", gcfg.dt / 1000) * 1000;
-    gcfg.top_n = args.opt("top", gcfg.top_n);
+    let mut gcfg = gapp_config_from(args)?;
     gcfg.stack_lru = args.flag("lru");
+    let bad = |e: String| anyhow::anyhow!(e);
     let lcfg = LiveConfig {
-        window_ns: args.opt::<u64>("window-us", 5000) * 1000,
-        top_k: args.opt("top", 5),
-        sketch_entries: args.opt("sketch", 64),
+        window_ns: args.opt_min1("window-us", 5000).map_err(bad)? * 1000,
+        top_k: args.opt_min1("top", 5).map_err(bad)? as usize,
+        sketch_entries: args.opt_min1("sketch", 64).map_err(bad)? as usize,
     };
     let run = run_live(
         &apps,

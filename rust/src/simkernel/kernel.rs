@@ -285,11 +285,12 @@ impl Kernel {
         std::mem::take(&mut self.probes)
     }
 
-    /// Spawn a root task before `run` (emits `task_newtask` at t=0).
+    /// Spawn a root task before `run` (emits `task_newtask` at t=0,
+    /// charged to the boot CPU).
     pub fn spawn(&mut self, comm: &str, logic: Box<dyn TaskLogic>) -> Pid {
         let pid = self.next_pid;
         self.next_pid += 1;
-        self.admit(pid, comm, logic, 0, IDLE_PID);
+        self.admit(pid, comm, logic, 0, IDLE_PID, 0);
         pid
     }
 
@@ -338,7 +339,15 @@ impl Kernel {
         Self::emit_to(&mut self.probes, &mut self.stats, ev)
     }
 
-    fn admit(&mut self, pid: Pid, comm: &str, logic: Box<dyn TaskLogic>, now: Time, parent: Pid) {
+    fn admit(
+        &mut self,
+        pid: Pid,
+        comm: &str,
+        logic: Box<dyn TaskLogic>,
+        now: Time,
+        parent: Pid,
+        cpu: usize,
+    ) {
         while self.tasks.len() <= pid as usize {
             self.tasks.push(None);
             self.logic.push(None);
@@ -354,6 +363,7 @@ impl Kernel {
         self.stats.spawned += 1;
         self.emit(&Event::TaskNew {
             time: now,
+            cpu,
             pid,
             parent,
             comm,
@@ -659,7 +669,7 @@ impl Kernel {
                 // never re-enter this task's logic synchronously).
                 self.logic[pid as usize] = Some(logic);
                 for (cpid, comm, clogic) in spawns {
-                    self.admit(cpid, &comm, clogic, now, pid);
+                    self.admit(cpid, &comm, clogic, now, pid, cpu);
                     if let Some(idle) =
                         (0..self.cpus.len()).find(|c| self.cpus[*c].current.is_none())
                     {
@@ -743,7 +753,7 @@ impl Kernel {
                     }
                     self.logic[pid as usize] = None;
                     self.stats.exited += 1;
-                    self.emit(&Event::ProcessExit { time: now, pid });
+                    self.emit(&Event::ProcessExit { time: now, cpu, pid });
                     self.on_tracked_exit(pid);
                     self.cpus[cpu].current = None;
                     self.dispatch(cpu, now, pid, TaskState::Blocked);

@@ -54,14 +54,18 @@ pub enum Event<'a> {
     /// A blocked task became runnable.
     SchedWakeup { time: Time, cpu: usize, pid: Pid },
     /// New task created (`task_newtask`); `comm` as `task_rename` reports.
+    /// `cpu` is where the spawning context ran — real tracepoints fire on
+    /// the CPU executing the syscall, and per-CPU ring transports route
+    /// records by it (pre-run spawns are charged to the boot CPU, 0).
     TaskNew {
         time: Time,
+        cpu: usize,
         pid: Pid,
         parent: Pid,
         comm: &'a str,
     },
-    /// Task exited (`sched_process_exit`).
-    ProcessExit { time: Time, pid: Pid },
+    /// Task exited (`sched_process_exit`) on `cpu`.
+    ProcessExit { time: Time, cpu: usize, pid: Pid },
     /// Periodic sampling tick (one per sampled CPU with a running task).
     SampleTick { time: Time, view: SampleView },
 }
@@ -74,6 +78,18 @@ impl<'a> Event<'a> {
             | Event::TaskNew { time, .. }
             | Event::ProcessExit { time, .. }
             | Event::SampleTick { time, .. } => *time,
+        }
+    }
+
+    /// CPU the event fired on — the shard any record this event's
+    /// handlers emit lands in (per-CPU ring routing).
+    pub fn cpu(&self) -> usize {
+        match self {
+            Event::SchedSwitch { cpu, .. }
+            | Event::SchedWakeup { cpu, .. }
+            | Event::TaskNew { cpu, .. }
+            | Event::ProcessExit { cpu, .. } => *cpu,
+            Event::SampleTick { view, .. } => view.cpu,
         }
     }
 }

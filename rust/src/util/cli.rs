@@ -70,14 +70,33 @@ impl Args {
         matches!(self.get(key), Some(v) if v != "false")
     }
 
-    /// Typed option with default.
+    /// Typed option with default. A malformed value is a hard error
+    /// naming the flag (it used to print "using default" and then exit
+    /// anyway — a lie in the message).
     pub fn opt<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
         match self.get(key) {
             Some(v) => v.parse().unwrap_or_else(|_| {
-                eprintln!("warning: bad value for --{key}: {v:?}; using default");
+                eprintln!("error: invalid value for --{key}: {v:?}");
                 std::process::exit(2);
             }),
             None => default,
+        }
+    }
+
+    /// Numeric option that must be >= 1 when present. Zero is a
+    /// configuration error, not a request (`--top 0` would report
+    /// nothing, `--window-us 0` would never close a window, `--shards 0`
+    /// has no transport) — so it is rejected at parse time with a real
+    /// error naming the flag, instead of silently misbehaving deeper in
+    /// the pipeline.
+    pub fn opt_min1(&self, key: &str, default: u64) -> Result<u64, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => match v.parse::<u64>() {
+                Ok(0) => Err(format!("--{key} must be >= 1 (got 0)")),
+                Ok(n) => Ok(n),
+                Err(_) => Err(format!("--{key} expects a positive integer (got {v:?})")),
+            },
         }
     }
 
@@ -134,6 +153,18 @@ mod tests {
     fn negative_number_values() {
         let a = parse(&["--delta", "-3"]);
         assert_eq!(a.opt::<i64>("delta", 0), -3);
+    }
+
+    #[test]
+    fn opt_min1_rejects_zero_and_garbage_with_real_errors() {
+        let a = parse(&["live", "--top", "0", "--window-us", "5000", "--shards", "x"]);
+        let err = a.opt_min1("top", 5).unwrap_err();
+        assert!(err.contains("--top"), "{err}");
+        assert!(err.contains(">= 1"), "{err}");
+        assert_eq!(a.opt_min1("window-us", 5000), Ok(5000));
+        assert_eq!(a.opt_min1("absent", 7), Ok(7));
+        let err = a.opt_min1("shards", 1).unwrap_err();
+        assert!(err.contains("--shards"), "{err}");
     }
 
     #[test]

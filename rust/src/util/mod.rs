@@ -15,3 +15,28 @@ pub use densemap::PidMap;
 pub use fxhash::{BuildFxHasher, FxHashMap, FxHashSet, FxHasher};
 pub use prng::Prng;
 pub use stats::Summary;
+
+/// Saturating accumulate for hot-path `u64` counters (CMetric
+/// femtoseconds, sketch weights): a wrap would silently demote the
+/// heaviest entry in a ranking, so release builds clamp at `u64::MAX`
+/// — the truthful direction — and debug builds assert.
+#[inline]
+pub fn sat_add(a: u64, b: u64) -> u64 {
+    let s = a.checked_add(b);
+    debug_assert!(s.is_some(), "u64 accumulator saturated ({a} + {b})");
+    s.unwrap_or(u64::MAX)
+}
+
+#[cfg(test)]
+mod sat_add_tests {
+    #[test]
+    fn saturates_in_release_asserts_in_debug() {
+        assert_eq!(super::sat_add(u64::MAX - 5, 5), u64::MAX);
+        let r = std::panic::catch_unwind(|| super::sat_add(u64::MAX, 1));
+        if cfg!(debug_assertions) {
+            assert!(r.is_err());
+        } else {
+            assert_eq!(r.unwrap(), u64::MAX);
+        }
+    }
+}

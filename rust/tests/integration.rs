@@ -276,6 +276,7 @@ fn tiny_ring_buffer_reports_drops() {
         KernelConfig::default(),
         GappConfig {
             ring_capacity: 64,
+            shards: Some(1), // one tiny shared ring
             drain_threshold: usize::MAX, // never drain mid-run
             ..Default::default()
         },

@@ -17,12 +17,18 @@
 //!    bottleneck carries per-app attribution.
 //! 5. Stack-map policies: LRU never drops where drop-new does, and the
 //!    eviction policy cannot perturb the simulated timeline.
+//! 6. Sharded transport: a per-CPU-ring run (`--shards ≥ 2`) renders a
+//!    byte-identical report to the single-shared-ring run on the same
+//!    seed, per-shard per-epoch drop deltas sum exactly to the global
+//!    dropped counter, and random shard interleavings composed with
+//!    random ragged window boundaries always merge to the batch result.
 
-use gapp::gapp::stream::{merge_snapshots, run_live, LiveConfig};
-use gapp::gapp::userspace::MergedPath;
+use gapp::gapp::stream::{merge_snapshots, run_live, LiveConfig, WindowAccumulator};
+use gapp::gapp::userspace::{MergedPath, PathAccumulator, SliceEntry};
 use gapp::gapp::{profile, GappConfig, GappSession, Report};
 use gapp::runtime::AnalysisEngine;
-use gapp::simkernel::{Kernel, KernelConfig};
+use gapp::simkernel::{Kernel, KernelConfig, WaitKind};
+use gapp::util::check::property;
 use gapp::workload::apps;
 
 /// Zero the fields that depend on host timing or on *when* the ring was
@@ -138,11 +144,13 @@ fn window_snapshots_concatenate_to_the_exact_batch_merge() {
 
 #[test]
 fn ring_wraparound_drops_are_attributed_per_window() {
-    // A deliberately slow consumer: tiny ring, and the kernel-side
-    // drain threshold disabled so nothing drains until each epoch ends.
+    // A deliberately slow consumer: one tiny shared ring, and the
+    // kernel-side drain threshold disabled so nothing drains until each
+    // epoch ends.
     let app = apps::canneal(8, 5);
     let gcfg = GappConfig {
         ring_capacity: 64,
+        shards: Some(1),
         drain_threshold: usize::MAX,
         ..Default::default()
     };
@@ -296,4 +304,234 @@ fn stack_lru_never_drops_and_cannot_perturb_the_timeline() {
     assert_eq!(lru.stack_drops, 0);
     assert!(lru.stack_evictions > 0);
     assert!(!lru.bottlenecks.is_empty());
+}
+
+#[test]
+fn sharded_run_is_byte_identical_to_single_ring() {
+    // The acceptance golden: the per-CPU sharded transport must be
+    // invisible to the analysis. Same fixed seed, one run through a
+    // single shared ring, one through 4 per-CPU shards — the drains
+    // re-establish global record order from capture timestamps, so the
+    // final reports render byte-identically (host-side memory/PPT
+    // normalized; ring buffering is the only thing that may differ).
+    let run_with = |shards: usize| {
+        let app = apps::canneal(8, 5);
+        run_live(
+            std::slice::from_ref(&app),
+            KernelConfig::default(),
+            GappConfig {
+                shards: Some(shards),
+                ..Default::default()
+            },
+            AnalysisEngine::native(),
+            LiveConfig {
+                window_ns: 2_000_000,
+                ..Default::default()
+            },
+            |_| {},
+        )
+        .unwrap()
+    };
+    let single = run_with(1);
+    let sharded = run_with(4);
+    assert_eq!(single.report.ring_shards.len(), 1);
+    assert_eq!(sharded.report.ring_shards.len(), 4);
+    // Records actually spread across shards (multi-CPU workload).
+    assert!(
+        sharded.report.ring_shards.iter().filter(|s| s.pushed > 0).count() > 1,
+        "expected records on more than one shard"
+    );
+    // The simulated timeline is untouched by the transport shape.
+    assert_eq!(single.report.runtime_ns, sharded.report.runtime_ns);
+    assert_eq!(single.report.total_slices, sharded.report.total_slices);
+    assert_eq!(single.report.probe_cost_ns, sharded.report.probe_cost_ns);
+    assert_eq!(single.report.ring_dropped, 0);
+    assert_eq!(sharded.report.ring_dropped, 0);
+    let mut a = single.report.clone();
+    let mut b = sharded.report.clone();
+    normalize(&mut a);
+    normalize(&mut b);
+    assert_eq!(
+        a.to_string(),
+        b.to_string(),
+        "sharded drain must reproduce the single-ring report byte for byte"
+    );
+    // Batch is identical too: the same golden holds for `profile`.
+    let (batch1, _) = profile(
+        &apps::canneal(8, 5),
+        KernelConfig::default(),
+        GappConfig {
+            shards: Some(1),
+            ..Default::default()
+        },
+        AnalysisEngine::native(),
+    )
+    .unwrap();
+    let (batch4, _) = profile(
+        &apps::canneal(8, 5),
+        KernelConfig::default(),
+        GappConfig {
+            shards: Some(4),
+            ..Default::default()
+        },
+        AnalysisEngine::native(),
+    )
+    .unwrap();
+    let mut a = batch1;
+    let mut b = batch4;
+    normalize(&mut a);
+    normalize(&mut b);
+    assert_eq!(a.to_string(), b.to_string());
+}
+
+#[test]
+fn sharded_drops_sum_to_the_global_counter_across_epochs_and_shards() {
+    // Force overflow on a sharded transport: tiny per-shard rings and
+    // no mid-epoch drains. The accounting identity must hold on both
+    // axes — per-window drops (summed over shards) equal the report's
+    // window attribution, and per-shard totals sum to the global
+    // dropped counter.
+    let app = apps::canneal(8, 5);
+    let gcfg = GappConfig {
+        ring_capacity: 16,
+        shards: Some(4),
+        drain_threshold: usize::MAX,
+        ..Default::default()
+    };
+    let mut window_shard_totals: Vec<u64> = vec![0; 4];
+    let run = run_live(
+        std::slice::from_ref(&app),
+        KernelConfig::default(),
+        gcfg,
+        AnalysisEngine::native(),
+        LiveConfig {
+            window_ns: 5_000_000,
+            ..Default::default()
+        },
+        |w| {
+            assert_eq!(w.shard_drops.len(), 4);
+            assert_eq!(
+                w.shard_drops.iter().sum::<u64>(),
+                w.drops,
+                "window {}: shard breakdown must sum to the window total",
+                w.index
+            );
+            for (i, d) in w.shard_drops.iter().enumerate() {
+                window_shard_totals[i] += d;
+            }
+        },
+    )
+    .unwrap();
+    assert!(
+        run.report.ring_dropped > 0,
+        "16-record shards with no mid-epoch drain should overflow"
+    );
+    // Per-window attribution covers every drop...
+    let per_window: u64 = run.report.window_drops.iter().sum();
+    assert_eq!(per_window, run.report.ring_dropped);
+    // ...and so does the per-shard attribution, window by window.
+    assert_eq!(
+        window_shard_totals.iter().sum::<u64>(),
+        run.report.ring_dropped
+    );
+    // The report's final per-shard counters agree with the per-epoch
+    // deltas accumulated through the consumer's cursors.
+    assert_eq!(run.report.ring_shards.len(), 4);
+    for (i, s) in run.report.ring_shards.iter().enumerate() {
+        assert_eq!(
+            s.dropped, window_shard_totals[i],
+            "shard {i}: cursor deltas must sum to the ring's own counter"
+        );
+    }
+}
+
+#[test]
+fn random_shard_interleavings_and_ragged_windows_merge_to_the_batch_report() {
+    // Property: take one slice stream; deal it onto S simulated shard
+    // queues (each preserving relative order, like per-CPU FIFOs); have
+    // a consumer merge the queues back into global order by the slices'
+    // capture sequence; aggregate through random ragged window
+    // boundaries; merge the snapshots. However the records were sharded
+    // and windowed, the result must equal the one-shot batch merge —
+    // associativity (PR 2) composed with timestamp re-ordering (this
+    // PR) is exactly what the sharded drain relies on.
+    property("shard interleaving × ragged windows", 24, |rng| {
+        let n = 60 + rng.pick(120) as u64;
+        let mk = |i: u64| SliceEntry {
+            ts_id: i, // capture sequence: the merge key
+            pid: (1 + i % 5) as u32,
+            cm_ns: 8.0 + (i as f64) * 0.591,
+            threads_av: 1.0,
+            stack_id: (i % 7) as u32,
+            addrs: vec![0x400 + i % 9],
+            from_stack_top: i % 3 == 0,
+            wait: if i % 2 == 0 {
+                WaitKind::Futex
+            } else {
+                WaitKind::Queue
+            },
+            woken_by: (i % 3) as u32,
+        };
+        let slices: Vec<SliceEntry> = (0..n).map(mk).collect();
+
+        // Reference: one batch merge over the stream in capture order.
+        let mut batch = PathAccumulator::new();
+        for s in &slices {
+            batch.add_slice(s, (s.pid % 2) as u16);
+        }
+        let batch_paths = batch.take_paths();
+
+        // Shard the stream: random owner per slice, FIFO per shard.
+        let nshards = 2 + rng.pick(4);
+        let mut shards: Vec<Vec<SliceEntry>> = vec![Vec::new(); nshards];
+        for s in &slices {
+            shards[rng.pick(nshards)].push(s.clone());
+        }
+        // Consumer: re-establish global order by capture sequence
+        // (pop the shard whose head has the smallest ts_id).
+        let mut heads = vec![0usize; nshards];
+        let mut merged_stream: Vec<&SliceEntry> = Vec::new();
+        loop {
+            let mut best: Option<(usize, u64)> = None;
+            for (i, q) in shards.iter().enumerate() {
+                if let Some(s) = q.get(heads[i]) {
+                    if best.map_or(true, |(_, b)| s.ts_id < b) {
+                        best = Some((i, s.ts_id));
+                    }
+                }
+            }
+            match best {
+                Some((i, _)) => {
+                    merged_stream.push(&shards[i][heads[i]]);
+                    heads[i] += 1;
+                }
+                None => break,
+            }
+        }
+        assert_eq!(merged_stream.len(), slices.len());
+
+        // Aggregate through random ragged windows, then merge snapshots.
+        let mut wacc = WindowAccumulator::new();
+        let mut snaps: Vec<Vec<MergedPath>> = Vec::new();
+        for s in &merged_stream {
+            wacc.add_slice(s, (s.pid % 2) as u16);
+            if rng.chance(0.07) {
+                snaps.push(wacc.snapshot());
+            }
+        }
+        snaps.push(wacc.snapshot());
+        let merged = merge_snapshots(snaps.iter().map(|s| s.as_slice()));
+
+        assert_eq!(merged.len(), batch_paths.len());
+        for (a, b) in batch_paths.iter().zip(&merged) {
+            assert_eq!(a.stack_id, b.stack_id, "first-seen order must survive");
+            assert_eq!(a.cm_fs, b.cm_fs, "integer CMetric must match exactly");
+            assert_eq!(a.slices, b.slices);
+            assert_eq!(a.addr_freq, b.addr_freq);
+            assert_eq!(a.stack_top_samples, b.stack_top_samples);
+            assert_eq!(a.wait_hist, b.wait_hist);
+            assert_eq!(a.wakers, b.wakers);
+            assert_eq!(a.app_slices, b.app_slices);
+        }
+    });
 }
