@@ -2,6 +2,10 @@
 //! see OutputBMP + RecvCmd at the top, apply the writer-thread fix, and
 //! re-measure.
 
+// Uses the deprecated `profile` wrapper on purpose: the examples
+// double as compatibility coverage for the pre-Session API.
+#![allow(deprecated)]
+
 use gapp::gapp::{profile, run_unprofiled, GappConfig};
 use gapp::runtime::AnalysisEngine;
 use gapp::simkernel::KernelConfig;

@@ -2,6 +2,10 @@
 //! pipeline stages until the profile flattens (paper: 2-1-18-39, ~50%
 //! faster than 15-15-15-15).
 
+// Uses the deprecated `profile` wrapper on purpose: the examples
+// double as compatibility coverage for the pre-Session API.
+#![allow(deprecated)]
+
 use gapp::gapp::{profile, GappConfig};
 use gapp::runtime::AnalysisEngine;
 use gapp::simkernel::KernelConfig;

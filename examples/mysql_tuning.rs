@@ -2,6 +2,10 @@
 //! and the sync_array spin path, tune innodb_buffer_pool_size then
 //! INNODB_SPIN_WAIT_DELAY, and verify the order matters.
 
+// Uses the deprecated `profile` wrapper on purpose: the examples
+// double as compatibility coverage for the pre-Session API.
+#![allow(deprecated)]
+
 use gapp::gapp::{profile, GappConfig};
 use gapp::runtime::AnalysisEngine;
 use gapp::simkernel::KernelConfig;

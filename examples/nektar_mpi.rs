@@ -2,6 +2,10 @@
 //! expose the load imbalance by switching off aggressive progress,
 //! validate with a structured mesh, then relink BLAS.
 
+// Uses the deprecated `profile` wrapper on purpose: the examples
+// double as compatibility coverage for the pre-Session API.
+#![allow(deprecated)]
+
 use gapp::gapp::{profile, GappConfig};
 use gapp::runtime::AnalysisEngine;
 use gapp::simkernel::KernelConfig;

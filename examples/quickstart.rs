@@ -1,12 +1,13 @@
-//! Quickstart: profile one synthetic application with GAPP and print the
-//! ranked bottleneck report.
+//! Quickstart: profile one synthetic application with GAPP through the
+//! library-first `Session` API and print the ranked bottleneck report.
 //!
 //! ```sh
 //! cargo run --release --example quickstart            # native backend
 //! make artifacts && cargo run --release --example quickstart  # XLA backend
 //! ```
 
-use gapp::gapp::{profile, GappConfig};
+use gapp::gapp::sink::HumanSink;
+use gapp::gapp::{GappConfig, Session};
 use gapp::runtime::AnalysisEngine;
 use gapp::simkernel::KernelConfig;
 use gapp::workload::apps;
@@ -20,20 +21,21 @@ fn main() -> anyhow::Result<()> {
     let engine = AnalysisEngine::auto();
     println!("analysis backend: {}", engine.backend_name());
 
-    let (report, kernel) = profile(
-        &app,
-        KernelConfig::default(), // 64 simulated CPUs
-        GappConfig::default(),   // Nmin = n/2, Δt = 3 ms
-        engine,
-    )?;
+    // The sink renders the report as it is produced; swap it for a
+    // `JsonSink`/`JsonlSink` (or tee several) for machine output.
+    let out = Session::builder(engine)
+        .kernel(KernelConfig::default()) // 64 simulated CPUs
+        .config(GappConfig::default()) // Nmin = n/2, Δt = 3 ms
+        .app(&app)
+        .sink(HumanSink::new(std::io::stdout()))
+        .run()?;
 
-    println!("{report}");
     println!(
         "kernel: {} context switches, {} wakeups, {} probe-ns charged",
-        kernel.stats.switches, kernel.stats.wakeups, kernel.stats.probe_ns
+        out.kernel.stats.switches, out.kernel.stats.wakeups, out.kernel.stats.probe_ns
     );
     println!("\ntop critical functions (paper Table 2: deflate_slow):");
-    for (f, n) in report.top_functions(5) {
+    for (f, n) in out.report.top_functions(5) {
         println!("  {n:>6}  {f}");
     }
     Ok(())

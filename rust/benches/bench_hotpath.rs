@@ -8,6 +8,11 @@
 //! `Bench::finish` writes `BENCH_hotpath.json` at the repo root so the
 //! perf trajectory of these numbers is tracked across PRs.
 
+// Benches drive the deprecated `profile`/`run_live` wrappers on
+// purpose: their rows are tracked across PRs and the wrappers add no
+// measurable cost over the Session driver they delegate to.
+#![allow(deprecated)]
+
 use gapp::ebpf::{RingBuf, ShardedRing, StackMap};
 use gapp::gapp::records::{mask_set, Record, SlotMask};
 use gapp::gapp::{profile, GappConfig};
@@ -115,6 +120,74 @@ fn main() {
             )
             .unwrap();
             sink(run.report.runtime_ns);
+        });
+    }
+
+    // --- report sinks: serialization overhead on one live run -----------
+    // Replay the captured event stream of a 16-thread canneal live run
+    // through each backend. The run itself is amortized out, so the row
+    // pair reads as "what does JSON serialization cost over the human
+    // renderer" — the number the ROADMAP's transport work budgets from.
+    {
+        use gapp::gapp::sink::{
+            FinalEvent, HumanSink, JsonSink, JsonlSink, ReportEvent, ReportSink,
+            SessionInfo, SessionMode,
+        };
+        use gapp::gapp::stream::WindowReport;
+
+        let app = apps::canneal(16, 3);
+        let mut windows: Vec<WindowReport> = Vec::new();
+        let run = gapp::gapp::stream::run_live(
+            std::slice::from_ref(&app),
+            KernelConfig::default(),
+            GappConfig::default(),
+            AnalysisEngine::native(),
+            gapp::gapp::stream::LiveConfig {
+                window_ns: 5_000_000,
+                ..Default::default()
+            },
+            |w| windows.push(w.clone()),
+        )
+        .unwrap();
+        let info = SessionInfo {
+            mode: SessionMode::Live,
+            apps: vec![app.name.clone()],
+            shards: 1,
+            window_ns: Some(5_000_000),
+            config: GappConfig::default(),
+        };
+        let mut replay = |s: &mut dyn ReportSink| {
+            s.on_event(&ReportEvent::SessionStart(&info)).unwrap();
+            for w in &windows {
+                s.on_event(&ReportEvent::WindowClosed(w)).unwrap();
+            }
+            s.on_event(&ReportEvent::Final(FinalEvent {
+                report: &run.report,
+                windows: &run.windows,
+                sketch_top: &run.sketch_top,
+                sketch_lines: &run.sketch_lines,
+            }))
+            .unwrap();
+            s.on_event(&ReportEvent::SessionEnd {
+                runtime_ns: run.runtime_ns,
+            })
+            .unwrap();
+            s.finish().unwrap();
+        };
+        b.bench("sink_human_live_canneal_16t_render", || {
+            let mut s = HumanSink::new(Vec::<u8>::with_capacity(64 << 10));
+            replay(&mut s);
+            sink(s.into_inner().len());
+        });
+        b.bench("sink_json_live_canneal_16t_render", || {
+            let mut s = JsonSink::new(Vec::<u8>::with_capacity(64 << 10));
+            replay(&mut s);
+            sink(s.into_inner().len());
+        });
+        b.bench("sink_jsonl_live_canneal_16t_render", || {
+            let mut s = JsonlSink::new(Vec::<u8>::with_capacity(64 << 10));
+            replay(&mut s);
+            sink(s.into_inner().len());
         });
     }
 

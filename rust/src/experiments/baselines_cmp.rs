@@ -9,7 +9,7 @@
 use anyhow::Result;
 
 use crate::baselines::{CozProfiler, CritStacksProfiler, WPerfProfiler};
-use crate::gapp::{profile, GappConfig};
+use crate::gapp::{GappConfig, Session};
 use crate::simkernel::{Kernel, KernelConfig};
 use crate::workload::apps;
 
@@ -34,12 +34,11 @@ pub fn run(engine: EngineKind, seed: u64) -> Result<BaselinesResult> {
     // ---- B1: MySQL trace through both post-processors -----------------
     let mysql_cfg = apps::MysqlConfig::default();
     let app = apps::mysql(32, seed, mysql_cfg);
-    let (report, _) = profile(
-        &app,
-        KernelConfig::default(),
-        GappConfig::default(),
-        engine.make()?,
-    )?;
+    let report = Session::builder(engine.make()?)
+        .config(GappConfig::default())
+        .app(&app)
+        .run()?
+        .report;
     let gapp_ppt_s = report.ppt_seconds;
 
     let app2 = apps::mysql(32, seed, mysql_cfg);
@@ -80,12 +79,11 @@ pub fn run(engine: EngineKind, seed: u64) -> Result<BaselinesResult> {
                 ..apps::FerretConfig::with_alloc(4, 2, 6, 10)
             },
         );
-        let (rep, _) = profile(
-            &app,
-            KernelConfig::default(),
-            GappConfig::default(),
-            EngineKind::Native.make()?,
-        )?;
+        let rep = Session::builder(EngineKind::Native.make()?)
+            .config(GappConfig::default())
+            .app(&app)
+            .run()?
+            .report;
         gapp_tops.push(rep.top_functions(1));
     }
     gapp_tops.dedup();
@@ -99,12 +97,12 @@ pub fn run(engine: EngineKind, seed: u64) -> Result<BaselinesResult> {
     let app = apps::blackscholes(32, seed);
     let (_, oncpu_avg) = CritStacksProfiler::run(&app, kcfg8.clone())?;
     let app2 = apps::blackscholes(32, seed);
-    let (rep, _) = profile(
-        &app2,
-        kcfg8,
-        GappConfig::default(),
-        EngineKind::Native.make()?,
-    )?;
+    let rep = Session::builder(EngineKind::Native.make()?)
+        .kernel(kcfg8)
+        .config(GappConfig::default())
+        .app(&app2)
+        .run()?
+        .report;
     let (w, c) = rep
         .threads
         .iter()

@@ -3,7 +3,7 @@
 
 use anyhow::Result;
 
-use crate::gapp::{profile, run_unprofiled, GappConfig, Report};
+use crate::gapp::{run_unprofiled, GappConfig, Report, Session};
 use crate::runtime::AnalysisEngine;
 use crate::simkernel::KernelConfig;
 use crate::workload::App;
@@ -52,7 +52,13 @@ pub fn profiled_run(
     engine: EngineKind,
 ) -> Result<ProfiledRun> {
     let (base_ns, _) = run_unprofiled(&mk(), kcfg.clone())?;
-    let (report, _) = profile(&mk(), kcfg, gcfg, engine.make()?)?;
+    let app = mk();
+    let report = Session::builder(engine.make()?)
+        .kernel(kcfg)
+        .config(gcfg)
+        .app(&app)
+        .run()?
+        .report;
     let overhead_pct = if base_ns > 0 {
         (report.runtime_ns as f64 - base_ns as f64) / base_ns as f64 * 100.0
     } else {

@@ -36,6 +36,16 @@ pub enum BottleneckClass {
 }
 
 impl BottleneckClass {
+    /// Every class, in the deterministic vote order.
+    pub const ALL: [BottleneckClass; 6] = [
+        BottleneckClass::Synchronization,
+        BottleneckClass::Imbalance,
+        BottleneckClass::Pipeline,
+        BottleneckClass::Io,
+        BottleneckClass::Messaging,
+        BottleneckClass::Compute,
+    ];
+
     pub fn label(self) -> &'static str {
         match self {
             BottleneckClass::Synchronization => "synchronization (futex)",
@@ -45,6 +55,13 @@ impl BottleneckClass {
             BottleneckClass::Messaging => "message passing",
             BottleneckClass::Compute => "compute / busy-wait",
         }
+    }
+
+    /// Inverse of [`label`](Self::label) — how the JSON sink's
+    /// deserializer recovers the class from a serialized report.
+    /// Labels are part of schema v1: renaming one is a breaking change.
+    pub fn from_label(label: &str) -> Option<BottleneckClass> {
+        BottleneckClass::ALL.into_iter().find(|c| c.label() == label)
     }
 }
 
@@ -136,5 +153,18 @@ mod tests {
     fn labels_are_informative() {
         assert!(BottleneckClass::Io.label().contains("I/O"));
         assert!(BottleneckClass::Synchronization.label().contains("futex"));
+    }
+
+    #[test]
+    fn labels_round_trip_and_are_distinct() {
+        for c in BottleneckClass::ALL {
+            assert_eq!(BottleneckClass::from_label(c.label()), Some(c));
+        }
+        let mut labels: Vec<&str> =
+            BottleneckClass::ALL.iter().map(|c| c.label()).collect();
+        labels.sort_unstable();
+        labels.dedup();
+        assert_eq!(labels.len(), BottleneckClass::ALL.len());
+        assert_eq!(BottleneckClass::from_label("nope"), None);
     }
 }

@@ -2,6 +2,41 @@
 
 use crate::simkernel::Time;
 
+/// Report output format (`--format`): which [`crate::gapp::sink`]
+/// backend the CLI drives the session through.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ReportFormat {
+    /// Human-readable text — byte-identical to the pre-sink CLI.
+    #[default]
+    Text,
+    /// One versioned JSON document per session (`schema: 1`).
+    Json,
+    /// One JSON object per event line (streaming transport shape).
+    Jsonl,
+}
+
+impl ReportFormat {
+    /// Accepted `--format` values, in display order.
+    pub const NAMES: [&'static str; 3] = ["text", "json", "jsonl"];
+
+    pub fn from_name(name: &str) -> Option<ReportFormat> {
+        match name {
+            "text" => Some(ReportFormat::Text),
+            "json" => Some(ReportFormat::Json),
+            "jsonl" => Some(ReportFormat::Jsonl),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ReportFormat::Text => "text",
+            ReportFormat::Json => "json",
+            ReportFormat::Jsonl => "jsonl",
+        }
+    }
+}
+
 /// Profiler configuration (§5.1 defaults).
 #[derive(Clone, Debug)]
 pub struct GappConfig {
@@ -37,6 +72,11 @@ pub struct GappConfig {
     /// least this many records (the paper's concurrent user probe; the
     /// watermark is per shard, like a real per-CPU buffer's wakeup).
     pub drain_threshold: usize,
+    /// Report output format (CLI `--format text|json|jsonl`). Only the
+    /// CLI consults this — library callers attach sinks directly.
+    pub format: ReportFormat,
+    /// Report destination path (CLI `--output FILE`); `None` = stdout.
+    pub output: Option<String>,
 }
 
 impl Default for GappConfig {
@@ -51,6 +91,8 @@ impl Default for GappConfig {
             stack_map_entries: 1 << 14,
             stack_lru: false,
             drain_threshold: 1 << 14,
+            format: ReportFormat::Text,
+            output: None,
         }
     }
 }
@@ -77,6 +119,14 @@ impl GappConfig {
             "stack_map_entries must be >= 1"
         );
         anyhow::ensure!(self.dt >= 1, "dt (sampling period) must be positive");
+        if let Some(n) = self.nmin {
+            // NaN/±inf parse fine as f64 ("--nmin nan") but poison the
+            // criticality comparison and cannot serialize to JSON.
+            anyhow::ensure!(
+                n.is_finite() && n >= 0.0,
+                "nmin must be a finite, non-negative thread count"
+            );
+        }
         anyhow::ensure!(
             self.drain_threshold >= 1,
             "drain_threshold must be >= 1 (use usize::MAX to disable mid-epoch drains)"
@@ -98,7 +148,19 @@ mod tests {
         assert_eq!(c.dt, 3_000_000);
         assert!(c.nmin.is_none());
         assert!(c.shards.is_none()); // per-CPU perf buffers by default
+        assert_eq!(c.format, ReportFormat::Text);
+        assert!(c.output.is_none());
         assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn report_format_names_round_trip() {
+        for name in ReportFormat::NAMES {
+            let f = ReportFormat::from_name(name).unwrap();
+            assert_eq!(f.name(), name);
+        }
+        assert!(ReportFormat::from_name("xml").is_none());
+        assert_eq!(ReportFormat::default(), ReportFormat::Text);
     }
 
     #[test]
@@ -158,5 +220,22 @@ mod tests {
             let err = cfg.validate().unwrap_err().to_string();
             assert!(err.contains(what), "error {err:?} should name {what}");
         }
+    }
+
+    #[test]
+    fn non_finite_nmin_is_rejected() {
+        for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY, -1.0] {
+            let cfg = GappConfig {
+                nmin: Some(bad),
+                ..Default::default()
+            };
+            let err = cfg.validate().unwrap_err().to_string();
+            assert!(err.contains("nmin"), "{err}");
+        }
+        let cfg = GappConfig {
+            nmin: Some(8.0),
+            ..Default::default()
+        };
+        assert!(cfg.validate().is_ok());
     }
 }

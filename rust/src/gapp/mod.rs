@@ -12,6 +12,13 @@
 //! applications system-wide at once. The batch path here is its
 //! one-window special case (proven equivalent by the streaming golden
 //! tests).
+//!
+//! [`session`] is the library-first entry point: a builder-style
+//! [`Session`] drives batch, live and system-wide runs through one
+//! event-emitting loop, and [`sink`] turns the typed event stream into
+//! output — human text (byte-identical to the pre-sink CLI), JSON,
+//! JSONL, or any future transport. [`profile`] and
+//! [`stream::run_live`] survive as thin deprecated wrappers.
 
 pub mod config;
 pub mod records;
@@ -21,6 +28,8 @@ pub mod symbolize;
 pub mod report;
 pub mod classify;
 pub mod stream;
+pub mod sink;
+pub mod session;
 
 use std::cell::RefCell;
 use std::rc::Rc;
@@ -35,8 +44,9 @@ use crate::workload::{App, SymbolTable};
 
 use userspace::MergedPath;
 
-pub use config::GappConfig;
+pub use config::{GappConfig, ReportFormat};
 pub use report::{Bottleneck, Report, SampleLine, ThreadCm};
+pub use session::{Session, SessionOutput};
 
 /// Kernel-side + user-side state behind one shared handle.
 pub struct GappCore {
@@ -265,23 +275,30 @@ pub(crate) fn build_report(
         memory_bytes: core.kernel.memory_bytes() + core.user.memory_bytes(),
         ppt_seconds: ppt_start.elapsed().as_secs_f64(),
         probe_cost_ns: kernel.stats.probe_ns,
+        // Lazy query index; built on first samples_of/top_functions.
+        ..Default::default()
     }
 }
 
 /// Run `app` under GAPP and return the report plus the kernel.
+///
+/// Thin wrapper over the [`Session`] builder, kept so pre-sink callers
+/// (examples, experiment harness, figures) compile unchanged. New code
+/// should build a [`Session`] — it exposes the same run plus event
+/// sinks, windowing and system-wide mode.
+#[deprecated(note = "use gapp::Session::builder(engine).app(app).run()")]
 pub fn profile(
     app: &App,
     kcfg: KernelConfig,
     gcfg: GappConfig,
     engine: AnalysisEngine,
 ) -> Result<(Report, Kernel)> {
-    let session = GappSession::new(gcfg, kcfg.cpus, engine)?;
-    let mut kernel = Kernel::new(kcfg);
-    kernel.attach_probe(session.probe());
-    app.spawn_into(&mut kernel);
-    let end = kernel.run()?;
-    let report = session.finish(app, &kernel, end);
-    Ok((report, kernel))
+    let out = Session::builder(engine)
+        .kernel(kcfg)
+        .config(gcfg)
+        .app(app)
+        .run()?;
+    Ok((out.report, out.kernel))
 }
 
 /// Run `app` without any profiler (baseline for overhead measurement).
@@ -293,6 +310,9 @@ pub fn run_unprofiled(app: &App, kcfg: KernelConfig) -> Result<(u64, Kernel)> {
 }
 
 #[cfg(test)]
+// The deprecated `profile` wrapper is itself under test here (it must
+// stay byte-equivalent to the Session it delegates to).
+#[allow(deprecated)]
 mod tests {
     use super::*;
     use crate::workload::apps;

@@ -1,10 +1,11 @@
 //! The final profile: a frequency table of functions and source lines
 //! per critical call path, plus the run statistics behind Table 2.
 
-use std::collections::HashMap;
 use std::fmt;
+use std::sync::OnceLock;
 
 use crate::simkernel::Pid;
+use crate::util::FxHashMap;
 
 use super::classify::BottleneckClass;
 
@@ -89,10 +90,22 @@ pub struct Report {
     pub ppt_seconds: f64,
     /// Total probe cost charged to the app's CPUs (ns).
     pub probe_cost_ns: u64,
+    /// Lazily-built function-name → total-samples index behind
+    /// [`Report::samples_of`] / [`Report::top_functions`] (those used
+    /// to rescan every bottleneck's sample table per query). Built on
+    /// first query; a `Report` is immutable once assembled, so the
+    /// cache never invalidates — mutating `bottlenecks` *after* the
+    /// first query is outside the contract and will not be reflected
+    /// (see `fn_index_is_built_once` in the tests). `OnceLock`, not
+    /// `OnceCell`, so the cache does not cost `Report` its `Sync`.
+    pub(crate) fn_index: OnceLock<FxHashMap<String, u64>>,
 }
 
 impl Report {
-    /// Critical ratio CR (critical / total timeslices).
+    /// Critical ratio CR (critical / total timeslices). An empty run
+    /// (zero total slices) is 0.0, never NaN — `0/0` would otherwise
+    /// propagate into every rendered and serialized output
+    /// (regression-tested, and JSON cannot even represent NaN).
     pub fn critical_ratio(&self) -> f64 {
         if self.total_slices == 0 {
             0.0
@@ -101,33 +114,48 @@ impl Report {
         }
     }
 
+    /// The function-frequency index, built on first use (one pass over
+    /// every bottleneck's sample table; queries after that are O(1)
+    /// lookups / O(F log F) sorts instead of per-query rescans).
+    fn fn_freq(&self) -> &FxHashMap<String, u64> {
+        self.fn_index.get_or_init(|| {
+            let mut freq: FxHashMap<String, u64> = FxHashMap::default();
+            for b in &self.bottlenecks {
+                for s in &b.samples {
+                    if let Some(f) = &s.function {
+                        *freq.entry(f.clone()).or_insert(0) += s.count;
+                    }
+                }
+            }
+            freq
+        })
+    }
+
     /// Top critical *functions* across all ranked paths — the headline
     /// the paper quotes per app in Table 2. Aggregates sample counts by
     /// function name over all bottleneck entries.
+    ///
+    /// Ordering contract (relied on by the experiment tables and the
+    /// figure goldens): descending by total sample count, ties broken
+    /// by ascending function name — fully deterministic regardless of
+    /// index iteration order.
     pub fn top_functions(&self, n: usize) -> Vec<(String, u64)> {
-        let mut freq: HashMap<&str, u64> = HashMap::new();
-        for b in &self.bottlenecks {
-            for s in &b.samples {
-                if let Some(f) = &s.function {
-                    *freq.entry(f.as_str()).or_insert(0) += s.count;
-                }
-            }
-        }
-        let mut v: Vec<(String, u64)> =
-            freq.into_iter().map(|(k, c)| (k.to_string(), c)).collect();
+        let mut v: Vec<(String, u64)> = self
+            .fn_freq()
+            .iter()
+            .map(|(k, c)| (k.clone(), *c))
+            .collect();
         v.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
         v.truncate(n);
         v
     }
 
-    /// Total sample count attributed to a given function name.
+    /// Total sample count attributed to a given function name. O(1)
+    /// after the first query (was an O(bottlenecks × samples) scan per
+    /// call — the experiment harness queries dozens of functions per
+    /// report).
     pub fn samples_of(&self, function: &str) -> u64 {
-        self.bottlenecks
-            .iter()
-            .flat_map(|b| b.samples.iter())
-            .filter(|s| s.function.as_deref() == Some(function))
-            .map(|s| s.count)
-            .sum()
+        self.fn_freq().get(function).copied().unwrap_or(0)
     }
 
     /// CMetric per thread as (comm, cm_ms), in pid order.
@@ -140,89 +168,13 @@ impl Report {
 }
 
 impl fmt::Display for Report {
+    /// Delegates to [`crate::gapp::sink::human::render_report`] — the
+    /// renderer moved out of the data struct and into the text sink
+    /// backend; this impl only keeps `println!("{report}")`-style
+    /// callers working (and is pinned byte-identical by the sink
+    /// golden tests).
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        writeln!(f, "== GAPP profile: {} (backend: {}) ==", self.app, self.backend)?;
-        writeln!(
-            f,
-            "runtime {:.1} ms | slices {} (critical {} = {:.2}%) | samples {} | stacks {}{} | mem {:.1} MB | ppt {:.2} s",
-            self.runtime_ns as f64 / 1e6,
-            self.total_slices,
-            self.critical_slices,
-            100.0 * self.critical_ratio(),
-            self.samples,
-            self.stack_ids,
-            if self.stack_drops > 0 {
-                format!(" (+{} dropped)", self.stack_drops)
-            } else {
-                String::new()
-            },
-            self.memory_bytes as f64 / (1024.0 * 1024.0),
-            self.ppt_seconds,
-        )?;
-        if !self.window_drops.is_empty() {
-            let total: u64 = self.window_drops.iter().sum();
-            let lossy = self.window_drops.iter().filter(|d| **d > 0).count();
-            writeln!(
-                f,
-                "windows {} | ring drops {} in {} window(s)",
-                self.window_drops.len(),
-                total,
-                lossy,
-            )?;
-        }
-        // Per-shard breakdown, only when records were actually lost on a
-        // multi-ring transport (lossless runs render identically across
-        // shard counts — the sharded-vs-single-ring golden relies on it).
-        if self.ring_dropped > 0 && self.ring_shards.len() > 1 {
-            let lossy: Vec<String> = self
-                .ring_shards
-                .iter()
-                .enumerate()
-                .filter(|(_, s)| s.dropped > 0)
-                .map(|(i, s)| format!("s{i} dropped {} (peak {})", s.dropped, s.peak))
-                .collect();
-            writeln!(f, "ring shards: {}", lossy.join(", "))?;
-        }
-        for b in &self.bottlenecks {
-            writeln!(
-                f,
-                "\n#{} [{}] CMetric {:.2} ms over {} slices{}",
-                b.rank,
-                b.class.label(),
-                b.total_cm_ms,
-                b.slices,
-                if b.stack_top_samples > 0 {
-                    format!(" ({} stack-top)", b.stack_top_samples)
-                } else {
-                    String::new()
-                }
-            )?;
-            writeln!(f, "  call path:")?;
-            for (i, frame) in b.call_path.iter().enumerate() {
-                writeln!(f, "    {:indent$}{}", "", frame, indent = i)?;
-            }
-            if !b.apps.is_empty() {
-                let ap: Vec<String> = b
-                    .apps
-                    .iter()
-                    .map(|(a, n)| format!("{a} x{n}"))
-                    .collect();
-                writeln!(f, "  apps: {}", ap.join(", "))?;
-            }
-            if !b.top_wakers.is_empty() {
-                let wk: Vec<String> = b
-                    .top_wakers
-                    .iter()
-                    .map(|(c, n)| format!("{c} x{n}"))
-                    .collect();
-                writeln!(f, "  woken by: {}", wk.join(", "))?;
-            }
-            writeln!(f, "  samples:")?;
-            for s in b.samples.iter().take(6) {
-                writeln!(f, "    {:>6}  {}", s.count, s.rendered)?;
-            }
-        }
-        Ok(())
+        f.write_str(&crate::gapp::sink::human::render_report(self))
     }
 }
 
@@ -286,6 +238,74 @@ mod tests {
         assert_eq!(top[0], ("emd".to_string(), 9));
         assert_eq!(top[1], ("dist".to_string(), 3));
         assert_eq!(r.samples_of("emd"), 9);
+        assert_eq!(r.samples_of("not_present"), 0);
+    }
+
+    #[test]
+    fn critical_ratio_of_empty_run_is_zero_not_nan() {
+        // Regression: an empty run (canceled app, zero-length window
+        // session) has 0 total slices; 0/0 must not leak NaN into the
+        // ratio, the rendered header, or the JSON output.
+        let r = Report::default();
+        assert_eq!(r.critical_ratio(), 0.0);
+        assert!(r.critical_ratio().is_finite());
+        let s = r.to_string();
+        assert!(s.contains("critical 0 = 0.00%"), "{s}");
+        assert!(!s.contains("NaN"), "{s}");
+    }
+
+    #[test]
+    fn top_functions_ordering_contract_is_count_desc_then_name_asc() {
+        // samples_of/top_functions are index-backed now; the ordering
+        // contract (count desc, name asc on ties) must hold no matter
+        // how the index iterates.
+        let mut r = report();
+        // Give "aaa" and "zzz" the same count as "dist".
+        r.bottlenecks[1].samples = vec![
+            SampleLine {
+                rendered: "zzz (z.c:1)".into(),
+                function: Some("zzz".into()),
+                count: 3,
+            },
+            SampleLine {
+                rendered: "aaa (a.c:1)".into(),
+                function: Some("aaa".into()),
+                count: 3,
+            },
+        ];
+        let top = r.top_functions(10);
+        assert_eq!(
+            top,
+            vec![
+                ("emd".to_string(), 7),
+                ("aaa".to_string(), 3),
+                ("dist".to_string(), 3),
+                ("zzz".to_string(), 3),
+            ]
+        );
+        // Truncation keeps the prefix of that same order.
+        assert_eq!(r.top_functions(2), top[..2].to_vec());
+    }
+
+    #[test]
+    fn report_stays_send_and_sync() {
+        // The lazy index must not cost Report its auto traits — library
+        // users hand finished reports to other threads.
+        fn assert_traits<T: Send + Sync>() {}
+        assert_traits::<Report>();
+    }
+
+    #[test]
+    fn fn_index_is_built_once() {
+        // The documented contract: the index freezes the sample tables
+        // at first query; the two queries must agree with each other
+        // (and a clone carries the cache along consistently).
+        let r = report();
+        let before = r.top_functions(10);
+        assert_eq!(r.samples_of("emd"), 9);
+        let clone = r.clone();
+        assert_eq!(clone.top_functions(10), before);
+        assert_eq!(clone.samples_of("dist"), 3);
     }
 
     #[test]

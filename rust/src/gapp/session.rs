@@ -1,0 +1,540 @@
+//! Library-first profiling sessions.
+//!
+//! [`Session`] is the single entry point behind every mode the CLI
+//! exposes: batch (`gapp profile`), epoch-windowed live (`gapp live`),
+//! and system-wide multi-app. One builder configures the run; one
+//! driver executes it and *emits typed events* ([`ReportEvent`])
+//! through any number of [`ReportSink`]s — the driver never formats a
+//! string, so text, JSON, JSONL and future transports are all equal
+//! consumers of the same stream:
+//!
+//! ```no_run
+//! use gapp::gapp::{Session, sink::HumanSink};
+//! use gapp::runtime::AnalysisEngine;
+//! use gapp::workload::apps;
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let app = apps::canneal(8, 5);
+//! let out = Session::builder(AnalysisEngine::native())
+//!     .app(&app)
+//!     .window_us(5_000)
+//!     .shards(4)
+//!     .sink(HumanSink::new(std::io::stdout()))
+//!     .run()?;
+//! println!("critical ratio {:.3}", out.report.critical_ratio());
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! The deprecated free functions `gapp::profile` and
+//! `gapp::stream::run_live` are thin wrappers over this type.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::ebpf::StackMap;
+use crate::runtime::AnalysisEngine;
+use crate::simkernel::{Kernel, KernelConfig, RunOutcome};
+use crate::workload::App;
+
+use super::sink::{FinalEvent, ReportEvent, ReportSink, SessionInfo, SessionMode};
+use super::stream::live::live_lines;
+use super::stream::{
+    AppRegistry, LiveConfig, RegistryProbe, ShardedConsumer, SpaceSaving,
+    WindowAccumulator, WindowReport, WindowSummary,
+};
+use super::symbolize::Symbolizer;
+use super::userspace::{PathAccumulator, SliceEntry};
+use super::{build_report, GappConfig, GappSession, Report, ReportCtx};
+
+/// Everything a finished session hands back to library callers —
+/// sinks receive the same data as events while the run progresses.
+pub struct SessionOutput {
+    pub report: Report,
+    /// The simulated kernel, for post-run queries (task tables, stats).
+    pub kernel: Kernel,
+    /// Simulated end time of the run (ns).
+    pub runtime_ns: u64,
+    /// One summary per closed epoch window (empty for batch runs).
+    pub windows: Vec<WindowSummary>,
+    /// Cumulative space-saving top-K
+    /// `(stack_id, cm_fs_upper_bound, max_overestimate_fs)`.
+    pub sketch_top: Vec<(u32, u64, u64)>,
+    /// `sketch_top` rendered for display.
+    pub sketch_lines: Vec<String>,
+}
+
+/// A configured profiling session (see the module docs). Construct
+/// with [`Session::builder`], chain the setters, then [`Session::run`].
+pub struct Session<'a> {
+    engine: AnalysisEngine,
+    kcfg: KernelConfig,
+    gcfg: GappConfig,
+    lcfg: LiveConfig,
+    windowed: bool,
+    apps: Vec<&'a App>,
+    sinks: Vec<Box<dyn ReportSink + 'a>>,
+}
+
+impl<'a> Session<'a> {
+    /// Start configuring a session around an analysis engine.
+    pub fn builder(engine: AnalysisEngine) -> Session<'a> {
+        Session {
+            engine,
+            kcfg: KernelConfig::default(),
+            gcfg: GappConfig::default(),
+            lcfg: LiveConfig::default(),
+            windowed: false,
+            apps: Vec::new(),
+            sinks: Vec::new(),
+        }
+    }
+
+    /// Add an application. Repeat for system-wide profiling (which is
+    /// windowed: also set [`Session::window_us`]).
+    pub fn app(mut self, app: &'a App) -> Self {
+        self.apps.push(app);
+        self
+    }
+
+    pub fn kernel(mut self, kcfg: KernelConfig) -> Self {
+        self.kcfg = kcfg;
+        self
+    }
+
+    pub fn config(mut self, gcfg: GappConfig) -> Self {
+        self.gcfg = gcfg;
+        self
+    }
+
+    /// Switch to the epoch-windowed (live) driver with this window
+    /// length, in simulated microseconds.
+    pub fn window_us(mut self, us: u64) -> Self {
+        self.lcfg.window_ns = us * 1000;
+        self.windowed = true;
+        self
+    }
+
+    /// Full live configuration (window length, per-window top-K,
+    /// sketch capacity); switches to the windowed driver.
+    pub fn live(mut self, lcfg: LiveConfig) -> Self {
+        self.lcfg = lcfg;
+        self.windowed = true;
+        self
+    }
+
+    /// Ring-shard count override (`GappConfig::shards`).
+    pub fn shards(mut self, shards: usize) -> Self {
+        self.gcfg.shards = Some(shards);
+        self
+    }
+
+    /// Attach a sink. Repeatable — every sink sees every event (the
+    /// builder tees internally; [`super::sink::TeeSink`] exists for
+    /// composing sinks outside the builder).
+    pub fn sink(mut self, sink: impl ReportSink + 'a) -> Self {
+        self.sinks.push(Box::new(sink));
+        self
+    }
+
+    /// Run the session: validate, simulate, analyze, emit events.
+    pub fn run(self) -> Result<SessionOutput> {
+        let Session {
+            engine,
+            kcfg,
+            gcfg,
+            lcfg,
+            windowed,
+            apps,
+            mut sinks,
+        } = self;
+        let result = (|| {
+            anyhow::ensure!(!apps.is_empty(), "session needs at least one app");
+            if windowed {
+                anyhow::ensure!(
+                    lcfg.window_ns > 0,
+                    "window length must be positive (--window-us 0 would never close a window)"
+                );
+                anyhow::ensure!(
+                    lcfg.top_k >= 1,
+                    "top_k must be >= 1 (--top 0 would report nothing)"
+                );
+                anyhow::ensure!(
+                    lcfg.sketch_entries >= 1,
+                    "sketch_entries must be >= 1 (--sketch 0 cannot track anything)"
+                );
+                run_windowed(engine, kcfg, gcfg, lcfg, &apps, &mut sinks)
+            } else {
+                anyhow::ensure!(
+                    apps.len() == 1,
+                    "system-wide (multi-app) profiling is windowed — set window_us(..)"
+                );
+                run_batch(engine, kcfg, gcfg, apps[0], &mut sinks)
+            }
+        })();
+        // Flush every sink exactly once, success or not: the sink
+        // contract says buffered backends flush in finish() because
+        // SessionEnd may never arrive (driver error, a tee'd peer's
+        // on_event failing). The driver's error still wins; the first
+        // finish() error is reported when the run itself succeeded.
+        let mut finish_err: Option<anyhow::Error> = None;
+        for s in sinks.iter_mut() {
+            if let Err(e) = s.finish() {
+                finish_err.get_or_insert(e);
+            }
+        }
+        let out = result?;
+        match finish_err {
+            Some(e) => Err(e),
+            None => Ok(out),
+        }
+    }
+}
+
+fn emit(sinks: &mut [Box<dyn ReportSink + '_>], ev: &ReportEvent<'_>) -> Result<()> {
+    for s in sinks.iter_mut() {
+        s.on_event(ev)?;
+    }
+    Ok(())
+}
+
+/// The batch driver: one kernel run, one merge, one report — exactly
+/// the pre-Session `gapp::profile` pipeline, with events around it.
+fn run_batch(
+    engine: AnalysisEngine,
+    kcfg: KernelConfig,
+    gcfg: GappConfig,
+    app: &App,
+    sinks: &mut [Box<dyn ReportSink + '_>],
+) -> Result<SessionOutput> {
+    // Construct (and thereby validate) before announcing the session.
+    let session = GappSession::new(gcfg.clone(), kcfg.cpus, engine)?;
+    let info = SessionInfo {
+        mode: SessionMode::Batch,
+        apps: vec![app.name.clone()],
+        shards: gcfg.shards.unwrap_or(kcfg.cpus),
+        window_ns: None,
+        config: gcfg,
+    };
+    emit(sinks, &ReportEvent::SessionStart(&info))?;
+    let mut kernel = Kernel::new(kcfg);
+    kernel.attach_probe(session.probe());
+    app.spawn_into(&mut kernel);
+    let end = kernel.run()?;
+    let report = session.finish(app, &kernel, end);
+    emit(
+        sinks,
+        &ReportEvent::Final(FinalEvent {
+            report: &report,
+            windows: &[],
+            sketch_top: &[],
+            sketch_lines: &[],
+        }),
+    )?;
+    emit(sinks, &ReportEvent::SessionEnd { runtime_ns: end })?;
+    Ok(SessionOutput {
+        report,
+        kernel,
+        runtime_ns: end,
+        windows: Vec::new(),
+        sketch_top: Vec::new(),
+        sketch_lines: Vec::new(),
+    })
+}
+
+/// The epoch-windowed driver (live + system-wide): simulate one window,
+/// drain the ring shards, aggregate, emit `WindowClosed`, repeat; then
+/// merge the window snapshots into the final report. This is the former
+/// `stream::run_live` body, emitting events instead of invoking a
+/// callback.
+fn run_windowed(
+    engine: AnalysisEngine,
+    kcfg: KernelConfig,
+    gcfg: GappConfig,
+    lcfg: LiveConfig,
+    apps: &[&App],
+    sinks: &mut [Box<dyn ReportSink + '_>],
+) -> Result<SessionOutput> {
+    let top_n = gcfg.top_n;
+    let stack_lru = gcfg.stack_lru;
+    let shards = gcfg.shards.unwrap_or(kcfg.cpus);
+    let session = GappSession::new(gcfg.clone(), kcfg.cpus, engine)?;
+    let mut kernel = Kernel::new(kcfg);
+    kernel.attach_probe(session.probe());
+    // System-wide attribution: a zero-cost probe tags every task with
+    // its application (children inherit), so attaching it cannot
+    // perturb the simulated timeline relative to a batch run.
+    let registry = Rc::new(RefCell::new(AppRegistry::new()));
+    kernel.attach_probe(Box::new(RegistryProbe::new(registry.clone())));
+    for app in apps {
+        registry.borrow_mut().begin_app(&app.name);
+        app.spawn_into(&mut kernel);
+        registry.borrow_mut().end_spawn();
+    }
+    let names: Vec<String> = registry.borrow().names().to_vec();
+    let info = SessionInfo {
+        mode: SessionMode::Live,
+        apps: names.clone(),
+        shards,
+        window_ns: Some(lcfg.window_ns),
+        config: gcfg,
+    };
+    emit(sinks, &ReportEvent::SessionStart(&info))?;
+    let multi_app = apps.len() > 1;
+    let mut syms: Vec<Symbolizer<'_>> = apps
+        .iter()
+        .map(|a| Symbolizer::new(a.symtab.as_ref()))
+        .collect();
+
+    // One cursor per ring shard: the transport is per-CPU perf buffers,
+    // drained together at each epoch boundary.
+    let mut consumer =
+        ShardedConsumer::new(session.core.borrow().kernel.rings.num_shards());
+    let mut wacc = WindowAccumulator::new();
+    let mut cumulative = PathAccumulator::new();
+    let mut sketch: SpaceSaving<u32> = SpaceSaving::new(lcfg.sketch_entries);
+    let mut scratch: Vec<SliceEntry> = Vec::new();
+    let mut summaries: Vec<WindowSummary> = Vec::new();
+    let mut window_drops: Vec<u64> = Vec::new();
+    // Kernel-side LRU recycles stack ids mid-run, so everything that
+    // outlives a window (cumulative merge, sketch, final report) must
+    // not key on raw kernel ids. Snapshots are re-interned here — at
+    // window close, while id → frames is still fresh — into a stable
+    // userspace map. Without LRU, kernel ids are already stable and
+    // this stays `None`.
+    let mut user_stacks: Option<StackMap> = if stack_lru {
+        Some(StackMap::new("live_user_stacks", 1 << 20))
+    } else {
+        None
+    };
+
+    let mut epoch: u64 = 0;
+    let runtime_ns = loop {
+        epoch += 1;
+        let limit = lcfg.window_ns.saturating_mul(epoch);
+        let outcome = kernel.run_until(limit)?;
+        let (end_ns, done) = match outcome {
+            RunOutcome::Done(t) => (t, true),
+            RunOutcome::Paused(t) => (t, false),
+        };
+        let start_ns = lcfg.window_ns.saturating_mul(epoch - 1).min(end_ns);
+        let wr = {
+            let mut core = session.core.borrow_mut();
+            let estats = consumer.drain_epoch(&mut core);
+            scratch.clear();
+            core.user.drain_slices_into(&mut scratch);
+            {
+                let reg = registry.borrow();
+                for s in &scratch {
+                    wacc.add_slice(s, reg.app_of(s.pid));
+                }
+            }
+            let slices_in = wacc.slices_in;
+            let mut snapshot = wacc.snapshot();
+            if let Some(us) = user_stacks.as_mut() {
+                for p in &mut snapshot {
+                    let frames = core.kernel.stacks.resolve(p.stack_id);
+                    p.stack_id = us.intern(frames);
+                }
+            }
+            let ranked = core.user.rank_merged(&snapshot, lcfg.top_k);
+            let stacks = user_stacks.as_ref().unwrap_or(&core.kernel.stacks);
+            let top = live_lines(&ranked, stacks, &names, &mut syms, multi_app);
+            WindowReport {
+                index: epoch,
+                start_ns,
+                end_ns,
+                slices: slices_in,
+                drained: estats.delta.drained,
+                drops: estats.delta.dropped,
+                shard_drops: estats.per_shard.iter().map(|d| d.dropped).collect(),
+                top,
+                snapshot,
+            }
+        };
+        emit(sinks, &ReportEvent::WindowClosed(&wr))?;
+        // Fold the window into the cumulative state; the snapshot dies
+        // here, keeping resident memory O(top-K + live stack ids).
+        for p in &wr.snapshot {
+            cumulative.merge_path(p);
+            sketch.add(p.stack_id, p.cm_fs);
+        }
+        window_drops.push(wr.drops);
+        summaries.push(WindowSummary {
+            index: wr.index,
+            slices: wr.slices,
+            drained: wr.drained,
+            drops: wr.drops,
+        });
+        if done {
+            break end_ns;
+        }
+    };
+
+    // Final report from the merged window snapshots (post-processing
+    // proper starts here, mirroring the batch `finish`).
+    let ppt_start = Instant::now();
+    let mut core = session.core.borrow_mut();
+    core.user.flush_batch();
+    let merged = cumulative.take_paths();
+    let ranked = core.user.rank_merged(&merged, top_n);
+    // Cumulative sketch tail: the sketch tracks raw stack ids; app
+    // ownership comes from the cumulative merge (address spaces may
+    // overlap between apps in system-wide mode, so each site must be
+    // symbolized through the app that owns the path).
+    let sketch_top = sketch.top(lcfg.top_k);
+    let sketch_lines: Vec<String> = {
+        let stacks = user_stacks.as_ref().unwrap_or(&core.kernel.stacks);
+        let owner_of: crate::util::FxHashMap<u32, usize> = merged
+            .iter()
+            .map(|p| (p.stack_id, p.owner_app(multi_app, syms.len())))
+            .collect();
+        sketch_top
+            .iter()
+            .map(|(id, cm_fs, err_fs)| {
+                let owner = owner_of.get(id).copied().unwrap_or(0);
+                let site = match stacks.resolve(*id).last() {
+                    Some(a) => syms[owner].render(*a),
+                    None => "<no frames>".to_string(),
+                };
+                let app_name = names
+                    .get(owner)
+                    .cloned()
+                    .unwrap_or_else(|| format!("app{owner}"));
+                format!(
+                    "{:<14} {:>9.3} ms (+{:.3} max over)  {}",
+                    app_name,
+                    *cm_fs as f64 / 1e12,
+                    *err_fs as f64 / 1e12,
+                    site,
+                )
+            })
+            .collect()
+    };
+    let ctx = ReportCtx {
+        label: names.join("+"),
+        syms: apps
+            .iter()
+            .map(|a| (a.name.as_str(), a.symtab.as_ref()))
+            .collect(),
+        multi_app,
+        window_drops,
+        stacks: user_stacks.as_ref(),
+    };
+    let mut report = build_report(&core, &kernel, runtime_ns, &ranked, ctx, ppt_start);
+    if let Some(us) = user_stacks.as_ref() {
+        // The stable userspace re-intern map is part of the analyzer:
+        // if it saturates on a long run, the loss must be as visible as
+        // the kernel map's own drop counter.
+        report.stack_drops += us.stats.drops;
+    }
+    drop(core);
+    emit(
+        sinks,
+        &ReportEvent::Final(FinalEvent {
+            report: &report,
+            windows: &summaries,
+            sketch_top: &sketch_top,
+            sketch_lines: &sketch_lines,
+        }),
+    )?;
+    emit(sinks, &ReportEvent::SessionEnd { runtime_ns })?;
+    Ok(SessionOutput {
+        report,
+        kernel,
+        runtime_ns,
+        windows: summaries,
+        sketch_top,
+        sketch_lines,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gapp::sink::FnSink;
+    use crate::workload::apps;
+
+    #[test]
+    fn batch_session_emits_start_final_end_in_order() {
+        let app = apps::blackscholes(8, 3);
+        let events = Rc::new(RefCell::new(Vec::<String>::new()));
+        let ev2 = events.clone();
+        let out = Session::builder(AnalysisEngine::native())
+            .app(&app)
+            .sink(FnSink(move |ev: &ReportEvent<'_>| {
+                ev2.borrow_mut().push(
+                    match ev {
+                        ReportEvent::SessionStart(i) => {
+                            assert_eq!(i.mode, SessionMode::Batch);
+                            assert_eq!(i.apps, vec!["blackscholes".to_string()]);
+                            assert!(i.window_ns.is_none());
+                            "start"
+                        }
+                        ReportEvent::WindowClosed(_) => "window",
+                        ReportEvent::Final(fe) => {
+                            assert!(fe.windows.is_empty());
+                            assert!(!fe.report.bottlenecks.is_empty());
+                            "final"
+                        }
+                        ReportEvent::SessionEnd { runtime_ns } => {
+                            assert!(*runtime_ns > 0);
+                            "end"
+                        }
+                    }
+                    .to_string(),
+                );
+            }))
+            .run()
+            .unwrap();
+        assert_eq!(
+            *events.borrow(),
+            vec!["start".to_string(), "final".to_string(), "end".to_string()]
+        );
+        assert!(out.report.total_slices > 0);
+        assert!(out.windows.is_empty());
+        assert_eq!(out.runtime_ns, out.report.runtime_ns);
+        // Kernel comes back for post-run queries.
+        assert!(out.kernel.stats.switches > 0);
+    }
+
+    #[test]
+    fn windowed_session_emits_one_window_event_per_summary() {
+        let app = apps::canneal(8, 5);
+        let seen = Rc::new(RefCell::new(0u64));
+        let s2 = seen.clone();
+        let out = Session::builder(AnalysisEngine::native())
+            .app(&app)
+            .window_us(2_000)
+            .sink(FnSink(move |ev: &ReportEvent<'_>| {
+                if let ReportEvent::WindowClosed(w) = ev {
+                    *s2.borrow_mut() += 1;
+                    assert_eq!(w.index, *s2.borrow());
+                }
+            }))
+            .run()
+            .unwrap();
+        assert!(*seen.borrow() > 1, "expected multiple windows");
+        assert_eq!(out.windows.len() as u64, *seen.borrow());
+        assert_eq!(out.report.window_drops.len(), out.windows.len());
+        assert!(!out.sketch_lines.is_empty());
+    }
+
+    #[test]
+    fn sessions_reject_invalid_shapes() {
+        let err = Session::builder(AnalysisEngine::native()).run().unwrap_err();
+        assert!(err.to_string().contains("at least one app"));
+
+        let a = apps::by_name("mysql", 8, 7).unwrap();
+        let b = apps::by_name("dedup", 8, 7).unwrap();
+        let err = Session::builder(AnalysisEngine::native())
+            .app(&a)
+            .app(&b)
+            .run()
+            .unwrap_err();
+        assert!(err.to_string().contains("windowed"), "{err}");
+    }
+}

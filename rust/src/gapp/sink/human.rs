@@ -1,0 +1,332 @@
+//! The human-readable text backend — the renderer that used to live on
+//! `impl Display for Report` / `WindowReport`.
+//!
+//! Byte-compatibility is a hard contract here: [`render_report`] and
+//! [`render_window`] produce exactly the strings the pre-sink CLI
+//! printed (the `Display` impls now delegate to them, and the sink
+//! golden tests pin the framing), so `gapp profile` / `gapp live`
+//! output is unchanged by the sink redesign, shard count and mode
+//! notwithstanding.
+
+use std::fmt::Write as _;
+use std::io;
+
+use anyhow::Result;
+
+use crate::gapp::report::Report;
+use crate::gapp::stream::WindowReport;
+
+use super::{FinalEvent, ReportEvent, ReportSink, SessionMode};
+
+/// Render the final report exactly as `Display` always has.
+pub fn render_report(r: &Report) -> String {
+    let mut f = String::new();
+    // Writing to a String is infallible; unwrap keeps the body clean.
+    let w = &mut f;
+    writeln!(w, "== GAPP profile: {} (backend: {}) ==", r.app, r.backend).unwrap();
+    writeln!(
+        w,
+        "runtime {:.1} ms | slices {} (critical {} = {:.2}%) | samples {} | stacks {}{} | mem {:.1} MB | ppt {:.2} s",
+        r.runtime_ns as f64 / 1e6,
+        r.total_slices,
+        r.critical_slices,
+        100.0 * r.critical_ratio(),
+        r.samples,
+        r.stack_ids,
+        if r.stack_drops > 0 {
+            format!(" (+{} dropped)", r.stack_drops)
+        } else {
+            String::new()
+        },
+        r.memory_bytes as f64 / (1024.0 * 1024.0),
+        r.ppt_seconds,
+    )
+    .unwrap();
+    if !r.window_drops.is_empty() {
+        let total: u64 = r.window_drops.iter().sum();
+        let lossy = r.window_drops.iter().filter(|d| **d > 0).count();
+        writeln!(
+            w,
+            "windows {} | ring drops {} in {} window(s)",
+            r.window_drops.len(),
+            total,
+            lossy,
+        )
+        .unwrap();
+    }
+    // Per-shard breakdown, only when records were actually lost on a
+    // multi-ring transport (lossless runs render identically across
+    // shard counts — the sharded-vs-single-ring golden relies on it).
+    if r.ring_dropped > 0 && r.ring_shards.len() > 1 {
+        let lossy: Vec<String> = r
+            .ring_shards
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.dropped > 0)
+            .map(|(i, s)| format!("s{i} dropped {} (peak {})", s.dropped, s.peak))
+            .collect();
+        writeln!(w, "ring shards: {}", lossy.join(", ")).unwrap();
+    }
+    for b in &r.bottlenecks {
+        writeln!(
+            w,
+            "\n#{} [{}] CMetric {:.2} ms over {} slices{}",
+            b.rank,
+            b.class.label(),
+            b.total_cm_ms,
+            b.slices,
+            if b.stack_top_samples > 0 {
+                format!(" ({} stack-top)", b.stack_top_samples)
+            } else {
+                String::new()
+            }
+        )
+        .unwrap();
+        writeln!(w, "  call path:").unwrap();
+        for (i, frame) in b.call_path.iter().enumerate() {
+            writeln!(w, "    {:indent$}{}", "", frame, indent = i).unwrap();
+        }
+        if !b.apps.is_empty() {
+            let ap: Vec<String> = b
+                .apps
+                .iter()
+                .map(|(a, n)| format!("{a} x{n}"))
+                .collect();
+            writeln!(w, "  apps: {}", ap.join(", ")).unwrap();
+        }
+        if !b.top_wakers.is_empty() {
+            let wk: Vec<String> = b
+                .top_wakers
+                .iter()
+                .map(|(c, n)| format!("{c} x{n}"))
+                .collect();
+            writeln!(w, "  woken by: {}", wk.join(", ")).unwrap();
+        }
+        writeln!(w, "  samples:").unwrap();
+        for s in b.samples.iter().take(6) {
+            writeln!(w, "    {:>6}  {}", s.count, s.rendered).unwrap();
+        }
+    }
+    f
+}
+
+/// Render one live window exactly as `Display` always has.
+pub fn render_window(wr: &WindowReport) -> String {
+    let mut f = String::new();
+    let w = &mut f;
+    write!(
+        w,
+        "[w{:>4} {:>10.3}-{:>10.3} ms] slices {} | paths {} | drained {} | drops {}",
+        wr.index,
+        wr.start_ns as f64 / 1e6,
+        wr.end_ns as f64 / 1e6,
+        wr.slices,
+        wr.snapshot.len(),
+        wr.drained,
+        wr.drops,
+    )
+    .unwrap();
+    // Shard breakdown only when lossy AND actually sharded — a
+    // single-ring total has nothing to break down (mirrors the
+    // report's guard, and keeps `--shards 1` output unchanged).
+    if wr.drops > 0 && wr.shard_drops.len() > 1 {
+        let lossy: Vec<String> = wr
+            .shard_drops
+            .iter()
+            .enumerate()
+            .filter(|(_, d)| **d > 0)
+            .map(|(i, d)| format!("s{i}:{d}"))
+            .collect();
+        if !lossy.is_empty() {
+            write!(w, " [{}]", lossy.join(" ")).unwrap();
+        }
+    }
+    writeln!(w).unwrap();
+    if wr.top.is_empty() {
+        writeln!(w, "  (no critical slices this window)").unwrap();
+    }
+    for l in &wr.top {
+        writeln!(
+            w,
+            "  #{:<2} {:<14} {:>9.3} ms x{:<5} {:<24} {}",
+            l.rank, l.app, l.cm_ms, l.slices, l.class, l.site,
+        )
+        .unwrap();
+    }
+    f
+}
+
+/// Render the live-mode session tail (the lines `gapp live` prints
+/// after the last window) — shared by [`HumanSink`] and the golden
+/// test that pins it against the pre-sink CLI assembly.
+pub fn render_live_tail(fe: &FinalEvent<'_>) -> String {
+    let mut s = String::new();
+    s.push('\n');
+    let _ = writeln!(
+        s,
+        "== final (merged from {} windows) ==",
+        fe.windows.len()
+    );
+    s.push_str(&render_report(fe.report));
+    if !fe.sketch_lines.is_empty() {
+        s.push('\n');
+        let _ = writeln!(
+            s,
+            "cumulative top-{} (space-saving sketch; counts are upper bounds):",
+            fe.sketch_lines.len()
+        );
+        for l in fe.sketch_lines {
+            let _ = writeln!(s, "  {l}");
+        }
+    }
+    let lossy: u64 = fe.windows.iter().map(|w| w.drops).sum();
+    if lossy > 0 {
+        let _ = writeln!(
+            s,
+            "note: {lossy} ring drops occurred; see per-window attribution above"
+        );
+    }
+    s
+}
+
+/// Text backend: what the CLI printed before sinks existed, byte for
+/// byte. Batch sessions print the report (plus the trailing newline
+/// `println!` used to add); live sessions print each window as it
+/// closes, then the final header, report, cumulative sketch and the
+/// lossy-run note.
+pub struct HumanSink<W: io::Write> {
+    w: W,
+    mode: SessionMode,
+}
+
+impl<W: io::Write> HumanSink<W> {
+    pub fn new(w: W) -> HumanSink<W> {
+        HumanSink {
+            w,
+            // Overwritten by SessionStart; batch is the conservative
+            // default (prints nothing until Final).
+            mode: SessionMode::Batch,
+        }
+    }
+
+    /// The wrapped writer (tests read the buffer back).
+    pub fn into_inner(self) -> W {
+        self.w
+    }
+}
+
+impl<W: io::Write> ReportSink for HumanSink<W> {
+    fn on_event(&mut self, ev: &ReportEvent<'_>) -> Result<()> {
+        match ev {
+            ReportEvent::SessionStart(info) => {
+                self.mode = info.mode;
+            }
+            ReportEvent::WindowClosed(wr) => {
+                self.w.write_all(render_window(wr).as_bytes())?;
+            }
+            ReportEvent::Final(fe) => match self.mode {
+                SessionMode::Batch => {
+                    self.w.write_all(render_report(fe.report).as_bytes())?;
+                    self.w.write_all(b"\n")?;
+                }
+                SessionMode::Live => {
+                    self.w.write_all(render_live_tail(fe).as_bytes())?;
+                }
+            },
+            ReportEvent::SessionEnd { .. } => {}
+        }
+        Ok(())
+    }
+
+    fn finish(&mut self) -> Result<()> {
+        self.w.flush()?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gapp::config::GappConfig;
+    use crate::gapp::sink::SessionInfo;
+
+    fn start(mode: SessionMode) -> SessionInfo {
+        SessionInfo {
+            mode,
+            apps: vec!["test".to_string()],
+            shards: 1,
+            window_ns: None,
+            config: GappConfig::default(),
+        }
+    }
+
+    #[test]
+    fn batch_final_matches_println_of_display() {
+        let report = Report {
+            app: "test".into(),
+            total_slices: 10,
+            critical_slices: 2,
+            ..Default::default()
+        };
+        let mut sink = HumanSink::new(Vec::new());
+        sink.on_event(&ReportEvent::SessionStart(&start(SessionMode::Batch)))
+            .unwrap();
+        sink.on_event(&ReportEvent::Final(FinalEvent {
+            report: &report,
+            windows: &[],
+            sketch_top: &[],
+            sketch_lines: &[],
+        }))
+        .unwrap();
+        sink.on_event(&ReportEvent::SessionEnd { runtime_ns: 0 })
+            .unwrap();
+        sink.finish().unwrap();
+        let out = String::from_utf8(sink.into_inner()).unwrap();
+        // Exactly what `println!("{report}")` produced.
+        assert_eq!(out, format!("{report}\n"));
+    }
+
+    #[test]
+    fn display_delegates_to_render_report() {
+        let report = Report {
+            app: "delegate".into(),
+            total_slices: 4,
+            critical_slices: 1,
+            ..Default::default()
+        };
+        assert_eq!(report.to_string(), render_report(&report));
+    }
+
+    #[test]
+    fn live_tail_renders_header_sketch_and_lossy_note() {
+        use crate::gapp::stream::WindowSummary;
+        let report = Report {
+            app: "live".into(),
+            ..Default::default()
+        };
+        let windows = vec![
+            WindowSummary {
+                index: 1,
+                slices: 3,
+                drained: 10,
+                drops: 0,
+            },
+            WindowSummary {
+                index: 2,
+                slices: 1,
+                drained: 4,
+                drops: 2,
+            },
+        ];
+        let lines = vec!["appA        1.000 ms  site".to_string()];
+        let tail = render_live_tail(&FinalEvent {
+            report: &report,
+            windows: &windows,
+            sketch_top: &[],
+            sketch_lines: &lines,
+        });
+        assert!(tail.starts_with("\n== final (merged from 2 windows) ==\n"));
+        assert!(tail.contains("cumulative top-1 (space-saving sketch"));
+        assert!(tail.contains("note: 2 ring drops occurred"));
+    }
+}

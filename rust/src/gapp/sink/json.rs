@@ -1,0 +1,701 @@
+//! Machine-readable backends: one versioned JSON document per session
+//! ([`JsonSink`]) or one JSON object per event line ([`JsonlSink`]).
+//!
+//! # Schema versioning policy (v1)
+//!
+//! Every emitted document/line carries `"schema": 1`. The number is
+//! bumped only on *breaking* changes (a field renamed, retyped, or
+//! removed, or event framing changed); adding fields is always allowed
+//! within a version, so consumers must ignore keys they do not know.
+//! The schema is deliberately hand-rolled over [`crate::util::json`] —
+//! `u64` counters (femtosecond CMetrics, runtimes) exceed 2^53 and
+//! must not pass through a float.
+//!
+//! [`report_from_json`] inverts [`report_json`] losslessly: the sink
+//! golden tests re-render a parsed document through the human renderer
+//! and byte-compare against the direct text output. That inverse is
+//! the seam future merge-tree / cross-process tooling builds on.
+
+use std::io;
+
+use anyhow::{anyhow, Result};
+
+use crate::ebpf::RingBufStats;
+use crate::gapp::classify::BottleneckClass;
+use crate::gapp::config::GappConfig;
+use crate::gapp::report::{Bottleneck, Report, SampleLine, ThreadCm};
+use crate::gapp::stream::WindowReport;
+use crate::util::json::Json;
+
+use super::{FinalEvent, ReportEvent, ReportSink, SessionInfo};
+
+/// Schema version stamped on every document and JSONL line.
+pub const SCHEMA_VERSION: u64 = 1;
+
+// ---- serialization -----------------------------------------------------
+
+fn opt_u64(v: Option<u64>) -> Json {
+    v.map(Json::u64).unwrap_or(Json::Null)
+}
+
+fn opt_str(v: &Option<String>) -> Json {
+    v.as_ref().map(Json::str).unwrap_or(Json::Null)
+}
+
+pub fn config_json(c: &GappConfig) -> Json {
+    Json::obj(vec![
+        (
+            "nmin",
+            c.nmin.map(Json::f64).unwrap_or(Json::Null),
+        ),
+        ("dt_ns", Json::u64(c.dt)),
+        ("stack_depth", Json::usize(c.stack_depth)),
+        ("top_n", Json::usize(c.top_n)),
+        ("ring_capacity", Json::usize(c.ring_capacity)),
+        ("shards", opt_u64(c.shards.map(|s| s as u64))),
+        ("stack_map_entries", Json::usize(c.stack_map_entries)),
+        ("stack_lru", Json::Bool(c.stack_lru)),
+        ("drain_threshold", Json::usize(c.drain_threshold)),
+        ("format", Json::str(c.format.name())),
+        ("output", opt_str(&c.output)),
+    ])
+}
+
+pub fn session_info_json(s: &SessionInfo) -> Json {
+    Json::obj(vec![
+        ("mode", Json::str(s.mode.name())),
+        (
+            "apps",
+            Json::Arr(s.apps.iter().map(Json::str).collect()),
+        ),
+        ("shards", Json::usize(s.shards)),
+        ("window_ns", opt_u64(s.window_ns)),
+        ("config", config_json(&s.config)),
+    ])
+}
+
+/// One closed window. The in-memory merge snapshot is deliberately not
+/// serialized — it is an implementation detail of the cumulative merge
+/// (and O(paths) per window); the ranked top-K plus the accounting is
+/// the window's reportable surface.
+pub fn window_json(w: &WindowReport) -> Json {
+    Json::obj(vec![
+        ("index", Json::u64(w.index)),
+        ("start_ns", Json::u64(w.start_ns)),
+        ("end_ns", Json::u64(w.end_ns)),
+        ("slices", Json::u64(w.slices)),
+        ("drained", Json::u64(w.drained)),
+        ("drops", Json::u64(w.drops)),
+        (
+            "shard_drops",
+            Json::Arr(w.shard_drops.iter().map(|d| Json::u64(*d)).collect()),
+        ),
+        (
+            "top",
+            Json::Arr(
+                w.top
+                    .iter()
+                    .map(|l| {
+                        Json::obj(vec![
+                            ("rank", Json::usize(l.rank)),
+                            ("app", Json::str(&l.app)),
+                            ("cm_ms", Json::f64(l.cm_ms)),
+                            ("slices", Json::u64(l.slices)),
+                            ("class", Json::str(l.class)),
+                            ("site", Json::str(&l.site)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+fn ring_stats_json(s: &RingBufStats) -> Json {
+    Json::obj(vec![
+        ("pushed", Json::u64(s.pushed)),
+        ("dropped", Json::u64(s.dropped)),
+        ("drained", Json::u64(s.drained)),
+        ("peak", Json::usize(s.peak)),
+    ])
+}
+
+fn bottleneck_json(b: &Bottleneck) -> Json {
+    Json::obj(vec![
+        ("rank", Json::usize(b.rank)),
+        ("total_cm_ms", Json::f64(b.total_cm_ms)),
+        ("slices", Json::u64(b.slices)),
+        ("class", Json::str(b.class.label())),
+        ("stack_top_samples", Json::u64(b.stack_top_samples)),
+        (
+            "call_path",
+            Json::Arr(b.call_path.iter().map(Json::str).collect()),
+        ),
+        (
+            "apps",
+            Json::Arr(
+                b.apps
+                    .iter()
+                    .map(|(a, n)| {
+                        Json::obj(vec![("app", Json::str(a)), ("slices", Json::u64(*n))])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "top_wakers",
+            Json::Arr(
+                b.top_wakers
+                    .iter()
+                    .map(|(c, n)| {
+                        Json::obj(vec![("comm", Json::str(c)), ("count", Json::u64(*n))])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "samples",
+            Json::Arr(
+                b.samples
+                    .iter()
+                    .map(|s| {
+                        Json::obj(vec![
+                            ("rendered", Json::str(&s.rendered)),
+                            (
+                                "function",
+                                s.function
+                                    .as_ref()
+                                    .map(Json::str)
+                                    .unwrap_or(Json::Null),
+                            ),
+                            ("count", Json::u64(s.count)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// The full report, every field. `critical_ratio` is derived and
+/// emitted for consumer convenience; [`report_from_json`] ignores it.
+pub fn report_json(r: &Report) -> Json {
+    Json::obj(vec![
+        ("app", Json::str(&r.app)),
+        ("backend", Json::str(r.backend)),
+        ("runtime_ns", Json::u64(r.runtime_ns)),
+        ("total_slices", Json::u64(r.total_slices)),
+        ("critical_slices", Json::u64(r.critical_slices)),
+        ("critical_ratio", Json::f64(r.critical_ratio())),
+        ("samples", Json::u64(r.samples)),
+        ("intervals", Json::u64(r.intervals)),
+        ("ring_dropped", Json::u64(r.ring_dropped)),
+        (
+            "ring_shards",
+            Json::Arr(r.ring_shards.iter().map(ring_stats_json).collect()),
+        ),
+        ("stack_ids", Json::u64(r.stack_ids)),
+        ("stack_drops", Json::u64(r.stack_drops)),
+        ("stack_evictions", Json::u64(r.stack_evictions)),
+        (
+            "window_drops",
+            Json::Arr(r.window_drops.iter().map(|d| Json::u64(*d)).collect()),
+        ),
+        ("memory_bytes", Json::u64(r.memory_bytes)),
+        ("ppt_seconds", Json::f64(r.ppt_seconds)),
+        ("probe_cost_ns", Json::u64(r.probe_cost_ns)),
+        (
+            "threads",
+            Json::Arr(
+                r.threads
+                    .iter()
+                    .map(|t| {
+                        Json::obj(vec![
+                            ("pid", Json::u64(t.pid as u64)),
+                            ("comm", Json::str(&t.comm)),
+                            ("cm_ms", Json::f64(t.cm_ms)),
+                            ("wall_ms", Json::f64(t.wall_ms)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "bottlenecks",
+            Json::Arr(r.bottlenecks.iter().map(bottleneck_json).collect()),
+        ),
+    ])
+}
+
+// ---- deserialization ---------------------------------------------------
+
+fn req<'a>(v: &'a Json, key: &str) -> Result<&'a Json> {
+    v.get(key).ok_or_else(|| anyhow!("missing field {key:?}"))
+}
+
+fn req_u64(v: &Json, key: &str) -> Result<u64> {
+    req(v, key)?
+        .as_u64()
+        .ok_or_else(|| anyhow!("field {key:?} is not a u64"))
+}
+
+fn req_f64(v: &Json, key: &str) -> Result<f64> {
+    req(v, key)?
+        .as_f64()
+        .ok_or_else(|| anyhow!("field {key:?} is not a number"))
+}
+
+fn req_str(v: &Json, key: &str) -> Result<String> {
+    Ok(req(v, key)?
+        .as_str()
+        .ok_or_else(|| anyhow!("field {key:?} is not a string"))?
+        .to_string())
+}
+
+fn req_arr<'a>(v: &'a Json, key: &str) -> Result<&'a [Json]> {
+    req(v, key)?
+        .as_arr()
+        .ok_or_else(|| anyhow!("field {key:?} is not an array"))
+}
+
+fn u64_arr(v: &Json, key: &str) -> Result<Vec<u64>> {
+    req_arr(v, key)?
+        .iter()
+        .map(|d| d.as_u64().ok_or_else(|| anyhow!("{key:?}: non-u64 entry")))
+        .collect()
+}
+
+/// `Report::backend` is `&'static str`; map the serialized name back
+/// onto the known backend set (anything unknown — e.g. a future
+/// backend read by an old binary — degrades to a recognizable label
+/// rather than failing the whole parse).
+fn backend_from_name(name: &str) -> &'static str {
+    match name {
+        "native" => "native",
+        "xla" => "xla",
+        _ => "(foreign backend)",
+    }
+}
+
+fn bottleneck_from_json(v: &Json) -> Result<Bottleneck> {
+    let class_label = req_str(v, "class")?;
+    let class = BottleneckClass::from_label(&class_label)
+        .ok_or_else(|| anyhow!("unknown bottleneck class {class_label:?}"))?;
+    let samples = req_arr(v, "samples")?
+        .iter()
+        .map(|s| {
+            Ok(SampleLine {
+                rendered: req_str(s, "rendered")?,
+                function: match req(s, "function")? {
+                    Json::Null => None,
+                    f => Some(
+                        f.as_str()
+                            .ok_or_else(|| anyhow!("sample function is not a string"))?
+                            .to_string(),
+                    ),
+                },
+                count: req_u64(s, "count")?,
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    Ok(Bottleneck {
+        rank: req_u64(v, "rank")? as usize,
+        total_cm_ms: req_f64(v, "total_cm_ms")?,
+        slices: req_u64(v, "slices")?,
+        class,
+        top_wakers: req_arr(v, "top_wakers")?
+            .iter()
+            .map(|w| Ok((req_str(w, "comm")?, req_u64(w, "count")?)))
+            .collect::<Result<Vec<_>>>()?,
+        apps: req_arr(v, "apps")?
+            .iter()
+            .map(|a| Ok((req_str(a, "app")?, req_u64(a, "slices")?)))
+            .collect::<Result<Vec<_>>>()?,
+        call_path: req_arr(v, "call_path")?
+            .iter()
+            .map(|f| {
+                Ok(f.as_str()
+                    .ok_or_else(|| anyhow!("call_path frame is not a string"))?
+                    .to_string())
+            })
+            .collect::<Result<Vec<_>>>()?,
+        samples,
+        stack_top_samples: req_u64(v, "stack_top_samples")?,
+    })
+}
+
+/// Rebuild a [`Report`] from the object [`report_json`] emitted. The
+/// round-trip is lossless: re-rendering the result through the human
+/// renderer byte-matches the original (golden-tested), which is what
+/// makes JSON a faithful transport for downstream diff/merge tooling.
+pub fn report_from_json(v: &Json) -> Result<Report> {
+    Ok(Report {
+        app: req_str(v, "app")?,
+        backend: backend_from_name(&req_str(v, "backend")?),
+        runtime_ns: req_u64(v, "runtime_ns")?,
+        bottlenecks: req_arr(v, "bottlenecks")?
+            .iter()
+            .map(bottleneck_from_json)
+            .collect::<Result<Vec<_>>>()?,
+        threads: req_arr(v, "threads")?
+            .iter()
+            .map(|t| {
+                Ok(ThreadCm {
+                    pid: req_u64(t, "pid")? as u32,
+                    comm: req_str(t, "comm")?,
+                    cm_ms: req_f64(t, "cm_ms")?,
+                    wall_ms: req_f64(t, "wall_ms")?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?,
+        total_slices: req_u64(v, "total_slices")?,
+        critical_slices: req_u64(v, "critical_slices")?,
+        samples: req_u64(v, "samples")?,
+        intervals: req_u64(v, "intervals")?,
+        ring_dropped: req_u64(v, "ring_dropped")?,
+        ring_shards: req_arr(v, "ring_shards")?
+            .iter()
+            .map(|s| {
+                Ok(RingBufStats {
+                    pushed: req_u64(s, "pushed")?,
+                    dropped: req_u64(s, "dropped")?,
+                    drained: req_u64(s, "drained")?,
+                    peak: req_u64(s, "peak")? as usize,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?,
+        stack_ids: req_u64(v, "stack_ids")?,
+        stack_drops: req_u64(v, "stack_drops")?,
+        stack_evictions: req_u64(v, "stack_evictions")?,
+        window_drops: u64_arr(v, "window_drops")?,
+        memory_bytes: req_u64(v, "memory_bytes")?,
+        ppt_seconds: req_f64(v, "ppt_seconds")?,
+        probe_cost_ns: req_u64(v, "probe_cost_ns")?,
+        ..Default::default()
+    })
+}
+
+fn sketch_json(top: &[(u32, u64, u64)], lines: &[String]) -> Json {
+    Json::obj(vec![
+        (
+            "top",
+            Json::Arr(
+                top.iter()
+                    .map(|(id, cm, err)| {
+                        Json::obj(vec![
+                            ("stack_id", Json::u64(*id as u64)),
+                            ("cm_fs_upper", Json::u64(*cm)),
+                            ("max_overestimate_fs", Json::u64(*err)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("lines", Json::Arr(lines.iter().map(Json::str).collect())),
+    ])
+}
+
+fn final_json(fe: &FinalEvent<'_>) -> (Json, Json) {
+    (report_json(fe.report), sketch_json(fe.sketch_top, fe.sketch_lines))
+}
+
+// ---- sinks -------------------------------------------------------------
+
+/// One pretty-printed JSON document for the whole session, written at
+/// `SessionEnd` (a half-written run leaves no partial document —
+/// truncation is detectable, matching the "schema or nothing" policy).
+pub struct JsonSink<W: io::Write> {
+    w: W,
+    session: Json,
+    windows: Vec<Json>,
+    report: Json,
+    cumulative: Json,
+}
+
+impl<W: io::Write> JsonSink<W> {
+    pub fn new(w: W) -> JsonSink<W> {
+        JsonSink {
+            w,
+            session: Json::Null,
+            windows: Vec::new(),
+            report: Json::Null,
+            cumulative: Json::Null,
+        }
+    }
+
+    pub fn into_inner(self) -> W {
+        self.w
+    }
+}
+
+impl<W: io::Write> ReportSink for JsonSink<W> {
+    fn on_event(&mut self, ev: &ReportEvent<'_>) -> Result<()> {
+        match ev {
+            ReportEvent::SessionStart(info) => {
+                self.session = session_info_json(info);
+            }
+            ReportEvent::WindowClosed(wr) => {
+                self.windows.push(window_json(wr));
+            }
+            ReportEvent::Final(fe) => {
+                let (report, cumulative) = final_json(fe);
+                self.report = report;
+                self.cumulative = cumulative;
+            }
+            ReportEvent::SessionEnd { runtime_ns } => {
+                let doc = Json::obj(vec![
+                    ("schema", Json::u64(SCHEMA_VERSION)),
+                    ("type", Json::str("gapp.session")),
+                    ("session", std::mem::replace(&mut self.session, Json::Null)),
+                    ("windows", Json::Arr(std::mem::take(&mut self.windows))),
+                    ("report", std::mem::replace(&mut self.report, Json::Null)),
+                    (
+                        "cumulative_topk",
+                        std::mem::replace(&mut self.cumulative, Json::Null),
+                    ),
+                    ("runtime_ns", Json::u64(*runtime_ns)),
+                ]);
+                self.w.write_all(doc.to_pretty().as_bytes())?;
+                self.w.write_all(b"\n")?;
+            }
+        }
+        Ok(())
+    }
+
+    fn finish(&mut self) -> Result<()> {
+        self.w.flush()?;
+        Ok(())
+    }
+}
+
+/// One compact JSON object per line, one line per event — the
+/// streaming-transport shape (tail it, ship it over a socket, replay
+/// it). Concatenating the `"window"` lines reconstructs the live run's
+/// per-window accounting exactly (golden-tested against
+/// `Report::window_drops`).
+pub struct JsonlSink<W: io::Write> {
+    w: W,
+}
+
+impl<W: io::Write> JsonlSink<W> {
+    pub fn new(w: W) -> JsonlSink<W> {
+        JsonlSink { w }
+    }
+
+    pub fn into_inner(self) -> W {
+        self.w
+    }
+
+    fn line(&mut self, event: &str, mut fields: Vec<(&str, Json)>) -> Result<()> {
+        let mut all = vec![
+            ("schema", Json::u64(SCHEMA_VERSION)),
+            ("event", Json::str(event)),
+        ];
+        all.append(&mut fields);
+        self.w.write_all(Json::obj(all).to_compact().as_bytes())?;
+        self.w.write_all(b"\n")?;
+        Ok(())
+    }
+}
+
+impl<W: io::Write> ReportSink for JsonlSink<W> {
+    fn on_event(&mut self, ev: &ReportEvent<'_>) -> Result<()> {
+        match ev {
+            ReportEvent::SessionStart(info) => self.line(
+                "session_start",
+                vec![("session", session_info_json(info))],
+            ),
+            ReportEvent::WindowClosed(wr) => {
+                self.line("window", vec![("window", window_json(wr))])
+            }
+            ReportEvent::Final(fe) => {
+                let (report, cumulative) = final_json(fe);
+                self.line(
+                    "final",
+                    vec![("report", report), ("cumulative_topk", cumulative)],
+                )
+            }
+            ReportEvent::SessionEnd { runtime_ns } => self.line(
+                "session_end",
+                vec![("runtime_ns", Json::u64(*runtime_ns))],
+            ),
+        }
+    }
+
+    fn finish(&mut self) -> Result<()> {
+        self.w.flush()?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gapp::sink::SessionMode;
+
+    fn sample_report() -> Report {
+        Report {
+            app: "mysql+dedup".into(),
+            backend: "native",
+            runtime_ns: u64::MAX - 7, // beyond f64 precision on purpose
+            bottlenecks: vec![Bottleneck {
+                rank: 1,
+                total_cm_ms: 1.25,
+                slices: 4,
+                class: BottleneckClass::Pipeline,
+                top_wakers: vec![("worker-1".into(), 3)],
+                apps: vec![("mysql".into(), 3), ("dedup".into(), 1)],
+                call_path: vec!["main".into(), "enqueue \"x\"".into()],
+                samples: vec![
+                    SampleLine {
+                        rendered: "emd (emd.c:57)".into(),
+                        function: Some("emd".into()),
+                        count: 7,
+                    },
+                    SampleLine {
+                        rendered: "??".into(),
+                        function: None,
+                        count: 1,
+                    },
+                ],
+                stack_top_samples: 2,
+            }],
+            threads: vec![ThreadCm {
+                pid: 12,
+                comm: "worker".into(),
+                cm_ms: 0.5,
+                wall_ms: 1.5,
+            }],
+            total_slices: 100,
+            critical_slices: 7,
+            samples: 55,
+            intervals: 20,
+            ring_dropped: 5,
+            ring_shards: vec![RingBufStats {
+                pushed: 60,
+                dropped: 5,
+                drained: 55,
+                peak: 9,
+            }],
+            stack_ids: 3,
+            stack_drops: 1,
+            stack_evictions: 2,
+            window_drops: vec![0, 5],
+            memory_bytes: 4096,
+            ppt_seconds: 0.125,
+            probe_cost_ns: 777,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn report_round_trips_through_json() {
+        let r = sample_report();
+        let parsed = Json::parse(&report_json(&r).to_pretty()).unwrap();
+        let rt = report_from_json(&parsed).unwrap();
+        // The human rendering is the equality oracle: every field the
+        // report can show must survive.
+        assert_eq!(rt.to_string(), r.to_string());
+        // And fields the renderer elides must survive too.
+        assert_eq!(rt.runtime_ns, r.runtime_ns);
+        assert_eq!(rt.probe_cost_ns, r.probe_cost_ns);
+        assert_eq!(rt.intervals, r.intervals);
+        assert_eq!(rt.samples_of("emd"), 7);
+        assert_eq!(rt.ring_shards.len(), 1);
+        assert_eq!(rt.ring_shards[0].peak, 9);
+    }
+
+    #[test]
+    fn unknown_class_labels_fail_loudly() {
+        let mut j = report_json(&sample_report());
+        if let Json::Obj(fields) = &mut j {
+            let b = fields
+                .iter_mut()
+                .find(|(k, _)| k == "bottlenecks")
+                .unwrap();
+            if let Json::Arr(items) = &mut b.1 {
+                if let Json::Obj(bf) = &mut items[0] {
+                    bf.iter_mut().find(|(k, _)| k == "class").unwrap().1 =
+                        Json::str("not a class");
+                }
+            }
+        }
+        let err = report_from_json(&j).unwrap_err().to_string();
+        assert!(err.contains("not a class"), "{err}");
+    }
+
+    #[test]
+    fn jsonl_emits_one_schema_stamped_line_per_event() {
+        let info = SessionInfo {
+            mode: SessionMode::Live,
+            apps: vec!["canneal".to_string()],
+            shards: 4,
+            window_ns: Some(5_000_000),
+            config: GappConfig::default(),
+        };
+        let r = sample_report();
+        let mut sink = JsonlSink::new(Vec::new());
+        sink.on_event(&ReportEvent::SessionStart(&info)).unwrap();
+        sink.on_event(&ReportEvent::Final(FinalEvent {
+            report: &r,
+            windows: &[],
+            sketch_top: &[(3, 100, 10)],
+            sketch_lines: &["line".to_string()],
+        }))
+        .unwrap();
+        sink.on_event(&ReportEvent::SessionEnd { runtime_ns: 42 })
+            .unwrap();
+        sink.finish().unwrap();
+        let out = String::from_utf8(sink.into_inner()).unwrap();
+        let lines: Vec<&str> = out.lines().collect();
+        assert_eq!(lines.len(), 3);
+        for (line, ev) in lines.iter().zip(["session_start", "final", "session_end"]) {
+            let v = Json::parse(line).unwrap();
+            assert_eq!(v.get("schema").unwrap().as_u64(), Some(SCHEMA_VERSION));
+            assert_eq!(v.get("event").unwrap().as_str(), Some(ev));
+        }
+        let start = Json::parse(lines[0]).unwrap();
+        assert_eq!(
+            start
+                .get("session")
+                .and_then(|s| s.get("window_ns"))
+                .and_then(|w| w.as_u64()),
+            Some(5_000_000)
+        );
+        let end = Json::parse(lines[2]).unwrap();
+        assert_eq!(end.get("runtime_ns").unwrap().as_u64(), Some(42));
+    }
+
+    #[test]
+    fn json_sink_writes_one_document_at_session_end() {
+        let info = SessionInfo {
+            mode: SessionMode::Batch,
+            apps: vec!["canneal".to_string()],
+            shards: 1,
+            window_ns: None,
+            config: GappConfig::default(),
+        };
+        let r = sample_report();
+        let mut sink = JsonSink::new(Vec::new());
+        sink.on_event(&ReportEvent::SessionStart(&info)).unwrap();
+        // Nothing hits the writer before SessionEnd.
+        sink.on_event(&ReportEvent::Final(FinalEvent {
+            report: &r,
+            windows: &[],
+            sketch_top: &[],
+            sketch_lines: &[],
+        }))
+        .unwrap();
+        sink.on_event(&ReportEvent::SessionEnd { runtime_ns: 9 })
+            .unwrap();
+        sink.finish().unwrap();
+        let out = String::from_utf8(sink.into_inner()).unwrap();
+        let doc = Json::parse(&out).unwrap();
+        assert_eq!(doc.get("schema").unwrap().as_u64(), Some(SCHEMA_VERSION));
+        assert_eq!(doc.get("type").unwrap().as_str(), Some("gapp.session"));
+        assert_eq!(doc.get("windows").unwrap().as_arr().unwrap().len(), 0);
+        assert_eq!(doc.get("runtime_ns").unwrap().as_u64(), Some(9));
+        let rt = report_from_json(doc.get("report").unwrap()).unwrap();
+        assert_eq!(rt.to_string(), r.to_string());
+    }
+}

@@ -1,0 +1,192 @@
+//! Report sinks: the output seam of the profiler.
+//!
+//! Every GAPP mode — batch (`gapp profile`), live windows (`gapp
+//! live`), system-wide multi-app — drives one session that *emits
+//! typed events* instead of printing strings:
+//!
+//! * [`ReportEvent::SessionStart`] — the resolved configuration, the
+//!   application list and the transport shard count, before any work.
+//! * [`ReportEvent::WindowClosed`] — one closed epoch window (live
+//!   mode only): the window's top-K, drain/drop accounting, and the
+//!   per-shard drop breakdown.
+//! * [`ReportEvent::Final`] — the merged end-of-run [`Report`] plus the
+//!   live tail (per-window summaries, cumulative sketch lines).
+//! * [`ReportEvent::SessionEnd`] — the simulated runtime; the last
+//!   event of every session.
+//!
+//! A [`ReportSink`] consumes that stream. Backends: [`HumanSink`]
+//! (byte-identical to the pre-sink CLI text — golden-enforced),
+//! [`JsonSink`] (one versioned document per session), [`JsonlSink`]
+//! (one event per line, transport-friendly), [`TeeSink`] / [`FnSink`]
+//! (multiplexing and callbacks). Future transports (sockets, merge
+//! trees over per-shard aggregations, dashboards) implement the same
+//! trait and plug into [`super::Session`] unchanged.
+
+pub mod human;
+pub mod json;
+
+pub use human::HumanSink;
+pub use json::{report_from_json, JsonSink, JsonlSink};
+
+use std::io;
+
+use anyhow::Result;
+
+use super::config::{GappConfig, ReportFormat};
+use super::report::Report;
+use super::stream::{WindowReport, WindowSummary};
+
+/// How the session drives its kernel: one batch run, or epoch windows.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SessionMode {
+    Batch,
+    Live,
+}
+
+impl SessionMode {
+    pub fn name(self) -> &'static str {
+        match self {
+            SessionMode::Batch => "batch",
+            SessionMode::Live => "live",
+        }
+    }
+}
+
+/// Everything known at session start.
+#[derive(Clone, Debug)]
+pub struct SessionInfo {
+    pub mode: SessionMode,
+    /// Profiled application names, in spawn order (application ids in
+    /// per-app attributions index into this list).
+    pub apps: Vec<String>,
+    /// Resolved ring-shard count (the per-CPU default applied).
+    pub shards: usize,
+    /// Epoch window length; `None` for batch sessions.
+    pub window_ns: Option<u64>,
+    pub config: GappConfig,
+}
+
+/// The end-of-run payload: the merged report plus the live-mode tail
+/// that the CLI used to assemble by hand.
+#[derive(Clone, Copy, Debug)]
+pub struct FinalEvent<'a> {
+    pub report: &'a Report,
+    /// One summary per closed window (empty for batch).
+    pub windows: &'a [WindowSummary],
+    /// Cumulative space-saving top-K:
+    /// `(stack_id, cm_fs_upper_bound, max_overestimate_fs)`.
+    pub sketch_top: &'a [(u32, u64, u64)],
+    /// The sketch rendered for display (empty for batch).
+    pub sketch_lines: &'a [String],
+}
+
+/// One event of a profiling session, in emission order:
+/// `SessionStart (WindowClosed)* Final SessionEnd`.
+#[derive(Clone, Copy, Debug)]
+pub enum ReportEvent<'a> {
+    SessionStart(&'a SessionInfo),
+    WindowClosed(&'a WindowReport),
+    Final(FinalEvent<'a>),
+    SessionEnd { runtime_ns: u64 },
+}
+
+/// A consumer of session events. Implementations must tolerate the
+/// batch stream (no `WindowClosed` events) and must not assume they
+/// see `SessionEnd` on error paths — flushing belongs in [`finish`].
+///
+/// [`finish`]: ReportSink::finish
+pub trait ReportSink {
+    fn on_event(&mut self, ev: &ReportEvent<'_>) -> Result<()>;
+
+    /// Called once after the session's last event; flush buffers here.
+    fn finish(&mut self) -> Result<()> {
+        Ok(())
+    }
+}
+
+impl<S: ReportSink + ?Sized> ReportSink for Box<S> {
+    fn on_event(&mut self, ev: &ReportEvent<'_>) -> Result<()> {
+        (**self).on_event(ev)
+    }
+
+    fn finish(&mut self) -> Result<()> {
+        (**self).finish()
+    }
+}
+
+/// Multiplex one event stream into two sinks (nest for more). Both
+/// sinks see every event; the first error wins.
+pub struct TeeSink<A: ReportSink, B: ReportSink> {
+    pub a: A,
+    pub b: B,
+}
+
+impl<A: ReportSink, B: ReportSink> TeeSink<A, B> {
+    pub fn new(a: A, b: B) -> TeeSink<A, B> {
+        TeeSink { a, b }
+    }
+}
+
+impl<A: ReportSink, B: ReportSink> ReportSink for TeeSink<A, B> {
+    fn on_event(&mut self, ev: &ReportEvent<'_>) -> Result<()> {
+        self.a.on_event(ev)?;
+        self.b.on_event(ev)
+    }
+
+    fn finish(&mut self) -> Result<()> {
+        self.a.finish()?;
+        self.b.finish()
+    }
+}
+
+/// A sink from a closure — the adapter behind the deprecated
+/// callback-style `run_live` wrapper, and handy in tests.
+pub struct FnSink<F: FnMut(&ReportEvent<'_>)>(pub F);
+
+impl<F: FnMut(&ReportEvent<'_>)> ReportSink for FnSink<F> {
+    fn on_event(&mut self, ev: &ReportEvent<'_>) -> Result<()> {
+        (self.0)(ev);
+        Ok(())
+    }
+}
+
+/// Sink for a `--format` selection over an opened writer (the CLI's
+/// stdout or `--output` file).
+pub fn for_writer(format: ReportFormat, w: Box<dyn io::Write>) -> Box<dyn ReportSink> {
+    match format {
+        ReportFormat::Text => Box::new(HumanSink::new(w)),
+        ReportFormat::Json => Box::new(JsonSink::new(w)),
+        ReportFormat::Jsonl => Box::new(JsonlSink::new(w)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn count_sink(hits: std::rc::Rc<std::cell::Cell<u32>>) -> impl ReportSink {
+        FnSink(move |_ev: &ReportEvent<'_>| hits.set(hits.get() + 1))
+    }
+
+    #[test]
+    fn tee_delivers_every_event_to_both_sinks() {
+        let a = std::rc::Rc::new(std::cell::Cell::new(0));
+        let b = std::rc::Rc::new(std::cell::Cell::new(0));
+        let mut tee = TeeSink::new(count_sink(a.clone()), count_sink(b.clone()));
+        tee.on_event(&ReportEvent::SessionEnd { runtime_ns: 1 }).unwrap();
+        tee.on_event(&ReportEvent::SessionEnd { runtime_ns: 2 }).unwrap();
+        tee.finish().unwrap();
+        assert_eq!((a.get(), b.get()), (2, 2));
+    }
+
+    #[test]
+    fn boxed_sinks_forward() {
+        let n = std::rc::Rc::new(std::cell::Cell::new(0));
+        let mut boxed: Box<dyn ReportSink + '_> = Box::new(count_sink(n.clone()));
+        boxed
+            .on_event(&ReportEvent::SessionEnd { runtime_ns: 0 })
+            .unwrap();
+        boxed.finish().unwrap();
+        assert_eq!(n.get(), 1);
+    }
+}

@@ -54,45 +54,11 @@ pub struct WindowReport {
 }
 
 impl fmt::Display for WindowReport {
+    /// Delegates to [`crate::gapp::sink::human::render_window`] — the
+    /// renderer lives with the sinks now; this impl only keeps
+    /// `print!("{window}")`-style callers working.
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        write!(
-            f,
-            "[w{:>4} {:>10.3}-{:>10.3} ms] slices {} | paths {} | drained {} | drops {}",
-            self.index,
-            self.start_ns as f64 / 1e6,
-            self.end_ns as f64 / 1e6,
-            self.slices,
-            self.snapshot.len(),
-            self.drained,
-            self.drops,
-        )?;
-        // Shard breakdown only when lossy AND actually sharded — a
-        // single-ring total has nothing to break down (mirrors
-        // `Report`'s guard, and keeps `--shards 1` output unchanged).
-        if self.drops > 0 && self.shard_drops.len() > 1 {
-            let lossy: Vec<String> = self
-                .shard_drops
-                .iter()
-                .enumerate()
-                .filter(|(_, d)| **d > 0)
-                .map(|(i, d)| format!("s{i}:{d}"))
-                .collect();
-            if !lossy.is_empty() {
-                write!(f, " [{}]", lossy.join(" "))?;
-            }
-        }
-        writeln!(f)?;
-        if self.top.is_empty() {
-            writeln!(f, "  (no critical slices this window)")?;
-        }
-        for l in &self.top {
-            writeln!(
-                f,
-                "  #{:<2} {:<14} {:>9.3} ms x{:<5} {:<24} {}",
-                l.rank, l.app, l.cm_ms, l.slices, l.class, l.site,
-            )?;
-        }
-        Ok(())
+        f.write_str(&crate::gapp::sink::human::render_window(self))
     }
 }
 

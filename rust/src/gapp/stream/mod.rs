@@ -20,10 +20,13 @@
 //!   kernel, with per-app attribution learned from `task_newtask`.
 //! * [`live`] — per-window top-K report rendering.
 //!
-//! [`run_live`] wires it all together: simulate one epoch window
-//! (`Kernel::run_until`), drain, aggregate, report, repeat. Memory
-//! stays O(top-K + live stack ids) regardless of run length — no
-//! per-slice state survives its window.
+//! The epoch-windowed driver itself lives in [`super::session`]: a
+//! [`super::Session`] with a window set simulates one epoch
+//! (`Kernel::run_until`), drains, aggregates, emits one
+//! `WindowClosed` event, and repeats. Memory stays O(top-K + live
+//! stack ids) regardless of run length — no per-slice state survives
+//! its window. [`run_live`] remains as a thin deprecated
+//! callback-style wrapper over that driver.
 
 pub mod consumer;
 pub mod live;
@@ -33,25 +36,18 @@ pub mod window;
 
 pub use consumer::{EpochStats, ShardedConsumer};
 pub use live::{LiveLine, WindowReport};
-use live::live_lines;
 pub use multi::{AppRegistry, RegistryProbe};
 pub use topk::SpaceSaving;
 pub use window::{merge_snapshots, WindowAccumulator};
 
-use std::cell::RefCell;
-use std::rc::Rc;
-use std::time::Instant;
-
 use anyhow::Result;
 
-use crate::ebpf::StackMap;
 use crate::runtime::AnalysisEngine;
-use crate::simkernel::{Kernel, KernelConfig, RunOutcome, Time};
+use crate::simkernel::{KernelConfig, Time};
 use crate::workload::App;
 
-use super::symbolize::Symbolizer;
-use super::userspace::{PathAccumulator, SliceEntry};
-use super::{build_report, GappConfig, GappSession, Report, ReportCtx};
+use super::sink::{FnSink, ReportEvent};
+use super::{Report, GappConfig, Session};
 
 /// Streaming-analyzer configuration.
 #[derive(Clone, Debug)]
@@ -109,6 +105,14 @@ pub struct LiveRun {
 /// [`WindowReport`] per window through `on_window`. With several apps
 /// the kernel hosts them concurrently (system-wide mode) and every
 /// bottleneck is attributed to its owning application.
+///
+/// Thin wrapper over the [`Session`] builder (the windowed driver
+/// lives there and emits typed events; this adapts the `WindowClosed`
+/// stream back onto the old callback). Kept so pre-sink callers
+/// compile unchanged; new code should build a [`Session`].
+#[deprecated(
+    note = "use gapp::Session::builder(engine).app(..).live(lcfg).sink(..).run()"
+)]
 pub fn run_live(
     apps: &[App],
     kcfg: KernelConfig,
@@ -118,191 +122,32 @@ pub fn run_live(
     mut on_window: impl FnMut(&WindowReport),
 ) -> Result<LiveRun> {
     anyhow::ensure!(!apps.is_empty(), "live mode needs at least one app");
-    anyhow::ensure!(
-        lcfg.window_ns > 0,
-        "window length must be positive (--window-us 0 would never close a window)"
-    );
-    anyhow::ensure!(
-        lcfg.top_k >= 1,
-        "top_k must be >= 1 (--top 0 would report nothing)"
-    );
-    anyhow::ensure!(
-        lcfg.sketch_entries >= 1,
-        "sketch_entries must be >= 1 (--sketch 0 cannot track anything)"
-    );
-    let top_n = gcfg.top_n;
-    let stack_lru = gcfg.stack_lru;
-    let session = GappSession::new(gcfg, kcfg.cpus, engine)?;
-    let mut kernel = Kernel::new(kcfg);
-    kernel.attach_probe(session.probe());
-    // System-wide attribution: a zero-cost probe tags every task with
-    // its application (children inherit), so attaching it cannot
-    // perturb the simulated timeline relative to a batch run.
-    let registry = Rc::new(RefCell::new(AppRegistry::new()));
-    kernel.attach_probe(Box::new(RegistryProbe::new(registry.clone())));
+    let mut session = Session::builder(engine)
+        .kernel(kcfg)
+        .config(gcfg)
+        .live(lcfg)
+        .sink(FnSink(|ev: &ReportEvent<'_>| {
+            if let ReportEvent::WindowClosed(w) = ev {
+                on_window(w);
+            }
+        }));
     for app in apps {
-        registry.borrow_mut().begin_app(&app.name);
-        app.spawn_into(&mut kernel);
-        registry.borrow_mut().end_spawn();
+        session = session.app(app);
     }
-    let names: Vec<String> = registry.borrow().names().to_vec();
-    let multi_app = apps.len() > 1;
-    let mut syms: Vec<Symbolizer<'_>> = apps
-        .iter()
-        .map(|a| Symbolizer::new(a.symtab.as_ref()))
-        .collect();
-
-    // One cursor per ring shard: the transport is per-CPU perf buffers,
-    // drained together at each epoch boundary.
-    let mut consumer = ShardedConsumer::new(session.core.borrow().kernel.rings.num_shards());
-    let mut wacc = WindowAccumulator::new();
-    let mut cumulative = PathAccumulator::new();
-    let mut sketch: SpaceSaving<u32> = SpaceSaving::new(lcfg.sketch_entries);
-    let mut scratch: Vec<SliceEntry> = Vec::new();
-    let mut summaries: Vec<WindowSummary> = Vec::new();
-    let mut window_drops: Vec<u64> = Vec::new();
-    // Kernel-side LRU recycles stack ids mid-run, so everything that
-    // outlives a window (cumulative merge, sketch, final report) must
-    // not key on raw kernel ids. Snapshots are re-interned here — at
-    // window close, while id → frames is still fresh — into a stable
-    // userspace map. Without LRU, kernel ids are already stable and
-    // this stays `None`.
-    let mut user_stacks: Option<StackMap> = if stack_lru {
-        Some(StackMap::new("live_user_stacks", 1 << 20))
-    } else {
-        None
-    };
-
-    let mut epoch: u64 = 0;
-    let runtime_ns = loop {
-        epoch += 1;
-        let limit = lcfg.window_ns.saturating_mul(epoch);
-        let outcome = kernel.run_until(limit)?;
-        let (end_ns, done) = match outcome {
-            RunOutcome::Done(t) => (t, true),
-            RunOutcome::Paused(t) => (t, false),
-        };
-        let start_ns = lcfg.window_ns.saturating_mul(epoch - 1).min(end_ns);
-        let wr = {
-            let mut core = session.core.borrow_mut();
-            let estats = consumer.drain_epoch(&mut core);
-            scratch.clear();
-            core.user.drain_slices_into(&mut scratch);
-            {
-                let reg = registry.borrow();
-                for s in &scratch {
-                    wacc.add_slice(s, reg.app_of(s.pid));
-                }
-            }
-            let slices_in = wacc.slices_in;
-            let mut snapshot = wacc.snapshot();
-            if let Some(us) = user_stacks.as_mut() {
-                for p in &mut snapshot {
-                    let frames = core.kernel.stacks.resolve(p.stack_id);
-                    p.stack_id = us.intern(frames);
-                }
-            }
-            let ranked = core.user.rank_merged(&snapshot, lcfg.top_k);
-            let stacks = user_stacks.as_ref().unwrap_or(&core.kernel.stacks);
-            let top = live_lines(&ranked, stacks, &names, &mut syms, multi_app);
-            WindowReport {
-                index: epoch,
-                start_ns,
-                end_ns,
-                slices: slices_in,
-                drained: estats.delta.drained,
-                drops: estats.delta.dropped,
-                shard_drops: estats.per_shard.iter().map(|d| d.dropped).collect(),
-                top,
-                snapshot,
-            }
-        };
-        on_window(&wr);
-        // Fold the window into the cumulative state; the snapshot dies
-        // here, keeping resident memory O(top-K + live stack ids).
-        for p in &wr.snapshot {
-            cumulative.merge_path(p);
-            sketch.add(p.stack_id, p.cm_fs);
-        }
-        window_drops.push(wr.drops);
-        summaries.push(WindowSummary {
-            index: wr.index,
-            slices: wr.slices,
-            drained: wr.drained,
-            drops: wr.drops,
-        });
-        if done {
-            break end_ns;
-        }
-    };
-
-    // Final report from the merged window snapshots (post-processing
-    // proper starts here, mirroring the batch `finish`).
-    let ppt_start = Instant::now();
-    let mut core = session.core.borrow_mut();
-    core.user.flush_batch();
-    let merged = cumulative.take_paths();
-    let ranked = core.user.rank_merged(&merged, top_n);
-    // Cumulative sketch tail: the sketch tracks raw stack ids; app
-    // ownership comes from the cumulative merge (address spaces may
-    // overlap between apps in system-wide mode, so each site must be
-    // symbolized through the app that owns the path).
-    let sketch_top = sketch.top(lcfg.top_k);
-    let sketch_lines: Vec<String> = {
-        let stacks = user_stacks.as_ref().unwrap_or(&core.kernel.stacks);
-        let owner_of: crate::util::FxHashMap<u32, usize> = merged
-            .iter()
-            .map(|p| (p.stack_id, p.owner_app(multi_app, syms.len())))
-            .collect();
-        sketch_top
-            .iter()
-            .map(|(id, cm_fs, err_fs)| {
-                let owner = owner_of.get(id).copied().unwrap_or(0);
-                let site = match stacks.resolve(*id).last() {
-                    Some(a) => syms[owner].render(*a),
-                    None => "<no frames>".to_string(),
-                };
-                let app_name = names
-                    .get(owner)
-                    .cloned()
-                    .unwrap_or_else(|| format!("app{owner}"));
-                format!(
-                    "{:<14} {:>9.3} ms (+{:.3} max over)  {}",
-                    app_name,
-                    *cm_fs as f64 / 1e12,
-                    *err_fs as f64 / 1e12,
-                    site,
-                )
-            })
-            .collect()
-    };
-    let ctx = ReportCtx {
-        label: names.join("+"),
-        syms: apps
-            .iter()
-            .map(|a| (a.name.as_str(), a.symtab.as_ref()))
-            .collect(),
-        multi_app,
-        window_drops,
-        stacks: user_stacks.as_ref(),
-    };
-    let mut report = build_report(&core, &kernel, runtime_ns, &ranked, ctx, ppt_start);
-    if let Some(us) = user_stacks.as_ref() {
-        // The stable userspace re-intern map is part of the analyzer:
-        // if it saturates on a long run, the loss must be as visible as
-        // the kernel map's own drop counter.
-        report.stack_drops += us.stats.drops;
-    }
+    let out = session.run()?;
     Ok(LiveRun {
-        report,
-        windows: summaries,
-        sketch_top,
-        sketch_lines,
-        runtime_ns,
+        report: out.report,
+        windows: out.windows,
+        sketch_top: out.sketch_top,
+        sketch_lines: out.sketch_lines,
+        runtime_ns: out.runtime_ns,
     })
 }
 
 #[cfg(test)]
+// The deprecated callback wrapper is itself under test (it must relay
+// every window the Session driver emits).
+#[allow(deprecated)]
 mod tests {
     use super::*;
     use crate::workload::apps;

@@ -5,8 +5,10 @@
 //! gapp list-apps
 //! gapp profile --app dedup [--threads 64] [--seed 7] [--nmin 8] [--dt-us 3000]
 //!              [--shards N] [--ring-capacity R]
+//!              [--format text|json|jsonl] [--output FILE]
 //! gapp live --app mysql --app dedup --window-us 5000 [--top 5] [--lru]
 //!           [--shards N] [--ring-capacity R]
+//!           [--format text|json|jsonl] [--output FILE]
 //!                                  # streaming analyzer: epoch-windowed
 //!                                  # per-window top-K; repeat --app for
 //!                                  # system-wide multi-app profiling
@@ -15,6 +17,10 @@
 //! fired on and globally re-ordered by timestamp at read time.
 //! --shards defaults to the CPU count; --shards 1 is the single shared
 //! ring (provably equivalent output — only buffering behaviour differs).
+//! Output goes through a report sink: --format text (default; byte-
+//! identical to the pre-sink CLI), json (one schema-versioned document
+//! per session) or jsonl (one event per line — windows stream as they
+//! close); --output writes to a file instead of stdout.
 //! gapp run --app ferret            # unprofiled baseline run
 //! gapp table2 [--threads 64]       # Table 2
 //! gapp fig3 | fig4 | fig5 | fig6 | fig7
@@ -27,12 +33,15 @@
 //! default auto-detects artifacts/.
 //! ```
 
+use anyhow::Context as _;
+
 use gapp::experiments::{
     baselines_cmp, dedup_alloc, fig3, fig4, fig5, fig6, fig7, overhead, sensitivity,
     table2, EngineKind,
 };
-use gapp::gapp::stream::{run_live, LiveConfig};
-use gapp::gapp::{profile, run_unprofiled, GappConfig};
+use gapp::gapp::sink::{self, ReportSink};
+use gapp::gapp::stream::LiveConfig;
+use gapp::gapp::{run_unprofiled, GappConfig, ReportFormat, Session};
 use gapp::simkernel::KernelConfig;
 use gapp::util::cli::Args;
 use gapp::workload::apps;
@@ -86,6 +95,10 @@ fn main() {
                 "live mode: gapp live --app mysql --app dedup --window-us 5000 \
                  [--top 5] [--lru] [--shards N] [--ring-capacity R]"
             );
+            eprintln!(
+                "output:    profile/live take --format text|json|jsonl and \
+                 --output FILE (default: text on stdout)"
+            );
             eprintln!("           (repeat --app to profile several applications system-wide;");
             eprintln!(
                 "            transport is per-CPU ring shards — --shards defaults to the \
@@ -116,7 +129,8 @@ fn cmd_run(args: &Args, threads: usize, seed: u64) -> anyhow::Result<()> {
 }
 
 /// Shared `GappConfig` flags (`profile` and `live`), validated at parse
-/// time: zero values get a real error naming the flag.
+/// time: zero values get a real error naming the flag, and `--format`
+/// is restricted to the sink backends that exist.
 fn gapp_config_from(args: &Args) -> anyhow::Result<GappConfig> {
     let mut gcfg = GappConfig::default();
     if let Some(nmin) = args.get("nmin") {
@@ -130,7 +144,25 @@ fn gapp_config_from(args: &Args) -> anyhow::Result<GappConfig> {
     if args.get("shards").is_some() {
         gcfg.shards = Some(args.opt_min1("shards", 0).map_err(bad)? as usize);
     }
+    let format = args
+        .opt_choice("format", &ReportFormat::NAMES, ReportFormat::Text.name())
+        .map_err(bad)?;
+    gcfg.format = ReportFormat::from_name(&format).expect("opt_choice vetted the name");
+    gcfg.output = args.get("output").map(String::from);
     Ok(gcfg)
+}
+
+/// Open the sink the config asks for: `--format` picks the backend,
+/// `--output` the destination (stdout when absent).
+fn report_sink(gcfg: &GappConfig) -> anyhow::Result<Box<dyn ReportSink>> {
+    let w: Box<dyn std::io::Write> = match &gcfg.output {
+        Some(path) => Box::new(
+            std::fs::File::create(path)
+                .with_context(|| format!("cannot create --output {path:?}"))?,
+        ),
+        None => Box::new(std::io::stdout()),
+    };
+    Ok(sink::for_writer(gcfg.format, w))
 }
 
 fn cmd_profile(args: &Args, engine: EngineKind, threads: usize, seed: u64) -> anyhow::Result<()> {
@@ -138,13 +170,20 @@ fn cmd_profile(args: &Args, engine: EngineKind, threads: usize, seed: u64) -> an
     let app = apps::by_name(&name, threads, seed)
         .ok_or_else(|| anyhow::anyhow!("unknown app {name:?} (try list-apps)"))?;
     let gcfg = gapp_config_from(args)?;
-    let (report, _) = profile(&app, KernelConfig::default(), gcfg, engine.make()?)?;
-    println!("{report}");
+    let sink = report_sink(&gcfg)?;
+    Session::builder(engine.make()?)
+        .kernel(KernelConfig::default())
+        .config(gcfg)
+        .app(&app)
+        .sink(sink)
+        .run()?;
     Ok(())
 }
 
 /// The streaming analyzer: epoch-windowed per-window top-K, optionally
 /// over several applications sharing the kernel (system-wide mode).
+/// All rendering — per-window lines, the final header, the cumulative
+/// sketch, the lossy-run note — happens in the attached sink.
 fn cmd_live(args: &Args, engine: EngineKind, threads: usize, seed: u64) -> anyhow::Result<()> {
     let mut names: Vec<String> =
         args.get_all("app").into_iter().map(String::from).collect();
@@ -166,33 +205,16 @@ fn cmd_live(args: &Args, engine: EngineKind, threads: usize, seed: u64) -> anyho
         top_k: args.opt_min1("top", 5).map_err(bad)? as usize,
         sketch_entries: args.opt_min1("sketch", 64).map_err(bad)? as usize,
     };
-    let run = run_live(
-        &apps,
-        KernelConfig::default(),
-        gcfg,
-        engine.make()?,
-        lcfg,
-        |w| print!("{w}"),
-    )?;
-    println!();
-    println!("== final (merged from {} windows) ==", run.windows.len());
-    print!("{}", run.report);
-    if !run.sketch_lines.is_empty() {
-        println!();
-        println!(
-            "cumulative top-{} (space-saving sketch; counts are upper bounds):",
-            run.sketch_lines.len()
-        );
-        for l in &run.sketch_lines {
-            println!("  {l}");
-        }
+    let sink = report_sink(&gcfg)?;
+    let mut session = Session::builder(engine.make()?)
+        .kernel(KernelConfig::default())
+        .config(gcfg)
+        .live(lcfg)
+        .sink(sink);
+    for app in &apps {
+        session = session.app(app);
     }
-    let lossy: u64 = run.windows.iter().map(|w| w.drops).sum();
-    if lossy > 0 {
-        println!(
-            "note: {lossy} ring drops occurred; see per-window attribution above"
-        );
-    }
+    session.run()?;
     Ok(())
 }
 

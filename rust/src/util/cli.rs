@@ -105,6 +105,27 @@ impl Args {
         self.get(key).unwrap_or(default).to_string()
     }
 
+    /// String option restricted to a fixed choice set (`--format
+    /// text|json|jsonl`). Anything outside the set is a parse-time
+    /// error naming the flag and the accepted values — not a silent
+    /// fallback to the default.
+    pub fn opt_choice(
+        &self,
+        key: &str,
+        choices: &[&str],
+        default: &str,
+    ) -> Result<String, String> {
+        debug_assert!(choices.contains(&default));
+        match self.get(key) {
+            None => Ok(default.to_string()),
+            Some(v) if choices.contains(&v) => Ok(v.to_string()),
+            Some(v) => Err(format!(
+                "--{key} must be one of {} (got {v:?})",
+                choices.join("|")
+            )),
+        }
+    }
+
     /// First positional (the subcommand), if any.
     pub fn subcommand(&self) -> Option<&str> {
         self.positional.first().map(|s| s.as_str())
@@ -165,6 +186,27 @@ mod tests {
         assert_eq!(a.opt_min1("absent", 7), Ok(7));
         let err = a.opt_min1("shards", 1).unwrap_err();
         assert!(err.contains("--shards"), "{err}");
+    }
+
+    #[test]
+    fn opt_choice_accepts_the_set_and_rejects_the_rest() {
+        let a = parse(&["profile", "--format", "json"]);
+        assert_eq!(
+            a.opt_choice("format", &["text", "json", "jsonl"], "text"),
+            Ok("json".to_string())
+        );
+        // Absent → default.
+        assert_eq!(
+            a.opt_choice("other", &["x", "y"], "x"),
+            Ok("x".to_string())
+        );
+        let a = parse(&["profile", "--format", "xml"]);
+        let err = a
+            .opt_choice("format", &["text", "json", "jsonl"], "text")
+            .unwrap_err();
+        assert!(err.contains("--format"), "{err}");
+        assert!(err.contains("text|json|jsonl"), "{err}");
+        assert!(err.contains("xml"), "{err}");
     }
 
     #[test]

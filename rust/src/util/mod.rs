@@ -10,6 +10,7 @@ pub mod bench;
 pub mod check;
 pub mod fxhash;
 pub mod densemap;
+pub mod json;
 
 pub use densemap::PidMap;
 pub use fxhash::{BuildFxHasher, FxHashMap, FxHashSet, FxHasher};

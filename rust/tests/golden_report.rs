@@ -10,6 +10,10 @@
 //!    frames — recomputed independently from the raw slices against the
 //!    kernel stack map (semantic golden: interning is lossless).
 
+// The deprecated `profile` wrapper stays under golden coverage: it must
+// keep producing byte-identical results to the Session it delegates to.
+#![allow(deprecated)]
+
 use std::collections::BTreeMap;
 
 use gapp::gapp::{profile, GappConfig, GappSession};

@@ -4,6 +4,10 @@
 //! proptest is unavailable in the offline registry; failures report the
 //! case seed for reproduction.
 
+// `profile` is a deprecated thin wrapper over `Session` now; these
+// tests keep exercising it so the compatibility surface stays covered.
+#![allow(deprecated)]
+
 use gapp::gapp::{profile, run_unprofiled, GappConfig};
 use gapp::runtime::{analysis, AnalysisEngine};
 use gapp::simkernel::{Kernel, KernelConfig};

@@ -1,0 +1,281 @@
+//! Sink-subsystem goldens: the output seam must not move a byte.
+//!
+//! 1. `HumanSink` is byte-identical to the pre-sink CLI — batch
+//!    (`println!("{report}")`) and live (windows as they close + final
+//!    header + cumulative sketch + lossy note), `--shards 1` and
+//!    `--shards 4`.
+//! 2. JSON round-trip: a `JsonSink` document parsed back through
+//!    `report_from_json` re-renders *byte-identically* to the direct
+//!    text golden of the same run.
+//! 3. JSONL: concatenating the live window events reconstructs
+//!    `Report::window_drops` exactly, drop for drop.
+//! 4. The deprecated wrappers (`profile`, `run_live`) stay equivalent
+//!    to the `Session` driver they delegate to.
+
+// (4) exercises the deprecated wrappers on purpose.
+#![allow(deprecated)]
+
+use std::cell::RefCell;
+use std::io;
+use std::rc::Rc;
+
+use gapp::gapp::sink::human::{render_live_tail, render_report, render_window};
+use gapp::gapp::sink::{
+    report_from_json, FinalEvent, FnSink, HumanSink, JsonSink, JsonlSink, ReportEvent,
+};
+use gapp::gapp::stream::{run_live, LiveConfig};
+use gapp::gapp::{profile, GappConfig, Report, Session};
+use gapp::runtime::AnalysisEngine;
+use gapp::simkernel::KernelConfig;
+use gapp::util::json::Json;
+use gapp::workload::apps;
+
+/// An `io::Write` the test can read back after the session consumed
+/// the sink.
+#[derive(Clone, Default)]
+struct SharedBuf(Rc<RefCell<Vec<u8>>>);
+
+impl SharedBuf {
+    fn take_string(&self) -> String {
+        String::from_utf8(std::mem::take(&mut *self.0.borrow_mut())).unwrap()
+    }
+}
+
+impl io::Write for SharedBuf {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        self.0.borrow_mut().extend_from_slice(buf);
+        Ok(buf.len())
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        Ok(())
+    }
+}
+
+/// Zero host-timing fields so two *separate* fixed-seed runs compare
+/// exactly (within one run nothing needs normalizing).
+fn normalize(r: &mut Report) {
+    r.ppt_seconds = 0.0;
+    r.memory_bytes = 0;
+}
+
+#[test]
+fn batch_human_sink_is_byte_identical_to_println_of_the_report() {
+    for shards in [1usize, 4] {
+        let app = apps::canneal(8, 5);
+        let buf = SharedBuf::default();
+        let out = Session::builder(AnalysisEngine::native())
+            .config(GappConfig {
+                shards: Some(shards),
+                ..Default::default()
+            })
+            .app(&app)
+            .sink(HumanSink::new(buf.clone()))
+            .run()
+            .unwrap();
+        // Exactly what `println!("{report}")` printed before sinks.
+        assert_eq!(
+            buf.take_string(),
+            format!("{}\n", out.report),
+            "--shards {shards}: HumanSink drifted from the batch golden"
+        );
+    }
+}
+
+#[test]
+fn live_human_sink_is_byte_identical_to_the_old_cli_assembly() {
+    for shards in [1usize, 4] {
+        let app = apps::canneal(8, 5);
+        let buf = SharedBuf::default();
+        // Collect the window renderings through a tee'd callback sink —
+        // the pre-sink CLI printed each window with `print!("{w}")`.
+        let windows_text = Rc::new(RefCell::new(String::new()));
+        let wt = windows_text.clone();
+        let out = Session::builder(AnalysisEngine::native())
+            .config(GappConfig {
+                shards: Some(shards),
+                ..Default::default()
+            })
+            .app(&app)
+            .live(LiveConfig {
+                window_ns: 2_000_000,
+                ..Default::default()
+            })
+            .sink(HumanSink::new(buf.clone()))
+            .sink(FnSink(|ev: &ReportEvent<'_>| {
+                if let ReportEvent::WindowClosed(w) = ev {
+                    wt.borrow_mut().push_str(&w.to_string());
+                }
+            }))
+            .run()
+            .unwrap();
+        assert!(out.windows.len() > 1, "need a multi-window run");
+        // Reassemble what the pre-sink `cmd_live` printed.
+        let mut expected = windows_text.borrow().clone();
+        expected.push_str(&render_live_tail(&FinalEvent {
+            report: &out.report,
+            windows: &out.windows,
+            sketch_top: &out.sketch_top,
+            sketch_lines: &out.sketch_lines,
+        }));
+        assert_eq!(
+            buf.take_string(),
+            expected,
+            "--shards {shards}: HumanSink drifted from the live golden"
+        );
+        // The tail itself matches the historical line-by-line format.
+        assert!(expected.contains(&format!(
+            "\n== final (merged from {} windows) ==\n",
+            out.windows.len()
+        )));
+        assert!(expected
+            .contains("cumulative top-"));
+    }
+}
+
+#[test]
+fn json_round_trip_re_renders_to_the_text_golden() {
+    // The satellite golden: JsonSink output for the fixed-seed canneal
+    // profile, re-rendered through the HumanSink logic, must byte-match
+    // the direct text golden of the same run.
+    let app = apps::canneal(8, 5);
+    let buf = SharedBuf::default();
+    let out = Session::builder(AnalysisEngine::native())
+        .app(&app)
+        .sink(JsonSink::new(buf.clone()))
+        .run()
+        .unwrap();
+    let doc = Json::parse(&buf.take_string()).expect("JsonSink emits valid JSON");
+    assert_eq!(doc.get("schema").unwrap().as_u64(), Some(1));
+    assert_eq!(doc.get("type").unwrap().as_str(), Some("gapp.session"));
+    assert_eq!(
+        doc.get("runtime_ns").unwrap().as_u64(),
+        Some(out.runtime_ns)
+    );
+    assert_eq!(
+        doc.get("session")
+            .and_then(|s| s.get("mode"))
+            .and_then(|m| m.as_str()),
+        Some("batch")
+    );
+    let rt = report_from_json(doc.get("report").unwrap()).unwrap();
+    assert_eq!(
+        render_report(&rt),
+        render_report(&out.report),
+        "JSON round-trip changed the rendered report"
+    );
+    // Fields the renderer elides must round-trip too.
+    assert_eq!(rt.runtime_ns, out.report.runtime_ns);
+    assert_eq!(rt.probe_cost_ns, out.report.probe_cost_ns);
+    assert_eq!(rt.intervals, out.report.intervals);
+    assert_eq!(rt.window_drops, out.report.window_drops);
+}
+
+#[test]
+fn jsonl_window_events_reconstruct_window_drops_exactly() {
+    // Tiny single ring + disabled mid-epoch drain forces overflow, so
+    // the per-window drop attribution is non-trivial (some windows
+    // lossy, some not).
+    let app = apps::canneal(8, 5);
+    let buf = SharedBuf::default();
+    let out = Session::builder(AnalysisEngine::native())
+        .config(GappConfig {
+            ring_capacity: 64,
+            shards: Some(1),
+            drain_threshold: usize::MAX,
+            ..Default::default()
+        })
+        .app(&app)
+        .live(LiveConfig {
+            window_ns: 5_000_000,
+            ..Default::default()
+        })
+        .sink(JsonlSink::new(buf.clone()))
+        .run()
+        .unwrap();
+    assert!(
+        out.report.ring_dropped > 0,
+        "the forced-overflow setup stopped overflowing"
+    );
+    let text = buf.take_string();
+    let mut events: Vec<Json> = Vec::new();
+    for line in text.lines() {
+        let v = Json::parse(line).expect("every JSONL line parses alone");
+        assert_eq!(v.get("schema").unwrap().as_u64(), Some(1));
+        events.push(v);
+    }
+    // Framing: session_start, windows…, final, session_end.
+    let kinds: Vec<&str> = events
+        .iter()
+        .map(|e| e.get("event").unwrap().as_str().unwrap())
+        .collect();
+    assert_eq!(kinds.first(), Some(&"session_start"));
+    assert_eq!(kinds.last(), Some(&"session_end"));
+    assert_eq!(kinds[kinds.len() - 2], "final");
+    // Concatenated window events reconstruct Report::window_drops.
+    let drops: Vec<u64> = events
+        .iter()
+        .filter(|e| e.get("event").unwrap().as_str() == Some("window"))
+        .map(|e| {
+            e.get("window")
+                .and_then(|w| w.get("drops"))
+                .and_then(|d| d.as_u64())
+                .unwrap()
+        })
+        .collect();
+    assert_eq!(
+        drops, out.report.window_drops,
+        "JSONL window stream disagrees with the report's attribution"
+    );
+    // And the embedded final report round-trips those same drops.
+    let final_ev = &events[events.len() - 2];
+    let rt = report_from_json(final_ev.get("report").unwrap()).unwrap();
+    assert_eq!(rt.window_drops, out.report.window_drops);
+    assert_eq!(render_report(&rt), render_report(&out.report));
+}
+
+#[test]
+fn deprecated_wrappers_match_the_session_driver() {
+    // profile() is now a wrapper over Session: same fixed seed, same
+    // (normalized) report.
+    let (mut a, _) = profile(
+        &apps::canneal(8, 5),
+        KernelConfig::default(),
+        GappConfig::default(),
+        AnalysisEngine::native(),
+    )
+    .unwrap();
+    let app = apps::canneal(8, 5);
+    let mut b = Session::builder(AnalysisEngine::native())
+        .app(&app)
+        .run()
+        .unwrap()
+        .report;
+    normalize(&mut a);
+    normalize(&mut b);
+    assert_eq!(a.to_string(), b.to_string());
+
+    // run_live() relays every WindowClosed event to its callback.
+    let app = apps::canneal(8, 5);
+    let mut seen: Vec<String> = Vec::new();
+    let run = run_live(
+        std::slice::from_ref(&app),
+        KernelConfig::default(),
+        GappConfig::default(),
+        AnalysisEngine::native(),
+        LiveConfig {
+            window_ns: 2_000_000,
+            ..Default::default()
+        },
+        |w| seen.push(render_window(w)),
+    )
+    .unwrap();
+    assert_eq!(seen.len(), run.windows.len());
+    assert!(seen.len() > 1);
+    let mut c = run.report;
+    normalize(&mut c);
+    c.window_drops = Vec::new();
+    let mut d = b;
+    d.window_drops = Vec::new();
+    assert_eq!(c.to_string(), d.to_string());
+}
