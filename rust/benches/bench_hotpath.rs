@@ -15,7 +15,7 @@
 
 use gapp::ebpf::{RingBuf, ShardedRing, StackMap};
 use gapp::gapp::records::{mask_set, Record, SlotMask};
-use gapp::gapp::{profile, GappConfig};
+use gapp::gapp::{profile, GappConfig, MergeStrategy};
 use gapp::runtime::{analysis, AnalysisEngine, BATCH, T_SLOTS};
 use gapp::simkernel::{KernelConfig, TaskState, WaitKind};
 use gapp::util::bench::{sink, Bench};
@@ -77,27 +77,40 @@ fn main() {
     // analyzer in 5 ms epoch windows (drain + window merge + per-window
     // top-K each epoch). Compare against profile_canneal_16t_end_to_end
     // to read the streaming overhead directly from BENCH_hotpath.json.
-    b.bench("live_canneal_16t_w5ms_end_to_end", || {
-        let app = apps::canneal(16, 3);
-        let run = gapp::gapp::stream::run_live(
-            std::slice::from_ref(&app),
-            KernelConfig::default(),
-            GappConfig::default(),
-            AnalysisEngine::native(),
-            gapp::gapp::stream::LiveConfig {
-                window_ns: 5_000_000,
-                ..Default::default()
-            },
-            |w| sink(w.top.len()),
-        )
-        .unwrap();
-        sink(run.report.runtime_ns);
-    });
+    // This historical row measures the *serial* consumer (its numbers
+    // predate the merge tree); the `_merge_tree` row next to it is the
+    // same run through shard-local folding + the pairwise tree, so the
+    // strategy cost reads directly from the pair.
+    for (name, merge) in [
+        ("live_canneal_16t_w5ms_end_to_end", MergeStrategy::Serial),
+        ("live_canneal_16t_w5ms_merge_tree", MergeStrategy::Tree),
+    ] {
+        b.bench(name, || {
+            let app = apps::canneal(16, 3);
+            let run = gapp::gapp::stream::run_live(
+                std::slice::from_ref(&app),
+                KernelConfig::default(),
+                GappConfig {
+                    merge,
+                    ..Default::default()
+                },
+                AnalysisEngine::native(),
+                gapp::gapp::stream::LiveConfig {
+                    window_ns: 5_000_000,
+                    ..Default::default()
+                },
+                |w| sink(w.top.len()),
+            )
+            .unwrap();
+            sink(run.report.runtime_ns);
+        });
+    }
 
     // Sharded vs single-ring end-to-end pair: same run, transport forced
     // to one shared ring vs 4 per-CPU shards. The outputs are provably
     // byte-identical (golden-tested); this row pair tracks the *cost* of
-    // the per-shard routing + timestamp-merge drain across PRs.
+    // the per-shard routing + timestamp-merge drain across PRs (serial
+    // strategy — the merge-tree rows above track the other consumer).
     for (name, shards) in [
         ("live_canneal_16t_w5ms_ring1_end_to_end", 1usize),
         ("live_canneal_16t_w5ms_shards4_end_to_end", 4),
@@ -109,6 +122,7 @@ fn main() {
                 KernelConfig::default(),
                 GappConfig {
                     shards: Some(shards),
+                    merge: MergeStrategy::Serial,
                     ..Default::default()
                 },
                 AnalysisEngine::native(),
@@ -220,6 +234,45 @@ fn main() {
             sink(gapp::gapp::stream::merge_snapshots(
                 windows.iter().map(|w| w.as_slice()),
             ));
+        });
+    }
+
+    // The pairwise merge-tree primitive on its own: combine 8 shard
+    // partials (16 paths each, half shared across shards) into one
+    // canonical window snapshot — the per-window cross-shard work the
+    // tree consumer performs in place of the serial k-way record merge.
+    {
+        use gapp::gapp::userspace::{PathAccumulator, SliceEntry};
+        let mk_partial = |shard: u64| {
+            let mut acc = PathAccumulator::new();
+            for i in 0..256u64 {
+                acc.add_slice(
+                    &SliceEntry {
+                        ts_id: i * 8 + shard,
+                        pid: (i % 16) as u32,
+                        cm_ns: 900.0 + i as f64,
+                        threads_av: 1.0,
+                        // Ids 0..8 appear on every shard, 8..16 are
+                        // shard-private: both merge paths exercised.
+                        stack_id: ((i % 8) + (i % 2) * (8 + shard)) as u32,
+                        addrs: vec![0x40_0000 + (i % 32) * 8],
+                        from_stack_top: false,
+                        wait: WaitKind::Futex,
+                        woken_by: 0,
+                    },
+                    0,
+                );
+            }
+            acc.take_paths()
+        };
+        let partials: Vec<Vec<gapp::gapp::userspace::MergedPath>> =
+            (0..8).map(mk_partial).collect();
+        // merge_tree consumes its input, so each iteration pays one
+        // clone of the partials alongside the merge itself — the row is
+        // an upper bound on the per-window cross-shard cost (constant
+        // bias across PRs; regressions in the merge still move it).
+        b.bench_items("window_merge_pairwise_S8", 8, || {
+            sink(gapp::gapp::stream::merge_tree(partials.clone()));
         });
     }
 

@@ -259,6 +259,12 @@ impl<T> ShardedRing<T> {
     /// draining to empty replays records exactly in production order —
     /// the property the sharded-vs-single-ring golden tests pin down.
     pub fn pop_global_stamped(&mut self) -> Option<Stamped<T>> {
+        // One shard: per-shard FIFO order *is* the global order — skip
+        // the cross-shard head scan (the `--shards 1` batch path used
+        // to pay it on every single pop).
+        if self.shards.len() == 1 {
+            return self.shards[0].pop();
+        }
         let mut best: Option<(usize, (u64, u64))> = None;
         for (i, s) in self.shards.iter().enumerate() {
             if let Some(head) = s.peek() {
@@ -285,6 +291,13 @@ impl<T> ShardedRing<T> {
     /// O(records · shards). The tiny head-heap (≤ shards entries) is
     /// the only allocation, amortized over the whole drain.
     pub fn drain_global(&mut self, mut f: impl FnMut(T)) {
+        // One shard: the FIFO already is the global stream — no heap.
+        if self.shards.len() == 1 {
+            while let Some(s) = self.shards[0].pop() {
+                f(s.rec);
+            }
+            return;
+        }
         use std::cmp::Reverse;
         let mut heads: std::collections::BinaryHeap<Reverse<(u64, u64, usize)>> =
             std::collections::BinaryHeap::with_capacity(self.shards.len());
@@ -299,6 +312,18 @@ impl<T> ShardedRing<T> {
             if let Some(h) = self.shards[i].peek() {
                 heads.push(Reverse((h.t, h.seq, i)));
             }
+        }
+    }
+
+    /// Drain *one shard* to empty, invoking `f` on each stamped record
+    /// in that shard's FIFO (= capture) order. No cross-shard ordering
+    /// is established — this is the shard-local fold path of the merge
+    /// tree (`MergeStrategy::Tree`), where each shard's consumer folds
+    /// its own stream and only the order-sensitive record subset is
+    /// re-merged globally at window close.
+    pub fn drain_shard(&mut self, i: usize, mut f: impl FnMut(Stamped<T>)) {
+        while let Some(s) = self.shards[i].pop() {
+            f(s);
         }
     }
 
@@ -503,6 +528,48 @@ mod tests {
         b.push(7, 99, 1234); // cpu 7 → shard 2
         assert_eq!(b.len_for_cpu(7), 1);
         assert_eq!(b.len_for_cpu(0), 0);
+    }
+
+    #[test]
+    fn single_shard_fast_path_matches_the_general_drain() {
+        // `--shards 1` skips the head scan / merge heap entirely; the
+        // observable behaviour (order, stats) must be unchanged.
+        let fill = |sr: &mut ShardedRing<u32>| {
+            for i in 0..20u64 {
+                sr.push(0, i / 2, i as u32);
+            }
+        };
+        let mut a: ShardedRing<u32> = ShardedRing::new(1, 32);
+        fill(&mut a);
+        let mut popped = Vec::new();
+        while let Some(r) = a.pop_global() {
+            popped.push(r);
+        }
+        assert_eq!(popped, (0..20).collect::<Vec<u32>>());
+        let mut b: ShardedRing<u32> = ShardedRing::new(1, 32);
+        fill(&mut b);
+        let mut drained = Vec::new();
+        b.drain_global(|r| drained.push(r));
+        assert_eq!(drained, popped);
+        assert_eq!(b.stats().drained, 20);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn drain_shard_preserves_fifo_and_counts_drained() {
+        let mut sr: ShardedRing<u32> = ShardedRing::new(3, 8);
+        // Shard 1 (cpu 1) receives 2, then 0; shard 0 receives 1.
+        sr.push(1, 10, 2);
+        sr.push(0, 11, 1);
+        sr.push(1, 12, 0);
+        let mut seen = Vec::new();
+        sr.drain_shard(1, |s| seen.push((s.t, s.rec)));
+        // Shard order, not global order — and the stamps ride along.
+        assert_eq!(seen, vec![(10, 2), (12, 0)]);
+        assert_eq!(sr.shard(1).stats.drained, 2);
+        assert_eq!(sr.shard(0).len(), 1, "other shards untouched");
+        sr.drain_shard(0, |_| {});
+        assert!(sr.is_empty());
     }
 
     #[test]

@@ -114,6 +114,7 @@ mod tests {
             stack_id: 0,
             cm_fs: 1_000_000,
             total_cm_ns: 1.0,
+            first_seen: u64::MAX,
             slices: waits.iter().map(|(_, n)| n).sum(),
             addr_freq: FxHashMap::default(),
             stack_top_samples: 0,

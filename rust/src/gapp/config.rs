@@ -37,6 +37,45 @@ impl ReportFormat {
     }
 }
 
+/// How window (and batch) aggregation combines the per-CPU ring shards
+/// (`--merge`): through one globally re-serialized record stream, or
+/// through shard-local partial accumulators merged pairwise.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum MergeStrategy {
+    /// K-way merge every shard back into one `(time, seq)`-ordered
+    /// stream and fold it through a single accumulator — the pre-tree
+    /// consumer, kept as the equivalence oracle.
+    Serial,
+    /// Fold each shard's records in shard order into a shard-local
+    /// accumulator; combine the partials through a pairwise merge tree
+    /// at window close. Only the order-sensitive activity-matrix
+    /// records still cross shards in `(time, seq)` order. Provably
+    /// byte-identical to `Serial` (golden-tested), scales with the
+    /// shard count instead of funnelling through one merge point.
+    #[default]
+    Tree,
+}
+
+impl MergeStrategy {
+    /// Accepted `--merge` values, in display order.
+    pub const NAMES: [&'static str; 2] = ["serial", "tree"];
+
+    pub fn from_name(name: &str) -> Option<MergeStrategy> {
+        match name {
+            "serial" => Some(MergeStrategy::Serial),
+            "tree" => Some(MergeStrategy::Tree),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            MergeStrategy::Serial => "serial",
+            MergeStrategy::Tree => "tree",
+        }
+    }
+}
+
 /// Profiler configuration (§5.1 defaults).
 #[derive(Clone, Debug)]
 pub struct GappConfig {
@@ -72,6 +111,11 @@ pub struct GappConfig {
     /// least this many records (the paper's concurrent user probe; the
     /// watermark is per shard, like a real per-CPU buffer's wakeup).
     pub drain_threshold: usize,
+    /// Shard-aggregation strategy (CLI `--merge serial|tree`): how the
+    /// per-CPU ring shards reach the window/batch accumulators. The
+    /// strategies render byte-identical reports; `Serial` is kept as
+    /// the equivalence oracle and for A/B benching.
+    pub merge: MergeStrategy,
     /// Report output format (CLI `--format text|json|jsonl`). Only the
     /// CLI consults this — library callers attach sinks directly.
     pub format: ReportFormat,
@@ -91,6 +135,7 @@ impl Default for GappConfig {
             stack_map_entries: 1 << 14,
             stack_lru: false,
             drain_threshold: 1 << 14,
+            merge: MergeStrategy::Tree,
             format: ReportFormat::Text,
             output: None,
         }
@@ -148,6 +193,7 @@ mod tests {
         assert_eq!(c.dt, 3_000_000);
         assert!(c.nmin.is_none());
         assert!(c.shards.is_none()); // per-CPU perf buffers by default
+        assert_eq!(c.merge, MergeStrategy::Tree); // shard-local folding
         assert_eq!(c.format, ReportFormat::Text);
         assert!(c.output.is_none());
         assert!(c.validate().is_ok());
@@ -161,6 +207,16 @@ mod tests {
         }
         assert!(ReportFormat::from_name("xml").is_none());
         assert_eq!(ReportFormat::default(), ReportFormat::Text);
+    }
+
+    #[test]
+    fn merge_strategy_names_round_trip() {
+        for name in MergeStrategy::NAMES {
+            let m = MergeStrategy::from_name(name).unwrap();
+            assert_eq!(m.name(), name);
+        }
+        assert!(MergeStrategy::from_name("bogus").is_none());
+        assert_eq!(MergeStrategy::default(), MergeStrategy::Tree);
     }
 
     #[test]

@@ -44,7 +44,7 @@ use crate::workload::{App, SymbolTable};
 
 use userspace::MergedPath;
 
-pub use config::{GappConfig, ReportFormat};
+pub use config::{GappConfig, MergeStrategy, ReportFormat};
 pub use report::{Bottleneck, Report, SampleLine, ThreadCm};
 pub use session::{Session, SessionOutput};
 
@@ -52,18 +52,59 @@ pub use session::{Session, SessionOutput};
 pub struct GappCore {
     pub kernel: probes::KernelProbes,
     pub user: userspace::UserProbe,
+    /// Shard-local consumer lanes — `Some` under
+    /// [`MergeStrategy::Tree`], where each ring shard drains into its
+    /// own lane (slice records fold shard-locally, matrix records queue
+    /// for the window-close re-merge). `None` under
+    /// [`MergeStrategy::Serial`], where every drain k-way-merges the
+    /// shards straight into [`GappCore::user`].
+    pub lanes: Option<userspace::ShardLanes>,
 }
 
 impl GappCore {
     /// Move buffered records from the per-CPU ring shards into the
-    /// user-space engine (the paper's concurrently-running user probe).
-    /// Drains all shards in one k-way merge, re-establishing the global
-    /// record order from the capture timestamps — so a sharded
+    /// user-space consumer (the paper's concurrently-running user
+    /// probe). Serial strategy: one k-way merge re-establishes the
+    /// global record order from the capture timestamps, so the sharded
     /// transport feeds the analysis the exact sequence a single shared
-    /// ring would have.
+    /// ring would have. Tree strategy: each shard drains *in shard
+    /// order* into its own lane — no cross-shard comparisons at all;
+    /// the order-sensitive matrix substream is re-merged later, at
+    /// window close ([`userspace::ShardLanes::feed_matrix_into`]).
     pub fn drain(&mut self) {
-        let user = &mut self.user;
-        self.kernel.rings.drain_global(|rec| user.consume(rec));
+        match &mut self.lanes {
+            None => {
+                let user = &mut self.user;
+                self.kernel.rings.drain_global(|rec| user.consume(rec));
+            }
+            Some(lanes) => {
+                for i in 0..self.kernel.rings.num_shards() {
+                    self.kernel.rings.drain_shard(i, |rec| lanes.route(i, rec));
+                }
+            }
+        }
+    }
+
+    /// The watermark-triggered drain on the probe hot path. `cpu` is
+    /// the CPU whose push crossed the threshold: under the tree
+    /// strategy only that CPU's shard is drained (targeted relief — the
+    /// other shards' readers are independent, like real per-CPU perf
+    /// buffers); the serial strategy keeps its historical behaviour of
+    /// draining everything through the global merge.
+    pub fn drain_watermark(&mut self, cpu: usize) {
+        match &mut self.lanes {
+            None => self.drain(),
+            Some(lanes) => {
+                let i = cpu % self.kernel.rings.num_shards();
+                self.kernel.rings.drain_shard(i, |rec| lanes.route(i, rec));
+            }
+        }
+    }
+
+    /// Consumer-side memory estimate (user probe + shard lanes).
+    pub fn consumer_memory_bytes(&self) -> u64 {
+        self.user.memory_bytes()
+            + self.lanes.as_ref().map_or(0, |l| l.memory_bytes())
     }
 }
 
@@ -84,7 +125,7 @@ impl Probe for GappProbeHandle {
         // the shard this event pushed to can have grown, so one O(1)
         // length probe suffices.
         if core.kernel.rings.len_for_cpu(ev.cpu()) >= core.kernel.cfg.drain_threshold {
-            core.drain();
+            core.drain_watermark(ev.cpu());
         }
         cost
     }
@@ -104,8 +145,14 @@ impl GappSession {
     pub fn new(cfg: GappConfig, ncpu: usize, engine: AnalysisEngine) -> Result<GappSession> {
         let kernel = probes::KernelProbes::new(cfg.clone(), ncpu)?;
         let user = userspace::UserProbe::new(engine);
+        let lanes = match cfg.merge {
+            MergeStrategy::Serial => None,
+            MergeStrategy::Tree => {
+                Some(userspace::ShardLanes::new(kernel.rings.num_shards()))
+            }
+        };
         Ok(GappSession {
-            core: Rc::new(RefCell::new(GappCore { kernel, user })),
+            core: Rc::new(RefCell::new(GappCore { kernel, user, lanes })),
             cfg,
         })
     }
@@ -120,12 +167,37 @@ impl GappSession {
 
     /// Post-process after the run: drain, merge, rank, symbolize.
     /// `runtime_ns` is the profiled run's simulated end time.
+    ///
+    /// Batch profiling is the one-window special case, so the merge
+    /// strategy applies here too: under `Tree` each lane's slices fold
+    /// into a shard-local accumulator and the partials combine through
+    /// the pairwise merge tree — rendering byte-identically to the
+    /// serial global-stream merge (golden-tested).
     pub fn finish(&self, app: &App, kernel: &Kernel, runtime_ns: u64) -> Report {
         let ppt_start = Instant::now();
         let mut core = self.core.borrow_mut();
         core.drain();
-        core.user.flush_batch();
-        let merged = core.user.merge_and_rank(self.cfg.top_n);
+        let merged = if core.lanes.is_some() {
+            let c = &mut *core;
+            let lanes = c.lanes.as_mut().unwrap();
+            // Matrix records reach the analysis in global capture
+            // order; slices were already assembled shard-locally.
+            lanes.feed_matrix_into(&mut c.user);
+            c.user.flush_batch();
+            let mut parts = Vec::with_capacity(lanes.len());
+            for lane in lanes.iter_mut() {
+                let mut acc = userspace::PathAccumulator::new();
+                for s in lane.asm.slices.drain(..) {
+                    acc.add_slice(&s, 0);
+                }
+                parts.push(acc.take_paths());
+            }
+            let merged = stream::merge_tree(parts);
+            c.user.rank_merged(&merged, self.cfg.top_n)
+        } else {
+            core.user.flush_batch();
+            core.user.merge_and_rank(self.cfg.top_n)
+        };
         let ctx = ReportCtx {
             label: app.name.clone(),
             syms: vec![(app.name.as_str(), app.symtab.as_ref())],
@@ -272,7 +344,7 @@ pub(crate) fn build_report(
         stack_drops: sstats.drops,
         stack_evictions: sstats.evictions,
         window_drops: ctx.window_drops,
-        memory_bytes: core.kernel.memory_bytes() + core.user.memory_bytes(),
+        memory_bytes: core.kernel.memory_bytes() + core.consumer_memory_bytes(),
         ppt_seconds: ppt_start.elapsed().as_secs_f64(),
         probe_cost_ns: kernel.stats.probe_ns,
         // Lazy query index; built on first samples_of/top_functions.

@@ -40,15 +40,17 @@ use crate::runtime::AnalysisEngine;
 use crate::simkernel::{Kernel, KernelConfig, RunOutcome};
 use crate::workload::App;
 
-use super::sink::{FinalEvent, ReportEvent, ReportSink, SessionInfo, SessionMode};
+use super::sink::{
+    FinalEvent, ReportEvent, ReportSink, SessionInfo, SessionMode, ShardWindowEvent,
+};
 use super::stream::live::live_lines;
 use super::stream::{
-    AppRegistry, LiveConfig, RegistryProbe, ShardedConsumer, SpaceSaving,
-    WindowAccumulator, WindowReport, WindowSummary,
+    merge_tree, AppRegistry, LiveConfig, RegistryProbe, ShardPartial,
+    ShardedConsumer, SpaceSaving, WindowAccumulator, WindowReport, WindowSummary,
 };
 use super::symbolize::Symbolizer;
 use super::userspace::{PathAccumulator, SliceEntry};
-use super::{build_report, GappConfig, GappSession, Report, ReportCtx};
+use super::{build_report, GappConfig, GappSession, MergeStrategy, Report, ReportCtx};
 
 /// Everything a finished session hands back to library callers —
 /// sinks receive the same data as events while the run progresses.
@@ -132,6 +134,24 @@ impl<'a> Session<'a> {
         self
     }
 
+    /// Shard-aggregation strategy (`GappConfig::merge`): `Tree`
+    /// (default) folds each ring shard locally and combines partials
+    /// through a pairwise merge tree; `Serial` re-serializes the shards
+    /// into one globally-ordered stream. Byte-identical output either
+    /// way — `Serial` exists as the oracle and for A/B benching.
+    pub fn merge(mut self, strategy: MergeStrategy) -> Self {
+        self.gcfg.merge = strategy;
+        self
+    }
+
+    /// Emit per-shard `ShardWindow` partial events before each window
+    /// closes (windowed tree sessions only; see
+    /// `LiveConfig::shard_partials`).
+    pub fn shard_partials(mut self, on: bool) -> Self {
+        self.lcfg.shard_partials = on;
+        self
+    }
+
     /// Attach a sink. Repeatable — every sink sees every event (the
     /// builder tees internally; [`super::sink::TeeSink`] exists for
     /// composing sinks outside the builder).
@@ -166,11 +186,23 @@ impl<'a> Session<'a> {
                     lcfg.sketch_entries >= 1,
                     "sketch_entries must be >= 1 (--sketch 0 cannot track anything)"
                 );
+                anyhow::ensure!(
+                    !(lcfg.shard_partials && gcfg.merge == MergeStrategy::Serial),
+                    "shard partials require the tree merge strategy \
+                     (--shard-partials needs --merge tree; the serial \
+                     consumer never forms per-shard partials)"
+                );
                 run_windowed(engine, kcfg, gcfg, lcfg, &apps, &mut sinks)
             } else {
                 anyhow::ensure!(
                     apps.len() == 1,
                     "system-wide (multi-app) profiling is windowed — set window_us(..)"
+                );
+                anyhow::ensure!(
+                    !lcfg.shard_partials,
+                    "shard partials are a windowed (live) feature — batch \
+                     sessions close no windows, so shard_partials(true) \
+                     would silently emit nothing; set window_us(..)"
                 );
                 run_batch(engine, kcfg, gcfg, apps[0], &mut sinks)
             }
@@ -260,6 +292,7 @@ fn run_windowed(
 ) -> Result<SessionOutput> {
     let top_n = gcfg.top_n;
     let stack_lru = gcfg.stack_lru;
+    let strategy = gcfg.merge;
     let shards = gcfg.shards.unwrap_or(kcfg.cpus);
     let session = GappSession::new(gcfg.clone(), kcfg.cpus, engine)?;
     let mut kernel = Kernel::new(kcfg);
@@ -324,20 +357,93 @@ fn run_windowed(
         let wr = {
             let mut core = session.core.borrow_mut();
             let estats = consumer.drain_epoch(&mut core);
-            scratch.clear();
-            core.user.drain_slices_into(&mut scratch);
-            {
-                let reg = registry.borrow();
-                for s in &scratch {
-                    wacc.add_slice(s, reg.app_of(s.pid));
+            // Tree + shard_partials: partials held back here until the
+            // window's id namespace is settled (LRU re-key below).
+            let mut pending_partials: Option<Vec<ShardPartial>> = None;
+            let (slices_in, mut snapshot) = match strategy {
+                // Serial: fold the globally re-ordered stream through
+                // one accumulator (the equivalence oracle).
+                MergeStrategy::Serial => {
+                    scratch.clear();
+                    core.user.drain_slices_into(&mut scratch);
+                    {
+                        let reg = registry.borrow();
+                        let app_of = reg.tagger();
+                        for s in &scratch {
+                            wacc.add_slice(s, app_of(s.pid));
+                        }
+                    }
+                    (wacc.slices_in, wacc.snapshot())
                 }
-            }
-            let slices_in = wacc.slices_in;
-            let mut snapshot = wacc.snapshot();
+                // Tree: each shard's folder closes its partial; the
+                // pairwise merge tree combines them — the only
+                // cross-shard work of the whole window, O(log S) deep.
+                MergeStrategy::Tree => {
+                    let parts = {
+                        let reg = registry.borrow();
+                        consumer.fold_partials(&mut core, reg.tagger())
+                    };
+                    let slices_in: u64 = parts.iter().map(|p| p.slices_in).sum();
+                    let merged = if lcfg.shard_partials {
+                        // Partials outlive the merge so they can be
+                        // emitted with window-stable ids below; the
+                        // path clones are paid only on this opt-in
+                        // transport path.
+                        pending_partials = Some(parts);
+                        merge_tree(
+                            pending_partials
+                                .as_ref()
+                                .unwrap()
+                                .iter()
+                                .map(|p| p.paths.clone())
+                                .collect(),
+                        )
+                    } else {
+                        merge_tree(parts.into_iter().map(|p| p.paths).collect())
+                    };
+                    (slices_in, merged)
+                }
+            };
+            // Under kernel-side LRU, re-key the snapshot into the
+            // stable userspace map while id → frames is still fresh,
+            // remembering the window's kernel→stable mapping so the
+            // emitted partials speak the same id namespace.
+            let mut id_remap: Option<crate::util::FxHashMap<u32, u32>> = None;
             if let Some(us) = user_stacks.as_mut() {
+                let mut m = crate::util::FxHashMap::default();
                 for p in &mut snapshot {
-                    let frames = core.kernel.stacks.resolve(p.stack_id);
+                    let old = p.stack_id;
+                    let frames = core.kernel.stacks.resolve(old);
                     p.stack_id = us.intern(frames);
+                    m.insert(old, p.stack_id);
+                }
+                id_remap = Some(m);
+            }
+            // Emit the per-shard partials (opt-in), after the re-key so
+            // a cross-process consumer never sees a recyclable kernel
+            // id: every partial path's id also appears in the merged
+            // snapshot, so the remap covers them all.
+            if let Some(parts) = pending_partials.take() {
+                for mut p in parts {
+                    if let Some(m) = id_remap.as_ref() {
+                        for path in &mut p.paths {
+                            if let Some(id) = m.get(&path.stack_id) {
+                                path.stack_id = *id;
+                            }
+                        }
+                    }
+                    let d = &estats.per_shard[p.shard];
+                    emit(
+                        sinks,
+                        &ReportEvent::ShardWindow(ShardWindowEvent {
+                            index: epoch,
+                            shard: p.shard,
+                            slices: p.slices_in,
+                            drained: d.drained,
+                            drops: d.dropped,
+                            paths: &p.paths,
+                        }),
+                    )?;
                 }
             }
             let ranked = core.user.rank_merged(&snapshot, lcfg.top_k);
@@ -474,6 +580,7 @@ mod tests {
                             assert!(i.window_ns.is_none());
                             "start"
                         }
+                        ReportEvent::ShardWindow(_) => "shard",
                         ReportEvent::WindowClosed(_) => "window",
                         ReportEvent::Final(fe) => {
                             assert!(fe.windows.is_empty());
@@ -524,6 +631,71 @@ mod tests {
     }
 
     #[test]
+    fn shard_partials_emit_per_shard_and_sum_to_the_window() {
+        let app = apps::canneal(8, 5);
+        // (window index, shard, slices) per ShardWindow; slices per
+        // WindowClosed — partials must cover each window exactly.
+        let log = Rc::new(RefCell::new((Vec::<(u64, usize, u64)>::new(), Vec::new())));
+        let l2 = log.clone();
+        Session::builder(AnalysisEngine::native())
+            .app(&app)
+            .window_us(2_000)
+            .shards(4)
+            .shard_partials(true)
+            .sink(FnSink(move |ev: &ReportEvent<'_>| {
+                let mut log = l2.borrow_mut();
+                match ev {
+                    ReportEvent::ShardWindow(sw) => {
+                        log.0.push((sw.index, sw.shard, sw.slices));
+                    }
+                    ReportEvent::WindowClosed(w) => log.1.push((w.index, w.slices)),
+                    _ => {}
+                }
+            }))
+            .run()
+            .unwrap();
+        let log = log.borrow();
+        assert!(!log.1.is_empty());
+        for (index, slices) in &log.1 {
+            let shard_events: Vec<_> =
+                log.0.iter().filter(|(i, _, _)| i == index).collect();
+            // One partial per shard, in shard order, before the window.
+            assert_eq!(shard_events.len(), 4, "window {index}");
+            for (j, (_, shard, _)) in shard_events.iter().enumerate() {
+                assert_eq!(*shard, j);
+            }
+            let sum: u64 = shard_events.iter().map(|(_, _, s)| s).sum();
+            assert_eq!(sum, *slices, "window {index}: partials must cover it");
+        }
+    }
+
+    #[test]
+    fn serial_and_tree_sessions_agree_on_the_report() {
+        let run_with = |strategy: MergeStrategy| {
+            let app = apps::canneal(8, 5);
+            Session::builder(AnalysisEngine::native())
+                .app(&app)
+                .window_us(2_000)
+                .shards(4)
+                .merge(strategy)
+                .run()
+                .unwrap()
+        };
+        let serial = run_with(MergeStrategy::Serial);
+        let tree = run_with(MergeStrategy::Tree);
+        assert_eq!(serial.runtime_ns, tree.runtime_ns);
+        assert_eq!(serial.windows.len(), tree.windows.len());
+        assert_eq!(serial.sketch_top, tree.sketch_top);
+        let mut a = serial.report;
+        let mut b = tree.report;
+        a.ppt_seconds = 0.0;
+        b.ppt_seconds = 0.0;
+        a.memory_bytes = 0;
+        b.memory_bytes = 0;
+        assert_eq!(a.to_string(), b.to_string());
+    }
+
+    #[test]
     fn sessions_reject_invalid_shapes() {
         let err = Session::builder(AnalysisEngine::native()).run().unwrap_err();
         assert!(err.to_string().contains("at least one app"));
@@ -536,5 +708,26 @@ mod tests {
             .run()
             .unwrap_err();
         assert!(err.to_string().contains("windowed"), "{err}");
+
+        // Requesting per-shard partials from the serial consumer would
+        // silently emit nothing — reject it instead.
+        let c = apps::by_name("mysql", 8, 7).unwrap();
+        let err = Session::builder(AnalysisEngine::native())
+            .app(&c)
+            .window_us(2_000)
+            .merge(MergeStrategy::Serial)
+            .shard_partials(true)
+            .run()
+            .unwrap_err();
+        assert!(err.to_string().contains("merge tree"), "{err}");
+
+        // ...and so would a batch session, which closes no windows.
+        let d = apps::by_name("mysql", 8, 7).unwrap();
+        let err = Session::builder(AnalysisEngine::native())
+            .app(&d)
+            .shard_partials(true)
+            .run()
+            .unwrap_err();
+        assert!(err.to_string().contains("windowed (live) feature"), "{err}");
     }
 }

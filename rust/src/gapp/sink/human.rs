@@ -221,6 +221,10 @@ impl<W: io::Write> ReportSink for HumanSink<W> {
             ReportEvent::SessionStart(info) => {
                 self.mode = info.mode;
             }
+            // Shard partials are a machine-transport payload; the text
+            // backend stays byte-identical to the pre-sink CLI whether
+            // or not they are enabled.
+            ReportEvent::ShardWindow(_) => {}
             ReportEvent::WindowClosed(wr) => {
                 self.w.write_all(render_window(wr).as_bytes())?;
             }

@@ -27,7 +27,7 @@ use crate::gapp::report::{Bottleneck, Report, SampleLine, ThreadCm};
 use crate::gapp::stream::WindowReport;
 use crate::util::json::Json;
 
-use super::{FinalEvent, ReportEvent, ReportSink, SessionInfo};
+use super::{FinalEvent, ReportEvent, ReportSink, SessionInfo, ShardWindowEvent};
 
 /// Schema version stamped on every document and JSONL line.
 pub const SCHEMA_VERSION: u64 = 1;
@@ -56,6 +56,7 @@ pub fn config_json(c: &GappConfig) -> Json {
         ("stack_map_entries", Json::usize(c.stack_map_entries)),
         ("stack_lru", Json::Bool(c.stack_lru)),
         ("drain_threshold", Json::usize(c.drain_threshold)),
+        ("merge", Json::str(c.merge.name())),
         ("format", Json::str(c.format.name())),
         ("output", opt_str(&c.output)),
     ])
@@ -71,6 +72,38 @@ pub fn session_info_json(s: &SessionInfo) -> Json {
         ("shards", Json::usize(s.shards)),
         ("window_ns", opt_u64(s.window_ns)),
         ("config", config_json(&s.config)),
+    ])
+}
+
+/// One shard's partial window aggregation (opt-in; tree strategy).
+/// Each path carries its associative aggregates plus the `first_seen`
+/// capture stamp, which is all a cross-process consumer needs to run
+/// the same pairwise merge (`stream::merge_tree`) over partials shipped
+/// from several producers: sums combine, stamps take the minimum, and
+/// the canonical order falls out of the stamps.
+pub fn shard_window_json(sw: &ShardWindowEvent<'_>) -> Json {
+    Json::obj(vec![
+        ("index", Json::u64(sw.index)),
+        ("shard", Json::usize(sw.shard)),
+        ("slices", Json::u64(sw.slices)),
+        ("drained", Json::u64(sw.drained)),
+        ("drops", Json::u64(sw.drops)),
+        (
+            "paths",
+            Json::Arr(
+                sw.paths
+                    .iter()
+                    .map(|p| {
+                        Json::obj(vec![
+                            ("stack_id", Json::u64(p.stack_id as u64)),
+                            ("cm_fs", Json::u64(p.cm_fs)),
+                            ("slices", Json::u64(p.slices)),
+                            ("first_seen", Json::u64(p.first_seen)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
     ])
 }
 
@@ -434,6 +467,10 @@ impl<W: io::Write> ReportSink for JsonSink<W> {
             ReportEvent::SessionStart(info) => {
                 self.session = session_info_json(info);
             }
+            // Shard partials are a streaming-transport payload; the
+            // one-document session summary keeps its v1 shape (and its
+            // size) whether or not they are enabled.
+            ReportEvent::ShardWindow(_) => {}
             ReportEvent::WindowClosed(wr) => {
                 self.windows.push(window_json(wr));
             }
@@ -504,6 +541,10 @@ impl<W: io::Write> ReportSink for JsonlSink<W> {
             ReportEvent::SessionStart(info) => self.line(
                 "session_start",
                 vec![("session", session_info_json(info))],
+            ),
+            ReportEvent::ShardWindow(sw) => self.line(
+                "shard_window",
+                vec![("shard_window", shard_window_json(sw))],
             ),
             ReportEvent::WindowClosed(wr) => {
                 self.line("window", vec![("window", window_json(wr))])
@@ -664,6 +705,59 @@ mod tests {
         );
         let end = Json::parse(lines[2]).unwrap();
         assert_eq!(end.get("runtime_ns").unwrap().as_u64(), Some(42));
+    }
+
+    #[test]
+    fn jsonl_serializes_shard_partials_and_json_document_ignores_them() {
+        use crate::gapp::userspace::{PathAccumulator, SliceEntry};
+        use crate::simkernel::WaitKind;
+        let mut acc = PathAccumulator::new();
+        acc.add_slice(
+            &SliceEntry {
+                ts_id: 41,
+                pid: 3,
+                cm_ns: 2.5,
+                threads_av: 1.0,
+                stack_id: 9,
+                addrs: vec![0x40],
+                from_stack_top: false,
+                wait: WaitKind::Futex,
+                woken_by: 0,
+            },
+            0,
+        );
+        let paths = acc.take_paths();
+        let sw = ShardWindowEvent {
+            index: 2,
+            shard: 1,
+            slices: 1,
+            drained: 7,
+            drops: 0,
+            paths: &paths,
+        };
+        let mut sink = JsonlSink::new(Vec::new());
+        sink.on_event(&ReportEvent::ShardWindow(sw)).unwrap();
+        sink.finish().unwrap();
+        let out = String::from_utf8(sink.into_inner()).unwrap();
+        let v = Json::parse(out.lines().next().unwrap()).unwrap();
+        assert_eq!(v.get("event").unwrap().as_str(), Some("shard_window"));
+        let body = v.get("shard_window").unwrap();
+        assert_eq!(body.get("index").unwrap().as_u64(), Some(2));
+        assert_eq!(body.get("shard").unwrap().as_u64(), Some(1));
+        let p = &body.get("paths").unwrap().as_arr().unwrap()[0];
+        assert_eq!(p.get("stack_id").unwrap().as_u64(), Some(9));
+        assert_eq!(p.get("first_seen").unwrap().as_u64(), Some(41));
+        assert_eq!(p.get("cm_fs").unwrap().as_u64(), Some(2_500_000));
+
+        // The one-document sink keeps its shape: partials contribute
+        // nothing (additive event kinds stay out of the v1 document).
+        let mut doc = JsonSink::new(Vec::new());
+        doc.on_event(&ReportEvent::ShardWindow(sw)).unwrap();
+        doc.on_event(&ReportEvent::SessionEnd { runtime_ns: 1 }).unwrap();
+        doc.finish().unwrap();
+        let parsed =
+            Json::parse(&String::from_utf8(doc.into_inner()).unwrap()).unwrap();
+        assert_eq!(parsed.get("windows").unwrap().as_arr().unwrap().len(), 0);
     }
 
     #[test]

@@ -6,6 +6,10 @@
 //!
 //! * [`ReportEvent::SessionStart`] — the resolved configuration, the
 //!   application list and the transport shard count, before any work.
+//! * [`ReportEvent::ShardWindow`] — *opt-in* (`LiveConfig::
+//!   shard_partials`, tree strategy only): one event per (window ×
+//!   shard) carrying that shard's partial aggregation before the merge
+//!   tree combines it — the seam a cross-process merge ships as JSONL.
 //! * [`ReportEvent::WindowClosed`] — one closed epoch window (live
 //!   mode only): the window's top-K, drain/drop accounting, and the
 //!   per-shard drop breakdown.
@@ -35,6 +39,7 @@ use anyhow::Result;
 use super::config::{GappConfig, ReportFormat};
 use super::report::Report;
 use super::stream::{WindowReport, WindowSummary};
+use super::userspace::MergedPath;
 
 /// How the session drives its kernel: one batch run, or epoch windows.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -80,11 +85,37 @@ pub struct FinalEvent<'a> {
     pub sketch_lines: &'a [String],
 }
 
+/// One ring shard's partial window aggregation, emitted before the
+/// merge tree combines the partials (opt-in; see the module docs).
+/// Within schema v1 this is an *additive* event kind: it only appears
+/// when explicitly requested, so consumers that predate it never see
+/// it, and (per the versioning policy) consumers must skip unknown
+/// event kinds anyway.
+#[derive(Clone, Copy, Debug)]
+pub struct ShardWindowEvent<'a> {
+    /// 1-based window index (matches the following `WindowClosed`).
+    pub index: u64,
+    /// Ring shard this partial covers.
+    pub shard: usize,
+    /// Slices this shard folded this window.
+    pub slices: u64,
+    /// Ring records drained from / dropped on this shard this epoch.
+    pub drained: u64,
+    pub drops: u64,
+    /// The shard-local merge snapshot. Aggregates are associative and
+    /// the `first_seen` stamps reconcile ordering, so concatenating
+    /// these partials across processes and running `merge_tree`
+    /// reproduces the window snapshot exactly.
+    pub paths: &'a [MergedPath],
+}
+
 /// One event of a profiling session, in emission order:
-/// `SessionStart (WindowClosed)* Final SessionEnd`.
+/// `SessionStart ((ShardWindow)* WindowClosed)* Final SessionEnd`
+/// (`ShardWindow` only when opted in).
 #[derive(Clone, Copy, Debug)]
 pub enum ReportEvent<'a> {
     SessionStart(&'a SessionInfo),
+    ShardWindow(ShardWindowEvent<'a>),
     WindowClosed(&'a WindowReport),
     Final(FinalEvent<'a>),
     SessionEnd { runtime_ns: u64 },

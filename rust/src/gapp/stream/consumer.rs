@@ -4,16 +4,27 @@
 //! The batch profiler drains the rings once at `finish()`; the streaming
 //! analyzer instead interleaves simulation epochs with full drains. The
 //! transport is sharded per CPU, so a [`ShardedConsumer`] holds one
-//! [`RingCursor`] per shard: each epoch it drains every shard (the drain
-//! itself re-establishes the global record order from the capture
-//! timestamps) and reads per-shard [`EpochDelta`]s, so producer-side
-//! drops are charged both to the epoch in which they occurred *and* to
-//! the CPU buffer that overflowed — the two axes a real deployment tunes
-//! buffer pages against.
+//! [`RingCursor`] per shard: each epoch it drains every shard and reads
+//! per-shard [`EpochDelta`]s, so producer-side drops are charged both to
+//! the epoch in which they occurred *and* to the CPU buffer that
+//! overflowed — the two axes a real deployment tunes buffer pages
+//! against.
+//!
+//! How the drained records reach the aggregation depends on the
+//! session's `MergeStrategy`. Under `Serial` the drain k-way-merges
+//! every shard back into one `(time, seq)`-ordered stream feeding a
+//! single accumulator. Under `Tree` the consumer is a *tree of shard
+//! folders*: each shard drains in shard order into its own lane and
+//! shard-local [`WindowAccumulator`], and [`ShardedConsumer::
+//! fold_partials`] returns the per-shard partial snapshots the driver
+//! combines through the pairwise merge tree at window close.
 
 use crate::ebpf::ringbuf::{EpochDelta, RingCursor};
+use crate::simkernel::Pid;
 
+use super::super::userspace::MergedPath;
 use super::super::GappCore;
+use super::window::WindowAccumulator;
 
 /// Per-epoch drain statistics (one entry per window in the live report).
 #[derive(Clone, Debug, Default)]
@@ -26,11 +37,27 @@ pub struct EpochStats {
     pub per_shard: Vec<EpochDelta>,
 }
 
+/// One shard's partial window aggregation, produced by
+/// [`ShardedConsumer::fold_partials`] at window close.
+pub struct ShardPartial {
+    /// Ring shard this partial covers.
+    pub shard: usize,
+    /// Slices this shard's accumulator folded this window (including
+    /// slices excluded from the merge for dropped stack ids).
+    pub slices_in: u64,
+    /// The shard-local merge snapshot (shard-local first-seen order —
+    /// which, per shard, is already ascending capture stamp).
+    pub paths: Vec<MergedPath>,
+}
+
 /// Drains the shared kernel/user core once per epoch, one cursor per
-/// ring shard.
-#[derive(Debug, Default)]
+/// ring shard — and, under the tree strategy, one shard-local
+/// [`WindowAccumulator`] per shard.
+#[derive(Default)]
 pub struct ShardedConsumer {
     cursors: Vec<RingCursor>,
+    /// Per-shard window accumulators (tree strategy; idle under serial).
+    waccs: Vec<WindowAccumulator>,
     /// Epochs completed so far.
     pub epochs: u64,
     /// Total drops observed across all epochs and shards (must equal
@@ -47,6 +74,7 @@ impl ShardedConsumer {
     pub fn new(nshards: usize) -> ShardedConsumer {
         ShardedConsumer {
             cursors: vec![RingCursor::default(); nshards],
+            waccs: (0..nshards).map(|_| WindowAccumulator::new()).collect(),
             epochs: 0,
             total_dropped: 0,
             shard_dropped: vec![0; nshards],
@@ -57,14 +85,22 @@ impl ShardedConsumer {
         self.cursors.len()
     }
 
-    /// Drain everything currently buffered (all shards, globally
-    /// re-ordered) into the user-space probe and close the epoch:
-    /// returns the per-shard ring activity since the previous call.
-    /// Mid-epoch drains triggered by the kernel probe's per-shard
-    /// drain-threshold are included (they belong to this epoch).
+    /// Drain everything currently buffered into the consumer side and
+    /// close the epoch: returns the per-shard ring activity since the
+    /// previous call. Mid-epoch drains triggered by the kernel probe's
+    /// per-shard drain-threshold are included (they belong to this
+    /// epoch). Serial: one globally re-ordered stream into the user
+    /// probe. Tree: per-shard drains into the core's lanes, then the
+    /// buffered matrix substream is re-merged into the user probe in
+    /// global capture order (the one place the tree still serializes —
+    /// slot state and f32 batch grouping are globally order-sensitive).
     pub fn drain_epoch(&mut self, core: &mut GappCore) -> EpochStats {
         debug_assert_eq!(self.cursors.len(), core.kernel.rings.num_shards());
         core.drain();
+        if core.lanes.is_some() {
+            let c = &mut *core;
+            c.lanes.as_mut().unwrap().feed_matrix_into(&mut c.user);
+        }
         let mut total = EpochDelta::default();
         let mut per_shard = Vec::with_capacity(self.cursors.len());
         for (i, cur) in self.cursors.iter_mut().enumerate() {
@@ -81,16 +117,51 @@ impl ShardedConsumer {
             per_shard,
         }
     }
+
+    /// Tree strategy, window close: fold each lane's assembled slices
+    /// (in shard order — no cross-shard comparisons) into that shard's
+    /// accumulator and snapshot the partials. `app_of` attributes each
+    /// slice to its owning application (attribution is per pid and
+    /// immutable once assigned, so folding shard-locally cannot change
+    /// it). The driver combines the returned partials through
+    /// [`super::window::merge_tree`].
+    ///
+    /// Panics if the core was built for the serial strategy (no lanes).
+    pub fn fold_partials(
+        &mut self,
+        core: &mut GappCore,
+        app_of: impl Fn(Pid) -> u16,
+    ) -> Vec<ShardPartial> {
+        let lanes = core
+            .lanes
+            .as_mut()
+            .expect("fold_partials requires MergeStrategy::Tree lanes");
+        debug_assert_eq!(lanes.len(), self.waccs.len());
+        let mut out = Vec::with_capacity(self.waccs.len());
+        for (i, lane) in lanes.iter_mut().enumerate() {
+            let w = &mut self.waccs[i];
+            for s in lane.asm.slices.drain(..) {
+                w.add_slice(&s, app_of(s.pid));
+            }
+            let slices_in = w.slices_in;
+            out.push(ShardPartial {
+                shard: i,
+                slices_in,
+                paths: w.snapshot(),
+            });
+        }
+        out
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::gapp::records::Record;
-    use crate::gapp::GappConfig;
+    use crate::gapp::{GappConfig, MergeStrategy};
     use crate::runtime::AnalysisEngine;
 
-    fn tiny_core(ring_capacity: usize, shards: usize) -> GappCore {
+    fn core_with(ring_capacity: usize, shards: usize, merge: MergeStrategy) -> GappCore {
         let cfg = GappConfig {
             ring_capacity,
             shards: Some(shards),
@@ -98,12 +169,26 @@ mod tests {
             // `drain_threshold` knob now lives in `GappConfig` alone
             // (it used to be duplicated into `GappCore`).
             drain_threshold: usize::MAX,
+            merge,
             ..Default::default()
+        };
+        let lanes = match merge {
+            MergeStrategy::Serial => None,
+            MergeStrategy::Tree => {
+                Some(crate::gapp::userspace::ShardLanes::new(shards))
+            }
         };
         GappCore {
             kernel: crate::gapp::probes::KernelProbes::new(cfg, 2).unwrap(),
             user: crate::gapp::userspace::UserProbe::new(AnalysisEngine::native()),
+            lanes,
         }
+    }
+
+    /// The serial-strategy core the pre-tree tests were written
+    /// against: every drained record reaches `core.user` directly.
+    fn tiny_core(ring_capacity: usize, shards: usize) -> GappCore {
+        core_with(ring_capacity, shards, MergeStrategy::Serial)
     }
 
     fn sample(pid: u32, ip: u64) -> Record {
@@ -186,5 +271,98 @@ mod tests {
         let per = core.kernel.rings.shard_stats();
         assert_eq!(per[0].dropped, 3);
         assert_eq!(per[1].dropped, 1);
+    }
+
+    #[test]
+    fn tree_mode_folds_slices_shard_locally() {
+        let mut core = core_with(64, 2, MergeStrategy::Tree);
+        let mut cons = ShardedConsumer::new(2);
+        let end = |ts_id: u64, pid: u32, stack_id: u32| Record::SliceEnd {
+            ts_id,
+            pid,
+            cm_ns: 100.0,
+            threads_av: 1.0,
+            ip: 0x10 * ts_id,
+            stack_id,
+            stack_top: 0,
+            wait: crate::simkernel::WaitKind::Futex,
+            woken_by: 0,
+        };
+        // Slices interleave across CPUs; each slice's sample precedes
+        // its end on the same CPU (shard affinity).
+        core.kernel.rings.push(0, 1, Record::Sample { pid: 1, ip: 0xA });
+        core.kernel.rings.push(1, 2, Record::Sample { pid: 2, ip: 0xB });
+        core.kernel.rings.push(1, 3, end(1, 2, 7));
+        core.kernel.rings.push(0, 4, end(2, 1, 9));
+        let e = cons.drain_epoch(&mut core);
+        assert_eq!(e.delta.drained, 4);
+        // Slice records never reach the user probe under the tree.
+        assert_eq!(core.user.records_processed, 0);
+        assert_eq!(core.user.slices().len(), 0);
+        let parts = cons.fold_partials(&mut core, |_| 0);
+        assert_eq!(parts.len(), 2);
+        assert_eq!(parts[0].slices_in, 1);
+        assert_eq!(parts[1].slices_in, 1);
+        // Shard-local pairing matched each sample with its slice.
+        assert_eq!(parts[0].paths[0].stack_id, 9);
+        assert_eq!(parts[0].paths[0].addr_freq[&0xA], 1);
+        assert_eq!(parts[1].paths[0].stack_id, 7);
+        assert_eq!(parts[1].paths[0].addr_freq[&0xB], 1);
+        // first_seen carries the capture stamp for the order merge.
+        assert_eq!(parts[0].paths[0].first_seen, 2);
+        assert_eq!(parts[1].paths[0].first_seen, 1);
+        // Accumulators reset per window.
+        let parts2 = cons.fold_partials(&mut core, |_| 0);
+        assert_eq!(parts2[0].slices_in, 0);
+        assert!(parts2[0].paths.is_empty());
+    }
+
+    #[test]
+    fn tree_mode_re_merges_matrix_records_in_capture_order() {
+        let mut core = core_with(64, 2, MergeStrategy::Tree);
+        let mut cons = ShardedConsumer::new(2);
+        // Slot 0 is owned by pid 1 on shard 0, then recycled to pid 2
+        // via records on shard 1. The re-merge must replay the global
+        // capture order, or the interval would charge the wrong pid.
+        core.kernel.rings.push(0, 1, Record::SlotAssign { pid: 1, slot: 0 });
+        let mut mask: crate::gapp::records::SlotMask = [0; 2];
+        crate::gapp::records::mask_set(&mut mask, 0);
+        core.kernel.rings.push(0, 2, Record::Interval { dur: 500, mask });
+        core.kernel.rings.push(1, 3, Record::SlotFree { pid: 1, slot: 0 });
+        core.kernel.rings.push(1, 4, Record::SlotAssign { pid: 2, slot: 0 });
+        core.kernel.rings.push(0, 5, Record::Interval { dur: 300, mask });
+        cons.drain_epoch(&mut core);
+        core.user.flush_batch();
+        assert_eq!(core.user.records_processed, 5);
+        let t1 = core.user.totals.get(1).unwrap();
+        let t2 = core.user.totals.get(2).unwrap();
+        assert!((t1.cm_ns - 500.0).abs() < 1e-3, "{}", t1.cm_ns);
+        assert!((t2.cm_ns - 300.0).abs() < 1e-3, "{}", t2.cm_ns);
+    }
+
+    #[test]
+    fn tree_and_serial_epoch_accounting_agree() {
+        // Same push plan against both strategies: drained/dropped
+        // deltas and the (epoch × shard) identity must be identical.
+        let plan = |core: &mut GappCore| {
+            for i in 0..5 {
+                core.kernel.rings.push(0, i, sample(1, i));
+            }
+            core.kernel.rings.push(1, 9, sample(2, 9));
+        };
+        let mut results = Vec::new();
+        for merge in [MergeStrategy::Serial, MergeStrategy::Tree] {
+            let mut core = core_with(2, 2, merge);
+            let mut cons = ShardedConsumer::new(2);
+            plan(&mut core);
+            let e = cons.drain_epoch(&mut core);
+            assert_eq!(
+                cons.total_dropped,
+                core.kernel.rings.stats().dropped,
+                "{merge:?}"
+            );
+            results.push((e.delta, e.per_shard));
+        }
+        assert_eq!(results[0], results[1]);
     }
 }

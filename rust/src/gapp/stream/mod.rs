@@ -8,12 +8,35 @@
 //!
 //! * [`consumer`] — an epoch-based consumer over the *sharded* per-CPU
 //!   rings (the `PERF_EVENT_ARRAY` poll-loop analogue): one cursor per
-//!   shard, drained together once per simulation epoch with the global
-//!   record order re-established from capture timestamps, attributing
-//!   ring drops to both the epoch and the CPU buffer they occurred in.
+//!   shard, drained once per simulation epoch, attributing ring drops
+//!   to both the epoch and the CPU buffer they occurred in.
 //! * [`window`] — per-window incremental aggregation with mergeable
 //!   snapshots: all aggregates are associative, so concatenated window
 //!   snapshots merge to *exactly* the batch result (golden-tested).
+//!
+//! # Merge strategies
+//!
+//! How drained records reach the window accumulators is governed by
+//! `GappConfig::merge` (`--merge serial|tree`); the two strategies
+//! render **byte-identical** reports (golden + property tested):
+//!
+//! * **`serial`** — the pre-tree consumer: every epoch, all shards are
+//!   k-way merged back into one `(time, seq)`-ordered stream (a
+//!   serialization point that grows with the shard count), and a
+//!   single [`WindowAccumulator`] folds it.
+//! * **`tree`** (default) — shard-local folding: each shard drains *in
+//!   shard order* into its own lane and [`WindowAccumulator`]; at
+//!   window close the S partials combine through a pairwise merge tree
+//!   ([`merge_tree`], O(log S) depth). Correctness splits the record
+//!   stream in two: slice records (`Sample`/`SliceDiscard`/`SliceEnd`)
+//!   are *shard-affine* — a timeslice runs on one CPU, so its whole
+//!   pairing lifecycle lands in one shard FIFO — and fold locally;
+//!   activity-matrix records (`Interval`/`SlotAssign`/`SlotFree`)
+//!   mutate *global* state (thread slots, f32 batch grouping) and are
+//!   still re-merged by capture stamp, but only at window close, off
+//!   the hot path. Output order reconciles through each merged path's
+//!   `first_seen` capture stamp, which reproduces the serial
+//!   first-seen order exactly.
 //! * [`topk`] — a bounded space-saving sketch for cumulative top-K over
 //!   unbounded runs in O(K) memory.
 //! * [`multi`] — system-wide mode: several applications share one
@@ -34,11 +57,13 @@ pub mod multi;
 pub mod topk;
 pub mod window;
 
-pub use consumer::{EpochStats, ShardedConsumer};
+pub use consumer::{EpochStats, ShardPartial, ShardedConsumer};
 pub use live::{LiveLine, WindowReport};
 pub use multi::{AppRegistry, RegistryProbe};
 pub use topk::SpaceSaving;
-pub use window::{merge_snapshots, WindowAccumulator};
+pub use window::{
+    merge_pair, merge_snapshots, merge_tree, sort_canonical, WindowAccumulator,
+};
 
 use anyhow::Result;
 
@@ -58,6 +83,12 @@ pub struct LiveConfig {
     pub top_k: usize,
     /// Capacity of the cumulative space-saving sketch.
     pub sketch_entries: usize,
+    /// Emit one `ReportEvent::ShardWindow` per (window × shard) with
+    /// that shard's partial aggregation (tree strategy only). Off by
+    /// default; the JSONL sink serializes these so a future
+    /// cross-process consumer can ship shard partials and run the same
+    /// merge tree across machines.
+    pub shard_partials: bool,
 }
 
 impl Default for LiveConfig {
@@ -66,6 +97,7 @@ impl Default for LiveConfig {
             window_ns: 5_000_000, // 5 ms
             top_k: 5,
             sketch_entries: 64,
+            shard_partials: false,
         }
     }
 }

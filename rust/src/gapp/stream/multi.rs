@@ -59,6 +59,17 @@ impl AppRegistry {
         self.of.get(pid).copied().unwrap_or(0)
     }
 
+    /// Attribution closure for the window folders. A pid's application
+    /// is assigned at `task_newtask` (before any of its slices can
+    /// exist) and never changes, so attribution is insensitive to
+    /// *when* a slice is folded — mid-epoch watermark drain, epoch
+    /// close, serial stream or shard-local lane all agree. That
+    /// invariant is what keeps the per-app registry correct under the
+    /// merge tree without any per-shard registry state.
+    pub fn tagger(&self) -> impl Fn(Pid) -> u16 + '_ {
+        move |pid| self.app_of(pid)
+    }
+
     pub fn names(&self) -> &[String] {
         &self.names
     }

@@ -8,6 +8,14 @@
 //! single batch merge over the concatenated slice stream, which is what
 //! lets the streaming analyzer report per-window *and* cumulative
 //! results without ever retaining per-slice state.
+//!
+//! The same associativity carries the *spatial* split: under
+//! `MergeStrategy::Tree` each ring shard folds its own sub-stream into
+//! a shard-local accumulator, and [`merge_tree`] combines the S
+//! partials pairwise (O(log S) depth). [`merge_pair`] reconciles the
+//! output order through the paths' `first_seen` capture stamps, so the
+//! tree result is byte-identical to the serial global-stream fold for
+//! *every* tree shape (property-tested).
 
 use crate::gapp::userspace::{MergedPath, PathAccumulator, SliceEntry};
 
@@ -44,6 +52,78 @@ impl WindowAccumulator {
         self.slices_in = 0;
         self.acc.take_paths()
     }
+
+    /// Fold another window accumulator into this one (leaving `o` reset
+    /// for reuse) — `merge(a, b)` at the accumulator level. Snapshot
+    /// merging ([`merge_pair`]) is what the tree driver uses; this
+    /// exists for callers that combine live accumulators directly.
+    /// Note the resulting insertion order is self-then-other: callers
+    /// that need the canonical serial order must [`sort_canonical`] the
+    /// eventual snapshot (merge_pair does this for you).
+    pub fn merge_from(&mut self, o: &mut WindowAccumulator) {
+        self.slices_in += o.slices_in;
+        for p in &o.snapshot() {
+            self.acc.merge_path(p);
+        }
+    }
+}
+
+/// Canonical snapshot order: ascending `first_seen` capture stamp. For
+/// a fold over the globally-ordered stream this sort is a no-op (paths
+/// are first seen in ascending stamp order); for a merge of shard
+/// partials it *reconstructs* exactly that order, because a path's
+/// merged `first_seen` is the stamp of its globally-earliest slice.
+/// The `stack_id` tiebreak only matters for synthetic paths that never
+/// absorbed a slice (`first_seen == u64::MAX`).
+pub fn sort_canonical(paths: &mut [MergedPath]) {
+    paths.sort_by_key(|p| (p.first_seen, p.stack_id));
+}
+
+/// Merge two partial snapshots into one canonical-order snapshot —
+/// the binary node of the pairwise merge tree. Associative and
+/// commutative: aggregates combine through [`MergedPath::merge_from`]
+/// (all associative) and the order reconciles via [`sort_canonical`].
+pub fn merge_pair(a: Vec<MergedPath>, b: Vec<MergedPath>) -> Vec<MergedPath> {
+    let mut acc = PathAccumulator::new();
+    for p in a.iter().chain(b.iter()) {
+        acc.merge_path(p);
+    }
+    let mut out = acc.take_paths();
+    sort_canonical(&mut out);
+    out
+}
+
+/// Combine S shard-partial snapshots through a pairwise merge tree of
+/// O(log S) depth: each round merges adjacent pairs until one snapshot
+/// remains. The result equals the serial fold of the globally-ordered
+/// stream byte for byte, for every tree shape — associativity plus
+/// stamp-keyed order reconciliation (property-tested in
+/// `rust/tests/streaming_golden.rs`).
+pub fn merge_tree(mut parts: Vec<Vec<MergedPath>>) -> Vec<MergedPath> {
+    match parts.len() {
+        0 => return Vec::new(),
+        1 => {
+            // A single shard still canonicalizes: its local fold order
+            // is already ascending-stamp, so this is a no-op sort, but
+            // the contract is "canonical order out" regardless of S.
+            let mut only = parts.pop().unwrap();
+            sort_canonical(&mut only);
+            return only;
+        }
+        _ => {}
+    }
+    while parts.len() > 1 {
+        let mut next = Vec::with_capacity((parts.len() + 1) / 2);
+        let mut it = parts.into_iter();
+        while let Some(a) = it.next() {
+            match it.next() {
+                Some(b) => next.push(merge_pair(a, b)),
+                None => next.push(a), // odd one out rides up a level
+            }
+        }
+        parts = next;
+    }
+    parts.pop().unwrap()
 }
 
 /// Fold window snapshots, in window order, into one merged path list.
@@ -99,6 +179,111 @@ mod tests {
         w.add_slice(&slice(0), 0);
         assert_eq!(w.paths(), 1);
         assert_eq!(w.snapshot()[0].stack_id, 0);
+    }
+
+    /// Compare two snapshots field by field (the byte-identity oracle
+    /// minus rendering).
+    fn assert_snapshots_equal(a: &[MergedPath], b: &[MergedPath]) {
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(b) {
+            assert_eq!(x.stack_id, y.stack_id, "path order diverged");
+            assert_eq!(x.cm_fs, y.cm_fs);
+            assert_eq!(x.first_seen, y.first_seen);
+            assert_eq!(x.slices, y.slices);
+            assert_eq!(x.addr_freq, y.addr_freq);
+            assert_eq!(x.wait_hist, y.wait_hist);
+            assert_eq!(x.wakers, y.wakers);
+            assert_eq!(x.app_slices, y.app_slices);
+        }
+    }
+
+    #[test]
+    fn shard_partials_merge_tree_equals_the_serial_fold() {
+        // Deal one stream onto 4 "shards" round-robin (each preserving
+        // relative order like a per-CPU FIFO), fold each shard locally,
+        // and tree-merge the partials: must equal the serial fold of
+        // the stream in capture order.
+        let slices: Vec<SliceEntry> = (0..48).map(slice).collect();
+        let mut serial = WindowAccumulator::new();
+        for s in &slices {
+            serial.add_slice(s, 0);
+        }
+        let serial_snap = serial.snapshot();
+
+        let mut shards: Vec<WindowAccumulator> =
+            (0..4).map(|_| WindowAccumulator::new()).collect();
+        for (i, s) in slices.iter().enumerate() {
+            shards[i % 4].add_slice(s, 0);
+        }
+        let parts: Vec<Vec<MergedPath>> =
+            shards.iter_mut().map(|w| w.snapshot()).collect();
+        let merged = merge_tree(parts);
+        assert_snapshots_equal(&serial_snap, &merged);
+        // A serial fold is already in canonical (ascending-stamp) order.
+        let mut resorted = serial_snap.clone();
+        sort_canonical(&mut resorted);
+        assert_snapshots_equal(&serial_snap, &resorted);
+    }
+
+    #[test]
+    fn merge_pair_is_commutative_and_tree_shape_invariant() {
+        let slices: Vec<SliceEntry> = (0..30).map(slice).collect();
+        let mut parts: Vec<Vec<MergedPath>> = Vec::new();
+        let mut w = WindowAccumulator::new();
+        for (i, s) in slices.iter().enumerate() {
+            w.add_slice(s, 0);
+            if i % 7 == 6 {
+                parts.push(w.snapshot());
+            }
+        }
+        parts.push(w.snapshot());
+        assert!(parts.len() >= 4);
+        let balanced = merge_tree(parts.clone());
+        // Left-deep fold, and the same with every pair flipped.
+        let mut left = parts[0].clone();
+        for p in &parts[1..] {
+            left = merge_pair(left, p.clone());
+        }
+        let mut flipped = parts[0].clone();
+        for p in &parts[1..] {
+            flipped = merge_pair(p.clone(), flipped);
+        }
+        assert_snapshots_equal(&balanced, &left);
+        assert_snapshots_equal(&balanced, &flipped);
+    }
+
+    #[test]
+    fn accumulator_merge_from_drains_the_source() {
+        let mut a = WindowAccumulator::new();
+        let mut b = WindowAccumulator::new();
+        for i in 0..6 {
+            a.add_slice(&slice(i), 0);
+        }
+        for i in 6..10 {
+            b.add_slice(&slice(i), 0);
+        }
+        a.merge_from(&mut b);
+        assert_eq!(a.slices_in, 10);
+        assert_eq!(b.slices_in, 0);
+        assert_eq!(b.paths(), 0);
+        let snap = a.snapshot();
+        let mut serial = WindowAccumulator::new();
+        for i in 0..10 {
+            serial.add_slice(&slice(i), 0);
+        }
+        assert_snapshots_equal(&serial.snapshot(), &snap);
+    }
+
+    #[test]
+    fn merge_tree_handles_empty_and_single_inputs() {
+        assert!(merge_tree(Vec::new()).is_empty());
+        assert!(merge_tree(vec![Vec::new(), Vec::new()]).is_empty());
+        let mut w = WindowAccumulator::new();
+        w.add_slice(&slice(1), 0);
+        w.add_slice(&slice(2), 0);
+        let snap = w.snapshot();
+        let via_tree = merge_tree(vec![snap.clone()]);
+        assert_snapshots_equal(&snap, &via_tree);
     }
 
     #[test]

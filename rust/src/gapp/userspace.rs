@@ -22,6 +22,7 @@
 //! over the concatenated stream produces. The batch path below is the
 //! one-window special case; `gapp::stream` drives the many-window case.
 
+use crate::ebpf::ringbuf::Stamped;
 use crate::runtime::{AnalysisEngine, T_SLOTS};
 use crate::simkernel::{Pid, WaitKind};
 use crate::util::{FxHashMap, PidMap, sat_add};
@@ -64,6 +65,16 @@ pub struct MergedPath {
     pub cm_fs: u64,
     /// Total CMetric in ns — derived from [`MergedPath::cm_fs`].
     pub total_cm_ns: f64,
+    /// Capture stamp (`SliceEntry::ts_id`) of the earliest slice folded
+    /// into this path — `u64::MAX` until one is. Slice ids are assigned
+    /// in kernel capture order, so sorting merged paths by this stamp
+    /// reproduces exactly the first-seen order a single consumer of the
+    /// globally-ordered stream would have produced. This is what lets
+    /// shard-local partial accumulators (which each see only their
+    /// shard's sub-order) merge back to the serial result byte for
+    /// byte: every other field is an associative aggregate, and the
+    /// output *order* reconciles through `min(first_seen)`.
+    pub first_seen: u64,
     pub slices: u64,
     pub addr_freq: FxHashMap<u64, u64>,
     pub stack_top_samples: u64,
@@ -90,6 +101,7 @@ impl MergedPath {
             stack_id,
             cm_fs: 0,
             total_cm_ns: 0.0,
+            first_seen: u64::MAX,
             slices: 0,
             addr_freq: FxHashMap::default(),
             stack_top_samples: 0,
@@ -106,6 +118,7 @@ impl MergedPath {
     fn absorb(&mut self, s: &SliceEntry, app: u16) {
         self.cm_fs = sat_add(self.cm_fs, cm_fs_of(s.cm_ns));
         self.total_cm_ns = self.cm_fs as f64 / 1e6;
+        self.first_seen = self.first_seen.min(s.ts_id);
         self.slices += 1;
         for a in &s.addrs {
             *self.addr_freq.entry(*a).or_insert(0) += 1;
@@ -126,6 +139,7 @@ impl MergedPath {
         debug_assert_eq!(self.stack_id, o.stack_id);
         self.cm_fs = sat_add(self.cm_fs, o.cm_fs);
         self.total_cm_ns = self.cm_fs as f64 / 1e6;
+        self.first_seen = self.first_seen.min(o.first_seen);
         self.slices += o.slices;
         for (a, n) in &o.addr_freq {
             *self.addr_freq.entry(*a).or_insert(0) += n;
@@ -225,6 +239,20 @@ impl PathAccumulator {
         self.paths[i].merge_from(p);
     }
 
+    /// Fold another accumulator's merged paths into this one —
+    /// `merge(a, b)` at the accumulator level. Aggregates combine
+    /// associatively/commutatively (every [`MergedPath`] field is a
+    /// sum/min), but the *insertion order* after this call is
+    /// self-then-other, not the canonical ascending-stamp order: take
+    /// the snapshot and `sort_canonical` it (what
+    /// `stream::window::merge_pair` does) wherever serial-equivalent
+    /// ordering matters.
+    pub fn merge_from(&mut self, o: &PathAccumulator) {
+        for p in o.paths() {
+            self.merge_path(p);
+        }
+    }
+
     /// Merged paths so far, in first-seen order.
     pub fn paths(&self) -> &[MergedPath] {
         &self.paths
@@ -255,92 +283,38 @@ pub struct ThreadTotals {
     pub wall_ns: f64,
 }
 
-/// User-space engine state.
-pub struct UserProbe {
-    engine: AnalysisEngine,
-    // Batch under construction (reused across drains: zero-alloc path).
-    a_flat: Vec<f32>,
-    t_vec: Vec<f32>,
-    rows: usize,
-    // pid ↔ slot attribution over time (slots are recycled).
-    slot_owner: Vec<Option<Pid>>,
-    /// Accumulated per-pid totals (committed when slots are freed or at
-    /// flush time). Dense pid table: iteration is pid-ordered.
-    pub totals: PidMap<ThreadTotals>,
+/// The per-pid slice-pairing stage of the user probe (§4.4): buffers
+/// sampled IPs per thread and pairs them with the `SliceEnd` /
+/// `SliceDiscard` that closes the slice.
+///
+/// Split out of [`UserProbe`] because this stage is *shard-affine*: a
+/// timeslice runs on one CPU, so its samples, its discard and its end
+/// record all fire on that CPU and land in that CPU's ring shard, and
+/// the pairing state empties at every slice boundary. One assembler per
+/// shard therefore produces exactly the `SliceEntry`s one assembler
+/// over the globally-ordered stream would — the invariant that lets the
+/// merge tree fold slice records without any cross-shard timestamp
+/// merge. (The activity-matrix records are *not* shard-affine — slots
+/// are global — and stay on the globally-ordered path.)
+#[derive(Default)]
+pub struct SliceAssembler {
     // Pending per-pid sample buffers. Dense table; a slice end *moves*
     // the buffer into its SliceEntry, a discard clears it in place, so
     // the steady state re-uses allocations.
     pending_samples: PidMap<Vec<u64>>,
+    /// Assembled slices, in this assembler's arrival order.
     pub slices: Vec<SliceEntry>,
-    pub records_processed: u64,
-    pub batch_flushes: u64,
 }
 
-impl UserProbe {
-    pub fn new(engine: AnalysisEngine) -> UserProbe {
-        let batch = engine.batch;
-        let t_slots = engine.t_slots;
-        UserProbe {
-            engine,
-            a_flat: vec![0.0; batch * t_slots],
-            t_vec: vec![0.0; batch],
-            rows: 0,
-            slot_owner: vec![None; T_SLOTS],
-            totals: PidMap::new(),
-            pending_samples: PidMap::new(),
-            slices: Vec::new(),
-            records_processed: 0,
-            batch_flushes: 0,
-        }
+impl SliceAssembler {
+    pub fn new() -> SliceAssembler {
+        SliceAssembler::default()
     }
 
-    pub fn backend_name(&self) -> &'static str {
-        self.engine.backend_name()
-    }
-
-    /// Consume one record from the circular buffer.
-    pub fn consume(&mut self, rec: Record) {
-        self.records_processed += 1;
-        match rec {
-            Record::SlotAssign { pid, slot } => {
-                // A reassignment invalidates per-slot accumulation —
-                // flush the open batch first.
-                if slot < self.slot_owner.len() {
-                    if self.slot_owner[slot].is_some() {
-                        self.flush_batch();
-                    }
-                    self.slot_owner[slot] = Some(pid);
-                }
-            }
-            Record::SlotFree { pid, slot } => {
-                // Commit what this slot accumulated so far.
-                self.flush_batch();
-                if slot < self.slot_owner.len() {
-                    debug_assert_eq!(self.slot_owner[slot], Some(pid));
-                    self.slot_owner[slot] = None;
-                }
-            }
-            Record::Interval { dur, mask } => {
-                let t_slots = self.engine.t_slots;
-                let row = self.rows;
-                let base = row * t_slots;
-                for w in 0..2 {
-                    let mut bits = mask[w];
-                    while bits != 0 {
-                        let b = bits.trailing_zeros() as usize;
-                        let slot = w * 64 + b;
-                        if slot < t_slots {
-                            self.a_flat[base + slot] = 1.0;
-                        }
-                        bits &= bits - 1;
-                    }
-                }
-                self.t_vec[row] = dur as f32;
-                self.rows += 1;
-                if self.rows == self.engine.batch {
-                    self.flush_batch();
-                }
-            }
+    /// Consume `rec` if it belongs to the slice-pairing stage; returns
+    /// false (untouched) for activity-matrix records.
+    pub fn consume(&mut self, rec: &Record) -> bool {
+        match *rec {
             Record::Sample { pid, ip } => {
                 self.pending_samples.get_mut_or(pid, Vec::new).push(ip);
             }
@@ -388,6 +362,125 @@ impl UserProbe {
                     woken_by,
                 });
             }
+            _ => return false,
+        }
+        true
+    }
+
+    /// Approximate memory footprint (paper column M).
+    pub fn memory_bytes(&self) -> u64 {
+        let slices: u64 = self
+            .slices
+            .iter()
+            .map(|s| 64 + 8 * s.addrs.len() as u64)
+            .sum();
+        let samples: u64 = self
+            .pending_samples
+            .iter()
+            .map(|(_, v)| 8 * v.len() as u64)
+            .sum();
+        slices + samples
+    }
+}
+
+/// User-space engine state.
+pub struct UserProbe {
+    engine: AnalysisEngine,
+    // Batch under construction (reused across drains: zero-alloc path).
+    a_flat: Vec<f32>,
+    t_vec: Vec<f32>,
+    rows: usize,
+    // pid ↔ slot attribution over time (slots are recycled).
+    slot_owner: Vec<Option<Pid>>,
+    /// Accumulated per-pid totals (committed when slots are freed or at
+    /// flush time). Dense pid table: iteration is pid-ordered.
+    pub totals: PidMap<ThreadTotals>,
+    /// The pid-paired slice stage (serial path; the merge tree runs one
+    /// assembler per shard instead — see [`ShardLanes`]).
+    asm: SliceAssembler,
+    pub records_processed: u64,
+    pub batch_flushes: u64,
+}
+
+impl UserProbe {
+    pub fn new(engine: AnalysisEngine) -> UserProbe {
+        let batch = engine.batch;
+        let t_slots = engine.t_slots;
+        UserProbe {
+            engine,
+            a_flat: vec![0.0; batch * t_slots],
+            t_vec: vec![0.0; batch],
+            rows: 0,
+            slot_owner: vec![None; T_SLOTS],
+            totals: PidMap::new(),
+            asm: SliceAssembler::new(),
+            records_processed: 0,
+            batch_flushes: 0,
+        }
+    }
+
+    /// Slices assembled so far (batch path; the streaming driver drains
+    /// them per epoch via [`UserProbe::drain_slices_into`]).
+    pub fn slices(&self) -> &[SliceEntry] {
+        &self.asm.slices
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.engine.backend_name()
+    }
+
+    /// Consume one record from the circular buffer.
+    pub fn consume(&mut self, rec: Record) {
+        self.records_processed += 1;
+        // Slice-stage records (samples and slice boundaries) pair
+        // per-pid state; everything else feeds the activity matrix.
+        if self.asm.consume(&rec) {
+            return;
+        }
+        match rec {
+            Record::SlotAssign { pid, slot } => {
+                // A reassignment invalidates per-slot accumulation —
+                // flush the open batch first.
+                if slot < self.slot_owner.len() {
+                    if self.slot_owner[slot].is_some() {
+                        self.flush_batch();
+                    }
+                    self.slot_owner[slot] = Some(pid);
+                }
+            }
+            Record::SlotFree { pid, slot } => {
+                // Commit what this slot accumulated so far.
+                self.flush_batch();
+                if slot < self.slot_owner.len() {
+                    debug_assert_eq!(self.slot_owner[slot], Some(pid));
+                    self.slot_owner[slot] = None;
+                }
+            }
+            Record::Interval { dur, mask } => {
+                let t_slots = self.engine.t_slots;
+                let row = self.rows;
+                let base = row * t_slots;
+                for w in 0..2 {
+                    let mut bits = mask[w];
+                    while bits != 0 {
+                        let b = bits.trailing_zeros() as usize;
+                        let slot = w * 64 + b;
+                        if slot < t_slots {
+                            self.a_flat[base + slot] = 1.0;
+                        }
+                        bits &= bits - 1;
+                    }
+                }
+                self.t_vec[row] = dur as f32;
+                self.rows += 1;
+                if self.rows == self.engine.batch {
+                    self.flush_batch();
+                }
+            }
+            // Handled by the slice assembler above.
+            Record::Sample { .. } | Record::SliceDiscard { .. } | Record::SliceEnd { .. } => {
+                unreachable!("slice-stage records are consumed by the assembler")
+            }
         }
     }
 
@@ -429,7 +522,7 @@ impl UserProbe {
     pub fn merge_and_rank(&mut self, top_n: usize) -> Vec<MergedPath> {
         self.flush_batch();
         let mut acc = PathAccumulator::new();
-        for s in &self.slices {
+        for s in &self.asm.slices {
             acc.add_slice(s, 0);
         }
         let paths = acc.take_paths();
@@ -452,23 +545,121 @@ impl UserProbe {
     /// stays bounded by one window; the batch path never calls this and
     /// keeps slices in place for `merge_and_rank`.
     pub fn drain_slices_into(&mut self, out: &mut Vec<SliceEntry>) {
-        out.append(&mut self.slices);
+        out.append(&mut self.asm.slices);
     }
 
     /// Approximate user-space memory footprint (paper column M).
     pub fn memory_bytes(&self) -> u64 {
-        let slices: u64 = self
-            .slices
-            .iter()
-            .map(|s| 64 + 8 * s.addrs.len() as u64)
-            .sum();
         let batch = (self.a_flat.len() * 4 + self.t_vec.len() * 4) as u64;
-        let samples: u64 = self
-            .pending_samples
+        self.asm.memory_bytes() + batch
+    }
+}
+
+/// One ring shard's consumer-side state under the merge tree: a
+/// shard-local [`SliceAssembler`] plus a FIFO of the order-sensitive
+/// activity-matrix records awaiting the global re-merge.
+#[derive(Default)]
+pub struct ShardLane {
+    /// Shard-local slice pairing (provably equivalent to pairing on the
+    /// globally-ordered stream — see [`SliceAssembler`]).
+    pub asm: SliceAssembler,
+    /// Buffered `Interval`/`SlotAssign`/`SlotFree` records in shard
+    /// FIFO (= ascending `(t, seq)`) order. Slot numbers are a *global*
+    /// resource recycled across CPUs, and the analysis batches f32 rows
+    /// whose grouping follows the record sequence, so this substream
+    /// must reach the [`UserProbe`] in global capture order — it is the
+    /// one part of the stream the tree still re-serializes (at window
+    /// close, off the hot path).
+    matrix: Vec<Stamped<Record>>,
+    /// Records this lane consumed (slice + matrix).
+    pub records_routed: u64,
+}
+
+/// The shard-local half of the merge-tree consumer: one [`ShardLane`]
+/// per ring shard. Probes' watermark drains and the epoch drain both
+/// route records here in shard order; at window close the buffered
+/// matrix substream is k-way-merged (by capture stamp) into the
+/// [`UserProbe`] and each lane's assembled slices fold into that
+/// shard's partial accumulator.
+#[derive(Default)]
+pub struct ShardLanes {
+    lanes: Vec<ShardLane>,
+}
+
+impl ShardLanes {
+    pub fn new(nshards: usize) -> ShardLanes {
+        ShardLanes {
+            lanes: (0..nshards).map(|_| ShardLane::default()).collect(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.lanes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lanes.is_empty()
+    }
+
+    pub fn iter_mut(&mut self) -> impl Iterator<Item = &mut ShardLane> {
+        self.lanes.iter_mut()
+    }
+
+    /// Route one stamped record drained from shard `i`: slice-stage
+    /// records fold into the lane's assembler immediately (shard order
+    /// suffices — shard affinity); matrix records queue for the global
+    /// re-merge at window close.
+    #[inline]
+    pub fn route(&mut self, i: usize, rec: Stamped<Record>) {
+        let lane = &mut self.lanes[i];
+        lane.records_routed += 1;
+        if !lane.asm.consume(&rec.rec) {
+            lane.matrix.push(rec);
+        }
+    }
+
+    /// Feed every buffered activity-matrix record into `user` in global
+    /// `(t, seq)` order — a k-way merge over the lane FIFOs (each lane
+    /// buffers in ascending stamp order already). Runs at window close,
+    /// not on the hot path; the heap holds at most one head per lane.
+    pub fn feed_matrix_into(&mut self, user: &mut UserProbe) {
+        use std::cmp::Reverse;
+        if self.lanes.len() == 1 {
+            for r in self.lanes[0].matrix.drain(..) {
+                user.consume(r.rec);
+            }
+            return;
+        }
+        let mut next = vec![0usize; self.lanes.len()];
+        let mut heads: std::collections::BinaryHeap<Reverse<(u64, u64, usize)>> =
+            std::collections::BinaryHeap::with_capacity(self.lanes.len());
+        for (i, l) in self.lanes.iter().enumerate() {
+            if let Some(r) = l.matrix.first() {
+                heads.push(Reverse((r.t, r.seq, i)));
+            }
+        }
+        while let Some(Reverse((_, _, i))) = heads.pop() {
+            let rec = self.lanes[i].matrix[next[i]];
+            next[i] += 1;
+            user.consume(rec.rec);
+            if let Some(r) = self.lanes[i].matrix.get(next[i]) {
+                heads.push(Reverse((r.t, r.seq, i)));
+            }
+        }
+        for l in &mut self.lanes {
+            l.matrix.clear(); // keep the allocations for the next window
+        }
+    }
+
+    /// Approximate consumer-side memory footprint across lanes.
+    pub fn memory_bytes(&self) -> u64 {
+        self.lanes
             .iter()
-            .map(|(_, v)| 8 * v.len() as u64)
-            .sum();
-        slices + batch + samples
+            .map(|l| {
+                l.asm.memory_bytes()
+                    + (l.matrix.len() * std::mem::size_of::<Stamped<Record>>()) as u64
+            })
+            .sum()
     }
 }
 
@@ -548,9 +739,9 @@ mod tests {
             wait: WaitKind::Futex,
             woken_by: 0,
         });
-        assert_eq!(u.slices.len(), 1);
-        assert_eq!(u.slices[0].addrs, vec![0xB]); // 0xA was rejected
-        assert!(!u.slices[0].from_stack_top);
+        assert_eq!(u.slices().len(), 1);
+        assert_eq!(u.slices()[0].addrs, vec![0xB]); // 0xA was rejected
+        assert!(!u.slices()[0].from_stack_top);
     }
 
     #[test]
@@ -567,8 +758,8 @@ mod tests {
             wait: WaitKind::Io,
             woken_by: 0,
         });
-        assert!(u.slices[0].from_stack_top);
-        assert_eq!(u.slices[0].addrs, vec![0x200]);
+        assert!(u.slices()[0].from_stack_top);
+        assert_eq!(u.slices()[0].addrs, vec![0x200]);
     }
 
     #[test]
@@ -714,6 +905,7 @@ mod tests {
             stack_id: 1,
             cm_fs,
             total_cm_ns: cm_fs as f64 / 1e6,
+            first_seen: u64::MAX,
             slices: 1,
             addr_freq: FxHashMap::default(),
             stack_top_samples: 0,
@@ -747,7 +939,7 @@ mod tests {
         // Buffer moved into the slice; a fresh sample starts a new one.
         u.consume(Record::Sample { pid: 3, ip: 0x2 });
         u.consume(slice_end(2, 3, 5.0, 0));
-        assert_eq!(u.slices[0].addrs, vec![0x1]);
-        assert_eq!(u.slices[1].addrs, vec![0x2]);
+        assert_eq!(u.slices()[0].addrs, vec![0x1]);
+        assert_eq!(u.slices()[1].addrs, vec![0x2]);
     }
 }

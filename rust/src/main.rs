@@ -4,10 +4,11 @@
 //! ```text
 //! gapp list-apps
 //! gapp profile --app dedup [--threads 64] [--seed 7] [--nmin 8] [--dt-us 3000]
-//!              [--shards N] [--ring-capacity R]
+//!              [--shards N] [--ring-capacity R] [--merge serial|tree]
 //!              [--format text|json|jsonl] [--output FILE]
 //! gapp live --app mysql --app dedup --window-us 5000 [--top 5] [--lru]
-//!           [--shards N] [--ring-capacity R]
+//!           [--shards N] [--ring-capacity R] [--merge serial|tree]
+//!           [--shard-partials]
 //!           [--format text|json|jsonl] [--output FILE]
 //!                                  # streaming analyzer: epoch-windowed
 //!                                  # per-window top-K; repeat --app for
@@ -17,6 +18,11 @@
 //! fired on and globally re-ordered by timestamp at read time.
 //! --shards defaults to the CPU count; --shards 1 is the single shared
 //! ring (provably equivalent output — only buffering behaviour differs).
+//! --merge picks the shard-aggregation strategy: tree (default) folds
+//! each shard locally and merges the partials pairwise; serial re-
+//! serializes the shards into one globally-ordered stream. The two are
+//! byte-identical (CI diffs them); --shard-partials additionally emits
+//! one per-shard partial event per window (JSONL transport seam).
 //! Output goes through a report sink: --format text (default; byte-
 //! identical to the pre-sink CLI), json (one schema-versioned document
 //! per session) or jsonl (one event per line — windows stream as they
@@ -41,7 +47,7 @@ use gapp::experiments::{
 };
 use gapp::gapp::sink::{self, ReportSink};
 use gapp::gapp::stream::LiveConfig;
-use gapp::gapp::{run_unprofiled, GappConfig, ReportFormat, Session};
+use gapp::gapp::{run_unprofiled, GappConfig, MergeStrategy, ReportFormat, Session};
 use gapp::simkernel::KernelConfig;
 use gapp::util::cli::Args;
 use gapp::workload::apps;
@@ -93,7 +99,8 @@ fn main() {
             );
             eprintln!(
                 "live mode: gapp live --app mysql --app dedup --window-us 5000 \
-                 [--top 5] [--lru] [--shards N] [--ring-capacity R]"
+                 [--top 5] [--lru] [--shards N] [--ring-capacity R] \
+                 [--merge serial|tree] [--shard-partials]"
             );
             eprintln!(
                 "output:    profile/live take --format text|json|jsonl and \
@@ -144,6 +151,10 @@ fn gapp_config_from(args: &Args) -> anyhow::Result<GappConfig> {
     if args.get("shards").is_some() {
         gcfg.shards = Some(args.opt_min1("shards", 0).map_err(bad)? as usize);
     }
+    let merge = args
+        .opt_choice("merge", &MergeStrategy::NAMES, gcfg.merge.name())
+        .map_err(bad)?;
+    gcfg.merge = MergeStrategy::from_name(&merge).expect("opt_choice vetted the name");
     let format = args
         .opt_choice("format", &ReportFormat::NAMES, ReportFormat::Text.name())
         .map_err(bad)?;
@@ -204,6 +215,7 @@ fn cmd_live(args: &Args, engine: EngineKind, threads: usize, seed: u64) -> anyho
         window_ns: args.opt_min1("window-us", 5000).map_err(bad)? * 1000,
         top_k: args.opt_min1("top", 5).map_err(bad)? as usize,
         sketch_entries: args.opt_min1("sketch", 64).map_err(bad)? as usize,
+        shard_partials: args.flag("shard-partials"),
     };
     let sink = report_sink(&gcfg)?;
     let mut session = Session::builder(engine.make()?)

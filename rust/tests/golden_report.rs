@@ -16,7 +16,7 @@
 
 use std::collections::BTreeMap;
 
-use gapp::gapp::{profile, GappConfig, GappSession};
+use gapp::gapp::{profile, GappConfig, GappSession, MergeStrategy};
 use gapp::runtime::AnalysisEngine;
 use gapp::simkernel::{Kernel, KernelConfig};
 use gapp::workload::apps;
@@ -73,9 +73,19 @@ fn merge_by_stack_id_equals_merge_by_frames() {
         || apps::canneal(8, 5),
     ] {
         let app = mk();
-        let session =
-            GappSession::new(GappConfig::default(), 64, AnalysisEngine::native())
-                .unwrap();
+        // Serial merge: this test re-derives the reference from the raw
+        // slice buffer, which only the serial consumer retains in
+        // `core.user` (the tree strategy folds slices in per-shard
+        // lanes; its equivalence has its own goldens).
+        let session = GappSession::new(
+            GappConfig {
+                merge: MergeStrategy::Serial,
+                ..Default::default()
+            },
+            64,
+            AnalysisEngine::native(),
+        )
+        .unwrap();
         let mut kernel = Kernel::new(KernelConfig::default());
         kernel.attach_probe(session.probe());
         app.spawn_into(&mut kernel);
@@ -91,7 +101,7 @@ fn merge_by_stack_id_equals_merge_by_frames() {
         // Reference: group raw slices by *resolved frames* (exactly what
         // the pre-interning pipeline hashed on).
         let mut by_frames: BTreeMap<Vec<u64>, (f64, u64)> = BTreeMap::new();
-        for s in core.user.slices.clone() {
+        for s in core.user.slices().to_vec() {
             let frames = core.kernel.stacks.resolve(s.stack_id).to_vec();
             let e = by_frames.entry(frames).or_insert((0.0, 0));
             e.0 += s.cm_ns;

@@ -28,9 +28,11 @@
 // Session driver they delegate to.
 #![allow(deprecated)]
 
-use gapp::gapp::stream::{merge_snapshots, run_live, LiveConfig, WindowAccumulator};
+use gapp::gapp::stream::{
+    merge_pair, merge_snapshots, merge_tree, run_live, LiveConfig, WindowAccumulator,
+};
 use gapp::gapp::userspace::{MergedPath, PathAccumulator, SliceEntry};
-use gapp::gapp::{profile, GappConfig, GappSession, Report};
+use gapp::gapp::{profile, GappConfig, GappSession, MergeStrategy, Report};
 use gapp::runtime::AnalysisEngine;
 use gapp::simkernel::{Kernel, KernelConfig, WaitKind};
 use gapp::util::check::property;
@@ -93,10 +95,15 @@ fn window_merged_report_is_byte_identical_to_batch() {
 fn window_snapshots_concatenate_to_the_exact_batch_merge() {
     let mk = || apps::canneal(8, 5);
 
-    // Batch reference: full (un-truncated) merge of all slices.
+    // Batch reference: full (un-truncated) merge of all slices —
+    // serial strategy, which is the one that retains the raw slice
+    // buffer in `core.user` for this re-merge.
+    let serial = || GappConfig {
+        merge: MergeStrategy::Serial,
+        ..Default::default()
+    };
     let app = mk();
-    let session =
-        GappSession::new(GappConfig::default(), 64, AnalysisEngine::native()).unwrap();
+    let session = GappSession::new(serial(), 64, AnalysisEngine::native()).unwrap();
     let mut kernel = Kernel::new(KernelConfig::default());
     kernel.attach_probe(session.probe());
     app.spawn_into(&mut kernel);
@@ -395,59 +402,282 @@ fn sharded_drops_sum_to_the_global_counter_across_epochs_and_shards() {
     // no mid-epoch drains. The accounting identity must hold on both
     // axes — per-window drops (summed over shards) equal the report's
     // window attribution, and per-shard totals sum to the global
-    // dropped counter.
-    let app = apps::canneal(8, 5);
-    let gcfg = GappConfig {
-        ring_capacity: 16,
-        shards: Some(4),
-        drain_threshold: usize::MAX,
-        ..Default::default()
-    };
-    let mut window_shard_totals: Vec<u64> = vec![0; 4];
-    let run = run_live(
-        std::slice::from_ref(&app),
-        KernelConfig::default(),
-        gcfg,
-        AnalysisEngine::native(),
-        LiveConfig {
-            window_ns: 5_000_000,
+    // dropped counter — under *both* merge strategies (the tree's
+    // per-shard cursors must not lose or double-charge a drop).
+    for merge in [MergeStrategy::Serial, MergeStrategy::Tree] {
+        let app = apps::canneal(8, 5);
+        let gcfg = GappConfig {
+            ring_capacity: 16,
+            shards: Some(4),
+            drain_threshold: usize::MAX,
+            merge,
             ..Default::default()
-        },
-        |w| {
-            assert_eq!(w.shard_drops.len(), 4);
-            assert_eq!(
-                w.shard_drops.iter().sum::<u64>(),
-                w.drops,
-                "window {}: shard breakdown must sum to the window total",
-                w.index
-            );
-            for (i, d) in w.shard_drops.iter().enumerate() {
-                window_shard_totals[i] += d;
-            }
-        },
-    )
-    .unwrap();
-    assert!(
-        run.report.ring_dropped > 0,
-        "16-record shards with no mid-epoch drain should overflow"
-    );
-    // Per-window attribution covers every drop...
-    let per_window: u64 = run.report.window_drops.iter().sum();
-    assert_eq!(per_window, run.report.ring_dropped);
-    // ...and so does the per-shard attribution, window by window.
-    assert_eq!(
-        window_shard_totals.iter().sum::<u64>(),
-        run.report.ring_dropped
-    );
-    // The report's final per-shard counters agree with the per-epoch
-    // deltas accumulated through the consumer's cursors.
-    assert_eq!(run.report.ring_shards.len(), 4);
-    for (i, s) in run.report.ring_shards.iter().enumerate() {
+        };
+        let mut window_shard_totals: Vec<u64> = vec![0; 4];
+        let run = run_live(
+            std::slice::from_ref(&app),
+            KernelConfig::default(),
+            gcfg,
+            AnalysisEngine::native(),
+            LiveConfig {
+                window_ns: 5_000_000,
+                ..Default::default()
+            },
+            |w| {
+                assert_eq!(w.shard_drops.len(), 4);
+                assert_eq!(
+                    w.shard_drops.iter().sum::<u64>(),
+                    w.drops,
+                    "window {}: shard breakdown must sum to the window total",
+                    w.index
+                );
+                for (i, d) in w.shard_drops.iter().enumerate() {
+                    window_shard_totals[i] += d;
+                }
+            },
+        )
+        .unwrap();
+        assert!(
+            run.report.ring_dropped > 0,
+            "16-record shards with no mid-epoch drain should overflow ({merge:?})"
+        );
+        // Per-window attribution covers every drop...
+        let per_window: u64 = run.report.window_drops.iter().sum();
+        assert_eq!(per_window, run.report.ring_dropped, "{merge:?}");
+        // ...and so does the per-shard attribution, window by window.
         assert_eq!(
-            s.dropped, window_shard_totals[i],
-            "shard {i}: cursor deltas must sum to the ring's own counter"
+            window_shard_totals.iter().sum::<u64>(),
+            run.report.ring_dropped,
+            "{merge:?}"
+        );
+        // The report's final per-shard counters agree with the per-epoch
+        // deltas accumulated through the consumer's cursors.
+        assert_eq!(run.report.ring_shards.len(), 4);
+        for (i, s) in run.report.ring_shards.iter().enumerate() {
+            assert_eq!(
+                s.dropped, window_shard_totals[i],
+                "shard {i} ({merge:?}): cursor deltas must sum to the ring's counter"
+            );
+        }
+    }
+}
+
+#[test]
+fn merge_tree_reports_are_byte_identical_to_serial() {
+    // The tentpole acceptance golden: `--merge tree` (shard-local
+    // folding + pairwise merge tree) must render byte-identically to
+    // `--merge serial` (global re-serialization) — live and batch,
+    // single-ring and sharded. Lossless runs, so buffering/drain-timing
+    // differences between the strategies cannot surface (the same
+    // caveat the shards-1-vs-4 golden carries).
+    for shards in [1usize, 4] {
+        let cfg = |merge: MergeStrategy| GappConfig {
+            shards: Some(shards),
+            merge,
+            ..Default::default()
+        };
+        // Live (epoch-windowed) drivers.
+        let live = |merge: MergeStrategy| {
+            let app = apps::canneal(8, 5);
+            run_live(
+                std::slice::from_ref(&app),
+                KernelConfig::default(),
+                cfg(merge),
+                AnalysisEngine::native(),
+                LiveConfig {
+                    window_ns: 2_000_000,
+                    ..Default::default()
+                },
+                |_| {},
+            )
+            .unwrap()
+        };
+        let s = live(MergeStrategy::Serial);
+        let t = live(MergeStrategy::Tree);
+        assert_eq!(s.report.runtime_ns, t.report.runtime_ns);
+        assert_eq!(s.report.ring_dropped, 0);
+        assert_eq!(t.report.ring_dropped, 0);
+        assert_eq!(s.sketch_top, t.sketch_top, "shards={shards}");
+        assert_eq!(s.sketch_lines, t.sketch_lines, "shards={shards}");
+        let mut a = s.report.clone();
+        let mut b = t.report.clone();
+        normalize(&mut a);
+        normalize(&mut b);
+        assert_eq!(
+            a.to_string(),
+            b.to_string(),
+            "live --shards {shards}: tree must reproduce serial byte for byte"
+        );
+        // Batch drivers (the one-window special case).
+        let batch = |merge: MergeStrategy| {
+            profile(
+                &apps::canneal(8, 5),
+                KernelConfig::default(),
+                cfg(merge),
+                AnalysisEngine::native(),
+            )
+            .unwrap()
+            .0
+        };
+        let mut a = batch(MergeStrategy::Serial);
+        let mut b = batch(MergeStrategy::Tree);
+        normalize(&mut a);
+        normalize(&mut b);
+        assert_eq!(
+            a.to_string(),
+            b.to_string(),
+            "batch --shards {shards}: tree must reproduce serial byte for byte"
         );
     }
+}
+
+#[test]
+fn system_wide_merge_tree_matches_serial_with_app_attribution() {
+    // Per-app attribution crosses the shard split (a path's slices can
+    // land on any shard under any app); the merged app histograms and
+    // dominant-app symbolization must not care.
+    let run = |merge: MergeStrategy| {
+        let pair = [
+            apps::by_name("mysql", 8, 7).unwrap(),
+            apps::by_name("dedup", 8, 7).unwrap(),
+        ];
+        run_live(
+            &pair,
+            KernelConfig::default(),
+            GappConfig {
+                shards: Some(4),
+                merge,
+                ..Default::default()
+            },
+            AnalysisEngine::native(),
+            LiveConfig {
+                window_ns: 5_000_000,
+                ..Default::default()
+            },
+            |_| {},
+        )
+        .unwrap()
+    };
+    let s = run(MergeStrategy::Serial);
+    let t = run(MergeStrategy::Tree);
+    assert!(!t.report.bottlenecks.is_empty());
+    assert!(t.report.bottlenecks.iter().all(|b| !b.apps.is_empty()));
+    let mut a = s.report.clone();
+    let mut b = t.report.clone();
+    normalize(&mut a);
+    normalize(&mut b);
+    assert_eq!(a.to_string(), b.to_string());
+}
+
+#[test]
+fn every_merge_tree_shape_equals_the_serial_global_stream_fold() {
+    // Property (satellite): deal one slice stream onto S shard FIFOs,
+    // fold each shard locally through ragged window boundaries, and
+    // combine the per-window shard partials through a *random-shape*
+    // binary merge tree. Whatever the sharding, the window boundaries
+    // and the tree shape, the result must equal the serial fold of the
+    // globally-ordered stream — associativity (PR 2), shard affinity +
+    // stamp-keyed order reconciliation (this PR).
+    property("shard partials × ragged windows × tree shapes", 24, |rng| {
+        let n = 40 + rng.pick(140) as u64;
+        let mk = |i: u64| SliceEntry {
+            ts_id: i + 1, // capture stamp: the reconciliation key
+            pid: (1 + i % 5) as u32,
+            cm_ns: 3.0 + (i as f64) * 0.813,
+            threads_av: 1.0,
+            stack_id: (i % 6) as u32,
+            addrs: vec![0x400 + i % 9],
+            from_stack_top: i % 3 == 0,
+            wait: if i % 2 == 0 {
+                WaitKind::Futex
+            } else {
+                WaitKind::Queue
+            },
+            woken_by: (i % 3) as u32,
+        };
+        let slices: Vec<SliceEntry> = (0..n).map(mk).collect();
+
+        // Serial reference: fold the stream in capture order through
+        // ragged windows, then concatenate the window snapshots.
+        let nwindows = 1 + rng.pick(4);
+        let mut boundaries: Vec<u64> =
+            (0..nwindows - 1).map(|_| rng.pick(n as usize) as u64).collect();
+        boundaries.push(n);
+        boundaries.sort_unstable();
+        let window_of = |i: u64, bounds: &[u64]| {
+            bounds.iter().position(|b| i < *b).unwrap_or(bounds.len() - 1)
+        };
+        let mut serial = WindowAccumulator::new();
+        let mut serial_windows: Vec<Vec<MergedPath>> = Vec::new();
+        for w in 0..nwindows {
+            for (i, s) in slices.iter().enumerate() {
+                if window_of(i as u64, &boundaries) == w {
+                    serial.add_slice(s, (s.pid % 2) as u16);
+                }
+            }
+            serial_windows.push(serial.snapshot());
+        }
+
+        // Tree side: random shard owner per slice (FIFO per shard, like
+        // per-CPU buffers), shard-local folds per window, then a
+        // random-shape pairwise tree over each window's partials.
+        let nshards = 1 + rng.pick(6);
+        let mut shard_of: Vec<usize> = Vec::with_capacity(n as usize);
+        for _ in 0..n {
+            shard_of.push(rng.pick(nshards));
+        }
+        let mut folders: Vec<WindowAccumulator> =
+            (0..nshards).map(|_| WindowAccumulator::new()).collect();
+        let mut tree_windows: Vec<Vec<MergedPath>> = Vec::new();
+        for w in 0..nwindows {
+            // Each shard folds its own sub-stream in shard order.
+            for shard in 0..nshards {
+                for (i, s) in slices.iter().enumerate() {
+                    if shard_of[i] == shard && window_of(i as u64, &boundaries) == w {
+                        folders[shard].add_slice(s, (s.pid % 2) as u16);
+                    }
+                }
+            }
+            let mut parts: Vec<Vec<MergedPath>> =
+                folders.iter_mut().map(|f| f.snapshot()).collect();
+            // Random tree shape: repeatedly merge two random partials
+            // until one remains. Every binary tree over the partials is
+            // reachable this way.
+            while parts.len() > 1 {
+                let i = rng.pick(parts.len());
+                let a = parts.swap_remove(i);
+                let j = rng.pick(parts.len());
+                let b = parts.swap_remove(j);
+                parts.push(merge_pair(a, b));
+            }
+            tree_windows.push(merge_tree(parts));
+        }
+
+        // Window by window, and cumulatively, the two sides agree.
+        assert_eq!(serial_windows.len(), tree_windows.len());
+        for (sw, tw) in serial_windows.iter().zip(&tree_windows) {
+            assert_eq!(sw.len(), tw.len(), "window path-set size diverged");
+            for (a, b) in sw.iter().zip(tw) {
+                assert_eq!(a.stack_id, b.stack_id, "canonical order diverged");
+                assert_eq!(a.first_seen, b.first_seen);
+                assert_eq!(a.cm_fs, b.cm_fs, "integer CMetric must match exactly");
+                assert_eq!(a.slices, b.slices);
+                assert_eq!(a.addr_freq, b.addr_freq);
+                assert_eq!(a.stack_top_samples, b.stack_top_samples);
+                assert_eq!(a.wait_hist, b.wait_hist);
+                assert_eq!(a.wakers, b.wakers);
+                assert_eq!(a.app_slices, b.app_slices);
+            }
+        }
+        let s_all = merge_snapshots(serial_windows.iter().map(|s| s.as_slice()));
+        let t_all = merge_snapshots(tree_windows.iter().map(|s| s.as_slice()));
+        assert_eq!(s_all.len(), t_all.len());
+        for (a, b) in s_all.iter().zip(&t_all) {
+            assert_eq!(a.stack_id, b.stack_id);
+            assert_eq!(a.cm_fs, b.cm_fs);
+            assert_eq!(a.slices, b.slices);
+        }
+    });
 }
 
 #[test]
