@@ -38,5 +38,28 @@ fn main() -> anyhow::Result<()> {
     for (f, n) in out.report.top_functions(5) {
         println!("  {n:>6}  {f}");
     }
+
+    // Crash-safe sessions: `.checkpoint(path)` snapshots the session
+    // state atomically at every window close (live mode) or at start
+    // (batch); after a crash, an identically-configured session with
+    // `.restore(path)` replays the completed epochs, verifies them
+    // against the snapshot, and finishes with a byte-identical report.
+    // The CLI spells it `gapp live --checkpoint FILE` / `--resume FILE`
+    // (plus `--on-overflow degrade` to absorb ring overflow instead of
+    // shedding records). For example:
+    //
+    //     Session::builder(AnalysisEngine::auto())
+    //         .app(&app)
+    //         .window_us(5_000)
+    //         .checkpoint("/var/tmp/gapp.ckpt")
+    //         .sink(HumanSink::new(std::io::stdout()))
+    //         .run()?;                       // …crash here…
+    //
+    //     Session::builder(AnalysisEngine::auto())
+    //         .app(&app)
+    //         .window_us(5_000)
+    //         .restore("/var/tmp/gapp.ckpt") // …resume, finish identically
+    //         .sink(HumanSink::new(std::io::stdout()))
+    //         .run()?;
     Ok(())
 }

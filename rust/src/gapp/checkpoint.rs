@@ -1,0 +1,806 @@
+//! Crash-safe session snapshots: a versioned `checkpoint: 1` JSON
+//! document holding everything the streaming analyzer accumulates
+//! *across* windows, written atomically at every window close.
+//!
+//! # What is (and is not) in a checkpoint
+//!
+//! The simulated kernel is deterministic and the analysis never feeds
+//! back into it, so kernel/transport state needs no serialization: a
+//! restore rebuilds the session from the same configuration and
+//! *replays* the completed epochs (draining rings normally, skipping
+//! the analysis-side folds the checkpoint already covers), which
+//! reproduces the exact pre-crash kernel, lane and drop state. The
+//! checkpoint therefore carries only the analysis accumulators that
+//! replay skips:
+//!
+//! * the cumulative merged call paths (in cumulative insertion order),
+//! * the space-saving sketch counters,
+//! * the stable re-interned userspace stack map (LRU mode),
+//! * per-window summaries, drop attribution and degrade counters.
+//!
+//! Replay doubles as an integrity check: the replayed per-window
+//! summaries must match the checkpointed ones exactly, otherwise the
+//! checkpoint belongs to a different run and the restore fails loudly.
+//!
+//! # Atomic-write contract
+//!
+//! [`Checkpoint::write_atomic`] writes `<path>.tmp` and renames it over
+//! `<path>` — a crash mid-write leaves either the previous complete
+//! checkpoint or a stray `.tmp`, never a torn document. The schema
+//! follows the sink policy: `checkpoint` is bumped only on breaking
+//! changes; unknown keys are ignored on load.
+
+use crate::ebpf::{StackMap, StackMapStats};
+use crate::gapp::stream::WindowSummary;
+use crate::gapp::userspace::MergedPath;
+use crate::simkernel::WaitKind;
+use crate::util::json::Json;
+use crate::util::FxHashMap;
+
+/// Version stamp of the checkpoint document.
+pub const CHECKPOINT_VERSION: u64 = 1;
+
+/// The configuration surface a checkpoint is only valid against. A
+/// resume with any mismatching knob would replay a *different* run and
+/// silently corrupt the analysis, so every field is checked on restore
+/// with an error naming the knob.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Fingerprint {
+    /// "live" or "batch".
+    pub mode: String,
+    pub merge: String,
+    /// Resolved ring-shard count.
+    pub shards: usize,
+    /// Epoch window length (0 for batch).
+    pub window_ns: u64,
+    /// Profiled application names, in spawn order.
+    pub apps: Vec<String>,
+    pub stack_lru: bool,
+    pub on_overflow: String,
+    pub ring_capacity: usize,
+    pub drain_threshold: u64,
+    /// Sampling period Δt (ns).
+    pub dt: u64,
+}
+
+impl Fingerprint {
+    /// Compare against the fingerprint of the resuming session; the
+    /// first mismatch is reported by knob name, stored vs current.
+    pub fn check(&self, current: &Fingerprint) -> Result<(), String> {
+        let mismatch = |knob: &str, stored: String, now: String| {
+            Err(format!(
+                "checkpoint was written by a different configuration: \
+                 {knob} is {stored} in the checkpoint but {now} in this session"
+            ))
+        };
+        if self.mode != current.mode {
+            return mismatch("mode", self.mode.clone(), current.mode.clone());
+        }
+        if self.merge != current.merge {
+            return mismatch("merge", self.merge.clone(), current.merge.clone());
+        }
+        if self.shards != current.shards {
+            return mismatch("shards", self.shards.to_string(), current.shards.to_string());
+        }
+        if self.window_ns != current.window_ns {
+            return mismatch(
+                "window_ns",
+                self.window_ns.to_string(),
+                current.window_ns.to_string(),
+            );
+        }
+        if self.apps != current.apps {
+            return mismatch(
+                "apps",
+                format!("{:?}", self.apps),
+                format!("{:?}", current.apps),
+            );
+        }
+        if self.stack_lru != current.stack_lru {
+            return mismatch(
+                "stack_lru",
+                self.stack_lru.to_string(),
+                current.stack_lru.to_string(),
+            );
+        }
+        if self.on_overflow != current.on_overflow {
+            return mismatch(
+                "on_overflow",
+                self.on_overflow.clone(),
+                current.on_overflow.clone(),
+            );
+        }
+        if self.ring_capacity != current.ring_capacity {
+            return mismatch(
+                "ring_capacity",
+                self.ring_capacity.to_string(),
+                current.ring_capacity.to_string(),
+            );
+        }
+        if self.drain_threshold != current.drain_threshold {
+            return mismatch(
+                "drain_threshold",
+                self.drain_threshold.to_string(),
+                current.drain_threshold.to_string(),
+            );
+        }
+        if self.dt != current.dt {
+            return mismatch("dt", self.dt.to_string(), current.dt.to_string());
+        }
+        Ok(())
+    }
+}
+
+/// Snapshot of the stable userspace stack map (LRU mode): every
+/// interned call path in id order, plus the stat counters (which feed
+/// `Report::stack_drops` and would otherwise be inflated by replay).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct StackSnapshot {
+    /// `frames[id]` is the call path interned under dense id `id`.
+    pub frames: Vec<Vec<u64>>,
+    pub hits: u64,
+    pub inserts: u64,
+    pub drops: u64,
+    pub evictions: u64,
+}
+
+impl StackSnapshot {
+    /// Capture the current id → frames mapping and counters.
+    pub fn of(map: &StackMap) -> StackSnapshot {
+        StackSnapshot {
+            frames: (0..map.len() as u32)
+                .map(|id| map.resolve(id).to_vec())
+                .collect(),
+            hits: map.stats.hits,
+            inserts: map.stats.inserts,
+            drops: map.stats.drops,
+            evictions: map.stats.evictions,
+        }
+    }
+
+    /// Rebuild a map with the identical dense id assignment: interning
+    /// content-deduped paths in id order reassigns 0..n in order. The
+    /// stat counters are overwritten afterwards — re-interning must not
+    /// count as new inserts.
+    pub fn rebuild(&self, name: &'static str, capacity: usize) -> Result<StackMap, String> {
+        let mut map = StackMap::new(name, capacity);
+        for (id, frames) in self.frames.iter().enumerate() {
+            let got = map.intern(frames);
+            if got != id as u32 {
+                return Err(format!(
+                    "stack snapshot is inconsistent: path {id} re-interned as id {got} \
+                     (duplicate or out-of-order frames in the checkpoint)"
+                ));
+            }
+        }
+        map.stats = StackMapStats {
+            hits: self.hits,
+            inserts: self.inserts,
+            drops: self.drops,
+            evictions: self.evictions,
+        };
+        Ok(map)
+    }
+}
+
+/// One serialized session snapshot.
+#[derive(Clone, Debug, Default)]
+pub struct Checkpoint {
+    /// Simkernel epochs completed (not windows: under the degrade
+    /// policy a widened window spans two epochs, so replay is keyed on
+    /// epochs and re-derives the window boundaries deterministically).
+    pub epochs: u64,
+    pub fingerprint: Option<Fingerprint>,
+    /// Per-window summaries of everything closed so far — also the
+    /// replay integrity oracle.
+    pub summaries: Vec<WindowSummary>,
+    pub window_drops: Vec<u64>,
+    pub degraded_windows: u64,
+    pub degraded_drains: u64,
+    /// Cumulative merged paths, in cumulative insertion order.
+    pub cumulative: Vec<MergedPath>,
+    pub sketch_cap: usize,
+    /// Sketch counters as `(stack_id, count, err)`, sorted by key.
+    pub sketch: Vec<(u32, u64, u64)>,
+    /// Stable userspace stack map (`Some` iff the run uses `--lru`).
+    pub stacks: Option<StackSnapshot>,
+}
+
+impl Default for Fingerprint {
+    fn default() -> Fingerprint {
+        Fingerprint {
+            mode: String::new(),
+            merge: String::new(),
+            shards: 0,
+            window_ns: 0,
+            apps: Vec::new(),
+            stack_lru: false,
+            on_overflow: String::new(),
+            ring_capacity: 0,
+            drain_threshold: 0,
+            dt: 0,
+        }
+    }
+}
+
+// ---- serialization -----------------------------------------------------
+
+fn wait_kind_name(w: WaitKind) -> &'static str {
+    match w {
+        WaitKind::None => "none",
+        WaitKind::Futex => "futex",
+        WaitKind::Barrier => "barrier",
+        WaitKind::Queue => "queue",
+        WaitKind::Io => "io",
+        WaitKind::Channel => "channel",
+    }
+}
+
+fn wait_kind_from_name(name: &str) -> Option<WaitKind> {
+    match name {
+        "none" => Some(WaitKind::None),
+        "futex" => Some(WaitKind::Futex),
+        "barrier" => Some(WaitKind::Barrier),
+        "queue" => Some(WaitKind::Queue),
+        "io" => Some(WaitKind::Io),
+        "channel" => Some(WaitKind::Channel),
+        _ => None,
+    }
+}
+
+/// A u64-keyed histogram as `[[key, count], …]` sorted by key — hash
+/// maps iterate nondeterministically, and checkpoint bytes must be
+/// deterministic (the serial-vs-tree equivalence test diffs documents).
+fn hist_json<K: Copy + Ord + Into<u64>>(h: &FxHashMap<K, u64>) -> Json {
+    let mut entries: Vec<(u64, u64)> = h.iter().map(|(k, v)| ((*k).into(), *v)).collect();
+    entries.sort_by_key(|e| e.0);
+    Json::Arr(
+        entries
+            .into_iter()
+            .map(|(k, v)| Json::Arr(vec![Json::u64(k), Json::u64(v)]))
+            .collect(),
+    )
+}
+
+fn path_json(p: &MergedPath) -> Json {
+    let mut waits: Vec<(&'static str, u64)> = p
+        .wait_hist
+        .iter()
+        .map(|(k, v)| (wait_kind_name(*k), *v))
+        .collect();
+    waits.sort_by_key(|e| e.0);
+    Json::obj(vec![
+        ("stack_id", Json::u64(p.stack_id as u64)),
+        ("cm_fs", Json::u64(p.cm_fs)),
+        ("first_seen", Json::u64(p.first_seen)),
+        ("slices", Json::u64(p.slices)),
+        ("stack_top_samples", Json::u64(p.stack_top_samples)),
+        ("addr_freq", hist_json(&p.addr_freq)),
+        (
+            "wait_hist",
+            Json::Arr(
+                waits
+                    .into_iter()
+                    .map(|(k, v)| Json::Arr(vec![Json::str(k), Json::u64(v)]))
+                    .collect(),
+            ),
+        ),
+        ("wakers", hist_json(&p.wakers)),
+        ("app_slices", hist_json(&p.app_slices)),
+    ])
+}
+
+fn fingerprint_json(f: &Fingerprint) -> Json {
+    Json::obj(vec![
+        ("mode", Json::str(&f.mode)),
+        ("merge", Json::str(&f.merge)),
+        ("shards", Json::usize(f.shards)),
+        ("window_ns", Json::u64(f.window_ns)),
+        ("apps", Json::Arr(f.apps.iter().map(Json::str).collect())),
+        ("stack_lru", Json::Bool(f.stack_lru)),
+        ("on_overflow", Json::str(&f.on_overflow)),
+        ("ring_capacity", Json::usize(f.ring_capacity)),
+        ("drain_threshold", Json::u64(f.drain_threshold)),
+        ("dt", Json::u64(f.dt)),
+    ])
+}
+
+impl Checkpoint {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("checkpoint", Json::u64(CHECKPOINT_VERSION)),
+            ("epochs", Json::u64(self.epochs)),
+            (
+                "fingerprint",
+                self.fingerprint
+                    .as_ref()
+                    .map(fingerprint_json)
+                    .unwrap_or(Json::Null),
+            ),
+            (
+                "summaries",
+                Json::Arr(
+                    self.summaries
+                        .iter()
+                        .map(|s| {
+                            Json::obj(vec![
+                                ("index", Json::u64(s.index)),
+                                ("slices", Json::u64(s.slices)),
+                                ("drained", Json::u64(s.drained)),
+                                ("drops", Json::u64(s.drops)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "window_drops",
+                Json::Arr(self.window_drops.iter().map(|d| Json::u64(*d)).collect()),
+            ),
+            ("degraded_windows", Json::u64(self.degraded_windows)),
+            ("degraded_drains", Json::u64(self.degraded_drains)),
+            (
+                "cumulative",
+                Json::Arr(self.cumulative.iter().map(path_json).collect()),
+            ),
+            (
+                "sketch",
+                Json::obj(vec![
+                    ("cap", Json::usize(self.sketch_cap)),
+                    (
+                        "counters",
+                        Json::Arr(
+                            self.sketch
+                                .iter()
+                                .map(|(k, c, e)| {
+                                    Json::Arr(vec![
+                                        Json::u64(*k as u64),
+                                        Json::u64(*c),
+                                        Json::u64(*e),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ),
+                ]),
+            ),
+            (
+                "stacks",
+                match &self.stacks {
+                    None => Json::Null,
+                    Some(s) => Json::obj(vec![
+                        (
+                            "frames",
+                            Json::Arr(
+                                s.frames
+                                    .iter()
+                                    .map(|f| {
+                                        Json::Arr(
+                                            f.iter().map(|a| Json::u64(*a)).collect(),
+                                        )
+                                    })
+                                    .collect(),
+                            ),
+                        ),
+                        ("hits", Json::u64(s.hits)),
+                        ("inserts", Json::u64(s.inserts)),
+                        ("drops", Json::u64(s.drops)),
+                        ("evictions", Json::u64(s.evictions)),
+                    ]),
+                },
+            ),
+        ])
+    }
+
+    pub fn from_json(doc: &Json) -> Result<Checkpoint, String> {
+        let version = doc
+            .get("checkpoint")
+            .ok_or("checkpoint: missing \"checkpoint\" version stamp")?
+            .as_u64()
+            .ok_or("checkpoint: \"checkpoint\" is not a u64")?;
+        if version != CHECKPOINT_VERSION {
+            return Err(format!(
+                "checkpoint: unsupported version {version} (this build reads \
+                 version {CHECKPOINT_VERSION}; version bumps are breaking by policy)"
+            ));
+        }
+        let fingerprint = match doc.get("fingerprint") {
+            None | Some(Json::Null) => None,
+            Some(f) => Some(Fingerprint {
+                mode: get_str(f, "fingerprint", "mode")?,
+                merge: get_str(f, "fingerprint", "merge")?,
+                shards: get_u64(f, "fingerprint", "shards")? as usize,
+                window_ns: get_u64(f, "fingerprint", "window_ns")?,
+                apps: f
+                    .get("apps")
+                    .and_then(|a| a.as_arr())
+                    .ok_or("checkpoint: \"fingerprint.apps\" is not an array")?
+                    .iter()
+                    .map(|a| {
+                        a.as_str()
+                            .map(String::from)
+                            .ok_or("checkpoint: app name is not a string".to_string())
+                    })
+                    .collect::<Result<Vec<_>, _>>()?,
+                stack_lru: f
+                    .get("stack_lru")
+                    .and_then(|b| b.as_bool())
+                    .ok_or("checkpoint: \"fingerprint.stack_lru\" is not a bool")?,
+                on_overflow: get_str(f, "fingerprint", "on_overflow")?,
+                ring_capacity: get_u64(f, "fingerprint", "ring_capacity")? as usize,
+                drain_threshold: get_u64(f, "fingerprint", "drain_threshold")?,
+                dt: get_u64(f, "fingerprint", "dt")?,
+            }),
+        };
+        let summaries = doc
+            .get("summaries")
+            .and_then(|s| s.as_arr())
+            .ok_or("checkpoint: \"summaries\" is not an array")?
+            .iter()
+            .map(|s| {
+                Ok(WindowSummary {
+                    index: get_u64(s, "summaries", "index")?,
+                    slices: get_u64(s, "summaries", "slices")?,
+                    drained: get_u64(s, "summaries", "drained")?,
+                    drops: get_u64(s, "summaries", "drops")?,
+                })
+            })
+            .collect::<Result<Vec<_>, String>>()?;
+        let window_drops = doc
+            .get("window_drops")
+            .and_then(|w| w.as_arr())
+            .ok_or("checkpoint: \"window_drops\" is not an array")?
+            .iter()
+            .map(|d| {
+                d.as_u64()
+                    .ok_or("checkpoint: non-u64 window_drops entry".to_string())
+            })
+            .collect::<Result<Vec<_>, _>>()?;
+        let cumulative = doc
+            .get("cumulative")
+            .and_then(|c| c.as_arr())
+            .ok_or("checkpoint: \"cumulative\" is not an array")?
+            .iter()
+            .map(path_from_json)
+            .collect::<Result<Vec<_>, _>>()?;
+        let sketch_obj = doc.get("sketch").ok_or("checkpoint: missing \"sketch\"")?;
+        let sketch_cap = get_u64(sketch_obj, "sketch", "cap")? as usize;
+        let sketch = sketch_obj
+            .get("counters")
+            .and_then(|c| c.as_arr())
+            .ok_or("checkpoint: \"sketch.counters\" is not an array")?
+            .iter()
+            .map(|e| {
+                let t = triple_u64(e, "sketch counter")?;
+                Ok((t.0 as u32, t.1, t.2))
+            })
+            .collect::<Result<Vec<_>, String>>()?;
+        let stacks = match doc.get("stacks") {
+            None | Some(Json::Null) => None,
+            Some(s) => Some(StackSnapshot {
+                frames: s
+                    .get("frames")
+                    .and_then(|f| f.as_arr())
+                    .ok_or("checkpoint: \"stacks.frames\" is not an array")?
+                    .iter()
+                    .map(|f| {
+                        f.as_arr()
+                            .ok_or("checkpoint: stack frames entry is not an array")?
+                            .iter()
+                            .map(|a| {
+                                a.as_u64()
+                                    .ok_or("checkpoint: non-u64 frame address".to_string())
+                            })
+                            .collect::<Result<Vec<_>, _>>()
+                    })
+                    .collect::<Result<Vec<_>, _>>()?,
+                hits: get_u64(s, "stacks", "hits")?,
+                inserts: get_u64(s, "stacks", "inserts")?,
+                drops: get_u64(s, "stacks", "drops")?,
+                evictions: get_u64(s, "stacks", "evictions")?,
+            }),
+        };
+        Ok(Checkpoint {
+            epochs: get_u64(doc, "checkpoint", "epochs")?,
+            fingerprint,
+            summaries,
+            window_drops,
+            degraded_windows: get_u64(doc, "checkpoint", "degraded_windows")?,
+            degraded_drains: get_u64(doc, "checkpoint", "degraded_drains")?,
+            cumulative,
+            sketch_cap,
+            sketch,
+            stacks,
+        })
+    }
+
+    /// Write the checkpoint atomically: serialize to `<path>.tmp`, then
+    /// rename over `path`. A crash at any point leaves either the old
+    /// complete document or a stray temp file — never a torn one.
+    pub fn write_atomic(&self, path: &str) -> anyhow::Result<()> {
+        let tmp = format!("{path}.tmp");
+        let text = self.to_json().to_compact();
+        std::fs::write(&tmp, text.as_bytes())
+            .map_err(|e| anyhow::anyhow!("cannot write checkpoint {tmp:?}: {e}"))?;
+        std::fs::rename(&tmp, path)
+            .map_err(|e| anyhow::anyhow!("cannot publish checkpoint {path:?}: {e}"))?;
+        Ok(())
+    }
+
+    /// Read and parse a checkpoint file.
+    pub fn load(path: &str) -> anyhow::Result<Checkpoint> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("cannot read checkpoint {path:?}: {e}"))?;
+        let doc = Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("checkpoint {path:?} is corrupt: {e}"))?;
+        Checkpoint::from_json(&doc)
+            .map_err(|e| anyhow::anyhow!("checkpoint {path:?}: {e}"))
+    }
+}
+
+fn get_u64(v: &Json, ctx: &str, key: &str) -> Result<u64, String> {
+    v.get(key)
+        .ok_or_else(|| format!("checkpoint: {ctx:?} is missing {key:?}"))?
+        .as_u64()
+        .ok_or_else(|| format!("checkpoint: {ctx:?} field {key:?} is not a u64"))
+}
+
+fn get_str(v: &Json, ctx: &str, key: &str) -> Result<String, String> {
+    Ok(v.get(key)
+        .ok_or_else(|| format!("checkpoint: {ctx:?} is missing {key:?}"))?
+        .as_str()
+        .ok_or_else(|| format!("checkpoint: {ctx:?} field {key:?} is not a string"))?
+        .to_string())
+}
+
+fn triple_u64(v: &Json, what: &str) -> Result<(u64, u64, u64), String> {
+    let arr = v
+        .as_arr()
+        .ok_or_else(|| format!("checkpoint: {what} is not an array"))?;
+    if arr.len() != 3 {
+        return Err(format!("checkpoint: {what} must have 3 entries"));
+    }
+    let n = |j: &Json| {
+        j.as_u64()
+            .ok_or_else(|| format!("checkpoint: {what} entry is not a u64"))
+    };
+    Ok((n(&arr[0])?, n(&arr[1])?, n(&arr[2])?))
+}
+
+fn pair_u64(v: &Json, what: &str) -> Result<(u64, u64), String> {
+    let arr = v
+        .as_arr()
+        .ok_or_else(|| format!("checkpoint: {what} is not an array"))?;
+    if arr.len() != 2 {
+        return Err(format!("checkpoint: {what} must have 2 entries"));
+    }
+    let n = |j: &Json| {
+        j.as_u64()
+            .ok_or_else(|| format!("checkpoint: {what} entry is not a u64"))
+    };
+    Ok((n(&arr[0])?, n(&arr[1])?))
+}
+
+fn path_from_json(v: &Json) -> Result<MergedPath, String> {
+    let mut p = MergedPath::new(get_u64(v, "path", "stack_id")? as u32);
+    p.cm_fs = get_u64(v, "path", "cm_fs")?;
+    p.total_cm_ns = p.cm_fs as f64 / 1e6;
+    p.first_seen = get_u64(v, "path", "first_seen")?;
+    p.slices = get_u64(v, "path", "slices")?;
+    p.stack_top_samples = get_u64(v, "path", "stack_top_samples")?;
+    for e in v
+        .get("addr_freq")
+        .and_then(|a| a.as_arr())
+        .ok_or("checkpoint: path \"addr_freq\" is not an array")?
+    {
+        let (k, n) = pair_u64(e, "addr_freq entry")?;
+        p.addr_freq.insert(k, n);
+    }
+    for e in v
+        .get("wait_hist")
+        .and_then(|a| a.as_arr())
+        .ok_or("checkpoint: path \"wait_hist\" is not an array")?
+    {
+        let arr = e
+            .as_arr()
+            .ok_or("checkpoint: wait_hist entry is not an array")?;
+        if arr.len() != 2 {
+            return Err("checkpoint: wait_hist entry must have 2 entries".to_string());
+        }
+        let name = arr[0]
+            .as_str()
+            .ok_or("checkpoint: wait kind is not a string")?;
+        let kind = wait_kind_from_name(name)
+            .ok_or_else(|| format!("checkpoint: unknown wait kind {name:?}"))?;
+        let n = arr[1]
+            .as_u64()
+            .ok_or("checkpoint: wait_hist count is not a u64")?;
+        p.wait_hist.insert(kind, n);
+    }
+    for e in v
+        .get("wakers")
+        .and_then(|a| a.as_arr())
+        .ok_or("checkpoint: path \"wakers\" is not an array")?
+    {
+        let (k, n) = pair_u64(e, "wakers entry")?;
+        p.wakers.insert(k as u32, n);
+    }
+    for e in v
+        .get("app_slices")
+        .and_then(|a| a.as_arr())
+        .ok_or("checkpoint: path \"app_slices\" is not an array")?
+    {
+        let (k, n) = pair_u64(e, "app_slices entry")?;
+        p.app_slices.insert(k as u16, n);
+    }
+    Ok(p)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_path(id: u32) -> MergedPath {
+        let mut p = MergedPath::new(id);
+        p.cm_fs = 2_500_000_000;
+        p.total_cm_ns = p.cm_fs as f64 / 1e6;
+        p.first_seen = 41;
+        p.slices = 3;
+        p.stack_top_samples = 1;
+        p.addr_freq.insert(0x40, 2);
+        p.addr_freq.insert(0x80, 1);
+        p.wait_hist.insert(WaitKind::Futex, 2);
+        p.wait_hist.insert(WaitKind::None, 1);
+        p.wakers.insert(7, 2);
+        p.app_slices.insert(0, 3);
+        p
+    }
+
+    fn sample_checkpoint() -> Checkpoint {
+        Checkpoint {
+            epochs: 3,
+            fingerprint: Some(Fingerprint {
+                mode: "live".into(),
+                merge: "tree".into(),
+                shards: 4,
+                window_ns: 5_000_000,
+                apps: vec!["mysql".into(), "dedup".into()],
+                stack_lru: true,
+                on_overflow: "degrade".into(),
+                ring_capacity: 1 << 20,
+                drain_threshold: 1 << 14,
+                dt: 3_000_000,
+            }),
+            summaries: vec![
+                WindowSummary {
+                    index: 1,
+                    slices: 5,
+                    drained: 40,
+                    drops: 0,
+                },
+                WindowSummary {
+                    index: 2,
+                    slices: 2,
+                    drained: 13,
+                    drops: 4,
+                },
+            ],
+            window_drops: vec![0, 4],
+            degraded_windows: 1,
+            degraded_drains: 2,
+            cumulative: vec![sample_path(0), sample_path(2)],
+            sketch_cap: 64,
+            sketch: vec![(0, 100, 0), (2, 50, 10)],
+            stacks: Some(StackSnapshot {
+                frames: vec![vec![0x40, 0x80], vec![0x90]],
+                hits: 6,
+                inserts: 2,
+                drops: 0,
+                evictions: 0,
+            }),
+        }
+    }
+
+    #[test]
+    fn checkpoints_round_trip_through_json() {
+        let cp = sample_checkpoint();
+        let doc = Json::parse(&cp.to_json().to_compact()).unwrap();
+        let rt = Checkpoint::from_json(&doc).unwrap();
+        assert_eq!(rt.epochs, cp.epochs);
+        assert_eq!(rt.fingerprint, cp.fingerprint);
+        assert_eq!(rt.window_drops, cp.window_drops);
+        assert_eq!(rt.degraded_windows, 1);
+        assert_eq!(rt.degraded_drains, 2);
+        assert_eq!(rt.summaries.len(), 2);
+        assert_eq!(rt.summaries[1].drops, 4);
+        assert_eq!(rt.sketch_cap, 64);
+        assert_eq!(rt.sketch, cp.sketch);
+        assert_eq!(rt.stacks, cp.stacks);
+        assert_eq!(rt.cumulative.len(), 2);
+        let (a, b) = (&rt.cumulative[0], &cp.cumulative[0]);
+        assert_eq!(a.stack_id, b.stack_id);
+        assert_eq!(a.cm_fs, b.cm_fs);
+        assert_eq!(a.first_seen, b.first_seen);
+        assert_eq!(a.addr_freq, b.addr_freq);
+        assert_eq!(a.wait_hist, b.wait_hist);
+        assert_eq!(a.wakers, b.wakers);
+        assert_eq!(a.app_slices, b.app_slices);
+        assert!((a.total_cm_ns - b.total_cm_ns).abs() < 1e-9);
+        // Serialization is deterministic (maps are key-sorted).
+        assert_eq!(cp.to_json().to_compact(), rt.to_json().to_compact());
+    }
+
+    #[test]
+    fn atomic_write_and_load_round_trip() {
+        let dir = std::env::temp_dir().join("gapp_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ckpt.json");
+        let path = path.to_str().unwrap();
+        let cp = sample_checkpoint();
+        cp.write_atomic(path).unwrap();
+        // The temp file never survives a successful publish.
+        assert!(!std::path::Path::new(&format!("{path}.tmp")).exists());
+        let rt = Checkpoint::load(path).unwrap();
+        assert_eq!(rt.to_json().to_compact(), cp.to_json().to_compact());
+        std::fs::remove_file(path).unwrap();
+    }
+
+    #[test]
+    fn foreign_versions_and_corrupt_documents_error_loudly() {
+        let err = Checkpoint::from_json(&Json::parse("{\"checkpoint\": 2}").unwrap())
+            .unwrap_err();
+        assert!(err.contains("version 2"), "{err}");
+        let err = Checkpoint::from_json(&Json::parse("{\"epochs\": 1}").unwrap())
+            .unwrap_err();
+        assert!(err.contains("version stamp"), "{err}");
+        let err = Checkpoint::from_json(
+            &Json::parse("{\"checkpoint\": 1, \"epochs\": 1}").unwrap(),
+        )
+        .unwrap_err();
+        assert!(err.contains("summaries"), "{err}");
+        // Unknown wait kinds (corruption or a foreign writer) fail.
+        let mut doc = sample_checkpoint().to_json().to_compact();
+        doc = doc.replace("futex", "vibes");
+        let err =
+            Checkpoint::from_json(&Json::parse(&doc).unwrap()).unwrap_err();
+        assert!(err.contains("vibes"), "{err}");
+    }
+
+    #[test]
+    fn fingerprint_mismatches_name_the_knob() {
+        let a = sample_checkpoint().fingerprint.unwrap();
+        let mut b = a.clone();
+        b.shards = 1;
+        let err = a.check(&b).unwrap_err();
+        assert!(err.contains("shards"), "{err}");
+        assert!(err.contains('4') && err.contains('1'), "{err}");
+        let mut c = a.clone();
+        c.merge = "serial".into();
+        let err = a.check(&c).unwrap_err();
+        assert!(err.contains("merge"), "{err}");
+        assert!(a.check(&a.clone()).is_ok());
+    }
+
+    #[test]
+    fn stack_snapshots_rebuild_with_identical_ids_and_stats() {
+        let mut map = StackMap::new("orig", 1 << 10);
+        let a = map.intern(&[0x40, 0x80]);
+        let b = map.intern(&[0x90]);
+        let a2 = map.intern(&[0x40, 0x80]); // hit
+        assert_eq!(a, a2);
+        let snap = StackSnapshot::of(&map);
+        let rebuilt = snap.rebuild("rebuilt", 1 << 10).unwrap();
+        assert_eq!(rebuilt.len(), 2);
+        assert_eq!(rebuilt.resolve(a), map.resolve(a));
+        assert_eq!(rebuilt.resolve(b), map.resolve(b));
+        assert_eq!(rebuilt.stats.hits, map.stats.hits);
+        assert_eq!(rebuilt.stats.inserts, map.stats.inserts);
+        // A duplicated path cannot rebuild densely — loud error.
+        let bad = StackSnapshot {
+            frames: vec![vec![1], vec![1]],
+            ..Default::default()
+        };
+        let err = bad.rebuild("dup", 16).unwrap_err();
+        assert!(err.contains("re-interned"), "{err}");
+    }
+}

@@ -76,6 +76,44 @@ impl MergeStrategy {
     }
 }
 
+/// What the session does when a ring shard is about to overflow
+/// (`--on-overflow`): shed records like a real perf buffer, or degrade
+/// the analysis resolution to avoid losing data.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum OverflowPolicy {
+    /// Drop the newest records once a ring is full and count the drops
+    /// — the kernel-side behaviour of a real BPF ring buffer, and the
+    /// historical behaviour of every GAPP mode.
+    #[default]
+    Shed,
+    /// Keep the data, lose resolution instead: emergency-drain a ring
+    /// that is about to overflow, and widen the current epoch window
+    /// (absorb the next epoch) when that happened, so the analyzer
+    /// trades per-window granularity for completeness. Every decision
+    /// is accounted in the report and emitted as a `Degraded` event.
+    Degrade,
+}
+
+impl OverflowPolicy {
+    /// Accepted `--on-overflow` values, in display order.
+    pub const NAMES: [&'static str; 2] = ["shed", "degrade"];
+
+    pub fn from_name(name: &str) -> Option<OverflowPolicy> {
+        match name {
+            "shed" => Some(OverflowPolicy::Shed),
+            "degrade" => Some(OverflowPolicy::Degrade),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            OverflowPolicy::Shed => "shed",
+            OverflowPolicy::Degrade => "degrade",
+        }
+    }
+}
+
 /// Profiler configuration (§5.1 defaults).
 #[derive(Clone, Debug)]
 pub struct GappConfig {
@@ -121,6 +159,10 @@ pub struct GappConfig {
     pub format: ReportFormat,
     /// Report destination path (CLI `--output FILE`); `None` = stdout.
     pub output: Option<String>,
+    /// Overflow policy (CLI `--on-overflow shed|degrade`): what the
+    /// session does when a ring shard is about to overflow. `Shed`
+    /// (default) keeps the historical drop-and-count behaviour.
+    pub on_overflow: OverflowPolicy,
 }
 
 impl Default for GappConfig {
@@ -138,6 +180,7 @@ impl Default for GappConfig {
             merge: MergeStrategy::Tree,
             format: ReportFormat::Text,
             output: None,
+            on_overflow: OverflowPolicy::Shed,
         }
     }
 }
@@ -196,7 +239,18 @@ mod tests {
         assert_eq!(c.merge, MergeStrategy::Tree); // shard-local folding
         assert_eq!(c.format, ReportFormat::Text);
         assert!(c.output.is_none());
+        assert_eq!(c.on_overflow, OverflowPolicy::Shed);
         assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn overflow_policy_names_round_trip() {
+        for name in OverflowPolicy::NAMES {
+            let p = OverflowPolicy::from_name(name).unwrap();
+            assert_eq!(p.name(), name);
+        }
+        assert!(OverflowPolicy::from_name("bogus").is_none());
+        assert_eq!(OverflowPolicy::default(), OverflowPolicy::Shed);
     }
 
     #[test]

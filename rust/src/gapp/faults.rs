@@ -1,0 +1,300 @@
+//! Deterministic fault injection for crash/degradation testing.
+//!
+//! A [`FaultPlan`] is a small JSON document (CLI `--fault-plan FILE`)
+//! describing adverse conditions the session driver injects into an
+//! otherwise-normal run, all keyed on the deterministic epoch counter
+//! so a faulted run is exactly reproducible (and replayable on
+//! restore):
+//!
+//! * **overflow bursts** — push a burst of payload-free
+//!   [`Record::Noise`] records into one ring shard at an epoch start,
+//!   modelling a foreign tracer or perf storm sharing the buffer;
+//! * **a stalled shard lane** — suppress the watermark consumer for one
+//!   shard over an epoch range, so its ring fills and (under the shed
+//!   policy) drops, modelling a wedged per-CPU reader; the window-close
+//!   epoch drain still runs, as a restarted reader would catch up;
+//! * **kill points** — abort the session with an error right after a
+//!   chosen window closes (and after its checkpoint is written), the
+//!   crash half of the kill → restore → finish recovery invariant;
+//! * **corrupt JSONL** — [`corrupt_jsonl`] deterministically truncates
+//!   and mutates partial-event lines, feeding the quarantine path of
+//!   the fleet aggregation reader.
+//!
+//! [`HazardControl`] is the live per-session state those injections
+//! (and the `--on-overflow degrade` policy) maintain; it lives on
+//! [`crate::gapp::GappCore`] so the probe hot path can consult it.
+//!
+//! [`Record::Noise`]: crate::gapp::records::Record::Noise
+
+use crate::util::json::Json;
+use crate::util::Prng;
+
+/// Version stamp of the fault-plan document.
+pub const FAULT_PLAN_VERSION: u64 = 1;
+
+/// One injected burst of foreign ring traffic.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct OverflowBurst {
+    /// 1-based epoch at whose start the burst is pushed.
+    pub epoch: u64,
+    /// CPU whose ring shard receives the burst (routed `cpu % shards`,
+    /// like every other record).
+    pub cpu: usize,
+    /// Number of `Record::Noise` records pushed.
+    pub records: u64,
+}
+
+/// A stalled shard-lane consumer: watermark drains for `shard` are
+/// suppressed while `from_epoch <= epoch < from_epoch + epochs`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StallSpec {
+    pub shard: usize,
+    /// 1-based first stalled epoch.
+    pub from_epoch: u64,
+    /// Number of consecutive stalled epochs.
+    pub epochs: u64,
+}
+
+/// A deterministic schedule of injected faults (`--fault-plan FILE`).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    pub bursts: Vec<OverflowBurst>,
+    pub stall: Option<StallSpec>,
+    /// Abort the session (with a recognizable error) right after this
+    /// 1-based window closes — after the window's checkpoint write, so
+    /// recovery can resume from it. `Some(0)` kills a batch session
+    /// before its single run (degenerate: resume restarts from zero).
+    pub kill_after_window: Option<u64>,
+}
+
+impl FaultPlan {
+    /// Parse a fault-plan document. Unknown keys are rejected — a typo
+    /// in a fault plan must not silently disable the fault it meant to
+    /// inject (the opposite of the sink-schema policy, on purpose:
+    /// plans are operator input, not wire data).
+    pub fn parse(text: &str) -> Result<FaultPlan, String> {
+        let doc = Json::parse(text).map_err(|e| format!("fault plan: {e}"))?;
+        let fields = match &doc {
+            Json::Obj(fields) => fields,
+            _ => return Err("fault plan: document must be an object".to_string()),
+        };
+        let version = doc
+            .get("fault_plan")
+            .ok_or("fault plan: missing \"fault_plan\" version stamp")?
+            .as_u64()
+            .ok_or("fault plan: \"fault_plan\" is not a u64")?;
+        if version != FAULT_PLAN_VERSION {
+            return Err(format!(
+                "fault plan: unsupported version {version} (expected {FAULT_PLAN_VERSION})"
+            ));
+        }
+        let mut plan = FaultPlan::default();
+        for (key, value) in fields {
+            match key.as_str() {
+                "fault_plan" => {}
+                "overflow_bursts" => {
+                    let arr = value
+                        .as_arr()
+                        .ok_or("fault plan: \"overflow_bursts\" is not an array")?;
+                    for b in arr {
+                        plan.bursts.push(OverflowBurst {
+                            epoch: field_u64(b, "overflow_bursts", "epoch")?,
+                            cpu: field_u64(b, "overflow_bursts", "cpu")? as usize,
+                            records: field_u64(b, "overflow_bursts", "records")?,
+                        });
+                    }
+                }
+                "stall" => {
+                    plan.stall = Some(StallSpec {
+                        shard: field_u64(value, "stall", "shard")? as usize,
+                        from_epoch: field_u64(value, "stall", "from_epoch")?,
+                        epochs: field_u64(value, "stall", "epochs")?,
+                    });
+                }
+                "kill_after_window" => {
+                    plan.kill_after_window = Some(value.as_u64().ok_or(
+                        "fault plan: \"kill_after_window\" is not a u64",
+                    )?);
+                }
+                other => {
+                    return Err(format!(
+                        "fault plan: unknown key {other:?} (a typo would silently \
+                         disable the fault it meant to inject)"
+                    ))
+                }
+            }
+        }
+        Ok(plan)
+    }
+
+    /// Read and parse `--fault-plan FILE`.
+    pub fn load(path: &str) -> Result<FaultPlan, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("cannot read fault plan {path:?}: {e}"))?;
+        FaultPlan::parse(&text)
+    }
+
+    /// Bursts scheduled for the start of `epoch` (1-based).
+    pub fn bursts_at(&self, epoch: u64) -> impl Iterator<Item = &OverflowBurst> {
+        self.bursts.iter().filter(move |b| b.epoch == epoch)
+    }
+
+    /// The shard whose watermark consumer is stalled during `epoch`.
+    pub fn stalled_shard_at(&self, epoch: u64) -> Option<usize> {
+        self.stall.and_then(|s| {
+            (epoch >= s.from_epoch && epoch < s.from_epoch.saturating_add(s.epochs))
+                .then_some(s.shard)
+        })
+    }
+}
+
+fn field_u64(v: &Json, ctx: &str, key: &str) -> Result<u64, String> {
+    v.get(key)
+        .ok_or_else(|| format!("fault plan: {ctx:?} entry missing {key:?}"))?
+        .as_u64()
+        .ok_or_else(|| format!("fault plan: {ctx:?} field {key:?} is not a u64"))
+}
+
+/// Live fault/degradation state consulted on the probe hot path. Lives
+/// on [`crate::gapp::GappCore`]; the session driver re-arms it per
+/// epoch from the [`FaultPlan`] and the overflow policy, so a resumed
+/// run replays the exact same hazards.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct HazardControl {
+    /// `--on-overflow degrade`: emergency-drain rings about to
+    /// overflow instead of letting them shed.
+    pub degrade: bool,
+    /// Watermark (and emergency) drains suppressed for this shard —
+    /// the stalled-lane fault for the current epoch.
+    pub stalled_shard: Option<usize>,
+    /// Emergency drains performed since the current window opened
+    /// (taken and reset by the driver at window close).
+    pub window_drains: u64,
+    /// Cumulative emergency drains over the whole session.
+    pub total_drains: u64,
+}
+
+/// Headroom (in records) at which the degrade policy emergency-drains
+/// a ring. The check runs after the probe handler pushed this event's
+/// records (an event emits at most a handful), so a small margin is
+/// needed to act strictly before the ring can overflow.
+pub const DEGRADE_HEADROOM: usize = 8;
+
+/// Deterministically corrupt a JSONL stream: every `every`-th line is
+/// either truncated mid-way, has one character clobbered, or loses its
+/// closing brace — the three corruption shapes a torn write or a
+/// garbled transport produces. Returns the corrupted text; line count
+/// is preserved. Used by the quarantine tests and the CI smoke.
+pub fn corrupt_jsonl(text: &str, seed: u64, every: usize) -> String {
+    assert!(every >= 1, "corrupt_jsonl: every must be >= 1");
+    let mut rng = Prng::new(seed);
+    let mut out = String::with_capacity(text.len());
+    for (i, line) in text.lines().enumerate() {
+        if i % every == every - 1 && !line.is_empty() {
+            let chars: Vec<char> = line.chars().collect();
+            match rng.below(3) {
+                // Torn write: keep a strict, non-empty prefix.
+                0 if chars.len() >= 2 => {
+                    let keep = 1 + rng.below(chars.len() as u64 - 1) as usize;
+                    out.extend(chars[..keep].iter());
+                }
+                // Bit rot: clobber one character.
+                1 => {
+                    let at = rng.below(chars.len() as u64) as usize;
+                    let mut c = chars.clone();
+                    c[at] = '#';
+                    out.extend(c.iter());
+                }
+                // Lost tail: drop the final character.
+                _ => out.extend(chars[..chars.len() - 1].iter()),
+            }
+        } else {
+            out.push_str(line);
+        }
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plans_parse_and_answer_schedule_queries() {
+        let plan = FaultPlan::parse(
+            r#"{
+                "fault_plan": 1,
+                "overflow_bursts": [
+                    {"epoch": 2, "cpu": 1, "records": 300},
+                    {"epoch": 2, "cpu": 3, "records": 50},
+                    {"epoch": 4, "cpu": 0, "records": 10}
+                ],
+                "stall": {"shard": 1, "from_epoch": 3, "epochs": 2},
+                "kill_after_window": 3
+            }"#,
+        )
+        .unwrap();
+        assert_eq!(plan.bursts_at(2).count(), 2);
+        assert_eq!(plan.bursts_at(1).count(), 0);
+        assert_eq!(plan.bursts_at(4).next().unwrap().records, 10);
+        assert_eq!(plan.stalled_shard_at(2), None);
+        assert_eq!(plan.stalled_shard_at(3), Some(1));
+        assert_eq!(plan.stalled_shard_at(4), Some(1));
+        assert_eq!(plan.stalled_shard_at(5), None);
+        assert_eq!(plan.kill_after_window, Some(3));
+    }
+
+    #[test]
+    fn empty_plan_is_valid_and_inert() {
+        let plan = FaultPlan::parse(r#"{"fault_plan": 1}"#).unwrap();
+        assert_eq!(plan, FaultPlan::default());
+        assert_eq!(plan.stalled_shard_at(1), None);
+        assert!(plan.kill_after_window.is_none());
+    }
+
+    #[test]
+    fn bad_plans_get_descriptive_errors() {
+        for (text, what) in [
+            ("[1]", "object"),
+            ("{\"overflow_bursts\": []}", "version stamp"),
+            ("{\"fault_plan\": 2}", "version 2"),
+            ("{\"fault_plan\": 1, \"krash\": true}", "krash"),
+            (
+                "{\"fault_plan\": 1, \"stall\": {\"shard\": 0}}",
+                "from_epoch",
+            ),
+            (
+                "{\"fault_plan\": 1, \"overflow_bursts\": [{\"epoch\": 1}]}",
+                "cpu",
+            ),
+            ("{\"fault_plan\": 1, \"kill_after_window\": \"x\"}", "u64"),
+            ("{not json", "fault plan"),
+        ] {
+            let err = FaultPlan::parse(text).unwrap_err();
+            assert!(err.contains(what), "{text}: {err:?} should mention {what:?}");
+        }
+    }
+
+    #[test]
+    fn jsonl_corruption_is_deterministic_and_line_preserving() {
+        let text = "{\"a\":1}\n{\"b\":2}\n{\"c\":3}\n{\"d\":4}\n";
+        let a = corrupt_jsonl(text, 7, 2);
+        let b = corrupt_jsonl(text, 7, 2);
+        assert_eq!(a, b, "same seed must corrupt identically");
+        assert_eq!(a.lines().count(), 4);
+        // Untouched lines survive verbatim; touched lines differ.
+        let (orig, corr): (Vec<&str>, Vec<&str>) =
+            (text.lines().collect(), a.lines().collect());
+        assert_eq!(orig[0], corr[0]);
+        assert_eq!(orig[2], corr[2]);
+        assert_ne!(orig[1], corr[1]);
+        assert_ne!(orig[3], corr[3]);
+        // Seeding matters: some other seed must corrupt differently
+        // (any single pair of seeds may collide on these short lines).
+        assert!(
+            (8..40).any(|seed| corrupt_jsonl(text, seed, 2) != a),
+            "corruption ignores its seed"
+        );
+    }
+}

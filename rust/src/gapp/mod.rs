@@ -30,6 +30,8 @@ pub mod classify;
 pub mod stream;
 pub mod sink;
 pub mod session;
+pub mod faults;
+pub mod checkpoint;
 
 use std::cell::RefCell;
 use std::rc::Rc;
@@ -44,7 +46,7 @@ use crate::workload::{App, SymbolTable};
 
 use userspace::MergedPath;
 
-pub use config::{GappConfig, MergeStrategy, ReportFormat};
+pub use config::{GappConfig, MergeStrategy, OverflowPolicy, ReportFormat};
 pub use report::{Bottleneck, Report, SampleLine, ThreadCm};
 pub use session::{Session, SessionOutput};
 
@@ -59,6 +61,10 @@ pub struct GappCore {
     /// [`MergeStrategy::Serial`], where every drain k-way-merges the
     /// shards straight into [`GappCore::user`].
     pub lanes: Option<userspace::ShardLanes>,
+    /// Live fault-injection / degradation state consulted on the probe
+    /// hot path. Inert by default; the session driver arms it per epoch
+    /// from the fault plan and the `--on-overflow` policy.
+    pub hazard: faults::HazardControl,
 }
 
 impl GappCore {
@@ -71,6 +77,10 @@ impl GappCore {
     /// order* into its own lane — no cross-shard comparisons at all;
     /// the order-sensitive matrix substream is re-merged later, at
     /// window close ([`userspace::ShardLanes::feed_matrix_into`]).
+    ///
+    /// This is the *epoch* drain: it always runs, even for a shard
+    /// whose watermark consumer is stalled by a fault plan — a
+    /// restarted reader catches up at the window boundary.
     pub fn drain(&mut self) {
         match &mut self.lanes {
             None => {
@@ -124,8 +134,29 @@ impl Probe for GappProbeHandle {
         // each CPU's buffer wakes the reader independently — and only
         // the shard this event pushed to can have grown, so one O(1)
         // length probe suffices.
-        if core.kernel.rings.len_for_cpu(ev.cpu()) >= core.kernel.cfg.drain_threshold {
-            core.drain_watermark(ev.cpu());
+        let cpu = ev.cpu();
+        let shard = cpu % core.kernel.rings.num_shards();
+        if core.hazard.stalled_shard == Some(shard) {
+            // Fault injection: this shard's reader is wedged. No
+            // watermark relief, no emergency drains — the ring fills
+            // and, under the shed policy, drops. The epoch drain at
+            // window close still catches up.
+            return cost;
+        }
+        if core.kernel.rings.len_for_cpu(cpu) >= core.kernel.cfg.drain_threshold {
+            core.drain_watermark(cpu);
+        } else if core.hazard.degrade
+            && core.kernel.rings.len_for_cpu(cpu)
+                >= core.kernel.cfg.ring_capacity.saturating_sub(faults::DEGRADE_HEADROOM)
+        {
+            // `--on-overflow degrade`: the ring is about to overflow
+            // (the watermark alone can't save it — e.g. the threshold
+            // exceeds the capacity, or a burst outran the reader).
+            // Emergency-drain instead of shedding; the session driver
+            // accounts the drain and widens the window it happened in.
+            core.drain_watermark(cpu);
+            core.hazard.window_drains += 1;
+            core.hazard.total_drains += 1;
         }
         cost
     }
@@ -152,7 +183,12 @@ impl GappSession {
             }
         };
         Ok(GappSession {
-            core: Rc::new(RefCell::new(GappCore { kernel, user, lanes })),
+            core: Rc::new(RefCell::new(GappCore {
+                kernel,
+                user,
+                lanes,
+                hazard: Default::default(),
+            })),
             cfg,
         })
     }

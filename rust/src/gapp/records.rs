@@ -66,6 +66,11 @@ pub enum Record {
     /// Sampling-probe hit: IP of an app thread while the active-thread
     /// count was below N_min (§4.3).
     Sample { pid: Pid, ip: u64 },
+    /// Filler record carrying no analysis payload. Fault injection uses
+    /// it to model a burst of unrelated ring traffic (another tracer
+    /// sharing the buffer, a perf storm): it consumes ring capacity and
+    /// drain bandwidth but folds into nothing downstream.
+    Noise,
 }
 
 // Compile-time guarantees: records stay POD-sized and trivially

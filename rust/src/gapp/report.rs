@@ -84,6 +84,13 @@ pub struct Report {
     /// epoch window in which they occurred (index = window). Empty for
     /// batch profiles, whose single global figure is `ring_dropped`.
     pub window_drops: Vec<u64>,
+    /// Graceful degradation (`--on-overflow degrade`): windows that
+    /// widened by absorbing the next epoch instead of shedding records.
+    /// Zero (and unrendered) for shed-policy and batch runs.
+    pub degraded_windows: u64,
+    /// Emergency ring drains performed to avert overflow under the
+    /// degrade policy (each one kept records a shed run would drop).
+    pub degraded_drains: u64,
     /// Peak memory estimate, bytes (column M).
     pub memory_bytes: u64,
     /// Post-processing time, host seconds (column PPT).

@@ -40,17 +40,23 @@ use crate::runtime::AnalysisEngine;
 use crate::simkernel::{Kernel, KernelConfig, RunOutcome};
 use crate::workload::App;
 
+use super::checkpoint::{Checkpoint, Fingerprint, StackSnapshot};
+use super::config::OverflowPolicy;
+use super::faults::{FaultPlan, DEGRADE_HEADROOM};
+use super::records::Record;
 use super::sink::{
     FinalEvent, ReportEvent, ReportSink, SessionInfo, SessionMode, ShardWindowEvent,
 };
 use super::stream::live::live_lines;
 use super::stream::{
-    merge_tree, AppRegistry, LiveConfig, RegistryProbe, ShardPartial,
+    merge_pair, merge_tree, AppRegistry, LiveConfig, RegistryProbe, ShardPartial,
     ShardedConsumer, SpaceSaving, WindowAccumulator, WindowReport, WindowSummary,
 };
 use super::symbolize::Symbolizer;
 use super::userspace::{PathAccumulator, SliceEntry};
-use super::{build_report, GappConfig, GappSession, MergeStrategy, Report, ReportCtx};
+use super::{
+    build_report, GappConfig, GappCore, GappSession, MergeStrategy, Report, ReportCtx,
+};
 
 /// Everything a finished session hands back to library callers —
 /// sinks receive the same data as events while the run progresses.
@@ -79,6 +85,23 @@ pub struct Session<'a> {
     windowed: bool,
     apps: Vec<&'a App>,
     sinks: Vec<Box<dyn ReportSink + 'a>>,
+    durability: Durability,
+}
+
+/// Crash-safety knobs of one session: where (and how often) to publish
+/// checkpoints, which checkpoint to resume from, and the fault plan to
+/// inject. All default to "off".
+#[derive(Clone, Debug, Default)]
+struct Durability {
+    /// `--checkpoint FILE`: publish a snapshot here (atomically) at
+    /// session start and after qualifying window closes.
+    checkpoint_path: Option<String>,
+    /// Write every n-th window's checkpoint (default 1 = every window).
+    checkpoint_every: u64,
+    /// `--resume FILE`: restore this snapshot and continue the run.
+    resume_path: Option<String>,
+    /// `--fault-plan FILE`: deterministic fault schedule.
+    plan: FaultPlan,
 }
 
 impl<'a> Session<'a> {
@@ -92,6 +115,10 @@ impl<'a> Session<'a> {
             windowed: false,
             apps: Vec::new(),
             sinks: Vec::new(),
+            durability: Durability {
+                checkpoint_every: 1,
+                ..Default::default()
+            },
         }
     }
 
@@ -152,6 +179,41 @@ impl<'a> Session<'a> {
         self
     }
 
+    /// Publish a crash-safe snapshot to `path` (atomically: temp file +
+    /// rename) at session start and after each qualifying window close.
+    /// A killed run can then continue via [`Session::restore`] and
+    /// finish with a byte-identical report.
+    pub fn checkpoint(mut self, path: impl Into<String>) -> Self {
+        self.durability.checkpoint_path = Some(path.into());
+        self
+    }
+
+    /// Write every `n`-th window's checkpoint instead of every window's
+    /// (coarser durability, fewer writes). The start-of-session snapshot
+    /// is always written.
+    pub fn checkpoint_every(mut self, n: u64) -> Self {
+        self.durability.checkpoint_every = n;
+        self
+    }
+
+    /// Resume from a checkpoint written by an identically-configured
+    /// session (the stored fingerprint is checked knob by knob). The
+    /// completed epochs are replayed through the deterministic kernel to
+    /// rebuild transport state — with the analysis folds skipped, since
+    /// the checkpoint carries those — and the run continues from the
+    /// first incomplete window.
+    pub fn restore(mut self, path: impl Into<String>) -> Self {
+        self.durability.resume_path = Some(path.into());
+        self
+    }
+
+    /// Inject a deterministic [`FaultPlan`] (overflow bursts, a stalled
+    /// shard lane, kill points) into the run.
+    pub fn fault_plan(mut self, plan: FaultPlan) -> Self {
+        self.durability.plan = plan;
+        self
+    }
+
     /// Attach a sink. Repeatable — every sink sees every event (the
     /// builder tees internally; [`super::sink::TeeSink`] exists for
     /// composing sinks outside the builder).
@@ -170,9 +232,14 @@ impl<'a> Session<'a> {
             windowed,
             apps,
             mut sinks,
+            durability,
         } = self;
         let result = (|| {
             anyhow::ensure!(!apps.is_empty(), "session needs at least one app");
+            anyhow::ensure!(
+                durability.checkpoint_every >= 1,
+                "checkpoint_every must be >= 1 (0 would never write a checkpoint)"
+            );
             if windowed {
                 anyhow::ensure!(
                     lcfg.window_ns > 0,
@@ -192,7 +259,7 @@ impl<'a> Session<'a> {
                      (--shard-partials needs --merge tree; the serial \
                      consumer never forms per-shard partials)"
                 );
-                run_windowed(engine, kcfg, gcfg, lcfg, &apps, &mut sinks)
+                run_windowed(engine, kcfg, gcfg, lcfg, &apps, &mut sinks, &durability)
             } else {
                 anyhow::ensure!(
                     apps.len() == 1,
@@ -204,7 +271,7 @@ impl<'a> Session<'a> {
                      sessions close no windows, so shard_partials(true) \
                      would silently emit nothing; set window_us(..)"
                 );
-                run_batch(engine, kcfg, gcfg, apps[0], &mut sinks)
+                run_batch(engine, kcfg, gcfg, apps[0], &mut sinks, &durability)
             }
         })();
         // Flush every sink exactly once, success or not: the sink
@@ -233,6 +300,244 @@ fn emit(sinks: &mut [Box<dyn ReportSink + '_>], ev: &ReportEvent<'_>) -> Result<
     Ok(())
 }
 
+/// The configuration surface a checkpoint must match to be resumable
+/// (see [`Fingerprint`]).
+fn fingerprint_of(
+    mode: &str,
+    gcfg: &GappConfig,
+    shards: usize,
+    window_ns: u64,
+    apps: &[String],
+) -> Fingerprint {
+    Fingerprint {
+        mode: mode.to_string(),
+        merge: gcfg.merge.name().to_string(),
+        shards,
+        window_ns,
+        apps: apps.to_vec(),
+        stack_lru: gcfg.stack_lru,
+        on_overflow: gcfg.on_overflow.name().to_string(),
+        ring_capacity: gcfg.ring_capacity,
+        drain_threshold: gcfg.drain_threshold as u64,
+        dt: gcfg.dt,
+    }
+}
+
+/// The deterministic abort a fault plan's `kill_after_window` injects.
+/// Raised *after* the window's checkpoint is published, so recovery can
+/// resume from it.
+fn kill_error(window: u64) -> anyhow::Error {
+    anyhow::anyhow!("fault injection: killed after window {window} (per fault plan)")
+}
+
+/// Arm the per-epoch hazard state: the degrade policy and this epoch's
+/// stalled shard (if any). Run on every epoch — including replayed ones
+/// on resume, so emergency drains and drops recompute identically.
+fn arm_hazard(core: &mut GappCore, plan: &FaultPlan, degrade: bool, epoch: u64) {
+    core.hazard.degrade = degrade;
+    core.hazard.stalled_shard = plan.stalled_shard_at(epoch);
+}
+
+/// Push this epoch's scheduled overflow bursts into the ring shards.
+/// Under the degrade policy a burst is emergency-drained ahead of each
+/// record that would otherwise overflow (unless the shard is stalled);
+/// under shed it overflows and the drops are counted, like any other
+/// traffic.
+fn inject_bursts(core: &mut GappCore, plan: &FaultPlan, epoch: u64, now_ns: u64) {
+    let nshards = core.kernel.rings.num_shards();
+    let margin = core.kernel.cfg.ring_capacity.saturating_sub(DEGRADE_HEADROOM);
+    for b in plan.bursts_at(epoch) {
+        let stalled = core.hazard.stalled_shard == Some(b.cpu % nshards);
+        for _ in 0..b.records {
+            if core.hazard.degrade
+                && !stalled
+                && core.kernel.rings.len_for_cpu(b.cpu) >= margin
+            {
+                core.drain_watermark(b.cpu);
+                core.hazard.window_drains += 1;
+                core.hazard.total_drains += 1;
+            }
+            core.kernel.rings.push(b.cpu, now_ns, Record::Noise);
+        }
+    }
+}
+
+/// Snapshot the windowed driver's cross-window accumulators.
+#[allow(clippy::too_many_arguments)]
+fn build_checkpoint(
+    epochs: u64,
+    fp: &Fingerprint,
+    summaries: &[WindowSummary],
+    window_drops: &[u64],
+    degraded_windows: u64,
+    total_drains: u64,
+    cumulative: &PathAccumulator,
+    sketch: &SpaceSaving<u32>,
+    user_stacks: Option<&StackMap>,
+) -> Checkpoint {
+    let (sketch_cap, sketch_entries) = sketch.export();
+    Checkpoint {
+        epochs,
+        fingerprint: Some(fp.clone()),
+        summaries: summaries.to_vec(),
+        window_drops: window_drops.to_vec(),
+        degraded_windows,
+        degraded_drains: total_drains,
+        cumulative: cumulative.paths().to_vec(),
+        sketch_cap,
+        sketch: sketch_entries,
+        stacks: user_stacks.map(StackSnapshot::of),
+    }
+}
+
+/// What one (possibly widened) simulated window produced, before the
+/// analysis-side merge: raw epoch accounting plus the un-merged shard
+/// partials (tree strategy). Shared by the live loop and the resume
+/// replay — replay discards the analysis payload, which is exactly what
+/// "skip the folds the checkpoint covers" means.
+struct WindowOutcome {
+    end_ns: u64,
+    done: bool,
+    /// First simkernel epoch of this window (1-based).
+    first_epoch: u64,
+    widened: bool,
+    drained: u64,
+    drops: u64,
+    shard_drained: Vec<u64>,
+    shard_drops: Vec<u64>,
+    slices_in: u64,
+    /// Per-epoch shard partials (tree strategy; empty under serial).
+    parts: Vec<ShardPartial>,
+    /// Emergency drains while this window was open (degrade policy).
+    degraded_drains: u64,
+}
+
+/// Simulate one epoch window: arm hazards, inject scheduled bursts, run
+/// the kernel to the epoch boundary, drain the ring shards, fold the
+/// slices (serial: into `wacc`; tree: into shard partials). Under the
+/// degrade policy a window that needed emergency drains widens once,
+/// absorbing the next epoch — at most one widen per window, so the
+/// driver always makes progress.
+#[allow(clippy::too_many_arguments)]
+fn simulate_window(
+    kernel: &mut Kernel,
+    session: &GappSession,
+    consumer: &mut ShardedConsumer,
+    registry: &Rc<RefCell<AppRegistry>>,
+    wacc: &mut WindowAccumulator,
+    scratch: &mut Vec<SliceEntry>,
+    strategy: MergeStrategy,
+    degrade: bool,
+    plan: &FaultPlan,
+    window_ns: u64,
+    epoch: &mut u64,
+    nshards: usize,
+) -> Result<WindowOutcome> {
+    let first_epoch = *epoch + 1;
+    let mut widened = false;
+    let mut drained = 0u64;
+    let mut drops = 0u64;
+    let mut shard_drained = vec![0u64; nshards];
+    let mut shard_drops = vec![0u64; nshards];
+    let mut slices_in = 0u64;
+    let mut parts_acc: Vec<ShardPartial> = Vec::new();
+    let (end_ns, done) = loop {
+        *epoch += 1;
+        {
+            let mut core = session.core.borrow_mut();
+            arm_hazard(&mut core, plan, degrade, *epoch);
+            inject_bursts(
+                &mut core,
+                plan,
+                *epoch,
+                window_ns.saturating_mul(*epoch - 1),
+            );
+        }
+        let limit = window_ns.saturating_mul(*epoch);
+        let outcome = kernel.run_until(limit)?;
+        let (end_ns, done) = match outcome {
+            RunOutcome::Done(t) => (t, true),
+            RunOutcome::Paused(t) => (t, false),
+        };
+        let mut core = session.core.borrow_mut();
+        let estats = consumer.drain_epoch(&mut core);
+        drained += estats.delta.drained;
+        drops += estats.delta.dropped;
+        for (i, d) in estats.per_shard.iter().enumerate() {
+            shard_drained[i] += d.drained;
+            shard_drops[i] += d.dropped;
+        }
+        match strategy {
+            // Serial: fold the globally re-ordered stream through one
+            // accumulator (the equivalence oracle).
+            MergeStrategy::Serial => {
+                scratch.clear();
+                core.user.drain_slices_into(scratch);
+                let reg = registry.borrow();
+                let app_of = reg.tagger();
+                for s in scratch.iter() {
+                    wacc.add_slice(s, app_of(s.pid));
+                }
+            }
+            // Tree: each shard's folder closes its partial per epoch;
+            // the window-close merge combines them.
+            MergeStrategy::Tree => {
+                let parts = {
+                    let reg = registry.borrow();
+                    consumer.fold_partials(&mut core, reg.tagger())
+                };
+                slices_in += parts.iter().map(|p| p.slices_in).sum::<u64>();
+                parts_acc.extend(parts);
+            }
+        }
+        if degrade && !widened && !done && core.hazard.window_drains > 0 {
+            widened = true;
+            continue;
+        }
+        break (end_ns, done);
+    };
+    let mut core = session.core.borrow_mut();
+    let degraded_drains = core.hazard.window_drains;
+    core.hazard.window_drains = 0;
+    if strategy == MergeStrategy::Serial {
+        slices_in = wacc.slices_in;
+    }
+    Ok(WindowOutcome {
+        end_ns,
+        done,
+        first_epoch,
+        widened,
+        drained,
+        drops,
+        shard_drained,
+        shard_drops,
+        slices_in,
+        parts: parts_acc,
+        degraded_drains,
+    })
+}
+
+/// Combine the per-epoch shard partials of a widened window into one
+/// partial per shard (the transport contract for `ShardWindow` events:
+/// one event per shard per window, whatever the window's epoch span).
+fn coalesce_partials(parts: Vec<ShardPartial>) -> Vec<ShardPartial> {
+    let mut by_shard: Vec<Option<ShardPartial>> = Vec::new();
+    for p in parts {
+        if by_shard.len() <= p.shard {
+            by_shard.resize_with(p.shard + 1, || None);
+        }
+        by_shard[p.shard] = Some(match by_shard[p.shard].take() {
+            None => p,
+            Some(prev) => ShardPartial {
+                shard: p.shard,
+                slices_in: prev.slices_in + p.slices_in,
+                paths: merge_pair(prev.paths, p.paths),
+            },
+        });
+    }
+    by_shard.into_iter().flatten().collect()
+}
+
 /// The batch driver: one kernel run, one merge, one report — exactly
 /// the pre-Session `gapp::profile` pipeline, with events around it.
 fn run_batch(
@@ -241,22 +546,63 @@ fn run_batch(
     gcfg: GappConfig,
     app: &App,
     sinks: &mut [Box<dyn ReportSink + '_>],
+    dur: &Durability,
 ) -> Result<SessionOutput> {
     // Construct (and thereby validate) before announcing the session.
     let session = GappSession::new(gcfg.clone(), kcfg.cpus, engine)?;
+    let shards = gcfg.shards.unwrap_or(kcfg.cpus);
+    let degrade = gcfg.on_overflow == OverflowPolicy::Degrade;
+    // A batch run closes no windows, so its only checkpoint is the
+    // start-of-session one (epoch 0) and resuming is a
+    // fingerprint-checked rerun from zero — the degenerate case of the
+    // windowed recovery invariant.
+    let fp = fingerprint_of("batch", &gcfg, shards, 0, &[app.name.clone()]);
+    if let Some(path) = &dur.resume_path {
+        let cp = Checkpoint::load(path)?;
+        let stored = cp.fingerprint.as_ref().ok_or_else(|| {
+            anyhow::anyhow!("checkpoint {path:?} carries no fingerprint")
+        })?;
+        stored.check(&fp).map_err(anyhow::Error::msg)?;
+        anyhow::ensure!(
+            cp.epochs == 0 && cp.summaries.is_empty(),
+            "checkpoint {path:?} holds {} completed window(s), but a batch \
+             session has no windows to resume between — it was written by a \
+             live session",
+            cp.summaries.len()
+        );
+    }
     let info = SessionInfo {
         mode: SessionMode::Batch,
         apps: vec![app.name.clone()],
-        shards: gcfg.shards.unwrap_or(kcfg.cpus),
+        shards,
         window_ns: None,
         config: gcfg,
     };
     emit(sinks, &ReportEvent::SessionStart(&info))?;
+    if dur.resume_path.is_none() {
+        if let Some(path) = &dur.checkpoint_path {
+            Checkpoint {
+                fingerprint: Some(fp.clone()),
+                ..Default::default()
+            }
+            .write_atomic(path)?;
+        }
+        if dur.plan.kill_after_window == Some(0) {
+            return Err(kill_error(0));
+        }
+    }
     let mut kernel = Kernel::new(kcfg);
     kernel.attach_probe(session.probe());
     app.spawn_into(&mut kernel);
+    {
+        // The whole batch run counts as epoch 1 for fault scheduling.
+        let mut core = session.core.borrow_mut();
+        arm_hazard(&mut core, &dur.plan, degrade, 1);
+        inject_bursts(&mut core, &dur.plan, 1, 0);
+    }
     let end = kernel.run()?;
-    let report = session.finish(app, &kernel, end);
+    let mut report = session.finish(app, &kernel, end);
+    report.degraded_drains = session.core.borrow().hazard.total_drains;
     emit(
         sinks,
         &ReportEvent::Final(FinalEvent {
@@ -289,10 +635,12 @@ fn run_windowed(
     lcfg: LiveConfig,
     apps: &[&App],
     sinks: &mut [Box<dyn ReportSink + '_>],
+    dur: &Durability,
 ) -> Result<SessionOutput> {
     let top_n = gcfg.top_n;
     let stack_lru = gcfg.stack_lru;
     let strategy = gcfg.merge;
+    let degrade = gcfg.on_overflow == OverflowPolicy::Degrade;
     let shards = gcfg.shards.unwrap_or(kcfg.cpus);
     let session = GappSession::new(gcfg.clone(), kcfg.cpus, engine)?;
     let mut kernel = Kernel::new(kcfg);
@@ -308,6 +656,34 @@ fn run_windowed(
         registry.borrow_mut().end_spawn();
     }
     let names: Vec<String> = registry.borrow().names().to_vec();
+    let fp = fingerprint_of("live", &gcfg, shards, lcfg.window_ns, &names);
+    // Load and fingerprint-check the resume checkpoint before
+    // announcing the session: a bad resume fails before events flow.
+    let resume: Option<Checkpoint> = match &dur.resume_path {
+        None => None,
+        Some(path) => {
+            let cp = Checkpoint::load(path)?;
+            let stored = cp.fingerprint.as_ref().ok_or_else(|| {
+                anyhow::anyhow!("checkpoint {path:?} carries no fingerprint")
+            })?;
+            stored.check(&fp).map_err(anyhow::Error::msg)?;
+            anyhow::ensure!(
+                cp.sketch_cap == lcfg.sketch_entries,
+                "checkpoint {path:?} holds a sketch of capacity {} but this \
+                 session is configured for {} entries",
+                cp.sketch_cap,
+                lcfg.sketch_entries
+            );
+            anyhow::ensure!(
+                cp.stacks.is_some() == stack_lru,
+                "checkpoint {path:?} {} a userspace stack map but this \
+                 session {} --lru",
+                if cp.stacks.is_some() { "holds" } else { "lacks" },
+                if stack_lru { "uses" } else { "does not use" },
+            );
+            Some(cp)
+        }
+    };
     let info = SessionInfo {
         mode: SessionMode::Live,
         apps: names.clone(),
@@ -324,8 +700,8 @@ fn run_windowed(
 
     // One cursor per ring shard: the transport is per-CPU perf buffers,
     // drained together at each epoch boundary.
-    let mut consumer =
-        ShardedConsumer::new(session.core.borrow().kernel.rings.num_shards());
+    let nshards = session.core.borrow().kernel.rings.num_shards();
+    let mut consumer = ShardedConsumer::new(nshards);
     let mut wacc = WindowAccumulator::new();
     let mut cumulative = PathAccumulator::new();
     let mut sketch: SpaceSaving<u32> = SpaceSaving::new(lcfg.sketch_entries);
@@ -344,139 +720,296 @@ fn run_windowed(
         None
     };
 
+    let mut degraded_windows: u64 = 0;
     let mut epoch: u64 = 0;
-    let runtime_ns = loop {
-        epoch += 1;
-        let limit = lcfg.window_ns.saturating_mul(epoch);
-        let outcome = kernel.run_until(limit)?;
-        let (end_ns, done) = match outcome {
-            RunOutcome::Done(t) => (t, true),
-            RunOutcome::Paused(t) => (t, false),
-        };
-        let start_ns = lcfg.window_ns.saturating_mul(epoch - 1).min(end_ns);
-        let wr = {
-            let mut core = session.core.borrow_mut();
-            let estats = consumer.drain_epoch(&mut core);
-            // Tree + shard_partials: partials held back here until the
-            // window's id namespace is settled (LRU re-key below).
-            let mut pending_partials: Option<Vec<ShardPartial>> = None;
-            let (slices_in, mut snapshot) = match strategy {
-                // Serial: fold the globally re-ordered stream through
-                // one accumulator (the equivalence oracle).
-                MergeStrategy::Serial => {
-                    scratch.clear();
-                    core.user.drain_slices_into(&mut scratch);
-                    {
-                        let reg = registry.borrow();
-                        let app_of = reg.tagger();
-                        for s in &scratch {
-                            wacc.add_slice(s, app_of(s.pid));
-                        }
-                    }
-                    (wacc.slices_in, wacc.snapshot())
-                }
-                // Tree: each shard's folder closes its partial; the
-                // pairwise merge tree combines them — the only
-                // cross-shard work of the whole window, O(log S) deep.
-                MergeStrategy::Tree => {
-                    let parts = {
-                        let reg = registry.borrow();
-                        consumer.fold_partials(&mut core, reg.tagger())
-                    };
-                    let slices_in: u64 = parts.iter().map(|p| p.slices_in).sum();
-                    let merged = if lcfg.shard_partials {
-                        // Partials outlive the merge so they can be
-                        // emitted with window-stable ids below; the
-                        // path clones are paid only on this opt-in
-                        // transport path.
-                        pending_partials = Some(parts);
-                        merge_tree(
-                            pending_partials
-                                .as_ref()
-                                .unwrap()
-                                .iter()
-                                .map(|p| p.paths.clone())
-                                .collect(),
-                        )
-                    } else {
-                        merge_tree(parts.into_iter().map(|p| p.paths).collect())
-                    };
-                    (slices_in, merged)
-                }
-            };
-            // Under kernel-side LRU, re-key the snapshot into the
-            // stable userspace map while id → frames is still fresh,
-            // remembering the window's kernel→stable mapping so the
-            // emitted partials speak the same id namespace.
-            let mut id_remap: Option<crate::util::FxHashMap<u32, u32>> = None;
-            if let Some(us) = user_stacks.as_mut() {
-                let mut m = crate::util::FxHashMap::default();
-                for p in &mut snapshot {
-                    let old = p.stack_id;
-                    let frames = core.kernel.stacks.resolve(old);
-                    p.stack_id = us.intern(frames);
-                    m.insert(old, p.stack_id);
-                }
-                id_remap = Some(m);
+    let mut window_index: u64 = 0;
+
+    if resume.is_none() {
+        // Publish the start-of-session snapshot (epoch 0): a crash
+        // during the very first window still leaves a resumable file.
+        if let Some(path) = &dur.checkpoint_path {
+            build_checkpoint(
+                0,
+                &fp,
+                &[],
+                &[],
+                0,
+                0,
+                &cumulative,
+                &sketch,
+                user_stacks.as_ref(),
+            )
+            .write_atomic(path)?;
+        }
+        if dur.plan.kill_after_window == Some(0) {
+            return Err(kill_error(0));
+        }
+    }
+
+    // ---- resume: replay the checkpointed epochs ----
+    // The simkernel is deterministic and the analysis never feeds back
+    // into it, so replaying epochs 1..=N with identical hazards (fault
+    // plan + degrade policy) rebuilds the exact pre-crash kernel, ring,
+    // lane and drop state. The analysis-side folds the checkpoint
+    // already covers are skipped: window snapshots are discarded
+    // unmerged, and nothing reaches the cumulative accumulator, the
+    // sketch, the stable stack map, or the sinks. The replayed window
+    // summaries double as a total integrity check against the
+    // checkpointed ones.
+    let mut finished_in_replay: Option<u64> = None;
+    if let Some(cp) = &resume {
+        while epoch < cp.epochs && finished_in_replay.is_none() {
+            window_index += 1;
+            let wo = simulate_window(
+                &mut kernel,
+                &session,
+                &mut consumer,
+                &registry,
+                &mut wacc,
+                &mut scratch,
+                strategy,
+                degrade,
+                &dur.plan,
+                lcfg.window_ns,
+                &mut epoch,
+                nshards,
+            )?;
+            if strategy == MergeStrategy::Serial {
+                // Reset the window accumulator; the merged snapshot is
+                // covered by the checkpoint's cumulative state.
+                let _ = wacc.snapshot();
             }
-            // Emit the per-shard partials (opt-in), after the re-key so
-            // a cross-process consumer never sees a recyclable kernel
-            // id: every partial path's id also appears in the merged
-            // snapshot, so the remap covers them all.
-            if let Some(parts) = pending_partials.take() {
-                for mut p in parts {
-                    if let Some(m) = id_remap.as_ref() {
-                        for path in &mut p.paths {
-                            if let Some(id) = m.get(&path.stack_id) {
-                                path.stack_id = *id;
+            if wo.widened {
+                degraded_windows += 1;
+            }
+            window_drops.push(wo.drops);
+            summaries.push(WindowSummary {
+                index: window_index,
+                slices: wo.slices_in,
+                drained: wo.drained,
+                drops: wo.drops,
+            });
+            if wo.done {
+                anyhow::ensure!(
+                    epoch >= cp.epochs,
+                    "checkpoint claims {} completed epoch(s) but the workload \
+                     finished after epoch {}: it does not belong to this run",
+                    cp.epochs,
+                    epoch
+                );
+                // The checkpoint covers the entire run (a crash between
+                // the last window's checkpoint and the final report):
+                // nothing is left to simulate.
+                finished_in_replay = Some(wo.end_ns);
+            }
+        }
+        anyhow::ensure!(
+            epoch == cp.epochs
+                && summaries == cp.summaries
+                && window_drops == cp.window_drops
+                && degraded_windows == cp.degraded_windows
+                && session.core.borrow().hazard.total_drains == cp.degraded_drains,
+            "checkpoint integrity check failed: replaying {} epoch(s) \
+             produced different window summaries than the checkpoint \
+             records — it does not belong to this run",
+            cp.epochs
+        );
+        // Install the analysis state the replay skipped. Cumulative
+        // paths re-merge in stored (insertion) order, so the final
+        // ranking and rendering are byte-identical to an uninterrupted
+        // run; the sketch restores counters and future behaviour; the
+        // stable stack map re-interns in id order and restores its
+        // counters (replay must not count re-interns as fresh inserts).
+        for p in &cp.cumulative {
+            cumulative.merge_path(p);
+        }
+        sketch =
+            SpaceSaving::from_parts(cp.sketch_cap, &cp.sketch).map_err(anyhow::Error::msg)?;
+        if let Some(snap) = &cp.stacks {
+            user_stacks = Some(
+                snap.rebuild("live_user_stacks", 1 << 20)
+                    .map_err(anyhow::Error::msg)?,
+            );
+        }
+    }
+
+    let runtime_ns = if let Some(t) = finished_in_replay {
+        t
+    } else {
+        loop {
+            window_index += 1;
+            let wo = simulate_window(
+                &mut kernel,
+                &session,
+                &mut consumer,
+                &registry,
+                &mut wacc,
+                &mut scratch,
+                strategy,
+                degrade,
+                &dur.plan,
+                lcfg.window_ns,
+                &mut epoch,
+                nshards,
+            )?;
+            let wr = {
+                let mut core = session.core.borrow_mut();
+                // Tree + shard_partials: partials held back here until
+                // the window's id namespace is settled (LRU re-key
+                // below).
+                let mut pending_partials: Option<Vec<ShardPartial>> = None;
+                let (slices_in, mut snapshot) = match strategy {
+                    // Serial: the globally re-ordered stream was folded
+                    // through one accumulator (the equivalence oracle).
+                    MergeStrategy::Serial => (wo.slices_in, wacc.snapshot()),
+                    // Tree: each shard's folder closed its partial; the
+                    // pairwise merge tree combines them — the only
+                    // cross-shard work of the whole window, O(log S)
+                    // deep. A widened window's per-epoch partials
+                    // coalesce to one per shard first.
+                    MergeStrategy::Tree => {
+                        let parts = if wo.widened {
+                            coalesce_partials(wo.parts)
+                        } else {
+                            wo.parts
+                        };
+                        let merged = if lcfg.shard_partials {
+                            // Partials outlive the merge so they can be
+                            // emitted with window-stable ids below; the
+                            // path clones are paid only on this opt-in
+                            // transport path.
+                            pending_partials = Some(parts);
+                            merge_tree(
+                                pending_partials
+                                    .as_ref()
+                                    .unwrap()
+                                    .iter()
+                                    .map(|p| p.paths.clone())
+                                    .collect(),
+                            )
+                        } else {
+                            merge_tree(
+                                parts.into_iter().map(|p| p.paths).collect(),
+                            )
+                        };
+                        (wo.slices_in, merged)
+                    }
+                };
+                // Under kernel-side LRU, re-key the snapshot into the
+                // stable userspace map while id → frames is still
+                // fresh, remembering the window's kernel→stable mapping
+                // so the emitted partials speak the same id namespace.
+                let mut id_remap: Option<crate::util::FxHashMap<u32, u32>> = None;
+                if let Some(us) = user_stacks.as_mut() {
+                    let mut m = crate::util::FxHashMap::default();
+                    for p in &mut snapshot {
+                        let old = p.stack_id;
+                        let frames = core.kernel.stacks.resolve(old);
+                        p.stack_id = us.intern(frames);
+                        m.insert(old, p.stack_id);
+                    }
+                    id_remap = Some(m);
+                }
+                // Emit the per-shard partials (opt-in), after the
+                // re-key so a cross-process consumer never sees a
+                // recyclable kernel id: every partial path's id also
+                // appears in the merged snapshot, so the remap covers
+                // them all.
+                if let Some(parts) = pending_partials.take() {
+                    for mut p in parts {
+                        if let Some(m) = id_remap.as_ref() {
+                            for path in &mut p.paths {
+                                if let Some(id) = m.get(&path.stack_id) {
+                                    path.stack_id = *id;
+                                }
                             }
                         }
+                        emit(
+                            sinks,
+                            &ReportEvent::ShardWindow(ShardWindowEvent {
+                                index: window_index,
+                                shard: p.shard,
+                                slices: p.slices_in,
+                                drained: wo.shard_drained[p.shard],
+                                drops: wo.shard_drops[p.shard],
+                                paths: &p.paths,
+                            }),
+                        )?;
                     }
-                    let d = &estats.per_shard[p.shard];
-                    emit(
-                        sinks,
-                        &ReportEvent::ShardWindow(ShardWindowEvent {
-                            index: epoch,
-                            shard: p.shard,
-                            slices: p.slices_in,
-                            drained: d.drained,
-                            drops: d.dropped,
-                            paths: &p.paths,
-                        }),
-                    )?;
+                }
+                let ranked = core.user.rank_merged(&snapshot, lcfg.top_k);
+                let stacks = user_stacks.as_ref().unwrap_or(&core.kernel.stacks);
+                let top = live_lines(&ranked, stacks, &names, &mut syms, multi_app);
+                WindowReport {
+                    index: window_index,
+                    start_ns: lcfg
+                        .window_ns
+                        .saturating_mul(wo.first_epoch - 1)
+                        .min(wo.end_ns),
+                    end_ns: wo.end_ns,
+                    slices: slices_in,
+                    drained: wo.drained,
+                    drops: wo.drops,
+                    shard_drops: wo.shard_drops.clone(),
+                    degraded_drains: wo.degraded_drains,
+                    widened: wo.widened,
+                    top,
+                    snapshot,
+                }
+            };
+            if wr.degraded_drains > 0 || wr.widened {
+                emit(
+                    sinks,
+                    &ReportEvent::Degraded {
+                        window: window_index,
+                        drains: wr.degraded_drains,
+                        widened: wr.widened,
+                    },
+                )?;
+            }
+            emit(sinks, &ReportEvent::WindowClosed(&wr))?;
+            if wr.widened {
+                degraded_windows += 1;
+            }
+            // Fold the window into the cumulative state; the snapshot
+            // dies here, keeping resident memory O(top-K + live stack
+            // ids).
+            for p in &wr.snapshot {
+                cumulative.merge_path(p);
+                sketch.add(p.stack_id, p.cm_fs);
+            }
+            window_drops.push(wr.drops);
+            summaries.push(WindowSummary {
+                index: wr.index,
+                slices: wr.slices,
+                drained: wr.drained,
+                drops: wr.drops,
+            });
+            // Publish the snapshot before honouring a kill point, so
+            // the injected crash has a checkpoint to recover from.
+            if let Some(path) = &dur.checkpoint_path {
+                if window_index % dur.checkpoint_every == 0 {
+                    let core = session.core.borrow();
+                    build_checkpoint(
+                        epoch,
+                        &fp,
+                        &summaries,
+                        &window_drops,
+                        degraded_windows,
+                        core.hazard.total_drains,
+                        &cumulative,
+                        &sketch,
+                        user_stacks.as_ref(),
+                    )
+                    .write_atomic(path)?;
                 }
             }
-            let ranked = core.user.rank_merged(&snapshot, lcfg.top_k);
-            let stacks = user_stacks.as_ref().unwrap_or(&core.kernel.stacks);
-            let top = live_lines(&ranked, stacks, &names, &mut syms, multi_app);
-            WindowReport {
-                index: epoch,
-                start_ns,
-                end_ns,
-                slices: slices_in,
-                drained: estats.delta.drained,
-                drops: estats.delta.dropped,
-                shard_drops: estats.per_shard.iter().map(|d| d.dropped).collect(),
-                top,
-                snapshot,
+            if dur.plan.kill_after_window == Some(window_index) {
+                return Err(kill_error(window_index));
             }
-        };
-        emit(sinks, &ReportEvent::WindowClosed(&wr))?;
-        // Fold the window into the cumulative state; the snapshot dies
-        // here, keeping resident memory O(top-K + live stack ids).
-        for p in &wr.snapshot {
-            cumulative.merge_path(p);
-            sketch.add(p.stack_id, p.cm_fs);
-        }
-        window_drops.push(wr.drops);
-        summaries.push(WindowSummary {
-            index: wr.index,
-            slices: wr.slices,
-            drained: wr.drained,
-            drops: wr.drops,
-        });
-        if done {
-            break end_ns;
+            if wo.done {
+                break wo.end_ns;
+            }
         }
     };
 
@@ -537,6 +1070,8 @@ fn run_windowed(
         // the kernel map's own drop counter.
         report.stack_drops += us.stats.drops;
     }
+    report.degraded_windows = degraded_windows;
+    report.degraded_drains = core.hazard.total_drains;
     drop(core);
     emit(
         sinks,
@@ -581,6 +1116,7 @@ mod tests {
                             "start"
                         }
                         ReportEvent::ShardWindow(_) => "shard",
+                        ReportEvent::Degraded { .. } => "degraded",
                         ReportEvent::WindowClosed(_) => "window",
                         ReportEvent::Final(fe) => {
                             assert!(fe.windows.is_empty());
@@ -729,5 +1265,53 @@ mod tests {
             .run()
             .unwrap_err();
         assert!(err.to_string().contains("windowed (live) feature"), "{err}");
+
+        // --checkpoint-every 0 would never write a checkpoint.
+        let e = apps::by_name("mysql", 8, 7).unwrap();
+        let err = Session::builder(AnalysisEngine::native())
+            .app(&e)
+            .checkpoint("/tmp/unused")
+            .checkpoint_every(0)
+            .run()
+            .unwrap_err();
+        assert!(err.to_string().contains("checkpoint_every"), "{err}");
+    }
+
+    /// `--output` regression: a sink whose writer fails at flush time
+    /// must surface that failure as the session error — not swallow it
+    /// because the simulation itself succeeded — and must not stop the
+    /// tee'd peers from seeing the full event stream first.
+    #[test]
+    fn failing_output_writer_is_a_session_error_after_peers_flush() {
+        struct FailingWrite;
+        impl std::io::Write for FailingWrite {
+            fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+                Ok(buf.len()) // accept bytes; fail only at flush
+            }
+            fn flush(&mut self) -> std::io::Result<()> {
+                Err(std::io::Error::new(
+                    std::io::ErrorKind::Other,
+                    "disk full (injected)",
+                ))
+            }
+        }
+        let app = apps::blackscholes(8, 3);
+        let peer_saw_end = Rc::new(RefCell::new(false));
+        let p2 = peer_saw_end.clone();
+        let err = Session::builder(AnalysisEngine::native())
+            .app(&app)
+            .sink(crate::gapp::sink::JsonSink::new(FailingWrite))
+            .sink(FnSink(move |ev: &ReportEvent<'_>| {
+                if matches!(ev, ReportEvent::SessionEnd { .. }) {
+                    *p2.borrow_mut() = true;
+                }
+            }))
+            .run()
+            .unwrap_err();
+        assert!(err.to_string().contains("disk full"), "{err}");
+        assert!(
+            *peer_saw_end.borrow(),
+            "tee'd peer must see the whole stream before the error surfaces"
+        );
     }
 }

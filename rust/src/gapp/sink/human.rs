@@ -54,6 +54,17 @@ pub fn render_report(r: &Report) -> String {
         )
         .unwrap();
     }
+    // Degradation accounting, only when the degrade policy actually
+    // fired (shed-policy and lossless runs render byte-identically to
+    // the historical format — the goldens rely on it).
+    if r.degraded_windows > 0 || r.degraded_drains > 0 {
+        writeln!(
+            w,
+            "degraded: {} window(s) widened | {} emergency drain(s)",
+            r.degraded_windows, r.degraded_drains,
+        )
+        .unwrap();
+    }
     // Per-shard breakdown, only when records were actually lost on a
     // multi-ring transport (lossless runs render identically across
     // shard counts — the sharded-vs-single-ring golden relies on it).
@@ -141,6 +152,15 @@ pub fn render_window(wr: &WindowReport) -> String {
             write!(w, " [{}]", lossy.join(" ")).unwrap();
         }
     }
+    // Degrade-policy accounting, appended only when it fired — windows
+    // under the default shed policy render byte-identically to the
+    // historical format.
+    if wr.degraded_drains > 0 || wr.widened {
+        write!(w, " | degraded drains {}", wr.degraded_drains).unwrap();
+        if wr.widened {
+            write!(w, " (widened)").unwrap();
+        }
+    }
     writeln!(w).unwrap();
     if wr.top.is_empty() {
         writeln!(w, "  (no critical slices this window)").unwrap();
@@ -225,6 +245,10 @@ impl<W: io::Write> ReportSink for HumanSink<W> {
             // backend stays byte-identical to the pre-sink CLI whether
             // or not they are enabled.
             ReportEvent::ShardWindow(_) => {}
+            // Degradation is rendered inline on the window line and in
+            // the final report's accounting — the standalone notice is
+            // for machine consumers.
+            ReportEvent::Degraded { .. } => {}
             ReportEvent::WindowClosed(wr) => {
                 self.w.write_all(render_window(wr).as_bytes())?;
             }
@@ -299,6 +323,42 @@ mod tests {
             ..Default::default()
         };
         assert_eq!(report.to_string(), render_report(&report));
+    }
+
+    #[test]
+    fn degrade_accounting_renders_only_when_it_fired() {
+        // Shed-policy reports stay byte-identical: no degrade line.
+        let mut report = Report {
+            app: "test".into(),
+            ..Default::default()
+        };
+        assert!(!render_report(&report).contains("degraded"));
+        report.degraded_windows = 2;
+        report.degraded_drains = 7;
+        let s = render_report(&report);
+        assert!(
+            s.contains("degraded: 2 window(s) widened | 7 emergency drain(s)"),
+            "{s}"
+        );
+
+        let mut wr = crate::gapp::stream::WindowReport {
+            index: 1,
+            start_ns: 0,
+            end_ns: 5_000_000,
+            slices: 0,
+            drained: 0,
+            drops: 0,
+            shard_drops: Vec::new(),
+            degraded_drains: 0,
+            widened: false,
+            top: Vec::new(),
+            snapshot: Vec::new(),
+        };
+        assert!(!render_window(&wr).contains("degraded"));
+        wr.degraded_drains = 3;
+        assert!(render_window(&wr).contains("| degraded drains 3\n"));
+        wr.widened = true;
+        assert!(render_window(&wr).contains("| degraded drains 3 (widened)\n"));
     }
 
     #[test]

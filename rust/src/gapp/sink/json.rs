@@ -59,6 +59,7 @@ pub fn config_json(c: &GappConfig) -> Json {
         ("merge", Json::str(c.merge.name())),
         ("format", Json::str(c.format.name())),
         ("output", opt_str(&c.output)),
+        ("on_overflow", Json::str(c.on_overflow.name())),
     ])
 }
 
@@ -123,6 +124,8 @@ pub fn window_json(w: &WindowReport) -> Json {
             "shard_drops",
             Json::Arr(w.shard_drops.iter().map(|d| Json::u64(*d)).collect()),
         ),
+        ("degraded_drains", Json::u64(w.degraded_drains)),
+        ("widened", Json::Bool(w.widened)),
         (
             "top",
             Json::Arr(
@@ -234,6 +237,8 @@ pub fn report_json(r: &Report) -> Json {
             "window_drops",
             Json::Arr(r.window_drops.iter().map(|d| Json::u64(*d)).collect()),
         ),
+        ("degraded_windows", Json::u64(r.degraded_windows)),
+        ("degraded_drains", Json::u64(r.degraded_drains)),
         ("memory_bytes", Json::u64(r.memory_bytes)),
         ("ppt_seconds", Json::f64(r.ppt_seconds)),
         ("probe_cost_ns", Json::u64(r.probe_cost_ns)),
@@ -289,6 +294,18 @@ fn req_arr<'a>(v: &'a Json, key: &str) -> Result<&'a [Json]> {
     req(v, key)?
         .as_arr()
         .ok_or_else(|| anyhow!("field {key:?} is not an array"))
+}
+
+/// A u64 field that newer writers emit and older documents lack:
+/// absent → 0 (the additive-fields policy), present-but-mistyped →
+/// error (corruption must not decode as zero).
+fn opt_u64_or_zero(v: &Json, key: &str) -> Result<u64> {
+    match v.get(key) {
+        None => Ok(0),
+        Some(j) => j
+            .as_u64()
+            .ok_or_else(|| anyhow!("field {key:?} is not a u64")),
+    }
 }
 
 fn u64_arr(v: &Json, key: &str) -> Result<Vec<u64>> {
@@ -362,6 +379,25 @@ fn bottleneck_from_json(v: &Json) -> Result<Bottleneck> {
 /// renderer byte-matches the original (golden-tested), which is what
 /// makes JSON a faithful transport for downstream diff/merge tooling.
 pub fn report_from_json(v: &Json) -> Result<Report> {
+    // Reject a foreign schema version outright instead of best-effort
+    // decoding: v0 predates fields this reader requires, and a future
+    // v2 means a *breaking* change by policy (additive changes never
+    // bump the version), so any field could have moved or been retyped.
+    // The bare `report` object inside a v1 document carries no stamp
+    // (the enclosing document does) — the check applies when a stamp is
+    // present, e.g. on a stamped standalone report.
+    if let Some(s) = v.get("schema") {
+        let got = s
+            .as_u64()
+            .ok_or_else(|| anyhow!("field \"schema\" is not a u64"))?;
+        if got != SCHEMA_VERSION {
+            return Err(anyhow!(
+                "unsupported report schema version {got}: this reader understands \
+                 version {SCHEMA_VERSION} only (schema bumps are breaking by policy, \
+                 so best-effort decoding would silently misread fields)"
+            ));
+        }
+    }
     Ok(Report {
         app: req_str(v, "app")?,
         backend: backend_from_name(&req_str(v, "backend")?),
@@ -401,6 +437,8 @@ pub fn report_from_json(v: &Json) -> Result<Report> {
         stack_drops: req_u64(v, "stack_drops")?,
         stack_evictions: req_u64(v, "stack_evictions")?,
         window_drops: u64_arr(v, "window_drops")?,
+        degraded_windows: opt_u64_or_zero(v, "degraded_windows")?,
+        degraded_drains: opt_u64_or_zero(v, "degraded_drains")?,
         memory_bytes: req_u64(v, "memory_bytes")?,
         ppt_seconds: req_f64(v, "ppt_seconds")?,
         probe_cost_ns: req_u64(v, "probe_cost_ns")?,
@@ -471,6 +509,10 @@ impl<W: io::Write> ReportSink for JsonSink<W> {
             // one-document session summary keeps its v1 shape (and its
             // size) whether or not they are enabled.
             ReportEvent::ShardWindow(_) => {}
+            // Same policy for degradation notices: the accounting lands
+            // in the window and report objects, so the document already
+            // carries it.
+            ReportEvent::Degraded { .. } => {}
             ReportEvent::WindowClosed(wr) => {
                 self.windows.push(window_json(wr));
             }
@@ -545,6 +587,21 @@ impl<W: io::Write> ReportSink for JsonlSink<W> {
             ReportEvent::ShardWindow(sw) => self.line(
                 "shard_window",
                 vec![("shard_window", shard_window_json(sw))],
+            ),
+            ReportEvent::Degraded {
+                window,
+                drains,
+                widened,
+            } => self.line(
+                "degraded",
+                vec![(
+                    "degraded",
+                    Json::obj(vec![
+                        ("window", Json::u64(*window)),
+                        ("drains", Json::u64(*drains)),
+                        ("widened", Json::Bool(*widened)),
+                    ]),
+                )],
             ),
             ReportEvent::WindowClosed(wr) => {
                 self.line("window", vec![("window", window_json(wr))])
@@ -644,6 +701,87 @@ mod tests {
         assert_eq!(rt.samples_of("emd"), 7);
         assert_eq!(rt.ring_shards.len(), 1);
         assert_eq!(rt.ring_shards[0].peak, 9);
+    }
+
+    #[test]
+    fn mismatched_schema_versions_are_rejected_with_a_real_error() {
+        // A stamped report from schema v0 or a future v2 must refuse to
+        // decode — the version is bumped only on breaking changes, so
+        // best-effort decoding would silently misread fields.
+        for bad in [0u64, 2] {
+            let mut j = report_json(&sample_report());
+            if let Json::Obj(fields) = &mut j {
+                fields.insert(0, ("schema".to_string(), Json::u64(bad)));
+            }
+            let err = report_from_json(&j).unwrap_err().to_string();
+            assert!(
+                err.contains(&format!("version {bad}")),
+                "v{bad}: error should name the version, got {err:?}"
+            );
+            assert!(err.contains("1"), "{err}");
+        }
+        // The supported version (and the historical unstamped shape)
+        // both still decode.
+        let mut j = report_json(&sample_report());
+        if let Json::Obj(fields) = &mut j {
+            fields.insert(0, ("schema".to_string(), Json::u64(SCHEMA_VERSION)));
+        }
+        assert!(report_from_json(&j).is_ok());
+        assert!(report_from_json(&report_json(&sample_report())).is_ok());
+        // A mistyped stamp is corruption, not "absent".
+        let mut j = report_json(&sample_report());
+        if let Json::Obj(fields) = &mut j {
+            fields.insert(0, ("schema".to_string(), Json::str("one")));
+        }
+        assert!(report_from_json(&j).is_err());
+    }
+
+    #[test]
+    fn degrade_accounting_round_trips_and_streams() {
+        // Report fields survive the JSON round-trip…
+        let mut r = sample_report();
+        r.degraded_windows = 2;
+        r.degraded_drains = 9;
+        let parsed = Json::parse(&report_json(&r).to_compact()).unwrap();
+        let rt = report_from_json(&parsed).unwrap();
+        assert_eq!(rt.degraded_windows, 2);
+        assert_eq!(rt.degraded_drains, 9);
+        assert_eq!(rt.to_string(), r.to_string());
+        // …and an old document without them decodes to zero.
+        let rt = report_from_json(&report_json(&sample_report())).unwrap();
+        assert_eq!((rt.degraded_windows, rt.degraded_drains), (0, 0));
+
+        // The JSONL stream frames a schema-stamped "degraded" line.
+        let mut sink = JsonlSink::new(Vec::new());
+        sink.on_event(&ReportEvent::Degraded {
+            window: 3,
+            drains: 4,
+            widened: true,
+        })
+        .unwrap();
+        sink.finish().unwrap();
+        let out = String::from_utf8(sink.into_inner()).unwrap();
+        let v = Json::parse(out.lines().next().unwrap()).unwrap();
+        assert_eq!(v.get("schema").unwrap().as_u64(), Some(SCHEMA_VERSION));
+        assert_eq!(v.get("event").unwrap().as_str(), Some("degraded"));
+        let body = v.get("degraded").unwrap();
+        assert_eq!(body.get("window").unwrap().as_u64(), Some(3));
+        assert_eq!(body.get("drains").unwrap().as_u64(), Some(4));
+        assert_eq!(body.get("widened").unwrap().as_bool(), Some(true));
+
+        // The one-document sink ignores the notice (additive event).
+        let mut doc = JsonSink::new(Vec::new());
+        doc.on_event(&ReportEvent::Degraded {
+            window: 1,
+            drains: 1,
+            widened: false,
+        })
+        .unwrap();
+        doc.on_event(&ReportEvent::SessionEnd { runtime_ns: 1 }).unwrap();
+        doc.finish().unwrap();
+        let parsed =
+            Json::parse(&String::from_utf8(doc.into_inner()).unwrap()).unwrap();
+        assert_eq!(parsed.get("windows").unwrap().as_arr().unwrap().len(), 0);
     }
 
     #[test]

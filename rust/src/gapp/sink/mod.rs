@@ -110,12 +110,26 @@ pub struct ShardWindowEvent<'a> {
 }
 
 /// One event of a profiling session, in emission order:
-/// `SessionStart ((ShardWindow)* WindowClosed)* Final SessionEnd`
-/// (`ShardWindow` only when opted in).
+/// `SessionStart ((ShardWindow)* (Degraded)? WindowClosed)* Final
+/// SessionEnd` (`ShardWindow` only when opted in; `Degraded` only under
+/// `--on-overflow degrade` and only for windows that degraded).
 #[derive(Clone, Copy, Debug)]
 pub enum ReportEvent<'a> {
     SessionStart(&'a SessionInfo),
     ShardWindow(ShardWindowEvent<'a>),
+    /// Graceful-degradation notice (additive within schema v1, like
+    /// `ShardWindow`): the window about to close absorbed overflow
+    /// pressure instead of shedding records — `drains` emergency ring
+    /// drains ran, and `widened` says whether the window traded
+    /// granularity by absorbing the following epoch.
+    Degraded {
+        /// 1-based window index (matches the following `WindowClosed`).
+        window: u64,
+        /// Emergency drains performed while the window was open.
+        drains: u64,
+        /// Whether the window was widened by one epoch in response.
+        widened: bool,
+    },
     WindowClosed(&'a WindowReport),
     Final(FinalEvent<'a>),
     SessionEnd { runtime_ns: u64 },

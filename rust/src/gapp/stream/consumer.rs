@@ -182,6 +182,7 @@ mod tests {
             kernel: crate::gapp::probes::KernelProbes::new(cfg, 2).unwrap(),
             user: crate::gapp::userspace::UserProbe::new(AnalysisEngine::native()),
             lanes,
+            hazard: Default::default(),
         }
     }
 

@@ -44,6 +44,12 @@ pub struct WindowReport {
     /// The same drops broken down by ring shard (indexed by shard id);
     /// rendered only when the window actually lost records.
     pub shard_drops: Vec<u64>,
+    /// Emergency ring drains performed while this window was open
+    /// (`--on-overflow degrade` only; rendered only when nonzero).
+    pub degraded_drains: u64,
+    /// Whether this window widened by absorbing the next epoch under
+    /// the degrade policy (rendered only when true).
+    pub widened: bool,
     /// Top-K bottlenecks of the window, ranked by window CMetric.
     pub top: Vec<LiveLine>,
     /// The full window merge snapshot (first-seen order). The driver
@@ -145,6 +151,8 @@ mod tests {
             drained: 12,
             drops: 0,
             shard_drops: vec![0, 0],
+            degraded_drains: 0,
+            widened: false,
             top: lines,
             snapshot: paths,
         };
@@ -167,6 +175,8 @@ mod tests {
             drained: 0,
             drops: 0,
             shard_drops: Vec::new(),
+            degraded_drains: 0,
+            widened: false,
             top: Vec::new(),
             snapshot: Vec::new(),
         };
@@ -183,6 +193,8 @@ mod tests {
             drained: 9,
             drops: 4,
             shard_drops: vec![0, 3, 0, 1],
+            degraded_drains: 0,
+            widened: false,
             top: Vec::new(),
             snapshot: Vec::new(),
         };

@@ -54,6 +54,7 @@
 pub mod consumer;
 pub mod live;
 pub mod multi;
+pub mod partials;
 pub mod topk;
 pub mod window;
 
@@ -105,7 +106,7 @@ impl Default for LiveConfig {
 /// Compact per-window record retained after the window's full report
 /// has been handed to the callback (keeps `LiveRun` O(windows), not
 /// O(windows × paths)).
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct WindowSummary {
     pub index: u64,
     pub slices: u64,

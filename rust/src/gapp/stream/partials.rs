@@ -1,0 +1,382 @@
+//! Fleet aggregation, reader half: merge `shard_window` partial events
+//! from JSONL streams produced by other gapp processes (the
+//! `--shard-partials` transport), tolerating the failure shapes a real
+//! fleet produces — torn writes, bit rot, truncated tails.
+//!
+//! The contract mirrors the sink schema policy from the other side of
+//! the wire:
+//!
+//! * a line that parses and carries `schema: 1` but a *different* event
+//!   kind is **skipped silently** — additive event kinds must not scare
+//!   older readers;
+//! * a line that does not parse, carries a foreign schema version, or
+//!   is missing/mistyping a required field is **quarantined**: counted
+//!   per producer (with the first error retained verbatim), never a
+//!   panic, never a silent skip.
+//!
+//! Partials merge exactly like the in-process tree
+//! ([`crate::gapp::stream::merge_tree`]): sums combine, first-seen
+//! stamps take the minimum, and the canonical order falls out of the
+//! stamps. The CLI front-end is `gapp aggregate FILE [FILE...]` (one
+//! producer per file).
+
+use crate::gapp::sink::json::SCHEMA_VERSION;
+use crate::util::json::Json;
+use crate::util::FxHashMap;
+
+/// One merged call path across every ingested partial — the four
+/// associative fields the `shard_window` wire format carries.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PartialPath {
+    pub stack_id: u32,
+    /// Total CMetric, femtoseconds.
+    pub cm_fs: u64,
+    pub slices: u64,
+    /// Earliest capture stamp (min across producers).
+    pub first_seen: u64,
+}
+
+/// Per-producer ingestion accounting.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ProducerStats {
+    /// Lines that parsed and carried a valid v1 envelope (including
+    /// event kinds this reader skips by policy).
+    pub lines_ok: u64,
+    /// `shard_window` lines actually merged.
+    pub partials: u64,
+    /// Malformed lines refused and counted instead of trusted.
+    pub quarantined: u64,
+    /// The first quarantine reason, verbatim (diagnosis aid).
+    pub first_error: Option<String>,
+}
+
+/// One producer's name + accounting, in ingestion order.
+#[derive(Clone, Debug)]
+pub struct ProducerReport {
+    pub name: String,
+    pub stats: ProducerStats,
+}
+
+/// Merges `shard_window` partials from any number of producers.
+#[derive(Default)]
+pub struct PartialAggregator {
+    paths: FxHashMap<u32, PartialPath>,
+    producers: Vec<ProducerReport>,
+}
+
+impl PartialAggregator {
+    pub fn new() -> PartialAggregator {
+        PartialAggregator::default()
+    }
+
+    /// Ingest one producer's JSONL stream. Never fails: malformed lines
+    /// are quarantined into the producer's [`ProducerStats`].
+    pub fn ingest(&mut self, producer: &str, text: &str) {
+        let mut stats = ProducerStats::default();
+        for line in text.lines() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            match self.ingest_line(line) {
+                Ok(merged) => {
+                    stats.lines_ok += 1;
+                    if merged {
+                        stats.partials += 1;
+                    }
+                }
+                Err(e) => {
+                    stats.quarantined += 1;
+                    stats.first_error.get_or_insert(e);
+                }
+            }
+        }
+        self.producers.push(ProducerReport {
+            name: producer.to_string(),
+            stats,
+        });
+    }
+
+    /// Ingest a JSONL file, using its path as the producer name. I/O
+    /// failure is a real error; content failures quarantine per line.
+    pub fn ingest_file(&mut self, path: &str) -> anyhow::Result<()> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("cannot read partials {path:?}: {e}"))?;
+        self.ingest(path, &text);
+        Ok(())
+    }
+
+    /// `Ok(true)` = a `shard_window` line was merged; `Ok(false)` = a
+    /// valid line of another event kind was skipped by policy.
+    fn ingest_line(&mut self, line: &str) -> Result<bool, String> {
+        let v = Json::parse(line)?;
+        let schema = v
+            .get("schema")
+            .ok_or("line carries no \"schema\" field")?
+            .as_u64()
+            .ok_or("\"schema\" is not a u64")?;
+        if schema != SCHEMA_VERSION {
+            return Err(format!(
+                "schema version {schema} (this reader understands {SCHEMA_VERSION})"
+            ));
+        }
+        let event = v
+            .get("event")
+            .ok_or("line carries no \"event\" field")?
+            .as_str()
+            .ok_or("\"event\" is not a string")?;
+        if event != "shard_window" {
+            // Another valid v1 event kind — not partial transport.
+            return Ok(false);
+        }
+        let body = v
+            .get("shard_window")
+            .ok_or("shard_window line carries no \"shard_window\" body")?;
+        // Validate the whole line before merging any of it, so a line
+        // corrupt in its third path does not half-apply.
+        let mut parsed: Vec<PartialPath> = Vec::new();
+        for p in body
+            .get("paths")
+            .and_then(|p| p.as_arr())
+            .ok_or("\"paths\" is missing or not an array")?
+        {
+            let field = |key: &str| -> Result<u64, String> {
+                p.get(key)
+                    .ok_or_else(|| format!("path entry missing {key:?}"))?
+                    .as_u64()
+                    .ok_or_else(|| format!("path field {key:?} is not a u64"))
+            };
+            parsed.push(PartialPath {
+                stack_id: field("stack_id")? as u32,
+                cm_fs: field("cm_fs")?,
+                slices: field("slices")?,
+                first_seen: field("first_seen")?,
+            });
+        }
+        for p in parsed {
+            let e = self.paths.entry(p.stack_id).or_insert(PartialPath {
+                stack_id: p.stack_id,
+                cm_fs: 0,
+                slices: 0,
+                first_seen: u64::MAX,
+            });
+            e.cm_fs = e.cm_fs.saturating_add(p.cm_fs);
+            e.slices += p.slices;
+            e.first_seen = e.first_seen.min(p.first_seen);
+        }
+        Ok(true)
+    }
+
+    /// Per-producer accounting, in ingestion order.
+    pub fn producers(&self) -> &[ProducerReport] {
+        &self.producers
+    }
+
+    /// Total quarantined lines across all producers.
+    pub fn quarantined(&self) -> u64 {
+        self.producers.iter().map(|p| p.stats.quarantined).sum()
+    }
+
+    /// Merged paths ranked by CMetric (ties: earlier first-seen, then
+    /// lower id — fully deterministic).
+    pub fn top(&self, n: usize) -> Vec<PartialPath> {
+        let mut all: Vec<PartialPath> = self.paths.values().copied().collect();
+        all.sort_by(|a, b| {
+            b.cm_fs
+                .cmp(&a.cm_fs)
+                .then(a.first_seen.cmp(&b.first_seen))
+                .then(a.stack_id.cmp(&b.stack_id))
+        });
+        all.truncate(n);
+        all
+    }
+
+    /// Render the fleet-aggregation report: per-producer accounting
+    /// (quarantine is *visible*, never silent) and the merged top-N.
+    pub fn render(&self, n: usize) -> String {
+        use std::fmt::Write;
+        let mut out = String::new();
+        writeln!(
+            out,
+            "fleet partials: {} producer(s), {} merged path(s)",
+            self.producers.len(),
+            self.paths.len(),
+        )
+        .unwrap();
+        for p in &self.producers {
+            write!(
+                out,
+                "  {}: {} line(s) ok, {} partial(s), {} quarantined",
+                p.name, p.stats.lines_ok, p.stats.partials, p.stats.quarantined,
+            )
+            .unwrap();
+            match &p.stats.first_error {
+                Some(e) => writeln!(out, " (first error: {e})").unwrap(),
+                None => writeln!(out).unwrap(),
+            }
+        }
+        let top = self.top(n);
+        if top.is_empty() {
+            writeln!(out, "no partials merged").unwrap();
+        } else {
+            writeln!(out, "top {} path(s) by CMetric:", top.len()).unwrap();
+            for p in &top {
+                writeln!(
+                    out,
+                    "  stack {:>6}  cm {:>10.3} ms  slices {:>6}  first seen {}",
+                    p.stack_id,
+                    p.cm_fs as f64 / 1e12,
+                    p.slices,
+                    p.first_seen,
+                )
+                .unwrap();
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gapp::faults::corrupt_jsonl;
+
+    fn line(index: u64, shard: u64, paths: &[(u64, u64, u64, u64)]) -> String {
+        Json::obj(vec![
+            ("schema", Json::u64(SCHEMA_VERSION)),
+            ("event", Json::str("shard_window")),
+            (
+                "shard_window",
+                Json::obj(vec![
+                    ("index", Json::u64(index)),
+                    ("shard", Json::u64(shard)),
+                    ("slices", Json::u64(paths.iter().map(|p| p.2).sum())),
+                    ("drained", Json::u64(10)),
+                    ("drops", Json::u64(0)),
+                    (
+                        "paths",
+                        Json::Arr(
+                            paths
+                                .iter()
+                                .map(|(id, cm, sl, fs)| {
+                                    Json::obj(vec![
+                                        ("stack_id", Json::u64(*id)),
+                                        ("cm_fs", Json::u64(*cm)),
+                                        ("slices", Json::u64(*sl)),
+                                        ("first_seen", Json::u64(*fs)),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ),
+                ]),
+            ),
+        ])
+        .to_compact()
+    }
+
+    #[test]
+    fn partials_from_several_producers_merge_like_the_tree() {
+        let a = format!(
+            "{}\n{}\n",
+            line(1, 0, &[(7, 100, 2, 40), (9, 50, 1, 41)]),
+            line(2, 0, &[(7, 30, 1, 90)]),
+        );
+        let b = format!("{}\n", line(1, 1, &[(7, 1000, 3, 12)]));
+        let mut agg = PartialAggregator::new();
+        agg.ingest("nodeA", &a);
+        agg.ingest("nodeB", &b);
+        assert_eq!(agg.quarantined(), 0);
+        assert_eq!(agg.producers()[0].stats.partials, 2);
+        let top = agg.top(10);
+        assert_eq!(top.len(), 2);
+        // Path 7: sums combine, first_seen takes the minimum.
+        assert_eq!(top[0].stack_id, 7);
+        assert_eq!(top[0].cm_fs, 1130);
+        assert_eq!(top[0].slices, 6);
+        assert_eq!(top[0].first_seen, 12);
+        assert_eq!(top[1].stack_id, 9);
+        let r = agg.render(5);
+        assert!(r.contains("nodeA: 2 line(s) ok, 2 partial(s), 0 quarantined"));
+        assert!(r.contains("stack      7"));
+    }
+
+    #[test]
+    fn other_valid_event_kinds_are_skipped_not_quarantined() {
+        let text = format!(
+            "{{\"schema\": {SCHEMA_VERSION}, \"event\": \"window\", \"window\": {{}}}}\n{}\n",
+            line(1, 0, &[(3, 10, 1, 5)]),
+        );
+        let mut agg = PartialAggregator::new();
+        agg.ingest("p", &text);
+        let s = &agg.producers()[0].stats;
+        assert_eq!(s.lines_ok, 2, "skipped lines still count as ok");
+        assert_eq!(s.partials, 1);
+        assert_eq!(s.quarantined, 0);
+    }
+
+    #[test]
+    fn malformed_lines_are_quarantined_with_counters_and_first_error() {
+        let cases = [
+            "{not json at all",
+            "{\"event\": \"shard_window\"}",
+            "{\"schema\": 2, \"event\": \"shard_window\"}",
+            "{\"schema\": 1, \"event\": 7}",
+            "{\"schema\": 1, \"event\": \"shard_window\"}",
+            "{\"schema\": 1, \"event\": \"shard_window\", \"shard_window\": {\"paths\": [{\"stack_id\": 1}]}}",
+        ];
+        for bad in cases {
+            let text = format!("{bad}\n{}\n", line(1, 0, &[(5, 10, 1, 2)]));
+            let mut agg = PartialAggregator::new();
+            agg.ingest("p", &text);
+            let s = &agg.producers()[0].stats;
+            assert_eq!(s.quarantined, 1, "{bad} should quarantine");
+            assert_eq!(s.partials, 1, "the good line still merges: {bad}");
+            assert!(s.first_error.is_some(), "{bad}");
+        }
+        // A foreign schema version names both versions in the reason.
+        let mut agg = PartialAggregator::new();
+        agg.ingest("p", "{\"schema\": 2, \"event\": \"shard_window\"}\n");
+        let err = agg.producers()[0].stats.first_error.clone().unwrap();
+        assert!(err.contains('2') && err.contains('1'), "{err}");
+    }
+
+    #[test]
+    fn a_corrupt_line_never_half_applies() {
+        // Two paths, second one mistyped: the first must NOT merge.
+        let text = "{\"schema\": 1, \"event\": \"shard_window\", \"shard_window\": \
+                    {\"paths\": [\
+                    {\"stack_id\": 1, \"cm_fs\": 5, \"slices\": 1, \"first_seen\": 2},\
+                    {\"stack_id\": \"oops\"}]}}\n";
+        let mut agg = PartialAggregator::new();
+        agg.ingest("p", text);
+        assert_eq!(agg.quarantined(), 1);
+        assert!(agg.top(10).is_empty(), "nothing may merge from a bad line");
+    }
+
+    #[test]
+    fn deterministic_corruption_is_survived_and_accounted() {
+        let clean: String = (0..8)
+            .map(|i| format!("{}\n", line(i, 0, &[(i, 100, 1, i)])))
+            .collect();
+        // Corrupt EVERY line of the dirty producer: truncations and
+        // lost tails are guaranteed quarantine; a clobbered line may
+        // still parse (then it is merged, or skipped if the event name
+        // was the casualty) — so assert bounds, not exact counts. The
+        // clean producer is the control: it must be untouched by its
+        // peer's corruption.
+        let dirty = corrupt_jsonl(&clean, 0xC0FFEE, 1);
+        let mut agg = PartialAggregator::new();
+        agg.ingest("clean", &clean);
+        agg.ingest("dirty", &dirty);
+        let c = &agg.producers()[0].stats;
+        let d = &agg.producers()[1].stats;
+        assert_eq!(c.partials, 8);
+        assert_eq!(c.quarantined, 0);
+        assert!(d.quarantined >= 1, "stats: {d:?}");
+        assert!(d.first_error.is_some());
+        assert!(d.partials + d.quarantined <= 8 + d.lines_ok);
+        // Every clean path survives regardless of the dirty peer.
+        assert_eq!(agg.top(16).len(), 8);
+        assert!(agg.render(3).contains("dirty:"));
+    }
+}

@@ -143,6 +143,56 @@ impl<K: Eq + Hash + Copy + Ord> SpaceSaving<K> {
         }
     }
 
+    /// Serialize the sketch: `(capacity, counters)` with counters as
+    /// `(key, count, err)` sorted ascending by key — a deterministic,
+    /// order-independent snapshot for the checkpoint writer. The heap
+    /// and generation counters are reconstruction details, not state:
+    /// victim selection depends only on the live `(count, key)` pairs,
+    /// so [`from_parts`] rebuilds them fresh.
+    ///
+    /// [`from_parts`]: SpaceSaving::from_parts
+    pub fn export(&self) -> (usize, Vec<(K, u64, u64)>) {
+        let mut v: Vec<(K, u64, u64)> = self
+            .counters
+            .iter()
+            .map(|(k, c)| (*k, c.count, c.err))
+            .collect();
+        v.sort_by_key(|e| e.0);
+        (self.cap, v)
+    }
+
+    /// Rebuild a sketch from an [`export`] snapshot. Errors (instead of
+    /// panicking) on impossible shapes — more entries than capacity, a
+    /// duplicated key — so a corrupt checkpoint surfaces as a message,
+    /// not an assertion failure deep in the sketch.
+    ///
+    /// [`export`]: SpaceSaving::export
+    pub fn from_parts(cap: usize, entries: &[(K, u64, u64)]) -> Result<SpaceSaving<K>, String> {
+        if cap < 1 {
+            return Err("sketch capacity must be >= 1".to_string());
+        }
+        if entries.len() > cap {
+            return Err(format!(
+                "sketch has {} counters but capacity {cap}",
+                entries.len()
+            ));
+        }
+        let mut s = SpaceSaving::new(cap);
+        for &(k, count, err) in entries {
+            s.next_gen += 1;
+            let c = Counter {
+                count,
+                err,
+                gen: s.next_gen,
+            };
+            if s.counters.insert(k, c).is_some() {
+                return Err("sketch snapshot repeats a key".to_string());
+            }
+            s.heap.push(Reverse((count, k, c.gen)));
+        }
+        Ok(s)
+    }
+
     /// Top `n` keys as `(key, count_upper_bound, max_overestimate)`,
     /// descending by count (ties: smallest key first).
     pub fn top(&self, n: usize) -> Vec<(K, u64, u64)> {
@@ -219,6 +269,40 @@ mod tests {
     #[should_panic(expected = "capacity must be >= 1")]
     fn zero_capacity_sketch_is_rejected() {
         let _ = SpaceSaving::<u32>::new(0);
+    }
+
+    #[test]
+    fn export_restore_round_trip_preserves_future_behaviour() {
+        // A restored sketch must not just report the same top-K: it must
+        // keep *behaving* identically — same victims, same inherited
+        // errors — under any continuation stream.
+        let mut rng = Prng::new(0x5EED);
+        let mut original: SpaceSaving<u32> = SpaceSaving::new(5);
+        for _ in 0..300 {
+            original.add(rng.below(32) as u32, 1 + rng.below(9));
+        }
+        let (cap, entries) = original.export();
+        assert_eq!(cap, 5);
+        assert!(entries.windows(2).all(|w| w[0].0 < w[1].0), "sorted by key");
+        let mut restored = SpaceSaving::from_parts(cap, &entries).unwrap();
+        assert_eq!(restored.top(5), original.top(5));
+        for _ in 0..300 {
+            let (k, w) = (rng.below(32) as u32, 1 + rng.below(9));
+            original.add(k, w);
+            restored.add(k, w);
+        }
+        assert_eq!(restored.top(5), original.top(5));
+        assert_eq!(restored.export(), original.export());
+    }
+
+    #[test]
+    fn from_parts_rejects_impossible_snapshots() {
+        let err = SpaceSaving::<u32>::from_parts(0, &[]).unwrap_err();
+        assert!(err.contains(">= 1"), "{err}");
+        let err = SpaceSaving::<u32>::from_parts(1, &[(1, 2, 0), (2, 3, 0)]).unwrap_err();
+        assert!(err.contains("capacity"), "{err}");
+        let err = SpaceSaving::<u32>::from_parts(4, &[(1, 2, 0), (1, 3, 0)]).unwrap_err();
+        assert!(err.contains("repeats"), "{err}");
     }
 
     /// The old implementation, verbatim in behaviour: O(cap) min scan

@@ -96,7 +96,7 @@ fn cm_fs_of(cm_ns: f64) -> u64 {
 }
 
 impl MergedPath {
-    fn new(stack_id: u32) -> MergedPath {
+    pub(crate) fn new(stack_id: u32) -> MergedPath {
         MergedPath {
             stack_id,
             cm_fs: 0,
@@ -477,6 +477,9 @@ impl UserProbe {
                     self.flush_batch();
                 }
             }
+            // Injected filler traffic: consumes ring capacity and drain
+            // bandwidth, contributes nothing to the analysis.
+            Record::Noise => {}
             // Handled by the slice assembler above.
             Record::Sample { .. } | Record::SliceDiscard { .. } | Record::SliceEnd { .. } => {
                 unreachable!("slice-stage records are consumed by the assembler")

@@ -8,11 +8,18 @@
 //!              [--format text|json|jsonl] [--output FILE]
 //! gapp live --app mysql --app dedup --window-us 5000 [--top 5] [--lru]
 //!           [--shards N] [--ring-capacity R] [--merge serial|tree]
-//!           [--shard-partials]
+//!           [--shard-partials] [--on-overflow shed|degrade]
+//!           [--checkpoint FILE] [--checkpoint-every N] [--resume FILE]
+//!           [--fault-plan FILE]
 //!           [--format text|json|jsonl] [--output FILE]
 //!                                  # streaming analyzer: epoch-windowed
 //!                                  # per-window top-K; repeat --app for
 //!                                  # system-wide multi-app profiling
+//! gapp aggregate FILE [FILE...]    # merge shard_window partials from
+//!                                  # JSONL streams (one producer per
+//!                                  # file); malformed lines are
+//!                                  # quarantined and counted, never
+//!                                  # trusted
 //! Transport is sharded per CPU (PERF_EVENT_ARRAY-style): one ring of
 //! --ring-capacity records per shard, records routed to the CPU they
 //! fired on and globally re-ordered by timestamp at read time.
@@ -27,6 +34,15 @@
 //! identical to the pre-sink CLI), json (one schema-versioned document
 //! per session) or jsonl (one event per line — windows stream as they
 //! close); --output writes to a file instead of stdout.
+//! Durability: --checkpoint writes an atomic snapshot of the session
+//! state every --checkpoint-every windows (default 1); --resume picks a
+//! crashed session back up from that snapshot and finishes with output
+//! byte-identical to an uninterrupted run. --on-overflow picks the
+//! ring-overflow policy: shed (default; drop + count) or degrade
+//! (emergency-drain near-full rings and widen the window once).
+//! --fault-plan injects deterministic faults (overflow bursts, a
+//! stalled shard, kill points) from a JSON plan — the crash-recovery
+//! test harness, available in production builds on purpose.
 //! gapp run --app ferret            # unprofiled baseline run
 //! gapp table2 [--threads 64]       # Table 2
 //! gapp fig3 | fig4 | fig5 | fig6 | fig7
@@ -45,9 +61,13 @@ use gapp::experiments::{
     baselines_cmp, dedup_alloc, fig3, fig4, fig5, fig6, fig7, overhead, sensitivity,
     table2, EngineKind,
 };
+use gapp::gapp::faults::FaultPlan;
 use gapp::gapp::sink::{self, ReportSink};
+use gapp::gapp::stream::partials::PartialAggregator;
 use gapp::gapp::stream::LiveConfig;
-use gapp::gapp::{run_unprofiled, GappConfig, MergeStrategy, ReportFormat, Session};
+use gapp::gapp::{
+    run_unprofiled, GappConfig, MergeStrategy, OverflowPolicy, ReportFormat, Session,
+};
 use gapp::simkernel::KernelConfig;
 use gapp::util::cli::Args;
 use gapp::workload::apps;
@@ -72,6 +92,7 @@ fn main() {
         Some("run") => cmd_run(&args, threads, seed),
         Some("profile") => cmd_profile(&args, engine, threads, seed),
         Some("live") => cmd_live(&args, engine, threads, seed),
+        Some("aggregate") => cmd_aggregate(&args),
         Some("table2") => table2::run(engine, threads, seed)
             .map(|rows| println!("{}", table2::render(&rows))),
         Some("fig3") => fig3::run(engine, threads.min(32), seed)
@@ -94,13 +115,23 @@ fn main() {
         _ => {
             eprintln!("usage: see `gapp --help` header in rust/src/main.rs");
             eprintln!(
-                "subcommands: list-apps run profile live table2 fig3 fig4 fig5 fig6 \
-                 fig7 dedup-alloc sweep overhead baselines all"
+                "subcommands: list-apps run profile live aggregate table2 fig3 fig4 \
+                 fig5 fig6 fig7 dedup-alloc sweep overhead baselines all"
             );
             eprintln!(
                 "live mode: gapp live --app mysql --app dedup --window-us 5000 \
                  [--top 5] [--lru] [--shards N] [--ring-capacity R] \
-                 [--merge serial|tree] [--shard-partials]"
+                 [--merge serial|tree] [--shard-partials] \
+                 [--on-overflow shed|degrade]"
+            );
+            eprintln!(
+                "durability: profile/live take --checkpoint FILE \
+                 [--checkpoint-every N] to snapshot, --resume FILE to pick a \
+                 crashed session back up, --fault-plan FILE to inject faults;"
+            );
+            eprintln!(
+                "            gapp aggregate FILE [FILE...] merges shard_window \
+                 partials from JSONL streams, quarantining malformed lines"
             );
             eprintln!(
                 "output:    profile/live take --format text|json|jsonl and \
@@ -159,8 +190,36 @@ fn gapp_config_from(args: &Args) -> anyhow::Result<GappConfig> {
         .opt_choice("format", &ReportFormat::NAMES, ReportFormat::Text.name())
         .map_err(bad)?;
     gcfg.format = ReportFormat::from_name(&format).expect("opt_choice vetted the name");
+    let overflow = args
+        .opt_choice("on-overflow", &OverflowPolicy::NAMES, gcfg.on_overflow.name())
+        .map_err(bad)?;
+    gcfg.on_overflow =
+        OverflowPolicy::from_name(&overflow).expect("opt_choice vetted the name");
     gcfg.output = args.get("output").map(String::from);
     Ok(gcfg)
+}
+
+/// Shared durability flags (`profile` and `live`): checkpointing,
+/// resume, and fault injection, applied to the session builder.
+fn apply_durability<'a>(
+    args: &Args,
+    mut session: Session<'a>,
+) -> anyhow::Result<Session<'a>> {
+    if let Some(path) = args.get("checkpoint") {
+        session = session.checkpoint(path);
+    }
+    let every = args
+        .opt_min1("checkpoint-every", 1)
+        .map_err(|e| anyhow::anyhow!(e))?;
+    session = session.checkpoint_every(every);
+    if let Some(path) = args.get("resume") {
+        session = session.restore(path);
+    }
+    if let Some(path) = args.get("fault-plan") {
+        let plan = FaultPlan::load(path).map_err(|e| anyhow::anyhow!(e))?;
+        session = session.fault_plan(plan);
+    }
+    Ok(session)
 }
 
 /// Open the sink the config asks for: `--format` picks the backend,
@@ -182,12 +241,12 @@ fn cmd_profile(args: &Args, engine: EngineKind, threads: usize, seed: u64) -> an
         .ok_or_else(|| anyhow::anyhow!("unknown app {name:?} (try list-apps)"))?;
     let gcfg = gapp_config_from(args)?;
     let sink = report_sink(&gcfg)?;
-    Session::builder(engine.make()?)
+    let session = Session::builder(engine.make()?)
         .kernel(KernelConfig::default())
         .config(gcfg)
         .app(&app)
-        .sink(sink)
-        .run()?;
+        .sink(sink);
+    apply_durability(args, session)?.run()?;
     Ok(())
 }
 
@@ -226,7 +285,28 @@ fn cmd_live(args: &Args, engine: EngineKind, threads: usize, seed: u64) -> anyho
     for app in &apps {
         session = session.app(app);
     }
-    session.run()?;
+    apply_durability(args, session)?.run()?;
+    Ok(())
+}
+
+/// Merge `shard_window` partials from one or more JSONL files (one
+/// producer per file) and print the fleet-aggregation report. Malformed
+/// lines are quarantined per producer and surfaced in the report;
+/// unreadable files are hard errors.
+fn cmd_aggregate(args: &Args) -> anyhow::Result<()> {
+    let files = &args.positional[1..];
+    anyhow::ensure!(
+        !files.is_empty(),
+        "aggregate needs at least one JSONL file (gapp aggregate FILE [FILE...])"
+    );
+    let mut agg = PartialAggregator::new();
+    for f in files {
+        agg.ingest_file(f)?;
+    }
+    let top = args
+        .opt_min1("top", 10)
+        .map_err(|e| anyhow::anyhow!(e))? as usize;
+    print!("{}", agg.render(top));
     Ok(())
 }
 

@@ -185,7 +185,7 @@ impl Json {
             i: 0,
         };
         p.skip_ws();
-        let v = p.value()?;
+        let v = p.value(0)?;
         p.skip_ws();
         if p.i != p.b.len() {
             return Err(format!("trailing garbage at byte {}", p.i));
@@ -220,6 +220,14 @@ fn write_escaped(out: &mut String, s: &str) {
     }
     out.push('"');
 }
+
+/// Maximum container nesting the parser accepts. The recursive-descent
+/// `value`/`array`/`object` cycle consumes host stack per level, so an
+/// adversarial depth bomb (`[[[[…`) would otherwise crash the process
+/// with a stack overflow — an abort, not a catchable error. 128 levels
+/// is far beyond any document the sinks emit (≤ 5) while keeping worst-
+/// case recursion bounded.
+const MAX_DEPTH: usize = 128;
 
 struct Parser<'a> {
     b: &'a [u8],
@@ -263,14 +271,20 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn value(&mut self) -> Result<Json, String> {
+    fn value(&mut self, depth: usize) -> Result<Json, String> {
+        if depth >= MAX_DEPTH {
+            return Err(format!(
+                "nesting too deep at byte {} (max {MAX_DEPTH} levels)",
+                self.i
+            ));
+        }
         match self.peek() {
             Some(b'n') => self.lit("null", Json::Null),
             Some(b't') => self.lit("true", Json::Bool(true)),
             Some(b'f') => self.lit("false", Json::Bool(false)),
             Some(b'"') => Ok(Json::Str(self.string()?)),
-            Some(b'[') => self.array(),
-            Some(b'{') => self.object(),
+            Some(b'[') => self.array(depth),
+            Some(b'{') => self.object(depth),
             Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
             other => Err(format!(
                 "unexpected {:?} at byte {}",
@@ -280,7 +294,7 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn array(&mut self) -> Result<Json, String> {
+    fn array(&mut self, depth: usize) -> Result<Json, String> {
         self.expect(b'[')?;
         let mut items = Vec::new();
         self.skip_ws();
@@ -290,7 +304,7 @@ impl<'a> Parser<'a> {
         }
         loop {
             self.skip_ws();
-            items.push(self.value()?);
+            items.push(self.value(depth + 1)?);
             self.skip_ws();
             match self.peek() {
                 Some(b',') => self.i += 1,
@@ -303,7 +317,7 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn object(&mut self) -> Result<Json, String> {
+    fn object(&mut self, depth: usize) -> Result<Json, String> {
         self.expect(b'{')?;
         let mut fields = Vec::new();
         self.skip_ws();
@@ -317,7 +331,7 @@ impl<'a> Parser<'a> {
             self.skip_ws();
             self.expect(b':')?;
             self.skip_ws();
-            let v = self.value()?;
+            let v = self.value(depth + 1)?;
             fields.push((k, v));
             self.skip_ws();
             match self.peek() {
@@ -520,6 +534,81 @@ mod tests {
             "{\"a\":1} extra", "[01x]", "nan",
         ] {
             assert!(Json::parse(bad).is_err(), "{bad:?} should not parse");
+        }
+    }
+
+    #[test]
+    fn depth_bombs_error_instead_of_overflowing_the_stack() {
+        // A pathological `[[[[…` / `{"a":{"a":…` document must come
+        // back as a real error, never a process-aborting stack
+        // overflow. 4096 levels would need ~4096 recursion frames
+        // without the guard.
+        let bomb_arr = "[".repeat(4096);
+        let err = Json::parse(&bomb_arr).unwrap_err();
+        assert!(err.contains("nesting too deep"), "{err}");
+        let bomb_obj = "{\"a\":".repeat(4096);
+        let err = Json::parse(&bomb_obj).unwrap_err();
+        assert!(err.contains("nesting too deep"), "{err}");
+        // Deep-but-legal documents still parse: MAX_DEPTH - 1 nested
+        // arrays (the innermost value sits at depth MAX_DEPTH - 1).
+        let ok = format!("{}1{}", "[".repeat(MAX_DEPTH - 1), "]".repeat(MAX_DEPTH - 1));
+        assert!(Json::parse(&ok).is_ok());
+        // One level past the limit errors.
+        let over = format!("{}1{}", "[".repeat(MAX_DEPTH), "]".repeat(MAX_DEPTH));
+        assert!(Json::parse(&over).unwrap_err().contains("nesting too deep"));
+    }
+
+    #[test]
+    fn random_prefixes_and_mutations_of_sink_output_never_panic() {
+        // Property test for the robustness contract: feed the parser
+        // every prefix and a few hundred random single-byte mutations
+        // of a realistic sink document (the shapes `JsonSink`/`JsonlSink`
+        // emit). Each call must return Ok or Err — panics and aborts
+        // are the only failures.
+        let doc = Json::obj(vec![
+            ("schema", Json::u64(1)),
+            ("event", Json::str("shard_window")),
+            (
+                "shard_window",
+                Json::obj(vec![
+                    ("index", Json::u64(3)),
+                    ("shard", Json::u64(1)),
+                    ("slices", Json::u64(42)),
+                    ("drained", Json::u64(128)),
+                    ("drops", Json::u64(0)),
+                    (
+                        "paths",
+                        Json::Arr(vec![Json::obj(vec![
+                            ("stack_id", Json::u64(7)),
+                            ("cm_fs", Json::u64(123_456_789)),
+                            ("slices", Json::u64(5)),
+                            ("first_seen", Json::u64(1_000_000)),
+                        ])]),
+                    ),
+                ]),
+            ),
+            ("note", Json::str("héllo \"quoted\" \\ line\nnext")),
+            ("ratio", Json::f64(0.0725)),
+        ]);
+        let text = doc.to_compact();
+        assert!(Json::parse(&text).is_ok());
+        // Every truncation point (on char boundaries).
+        for (i, _) in text.char_indices() {
+            let _ = Json::parse(&text[..i]);
+        }
+        // Deterministic pseudo-random single-byte substitutions; keep
+        // the result valid UTF-8 by operating on chars.
+        let mut rng = crate::util::Prng::new(0xBADF00D);
+        let chars: Vec<char> = text.chars().collect();
+        for _ in 0..400 {
+            let mut mutated = chars.clone();
+            let at = rng.below(mutated.len() as u64) as usize;
+            let replacement = [
+                '{', '}', '[', ']', '"', ',', ':', '\\', 'x', '0', '9', '\u{1}', 'é',
+            ];
+            mutated[at] = replacement[rng.below(replacement.len() as u64) as usize];
+            let s: String = mutated.into_iter().collect();
+            let _ = Json::parse(&s); // must return, never panic
         }
     }
 

@@ -1,0 +1,537 @@
+//! Crash-safe session goldens: kill → restore → finish must be
+//! indistinguishable from never having crashed.
+//!
+//! The durability tentpole claims three invariants, pinned here on
+//! fixed seeds across the transport/strategy matrix:
+//!
+//! 1. **Recovery identity** — a session killed after window k (by a
+//!    fault plan, right after that window's checkpoint was published)
+//!    and resumed from the checkpoint finishes with per-window output
+//!    and a final report *byte-identical* to the uninterrupted run —
+//!    batch and live, `--shards 1|4`, `--merge serial|tree`, with and
+//!    without `--lru`, and under active fault plans.
+//! 2. **Degradation accounting** — injected overflow bursts drop (and
+//!    are counted) under `--on-overflow shed`, and are absorbed by
+//!    emergency drains + window widening (and are counted) under
+//!    `--on-overflow degrade`; a stalled shard lane with adequate
+//!    buffering is *invisible* to the output.
+//! 3. **Quarantine** — corrupt `shard_window` JSONL lines feed the
+//!    partial reader's per-producer quarantine counters, never a panic
+//!    and never a silent skip.
+
+use std::cell::RefCell;
+use std::io;
+use std::rc::Rc;
+
+use gapp::gapp::checkpoint::Checkpoint;
+use gapp::gapp::faults::{corrupt_jsonl, FaultPlan, OverflowBurst, StallSpec};
+use gapp::gapp::sink::{FnSink, JsonlSink, ReportEvent};
+use gapp::gapp::stream::partials::PartialAggregator;
+use gapp::gapp::stream::LiveConfig;
+use gapp::gapp::{
+    GappConfig, MergeStrategy, OverflowPolicy, Report, Session, SessionOutput,
+};
+use gapp::runtime::AnalysisEngine;
+use gapp::workload::apps;
+
+/// Unique scratch path per (process, label) so parallel tests never
+/// collide on checkpoint files.
+fn tmp(label: &str) -> String {
+    let mut p = std::env::temp_dir();
+    p.push(format!("gapp_crash_{}_{label}", std::process::id()));
+    p.to_string_lossy().into_owned()
+}
+
+/// Zero host-timing fields; everything else must match exactly.
+fn normalize(r: &Report) -> String {
+    let mut r = r.clone();
+    r.ppt_seconds = 0.0;
+    r.memory_bytes = 0;
+    r.to_string()
+}
+
+/// One live-session configuration under test.
+#[derive(Clone)]
+struct Spec {
+    shards: usize,
+    merge: MergeStrategy,
+    lru: bool,
+    on_overflow: OverflowPolicy,
+    ring_capacity: Option<usize>,
+    drain_threshold: Option<usize>,
+    window_ns: u64,
+    plan: FaultPlan,
+    checkpoint: Option<String>,
+    resume: Option<String>,
+}
+
+impl Spec {
+    fn new(shards: usize, merge: MergeStrategy) -> Spec {
+        Spec {
+            shards,
+            merge,
+            lru: false,
+            on_overflow: OverflowPolicy::Shed,
+            ring_capacity: None,
+            drain_threshold: None,
+            window_ns: 2_000_000,
+            plan: FaultPlan::default(),
+            checkpoint: None,
+            resume: None,
+        }
+    }
+
+    fn kill_at(mut self, window: u64, path: &str) -> Spec {
+        self.plan.kill_after_window = Some(window);
+        self.checkpoint = Some(path.to_string());
+        self
+    }
+
+    fn resume_from(mut self, path: &str) -> Spec {
+        // Keep the same fault plan (minus nothing — completed kill
+        // points cannot re-fire, the driver resumes past them).
+        self.resume = Some(path.to_string());
+        self
+    }
+}
+
+/// Run one live canneal session under `spec`, capturing every rendered
+/// window (plus degraded markers) exactly as a human sink would show
+/// them.
+fn run_spec(spec: &Spec) -> (anyhow::Result<SessionOutput>, Vec<String>) {
+    let app = apps::canneal(8, 5);
+    let mut gcfg = GappConfig {
+        shards: Some(spec.shards),
+        merge: spec.merge,
+        on_overflow: spec.on_overflow,
+        ..Default::default()
+    };
+    if let Some(cap) = spec.ring_capacity {
+        gcfg.ring_capacity = cap;
+    }
+    if let Some(t) = spec.drain_threshold {
+        gcfg.drain_threshold = t;
+    }
+    if spec.lru {
+        gcfg.stack_lru = true;
+        gcfg.stack_map_entries = 4;
+    }
+    let lines = Rc::new(RefCell::new(Vec::<String>::new()));
+    let l2 = lines.clone();
+    let mut session = Session::builder(AnalysisEngine::native())
+        .app(&app)
+        .config(gcfg)
+        .live(LiveConfig {
+            window_ns: spec.window_ns,
+            ..Default::default()
+        })
+        .fault_plan(spec.plan.clone())
+        .sink(FnSink(move |ev: &ReportEvent<'_>| {
+            let mut lines = l2.borrow_mut();
+            match ev {
+                ReportEvent::WindowClosed(w) => lines.push(w.to_string()),
+                ReportEvent::Degraded {
+                    window,
+                    drains,
+                    widened,
+                } => lines.push(format!("degraded {window} {drains} {widened}")),
+                _ => {}
+            }
+        }));
+    if let Some(path) = &spec.checkpoint {
+        session = session.checkpoint(path);
+    }
+    if let Some(path) = &spec.resume {
+        session = session.restore(path);
+    }
+    let result = session.run();
+    let lines = lines.borrow().clone();
+    (result, lines)
+}
+
+/// Baseline / crash / resume triple for one spec: assert the recovery
+/// identity and return the baseline for further checks.
+fn assert_recovery_identity(spec: Spec, kill_after: u64, label: &str) -> SessionOutput {
+    let ck = tmp(label);
+    let (base, base_lines) = run_spec(&spec);
+    let base = base.expect("uninterrupted run");
+    // A kill point may sit on any closed window, the last one included
+    // (a crash between the final checkpoint and the final report).
+    assert!(
+        kill_after >= 1 && base.windows.len() as u64 >= kill_after,
+        "{label}: kill point {kill_after} needs a longer run \
+         ({} windows)",
+        base.windows.len()
+    );
+
+    let (crash, crash_lines) = run_spec(&spec.clone().kill_at(kill_after, &ck));
+    let err = crash.expect_err("the fault plan must kill the run");
+    assert!(
+        err.to_string()
+            .contains(&format!("killed after window {kill_after}")),
+        "{label}: {err}"
+    );
+
+    let (resumed, resumed_lines) =
+        run_spec(&spec.clone().kill_at(kill_after, &ck).resume_from(&ck));
+    let resumed = resumed.expect("resumed run");
+
+    // Pre-crash output ++ post-resume output == uninterrupted output,
+    // rendered byte for byte (replayed windows are not re-emitted).
+    let stitched: Vec<String> = crash_lines
+        .iter()
+        .chain(&resumed_lines)
+        .cloned()
+        .collect();
+    assert_eq!(stitched, base_lines, "{label}: window streams diverged");
+
+    assert_eq!(resumed.runtime_ns, base.runtime_ns, "{label}");
+    assert_eq!(resumed.windows, base.windows, "{label}");
+    assert_eq!(resumed.sketch_top, base.sketch_top, "{label}");
+    assert_eq!(resumed.sketch_lines, base.sketch_lines, "{label}");
+    assert_eq!(
+        normalize(&resumed.report),
+        normalize(&base.report),
+        "{label}: final reports diverged"
+    );
+    let _ = std::fs::remove_file(&ck);
+    base
+}
+
+#[test]
+fn kill_restore_finish_is_byte_identical_across_the_matrix() {
+    for shards in [1usize, 4] {
+        for merge in [MergeStrategy::Serial, MergeStrategy::Tree] {
+            let label = format!("matrix_s{shards}_{merge:?}");
+            assert_recovery_identity(Spec::new(shards, merge), 1, &label);
+        }
+    }
+}
+
+#[test]
+fn recovery_identity_holds_under_lru_id_recycling() {
+    // A 4-entry kernel stack map forces eviction/re-interning; the
+    // checkpoint carries the *stable userspace* map, so resumed ids
+    // must keep resolving.
+    let mut spec = Spec::new(4, MergeStrategy::Tree);
+    spec.lru = true;
+    let base = assert_recovery_identity(spec, 2, "lru");
+    assert_eq!(base.report.stack_drops, 0, "LRU must never drop");
+    assert!(base.report.stack_evictions > 0, "map too big to exercise LRU");
+}
+
+#[test]
+fn recovery_identity_holds_with_active_faults_and_degrade() {
+    // The hard case: resume must replay the *same hazards* (bursts +
+    // degrade drains + widened windows) to land in the same state.
+    let mut spec = Spec::new(2, MergeStrategy::Tree);
+    spec.on_overflow = OverflowPolicy::Degrade;
+    spec.ring_capacity = Some(256);
+    spec.plan.bursts = vec![
+        OverflowBurst {
+            epoch: 1,
+            cpu: 0,
+            records: 300,
+        },
+        OverflowBurst {
+            epoch: 3,
+            cpu: 1,
+            records: 300,
+        },
+    ];
+    let base = assert_recovery_identity(spec, 1, "degrade_faults");
+    assert!(base.report.degraded_drains > 0, "bursts should force drains");
+    assert_eq!(base.report.ring_dropped, 0, "degrade must prevent drops");
+}
+
+#[test]
+fn a_crash_after_the_final_window_resumes_into_the_same_report() {
+    // Checkpoint covers the whole run (crash between the last window's
+    // snapshot and the final report): replay finishes the workload and
+    // no extra window may appear.
+    let spec = Spec::new(4, MergeStrategy::Tree);
+    let (probe, _) = run_spec(&spec);
+    let last = probe.unwrap().windows.len() as u64;
+    assert!(last > 1);
+    assert_recovery_identity(spec, last, "final_window");
+}
+
+#[test]
+fn an_empty_checkpoint_resumes_into_a_full_run() {
+    // kill_after_window 0: die right after the start-of-session
+    // snapshot. Resuming replays nothing and runs everything.
+    let ck = tmp("empty");
+    let spec = Spec::new(2, MergeStrategy::Serial);
+    let (base, base_lines) = run_spec(&spec);
+    let base = base.unwrap();
+
+    let (crash, crash_lines) = run_spec(&spec.clone().kill_at(0, &ck));
+    assert!(crash
+        .unwrap_err()
+        .to_string()
+        .contains("killed after window 0"));
+    assert!(crash_lines.is_empty(), "no window may close before kill 0");
+    let cp = Checkpoint::load(&ck).unwrap();
+    assert_eq!(cp.epochs, 0);
+    assert!(cp.summaries.is_empty());
+    assert!(cp.cumulative.is_empty());
+
+    let (resumed, lines) = run_spec(&spec.clone().kill_at(0, &ck).resume_from(&ck));
+    let resumed = resumed.unwrap();
+    assert_eq!(lines, base_lines);
+    assert_eq!(normalize(&resumed.report), normalize(&base.report));
+    let _ = std::fs::remove_file(&ck);
+}
+
+#[test]
+fn batch_sessions_checkpoint_and_resume_too() {
+    let app = || apps::canneal(8, 5);
+    let run = |ck: Option<&str>, resume: Option<&str>, kill: bool| {
+        let a = app();
+        let mut plan = FaultPlan::default();
+        if kill {
+            plan.kill_after_window = Some(0);
+        }
+        let mut s = Session::builder(AnalysisEngine::native())
+            .app(&a)
+            .fault_plan(plan);
+        if let Some(p) = ck {
+            s = s.checkpoint(p);
+        }
+        if let Some(p) = resume {
+            s = s.restore(p);
+        }
+        s.run()
+    };
+    let base = run(None, None, false).unwrap();
+    let ck = tmp("batch");
+    let err = run(Some(&ck), None, true).unwrap_err();
+    assert!(err.to_string().contains("killed after window 0"), "{err}");
+    let resumed = run(Some(&ck), Some(&ck), true).unwrap();
+    assert_eq!(resumed.runtime_ns, base.runtime_ns);
+    assert_eq!(normalize(&resumed.report), normalize(&base.report));
+    let _ = std::fs::remove_file(&ck);
+}
+
+#[test]
+fn resume_rejects_foreign_or_mismatched_checkpoints() {
+    let ck = tmp("mismatch");
+    let spec = Spec::new(4, MergeStrategy::Tree);
+    let (crash, _) = run_spec(&spec.clone().kill_at(1, &ck));
+    crash.unwrap_err();
+
+    // Different shard count: the fingerprint names the knob.
+    let (r, _) = run_spec(&Spec::new(1, MergeStrategy::Tree).resume_from(&ck));
+    let err = r.unwrap_err().to_string();
+    assert!(err.contains("shards"), "{err}");
+    assert!(err.contains("different configuration"), "{err}");
+
+    // Different merge strategy likewise.
+    let (r, _) = run_spec(&Spec::new(4, MergeStrategy::Serial).resume_from(&ck));
+    let err = r.unwrap_err().to_string();
+    assert!(err.contains("merge"), "{err}");
+
+    // A live checkpoint cannot seed a batch session.
+    let a = apps::canneal(8, 5);
+    let err = Session::builder(AnalysisEngine::native())
+        .app(&a)
+        .restore(&ck)
+        .run()
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("mode"), "{err}");
+
+    // Corrupt checkpoint bytes: a descriptive error, never a panic.
+    let garbled = tmp("garbled");
+    std::fs::write(&garbled, "{\"checkpoint\": 1, \"epochs\": \"many\"}").unwrap();
+    let (r, _) = run_spec(&spec.clone().resume_from(&garbled));
+    r.unwrap_err();
+
+    // Foreign version: rejected by policy, naming both versions.
+    std::fs::write(&garbled, "{\"checkpoint\": 2}").unwrap();
+    let (r, _) = run_spec(&spec.resume_from(&garbled));
+    let err = r.unwrap_err().to_string();
+    assert!(err.contains('2') && err.contains('1'), "{err}");
+
+    let _ = std::fs::remove_file(&ck);
+    let _ = std::fs::remove_file(&garbled);
+}
+
+#[test]
+fn serial_and_tree_checkpoints_are_byte_identical() {
+    // The checkpoint document is canonical: both merge strategies must
+    // snapshot the *same state* (modulo the fingerprint naming the
+    // strategy), or a restore could not hop the report-identity proof
+    // from one strategy to the other.
+    let docs: Vec<String> = [MergeStrategy::Serial, MergeStrategy::Tree]
+        .into_iter()
+        .map(|merge| {
+            let ck = tmp(&format!("canon_{merge:?}"));
+            let (crash, _) = run_spec(&Spec::new(4, merge).kill_at(2, &ck));
+            crash.unwrap_err();
+            let doc = std::fs::read_to_string(&ck).unwrap();
+            let _ = std::fs::remove_file(&ck);
+            doc
+        })
+        .collect();
+    assert_eq!(
+        docs[0].replace("serial", "tree"),
+        docs[1],
+        "checkpoints must agree on everything but the strategy name"
+    );
+}
+
+#[test]
+fn bursts_drop_under_shed_and_are_absorbed_under_degrade() {
+    let bursts = vec![
+        OverflowBurst {
+            epoch: 1,
+            cpu: 0,
+            records: 400,
+        },
+        OverflowBurst {
+            epoch: 2,
+            cpu: 0,
+            records: 400,
+        },
+    ];
+    let mut shed = Spec::new(1, MergeStrategy::Tree);
+    shed.ring_capacity = Some(256); // below the drain watermark: no relief
+    shed.plan.bursts = bursts.clone();
+    let (out, lines) = run_spec(&shed);
+    let out = out.unwrap();
+    assert!(
+        out.report.ring_dropped > 0,
+        "400-record bursts into a 256-slot ring must shed"
+    );
+    assert_eq!(out.report.degraded_windows, 0);
+    assert_eq!(out.report.degraded_drains, 0);
+    assert!(
+        lines.iter().all(|l| !l.starts_with("degraded")),
+        "shed must not emit Degraded events"
+    );
+
+    let mut degrade = shed.clone();
+    degrade.on_overflow = OverflowPolicy::Degrade;
+    let (out, lines) = run_spec(&degrade);
+    let out = out.unwrap();
+    assert_eq!(out.report.ring_dropped, 0, "degrade must prevent the drops");
+    assert!(out.report.degraded_drains > 0, "…by emergency-draining");
+    assert!(
+        out.report.degraded_windows > 0,
+        "a drained window widens once to let the consumer catch up"
+    );
+    assert!(
+        lines.iter().any(|l| l.starts_with("degraded")),
+        "degradation must be visible in the event stream"
+    );
+    // Both policies finish; degradation trades fidelity, never survival.
+}
+
+#[test]
+fn a_stalled_shard_with_adequate_buffering_is_invisible() {
+    // An aggressive watermark (drain at 8 queued records) makes the
+    // reader's mid-epoch drains part of normal operation; stalling one
+    // shard suppresses exactly those drains. With ample ring capacity
+    // the stalled lane just buffers until the window-close epoch drain
+    // catches it up — drain *timing* changes, the output must not.
+    let mut clean = Spec::new(4, MergeStrategy::Tree);
+    clean.drain_threshold = Some(8);
+    clean.window_ns = 5_000_000;
+    let (base, base_lines) = run_spec(&clean);
+    let base = base.unwrap();
+
+    let mut stalled = clean.clone();
+    stalled.plan.stall = Some(StallSpec {
+        shard: 0,
+        from_epoch: 1,
+        epochs: 2,
+    });
+    let (out, lines) = run_spec(&stalled);
+    let out = out.unwrap();
+    assert_eq!(out.report.ring_dropped, 0);
+    assert_eq!(lines, base_lines);
+    assert_eq!(normalize(&out.report), normalize(&base.report));
+
+    // An undersized ring alone is still safe: the watermark drains at 8
+    // queued records and no single kernel event pushes more than a
+    // handful, so a 16-record ring never overflows…
+    let mut tight = clean.clone();
+    tight.shards = 1;
+    tight.ring_capacity = Some(16);
+    let (control, _) = run_spec(&tight);
+    assert_eq!(control.unwrap().report.ring_dropped, 0);
+
+    // …but wedge its reader for the whole run and the watermark can't
+    // save it. canneal at 5 ms windows overflows a 16-record ring
+    // without mid-epoch drains (the sharded-drops golden proves it),
+    // so records shed, the drops are attributed to the stalled shard,
+    // and the session still completes — degradation, not death.
+    tight.plan.stall = Some(StallSpec {
+        shard: 0,
+        from_epoch: 1,
+        epochs: 1_000,
+    });
+    let (out, _) = run_spec(&tight);
+    let out = out.unwrap();
+    assert!(out.report.ring_dropped > 0);
+    assert_eq!(out.report.ring_shards.len(), 1);
+    assert_eq!(out.report.ring_shards[0].dropped, out.report.ring_dropped);
+}
+
+/// Shared capture buffer so a consuming sink's output can be read back.
+#[derive(Clone, Default)]
+struct SharedBuf(Rc<RefCell<Vec<u8>>>);
+
+impl io::Write for SharedBuf {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        self.0.borrow_mut().extend_from_slice(buf);
+        Ok(buf.len())
+    }
+    fn flush(&mut self) -> io::Result<()> {
+        Ok(())
+    }
+}
+
+#[test]
+fn corrupt_shard_partial_streams_are_quarantined_end_to_end() {
+    // Produce a real JSONL stream with per-shard partial events…
+    let app = apps::canneal(8, 5);
+    let buf = SharedBuf::default();
+    Session::builder(AnalysisEngine::native())
+        .app(&app)
+        .config(GappConfig {
+            shards: Some(4),
+            ..Default::default()
+        })
+        .live(LiveConfig {
+            window_ns: 2_000_000,
+            shard_partials: true,
+            ..Default::default()
+        })
+        .sink(JsonlSink::new(buf.clone()))
+        .run()
+        .unwrap();
+    let clean = String::from_utf8(buf.0.borrow().clone()).unwrap();
+    assert!(clean.contains("\"shard_window\""));
+
+    // …aggregate it cleanly: every line is valid, partials merge.
+    let mut agg = PartialAggregator::new();
+    agg.ingest("clean", &clean);
+    let stats = agg.producers()[0].stats.clone();
+    assert_eq!(stats.quarantined, 0, "{:?}", stats.first_error);
+    assert!(stats.partials > 0);
+    assert!(!agg.top(5).is_empty());
+
+    // …then corrupt every third line: quarantine counts it, the reader
+    // survives, and the intact lines still merge.
+    let dirty = corrupt_jsonl(&clean, 0x5EED, 3);
+    let mut agg = PartialAggregator::new();
+    agg.ingest("dirty", &dirty);
+    let stats = agg.producers()[0].stats.clone();
+    assert!(stats.quarantined >= 1, "{stats:?}");
+    assert!(stats.first_error.is_some());
+    assert!(stats.partials > 0, "intact partials must still merge");
+    let report = agg.render(5);
+    assert!(report.contains("quarantined"));
+}
