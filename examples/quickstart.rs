@@ -61,5 +61,22 @@ fn main() -> anyhow::Result<()> {
     //         .restore("/var/tmp/gapp.ckpt") // …resume, finish identically
     //         .sink(HumanSink::new(std::io::stdout()))
     //         .run()?;
+
+    // Scored benchmarks: the declarative scenario harness compiles a
+    // `scenarios/*.json` spec (injected pathologies with known classes,
+    // optional background apps and open-loop arrivals) into a session
+    // and grades `classify()` against the injected ground truth:
+    //
+    //     gapp scenario run scenarios/lock_convoy.json        # one case
+    //     gapp scenario matrix scenarios/mixed.json           # seeds × threads
+    //
+    // emits the usual report plus a per-class precision/recall/F1
+    // scorecard (an additive `scorecard` event in json/jsonl output).
+    // From the library:
+    //
+    //     let sc = gapp::scenario::Scenario::load("scenarios/lock_convoy.json")?;
+    //     let case = gapp::scenario::Case { index: 0, seed: sc.seed, threads: None };
+    //     let out = gapp::scenario::run_case(&sc, &case, AnalysisEngine::auto(), None)?;
+    //     print!("{}", gapp::gapp::sink::human::render_scorecard(&out.scorecard));
     Ok(())
 }

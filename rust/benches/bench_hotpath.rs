@@ -137,6 +137,42 @@ fn main() {
         });
     }
 
+    // Scenario harness end-to-end: expand a 2-seed lock-convoy matrix
+    // at 8 threads, run both cases silently, score classify() against
+    // the injected labels. Tracks the cost of the declarative path
+    // (spec → apps → windowed sessions → scorecards) across PRs.
+    b.bench("scenario_matrix_lockconvoy_8x", || {
+        use gapp::scenario::spec::{MatrixSpec, PathologySpec};
+        use gapp::scenario::{PathologyKind, Scenario};
+        let sc = Scenario {
+            name: "bench".to_string(),
+            seed: 7,
+            window_us: 5_000,
+            top_k: 8,
+            nmin: None,
+            arrival: None,
+            mix: Vec::new(),
+            pathologies: vec![PathologySpec {
+                kind: PathologyKind::LockConvoy,
+                threads: 8,
+                items: 24,
+            }],
+            matrix: Some(MatrixSpec {
+                seeds: vec![7, 11],
+                threads: vec![8],
+            }),
+        };
+        let mut drop_sink =
+            gapp::gapp::sink::FnSink(|_ev: &gapp::gapp::sink::ReportEvent<'_>| {});
+        let cards = gapp::experiments::scenario_matrix::run_matrix(
+            &sc,
+            &AnalysisEngine::native,
+            &mut drop_sink,
+        )
+        .unwrap();
+        sink(cards.last().unwrap().overall().tp);
+    });
+
     // --- report sinks: serialization overhead on one live run -----------
     // Replay the captured event stream of a 16-thread canneal live run
     // through each backend. The run itself is amortized out, so the row

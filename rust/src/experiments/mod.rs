@@ -16,5 +16,6 @@ pub mod dedup_alloc;
 pub mod sensitivity;
 pub mod overhead;
 pub mod baselines_cmp;
+pub mod scenario_matrix;
 
 pub use runner::{profiled_run, EngineKind, ProfiledRun};

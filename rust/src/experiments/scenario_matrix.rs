@@ -1,0 +1,107 @@
+//! `gapp scenario matrix` — sweep a scenario's seeds × thread-counts
+//! matrix and emit one classification scorecard per case plus a
+//! micro-averaged aggregate.
+//!
+//! Each expanded case runs as a *silent* session (no sink: the full
+//! per-case report stream would drown the sweep's verdict); only the
+//! scorecards travel to the caller's sink, framed as an ordinary
+//! event sequence — per-case `Scorecard` events carrying the
+//! assignment detail, then one aggregate card with the summed counts,
+//! then `SessionEnd` with the total simulated runtime. A `--format
+//! json` consumer therefore gets one document whose `scorecards`
+//! array is the whole benchmark result.
+
+use anyhow::Result;
+
+use crate::gapp::sink::{ReportEvent, ReportSink};
+use crate::runtime::AnalysisEngine;
+use crate::scenario::{run_case, score, Scenario};
+
+/// Run every expanded case of `sc` and stream scorecards into `sink`.
+/// `engine` builds one fresh analysis engine per case (sessions
+/// consume theirs). Returns the per-case cards plus the aggregate.
+pub fn run_matrix(
+    sc: &Scenario,
+    engine: &dyn Fn() -> AnalysisEngine,
+    sink: &mut dyn ReportSink,
+) -> Result<Vec<crate::gapp::sink::ScorecardEvent>> {
+    let cases = sc.cases();
+    let mut cards = Vec::with_capacity(cases.len() + 1);
+    let mut runtime_ns = 0u64;
+    for case in &cases {
+        let outcome = run_case(sc, case, engine(), None)?;
+        runtime_ns += outcome.output.runtime_ns;
+        cards.push(outcome.scorecard);
+    }
+    let aggregate = score::merge(&cards, "matrix aggregate");
+    for card in &cards {
+        sink.on_event(&ReportEvent::Scorecard(card))?;
+    }
+    sink.on_event(&ReportEvent::Scorecard(&aggregate))?;
+    sink.on_event(&ReportEvent::SessionEnd { runtime_ns })?;
+    sink.finish()?;
+    cards.push(aggregate);
+    Ok(cards)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gapp::sink::FnSink;
+    use crate::scenario::spec::{MatrixSpec, PathologySpec};
+    use crate::scenario::PathologyKind;
+    use std::cell::RefCell;
+    use std::rc::Rc;
+
+    #[test]
+    fn matrix_emits_per_case_cards_then_aggregate_then_end() {
+        let sc = Scenario {
+            name: "m".to_string(),
+            seed: 7,
+            window_us: 5_000,
+            top_k: 8,
+            nmin: None,
+            arrival: None,
+            mix: Vec::new(),
+            pathologies: vec![PathologySpec {
+                kind: PathologyKind::LockConvoy,
+                threads: 4,
+                items: 6,
+            }],
+            matrix: Some(MatrixSpec {
+                seeds: vec![7, 11],
+                threads: vec![4],
+            }),
+        };
+        let log = Rc::new(RefCell::new(Vec::<String>::new()));
+        let l2 = log.clone();
+        let mut sink = FnSink(move |ev: &ReportEvent<'_>| {
+            l2.borrow_mut().push(match ev {
+                ReportEvent::Scorecard(c) => format!("card:{}", c.scope),
+                ReportEvent::SessionEnd { runtime_ns } => {
+                    assert!(*runtime_ns > 0);
+                    "end".to_string()
+                }
+                _ => "other".to_string(),
+            });
+        });
+        let cards =
+            run_matrix(&sc, &AnalysisEngine::native, &mut sink).unwrap();
+        assert_eq!(cards.len(), 3, "two cases + aggregate");
+        assert_eq!(
+            *log.borrow(),
+            vec![
+                "card:case 0: seed=7 threads=4".to_string(),
+                "card:case 1: seed=11 threads=4".to_string(),
+                "card:matrix aggregate".to_string(),
+                "end".to_string(),
+            ]
+        );
+        let agg = cards.last().unwrap();
+        assert_eq!(agg.cases, 2);
+        assert!(agg.assignments.is_empty());
+        // Aggregate counts are the sums of the per-case counts.
+        let sum: u64 = cards[..2].iter().map(|c| c.overall().tp).sum();
+        assert_eq!(agg.overall().tp, sum);
+    }
+}

@@ -65,11 +65,31 @@ impl BottleneckClass {
     }
 }
 
-/// Classify a merged path by majority wait kind over its slices. The
-/// vote walks a fixed variant order so ties resolve deterministically
-/// (map iteration order must not leak into reports — the streaming
+/// The class each wait kind votes for. Total over [`WaitKind`]: every
+/// slice a probe can record maps to exactly one class, so [`classify`]
+/// covers any histogram a [`MergedPath`] can carry — adding a wait
+/// kind without deciding its class is a compile error here.
+pub fn class_of_wait(k: WaitKind) -> BottleneckClass {
+    match k {
+        WaitKind::Futex => BottleneckClass::Synchronization,
+        WaitKind::Barrier => BottleneckClass::Imbalance,
+        WaitKind::Queue => BottleneckClass::Pipeline,
+        WaitKind::Io => BottleneckClass::Io,
+        WaitKind::Channel => BottleneckClass::Messaging,
+        WaitKind::None => BottleneckClass::Compute,
+    }
+}
+
+/// Classify a merged path by majority wait kind over its slices.
+///
+/// The vote is deterministic by construction: it walks a fixed variant
+/// order (futex, barrier, queue, I/O, channel, none) and a candidate
+/// replaces the leader only on a *strictly greater* count, so a tie —
+/// two-way or n-way — always resolves to the kind earliest in that
+/// order. Map iteration order never leaks into reports (the streaming
 /// analyzer's window-merged histograms are built in a different
-/// insertion order than the batch ones).
+/// insertion order than the batch ones), and an empty or all-zero
+/// histogram falls through to the `None` seed, i.e. `Compute`.
 pub fn classify(path: &MergedPath) -> BottleneckClass {
     const ORDER: [WaitKind; 6] = [
         WaitKind::Futex,
@@ -86,14 +106,7 @@ pub fn classify(path: &MergedPath) -> BottleneckClass {
             best = (k, n);
         }
     }
-    match best.0 {
-        WaitKind::Futex => BottleneckClass::Synchronization,
-        WaitKind::Barrier => BottleneckClass::Imbalance,
-        WaitKind::Queue => BottleneckClass::Pipeline,
-        WaitKind::Io => BottleneckClass::Io,
-        WaitKind::Channel => BottleneckClass::Messaging,
-        WaitKind::None => BottleneckClass::Compute,
-    }
+    class_of_wait(best.0)
 }
 
 /// Top wakers of a path, descending — "critical lock holders" (§7).
@@ -142,6 +155,45 @@ mod tests {
         // the class must not depend on map iteration order.
         let p = path(&[(WaitKind::Io, 4), (WaitKind::Futex, 4)], &[]);
         assert_eq!(classify(&p), BottleneckClass::Synchronization);
+        // Three-way tie: earliest of the tied kinds in vote order wins
+        // (Barrier beats Queue and Channel).
+        let p = path(
+            &[(WaitKind::Channel, 3), (WaitKind::Queue, 3), (WaitKind::Barrier, 3)],
+            &[],
+        );
+        assert_eq!(classify(&p), BottleneckClass::Imbalance);
+        // Zero-count entries are not votes: a histogram of only zeros
+        // classifies like an empty one.
+        let p = path(&[(WaitKind::Io, 0), (WaitKind::Queue, 0)], &[]);
+        assert_eq!(classify(&p), BottleneckClass::Compute);
+        // A real vote beats any number of zero entries ahead of it.
+        let p = path(&[(WaitKind::Futex, 0), (WaitKind::Channel, 1)], &[]);
+        assert_eq!(classify(&p), BottleneckClass::Messaging);
+    }
+
+    #[test]
+    fn every_wait_kind_maps_to_exactly_one_class() {
+        // class_of_wait is the single source of truth for the vote →
+        // class mapping; a majority of kind k must classify as
+        // class_of_wait(k) for every kind.
+        const KINDS: [WaitKind; 6] = [
+            WaitKind::Futex,
+            WaitKind::Barrier,
+            WaitKind::Queue,
+            WaitKind::Io,
+            WaitKind::Channel,
+            WaitKind::None,
+        ];
+        let mut seen = Vec::new();
+        for k in KINDS {
+            let p = path(&[(k, 5)], &[]);
+            assert_eq!(classify(&p), class_of_wait(k), "{k:?}");
+            seen.push(class_of_wait(k));
+        }
+        // The mapping is a bijection onto the full taxonomy.
+        for c in BottleneckClass::ALL {
+            assert!(seen.contains(&c), "{c:?} unreachable from any wait kind");
+        }
     }
 
     #[test]

@@ -1118,6 +1118,7 @@ mod tests {
                         ReportEvent::ShardWindow(_) => "shard",
                         ReportEvent::Degraded { .. } => "degraded",
                         ReportEvent::WindowClosed(_) => "window",
+                        ReportEvent::Scorecard(_) => "scorecard",
                         ReportEvent::Final(fe) => {
                             assert!(fe.windows.is_empty());
                             assert!(!fe.report.bottlenecks.is_empty());

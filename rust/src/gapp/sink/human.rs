@@ -16,7 +16,7 @@ use anyhow::Result;
 use crate::gapp::report::Report;
 use crate::gapp::stream::WindowReport;
 
-use super::{FinalEvent, ReportEvent, ReportSink, SessionMode};
+use super::{FinalEvent, ReportEvent, ReportSink, ScorecardEvent, SessionMode};
 
 /// Render the final report exactly as `Display` always has.
 pub fn render_report(r: &Report) -> String {
@@ -209,6 +209,63 @@ pub fn render_live_tail(fe: &FinalEvent<'_>) -> String {
     s
 }
 
+/// Render a classification scorecard as a fixed-width table: one row
+/// per [`crate::gapp::classify::BottleneckClass`] (in `ALL` order, as
+/// produced by the scorer), a micro-averaged `overall` row, and —
+/// for single-case cards — the per-app truth/predicted assignments.
+pub fn render_scorecard(sc: &ScorecardEvent) -> String {
+    let mut s = String::new();
+    let w = &mut s;
+    writeln!(
+        w,
+        "== scorecard: {} ({} case{}) ==",
+        sc.scope,
+        sc.cases,
+        if sc.cases == 1 { "" } else { "s" },
+    )
+    .unwrap();
+    writeln!(
+        w,
+        "{:<24} {:>4} {:>4} {:>4} {:>10} {:>8} {:>8}",
+        "class", "tp", "fp", "fn", "precision", "recall", "f1",
+    )
+    .unwrap();
+    let overall = sc.overall();
+    let labeled = sc
+        .rows
+        .iter()
+        .map(|r| (r.class.label(), r))
+        .chain(std::iter::once(("overall", &overall)));
+    for (name, r) in labeled {
+        writeln!(
+            w,
+            "{:<24} {:>4} {:>4} {:>4} {:>10.3} {:>8.3} {:>8.3}",
+            name,
+            r.tp,
+            r.fp,
+            r.fn_,
+            r.precision(),
+            r.recall(),
+            r.f1(),
+        )
+        .unwrap();
+    }
+    for a in &sc.assignments {
+        writeln!(
+            w,
+            "  {:<20} injected {:<24} reported {}",
+            a.app,
+            a.truth.label(),
+            match a.predicted {
+                Some(c) => c.label(),
+                None => "(absent from top-K)",
+            },
+        )
+        .unwrap();
+    }
+    s
+}
+
 /// Text backend: what the CLI printed before sinks existed, byte for
 /// byte. Batch sessions print the report (plus the trailing newline
 /// `println!` used to add); live sessions print each window as it
@@ -261,6 +318,12 @@ impl<W: io::Write> ReportSink for HumanSink<W> {
                     self.w.write_all(render_live_tail(fe).as_bytes())?;
                 }
             },
+            // Scorecards only exist in scenario sessions, so rendering
+            // them unconditionally cannot perturb the golden-enforced
+            // output of the pre-existing modes.
+            ReportEvent::Scorecard(sc) => {
+                self.w.write_all(render_scorecard(sc).as_bytes())?;
+            }
             ReportEvent::SessionEnd { .. } => {}
         }
         Ok(())
@@ -359,6 +422,36 @@ mod tests {
         assert!(render_window(&wr).contains("| degraded drains 3\n"));
         wr.widened = true;
         assert!(render_window(&wr).contains("| degraded drains 3 (widened)\n"));
+    }
+
+    #[test]
+    fn scorecard_renders_rows_overall_and_assignments() {
+        use crate::gapp::classify::BottleneckClass;
+        use crate::gapp::sink::{Assignment, ScoreRow, ScorecardEvent};
+        let sc = ScorecardEvent {
+            scope: "case 0: seed=7".to_string(),
+            cases: 1,
+            rows: vec![
+                ScoreRow { class: BottleneckClass::Synchronization, tp: 1, fp: 0, fn_: 0 },
+                ScoreRow { class: BottleneckClass::Io, tp: 0, fp: 1, fn_: 1 },
+            ],
+            assignments: vec![Assignment {
+                app: "io_storm#0".to_string(),
+                truth: BottleneckClass::Io,
+                predicted: Some(BottleneckClass::Synchronization),
+            }],
+        };
+        let s = render_scorecard(&sc);
+        assert!(s.starts_with("== scorecard: case 0: seed=7 (1 case) ==\n"), "{s}");
+        assert!(s.contains("synchronization (futex)"), "{s}");
+        // Overall row micro-averages the counts: tp 1, fp 1, fn 1.
+        assert!(s.contains("overall"), "{s}");
+        assert!(s.contains("0.500"), "{s}");
+        assert!(s.contains("injected blocking I/O"), "{s}");
+        let mut sink = HumanSink::new(Vec::new());
+        sink.on_event(&ReportEvent::Scorecard(&sc)).unwrap();
+        sink.finish().unwrap();
+        assert_eq!(String::from_utf8(sink.into_inner()).unwrap(), s);
     }
 
     #[test]

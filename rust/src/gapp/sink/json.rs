@@ -27,7 +27,9 @@ use crate::gapp::report::{Bottleneck, Report, SampleLine, ThreadCm};
 use crate::gapp::stream::WindowReport;
 use crate::util::json::Json;
 
-use super::{FinalEvent, ReportEvent, ReportSink, SessionInfo, ShardWindowEvent};
+use super::{
+    FinalEvent, ReportEvent, ReportSink, ScorecardEvent, SessionInfo, ShardWindowEvent,
+};
 
 /// Schema version stamped on every document and JSONL line.
 pub const SCHEMA_VERSION: u64 = 1;
@@ -139,6 +141,53 @@ pub fn window_json(w: &WindowReport) -> Json {
                             ("slices", Json::u64(l.slices)),
                             ("class", Json::str(l.class)),
                             ("site", Json::str(&l.site)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// One scorecard: per-class confusion counts with the derived ratios
+/// emitted for consumer convenience (the counts are the source of
+/// truth — an aggregator re-sums `tp`/`fp`/`fn`, never the floats).
+pub fn scorecard_json(sc: &ScorecardEvent) -> Json {
+    let overall = sc.overall();
+    let row = |class: &str, r: &super::ScoreRow| {
+        Json::obj(vec![
+            ("class", Json::str(class)),
+            ("tp", Json::u64(r.tp)),
+            ("fp", Json::u64(r.fp)),
+            ("fn", Json::u64(r.fn_)),
+            ("precision", Json::f64(r.precision())),
+            ("recall", Json::f64(r.recall())),
+            ("f1", Json::f64(r.f1())),
+        ])
+    };
+    Json::obj(vec![
+        ("scope", Json::str(&sc.scope)),
+        ("cases", Json::u64(sc.cases)),
+        (
+            "rows",
+            Json::Arr(sc.rows.iter().map(|r| row(r.class.label(), r)).collect()),
+        ),
+        ("overall", row("overall", &overall)),
+        (
+            "assignments",
+            Json::Arr(
+                sc.assignments
+                    .iter()
+                    .map(|a| {
+                        Json::obj(vec![
+                            ("app", Json::str(&a.app)),
+                            ("truth", Json::str(a.truth.label())),
+                            (
+                                "predicted",
+                                a.predicted
+                                    .map(|p| Json::str(p.label()))
+                                    .unwrap_or(Json::Null),
+                            ),
                         ])
                     })
                     .collect(),
@@ -481,6 +530,7 @@ pub struct JsonSink<W: io::Write> {
     windows: Vec<Json>,
     report: Json,
     cumulative: Json,
+    scorecards: Vec<Json>,
 }
 
 impl<W: io::Write> JsonSink<W> {
@@ -491,6 +541,7 @@ impl<W: io::Write> JsonSink<W> {
             windows: Vec::new(),
             report: Json::Null,
             cumulative: Json::Null,
+            scorecards: Vec::new(),
         }
     }
 
@@ -521,8 +572,11 @@ impl<W: io::Write> ReportSink for JsonSink<W> {
                 self.report = report;
                 self.cumulative = cumulative;
             }
+            ReportEvent::Scorecard(sc) => {
+                self.scorecards.push(scorecard_json(sc));
+            }
             ReportEvent::SessionEnd { runtime_ns } => {
-                let doc = Json::obj(vec![
+                let mut fields = vec![
                     ("schema", Json::u64(SCHEMA_VERSION)),
                     ("type", Json::str("gapp.session")),
                     ("session", std::mem::replace(&mut self.session, Json::Null)),
@@ -532,8 +586,18 @@ impl<W: io::Write> ReportSink for JsonSink<W> {
                         "cumulative_topk",
                         std::mem::replace(&mut self.cumulative, Json::Null),
                     ),
-                    ("runtime_ns", Json::u64(*runtime_ns)),
-                ]);
+                ];
+                // Additive within schema v1: only scenario sessions emit
+                // Scorecard events, so plain profiling documents keep
+                // their exact byte shape (golden-enforced).
+                if !self.scorecards.is_empty() {
+                    fields.push((
+                        "scorecards",
+                        Json::Arr(std::mem::take(&mut self.scorecards)),
+                    ));
+                }
+                fields.push(("runtime_ns", Json::u64(*runtime_ns)));
+                let doc = Json::obj(fields);
                 self.w.write_all(doc.to_pretty().as_bytes())?;
                 self.w.write_all(b"\n")?;
             }
@@ -612,6 +676,9 @@ impl<W: io::Write> ReportSink for JsonlSink<W> {
                     "final",
                     vec![("report", report), ("cumulative_topk", cumulative)],
                 )
+            }
+            ReportEvent::Scorecard(sc) => {
+                self.line("scorecard", vec![("scorecard", scorecard_json(sc))])
             }
             ReportEvent::SessionEnd { runtime_ns } => self.line(
                 "session_end",
@@ -896,6 +963,78 @@ mod tests {
         let parsed =
             Json::parse(&String::from_utf8(doc.into_inner()).unwrap()).unwrap();
         assert_eq!(parsed.get("windows").unwrap().as_arr().unwrap().len(), 0);
+    }
+
+    #[test]
+    fn scorecards_stream_as_lines_and_stack_additively_in_the_document() {
+        use crate::gapp::sink::{Assignment, ScoreRow, ScorecardEvent};
+        let sc = ScorecardEvent {
+            scope: "seed=7".to_string(),
+            cases: 1,
+            rows: vec![
+                ScoreRow {
+                    class: BottleneckClass::Synchronization,
+                    tp: 1,
+                    fp: 0,
+                    fn_: 0,
+                },
+                ScoreRow {
+                    class: BottleneckClass::Io,
+                    tp: 0,
+                    fp: 1,
+                    fn_: 1,
+                },
+            ],
+            assignments: vec![Assignment {
+                app: "lock_convoy#0".to_string(),
+                truth: BottleneckClass::Synchronization,
+                predicted: Some(BottleneckClass::Synchronization),
+            }],
+        };
+
+        // JSONL: one schema-stamped "scorecard" line.
+        let mut sink = JsonlSink::new(Vec::new());
+        sink.on_event(&ReportEvent::Scorecard(&sc)).unwrap();
+        sink.finish().unwrap();
+        let out = String::from_utf8(sink.into_inner()).unwrap();
+        let v = Json::parse(out.lines().next().unwrap()).unwrap();
+        assert_eq!(v.get("schema").unwrap().as_u64(), Some(SCHEMA_VERSION));
+        assert_eq!(v.get("event").unwrap().as_str(), Some("scorecard"));
+        let body = v.get("scorecard").unwrap();
+        assert_eq!(body.get("scope").unwrap().as_str(), Some("seed=7"));
+        let rows = body.get("rows").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(
+            rows[0].get("class").unwrap().as_str(),
+            Some("synchronization (futex)")
+        );
+        assert_eq!(rows[0].get("precision").unwrap().as_f64(), Some(1.0));
+        assert_eq!(rows[1].get("recall").unwrap().as_f64(), Some(0.0));
+        let overall = body.get("overall").unwrap();
+        // overall sums the counts: tp 1, fp 1, fn 1 → p = r = 0.5.
+        assert_eq!(overall.get("tp").unwrap().as_u64(), Some(1));
+        assert_eq!(overall.get("precision").unwrap().as_f64(), Some(0.5));
+        let asn = &body.get("assignments").unwrap().as_arr().unwrap()[0];
+        assert_eq!(asn.get("app").unwrap().as_str(), Some("lock_convoy#0"));
+        assert_eq!(
+            asn.get("predicted").unwrap().as_str(),
+            Some("synchronization (futex)")
+        );
+
+        // JSON document: scorecards appear only when emitted, keeping
+        // plain profiling documents byte-identical.
+        let mut doc = JsonSink::new(Vec::new());
+        doc.on_event(&ReportEvent::SessionEnd { runtime_ns: 1 }).unwrap();
+        doc.finish().unwrap();
+        let plain = Json::parse(&String::from_utf8(doc.into_inner()).unwrap()).unwrap();
+        assert!(plain.get("scorecards").is_none(), "additive key leaked");
+
+        let mut doc = JsonSink::new(Vec::new());
+        doc.on_event(&ReportEvent::Scorecard(&sc)).unwrap();
+        doc.on_event(&ReportEvent::SessionEnd { runtime_ns: 1 }).unwrap();
+        doc.finish().unwrap();
+        let with = Json::parse(&String::from_utf8(doc.into_inner()).unwrap()).unwrap();
+        assert_eq!(with.get("scorecards").unwrap().as_arr().unwrap().len(), 1);
     }
 
     #[test]

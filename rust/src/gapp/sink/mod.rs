@@ -36,6 +36,7 @@ use std::io;
 
 use anyhow::Result;
 
+use super::classify::BottleneckClass;
 use super::config::{GappConfig, ReportFormat};
 use super::report::Report;
 use super::stream::{WindowReport, WindowSummary};
@@ -109,10 +110,99 @@ pub struct ShardWindowEvent<'a> {
     pub paths: &'a [MergedPath],
 }
 
+/// One per-class row of a classification scorecard. Only the integer
+/// confusion counts are stored; the derived ratios are computed on
+/// demand so merged scorecards stay exact.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ScoreRow {
+    pub class: BottleneckClass,
+    /// True positives: the class was injected and reported.
+    pub tp: u64,
+    /// False positives: the class was reported for another injection.
+    pub fp: u64,
+    /// False negatives: the class was injected but not reported.
+    pub fn_: u64,
+}
+
+impl ScoreRow {
+    /// `tp / (tp + fp)`; 0 when the class was never predicted.
+    pub fn precision(&self) -> f64 {
+        ratio(self.tp, self.tp + self.fp)
+    }
+
+    /// `tp / (tp + fn)`; 0 when the class was never injected.
+    pub fn recall(&self) -> f64 {
+        ratio(self.tp, self.tp + self.fn_)
+    }
+
+    /// Harmonic mean of precision and recall; 0 when both are 0.
+    pub fn f1(&self) -> f64 {
+        let (p, r) = (self.precision(), self.recall());
+        if p + r == 0.0 {
+            0.0
+        } else {
+            2.0 * p * r / (p + r)
+        }
+    }
+}
+
+fn ratio(num: u64, den: u64) -> f64 {
+    if den == 0 {
+        0.0
+    } else {
+        num as f64 / den as f64
+    }
+}
+
+/// One labeled app's verdict inside a scorecard: what was injected
+/// versus what `classify()` reported for the highest-ranked bottleneck
+/// attributed to that app (`None` = nothing in the top-K matched).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Assignment {
+    pub app: String,
+    pub truth: BottleneckClass,
+    pub predicted: Option<BottleneckClass>,
+}
+
+/// A bottleneck-classification scorecard: per-class precision /
+/// recall / F1 of the report's top-K classes against the scenario's
+/// injected ground-truth labels (see `crate::scenario`). `rows`
+/// always carries every [`BottleneckClass`] in `ALL` order; matrix
+/// aggregates sum the integer counts across cases and leave
+/// `assignments` empty.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScorecardEvent {
+    /// What was scored (`case 0: seed=7`, `matrix aggregate`, …).
+    pub scope: String,
+    /// Expanded scenario cases this card covers.
+    pub cases: u64,
+    pub rows: Vec<ScoreRow>,
+    pub assignments: Vec<Assignment>,
+}
+
+impl ScorecardEvent {
+    /// Micro-averaged totals across the rows (summed counts).
+    pub fn overall(&self) -> ScoreRow {
+        let mut total = ScoreRow {
+            class: BottleneckClass::Compute,
+            tp: 0,
+            fp: 0,
+            fn_: 0,
+        };
+        for r in &self.rows {
+            total.tp += r.tp;
+            total.fp += r.fp;
+            total.fn_ += r.fn_;
+        }
+        total
+    }
+}
+
 /// One event of a profiling session, in emission order:
 /// `SessionStart ((ShardWindow)* (Degraded)? WindowClosed)* Final
-/// SessionEnd` (`ShardWindow` only when opted in; `Degraded` only under
-/// `--on-overflow degrade` and only for windows that degraded).
+/// (Scorecard)? SessionEnd` (`ShardWindow` only when opted in;
+/// `Degraded` only under `--on-overflow degrade` and only for windows
+/// that degraded; `Scorecard` only for scenario sessions).
 #[derive(Clone, Copy, Debug)]
 pub enum ReportEvent<'a> {
     SessionStart(&'a SessionInfo),
@@ -132,6 +222,12 @@ pub enum ReportEvent<'a> {
     },
     WindowClosed(&'a WindowReport),
     Final(FinalEvent<'a>),
+    /// Classification quality versus injected ground truth (additive
+    /// within schema v1, like `ShardWindow`: only scenario sessions
+    /// emit it — `gapp scenario run` after `Final`, `gapp scenario
+    /// matrix` once per case plus one aggregate — so the byte-stable
+    /// output of every pre-existing mode is unchanged).
+    Scorecard(&'a ScorecardEvent),
     SessionEnd { runtime_ns: u64 },
 }
 
@@ -222,6 +318,16 @@ mod tests {
         tee.on_event(&ReportEvent::SessionEnd { runtime_ns: 2 }).unwrap();
         tee.finish().unwrap();
         assert_eq!((a.get(), b.get()), (2, 2));
+    }
+
+    #[test]
+    fn score_row_ratios_handle_empty_denominators() {
+        let zero = ScoreRow { class: BottleneckClass::Io, tp: 0, fp: 0, fn_: 0 };
+        assert_eq!((zero.precision(), zero.recall(), zero.f1()), (0.0, 0.0, 0.0));
+        let row = ScoreRow { class: BottleneckClass::Io, tp: 3, fp: 1, fn_: 2 };
+        assert_eq!(row.precision(), 0.75);
+        assert_eq!(row.recall(), 0.6);
+        assert!((row.f1() - 2.0 * 0.75 * 0.6 / 1.35).abs() < 1e-12);
     }
 
     #[test]

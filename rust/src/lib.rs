@@ -32,6 +32,7 @@ pub mod gapp;
 pub mod runtime;
 pub mod baselines;
 pub mod experiments;
+pub mod scenario;
 
 /// Crate-wide result alias.
 pub type Result<T> = anyhow::Result<T>;

@@ -43,6 +43,14 @@
 //! --fault-plan injects deterministic faults (overflow bursts, a
 //! stalled shard, kill points) from a JSON plan — the crash-recovery
 //! test harness, available in production builds on purpose.
+//! gapp scenario run FILE [--seed N] [--format text|json|jsonl]
+//!                        [--output FILE]
+//!                                  # execute a scenarios/*.json spec:
+//!                                  # injected pathologies with ground-
+//!                                  # truth labels, report + scorecard
+//! gapp scenario matrix FILE [...]  # sweep the spec's seeds × threads
+//!                                  # matrix; per-case scorecards plus
+//!                                  # a micro-averaged aggregate
 //! gapp run --app ferret            # unprofiled baseline run
 //! gapp table2 [--threads 64]       # Table 2
 //! gapp fig3 | fig4 | fig5 | fig6 | fig7
@@ -58,8 +66,8 @@
 use anyhow::Context as _;
 
 use gapp::experiments::{
-    baselines_cmp, dedup_alloc, fig3, fig4, fig5, fig6, fig7, overhead, sensitivity,
-    table2, EngineKind,
+    baselines_cmp, dedup_alloc, fig3, fig4, fig5, fig6, fig7, overhead, scenario_matrix,
+    sensitivity, table2, EngineKind,
 };
 use gapp::gapp::faults::FaultPlan;
 use gapp::gapp::sink::{self, ReportSink};
@@ -68,6 +76,7 @@ use gapp::gapp::stream::LiveConfig;
 use gapp::gapp::{
     run_unprofiled, GappConfig, MergeStrategy, OverflowPolicy, ReportFormat, Session,
 };
+use gapp::scenario::{self, Scenario};
 use gapp::simkernel::KernelConfig;
 use gapp::util::cli::Args;
 use gapp::workload::apps;
@@ -93,6 +102,7 @@ fn main() {
         Some("profile") => cmd_profile(&args, engine, threads, seed),
         Some("live") => cmd_live(&args, engine, threads, seed),
         Some("aggregate") => cmd_aggregate(&args),
+        Some("scenario") => cmd_scenario(&args, engine),
         Some("table2") => table2::run(engine, threads, seed)
             .map(|rows| println!("{}", table2::render(&rows))),
         Some("fig3") => fig3::run(engine, threads.min(32), seed)
@@ -115,8 +125,8 @@ fn main() {
         _ => {
             eprintln!("usage: see `gapp --help` header in rust/src/main.rs");
             eprintln!(
-                "subcommands: list-apps run profile live aggregate table2 fig3 fig4 \
-                 fig5 fig6 fig7 dedup-alloc sweep overhead baselines all"
+                "subcommands: list-apps run profile live aggregate scenario table2 \
+                 fig3 fig4 fig5 fig6 fig7 dedup-alloc sweep overhead baselines all"
             );
             eprintln!(
                 "live mode: gapp live --app mysql --app dedup --window-us 5000 \
@@ -136,6 +146,12 @@ fn main() {
             eprintln!(
                 "output:    profile/live take --format text|json|jsonl and \
                  --output FILE (default: text on stdout)"
+            );
+            eprintln!(
+                "scenario:  gapp scenario run|matrix FILE [--seed N] \
+                 [--format text|json|jsonl] [--output FILE] executes a \
+                 scenarios/*.json spec and scores classify() against the \
+                 injected ground truth"
             );
             eprintln!("           (repeat --app to profile several applications system-wide;");
             eprintln!(
@@ -307,6 +323,50 @@ fn cmd_aggregate(args: &Args) -> anyhow::Result<()> {
         .opt_min1("top", 10)
         .map_err(|e| anyhow::anyhow!(e))? as usize;
     print!("{}", agg.render(top));
+    Ok(())
+}
+
+/// `gapp scenario run|matrix FILE`: execute a declarative scenario
+/// spec and score the classifier against its injected ground truth.
+/// `run` executes the base case with the full report stream plus an
+/// inline scorecard; `matrix` sweeps the spec's seeds × thread-counts
+/// silently and emits one scorecard per case plus the aggregate.
+fn cmd_scenario(args: &Args, engine: EngineKind) -> anyhow::Result<()> {
+    let usage = "usage: gapp scenario run|matrix FILE [--seed N] \
+                 [--format text|json|jsonl] [--output FILE]";
+    let verb = args.positional.get(1).map(String::as_str);
+    let file = match (verb, args.positional.get(2)) {
+        (Some("run") | Some("matrix"), Some(f)) => f,
+        _ => anyhow::bail!("{usage}"),
+    };
+    let mut sc = Scenario::load(file).map_err(|e| anyhow::anyhow!(e))?;
+    if let Some(s) = args.get("seed") {
+        sc.seed = s
+            .parse()
+            .map_err(|e| anyhow::anyhow!("bad --seed {s:?}: {e}"))?;
+    }
+    let gcfg = gapp_config_from(args)?;
+    let mut sink = report_sink(&gcfg)?;
+    match verb {
+        Some("run") => {
+            let case = scenario::Case {
+                index: 0,
+                seed: sc.seed,
+                threads: None,
+            };
+            scenario::run_case(&sc, &case, engine.make()?, Some(sink))?;
+        }
+        _ => {
+            // Validate the backend once up front; per-case engines are
+            // then infallible (artifact presence cannot change mid-run).
+            engine.make()?;
+            scenario_matrix::run_matrix(
+                &sc,
+                &|| engine.make().expect("backend validated above"),
+                sink.as_mut(),
+            )?;
+        }
+    }
     Ok(())
 }
 

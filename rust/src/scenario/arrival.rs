@@ -1,0 +1,116 @@
+//! Open-loop arrival processes for scenario load generation.
+//!
+//! A scenario may pace its loop-driven pathologies with an
+//! [`ArrivalSpec`]: each work item is preceded by an inter-arrival
+//! gap drawn from one of four processes. Gaps are pre-drawn from a
+//! seeded [`Prng`] stream at build time and compiled into the
+//! program as `[arrival_wait]` sleeps, so a paced run is exactly as
+//! deterministic as an unpaced one.
+//!
+//! This is an *approximation* of a true open-loop generator: the gap
+//! is inserted relative to the previous item's completion rather
+//! than an absolute arrival timetable, so a slow service leg delays
+//! subsequent arrivals instead of queueing them. For the scorecard's
+//! purpose — varying the interleaving and duty cycle of the injected
+//! pathologies — relative gaps are sufficient, and they keep the
+//! generator a pure function of the spec and seed.
+
+use crate::util::Prng;
+
+use super::spec::{ArrivalProcess, ArrivalSpec};
+
+/// Draw `n` inter-arrival gaps (ns) for one thread's item loop.
+///
+/// * `constant` — every gap is the mean.
+/// * `poisson` — exponential gaps (memoryless arrivals).
+/// * `bursty` — items arrive back-to-back in bursts of
+///   `spec.burst`; the first item of each burst waits the whole
+///   burst's worth of mean gap, the rest wait zero.
+/// * `diurnal` — a deterministic sinusoidal load curve: the gap
+///   swings `±80%` around the mean over `spec.period_ns` of
+///   accumulated gap time (a compressed day).
+pub fn gaps(spec: &ArrivalSpec, rng: &mut Prng, n: usize) -> Vec<u64> {
+    let mean = spec.mean_gap_ns as f64;
+    let mut out = Vec::with_capacity(n);
+    let mut elapsed = 0.0f64;
+    for i in 0..n {
+        let gap = match spec.process {
+            ArrivalProcess::Constant => mean,
+            ArrivalProcess::Poisson => rng.exp(mean),
+            ArrivalProcess::Bursty => {
+                if i as u64 % spec.burst == 0 {
+                    mean * spec.burst as f64
+                } else {
+                    0.0
+                }
+            }
+            ArrivalProcess::Diurnal => {
+                let phase = elapsed / spec.period_ns as f64;
+                mean * (1.0 + 0.8 * (2.0 * std::f64::consts::PI * phase).sin())
+            }
+        };
+        let gap = gap.max(0.0);
+        elapsed += gap;
+        out.push(gap.round() as u64);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(process: ArrivalProcess) -> ArrivalSpec {
+        ArrivalSpec {
+            process,
+            mean_gap_ns: 10_000,
+            burst: 4,
+            period_ns: 200_000,
+        }
+    }
+
+    #[test]
+    fn constant_gaps_are_the_mean() {
+        let mut rng = Prng::new(7);
+        assert_eq!(
+            gaps(&spec(ArrivalProcess::Constant), &mut rng, 3),
+            vec![10_000, 10_000, 10_000]
+        );
+    }
+
+    #[test]
+    fn poisson_gaps_are_seed_deterministic_with_the_right_mean() {
+        let mut a = Prng::new(7);
+        let mut b = Prng::new(7);
+        let s = spec(ArrivalProcess::Poisson);
+        let ga = gaps(&s, &mut a, 4096);
+        assert_eq!(ga, gaps(&s, &mut b, 4096), "same seed, same gaps");
+        let mut c = Prng::new(8);
+        assert_ne!(ga, gaps(&s, &mut c, 4096), "seed must matter");
+        let avg = ga.iter().sum::<u64>() as f64 / ga.len() as f64;
+        assert!(
+            (avg - 10_000.0).abs() < 1_000.0,
+            "exponential mean drifted: {avg}"
+        );
+    }
+
+    #[test]
+    fn bursts_frontload_the_gap() {
+        let mut rng = Prng::new(7);
+        let g = gaps(&spec(ArrivalProcess::Bursty), &mut rng, 8);
+        assert_eq!(g, vec![40_000, 0, 0, 0, 40_000, 0, 0, 0]);
+        // Total pacing matches the constant process over a full cycle.
+        assert_eq!(g.iter().sum::<u64>(), 8 * 10_000);
+    }
+
+    #[test]
+    fn diurnal_swings_around_the_mean_and_stays_nonnegative() {
+        let mut rng = Prng::new(7);
+        let g = gaps(&spec(ArrivalProcess::Diurnal), &mut rng, 64);
+        assert!(g.iter().any(|&x| x > 10_000), "no peak phase");
+        assert!(g.iter().any(|&x| x < 10_000), "no trough phase");
+        let lo = (10_000.0 * 0.2 - 1.0) as u64;
+        let hi = (10_000.0 * 1.8 + 1.0) as u64;
+        assert!(g.iter().all(|&x| x >= lo && x <= hi), "outside ±80%");
+    }
+}

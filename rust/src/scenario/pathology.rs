@@ -1,0 +1,605 @@
+//! Injected pathologies: synthetic apps whose bottleneck class is
+//! known by construction.
+//!
+//! Each [`PathologyKind`] builds one [`App`] exhibiting exactly one
+//! entry of the paper's bottleneck taxonomy — lock convoys, priority
+//! inversion, busy-wait spinning, CPU hogs, memory-bandwidth
+//! contention, thread imbalance, pipeline stalls, blocking I/O storms
+//! and message storms — and carries the ground-truth
+//! [`BottleneckClass`] the profiler *should* report for it. The
+//! scorecard (see [`super::score`]) compares `classify()`'s verdict on
+//! the top-K reported bottlenecks against these labels.
+//!
+//! # Making the injected slices critical
+//!
+//! GAPP only records a timeslice when it is *critical*:
+//! `threads_av < N_min`, where `N_min` defaults to half the peak
+//! thread count observed across the whole session
+//! (`Probes::nmin`). A pathology whose active threads all run in
+//! parallel (CPU hogs, spinners, lock-step I/O) would therefore never
+//! cross the gate on its own — `threads_av ≈ n` against
+//! `N_min = n/2`. Those builders park `n + 2` extra *companion*
+//! threads on a latch for the duration of the run: companions count
+//! toward the peak (raising `N_min` to `n + 1`) while contributing
+//! nothing runnable, exactly like the idle helper/pool threads real
+//! servers carry. Contention kinds (lock convoy, priority inversion)
+//! need no companions — their own blocked waiters keep the runnable
+//! count far below `N_min`.
+//!
+//! # Keeping the vote on the right path
+//!
+//! Two structural details matter for classification:
+//!
+//! * A thread that never blocks ends its one giant timeslice at
+//!   `Exit`, and `Ret` pops stack frames — so every builder *omits*
+//!   the final `ret()`, leaving the worker frame open so the exit
+//!   slice (WaitKind::None) lands on the worker's named path instead
+//!   of the empty stack.
+//! * Every synthetic app's symbol table starts at the same
+//!   `TEXT_BASE`, so stacks of identical shape from different apps
+//!   would intern to the same id and merge into one cross-app path
+//!   with mixed wait votes. [`build`] pads each pathology app's
+//!   symbol table into a disjoint address band (`sym_pad` dummy
+//!   slots) so its paths can never collide with another app's.
+
+use crate::gapp::classify::BottleneckClass;
+use crate::util::Prng;
+use crate::workload::program::ProgramBuilder;
+use crate::workload::{App, AppBuilder};
+
+use super::spec::ArrivalSpec;
+
+/// Mean in-critical-section work of one lock-convoy item (ns).
+const CONVOY_HOLD_NS: u64 = 40_000;
+/// Work done outside the convoy lock per item (ns).
+const CONVOY_OUTSIDE_NS: u64 = 5_000;
+/// The inverting long holder's critical section (ns).
+const PRIO_LONG_HOLD_NS: u64 = 200_000;
+/// A victim's short critical section (ns).
+const PRIO_SHORT_HOLD_NS: u64 = 10_000;
+/// Work outside the lock per iteration (ns).
+const PRIO_OUTSIDE_NS: u64 = 5_000;
+/// Busy-wait poll burst length (ns) — each burst is pure compute.
+const SPIN_POLL_NS: u64 = 2_000;
+/// The busy-wait setter's work per item before raising the flag (ns).
+const SPIN_WORK_ITEM_NS: u64 = 50_000;
+/// One CPU-hog work item (ns).
+const HOG_ITEM_NS: u64 = 50_000;
+/// Base memory-bandwidth work item (ns); scaled by the thread count
+/// at build time to model bandwidth saturation slowing everyone down.
+const MEMBW_ITEM_NS: u64 = 20_000;
+/// Fast workers' per-round compute in the imbalance pathology (ns).
+const IMBALANCE_FAST_NS: u64 = 10_000;
+/// The straggler's per-round compute (10x the fast workers).
+const IMBALANCE_SLOW_NS: u64 = 100_000;
+/// Pipeline/message source: per-item production cost (ns).
+const STAGE_SOURCE_NS: u64 = 10_000;
+/// Pipeline/message sink: per-consumer slice of the service time (ns).
+/// Consumers take `8_000 * consumers` each, so in aggregate they are
+/// faster than the source (`0.8x` its period) and block between items
+/// — the queue/channel wait is where the criticality accrues.
+const STAGE_SINK_PER_CONSUMER_NS: u64 = 8_000;
+/// I/O storm: compute between blocking "disk" waits (ns).
+const IO_COMPUTE_NS: u64 = 10_000;
+/// I/O storm: blocking wait per item (ns).
+const IO_WAIT_NS: u64 = 100_000;
+
+/// One entry of the injectable-pathology taxonomy. `membw_contention`
+/// and `cpu_hog` share a truth class (both are compute saturation —
+/// GAPP cannot tell them apart from scheduler events alone, and does
+/// not claim to); they stay distinct kinds because their *shape*
+/// differs (membw work inflates with the thread count).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum PathologyKind {
+    LockConvoy,
+    PriorityInversion,
+    BusyWait,
+    CpuHog,
+    MembwContention,
+    ThreadImbalance,
+    PipelineStall,
+    IoStorm,
+    MessageStorm,
+}
+
+impl PathologyKind {
+    pub const ALL: [PathologyKind; 9] = [
+        PathologyKind::LockConvoy,
+        PathologyKind::PriorityInversion,
+        PathologyKind::BusyWait,
+        PathologyKind::CpuHog,
+        PathologyKind::MembwContention,
+        PathologyKind::ThreadImbalance,
+        PathologyKind::PipelineStall,
+        PathologyKind::IoStorm,
+        PathologyKind::MessageStorm,
+    ];
+
+    /// Spec-file name of the kind.
+    pub fn name(self) -> &'static str {
+        match self {
+            PathologyKind::LockConvoy => "lock_convoy",
+            PathologyKind::PriorityInversion => "priority_inversion",
+            PathologyKind::BusyWait => "busy_wait",
+            PathologyKind::CpuHog => "cpu_hog",
+            PathologyKind::MembwContention => "membw_contention",
+            PathologyKind::ThreadImbalance => "thread_imbalance",
+            PathologyKind::PipelineStall => "pipeline_stall",
+            PathologyKind::IoStorm => "io_storm",
+            PathologyKind::MessageStorm => "message_storm",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<PathologyKind> {
+        PathologyKind::ALL.into_iter().find(|k| k.name() == name)
+    }
+
+    /// Ground-truth class the profiler should report.
+    pub fn truth(self) -> BottleneckClass {
+        match self {
+            PathologyKind::LockConvoy => BottleneckClass::Synchronization,
+            PathologyKind::PriorityInversion => BottleneckClass::Synchronization,
+            PathologyKind::BusyWait => BottleneckClass::Compute,
+            PathologyKind::CpuHog => BottleneckClass::Compute,
+            PathologyKind::MembwContention => BottleneckClass::Compute,
+            PathologyKind::ThreadImbalance => BottleneckClass::Imbalance,
+            PathologyKind::PipelineStall => BottleneckClass::Pipeline,
+            PathologyKind::IoStorm => BottleneckClass::Io,
+            PathologyKind::MessageStorm => BottleneckClass::Messaging,
+        }
+    }
+
+    /// Fewest active threads for which the pathology still manifests
+    /// (validated at spec parse time). Contention kinds need enough
+    /// waiters to keep `threads_av < n/2`; staged kinds need the
+    /// consumer side to be aggregate-faster than the source.
+    pub fn min_threads(self) -> usize {
+        match self {
+            PathologyKind::LockConvoy => 4,
+            PathologyKind::PriorityInversion => 4,
+            PathologyKind::BusyWait => 2,
+            PathologyKind::CpuHog => 1,
+            PathologyKind::MembwContention => 1,
+            PathologyKind::ThreadImbalance => 2,
+            PathologyKind::PipelineStall => 3,
+            PathologyKind::IoStorm => 1,
+            PathologyKind::MessageStorm => 3,
+        }
+    }
+
+    /// Latch-parked companion threads added on top of the `n` active
+    /// ones (zero for the contention kinds — see the module docs).
+    pub fn companions(self, threads: usize) -> usize {
+        match self {
+            PathologyKind::LockConvoy | PathologyKind::PriorityInversion => 0,
+            _ => threads + 2,
+        }
+    }
+}
+
+/// Arrival pacing shared by the loop-driven builders: pre-draws one
+/// inter-arrival gap per item from the scenario's arrival process
+/// (seeded, per-thread stream) and prepends a `[arrival_wait]` sleep
+/// to the item. The sleep blocks on its own sub-path, so pacing never
+/// pollutes the pathology path's wait histogram. Burst-compute kinds
+/// (busy-wait, CPU hog, membw, imbalance) have no per-item loop to
+/// pace and ignore the arrival spec.
+struct Pacer<'s> {
+    arrival: Option<&'s ArrivalSpec>,
+    seed: u64,
+}
+
+impl Pacer<'_> {
+    fn gaps(&self, thread: usize, items: u64) -> Vec<u64> {
+        match self.arrival {
+            None => Vec::new(),
+            Some(spec) => {
+                // Tag space disjoint from App::spawn_into's per-thread
+                // forks (those use small consecutive tags on the app's
+                // own rng, this is a separate root).
+                let mut root = Prng::new(self.seed ^ 0x4152_5256_4c21);
+                let mut rng = root.fork(thread as u64 + 1);
+                super::arrival::gaps(spec, &mut rng, items as usize)
+            }
+        }
+    }
+
+    fn pace(pb: &mut ProgramBuilder<'_>, gaps: &[u64], item: usize) {
+        if let Some(&gap) = gaps.get(item) {
+            if gap > 0 {
+                pb.call("arrival_wait", "arrival.c", 1);
+                pb.sleep(gap, 0.0);
+                pb.ret();
+            }
+        }
+    }
+}
+
+/// Build the pathology as one synthetic [`App`].
+///
+/// * `name` becomes the app name the report attributes slices to.
+/// * `threads` is the number of *active* threads `n` (companions are
+///   added internally — `App::num_threads` exceeds `n` for the
+///   latch-parked kinds).
+/// * `items` scales the work (loop iterations / rounds per thread).
+/// * `sym_pad` shifts the app's symbols into a private address band;
+///   pass a distinct value per app in the session (the harness uses
+///   `64 + 16 * app_index`).
+pub fn build(
+    kind: PathologyKind,
+    name: &str,
+    threads: usize,
+    items: u64,
+    arrival: Option<&ArrivalSpec>,
+    seed: u64,
+    sym_pad: usize,
+) -> App {
+    assert!(
+        threads >= kind.min_threads(),
+        "{} needs at least {} threads (got {threads})",
+        kind.name(),
+        kind.min_threads(),
+    );
+    assert!(items >= 1, "{} needs at least one item", kind.name());
+    let mut ab = AppBuilder::new(name, seed);
+    for _ in 0..sym_pad {
+        ab.symtab.add("_pad", "pad.c", 1);
+    }
+    let pacer = Pacer { arrival, seed };
+    match kind {
+        PathologyKind::LockConvoy => lock_convoy(&mut ab, threads, items, &pacer),
+        PathologyKind::PriorityInversion => priority_inversion(&mut ab, threads, items, &pacer),
+        PathologyKind::BusyWait => busy_wait(&mut ab, threads, items),
+        PathologyKind::CpuHog => cpu_hog(&mut ab, threads, items),
+        PathologyKind::MembwContention => membw_contention(&mut ab, threads, items),
+        PathologyKind::ThreadImbalance => thread_imbalance(&mut ab, threads, items),
+        PathologyKind::PipelineStall => pipeline_stall(&mut ab, threads, items, &pacer),
+        PathologyKind::IoStorm => io_storm(&mut ab, threads, items, &pacer),
+        PathologyKind::MessageStorm => message_storm(&mut ab, threads, items, &pacer),
+    }
+    ab.finish()
+}
+
+/// Park `count` companion threads on `latch` (raises `N_min`, adds
+/// nothing runnable). Their only slices are a near-zero-cost park and
+/// the post-release exit, both on the separate `companion_park` path.
+fn park_companions(ab: &mut AppBuilder, latch: crate::workload::ObjId, count: usize) {
+    for c in 0..count {
+        let prog = {
+            let mut pb = ProgramBuilder::new(&mut ab.symtab);
+            pb.call("companion_park", "companion.c", 5);
+            pb.latch_wait(latch);
+            pb.build()
+        };
+        ab.thread(&format!("park{c}"), prog);
+    }
+}
+
+/// `n` workers hammer one mutex; each item holds it for
+/// `CONVOY_HOLD_NS` and does a sliver of work outside. At any instant
+/// one worker runs and `n - 1` sit blocked in `futex_wait`, so every
+/// re-acquire slice is critical and votes Futex on the shared
+/// `convoy_worker` path.
+fn lock_convoy(ab: &mut AppBuilder, n: usize, items: u64, pacer: &Pacer<'_>) {
+    let m = ab.world.new_mutex();
+    for t in 0..n {
+        let gaps = pacer.gaps(t, items);
+        let prog = {
+            let mut pb = ProgramBuilder::new(&mut ab.symtab);
+            pb.call("convoy_worker", "convoy.c", 10);
+            for i in 0..items {
+                Pacer::pace(&mut pb, &gaps, i as usize);
+                pb.lock(m);
+                pb.call("convoy_hold", "convoy.c", 40);
+                pb.compute(CONVOY_HOLD_NS, 0.0);
+                pb.ret();
+                pb.unlock(m);
+                pb.compute(CONVOY_OUTSIDE_NS, 0.0);
+            }
+            // No trailing ret: the exit slice stays on convoy_worker.
+            pb.build()
+        };
+        ab.thread(&format!("convoy{t}"), prog);
+    }
+}
+
+/// One low-priority-style holder camps on the mutex for
+/// `PRIO_LONG_HOLD_NS` per round while `n - 1` victims need it for
+/// only `PRIO_SHORT_HOLD_NS`. Victims spend almost all their time
+/// blocked behind the long hold — Futex votes on `prio_victim`.
+fn priority_inversion(ab: &mut AppBuilder, n: usize, items: u64, pacer: &Pacer<'_>) {
+    let m = ab.world.new_mutex();
+    let holder = {
+        let mut pb = ProgramBuilder::new(&mut ab.symtab);
+        pb.call("prio_holder", "prio.c", 10);
+        for _ in 0..items {
+            pb.lock(m);
+            pb.call("prio_long_hold", "prio.c", 40);
+            pb.compute(PRIO_LONG_HOLD_NS, 0.0);
+            pb.ret();
+            pb.unlock(m);
+            pb.compute(PRIO_OUTSIDE_NS, 0.0);
+        }
+        pb.build()
+    };
+    ab.thread("holder", holder);
+    for t in 1..n {
+        let gaps = pacer.gaps(t, items);
+        let prog = {
+            let mut pb = ProgramBuilder::new(&mut ab.symtab);
+            pb.call("prio_victim", "prio.c", 80);
+            for i in 0..items {
+                Pacer::pace(&mut pb, &gaps, i as usize);
+                pb.lock(m);
+                pb.compute(PRIO_SHORT_HOLD_NS, 0.0);
+                pb.unlock(m);
+                pb.compute(PRIO_OUTSIDE_NS, 0.0);
+            }
+            pb.build()
+        };
+        ab.thread(&format!("victim{t}"), prog);
+    }
+}
+
+/// `n - 1` spinners poll a flag in `SPIN_POLL_NS` compute bursts while
+/// one setter grinds through the real work. Spinners never block, so
+/// each ends the run as one giant critical slice with WaitKind::None
+/// — a Compute vote on `spin_worker` — which is exactly how GAPP sees
+/// a busy-wait loop (the paper's §2 motivating case).
+fn busy_wait(ab: &mut AppBuilder, n: usize, items: u64) {
+    let flag = ab.world.new_flag();
+    let latch = ab.world.new_latch(1);
+    for t in 0..n - 1 {
+        let prog = {
+            let mut pb = ProgramBuilder::new(&mut ab.symtab);
+            pb.call("spin_worker", "spin.c", 10);
+            pb.spin_until(flag, SPIN_POLL_NS);
+            pb.build()
+        };
+        ab.thread(&format!("spin{t}"), prog);
+    }
+    let setter = {
+        let mut pb = ProgramBuilder::new(&mut ab.symtab);
+        pb.call("spin_setter", "spin.c", 60);
+        pb.compute(items * SPIN_WORK_ITEM_NS, 0.0);
+        pb.set_flag(flag);
+        pb.latch_signal(latch);
+        pb.build()
+    };
+    ab.thread("setter", setter);
+    park_companions(ab, latch, PathologyKind::BusyWait.companions(n));
+}
+
+/// `n` hogs compute flat-out. With the companions parked on the
+/// latch, `N_min = n + 1 > threads_av ≈ n`, so each hog's single
+/// exit-terminated slice is critical and votes Compute.
+fn cpu_hog(ab: &mut AppBuilder, n: usize, items: u64) {
+    let latch = ab.world.new_latch(1);
+    for t in 0..n {
+        let prog = {
+            let mut pb = ProgramBuilder::new(&mut ab.symtab);
+            pb.call("hog_worker", "hog.c", 10);
+            pb.compute(items * HOG_ITEM_NS, 0.0);
+            if t == 0 {
+                pb.latch_signal(latch);
+            }
+            pb.build()
+        };
+        ab.thread(&format!("hog{t}"), prog);
+    }
+    park_companions(ab, latch, PathologyKind::CpuHog.companions(n));
+}
+
+/// Memory-bandwidth contention: like the hog, but each thread's work
+/// inflates linearly with the thread count (saturated bus — adding
+/// threads slows everyone down). Same observable class as `cpu_hog`;
+/// scheduler events cannot distinguish stalled loads from arithmetic.
+fn membw_contention(ab: &mut AppBuilder, n: usize, items: u64) {
+    let latch = ab.world.new_latch(1);
+    for t in 0..n {
+        let prog = {
+            let mut pb = ProgramBuilder::new(&mut ab.symtab);
+            pb.call("membw_worker", "membw.c", 10);
+            pb.compute(items * MEMBW_ITEM_NS * n as u64, 0.0);
+            if t == 0 {
+                pb.latch_signal(latch);
+            }
+            pb.build()
+        };
+        ab.thread(&format!("membw{t}"), prog);
+    }
+    park_companions(ab, latch, PathologyKind::MembwContention.companions(n));
+}
+
+/// `items` barrier rounds where one straggler does 10x the work.
+/// The `n - 1` fast workers block at the barrier every round —
+/// `(n-1) * items` Barrier votes on `imbalance_worker` — while the
+/// straggler (always last to arrive) never blocks and contributes a
+/// single exit-terminated None vote to the same path. Barrier wins
+/// the majority; the straggler's solo runtime carries the CMetric.
+fn thread_imbalance(ab: &mut AppBuilder, n: usize, items: u64) {
+    let b = ab.world.new_barrier(n);
+    let latch = ab.world.new_latch(1);
+    for t in 0..n {
+        let straggler = t == n - 1;
+        let prog = {
+            let mut pb = ProgramBuilder::new(&mut ab.symtab);
+            pb.call("imbalance_worker", "imbalance.c", 10);
+            for _ in 0..items {
+                pb.compute(
+                    if straggler {
+                        IMBALANCE_SLOW_NS
+                    } else {
+                        IMBALANCE_FAST_NS
+                    },
+                    0.0,
+                );
+                pb.barrier(b);
+            }
+            if straggler {
+                pb.latch_signal(latch);
+            }
+            pb.build()
+        };
+        ab.thread(&format!("bal{t}"), prog);
+    }
+    park_companions(ab, latch, PathologyKind::ThreadImbalance.companions(n));
+}
+
+/// A source feeds `n - 1` consumers through a shared queue. Consumers
+/// are aggregate-faster than the source, so the queue idles empty and
+/// every `queue_pop` blocks — Queue votes on the shared
+/// `pipeline_stage` path, whose combined service time out-weighs the
+/// source's single None slice in CMetric.
+fn pipeline_stall(ab: &mut AppBuilder, n: usize, items: u64, pacer: &Pacer<'_>) {
+    let k = n - 1;
+    let q = ab.world.new_queue(1024);
+    let latch = ab.world.new_latch(1);
+    let sink_ns = STAGE_SINK_PER_CONSUMER_NS * k as u64;
+    let gaps = pacer.gaps(0, items);
+    let source = {
+        let mut pb = ProgramBuilder::new(&mut ab.symtab);
+        pb.call("pipeline_source", "pipeline.c", 10);
+        for i in 0..items {
+            Pacer::pace(&mut pb, &gaps, i as usize);
+            pb.compute(STAGE_SOURCE_NS, 0.0);
+            pb.queue_push(q);
+        }
+        pb.latch_signal(latch);
+        pb.build()
+    };
+    ab.thread("source", source);
+    for j in 0..k {
+        // Deterministic partition: the first items % k consumers take
+        // one extra, so pops exactly match pushes (no drain deadlock).
+        let share = items / k as u64 + u64::from((j as u64) < items % k as u64);
+        let prog = {
+            let mut pb = ProgramBuilder::new(&mut ab.symtab);
+            pb.call("pipeline_stage", "pipeline.c", 60);
+            for _ in 0..share {
+                pb.queue_pop(q);
+                pb.compute(sink_ns, 0.0);
+            }
+            pb.build()
+        };
+        ab.thread(&format!("stage{j}"), prog);
+    }
+    park_companions(ab, latch, PathologyKind::PipelineStall.companions(n));
+}
+
+/// `n` workers alternate a sliver of compute with a blocking "disk"
+/// wait 10x as long — every slice ends in `WaitKind::Io`.
+fn io_storm(ab: &mut AppBuilder, n: usize, items: u64, pacer: &Pacer<'_>) {
+    let latch = ab.world.new_latch(1);
+    for t in 0..n {
+        let gaps = pacer.gaps(t, items);
+        let prog = {
+            let mut pb = ProgramBuilder::new(&mut ab.symtab);
+            pb.call("io_worker", "io.c", 10);
+            for i in 0..items {
+                Pacer::pace(&mut pb, &gaps, i as usize);
+                pb.compute(IO_COMPUTE_NS, 0.0);
+                pb.sleep(IO_WAIT_NS, 0.0);
+            }
+            if t == 0 {
+                pb.latch_signal(latch);
+            }
+            pb.build()
+        };
+        ab.thread(&format!("io{t}"), prog);
+    }
+    park_companions(ab, latch, PathologyKind::IoStorm.companions(n));
+}
+
+/// One producer sends `(n-1) * items` messages; `n - 1` consumers
+/// each take `items` off the channel with a blocking `recv`. The
+/// consumers are aggregate-faster than the producer, so the channel
+/// idles empty and every recv blocks — Channel votes on `msg_sink`.
+fn message_storm(ab: &mut AppBuilder, n: usize, items: u64, pacer: &Pacer<'_>) {
+    let k = n - 1;
+    let ch = ab.world.new_channel();
+    let latch = ab.world.new_latch(1);
+    let sink_ns = STAGE_SINK_PER_CONSUMER_NS * k as u64;
+    let total = items * k as u64;
+    let gaps = pacer.gaps(0, total);
+    let source = {
+        let mut pb = ProgramBuilder::new(&mut ab.symtab);
+        pb.call("msg_source", "msg.c", 10);
+        for i in 0..total {
+            Pacer::pace(&mut pb, &gaps, i as usize);
+            pb.compute(STAGE_SOURCE_NS, 0.0);
+            pb.send(ch);
+        }
+        pb.latch_signal(latch);
+        pb.build()
+    };
+    ab.thread("source", source);
+    for j in 0..k {
+        let prog = {
+            let mut pb = ProgramBuilder::new(&mut ab.symtab);
+            pb.call("msg_sink", "msg.c", 60);
+            for _ in 0..items {
+                pb.recv(ch, false, 0);
+                pb.compute(sink_ns, 0.0);
+            }
+            pb.build()
+        };
+        ab.thread(&format!("sink{j}"), prog);
+    }
+    park_companions(ab, latch, PathologyKind::MessageStorm.companions(n));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_round_trip_and_are_distinct() {
+        for k in PathologyKind::ALL {
+            assert_eq!(PathologyKind::from_name(k.name()), Some(k));
+        }
+        let mut names: Vec<&str> = PathologyKind::ALL.iter().map(|k| k.name()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), PathologyKind::ALL.len());
+        assert_eq!(PathologyKind::from_name("quantum_entanglement"), None);
+    }
+
+    #[test]
+    fn every_kind_builds_with_expected_thread_count() {
+        for k in PathologyKind::ALL {
+            let n = k.min_threads().max(4);
+            let app = build(k, "t", n, 3, None, 7, 0);
+            assert_eq!(
+                app.num_threads(),
+                n + k.companions(n),
+                "{} thread count",
+                k.name()
+            );
+        }
+    }
+
+    #[test]
+    fn truth_covers_every_bottleneck_class() {
+        let mut classes: Vec<BottleneckClass> =
+            PathologyKind::ALL.iter().map(|k| k.truth()).collect();
+        classes.sort_by_key(|c| c.label().to_string());
+        classes.dedup();
+        assert_eq!(
+            classes.len(),
+            BottleneckClass::ALL.len(),
+            "the taxonomy must exercise all six classes"
+        );
+    }
+
+    #[test]
+    fn symbol_padding_shifts_the_address_band() {
+        let a = build(PathologyKind::CpuHog, "a", 2, 2, None, 7, 0);
+        let b = build(PathologyKind::CpuHog, "b", 2, 2, None, 7, 64);
+        // Padded app's first real symbol sits 64 slots higher.
+        assert_eq!(
+            b.symtab.addr_of(64),
+            a.symtab.addr_of(0) + 64 * crate::workload::symbols::FUNC_SIZE
+        );
+    }
+}

@@ -1,0 +1,275 @@
+//! Scorecard arithmetic: grade `classify()`'s top-K output against a
+//! scenario's injected ground truth.
+//!
+//! Scoring is per *labeled app*, not per report line: each injected
+//! pathology app carries one truth class, and its prediction is the
+//! class of the highest-ranked bottleneck attributed to that app
+//! (rank order is the profiler's own severity claim, so the first
+//! attributed line is "what GAPP says is wrong with this app"). An
+//! app absent from the top-K scores a false negative — burying a real
+//! bottleneck below the fold is a miss, exactly like mislabeling it.
+//!
+//! Precision/recall/F1 then fall out of the per-class confusion
+//! counts: a mislabel charges a false positive to the predicted class
+//! *and* a false negative to the true class. Mix apps (background
+//! load) carry no label and are never scored. Aggregation across
+//! matrix cases re-sums the integer counts — never the ratios — so a
+//! merged scorecard equals the scorecard of the merged assignments.
+
+use crate::gapp::classify::BottleneckClass;
+use crate::gapp::report::{Bottleneck, Report};
+use crate::gapp::sink::{Assignment, ScoreRow, ScorecardEvent};
+
+/// The app a report line is attributed to: the dominant app by slice
+/// count in system-wide mode. Single-app reports elide the `apps`
+/// vector entirely (their attribution is the whole report), so a bare
+/// line matches only when the scenario injected exactly one app.
+fn dominant_app(b: &Bottleneck) -> Option<&str> {
+    b.apps.first().map(|(a, _)| a.as_str())
+}
+
+/// Grade one case's report against its injected labels.
+pub fn score_case(
+    report: &Report,
+    truth: &[(String, BottleneckClass)],
+    scope: &str,
+) -> ScorecardEvent {
+    let assignments: Vec<Assignment> = truth
+        .iter()
+        .map(|(app, class)| Assignment {
+            app: app.clone(),
+            truth: *class,
+            predicted: report
+                .bottlenecks
+                .iter()
+                .find(|b| match dominant_app(b) {
+                    Some(a) => a == app,
+                    // No apps vector: a single-app profile; every line
+                    // belongs to the sole injected app.
+                    None => truth.len() == 1,
+                })
+                .map(|b| b.class),
+        })
+        .collect();
+    scorecard_of(assignments, scope, 1)
+}
+
+/// Pure confusion-count arithmetic over a finished assignment list —
+/// the piece the fixture tests pin down by hand.
+pub fn scorecard_of(
+    assignments: Vec<Assignment>,
+    scope: &str,
+    cases: u64,
+) -> ScorecardEvent {
+    let mut rows: Vec<ScoreRow> = BottleneckClass::ALL
+        .iter()
+        .map(|c| ScoreRow {
+            class: *c,
+            tp: 0,
+            fp: 0,
+            fn_: 0,
+        })
+        .collect();
+    let idx = |c: BottleneckClass| {
+        BottleneckClass::ALL.iter().position(|k| *k == c).unwrap()
+    };
+    for a in &assignments {
+        match a.predicted {
+            Some(p) if p == a.truth => rows[idx(p)].tp += 1,
+            Some(p) => {
+                rows[idx(p)].fp += 1;
+                rows[idx(a.truth)].fn_ += 1;
+            }
+            None => rows[idx(a.truth)].fn_ += 1,
+        }
+    }
+    ScorecardEvent {
+        scope: scope.to_string(),
+        cases,
+        rows,
+        assignments,
+    }
+}
+
+/// Merge per-case scorecards into one aggregate by re-summing the
+/// integer counts. Per-case assignment detail is dropped — the
+/// aggregate answers "how often is each class right", the per-case
+/// cards answer "which app went wrong where".
+pub fn merge(cards: &[ScorecardEvent], scope: &str) -> ScorecardEvent {
+    let mut rows: Vec<ScoreRow> = BottleneckClass::ALL
+        .iter()
+        .map(|c| ScoreRow {
+            class: *c,
+            tp: 0,
+            fp: 0,
+            fn_: 0,
+        })
+        .collect();
+    for card in cards {
+        for r in &card.rows {
+            let slot = rows
+                .iter_mut()
+                .find(|s| s.class == r.class)
+                .expect("rows cover every class");
+            slot.tp += r.tp;
+            slot.fp += r.fp;
+            slot.fn_ += r.fn_;
+        }
+    }
+    ScorecardEvent {
+        scope: scope.to_string(),
+        cases: cards.iter().map(|c| c.cases).sum(),
+        rows,
+        assignments: Vec::new(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn asn(
+        app: &str,
+        truth: BottleneckClass,
+        predicted: Option<BottleneckClass>,
+    ) -> Assignment {
+        Assignment {
+            app: app.to_string(),
+            truth,
+            predicted,
+        }
+    }
+
+    fn row(sc: &ScorecardEvent, c: BottleneckClass) -> &ScoreRow {
+        sc.rows.iter().find(|r| r.class == c).unwrap()
+    }
+
+    #[test]
+    fn hand_computed_fixture_checks_the_arithmetic() {
+        use BottleneckClass::*;
+        // 4 labeled apps: one hit, one mislabel (Io read as Compute),
+        // one hit, one absent from the top-K.
+        let sc = scorecard_of(
+            vec![
+                asn("lock_convoy#0", Synchronization, Some(Synchronization)),
+                asn("io_storm#1", Io, Some(Compute)),
+                asn("busy_wait#2", Compute, Some(Compute)),
+                asn("pipeline#3", Pipeline, None),
+            ],
+            "seed=7",
+            1,
+        );
+        assert_eq!(sc.rows.len(), BottleneckClass::ALL.len());
+        // Synchronization: clean hit → p = r = f1 = 1.
+        let r = row(&sc, Synchronization);
+        assert_eq!((r.tp, r.fp, r.fn_), (1, 0, 0));
+        assert_eq!((r.precision(), r.recall(), r.f1()), (1.0, 1.0, 1.0));
+        // Io: missed entirely → recall 0, and 0/0 precision reads 0.
+        let r = row(&sc, Io);
+        assert_eq!((r.tp, r.fp, r.fn_), (0, 0, 1));
+        assert_eq!((r.precision(), r.recall(), r.f1()), (0.0, 0.0, 0.0));
+        // Compute: one hit plus the stolen Io prediction → p 1/2, r 1.
+        let r = row(&sc, Compute);
+        assert_eq!((r.tp, r.fp, r.fn_), (1, 1, 0));
+        assert_eq!(r.precision(), 0.5);
+        assert_eq!(r.recall(), 1.0);
+        assert!((r.f1() - 2.0 / 3.0).abs() < 1e-12);
+        // Pipeline: buried below the fold → FN only.
+        let r = row(&sc, Pipeline);
+        assert_eq!((r.tp, r.fp, r.fn_), (0, 0, 1));
+        // Untouched class stays all-zero.
+        let r = row(&sc, Messaging);
+        assert_eq!((r.tp, r.fp, r.fn_), (0, 0, 0));
+        // Overall sums the counts: tp 2, fp 1, fn 2.
+        let o = sc.overall();
+        assert_eq!((o.tp, o.fp, o.fn_), (2, 1, 2));
+        assert!((o.precision() - 2.0 / 3.0).abs() < 1e-12);
+        assert_eq!(o.recall(), 0.5);
+    }
+
+    #[test]
+    fn scoring_reads_the_top_ranked_attributed_line() {
+        use crate::gapp::report::Report;
+        use BottleneckClass::*;
+        let line = |rank: usize, class, apps: &[(&str, u64)]| Bottleneck {
+            rank,
+            total_cm_ms: 1.0,
+            slices: 1,
+            class,
+            top_wakers: Vec::new(),
+            apps: apps.iter().map(|(a, n)| (a.to_string(), *n)).collect(),
+            call_path: vec!["main".to_string()],
+            samples: Vec::new(),
+            stack_top_samples: 0,
+        };
+        let report = Report {
+            app: "mix".into(),
+            // Rank 1 belongs to the convoy; rank 2 is a second convoy
+            // line (ignored — only the first attributed line counts);
+            // rank 3 mislabels the io app.
+            bottlenecks: vec![
+                line(1, Synchronization, &[("convoy", 9), ("io", 1)]),
+                line(2, Compute, &[("convoy", 5)]),
+                line(3, Compute, &[("io", 4)]),
+            ],
+            ..Default::default()
+        };
+        let truth = vec![
+            ("convoy".to_string(), Synchronization),
+            ("io".to_string(), Io),
+            ("ghost".to_string(), Messaging),
+        ];
+        let sc = score_case(&report, &truth, "case");
+        assert_eq!(sc.assignments[0].predicted, Some(Synchronization));
+        assert_eq!(sc.assignments[1].predicted, Some(Compute));
+        assert_eq!(sc.assignments[2].predicted, None, "ghost never appears");
+        assert_eq!(row(&sc, Synchronization).tp, 1);
+        assert_eq!(row(&sc, Io).fn_, 1);
+        assert_eq!(row(&sc, Compute).fp, 1);
+        assert_eq!(row(&sc, Messaging).fn_, 1);
+
+        // Single-app profiles elide the apps vector; a sole label still
+        // matches, two labels cannot (attribution would be a guess).
+        let bare = Report {
+            app: "solo".into(),
+            bottlenecks: vec![line(1, Io, &[])],
+            ..Default::default()
+        };
+        let sc = score_case(&bare, &[("solo".to_string(), Io)], "case");
+        assert_eq!(sc.assignments[0].predicted, Some(Io));
+        let sc = score_case(
+            &bare,
+            &[("a".to_string(), Io), ("b".to_string(), Io)],
+            "case",
+        );
+        assert_eq!(sc.assignments[0].predicted, None);
+        assert_eq!(sc.assignments[1].predicted, None);
+    }
+
+    #[test]
+    fn merged_cards_equal_the_card_of_merged_assignments() {
+        use BottleneckClass::*;
+        let a = scorecard_of(
+            vec![asn("x", Io, Some(Io)), asn("y", Pipeline, Some(Compute))],
+            "seed=7",
+            1,
+        );
+        let b = scorecard_of(vec![asn("x", Io, None)], "seed=11", 1);
+        let merged = merge(&[a, b], "aggregate");
+        assert_eq!(merged.scope, "aggregate");
+        assert_eq!(merged.cases, 2);
+        assert!(merged.assignments.is_empty());
+        let want = scorecard_of(
+            vec![
+                asn("x", Io, Some(Io)),
+                asn("y", Pipeline, Some(Compute)),
+                asn("x", Io, None),
+            ],
+            "aggregate",
+            2,
+        );
+        for (m, w) in merged.rows.iter().zip(&want.rows) {
+            assert_eq!((m.class, m.tp, m.fp, m.fn_), (w.class, w.tp, w.fp, w.fn_));
+        }
+    }
+}

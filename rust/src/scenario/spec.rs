@@ -1,0 +1,637 @@
+//! Versioned scenario spec files (`scenarios/*.json`).
+//!
+//! A scenario is operator input, so it follows the fault-plan parsing
+//! policy (`gapp/faults.rs`), not the wire-schema policy: the document
+//! carries a `"scenario": 1` version stamp, every unknown key is a
+//! hard error, and every numeric knob is validated at parse time — a
+//! typo must not silently drop the pathology it meant to inject.
+//!
+//! ```json
+//! {
+//!   "scenario": 1,
+//!   "name": "lock convoy exemplar",
+//!   "seed": 7,
+//!   "window_us": 5000,
+//!   "top_k": 8,
+//!   "arrival": {"process": "poisson", "mean_gap_us": 20},
+//!   "mix": [{"app": "mysql", "threads": 8}],
+//!   "pathologies": [{"kind": "lock_convoy", "threads": 8, "items": 24}],
+//!   "matrix": {"seeds": [7, 11], "threads": [4, 8]}
+//! }
+//! ```
+//!
+//! See `scenarios/README.md` for the full schema reference and the
+//! versioning policy.
+
+use crate::util::json::Json;
+use crate::workload::apps::ALL_APPS;
+
+use super::pathology::PathologyKind;
+
+/// Version stamp of the scenario document schema.
+pub const SCENARIO_VERSION: u64 = 1;
+
+/// Default base seed when the spec does not pick one.
+pub const DEFAULT_SEED: u64 = 7;
+/// Default epoch window length (µs).
+pub const DEFAULT_WINDOW_US: u64 = 5_000;
+/// Default number of top bottlenecks the scorecard inspects.
+pub const DEFAULT_TOP_K: usize = 8;
+/// Default burst length for the bursty arrival process.
+pub const DEFAULT_BURST: u64 = 4;
+/// Default diurnal period (µs of accumulated gap time).
+pub const DEFAULT_PERIOD_US: f64 = 20_000.0;
+
+/// The arrival-process family (see [`super::arrival::gaps`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArrivalProcess {
+    Constant,
+    Poisson,
+    Bursty,
+    Diurnal,
+}
+
+impl ArrivalProcess {
+    pub fn name(self) -> &'static str {
+        match self {
+            ArrivalProcess::Constant => "constant",
+            ArrivalProcess::Poisson => "poisson",
+            ArrivalProcess::Bursty => "bursty",
+            ArrivalProcess::Diurnal => "diurnal",
+        }
+    }
+
+    fn from_name(name: &str) -> Option<ArrivalProcess> {
+        [
+            ArrivalProcess::Constant,
+            ArrivalProcess::Poisson,
+            ArrivalProcess::Bursty,
+            ArrivalProcess::Diurnal,
+        ]
+        .into_iter()
+        .find(|p| p.name() == name)
+    }
+}
+
+/// Open-loop pacing applied to the loop-driven pathologies.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ArrivalSpec {
+    pub process: ArrivalProcess,
+    /// Mean inter-arrival gap (ns).
+    pub mean_gap_ns: u64,
+    /// Items per burst (`bursty` only).
+    pub burst: u64,
+    /// Sinusoid period in ns of accumulated gap time (`diurnal` only).
+    pub period_ns: u64,
+}
+
+/// One background application drawn from `workload/apps`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct MixSpec {
+    pub app: String,
+    pub threads: usize,
+}
+
+/// One injected pathology instance.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PathologySpec {
+    pub kind: PathologyKind,
+    /// Active threads (companions are added by the builder).
+    pub threads: usize,
+    /// Work items / rounds per thread.
+    pub items: u64,
+}
+
+/// The seeds × thread-counts sweep `gapp scenario matrix` expands.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct MatrixSpec {
+    pub seeds: Vec<u64>,
+    /// Thread-count overrides applied to every pathology in the case.
+    pub threads: Vec<usize>,
+}
+
+/// One expanded case of a scenario: a concrete seed plus an optional
+/// matrix thread-count override. `scenario run` executes the base
+/// case; `scenario matrix` sweeps [`Scenario::cases`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Case {
+    pub index: usize,
+    pub seed: u64,
+    pub threads: Option<usize>,
+}
+
+impl Case {
+    /// Stable display label (`seed=7`, `seed=7 threads=8`).
+    pub fn label(&self) -> String {
+        match self.threads {
+            Some(t) => format!("seed={} threads={}", self.seed, t),
+            None => format!("seed={}", self.seed),
+        }
+    }
+}
+
+/// A parsed, validated scenario document.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Scenario {
+    pub name: String,
+    pub seed: u64,
+    pub window_us: u64,
+    pub top_k: usize,
+    /// `N_min` override for the session (`None` = GAPP's `n/2`).
+    pub nmin: Option<f64>,
+    pub arrival: Option<ArrivalSpec>,
+    pub mix: Vec<MixSpec>,
+    pub pathologies: Vec<PathologySpec>,
+    pub matrix: Option<MatrixSpec>,
+}
+
+impl Scenario {
+    /// Parse and validate a scenario document. Unknown keys are
+    /// rejected at every nesting level.
+    pub fn parse(text: &str) -> Result<Scenario, String> {
+        let doc = Json::parse(text).map_err(|e| format!("scenario: {e}"))?;
+        let fields = match &doc {
+            Json::Obj(fields) => fields,
+            _ => return Err("scenario: document must be an object".to_string()),
+        };
+        let version = doc
+            .get("scenario")
+            .ok_or("scenario: missing \"scenario\" version stamp")?
+            .as_u64()
+            .ok_or("scenario: \"scenario\" is not a u64")?;
+        if version != SCENARIO_VERSION {
+            return Err(format!(
+                "scenario: unsupported version {version} (expected {SCENARIO_VERSION})"
+            ));
+        }
+        let mut name = None;
+        let mut seed = DEFAULT_SEED;
+        let mut window_us = DEFAULT_WINDOW_US;
+        let mut top_k = DEFAULT_TOP_K;
+        let mut nmin = None;
+        let mut arrival = None;
+        let mut mix = Vec::new();
+        let mut pathologies = Vec::new();
+        let mut matrix = None;
+        for (key, value) in fields {
+            match key.as_str() {
+                "scenario" => {}
+                "name" => {
+                    name = Some(
+                        value
+                            .as_str()
+                            .ok_or("scenario: \"name\" is not a string")?
+                            .to_string(),
+                    );
+                }
+                "seed" => {
+                    seed = value.as_u64().ok_or("scenario: \"seed\" is not a u64")?;
+                }
+                "window_us" => {
+                    window_us = value
+                        .as_u64()
+                        .ok_or("scenario: \"window_us\" is not a u64")?;
+                    if window_us == 0 {
+                        return Err("scenario: \"window_us\" must be >= 1".to_string());
+                    }
+                }
+                "top_k" => {
+                    let k = value.as_u64().ok_or("scenario: \"top_k\" is not a u64")?;
+                    if k == 0 {
+                        return Err("scenario: \"top_k\" must be >= 1".to_string());
+                    }
+                    top_k = k as usize;
+                }
+                "nmin" => {
+                    let v = value
+                        .as_f64()
+                        .ok_or("scenario: \"nmin\" is not a number")?;
+                    if !v.is_finite() || v <= 0.0 {
+                        return Err(format!("scenario: \"nmin\" must be positive (got {v})"));
+                    }
+                    nmin = Some(v);
+                }
+                "arrival" => arrival = Some(parse_arrival(value)?),
+                "mix" => {
+                    let arr = value.as_arr().ok_or("scenario: \"mix\" is not an array")?;
+                    for entry in arr {
+                        mix.push(parse_mix(entry)?);
+                    }
+                }
+                "pathologies" => {
+                    let arr = value
+                        .as_arr()
+                        .ok_or("scenario: \"pathologies\" is not an array")?;
+                    for entry in arr {
+                        pathologies.push(parse_pathology(entry)?);
+                    }
+                }
+                "matrix" => matrix = Some(parse_matrix(value)?),
+                other => {
+                    return Err(format!(
+                        "scenario: unknown key {other:?} (a typo would silently \
+                         drop the knob it meant to set)"
+                    ))
+                }
+            }
+        }
+        let scenario = Scenario {
+            name: name.ok_or("scenario: missing required key \"name\"")?,
+            seed,
+            window_us,
+            top_k,
+            nmin,
+            arrival,
+            mix,
+            pathologies,
+            matrix,
+        };
+        scenario.validate()?;
+        Ok(scenario)
+    }
+
+    /// Read and parse a scenario file.
+    pub fn load(path: &str) -> Result<Scenario, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("cannot read scenario {path:?}: {e}"))?;
+        Scenario::parse(&text)
+    }
+
+    fn validate(&self) -> Result<(), String> {
+        if self.pathologies.is_empty() {
+            return Err(
+                "scenario: \"pathologies\" must name at least one injected pathology"
+                    .to_string(),
+            );
+        }
+        if let Some(m) = &self.matrix {
+            if m.seeds.is_empty() {
+                return Err("scenario: \"matrix\" \"seeds\" must be non-empty".to_string());
+            }
+            if m.threads.is_empty() {
+                return Err("scenario: \"matrix\" \"threads\" must be non-empty".to_string());
+            }
+            for p in &self.pathologies {
+                let floor = p.kind.min_threads();
+                for &t in &m.threads {
+                    if t < floor {
+                        return Err(format!(
+                            "scenario: matrix threads {t} below {:?} floor of {floor}",
+                            p.kind.name()
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Expand the matrix: seeds outer, thread counts inner, in spec
+    /// order. Without a `matrix` block this is the single base case.
+    pub fn cases(&self) -> Vec<Case> {
+        match &self.matrix {
+            None => vec![Case {
+                index: 0,
+                seed: self.seed,
+                threads: None,
+            }],
+            Some(m) => {
+                let mut out = Vec::with_capacity(m.seeds.len() * m.threads.len());
+                for &seed in &m.seeds {
+                    for &threads in &m.threads {
+                        out.push(Case {
+                            index: out.len(),
+                            seed,
+                            threads: Some(threads),
+                        });
+                    }
+                }
+                out
+            }
+        }
+    }
+}
+
+fn parse_arrival(value: &Json) -> Result<ArrivalSpec, String> {
+    let fields = match value {
+        Json::Obj(fields) => fields,
+        _ => return Err("scenario: \"arrival\" is not an object".to_string()),
+    };
+    let mut process = None;
+    let mut mean_gap_ns = None;
+    let mut burst = DEFAULT_BURST;
+    let mut period_us = DEFAULT_PERIOD_US;
+    for (key, v) in fields {
+        match key.as_str() {
+            "process" => {
+                let s = v
+                    .as_str()
+                    .ok_or("scenario: arrival \"process\" is not a string")?;
+                process = Some(ArrivalProcess::from_name(s).ok_or_else(|| {
+                    format!(
+                        "scenario: unknown arrival process {s:?} \
+                         (constant|poisson|bursty|diurnal)"
+                    )
+                })?);
+            }
+            "mean_gap_us" => {
+                let us = v
+                    .as_f64()
+                    .ok_or("scenario: arrival \"mean_gap_us\" is not a number")?;
+                if !us.is_finite() || us <= 0.0 {
+                    return Err(format!(
+                        "scenario: arrival \"mean_gap_us\" must be positive (got {us})"
+                    ));
+                }
+                mean_gap_ns = Some((us * 1_000.0).round() as u64);
+            }
+            "burst" => {
+                burst = v
+                    .as_u64()
+                    .ok_or("scenario: arrival \"burst\" is not a u64")?;
+                if burst == 0 {
+                    return Err("scenario: arrival \"burst\" must be >= 1".to_string());
+                }
+            }
+            "period_us" => {
+                period_us = v
+                    .as_f64()
+                    .ok_or("scenario: arrival \"period_us\" is not a number")?;
+                if !period_us.is_finite() || period_us <= 0.0 {
+                    return Err(format!(
+                        "scenario: arrival \"period_us\" must be positive (got {period_us})"
+                    ));
+                }
+            }
+            other => {
+                return Err(format!("scenario: unknown arrival key {other:?}"));
+            }
+        }
+    }
+    Ok(ArrivalSpec {
+        process: process.ok_or("scenario: arrival is missing \"process\"")?,
+        mean_gap_ns: mean_gap_ns.ok_or("scenario: arrival is missing \"mean_gap_us\"")?
+            .max(1),
+        burst,
+        period_ns: (period_us * 1_000.0).round().max(1.0) as u64,
+    })
+}
+
+fn parse_mix(value: &Json) -> Result<MixSpec, String> {
+    let fields = match value {
+        Json::Obj(fields) => fields,
+        _ => return Err("scenario: \"mix\" entries must be objects".to_string()),
+    };
+    let mut app = None;
+    let mut threads = None;
+    for (key, v) in fields {
+        match key.as_str() {
+            "app" => {
+                let s = v.as_str().ok_or("scenario: mix \"app\" is not a string")?;
+                if !ALL_APPS.contains(&s) {
+                    return Err(format!(
+                        "scenario: unknown mix app {s:?} (see `gapp list-apps`)"
+                    ));
+                }
+                app = Some(s.to_string());
+            }
+            "threads" => {
+                let t = v
+                    .as_u64()
+                    .ok_or("scenario: mix \"threads\" is not a u64")?;
+                if t == 0 {
+                    return Err("scenario: mix \"threads\" must be >= 1".to_string());
+                }
+                threads = Some(t as usize);
+            }
+            other => return Err(format!("scenario: unknown mix key {other:?}")),
+        }
+    }
+    Ok(MixSpec {
+        app: app.ok_or("scenario: mix entry is missing \"app\"")?,
+        threads: threads.ok_or("scenario: mix entry is missing \"threads\"")?,
+    })
+}
+
+fn parse_pathology(value: &Json) -> Result<PathologySpec, String> {
+    let fields = match value {
+        Json::Obj(fields) => fields,
+        _ => return Err("scenario: \"pathologies\" entries must be objects".to_string()),
+    };
+    let mut kind = None;
+    let mut threads = None;
+    let mut items = 24u64;
+    for (key, v) in fields {
+        match key.as_str() {
+            "kind" => {
+                let s = v
+                    .as_str()
+                    .ok_or("scenario: pathology \"kind\" is not a string")?;
+                kind = Some(PathologyKind::from_name(s).ok_or_else(|| {
+                    let known: Vec<&str> =
+                        PathologyKind::ALL.iter().map(|k| k.name()).collect();
+                    format!(
+                        "scenario: unknown pathology kind {s:?} (one of {})",
+                        known.join("|")
+                    )
+                })?);
+            }
+            "threads" => {
+                let t = v
+                    .as_u64()
+                    .ok_or("scenario: pathology \"threads\" is not a u64")?;
+                if t == 0 {
+                    return Err("scenario: pathology \"threads\" must be >= 1".to_string());
+                }
+                threads = Some(t as usize);
+            }
+            "items" => {
+                items = v
+                    .as_u64()
+                    .ok_or("scenario: pathology \"items\" is not a u64")?;
+                if items == 0 {
+                    return Err("scenario: pathology \"items\" must be >= 1".to_string());
+                }
+            }
+            other => return Err(format!("scenario: unknown pathology key {other:?}")),
+        }
+    }
+    let kind = kind.ok_or("scenario: pathology entry is missing \"kind\"")?;
+    let threads = threads.ok_or("scenario: pathology entry is missing \"threads\"")?;
+    if threads < kind.min_threads() {
+        return Err(format!(
+            "scenario: {:?} needs at least {} threads (got {threads})",
+            kind.name(),
+            kind.min_threads()
+        ));
+    }
+    Ok(PathologySpec {
+        kind,
+        threads,
+        items,
+    })
+}
+
+fn parse_matrix(value: &Json) -> Result<MatrixSpec, String> {
+    let fields = match value {
+        Json::Obj(fields) => fields,
+        _ => return Err("scenario: \"matrix\" is not an object".to_string()),
+    };
+    let mut seeds = Vec::new();
+    let mut threads = Vec::new();
+    for (key, v) in fields {
+        match key.as_str() {
+            "seeds" => {
+                let arr = v
+                    .as_arr()
+                    .ok_or("scenario: matrix \"seeds\" is not an array")?;
+                for s in arr {
+                    seeds.push(
+                        s.as_u64()
+                            .ok_or("scenario: matrix \"seeds\" entries must be u64s")?,
+                    );
+                }
+            }
+            "threads" => {
+                let arr = v
+                    .as_arr()
+                    .ok_or("scenario: matrix \"threads\" is not an array")?;
+                for t in arr {
+                    let t = t
+                        .as_u64()
+                        .ok_or("scenario: matrix \"threads\" entries must be u64s")?;
+                    if t == 0 {
+                        return Err("scenario: matrix \"threads\" must be >= 1".to_string());
+                    }
+                    threads.push(t as usize);
+                }
+            }
+            other => return Err(format!("scenario: unknown matrix key {other:?}")),
+        }
+    }
+    Ok(MatrixSpec { seeds, threads })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MINIMAL: &str = r#"{
+        "scenario": 1,
+        "name": "t",
+        "pathologies": [{"kind": "cpu_hog", "threads": 2}]
+    }"#;
+
+    #[test]
+    fn minimal_spec_gets_the_documented_defaults() {
+        let sc = Scenario::parse(MINIMAL).unwrap();
+        assert_eq!(sc.seed, DEFAULT_SEED);
+        assert_eq!(sc.window_us, DEFAULT_WINDOW_US);
+        assert_eq!(sc.top_k, DEFAULT_TOP_K);
+        assert_eq!(sc.nmin, None);
+        assert!(sc.arrival.is_none() && sc.mix.is_empty() && sc.matrix.is_none());
+        assert_eq!(sc.pathologies[0].items, 24);
+        assert_eq!(sc.cases(), vec![Case { index: 0, seed: 7, threads: None }]);
+    }
+
+    #[test]
+    fn full_spec_round_trips_every_knob() {
+        let sc = Scenario::parse(
+            r#"{
+                "scenario": 1,
+                "name": "full",
+                "seed": 11,
+                "window_us": 2000,
+                "top_k": 5,
+                "nmin": 6.5,
+                "arrival": {"process": "bursty", "mean_gap_us": 15.5,
+                            "burst": 3, "period_us": 1000},
+                "mix": [{"app": "mysql", "threads": 4}],
+                "pathologies": [
+                    {"kind": "lock_convoy", "threads": 6, "items": 10},
+                    {"kind": "io_storm", "threads": 2}
+                ],
+                "matrix": {"seeds": [1, 2], "threads": [4, 8, 16]}
+            }"#,
+        )
+        .unwrap();
+        assert_eq!(sc.seed, 11);
+        assert_eq!(sc.nmin, Some(6.5));
+        let a = sc.arrival.unwrap();
+        assert_eq!(a.process, ArrivalProcess::Bursty);
+        assert_eq!(a.mean_gap_ns, 15_500);
+        assert_eq!(a.burst, 3);
+        assert_eq!(a.period_ns, 1_000_000);
+        assert_eq!(sc.mix[0].app, "mysql");
+        assert_eq!(sc.pathologies.len(), 2);
+        // Matrix expansion: seeds outer, threads inner, stable indexes.
+        let cases = sc.cases();
+        assert_eq!(cases.len(), 6);
+        assert_eq!(cases[0], Case { index: 0, seed: 1, threads: Some(4) });
+        assert_eq!(cases[4], Case { index: 4, seed: 2, threads: Some(8) });
+        assert_eq!(cases[5].label(), "seed=2 threads=16");
+    }
+
+    #[test]
+    fn bad_specs_get_descriptive_errors() {
+        for (text, what) in [
+            ("[1]", "object"),
+            ("{\"name\": \"x\"}", "version stamp"),
+            ("{\"scenario\": 2, \"name\": \"x\"}", "version 2"),
+            ("{\"scenario\": 1, \"nmae\": \"typo\"}", "nmae"),
+            ("{\"scenario\": 1, \"pathologies\": []}", "name"),
+            (MINIMAL_WITHOUT_PATHOLOGIES, "pathologies"),
+            (
+                r#"{"scenario": 1, "name": "x",
+                    "pathologies": [{"kind": "cpu_hog", "threads": 0}]}"#,
+                "threads",
+            ),
+            (
+                r#"{"scenario": 1, "name": "x",
+                    "pathologies": [{"kind": "lock_convoy", "threads": 2}]}"#,
+                "at least 4",
+            ),
+            (
+                r#"{"scenario": 1, "name": "x",
+                    "pathologies": [{"kind": "warp_drive", "threads": 2}]}"#,
+                "warp_drive",
+            ),
+            (
+                r#"{"scenario": 1, "name": "x",
+                    "arrival": {"process": "poisson", "mean_gap_us": -5},
+                    "pathologies": [{"kind": "cpu_hog", "threads": 2}]}"#,
+                "mean_gap_us",
+            ),
+            (
+                r#"{"scenario": 1, "name": "x",
+                    "arrival": {"process": "warp", "mean_gap_us": 5},
+                    "pathologies": [{"kind": "cpu_hog", "threads": 2}]}"#,
+                "warp",
+            ),
+            (
+                r#"{"scenario": 1, "name": "x",
+                    "mix": [{"app": "notanapp", "threads": 2}],
+                    "pathologies": [{"kind": "cpu_hog", "threads": 2}]}"#,
+                "notanapp",
+            ),
+            (
+                r#"{"scenario": 1, "name": "x",
+                    "pathologies": [{"kind": "lock_convoy", "threads": 8}],
+                    "matrix": {"seeds": [1], "threads": [2]}}"#,
+                "floor",
+            ),
+            (
+                r#"{"scenario": 1, "name": "x",
+                    "pathologies": [{"kind": "cpu_hog", "threads": 2}],
+                    "matrix": {"seeds": [], "threads": [4]}}"#,
+                "seeds",
+            ),
+            ("{not json", "scenario"),
+        ] {
+            let err = Scenario::parse(text).unwrap_err();
+            assert!(err.contains(what), "{text}: {err:?} should mention {what:?}");
+        }
+    }
+
+    const MINIMAL_WITHOUT_PATHOLOGIES: &str = r#"{"scenario": 1, "name": "x"}"#;
+}
