@@ -62,6 +62,21 @@ fn main() -> anyhow::Result<()> {
     //         .sink(HumanSink::new(std::io::stdout()))
     //         .run()?;
 
+    // Parallel lane workers: with the default `--merge tree` and two or
+    // more ring shards, `.lane_threads(N)` (CLI: `--lane-threads N`)
+    // folds each shard's window state on one of N scoped OS threads,
+    // with a single barrier at window close for the pairwise merge
+    // tree. The report is byte-identical at every thread count — the
+    // knob buys wall-clock on wide runs, never different output:
+    //
+    //     Session::builder(AnalysisEngine::auto())
+    //         .app(&app)
+    //         .window_us(5_000)
+    //         .shards(4)
+    //         .lane_threads(4)
+    //         .sink(HumanSink::new(std::io::stdout()))
+    //         .run()?;
+
     // Scored benchmarks: the declarative scenario harness compiles a
     // `scenarios/*.json` spec (injected pathologies with known classes,
     // optional background apps and open-loop arrivals) into a session

@@ -106,6 +106,38 @@ fn main() {
         });
     }
 
+    // Parallel lanes: the same tree-merge run with per-lane folding on
+    // 2 and 4 worker threads (4 shards). The outputs are byte-identical
+    // to the single-threaded rows above (golden-tested); this pair
+    // tracks what the SPSC hand-off + window-close barrier buys (or
+    // costs) over driver-thread folding across PRs.
+    for (name, lane_threads) in [
+        ("live_canneal_16t_w5ms_tree_mt2", 2usize),
+        ("live_canneal_16t_w5ms_tree_mt4", 4),
+    ] {
+        b.bench(name, || {
+            let app = apps::canneal(16, 3);
+            let run = gapp::gapp::stream::run_live(
+                std::slice::from_ref(&app),
+                KernelConfig::default(),
+                GappConfig {
+                    merge: MergeStrategy::Tree,
+                    shards: Some(4),
+                    lane_threads,
+                    ..Default::default()
+                },
+                AnalysisEngine::native(),
+                gapp::gapp::stream::LiveConfig {
+                    window_ns: 5_000_000,
+                    ..Default::default()
+                },
+                |w| sink(w.top.len()),
+            )
+            .unwrap();
+            sink(run.report.runtime_ns);
+        });
+    }
+
     // Sharded vs single-ring end-to-end pair: same run, transport forced
     // to one shared ring vs 4 per-CPU shards. The outputs are provably
     // byte-identical (golden-tested); this row pair tracks the *cost* of

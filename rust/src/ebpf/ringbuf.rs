@@ -327,6 +327,18 @@ impl<T> ShardedRing<T> {
         }
     }
 
+    /// Drain *one shard* to empty into `out`, preserving shard FIFO
+    /// order and reusing the caller's buffer. This is the hand-off shape
+    /// of the threaded lane path (`--lane-threads N`): the driver drains
+    /// each shard into a recycled batch and sends the whole batch to the
+    /// shard's lane worker — one message per (epoch × shard), not one
+    /// per record.
+    pub fn drain_shard_into(&mut self, i: usize, out: &mut Vec<Stamped<T>>) {
+        while let Some(s) = self.shards[i].pop() {
+            out.push(s);
+        }
+    }
+
     /// Total records currently buffered across all shards.
     pub fn len(&self) -> usize {
         self.shards.iter().map(|s| s.len()).sum()
@@ -570,6 +582,32 @@ mod tests {
         assert_eq!(sr.shard(0).len(), 1, "other shards untouched");
         sr.drain_shard(0, |_| {});
         assert!(sr.is_empty());
+    }
+
+    #[test]
+    fn drain_shard_into_reuses_the_buffer_and_matches_drain_shard() {
+        let fill = |sr: &mut ShardedRing<u32>| {
+            for i in 0..12u64 {
+                sr.push((i % 2) as usize, i, i as u32);
+            }
+        };
+        let mut a: ShardedRing<u32> = ShardedRing::new(2, 16);
+        let mut b: ShardedRing<u32> = ShardedRing::new(2, 16);
+        fill(&mut a);
+        fill(&mut b);
+        let mut via_cb = Vec::new();
+        a.drain_shard(1, |s| via_cb.push((s.t, s.seq, s.rec)));
+        let mut buf: Vec<Stamped<u32>> = Vec::with_capacity(8);
+        b.drain_shard_into(1, &mut buf);
+        let via_buf: Vec<_> = buf.iter().map(|s| (s.t, s.seq, s.rec)).collect();
+        assert_eq!(via_cb, via_buf);
+        assert_eq!(b.shard(1).stats.drained, 6);
+        assert_eq!(b.shard(0).len(), 6, "other shards untouched");
+        // Recycled buffer: a second drain appends after clear.
+        buf.clear();
+        b.drain_shard_into(0, &mut buf);
+        assert_eq!(buf.len(), 6);
+        assert!(b.is_empty());
     }
 
     #[test]

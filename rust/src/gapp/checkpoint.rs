@@ -43,7 +43,10 @@ pub const CHECKPOINT_VERSION: u64 = 1;
 /// The configuration surface a checkpoint is only valid against. A
 /// resume with any mismatching knob would replay a *different* run and
 /// silently corrupt the analysis, so every field is checked on restore
-/// with an error naming the knob.
+/// with an error naming the knob. The one exception is
+/// [`Fingerprint::lane_threads`]: thread count changes scheduling but
+/// never the output bytes, so a mismatch there is a named note, not an
+/// error.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Fingerprint {
     /// "live" or "batch".
@@ -61,12 +64,17 @@ pub struct Fingerprint {
     pub drain_threshold: u64,
     /// Sampling period Δt (ns).
     pub dt: u64,
+    /// `--lane-threads` the writing session ran with. Recorded for
+    /// provenance; checked softly (see the struct docs).
+    pub lane_threads: u64,
 }
 
 impl Fingerprint {
     /// Compare against the fingerprint of the resuming session; the
     /// first mismatch is reported by knob name, stored vs current.
-    pub fn check(&self, current: &Fingerprint) -> Result<(), String> {
+    /// `Ok` carries the benign notes (knobs that differ but cannot
+    /// change the output — today only `lane_threads`).
+    pub fn check(&self, current: &Fingerprint) -> Result<Vec<String>, String> {
         let mismatch = |knob: &str, stored: String, now: String| {
             Err(format!(
                 "checkpoint was written by a different configuration: \
@@ -127,7 +135,19 @@ impl Fingerprint {
         if self.dt != current.dt {
             return mismatch("dt", self.dt.to_string(), current.dt.to_string());
         }
-        Ok(())
+        let mut notes = Vec::new();
+        if self.lane_threads != current.lane_threads {
+            // Lane workers change who folds a shard, never what the
+            // fold produces (byte-identity is golden-tested at every
+            // thread count), so a resume may legally change it.
+            notes.push(format!(
+                "lane-threads differs (checkpoint {}, session {}); thread \
+                 count affects scheduling only, never the output bytes — \
+                 resuming anyway",
+                self.lane_threads, current.lane_threads
+            ));
+        }
+        Ok(notes)
     }
 }
 
@@ -219,6 +239,7 @@ impl Default for Fingerprint {
             ring_capacity: 0,
             drain_threshold: 0,
             dt: 0,
+            lane_threads: 1,
         }
     }
 }
@@ -302,6 +323,7 @@ fn fingerprint_json(f: &Fingerprint) -> Json {
         ("ring_capacity", Json::usize(f.ring_capacity)),
         ("drain_threshold", Json::u64(f.drain_threshold)),
         ("dt", Json::u64(f.dt)),
+        ("lane_threads", Json::u64(f.lane_threads)),
     ])
 }
 
@@ -430,6 +452,12 @@ impl Checkpoint {
                 ring_capacity: get_u64(f, "fingerprint", "ring_capacity")? as usize,
                 drain_threshold: get_u64(f, "fingerprint", "drain_threshold")?,
                 dt: get_u64(f, "fingerprint", "dt")?,
+                // Absent in pre-lane checkpoints; those were written by
+                // the single-threaded fold, i.e. one lane thread.
+                lane_threads: f
+                    .get("lane_threads")
+                    .and_then(|v| v.as_u64())
+                    .unwrap_or(1),
             }),
         };
         let summaries = doc
@@ -670,6 +698,7 @@ mod tests {
                 ring_capacity: 1 << 20,
                 drain_threshold: 1 << 14,
                 dt: 3_000_000,
+                lane_threads: 1,
             }),
             summaries: vec![
                 WindowSummary {
@@ -778,7 +807,35 @@ mod tests {
         c.merge = "serial".into();
         let err = a.check(&c).unwrap_err();
         assert!(err.contains("merge"), "{err}");
-        assert!(a.check(&a.clone()).is_ok());
+        assert!(a.check(&a.clone()).unwrap().is_empty());
+    }
+
+    /// Satellite invariant of the lane-thread refactor: thread count
+    /// never reaches the analysis state, so checkpoints written at
+    /// different `--lane-threads` differ *only* in the fingerprint
+    /// field — and resuming across thread counts is a named note, not
+    /// a "different configuration" error.
+    #[test]
+    fn thread_counts_change_one_fingerprint_field_and_resume_freely() {
+        let cp1 = sample_checkpoint();
+        let mut cp4 = cp1.clone();
+        cp4.fingerprint.as_mut().unwrap().lane_threads = 4;
+        let (a, b) = (cp1.to_json().to_compact(), cp4.to_json().to_compact());
+        assert_eq!(a.replace("\"lane_threads\":1", "\"lane_threads\":4"), b);
+        let fp1 = cp1.fingerprint.unwrap();
+        let fp4 = cp4.fingerprint.unwrap();
+        let notes = fp1.check(&fp4).unwrap();
+        assert_eq!(notes.len(), 1);
+        assert!(notes[0].contains("lane-threads"), "{}", notes[0]);
+        assert!(
+            notes[0].contains("checkpoint 1") && notes[0].contains("session 4"),
+            "{}",
+            notes[0]
+        );
+        // Pre-lane checkpoints (no lane_threads key) parse as 1.
+        let doc = a.replace(",\"lane_threads\":1", "");
+        let old = Checkpoint::from_json(&Json::parse(&doc).unwrap()).unwrap();
+        assert_eq!(old.fingerprint.unwrap().lane_threads, 1);
     }
 
     #[test]

@@ -163,6 +163,16 @@ pub struct GappConfig {
     /// session does when a ring shard is about to overflow. `Shed`
     /// (default) keeps the historical drop-and-count behaviour.
     pub on_overflow: OverflowPolicy,
+    /// Lane-worker OS threads (CLI `--lane-threads N`): how many real
+    /// threads fold the per-shard lanes under the tree strategy. `1`
+    /// (default) keeps today's single-thread tree — every lane folds
+    /// inline on the driver thread, so all goldens hold unchanged.
+    /// `N > 1` hands each shard's drained records to a scoped worker
+    /// thread over an SPSC channel and parallelizes the window-close
+    /// merge tree by depth. Byte-identical output at every N (the
+    /// folds are shard-local and the merge tree is deterministic);
+    /// requires `merge == Tree` and more than one shard.
+    pub lane_threads: usize,
 }
 
 impl Default for GappConfig {
@@ -181,6 +191,7 @@ impl Default for GappConfig {
             format: ReportFormat::Text,
             output: None,
             on_overflow: OverflowPolicy::Shed,
+            lane_threads: 1,
         }
     }
 }
@@ -222,6 +233,28 @@ impl GappConfig {
         if let Some(s) = self.shards {
             anyhow::ensure!(s >= 1, "shards must be >= 1 (--shards 0 is meaningless)");
         }
+        anyhow::ensure!(
+            self.lane_threads >= 1,
+            "lane_threads must be >= 1 (--lane-threads 0 would fold nothing)"
+        );
+        if self.lane_threads > 1 {
+            // Extra lane workers only exist on the tree path, where the
+            // per-shard folds are independent until window close. A
+            // silent fallback would misreport the measured configuration,
+            // so both dead-end combinations are real errors.
+            anyhow::ensure!(
+                self.merge == MergeStrategy::Tree,
+                "lane_threads > 1 requires the tree merge strategy \
+                 (--merge serial folds one global stream — there are no \
+                 independent lanes for extra threads to work on)"
+            );
+            anyhow::ensure!(
+                self.shards != Some(1),
+                "lane_threads > 1 requires more than one ring shard \
+                 (--shards 1 has a single lane, so extra lane threads \
+                 would idle; raise --shards or drop --lane-threads)"
+            );
+        }
         Ok(())
     }
 }
@@ -240,6 +273,7 @@ mod tests {
         assert_eq!(c.format, ReportFormat::Text);
         assert!(c.output.is_none());
         assert_eq!(c.on_overflow, OverflowPolicy::Shed);
+        assert_eq!(c.lane_threads, 1); // single-thread tree by default
         assert!(c.validate().is_ok());
     }
 
@@ -325,6 +359,13 @@ mod tests {
                 },
                 "stack_map_entries",
             ),
+            (
+                GappConfig {
+                    lane_threads: 0,
+                    ..Default::default()
+                },
+                "lane_threads",
+            ),
         ];
         for (cfg, what) in cases {
             let err = cfg.validate().unwrap_err().to_string();
@@ -344,6 +385,45 @@ mod tests {
         }
         let cfg = GappConfig {
             nmin: Some(8.0),
+            ..Default::default()
+        };
+        assert!(cfg.validate().is_ok());
+    }
+
+    #[test]
+    fn lane_threads_dead_end_combinations_are_real_errors() {
+        // Serial has no independent lanes for extra threads to fold.
+        let cfg = GappConfig {
+            lane_threads: 2,
+            merge: MergeStrategy::Serial,
+            ..Default::default()
+        };
+        let err = cfg.validate().unwrap_err().to_string();
+        assert!(err.contains("lane_threads"), "{err}");
+        assert!(err.contains("serial"), "{err}");
+        // One shard means one lane: extra workers would idle silently.
+        let cfg = GappConfig {
+            lane_threads: 2,
+            shards: Some(1),
+            ..Default::default()
+        };
+        let err = cfg.validate().unwrap_err().to_string();
+        assert!(err.contains("lane_threads"), "{err}");
+        assert!(err.contains("shard"), "{err}");
+        // The working shapes validate: tree + several shards, any N.
+        for n in [1usize, 2, 4, 16] {
+            let cfg = GappConfig {
+                lane_threads: n,
+                shards: Some(4),
+                ..Default::default()
+            };
+            assert!(cfg.validate().is_ok(), "lane_threads {n}");
+        }
+        // N = 1 is today's inline tree and composes with everything.
+        let cfg = GappConfig {
+            lane_threads: 1,
+            merge: MergeStrategy::Serial,
+            shards: Some(1),
             ..Default::default()
         };
         assert!(cfg.validate().is_ok());

@@ -50,17 +50,46 @@ pub use config::{GappConfig, MergeStrategy, OverflowPolicy, ReportFormat};
 pub use report::{Bottleneck, Report, SampleLine, ThreadCm};
 pub use session::{Session, SessionOutput};
 
+/// Where drained records go — the consumer-side dispatch installed in
+/// [`GappCore::lanes`], one variant per analysis topology.
+pub enum LaneDispatch {
+    /// [`MergeStrategy::Serial`]: no lanes at all — every drain k-way
+    /// merges the shards straight into [`GappCore::user`].
+    None,
+    /// [`MergeStrategy::Tree`] on the driver thread (`--lane-threads 1`,
+    /// the default): each ring shard drains into its own lane; slice
+    /// records fold shard-locally, matrix records queue for the
+    /// window-close re-merge.
+    Inline(userspace::ShardLanes),
+    /// [`MergeStrategy::Tree`] with `--lane-threads N > 1`: drained
+    /// batches hand off to scoped lane workers
+    /// ([`stream::lanes::spawn_lane_workers`]); the session driver
+    /// installs this inside its `thread::scope` and restores `Inline`
+    /// before the scope exits (dropping the [`stream::lanes::LaneIo`]
+    /// is what lets the workers join).
+    Threaded(stream::lanes::LaneIo),
+}
+
+impl LaneDispatch {
+    /// True for the tree strategy's driver-thread lanes (the variant
+    /// the inline fold path operates on).
+    pub fn is_inline(&self) -> bool {
+        matches!(self, LaneDispatch::Inline(_))
+    }
+
+    /// True when lane workers own the fold state (`--lane-threads N`).
+    pub fn is_threaded(&self) -> bool {
+        matches!(self, LaneDispatch::Threaded(_))
+    }
+}
+
 /// Kernel-side + user-side state behind one shared handle.
 pub struct GappCore {
     pub kernel: probes::KernelProbes,
     pub user: userspace::UserProbe,
-    /// Shard-local consumer lanes — `Some` under
-    /// [`MergeStrategy::Tree`], where each ring shard drains into its
-    /// own lane (slice records fold shard-locally, matrix records queue
-    /// for the window-close re-merge). `None` under
-    /// [`MergeStrategy::Serial`], where every drain k-way-merges the
-    /// shards straight into [`GappCore::user`].
-    pub lanes: Option<userspace::ShardLanes>,
+    /// Consumer-side dispatch for drained records — see
+    /// [`LaneDispatch`] for the three topologies.
+    pub lanes: LaneDispatch,
     /// Live fault-injection / degradation state consulted on the probe
     /// hot path. Inert by default; the session driver arms it per epoch
     /// from the fault plan and the `--on-overflow` policy.
@@ -82,14 +111,26 @@ impl GappCore {
     /// whose watermark consumer is stalled by a fault plan — a
     /// restarted reader catches up at the window boundary.
     pub fn drain(&mut self) {
-        match &mut self.lanes {
-            None => {
-                let user = &mut self.user;
-                self.kernel.rings.drain_global(|rec| user.consume(rec));
+        let GappCore {
+            kernel, user, lanes, ..
+        } = self;
+        match lanes {
+            LaneDispatch::None => {
+                kernel.rings.drain_global(|rec| user.consume(rec));
             }
-            Some(lanes) => {
-                for i in 0..self.kernel.rings.num_shards() {
-                    self.kernel.rings.drain_shard(i, |rec| lanes.route(i, rec));
+            LaneDispatch::Inline(lanes) => {
+                for i in 0..kernel.rings.num_shards() {
+                    kernel.rings.drain_shard(i, |rec| lanes.route(i, rec));
+                }
+            }
+            LaneDispatch::Threaded(io) => {
+                // SPSC hand-off: one recycled batch per shard per drain,
+                // no per-record messaging. Quiet shards cost nothing
+                // (an empty batch goes back to the pool unsent).
+                for i in 0..kernel.rings.num_shards() {
+                    let mut buf = io.take_buf();
+                    kernel.rings.drain_shard_into(i, &mut buf);
+                    io.feed(i, buf);
                 }
             }
         }
@@ -102,19 +143,60 @@ impl GappCore {
     /// buffers); the serial strategy keeps its historical behaviour of
     /// draining everything through the global merge.
     pub fn drain_watermark(&mut self, cpu: usize) {
-        match &mut self.lanes {
-            None => self.drain(),
-            Some(lanes) => {
-                let i = cpu % self.kernel.rings.num_shards();
-                self.kernel.rings.drain_shard(i, |rec| lanes.route(i, rec));
+        if matches!(self.lanes, LaneDispatch::None) {
+            return self.drain();
+        }
+        let GappCore { kernel, lanes, .. } = self;
+        let i = cpu % kernel.rings.num_shards();
+        match lanes {
+            LaneDispatch::Inline(lanes) => {
+                kernel.rings.drain_shard(i, |rec| lanes.route(i, rec));
             }
+            LaneDispatch::Threaded(io) => {
+                let mut buf = io.take_buf();
+                kernel.rings.drain_shard_into(i, &mut buf);
+                io.feed(i, buf);
+            }
+            LaneDispatch::None => unreachable!(),
+        }
+    }
+
+    /// Threaded lanes, window close: run the barrier — collect one
+    /// [`stream::lanes::LaneWindow`] per shard from the workers, replay
+    /// the buffered activity-matrix records into [`GappCore::user`] in
+    /// global `(t, seq)` order on this (the driver) thread, and return
+    /// the shard partials for the merge tree.
+    ///
+    /// Panics unless [`GappCore::lanes`] is [`LaneDispatch::Threaded`].
+    pub fn close_lane_window(&mut self) -> Vec<stream::ShardPartial> {
+        let GappCore { user, lanes, .. } = self;
+        match lanes {
+            LaneDispatch::Threaded(io) => {
+                let mut windows = io.close_window();
+                stream::lanes::merge_matrix_into(&mut windows, user);
+                windows
+                    .into_iter()
+                    .map(|w| stream::ShardPartial {
+                        shard: w.shard,
+                        slices_in: w.slices_in,
+                        paths: w.paths,
+                    })
+                    .collect()
+            }
+            _ => panic!("close_lane_window requires threaded lanes (--lane-threads N > 1)"),
         }
     }
 
     /// Consumer-side memory estimate (user probe + shard lanes).
+    /// Threaded lanes report zero: their fold state lives in the
+    /// workers and every window closes it out, so by the time a report
+    /// reads this the lanes are empty either way.
     pub fn consumer_memory_bytes(&self) -> u64 {
         self.user.memory_bytes()
-            + self.lanes.as_ref().map_or(0, |l| l.memory_bytes())
+            + match &self.lanes {
+                LaneDispatch::None | LaneDispatch::Threaded(_) => 0,
+                LaneDispatch::Inline(l) => l.memory_bytes(),
+            }
     }
 }
 
@@ -176,11 +258,15 @@ impl GappSession {
     pub fn new(cfg: GappConfig, ncpu: usize, engine: AnalysisEngine) -> Result<GappSession> {
         let kernel = probes::KernelProbes::new(cfg.clone(), ncpu)?;
         let user = userspace::UserProbe::new(engine);
+        // `--lane-threads N > 1` starts Inline too: scoped workers can
+        // only exist inside a `thread::scope`, so the session driver
+        // swaps in `LaneDispatch::Threaded` for the duration of its
+        // scope (and back out before the scope joins).
         let lanes = match cfg.merge {
-            MergeStrategy::Serial => None,
-            MergeStrategy::Tree => {
-                Some(userspace::ShardLanes::new(kernel.rings.num_shards()))
-            }
+            MergeStrategy::Serial => LaneDispatch::None,
+            MergeStrategy::Tree => LaneDispatch::Inline(
+                userspace::ShardLanes::new(kernel.rings.num_shards()),
+            ),
         };
         Ok(GappSession {
             core: Rc::new(RefCell::new(GappCore {
@@ -213,9 +299,23 @@ impl GappSession {
         let ppt_start = Instant::now();
         let mut core = self.core.borrow_mut();
         core.drain();
-        let merged = if core.lanes.is_some() {
+        let merged = if core.lanes.is_threaded() {
+            // Window-close barrier: collect the workers' shard partials
+            // (the matrix substream replays into `user` inside) and
+            // combine them through the depth-parallel merge tree.
+            let parts = core.close_lane_window();
+            core.user.flush_batch();
+            let merged = stream::merge_tree_parallel(
+                parts.into_iter().map(|p| p.paths).collect(),
+                self.cfg.lane_threads,
+            );
+            core.user.rank_merged(&merged, self.cfg.top_n)
+        } else if core.lanes.is_inline() {
             let c = &mut *core;
-            let lanes = c.lanes.as_mut().unwrap();
+            let lanes = match &mut c.lanes {
+                LaneDispatch::Inline(l) => l,
+                _ => unreachable!(),
+            };
             // Matrix records reach the analysis in global capture
             // order; slices were already assembled shard-locally.
             lanes.feed_matrix_into(&mut c.user);

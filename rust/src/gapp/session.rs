@@ -29,8 +29,7 @@
 //! The deprecated free functions `gapp::profile` and
 //! `gapp::stream::run_live` are thin wrappers over this type.
 
-use std::cell::RefCell;
-use std::rc::Rc;
+use std::sync::{Arc, RwLock};
 use std::time::Instant;
 
 use anyhow::Result;
@@ -49,13 +48,15 @@ use super::sink::{
 };
 use super::stream::live::live_lines;
 use super::stream::{
-    merge_pair, merge_tree, AppRegistry, LiveConfig, RegistryProbe, ShardPartial,
-    ShardedConsumer, SpaceSaving, WindowAccumulator, WindowReport, WindowSummary,
+    lanes, merge_pair, merge_tree_parallel, AppRegistry, LiveConfig,
+    RegistryProbe, ShardPartial, ShardedConsumer, SpaceSaving,
+    WindowAccumulator, WindowReport, WindowSummary,
 };
 use super::symbolize::Symbolizer;
-use super::userspace::{PathAccumulator, SliceEntry};
+use super::userspace::{PathAccumulator, ShardLanes, SliceEntry};
 use super::{
-    build_report, GappConfig, GappCore, GappSession, MergeStrategy, Report, ReportCtx,
+    build_report, GappConfig, GappCore, GappSession, LaneDispatch,
+    MergeStrategy, Report, ReportCtx,
 };
 
 /// Everything a finished session hands back to library callers —
@@ -168,6 +169,16 @@ impl<'a> Session<'a> {
     /// way — `Serial` exists as the oracle and for A/B benching.
     pub fn merge(mut self, strategy: MergeStrategy) -> Self {
         self.gcfg.merge = strategy;
+        self
+    }
+
+    /// Lane worker threads (`GappConfig::lane_threads`): with N > 1
+    /// each ring shard's fold runs on a pool of N scoped OS threads
+    /// (tree strategy only — the config validator rejects dead-end
+    /// combinations). Output is byte-identical at every N; the default
+    /// of 1 keeps the folds inline on the driver thread.
+    pub fn lane_threads(mut self, n: usize) -> Self {
+        self.gcfg.lane_threads = n;
         self
     }
 
@@ -320,7 +331,53 @@ fn fingerprint_of(
         ring_capacity: gcfg.ring_capacity,
         drain_threshold: gcfg.drain_threshold as u64,
         dt: gcfg.dt,
+        lane_threads: gcfg.lane_threads as u64,
     }
+}
+
+/// Surface the benign fingerprint notes a resume check produced (knobs
+/// that may legally differ between the checkpointing and resuming
+/// sessions — today only `lane_threads`, whose value never reaches the
+/// aggregation output).
+fn report_fingerprint_notes(path: &str, notes: &[String]) {
+    for n in notes {
+        eprintln!("gapp: resuming {path:?}: note: {n}");
+    }
+}
+
+/// Run `body` with the session's lanes handed to scoped worker threads
+/// (`--lane-threads N > 1`); with one lane thread this is just `body()`
+/// — the inline dispatch the session was built with stays put, and no
+/// thread is spawned. The workers live exactly as long as `body`: a
+/// drop guard restores the inline dispatch (disconnecting the feed
+/// channels, which is what lets the workers exit and the scope join)
+/// even on an early error return or unwind.
+fn with_lane_scope<T>(
+    session: &GappSession,
+    lane_threads: usize,
+    registry: Option<Arc<RwLock<AppRegistry>>>,
+    body: impl FnOnce() -> Result<T>,
+) -> Result<T> {
+    if lane_threads <= 1 {
+        return body();
+    }
+    let nshards = session.core.borrow().kernel.rings.num_shards();
+    std::thread::scope(|s| {
+        let io = lanes::spawn_lane_workers(s, lane_threads, nshards, registry);
+        session.core.borrow_mut().lanes = LaneDispatch::Threaded(io);
+        struct Reset<'a>(&'a GappSession, usize);
+        impl Drop for Reset<'_> {
+            fn drop(&mut self) {
+                if let Ok(mut core) = self.0.core.try_borrow_mut() {
+                    core.lanes = LaneDispatch::Inline(ShardLanes::new(self.1));
+                }
+            }
+        }
+        let reset = Reset(session, nshards);
+        let out = body();
+        drop(reset);
+        out
+    })
 }
 
 /// The deterministic abort a fault plan's `kill_after_window` injects.
@@ -423,7 +480,7 @@ fn simulate_window(
     kernel: &mut Kernel,
     session: &GappSession,
     consumer: &mut ShardedConsumer,
-    registry: &Rc<RefCell<AppRegistry>>,
+    registry: &Arc<RwLock<AppRegistry>>,
     wacc: &mut WindowAccumulator,
     scratch: &mut Vec<SliceEntry>,
     strategy: MergeStrategy,
@@ -473,22 +530,26 @@ fn simulate_window(
             MergeStrategy::Serial => {
                 scratch.clear();
                 core.user.drain_slices_into(scratch);
-                let reg = registry.borrow();
+                let reg = registry.read().unwrap();
                 let app_of = reg.tagger();
                 for s in scratch.iter() {
                     wacc.add_slice(s, app_of(s.pid));
                 }
             }
             // Tree: each shard's folder closes its partial per epoch;
-            // the window-close merge combines them.
-            MergeStrategy::Tree => {
+            // the window-close merge combines them. Threaded lanes fold
+            // eagerly in their workers as the drained batches arrive —
+            // the partials are collected once, at the window-close
+            // barrier below, not per epoch.
+            MergeStrategy::Tree if !core.lanes.is_threaded() => {
                 let parts = {
-                    let reg = registry.borrow();
+                    let reg = registry.read().unwrap();
                     consumer.fold_partials(&mut core, reg.tagger())
                 };
                 slices_in += parts.iter().map(|p| p.slices_in).sum::<u64>();
                 parts_acc.extend(parts);
             }
+            MergeStrategy::Tree => {}
         }
         if degrade && !widened && !done && core.hazard.window_drains > 0 {
             widened = true;
@@ -497,6 +558,14 @@ fn simulate_window(
         break (end_ns, done);
     };
     let mut core = session.core.borrow_mut();
+    if core.lanes.is_threaded() {
+        // Window-close barrier: one partial per shard comes back from
+        // the lane workers, and the buffered activity-matrix records
+        // replay into the user probe in global capture order.
+        let parts = core.close_lane_window();
+        slices_in = parts.iter().map(|p| p.slices_in).sum();
+        parts_acc = parts;
+    }
     let degraded_drains = core.hazard.window_drains;
     core.hazard.window_drains = 0;
     if strategy == MergeStrategy::Serial {
@@ -552,6 +621,7 @@ fn run_batch(
     let session = GappSession::new(gcfg.clone(), kcfg.cpus, engine)?;
     let shards = gcfg.shards.unwrap_or(kcfg.cpus);
     let degrade = gcfg.on_overflow == OverflowPolicy::Degrade;
+    let lane_threads = gcfg.lane_threads;
     // A batch run closes no windows, so its only checkpoint is the
     // start-of-session one (epoch 0) and resuming is a
     // fingerprint-checked rerun from zero — the degenerate case of the
@@ -562,7 +632,8 @@ fn run_batch(
         let stored = cp.fingerprint.as_ref().ok_or_else(|| {
             anyhow::anyhow!("checkpoint {path:?} carries no fingerprint")
         })?;
-        stored.check(&fp).map_err(anyhow::Error::msg)?;
+        let notes = stored.check(&fp).map_err(anyhow::Error::msg)?;
+        report_fingerprint_notes(path, &notes);
         anyhow::ensure!(
             cp.epochs == 0 && cp.summaries.is_empty(),
             "checkpoint {path:?} holds {} completed window(s), but a batch \
@@ -591,35 +662,39 @@ fn run_batch(
             return Err(kill_error(0));
         }
     }
-    let mut kernel = Kernel::new(kcfg);
-    kernel.attach_probe(session.probe());
-    app.spawn_into(&mut kernel);
-    {
-        // The whole batch run counts as epoch 1 for fault scheduling.
-        let mut core = session.core.borrow_mut();
-        arm_hazard(&mut core, &dur.plan, degrade, 1);
-        inject_bursts(&mut core, &dur.plan, 1, 0);
-    }
-    let end = kernel.run()?;
-    let mut report = session.finish(app, &kernel, end);
-    report.degraded_drains = session.core.borrow().hazard.total_drains;
-    emit(
-        sinks,
-        &ReportEvent::Final(FinalEvent {
-            report: &report,
-            windows: &[],
-            sketch_top: &[],
-            sketch_lines: &[],
-        }),
-    )?;
-    emit(sinks, &ReportEvent::SessionEnd { runtime_ns: end })?;
-    Ok(SessionOutput {
-        report,
-        kernel,
-        runtime_ns: end,
-        windows: Vec::new(),
-        sketch_top: Vec::new(),
-        sketch_lines: Vec::new(),
+    // Batch runs have no registry: every path belongs to the one app,
+    // so threaded lane workers attribute everything to app 0.
+    with_lane_scope(&session, lane_threads, None, || {
+        let mut kernel = Kernel::new(kcfg);
+        kernel.attach_probe(session.probe());
+        app.spawn_into(&mut kernel);
+        {
+            // The whole batch run counts as epoch 1 for fault scheduling.
+            let mut core = session.core.borrow_mut();
+            arm_hazard(&mut core, &dur.plan, degrade, 1);
+            inject_bursts(&mut core, &dur.plan, 1, 0);
+        }
+        let end = kernel.run()?;
+        let mut report = session.finish(app, &kernel, end);
+        report.degraded_drains = session.core.borrow().hazard.total_drains;
+        emit(
+            sinks,
+            &ReportEvent::Final(FinalEvent {
+                report: &report,
+                windows: &[],
+                sketch_top: &[],
+                sketch_lines: &[],
+            }),
+        )?;
+        emit(sinks, &ReportEvent::SessionEnd { runtime_ns: end })?;
+        Ok(SessionOutput {
+            report,
+            kernel,
+            runtime_ns: end,
+            windows: Vec::new(),
+            sketch_top: Vec::new(),
+            sketch_lines: Vec::new(),
+        })
     })
 }
 
@@ -641,21 +716,25 @@ fn run_windowed(
     let stack_lru = gcfg.stack_lru;
     let strategy = gcfg.merge;
     let degrade = gcfg.on_overflow == OverflowPolicy::Degrade;
+    let lane_threads = gcfg.lane_threads;
     let shards = gcfg.shards.unwrap_or(kcfg.cpus);
     let session = GappSession::new(gcfg.clone(), kcfg.cpus, engine)?;
     let mut kernel = Kernel::new(kcfg);
     kernel.attach_probe(session.probe());
     // System-wide attribution: a zero-cost probe tags every task with
     // its application (children inherit), so attaching it cannot
-    // perturb the simulated timeline relative to a batch run.
-    let registry = Rc::new(RefCell::new(AppRegistry::new()));
+    // perturb the simulated timeline relative to a batch run. The
+    // registry lives behind an `Arc<RwLock>` so threaded lane workers
+    // can read the (append-only) pid → app table while the driver's
+    // kernel probe extends it.
+    let registry = Arc::new(RwLock::new(AppRegistry::new()));
     kernel.attach_probe(Box::new(RegistryProbe::new(registry.clone())));
     for app in apps {
-        registry.borrow_mut().begin_app(&app.name);
+        registry.write().unwrap().begin_app(&app.name);
         app.spawn_into(&mut kernel);
-        registry.borrow_mut().end_spawn();
+        registry.write().unwrap().end_spawn();
     }
-    let names: Vec<String> = registry.borrow().names().to_vec();
+    let names: Vec<String> = registry.read().unwrap().names().to_vec();
     let fp = fingerprint_of("live", &gcfg, shards, lcfg.window_ns, &names);
     // Load and fingerprint-check the resume checkpoint before
     // announcing the session: a bad resume fails before events flow.
@@ -666,7 +745,8 @@ fn run_windowed(
             let stored = cp.fingerprint.as_ref().ok_or_else(|| {
                 anyhow::anyhow!("checkpoint {path:?} carries no fingerprint")
             })?;
-            stored.check(&fp).map_err(anyhow::Error::msg)?;
+            let notes = stored.check(&fp).map_err(anyhow::Error::msg)?;
+            report_fingerprint_notes(path, &notes);
             anyhow::ensure!(
                 cp.sketch_cap == lcfg.sketch_entries,
                 "checkpoint {path:?} holds a sketch of capacity {} but this \
@@ -692,6 +772,38 @@ fn run_windowed(
         config: gcfg,
     };
     emit(sinks, &ReportEvent::SessionStart(&info))?;
+    // Everything that drains the rings — resume replay, the window
+    // loop, the final report — runs inside the lane scope, so threaded
+    // sessions have their workers up for the whole drive.
+    with_lane_scope(&session, lane_threads, Some(registry.clone()), || {
+        run_windowed_inner(
+            kernel, &session, &registry, &lcfg, apps, sinks, dur, names,
+            &fp, resume, top_n, stack_lru, strategy, degrade, lane_threads,
+        )
+    })
+}
+
+/// The windowed driver body, run inside the lane scope (lane workers
+/// are live iff `--lane-threads N > 1`): resume replay, the window
+/// loop, and the final report built from the merged window snapshots.
+#[allow(clippy::too_many_arguments)]
+fn run_windowed_inner(
+    mut kernel: Kernel,
+    session: &GappSession,
+    registry: &Arc<RwLock<AppRegistry>>,
+    lcfg: &LiveConfig,
+    apps: &[&App],
+    sinks: &mut [Box<dyn ReportSink + '_>],
+    dur: &Durability,
+    names: Vec<String>,
+    fp: &Fingerprint,
+    resume: Option<Checkpoint>,
+    top_n: usize,
+    stack_lru: bool,
+    strategy: MergeStrategy,
+    degrade: bool,
+    lane_threads: usize,
+) -> Result<SessionOutput> {
     let multi_app = apps.len() > 1;
     let mut syms: Vec<Symbolizer<'_>> = apps
         .iter()
@@ -730,7 +842,7 @@ fn run_windowed(
         if let Some(path) = &dur.checkpoint_path {
             build_checkpoint(
                 0,
-                &fp,
+                fp,
                 &[],
                 &[],
                 0,
@@ -764,7 +876,7 @@ fn run_windowed(
                 &mut kernel,
                 &session,
                 &mut consumer,
-                &registry,
+                registry,
                 &mut wacc,
                 &mut scratch,
                 strategy,
@@ -842,7 +954,7 @@ fn run_windowed(
                 &mut kernel,
                 &session,
                 &mut consumer,
-                &registry,
+                registry,
                 &mut wacc,
                 &mut scratch,
                 strategy,
@@ -879,17 +991,19 @@ fn run_windowed(
                             // path clones are paid only on this opt-in
                             // transport path.
                             pending_partials = Some(parts);
-                            merge_tree(
+                            merge_tree_parallel(
                                 pending_partials
                                     .as_ref()
                                     .unwrap()
                                     .iter()
                                     .map(|p| p.paths.clone())
                                     .collect(),
+                                lane_threads,
                             )
                         } else {
-                            merge_tree(
+                            merge_tree_parallel(
                                 parts.into_iter().map(|p| p.paths).collect(),
+                                lane_threads,
                             )
                         };
                         (wo.slices_in, merged)
@@ -992,7 +1106,7 @@ fn run_windowed(
                     let core = session.core.borrow();
                     build_checkpoint(
                         epoch,
-                        &fp,
+                        fp,
                         &summaries,
                         &window_drops,
                         degraded_windows,
@@ -1095,6 +1209,9 @@ fn run_windowed(
 
 #[cfg(test)]
 mod tests {
+    use std::cell::RefCell;
+    use std::rc::Rc;
+
     use super::*;
     use crate::gapp::sink::FnSink;
     use crate::workload::apps;
@@ -1207,29 +1324,31 @@ mod tests {
     }
 
     #[test]
-    fn serial_and_tree_sessions_agree_on_the_report() {
-        let run_with = |strategy: MergeStrategy| {
+    fn serial_and_tree_sessions_agree_on_the_report_at_every_thread_count() {
+        let run_with = |strategy: MergeStrategy, lane_threads: usize| {
             let app = apps::canneal(8, 5);
             Session::builder(AnalysisEngine::native())
                 .app(&app)
                 .window_us(2_000)
                 .shards(4)
                 .merge(strategy)
+                .lane_threads(lane_threads)
                 .run()
                 .unwrap()
         };
-        let serial = run_with(MergeStrategy::Serial);
-        let tree = run_with(MergeStrategy::Tree);
-        assert_eq!(serial.runtime_ns, tree.runtime_ns);
-        assert_eq!(serial.windows.len(), tree.windows.len());
-        assert_eq!(serial.sketch_top, tree.sketch_top);
-        let mut a = serial.report;
-        let mut b = tree.report;
-        a.ppt_seconds = 0.0;
-        b.ppt_seconds = 0.0;
-        a.memory_bytes = 0;
-        b.memory_bytes = 0;
-        assert_eq!(a.to_string(), b.to_string());
+        let normalize = |out: SessionOutput| {
+            let mut r = out.report;
+            r.ppt_seconds = 0.0;
+            r.memory_bytes = 0;
+            (out.runtime_ns, out.windows, out.sketch_top, r.to_string())
+        };
+        let serial = normalize(run_with(MergeStrategy::Serial, 1));
+        // Threaded lanes move the folds onto worker threads; the
+        // report must not move by a byte for any worker count.
+        for lane_threads in [1, 2, 4, 7] {
+            let tree = normalize(run_with(MergeStrategy::Tree, lane_threads));
+            assert_eq!(serial, tree, "lane_threads={lane_threads}");
+        }
     }
 
     #[test]

@@ -62,6 +62,7 @@ pub fn config_json(c: &GappConfig) -> Json {
         ("format", Json::str(c.format.name())),
         ("output", opt_str(&c.output)),
         ("on_overflow", Json::str(c.on_overflow.name())),
+        ("lane_threads", Json::usize(c.lane_threads)),
     ])
 }
 

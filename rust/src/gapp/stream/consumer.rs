@@ -23,7 +23,7 @@ use crate::ebpf::ringbuf::{EpochDelta, RingCursor};
 use crate::simkernel::Pid;
 
 use super::super::userspace::MergedPath;
-use super::super::GappCore;
+use super::super::{GappCore, LaneDispatch};
 use super::window::WindowAccumulator;
 
 /// Per-epoch drain statistics (one entry per window in the live report).
@@ -97,9 +97,16 @@ impl ShardedConsumer {
     pub fn drain_epoch(&mut self, core: &mut GappCore) -> EpochStats {
         debug_assert_eq!(self.cursors.len(), core.kernel.rings.num_shards());
         core.drain();
-        if core.lanes.is_some() {
-            let c = &mut *core;
-            c.lanes.as_mut().unwrap().feed_matrix_into(&mut c.user);
+        {
+            // Inline tree only: threaded lanes buffer their matrix
+            // records worker-side and the driver replays them at the
+            // window-close barrier instead (`close_lane_window`) —
+            // batch grouping depends only on record order, which the
+            // deferred replay preserves.
+            let GappCore { lanes, user, .. } = &mut *core;
+            if let LaneDispatch::Inline(l) = lanes {
+                l.feed_matrix_into(user);
+            }
         }
         let mut total = EpochDelta::default();
         let mut per_shard = Vec::with_capacity(self.cursors.len());
@@ -132,10 +139,14 @@ impl ShardedConsumer {
         core: &mut GappCore,
         app_of: impl Fn(Pid) -> u16,
     ) -> Vec<ShardPartial> {
-        let lanes = core
-            .lanes
-            .as_mut()
-            .expect("fold_partials requires MergeStrategy::Tree lanes");
+        let lanes = match &mut core.lanes {
+            LaneDispatch::Inline(l) => l,
+            _ => panic!(
+                "fold_partials requires inline MergeStrategy::Tree lanes \
+                 (serial cores have none; threaded lanes fold in their \
+                 workers and close via GappCore::close_lane_window)"
+            ),
+        };
         debug_assert_eq!(lanes.len(), self.waccs.len());
         let mut out = Vec::with_capacity(self.waccs.len());
         for (i, lane) in lanes.iter_mut().enumerate() {
@@ -173,10 +184,10 @@ mod tests {
             ..Default::default()
         };
         let lanes = match merge {
-            MergeStrategy::Serial => None,
-            MergeStrategy::Tree => {
-                Some(crate::gapp::userspace::ShardLanes::new(shards))
-            }
+            MergeStrategy::Serial => LaneDispatch::None,
+            MergeStrategy::Tree => LaneDispatch::Inline(
+                crate::gapp::userspace::ShardLanes::new(shards),
+            ),
         };
         GappCore {
             kernel: crate::gapp::probes::KernelProbes::new(cfg, 2).unwrap(),

@@ -1,0 +1,463 @@
+//! Parallel lane workers — the tree strategy's shard folders on real OS
+//! threads (`--lane-threads N`, N > 1).
+//!
+//! The ownership split mirrors a real GAPP deployment, where one reader
+//! thread per `PERF_EVENT_ARRAY` buffer consumes concurrently with the
+//! application: the *driver* thread owns the simulated kernel, the ring
+//! shards, the drop cursors and the sinks; each *lane worker* owns the
+//! consumer-side fold state of the shards assigned to it (a
+//! [`SliceAssembler`] + [`WindowAccumulator`] per lane — both
+//! compile-asserted `Send` below). The hand-off is an SPSC channel per
+//! worker: the driver drains a shard into a `Vec<Stamped<Record>>` and
+//! sends it as one [`LaneMsg::Feed`]; drained batches are recycled back
+//! over a return channel so the steady state allocates nothing.
+//!
+//! Workers fold *eagerly* on every feed. That is byte-equivalent to the
+//! inline path's fold-at-window-close because each lane's records arrive
+//! in shard FIFO (= ascending `(t, seq)`) order across feeds, every
+//! window aggregate is associative, and app attribution is immutable
+//! once assigned (a pid is tagged at `task_newtask`, before any of its
+//! slices can be drained — so a worker's registry read never races the
+//! write that matters to it).
+//!
+//! The barrier protocol is the window close: the driver sends one
+//! [`LaneMsg::Close`] to every worker, and each replies with one
+//! [`LaneWindow`] per owned lane — the shard's partial merge snapshot
+//! plus its buffered activity-matrix records. Matrix records
+//! (`Interval`/`SlotAssign`/`SlotFree`) stay on the driver thread for
+//! the same reason the inline tree re-serializes them: thread slots are
+//! a *global* resource recycled across CPUs and the analysis batches f32
+//! rows in record-sequence order, so this substream must replay in
+//! global `(t, seq)` order through the single [`UserProbe`] —
+//! [`merge_matrix_into`] runs that k-way merge at window close, off the
+//! hot path. Everything thread-count-dependent thus happens *between*
+//! windows; within one, lanes are data-independent, which is what makes
+//! the output byte-identical for every `N`.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, RwLock};
+use std::thread;
+
+use crate::ebpf::ringbuf::Stamped;
+
+use super::super::records::Record;
+use super::super::userspace::{
+    MergedPath, ShardLane, SliceAssembler, UserProbe,
+};
+use super::multi::AppRegistry;
+use super::window::WindowAccumulator;
+
+// The whole point of the refactor: everything a lane worker owns must
+// cross a thread boundary. Checked here, at compile time, so a future
+// `Rc`/`RefCell` sneaking into the fold state fails the build instead
+// of the spawn.
+const fn assert_send<T: Send>() {}
+const _: () = {
+    assert_send::<SliceAssembler>();
+    assert_send::<WindowAccumulator>();
+    assert_send::<ShardLane>();
+    assert_send::<LaneMsg>();
+    assert_send::<LaneWindow>();
+};
+
+/// Driver → worker hand-off.
+pub enum LaneMsg {
+    /// One shard's drained records, in shard FIFO order. `lane` is the
+    /// ring shard index (the worker owning `lane % nworkers` receives
+    /// it).
+    Feed {
+        lane: usize,
+        recs: Vec<Stamped<Record>>,
+    },
+    /// Window-close barrier: reply with one [`LaneWindow`] per owned
+    /// lane, then start accumulating the next window.
+    Close,
+}
+
+/// One shard's window close, produced by a lane worker: the shard-local
+/// partial snapshot plus the matrix records the driver must re-merge.
+pub struct LaneWindow {
+    /// Ring shard this window covers.
+    pub shard: usize,
+    /// Slices folded this window (including ones excluded from the
+    /// merge for dropped stack ids).
+    pub slices_in: u64,
+    /// The shard-local merge snapshot (ascending capture stamp — each
+    /// lane's fold order is its shard's FIFO order).
+    pub paths: Vec<MergedPath>,
+    /// Buffered activity-matrix records in shard FIFO (= ascending
+    /// `(t, seq)`) order, awaiting the driver's global re-merge.
+    pub matrix: Vec<Stamped<Record>>,
+}
+
+/// The driver-side handle to a set of lane workers: per-worker feed
+/// senders, per-worker window receivers, and the buffer-recycle return
+/// channel. Holds no thread handles — the workers are scoped
+/// (`std::thread::scope`) and join when every sender in this struct is
+/// dropped, which is why the session driver resets the core's dispatch
+/// *before* its scope exits.
+pub struct LaneIo {
+    txs: Vec<Sender<LaneMsg>>,
+    rxs: Vec<Receiver<Vec<LaneWindow>>>,
+    recycle: Receiver<Vec<Stamped<Record>>>,
+    /// Locally-pooled empty batches (skipped sends land here).
+    pool: Vec<Vec<Stamped<Record>>>,
+    nworkers: usize,
+    nshards: usize,
+}
+
+impl LaneIo {
+    pub fn num_shards(&self) -> usize {
+        self.nshards
+    }
+
+    pub fn num_workers(&self) -> usize {
+        self.nworkers
+    }
+
+    /// An empty batch buffer for the next shard drain — recycled from a
+    /// worker when one has come back, fresh otherwise.
+    pub fn take_buf(&mut self) -> Vec<Stamped<Record>> {
+        if let Some(b) = self.pool.pop() {
+            return b;
+        }
+        self.recycle.try_recv().unwrap_or_default()
+    }
+
+    /// Hand one shard's drained batch to its lane worker. Empty batches
+    /// are pooled instead of sent (a quiet shard costs no message).
+    pub fn feed(&mut self, lane: usize, recs: Vec<Stamped<Record>>) {
+        debug_assert!(lane < self.nshards);
+        if recs.is_empty() {
+            self.pool.push(recs);
+            return;
+        }
+        self.txs[lane % self.nworkers]
+            .send(LaneMsg::Feed { lane, recs })
+            .expect("lane worker exited before its window closed");
+    }
+
+    /// The window-close barrier: ask every worker to close its lanes
+    /// and collect one [`LaneWindow`] per ring shard, in shard order.
+    pub fn close_window(&mut self) -> Vec<LaneWindow> {
+        for tx in &self.txs {
+            tx.send(LaneMsg::Close)
+                .expect("lane worker exited before its window closed");
+        }
+        let mut out = Vec::with_capacity(self.nshards);
+        for rx in &self.rxs {
+            out.extend(
+                rx.recv()
+                    .expect("lane worker died before replying to a window close"),
+            );
+        }
+        out.sort_by_key(|w| w.shard);
+        out
+    }
+}
+
+/// Spawn `min(lane_threads, nshards)` scoped lane workers; worker `w`
+/// owns every shard `i` with `i % nworkers == w`. The returned
+/// [`LaneIo`] is the only link to them: dropping it disconnects the
+/// feed channels and the workers exit, letting the enclosing
+/// `thread::scope` join.
+pub fn spawn_lane_workers<'scope>(
+    scope: &'scope thread::Scope<'scope, '_>,
+    lane_threads: usize,
+    nshards: usize,
+    registry: Option<Arc<RwLock<AppRegistry>>>,
+) -> LaneIo {
+    let nworkers = lane_threads.min(nshards).max(1);
+    let (recycle_tx, recycle_rx) = channel();
+    let mut txs = Vec::with_capacity(nworkers);
+    let mut rxs = Vec::with_capacity(nworkers);
+    for w in 0..nworkers {
+        let (tx_msg, rx_msg) = channel::<LaneMsg>();
+        let (tx_win, rx_win) = channel::<Vec<LaneWindow>>();
+        let shards: Vec<usize> = (w..nshards).step_by(nworkers).collect();
+        let reg = registry.clone();
+        let recycle = recycle_tx.clone();
+        scope.spawn(move || worker_loop(shards, rx_msg, tx_win, recycle, reg));
+        txs.push(tx_msg);
+        rxs.push(rx_win);
+    }
+    LaneIo {
+        txs,
+        rxs,
+        recycle: recycle_rx,
+        pool: Vec::new(),
+        nworkers,
+        nshards,
+    }
+}
+
+/// One lane's worker-owned fold state (the threaded analogue of
+/// [`ShardLane`] + the per-shard [`WindowAccumulator`] the inline
+/// consumer keeps).
+struct WorkerLane {
+    shard: usize,
+    asm: SliceAssembler,
+    wacc: WindowAccumulator,
+    matrix: Vec<Stamped<Record>>,
+}
+
+fn worker_loop(
+    shards: Vec<usize>,
+    rx: Receiver<LaneMsg>,
+    tx: Sender<Vec<LaneWindow>>,
+    recycle: Sender<Vec<Stamped<Record>>>,
+    registry: Option<Arc<RwLock<AppRegistry>>>,
+) {
+    let mut lanes: Vec<WorkerLane> = shards
+        .into_iter()
+        .map(|shard| WorkerLane {
+            shard,
+            asm: SliceAssembler::new(),
+            wacc: WindowAccumulator::new(),
+            matrix: Vec::new(),
+        })
+        .collect();
+    // Exiting on a disconnected feed channel is the shutdown protocol:
+    // the driver drops its LaneIo, every Sender dies, recv() errors.
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            LaneMsg::Feed { lane, mut recs } => {
+                let l = lanes
+                    .iter_mut()
+                    .find(|l| l.shard == lane)
+                    .expect("batch fed to a lane this worker does not own");
+                let WorkerLane {
+                    asm, wacc, matrix, ..
+                } = l;
+                for r in &recs {
+                    if !asm.consume(&r.rec) {
+                        matrix.push(*r);
+                    }
+                }
+                recs.clear();
+                // Driver may already be gone mid-teardown; the buffer
+                // just isn't recycled then.
+                let _ = recycle.send(recs);
+                // Eager fold: one registry read lock per batch, one
+                // lookup per slice — same sequence, same attribution as
+                // the inline fold at window close.
+                let reg = registry.as_ref().map(|r| r.read().unwrap());
+                for s in asm.slices.drain(..) {
+                    let app = reg.as_ref().map_or(0, |g| g.app_of(s.pid));
+                    wacc.add_slice(&s, app);
+                }
+            }
+            LaneMsg::Close => {
+                let mut out = Vec::with_capacity(lanes.len());
+                for l in lanes.iter_mut() {
+                    let slices_in = l.wacc.slices_in;
+                    out.push(LaneWindow {
+                        shard: l.shard,
+                        slices_in,
+                        paths: l.wacc.snapshot(),
+                        matrix: std::mem::take(&mut l.matrix),
+                    });
+                }
+                if tx.send(out).is_err() {
+                    return;
+                }
+            }
+        }
+    }
+}
+
+/// Replay every lane window's buffered activity-matrix records into
+/// `user` in global `(t, seq)` order — the driver-thread half of the
+/// window-close barrier, mirroring the inline
+/// [`super::super::userspace::ShardLanes::feed_matrix_into`]. Each
+/// window's buffer is already ascending (shard FIFO order), so a k-way
+/// merge over the heads suffices; the heap holds at most one entry per
+/// shard.
+pub fn merge_matrix_into(windows: &mut [LaneWindow], user: &mut UserProbe) {
+    use std::cmp::Reverse;
+    if windows.len() == 1 {
+        for r in windows[0].matrix.drain(..) {
+            user.consume(r.rec);
+        }
+        return;
+    }
+    let mut next = vec![0usize; windows.len()];
+    let mut heads: std::collections::BinaryHeap<Reverse<(u64, u64, usize)>> =
+        std::collections::BinaryHeap::with_capacity(windows.len());
+    for (i, w) in windows.iter().enumerate() {
+        if let Some(r) = w.matrix.first() {
+            heads.push(Reverse((r.t, r.seq, i)));
+        }
+    }
+    while let Some(Reverse((_, _, i))) = heads.pop() {
+        let rec = windows[i].matrix[next[i]];
+        next[i] += 1;
+        user.consume(rec.rec);
+        if let Some(r) = windows[i].matrix.get(next[i]) {
+            heads.push(Reverse((r.t, r.seq, i)));
+        }
+    }
+    for w in windows.iter_mut() {
+        w.matrix.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simkernel::WaitKind;
+
+    fn end(ts_id: u64, pid: u32, stack_id: u32) -> Record {
+        Record::SliceEnd {
+            ts_id,
+            pid,
+            cm_ns: 50.0 + ts_id as f64,
+            threads_av: 1.0,
+            ip: 0x10 * ts_id,
+            stack_id,
+            stack_top: 0,
+            wait: WaitKind::Futex,
+            woken_by: 0,
+        }
+    }
+
+    fn stamped(t: u64, seq: u64, rec: Record) -> Stamped<Record> {
+        Stamped { t, seq, rec }
+    }
+
+    /// Feed the same per-shard record streams to (a) scoped workers at
+    /// several thread counts and (b) an inline shard-local fold; the
+    /// per-shard window snapshots must agree byte for byte, and matrix
+    /// records must come back in shard FIFO order for the re-merge.
+    #[test]
+    fn workers_fold_byte_identically_to_the_inline_lanes() {
+        // Two shards; each stream is its own FIFO. Slice lifecycles are
+        // shard-affine; matrix records interleave globally.
+        let shard0 = vec![
+            stamped(10, 1, Record::Sample { pid: 1, ip: 0xA }),
+            stamped(11, 3, Record::SlotAssign { pid: 1, slot: 0 }),
+            stamped(12, 5, end(1, 1, 9)),
+            stamped(14, 7, Record::Sample { pid: 1, ip: 0xB }),
+            stamped(15, 9, end(3, 1, 9)),
+        ];
+        let shard1 = vec![
+            stamped(10, 2, Record::Sample { pid: 2, ip: 0xC }),
+            stamped(11, 4, end(2, 2, 7)),
+            stamped(13, 6, Record::SlotFree { pid: 1, slot: 0 }),
+        ];
+
+        // Inline oracle: shard-local assemblers + accumulators.
+        let mut oracle: Vec<(u64, Vec<MergedPath>)> = Vec::new();
+        for recs in [&shard0, &shard1] {
+            let mut asm = SliceAssembler::new();
+            let mut wacc = WindowAccumulator::new();
+            for r in recs.iter() {
+                asm.consume(&r.rec);
+            }
+            for s in asm.slices.drain(..) {
+                wacc.add_slice(&s, 0);
+            }
+            oracle.push((wacc.slices_in, wacc.snapshot()));
+        }
+
+        for threads in [1usize, 2, 4] {
+            let windows = std::thread::scope(|s| {
+                let mut io = spawn_lane_workers(s, threads, 2, None);
+                assert_eq!(io.num_workers(), threads.min(2));
+                // Split shard 0 across two feeds: a slice may span the
+                // hand-off boundary (sample in one batch, end in the
+                // next) and must still pair.
+                io.feed(0, shard0[..3].to_vec());
+                io.feed(1, shard1.clone());
+                io.feed(0, shard0[3..].to_vec());
+                io.feed(1, Vec::new()); // quiet drain: no message
+                io.close_window()
+            });
+            assert_eq!(windows.len(), 2);
+            for (w, (slices_in, paths)) in windows.iter().zip(&oracle) {
+                assert_eq!(w.slices_in, *slices_in, "threads={threads}");
+                assert_eq!(w.paths.len(), paths.len());
+                for (a, b) in w.paths.iter().zip(paths) {
+                    assert_eq!(a.stack_id, b.stack_id);
+                    assert_eq!(a.cm_fs, b.cm_fs);
+                    assert_eq!(a.first_seen, b.first_seen);
+                    assert_eq!(a.addr_freq, b.addr_freq);
+                }
+            }
+            // Matrix records survive in shard FIFO order, slices don't
+            // leak into the matrix buffers.
+            assert_eq!(windows[0].matrix.len(), 1);
+            assert_eq!(windows[0].matrix[0].seq, 3);
+            assert_eq!(windows[1].matrix.len(), 1);
+            assert_eq!(windows[1].matrix[0].seq, 6);
+        }
+    }
+
+    /// Closing again after a close starts a fresh window (accumulators
+    /// reset, matrix buffers drained), and the registry attributes apps
+    /// through the shared lock.
+    #[test]
+    fn close_resets_for_the_next_window_and_registry_attributes() {
+        let reg = Arc::new(RwLock::new(AppRegistry::new()));
+        {
+            let mut r = reg.write().unwrap();
+            r.begin_app("a");
+            r.on_task_new(1, 0);
+            r.end_spawn();
+            r.begin_app("b");
+            r.on_task_new(2, 0);
+            r.end_spawn();
+        }
+        std::thread::scope(|s| {
+            let mut io = spawn_lane_workers(s, 2, 2, Some(reg.clone()));
+            io.feed(0, vec![stamped(10, 1, end(1, 1, 3))]);
+            io.feed(1, vec![stamped(11, 2, end(2, 2, 4))]);
+            let w1 = io.close_window();
+            assert_eq!(w1[0].paths[0].app_slices[&0], 1);
+            assert_eq!(w1[1].paths[0].app_slices[&1], 1);
+            let w2 = io.close_window();
+            assert_eq!(w2.len(), 2);
+            assert!(w2.iter().all(|w| w.slices_in == 0));
+            assert!(w2.iter().all(|w| w.paths.is_empty() && w.matrix.is_empty()));
+        });
+    }
+
+    #[test]
+    fn matrix_re_merge_replays_global_capture_order() {
+        use crate::gapp::records::{mask_set, SlotMask};
+        use crate::runtime::AnalysisEngine;
+        let mut mask: SlotMask = [0; 2];
+        mask_set(&mut mask, 0);
+        // Slot 0 owned by pid 1 (shard 0), recycled to pid 2 via shard
+        // 1 — replay must interleave by (t, seq) or the second interval
+        // charges the wrong pid.
+        let mut windows = vec![
+            LaneWindow {
+                shard: 0,
+                slices_in: 0,
+                paths: Vec::new(),
+                matrix: vec![
+                    stamped(1, 1, Record::SlotAssign { pid: 1, slot: 0 }),
+                    stamped(2, 2, Record::Interval { dur: 500, mask }),
+                    stamped(5, 5, Record::Interval { dur: 300, mask }),
+                ],
+            },
+            LaneWindow {
+                shard: 1,
+                slices_in: 0,
+                paths: Vec::new(),
+                matrix: vec![
+                    stamped(3, 3, Record::SlotFree { pid: 1, slot: 0 }),
+                    stamped(4, 4, Record::SlotAssign { pid: 2, slot: 0 }),
+                ],
+            },
+        ];
+        let mut user = UserProbe::new(AnalysisEngine::native());
+        merge_matrix_into(&mut windows, &mut user);
+        user.flush_batch();
+        assert_eq!(user.records_processed, 5);
+        assert!((user.totals.get(1).unwrap().cm_ns - 500.0).abs() < 1e-3);
+        assert!((user.totals.get(2).unwrap().cm_ns - 300.0).abs() < 1e-3);
+        assert!(windows.iter().all(|w| w.matrix.is_empty()));
+    }
+}

@@ -36,7 +36,11 @@
 //!   still re-merged by capture stamp, but only at window close, off
 //!   the hot path. Output order reconciles through each merged path's
 //!   `first_seen` capture stamp, which reproduces the serial
-//!   first-seen order exactly.
+//!   first-seen order exactly. With `--lane-threads N` (N > 1) the
+//!   shard folds move onto real OS threads ([`lanes`]): the driver
+//!   hands each shard's drained records to its lane worker over an
+//!   SPSC channel and collects one partial per shard at the
+//!   window-close barrier — still byte-identical output at every N.
 //! * [`topk`] — a bounded space-saving sketch for cumulative top-K over
 //!   unbounded runs in O(K) memory.
 //! * [`multi`] — system-wide mode: several applications share one
@@ -52,6 +56,7 @@
 //! callback-style wrapper over that driver.
 
 pub mod consumer;
+pub mod lanes;
 pub mod live;
 pub mod multi;
 pub mod partials;
@@ -59,11 +64,13 @@ pub mod topk;
 pub mod window;
 
 pub use consumer::{EpochStats, ShardPartial, ShardedConsumer};
+pub use lanes::{spawn_lane_workers, LaneIo, LaneMsg, LaneWindow};
 pub use live::{LiveLine, WindowReport};
 pub use multi::{AppRegistry, RegistryProbe};
 pub use topk::SpaceSaving;
 pub use window::{
-    merge_pair, merge_snapshots, merge_tree, sort_canonical, WindowAccumulator,
+    merge_pair, merge_snapshots, merge_tree, merge_tree_parallel,
+    sort_canonical, WindowAccumulator,
 };
 
 use anyhow::Result;

@@ -8,8 +8,7 @@
 //! so whole process trees attribute correctly without any cooperation
 //! from the workload.
 
-use std::cell::RefCell;
-use std::rc::Rc;
+use std::sync::{Arc, RwLock};
 
 use crate::simkernel::{Event, Pid, Probe};
 use crate::util::PidMap;
@@ -87,12 +86,18 @@ impl AppRegistry {
 /// Costs nothing on the simulated timeline, so attaching it cannot
 /// perturb a run relative to a single-app batch profile (the streaming
 /// golden tests depend on that).
+///
+/// The registry is shared as `Arc<RwLock<..>>` so parallel lane workers
+/// (`--lane-threads N`) can read attribution concurrently while the
+/// driver thread writes `task_newtask` updates. A pid's app is assigned
+/// before any of its slices can be drained and handed to a worker, so a
+/// worker's read never races the write that matters to it.
 pub struct RegistryProbe {
-    reg: Rc<RefCell<AppRegistry>>,
+    reg: Arc<RwLock<AppRegistry>>,
 }
 
 impl RegistryProbe {
-    pub fn new(reg: Rc<RefCell<AppRegistry>>) -> RegistryProbe {
+    pub fn new(reg: Arc<RwLock<AppRegistry>>) -> RegistryProbe {
         RegistryProbe { reg }
     }
 }
@@ -100,7 +105,7 @@ impl RegistryProbe {
 impl Probe for RegistryProbe {
     fn on_event(&mut self, ev: &Event<'_>) -> u64 {
         if let Event::TaskNew { pid, parent, .. } = ev {
-            self.reg.borrow_mut().on_task_new(*pid, *parent);
+            self.reg.write().unwrap().on_task_new(*pid, *parent);
         }
         0
     }
@@ -142,8 +147,8 @@ mod tests {
 
     #[test]
     fn probe_feeds_registry_at_zero_cost() {
-        let reg = Rc::new(RefCell::new(AppRegistry::new()));
-        reg.borrow_mut().begin_app("a");
+        let reg = Arc::new(RwLock::new(AppRegistry::new()));
+        reg.write().unwrap().begin_app("a");
         let mut probe = RegistryProbe::new(reg.clone());
         let cost = probe.on_event(&Event::TaskNew {
             time: 0,
@@ -153,7 +158,7 @@ mod tests {
             comm: "t",
         });
         assert_eq!(cost, 0);
-        reg.borrow_mut().end_spawn();
-        assert_eq!(reg.borrow().app_of(5), 0);
+        reg.write().unwrap().end_spawn();
+        assert_eq!(reg.read().unwrap().app_of(5), 0);
     }
 }

@@ -126,6 +126,66 @@ pub fn merge_tree(mut parts: Vec<Vec<MergedPath>>) -> Vec<MergedPath> {
     parts.pop().unwrap()
 }
 
+/// [`merge_tree`] with the sibling merges of each round running on
+/// scoped OS threads (`--lane-threads N`, N > 1). The tree shape is
+/// identical — the same pairwise rounds, the same odd-one-rides-up
+/// rule — and results are joined in spawn order, so the output is
+/// byte-identical to the sequential tree (and therefore to the serial
+/// fold) for every thread count. At most `max_threads` merges run
+/// concurrently per wave; the waves of one round are processed in
+/// order, which keeps determinism without any cross-thread ordering
+/// protocol.
+pub fn merge_tree_parallel(
+    mut parts: Vec<Vec<MergedPath>>,
+    max_threads: usize,
+) -> Vec<MergedPath> {
+    if max_threads <= 1 || parts.len() < 2 {
+        return merge_tree(parts);
+    }
+    while parts.len() > 1 {
+        let mut pairs: Vec<(Vec<MergedPath>, Vec<MergedPath>)> = Vec::new();
+        let mut carry: Option<Vec<MergedPath>> = None;
+        let mut it = parts.into_iter();
+        while let Some(a) = it.next() {
+            match it.next() {
+                Some(b) => pairs.push((a, b)),
+                None => carry = Some(a), // odd one out rides up a level
+            }
+        }
+        let mut next: Vec<Vec<MergedPath>> = Vec::with_capacity(pairs.len() + 1);
+        let mut waves = pairs.into_iter();
+        loop {
+            let wave: Vec<(Vec<MergedPath>, Vec<MergedPath>)> =
+                waves.by_ref().take(max_threads).collect();
+            if wave.is_empty() {
+                break;
+            }
+            std::thread::scope(|s| {
+                let handles: Vec<_> = wave
+                    .into_iter()
+                    .map(|(a, b)| s.spawn(move || merge_pair(a, b)))
+                    .collect();
+                for h in handles {
+                    next.push(h.join().expect("sibling merge panicked"));
+                }
+            });
+        }
+        if let Some(c) = carry {
+            next.push(c);
+        }
+        parts = next;
+    }
+    match parts.pop() {
+        // One input never entered the pair loop: canonicalize like
+        // merge_tree's single-snapshot arm does.
+        Some(mut only) => {
+            sort_canonical(&mut only);
+            only
+        }
+        None => Vec::new(),
+    }
+}
+
 /// Fold window snapshots, in window order, into one merged path list.
 /// The result is exactly — bit for bit — what a single batch merge over
 /// the concatenated slice stream produces, because every per-path
@@ -272,6 +332,26 @@ mod tests {
             serial.add_slice(&slice(i), 0);
         }
         assert_snapshots_equal(&serial.snapshot(), &snap);
+    }
+
+    #[test]
+    fn parallel_merge_tree_is_byte_identical_at_every_thread_count() {
+        let slices: Vec<SliceEntry> = (0..60).map(slice).collect();
+        for nparts in [1usize, 2, 3, 4, 5, 8] {
+            let mut shards: Vec<WindowAccumulator> =
+                (0..nparts).map(|_| WindowAccumulator::new()).collect();
+            for (i, s) in slices.iter().enumerate() {
+                shards[i % nparts].add_slice(s, 0);
+            }
+            let parts: Vec<Vec<MergedPath>> =
+                shards.iter_mut().map(|w| w.snapshot()).collect();
+            let sequential = merge_tree(parts.clone());
+            for threads in [1usize, 2, 4, 7] {
+                let parallel = merge_tree_parallel(parts.clone(), threads);
+                assert_snapshots_equal(&sequential, &parallel);
+            }
+        }
+        assert!(merge_tree_parallel(Vec::new(), 4).is_empty());
     }
 
     #[test]

@@ -584,6 +584,12 @@ pub struct ShardLane {
 /// matrix substream is k-way-merged (by capture stamp) into the
 /// [`UserProbe`] and each lane's assembled slices fold into that
 /// shard's partial accumulator.
+///
+/// This is the *inline* (driver-thread) topology. With
+/// `--lane-threads N > 1` the same per-lane state lives inside scoped
+/// worker threads instead — see [`super::stream::lanes`], which
+/// compile-asserts the lane state is `Send` and reproduces this type's
+/// routing and window-close behaviour byte for byte.
 #[derive(Default)]
 pub struct ShardLanes {
     lanes: Vec<ShardLane>,

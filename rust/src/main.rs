@@ -5,10 +5,10 @@
 //! gapp list-apps
 //! gapp profile --app dedup [--threads 64] [--seed 7] [--nmin 8] [--dt-us 3000]
 //!              [--shards N] [--ring-capacity R] [--merge serial|tree]
-//!              [--format text|json|jsonl] [--output FILE]
+//!              [--lane-threads N] [--format text|json|jsonl] [--output FILE]
 //! gapp live --app mysql --app dedup --window-us 5000 [--top 5] [--lru]
 //!           [--shards N] [--ring-capacity R] [--merge serial|tree]
-//!           [--shard-partials] [--on-overflow shed|degrade]
+//!           [--lane-threads N] [--shard-partials] [--on-overflow shed|degrade]
 //!           [--checkpoint FILE] [--checkpoint-every N] [--resume FILE]
 //!           [--fault-plan FILE]
 //!           [--format text|json|jsonl] [--output FILE]
@@ -30,6 +30,11 @@
 //! serializes the shards into one globally-ordered stream. The two are
 //! byte-identical (CI diffs them); --shard-partials additionally emits
 //! one per-shard partial event per window (JSONL transport seam).
+//! --lane-threads N (default 1) folds the tree strategy's shard lanes
+//! on N real OS threads: drained records hand off to scoped lane
+//! workers over SPSC channels and the window-close merge tree runs its
+//! sibling merges concurrently. Output stays byte-identical at every N
+//! (CI diffs 1 vs 4); N > 1 requires --merge tree and --shards > 1.
 //! Output goes through a report sink: --format text (default; byte-
 //! identical to the pre-sink CLI), json (one schema-versioned document
 //! per session) or jsonl (one event per line — windows stream as they
@@ -131,7 +136,7 @@ fn main() {
             eprintln!(
                 "live mode: gapp live --app mysql --app dedup --window-us 5000 \
                  [--top 5] [--lru] [--shards N] [--ring-capacity R] \
-                 [--merge serial|tree] [--shard-partials] \
+                 [--merge serial|tree] [--lane-threads N] [--shard-partials] \
                  [--on-overflow shed|degrade]"
             );
             eprintln!(
@@ -198,6 +203,8 @@ fn gapp_config_from(args: &Args) -> anyhow::Result<GappConfig> {
     if args.get("shards").is_some() {
         gcfg.shards = Some(args.opt_min1("shards", 0).map_err(bad)? as usize);
     }
+    gcfg.lane_threads =
+        args.opt_min1("lane-threads", gcfg.lane_threads as u64).map_err(bad)? as usize;
     let merge = args
         .opt_choice("merge", &MergeStrategy::NAMES, gcfg.merge.name())
         .map_err(bad)?;

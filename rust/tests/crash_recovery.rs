@@ -9,7 +9,8 @@
 //!    and resumed from the checkpoint finishes with per-window output
 //!    and a final report *byte-identical* to the uninterrupted run —
 //!    batch and live, `--shards 1|4`, `--merge serial|tree`, with and
-//!    without `--lru`, and under active fault plans.
+//!    without `--lru`, at every `--lane-threads` count (which a resume
+//!    may legally change), and under active fault plans.
 //! 2. **Degradation accounting** — injected overflow bursts drop (and
 //!    are counted) under `--on-overflow shed`, and are absorbed by
 //!    emergency drains + window widening (and are counted) under
@@ -55,6 +56,7 @@ fn normalize(r: &Report) -> String {
 struct Spec {
     shards: usize,
     merge: MergeStrategy,
+    lane_threads: usize,
     lru: bool,
     on_overflow: OverflowPolicy,
     ring_capacity: Option<usize>,
@@ -70,6 +72,7 @@ impl Spec {
         Spec {
             shards,
             merge,
+            lane_threads: 1,
             lru: false,
             on_overflow: OverflowPolicy::Shed,
             ring_capacity: None,
@@ -84,6 +87,11 @@ impl Spec {
     fn kill_at(mut self, window: u64, path: &str) -> Spec {
         self.plan.kill_after_window = Some(window);
         self.checkpoint = Some(path.to_string());
+        self
+    }
+
+    fn lanes(mut self, n: usize) -> Spec {
+        self.lane_threads = n;
         self
     }
 
@@ -103,6 +111,7 @@ fn run_spec(spec: &Spec) -> (anyhow::Result<SessionOutput>, Vec<String>) {
     let mut gcfg = GappConfig {
         shards: Some(spec.shards),
         merge: spec.merge,
+        lane_threads: spec.lane_threads,
         on_overflow: spec.on_overflow,
         ..Default::default()
     };
@@ -378,6 +387,76 @@ fn serial_and_tree_checkpoints_are_byte_identical() {
         docs[0].replace("serial", "tree"),
         docs[1],
         "checkpoints must agree on everything but the strategy name"
+    );
+}
+
+#[test]
+fn a_resume_may_change_the_lane_thread_count() {
+    // `lane_threads` is the one fingerprint knob a resume may legally
+    // change: lane workers decide *who* folds a shard, never what the
+    // fold produces. A checkpoint written single-threaded resumes under
+    // 4 lane workers (and vice versa) into the same window stream and
+    // final report the uninterrupted run produces.
+    let base_spec = Spec::new(4, MergeStrategy::Tree);
+    let (base, base_lines) = run_spec(&base_spec);
+    let base = base.unwrap();
+
+    for (write_threads, resume_threads) in [(1usize, 4usize), (4, 1)] {
+        let label = format!("hop_{write_threads}to{resume_threads}");
+        let ck = tmp(&label);
+        let (crash, crash_lines) =
+            run_spec(&base_spec.clone().lanes(write_threads).kill_at(2, &ck));
+        crash.unwrap_err();
+
+        let (resumed, resumed_lines) = run_spec(
+            &base_spec
+                .clone()
+                .lanes(resume_threads)
+                .kill_at(2, &ck)
+                .resume_from(&ck),
+        );
+        let resumed = resumed.expect("a thread-count hop must resume");
+        let stitched: Vec<String> = crash_lines
+            .iter()
+            .chain(&resumed_lines)
+            .cloned()
+            .collect();
+        assert_eq!(stitched, base_lines, "{label}");
+        assert_eq!(resumed.windows, base.windows, "{label}");
+        assert_eq!(resumed.sketch_top, base.sketch_top, "{label}");
+        assert_eq!(
+            normalize(&resumed.report),
+            normalize(&base.report),
+            "{label}"
+        );
+        let _ = std::fs::remove_file(&ck);
+    }
+}
+
+#[test]
+fn thread_count_checkpoints_differ_only_in_the_fingerprint() {
+    // Lane workers fold eagerly off-thread, but window close merges
+    // everything back onto the driver before the snapshot is taken, so
+    // the only trace of the thread count in the checkpoint bytes is the
+    // fingerprint's provenance field.
+    let docs: Vec<String> = [1usize, 4]
+        .into_iter()
+        .map(|threads| {
+            let ck = tmp(&format!("lanes_{threads}"));
+            let spec = Spec::new(4, MergeStrategy::Tree)
+                .lanes(threads)
+                .kill_at(2, &ck);
+            let (crash, _) = run_spec(&spec);
+            crash.unwrap_err();
+            let doc = std::fs::read_to_string(&ck).unwrap();
+            let _ = std::fs::remove_file(&ck);
+            doc
+        })
+        .collect();
+    assert_eq!(
+        docs[0].replace("\"lane_threads\":1", "\"lane_threads\":4"),
+        docs[1],
+        "checkpoints must agree on everything but the thread count"
     );
 }
 

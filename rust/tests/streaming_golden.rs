@@ -22,6 +22,10 @@
 //!    seed, per-shard per-epoch drop deltas sum exactly to the global
 //!    dropped counter, and random shard interleavings composed with
 //!    random ragged window boundaries always merge to the batch result.
+//! 7. Lane threads: `--lane-threads N` moves the shard folds onto real
+//!    worker threads; reports, window summaries, sketches and
+//!    per-(window × shard) drop attribution must be byte- and
+//!    count-identical at every N, live and batch, with and without LRU.
 
 // The deprecated `profile`/`run_live` wrappers stay under golden
 // coverage: they must keep producing byte-identical results to the
@@ -402,18 +406,32 @@ fn sharded_drops_sum_to_the_global_counter_across_epochs_and_shards() {
     // no mid-epoch drains. The accounting identity must hold on both
     // axes — per-window drops (summed over shards) equal the report's
     // window attribution, and per-shard totals sum to the global
-    // dropped counter — under *both* merge strategies (the tree's
-    // per-shard cursors must not lose or double-charge a drop).
-    for merge in [MergeStrategy::Serial, MergeStrategy::Tree] {
+    // dropped counter — under *both* merge strategies and at *every*
+    // lane-thread count (the tree's per-shard cursors must not lose or
+    // double-charge a drop; drop accounting is driver-side, so moving
+    // the folds onto workers must not move a single drop).
+    let variants = [
+        (MergeStrategy::Serial, 1usize),
+        (MergeStrategy::Tree, 1),
+        (MergeStrategy::Tree, 2),
+        (MergeStrategy::Tree, 4),
+    ];
+    // Per-variant per-(window × shard) drop matrix, for the cross-
+    // variant invariance check below.
+    let mut drop_matrices: Vec<Vec<Vec<u64>>> = Vec::new();
+    for (merge, lane_threads) in variants {
+        let tag = format!("{merge:?} x{lane_threads}");
         let app = apps::canneal(8, 5);
         let gcfg = GappConfig {
             ring_capacity: 16,
             shards: Some(4),
             drain_threshold: usize::MAX,
             merge,
+            lane_threads,
             ..Default::default()
         };
         let mut window_shard_totals: Vec<u64> = vec![0; 4];
+        let mut matrix: Vec<Vec<u64>> = Vec::new();
         let run = run_live(
             std::slice::from_ref(&app),
             KernelConfig::default(),
@@ -434,21 +452,22 @@ fn sharded_drops_sum_to_the_global_counter_across_epochs_and_shards() {
                 for (i, d) in w.shard_drops.iter().enumerate() {
                     window_shard_totals[i] += d;
                 }
+                matrix.push(w.shard_drops.clone());
             },
         )
         .unwrap();
         assert!(
             run.report.ring_dropped > 0,
-            "16-record shards with no mid-epoch drain should overflow ({merge:?})"
+            "16-record shards with no mid-epoch drain should overflow ({tag})"
         );
         // Per-window attribution covers every drop...
         let per_window: u64 = run.report.window_drops.iter().sum();
-        assert_eq!(per_window, run.report.ring_dropped, "{merge:?}");
+        assert_eq!(per_window, run.report.ring_dropped, "{tag}");
         // ...and so does the per-shard attribution, window by window.
         assert_eq!(
             window_shard_totals.iter().sum::<u64>(),
             run.report.ring_dropped,
-            "{merge:?}"
+            "{tag}"
         );
         // The report's final per-shard counters agree with the per-epoch
         // deltas accumulated through the consumer's cursors.
@@ -456,9 +475,18 @@ fn sharded_drops_sum_to_the_global_counter_across_epochs_and_shards() {
         for (i, s) in run.report.ring_shards.iter().enumerate() {
             assert_eq!(
                 s.dropped, window_shard_totals[i],
-                "shard {i} ({merge:?}): cursor deltas must sum to the ring's counter"
+                "shard {i} ({tag}): cursor deltas must sum to the ring's counter"
             );
         }
+        drop_matrices.push(matrix);
+    }
+    // Acceptance invariant: the full (window × shard) drop matrix is
+    // identical across strategies and thread counts.
+    for (m, (merge, lane_threads)) in drop_matrices.iter().zip(variants).skip(1) {
+        assert_eq!(
+            *m, drop_matrices[0],
+            "{merge:?} x{lane_threads}: per-(window × shard) drops moved"
+        );
     }
 }
 
@@ -529,6 +557,137 @@ fn merge_tree_reports_are_byte_identical_to_serial() {
             "batch --shards {shards}: tree must reproduce serial byte for byte"
         );
     }
+}
+
+#[test]
+fn lane_thread_counts_are_byte_invisible_live_and_batch() {
+    // The tentpole acceptance golden: `--lane-threads N` moves the
+    // shard folds onto N scoped worker threads, and nothing else — the
+    // serial oracle, the inline tree and every threaded variant must
+    // render byte-identical reports, live and batch, with and without
+    // kernel-side LRU (the stable re-intern runs downstream of the
+    // merge, so worker topology must not reach it). Only the shards-4
+    // axis carries thread variants: `--lane-threads 2 --shards 1` is a
+    // config error by design, covered in the config unit tests.
+    for lru in [false, true] {
+        let cfg = |merge: MergeStrategy, lane_threads: usize| GappConfig {
+            shards: Some(4),
+            merge,
+            lane_threads,
+            stack_lru: lru,
+            // Small enough to recycle ids under LRU, so the re-intern
+            // path is actually exercised.
+            stack_map_entries: if lru { 4 } else { 1 << 10 },
+            ..Default::default()
+        };
+        let live = |merge: MergeStrategy, lane_threads: usize| {
+            let app = apps::canneal(8, 5);
+            run_live(
+                std::slice::from_ref(&app),
+                KernelConfig::default(),
+                cfg(merge, lane_threads),
+                AnalysisEngine::native(),
+                LiveConfig {
+                    window_ns: 2_000_000,
+                    ..Default::default()
+                },
+                |_| {},
+            )
+            .unwrap()
+        };
+        let batch = |merge: MergeStrategy, lane_threads: usize| {
+            profile(
+                &apps::canneal(8, 5),
+                KernelConfig::default(),
+                cfg(merge, lane_threads),
+                AnalysisEngine::native(),
+            )
+            .unwrap()
+            .0
+        };
+        let norm = |mut r: Report| {
+            normalize(&mut r);
+            r.to_string()
+        };
+        let live_ref = live(MergeStrategy::Serial, 1);
+        let batch_ref = norm(batch(MergeStrategy::Serial, 1));
+        for lane_threads in [1usize, 2, 4] {
+            let l = live(MergeStrategy::Tree, lane_threads);
+            assert_eq!(
+                l.windows, live_ref.windows,
+                "lru={lru} x{lane_threads}: window summaries moved"
+            );
+            assert_eq!(l.sketch_top, live_ref.sketch_top, "lru={lru} x{lane_threads}");
+            assert_eq!(
+                l.sketch_lines, live_ref.sketch_lines,
+                "lru={lru} x{lane_threads}"
+            );
+            assert_eq!(
+                norm(l.report),
+                norm(live_ref.report.clone()),
+                "live lru={lru} x{lane_threads}: report must not move by a byte"
+            );
+            assert_eq!(
+                norm(batch(MergeStrategy::Tree, lane_threads)),
+                batch_ref,
+                "batch lru={lru} x{lane_threads}: report must not move by a byte"
+            );
+        }
+    }
+}
+
+#[test]
+fn random_workloads_fold_identically_at_every_lane_thread_count() {
+    // Property (satellite): random workload × seed × window length ×
+    // shard count — the serial global-stream fold, the inline tree and
+    // the threaded lanes at 2 and 4 workers agree on everything the
+    // session reports. Random shard interleavings arise naturally (the
+    // scheduler deals slices onto per-CPU shards) and the random window
+    // length makes the epoch boundaries ragged relative to the slices.
+    property("lane threads × random workloads", 6, |rng| {
+        let names = ["canneal", "dedup", "mysql", "blackscholes"];
+        let name = names[rng.pick(names.len())];
+        let nthreads = 4 + rng.pick(8);
+        let seed = 1 + rng.pick(50) as u64;
+        let window_ns = 1_000_000 + rng.pick(4) as u64 * 700_000;
+        let shards = 2 + rng.pick(3);
+        let run = |merge: MergeStrategy, lane_threads: usize| {
+            let app = apps::by_name(name, nthreads, seed).unwrap();
+            run_live(
+                std::slice::from_ref(&app),
+                KernelConfig::default(),
+                GappConfig {
+                    shards: Some(shards),
+                    merge,
+                    lane_threads,
+                    ..Default::default()
+                },
+                AnalysisEngine::native(),
+                LiveConfig {
+                    window_ns,
+                    ..Default::default()
+                },
+                |_| {},
+            )
+            .unwrap()
+        };
+        let norm = |mut r: Report| {
+            normalize(&mut r);
+            r.to_string()
+        };
+        let serial = run(MergeStrategy::Serial, 1);
+        let serial_text = norm(serial.report.clone());
+        for lane_threads in [1usize, 2, 4] {
+            let t = run(MergeStrategy::Tree, lane_threads);
+            let tag = format!(
+                "{name} threads={nthreads} seed={seed} window={window_ns} \
+                 shards={shards} lane_threads={lane_threads}"
+            );
+            assert_eq!(t.windows, serial.windows, "{tag}");
+            assert_eq!(t.sketch_top, serial.sketch_top, "{tag}");
+            assert_eq!(norm(t.report), serial_text, "{tag}");
+        }
+    });
 }
 
 #[test]
