@@ -344,6 +344,84 @@ fn main() {
         });
     }
 
+    // --- fleet aggregation: cross-process merge --------------------------
+    // Two real producer captures (16-thread canneal live runs shipping
+    // `--shard-partials` + symbols as JSONL), merged the two ways the
+    // fleet subsystem offers: line-rate ingestion through the global
+    // re-intern (`gapp aggregate` / the serve reader path), and the
+    // per-fleet-window merge_tree fold the service performs at window
+    // close.
+    {
+        use std::cell::RefCell;
+        use std::rc::Rc;
+
+        use gapp::fleet::{FleetMerge, Ingested};
+        use gapp::gapp::userspace::MergedPath;
+
+        #[derive(Clone, Default)]
+        struct Buf(Rc<RefCell<Vec<u8>>>);
+        impl std::io::Write for Buf {
+            fn write(&mut self, b: &[u8]) -> std::io::Result<usize> {
+                self.0.borrow_mut().extend_from_slice(b);
+                Ok(b.len())
+            }
+            fn flush(&mut self) -> std::io::Result<()> {
+                Ok(())
+            }
+        }
+        let capture = |seed: u64| -> String {
+            let app = apps::canneal(16, seed);
+            let buf = Buf::default();
+            gapp::gapp::Session::builder(AnalysisEngine::native())
+                .config(GappConfig::default())
+                .app(&app)
+                .live(gapp::gapp::stream::LiveConfig {
+                    window_ns: 5_000_000,
+                    shard_partials: true,
+                    ..Default::default()
+                })
+                .sink(gapp::gapp::sink::JsonlSink::new(buf.clone()))
+                .run()
+                .unwrap();
+            String::from_utf8(buf.0.borrow().clone()).unwrap()
+        };
+        let prod_a = capture(3);
+        let prod_b = capture(4);
+        let nlines = (prod_a.lines().count() + prod_b.lines().count()) as u64;
+        b.bench_items("fleet_ingest_2prod_jsonl", nlines, || {
+            let mut fleet = FleetMerge::new();
+            fleet.ingest("a", &prod_a);
+            fleet.ingest("b", &prod_b);
+            sink(fleet.render_top(5).len());
+        });
+
+        // The service's window-close work alone: both producers' parts
+        // of each fleet window folded through the pairwise merge tree.
+        // merge_tree consumes its input, so each iteration pays one
+        // clone alongside the merge (constant bias, same caveat as
+        // window_merge_pairwise_S8).
+        let mut by_window: std::collections::BTreeMap<u64, Vec<Vec<MergedPath>>> =
+            Default::default();
+        let mut fleet = FleetMerge::new();
+        for text in [&prod_a, &prod_b] {
+            let slot = fleet.register("p");
+            for line in text.lines().filter(|l| !l.trim().is_empty()) {
+                if let Some(Ingested::Window { index, paths, .. }) =
+                    fleet.ingest_line(slot, line)
+                {
+                    by_window.entry(index).or_default().push(paths);
+                }
+            }
+        }
+        let fleet_windows: Vec<Vec<Vec<MergedPath>>> = by_window.into_values().collect();
+        let nwin = fleet_windows.len() as u64;
+        b.bench_items("fleet_merge_w5ms_2prod", nwin, || {
+            for parts in &fleet_windows {
+                sink(gapp::gapp::stream::merge_tree(parts.clone()));
+            }
+        });
+    }
+
     // --- probe handlers: per-event cost ---------------------------------
     // Discard path (nmin=1 → no slice is ever critical).
     {

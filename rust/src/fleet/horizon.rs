@@ -1,0 +1,288 @@
+//! Bounded reorder horizon: align producers' windows for the merged
+//! live stream without losing anything from the final report.
+//!
+//! Producers emit windows in order *within* their own streams, but the
+//! fleet sees the streams interleaved arbitrarily — one producer may
+//! be minutes ahead of another. A fleet window (keyed by the
+//! producer-local window index; sessions sharing a `--window-us` tick
+//! the same clock) closes when every active producer has moved past it
+//! or finished, OR when the fastest producer has run `horizon` windows
+//! ahead — the bound that keeps buffering O(horizon), not O(lag).
+//!
+//! A window that arrives after its fleet window closed is **Late**:
+//! excluded from the already-emitted merged stream but NOT dropped —
+//! the caller folds it straight into the cumulative total (associative
+//! merges don't care when) and accounts it per producer. That is what
+//! keeps the final fleet report lossless — byte-identical to a one-shot
+//! `gapp aggregate` over the same captures — even when producers run
+//! one after another instead of concurrently.
+
+use std::collections::BTreeMap;
+
+use crate::gapp::userspace::MergedPath;
+
+/// One producer's partial of one fleet window, buffered until the
+/// window closes.
+pub struct WindowPart {
+    pub producer: usize,
+    pub slices: u64,
+    pub drained: u64,
+    pub drops: u64,
+    pub paths: Vec<MergedPath>,
+}
+
+/// A closed fleet window: every buffered part, plus the summed
+/// accounting for the merged `shard_window` re-emission.
+pub struct ClosedWindow {
+    pub index: u64,
+    pub slices: u64,
+    pub drained: u64,
+    pub drops: u64,
+    pub parts: Vec<Vec<MergedPath>>,
+}
+
+/// The verdict on one offered window part.
+pub enum Offer {
+    /// Buffered; will appear in the merged stream at window close.
+    Accepted,
+    /// Its fleet window already closed: the part comes back to the
+    /// caller, who folds it into the cumulative total directly and
+    /// accounts it as late.
+    Late(WindowPart),
+}
+
+struct Cursor {
+    /// Highest window index seen from this producer (0 = none yet).
+    /// A producer still emits parts for its watermark window (one per
+    /// shard), so a window only closes once every watermark is *past*.
+    watermark: u64,
+    eof: bool,
+}
+
+pub struct ReorderHorizon {
+    horizon: u64,
+    /// Highest window index already closed and handed out.
+    emitted_through: u64,
+    pending: BTreeMap<u64, Vec<WindowPart>>,
+    producers: Vec<Cursor>,
+}
+
+impl ReorderHorizon {
+    /// `horizon` = how many windows the fastest producer may run ahead
+    /// before stragglers are declared late (≥ 1).
+    pub fn new(horizon: u64) -> ReorderHorizon {
+        ReorderHorizon {
+            horizon: horizon.max(1),
+            emitted_through: 0,
+            pending: BTreeMap::new(),
+            producers: Vec::new(),
+        }
+    }
+
+    /// Register one producer slot; returns its index. Must match the
+    /// slot numbering of the merge core.
+    pub fn register(&mut self) -> usize {
+        self.producers.push(Cursor {
+            watermark: 0,
+            eof: false,
+        });
+        self.producers.len() - 1
+    }
+
+    /// Ensure slots `0..=slot` exist (lazy registration from a message
+    /// loop that discovers producers by their first line).
+    pub fn ensure(&mut self, slot: usize) {
+        while self.producers.len() <= slot {
+            self.register();
+        }
+    }
+
+    /// Offer one producer's (window × shard) part.
+    pub fn offer(&mut self, part: WindowPart, index: u64) -> Offer {
+        self.ensure(part.producer);
+        let c = &mut self.producers[part.producer];
+        c.watermark = c.watermark.max(index);
+        if index <= self.emitted_through {
+            return Offer::Late(part);
+        }
+        self.pending.entry(index).or_default().push(part);
+        Offer::Accepted
+    }
+
+    /// Mark one producer finished (its stream hit EOF): it no longer
+    /// holds any window open.
+    pub fn eof(&mut self, slot: usize) {
+        self.ensure(slot);
+        self.producers[slot].eof = true;
+    }
+
+    /// Pop every fleet window that can close, in index order. Call
+    /// after each offer/eof.
+    pub fn ready(&mut self) -> Vec<ClosedWindow> {
+        let mut out = Vec::new();
+        loop {
+            let highest = self
+                .pending
+                .keys()
+                .next_back()
+                .copied()
+                .unwrap_or(0)
+                .max(self.producers.iter().map(|c| c.watermark).max().unwrap_or(0));
+            let w = self.emitted_through + 1;
+            if w > highest {
+                break;
+            }
+            let all_past = self
+                .producers
+                .iter()
+                .all(|c| c.eof || c.watermark > w);
+            let forced = self
+                .producers
+                .iter()
+                .any(|c| c.watermark.saturating_sub(w) >= self.horizon);
+            if !(all_past || forced) {
+                break;
+            }
+            self.emitted_through = w;
+            let parts = self.pending.remove(&w).unwrap_or_default();
+            if parts.is_empty() {
+                // A gap (every part of this index quarantined, or the
+                // producers skipped it): nothing to emit, keep walking.
+                continue;
+            }
+            let mut closed = ClosedWindow {
+                index: w,
+                slices: 0,
+                drained: 0,
+                drops: 0,
+                parts: Vec::with_capacity(parts.len()),
+            };
+            for p in parts {
+                closed.slices += p.slices;
+                closed.drained += p.drained;
+                closed.drops += p.drops;
+                closed.parts.push(p.paths);
+            }
+            out.push(closed);
+        }
+        out
+    }
+
+    /// Windows still buffered (diagnostics / tests).
+    pub fn pending_windows(&self) -> usize {
+        self.pending.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn part(producer: usize, slices: u64) -> WindowPart {
+        WindowPart {
+            producer,
+            slices,
+            drained: slices,
+            drops: 0,
+            paths: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn windows_close_in_order_once_every_producer_is_past() {
+        let mut h = ReorderHorizon::new(8);
+        h.register();
+        h.register();
+        assert!(matches!(h.offer(part(0, 1), 1), Offer::Accepted));
+        // Producer 1 hasn't reached window 1 yet: nothing closes.
+        assert!(h.ready().is_empty());
+        assert!(matches!(h.offer(part(1, 2), 1), Offer::Accepted));
+        // Both producers are AT window 1 (more shards may come).
+        assert!(h.ready().is_empty());
+        // Both move to window 2: window 1 closes with both parts.
+        h.offer(part(0, 1), 2);
+        h.offer(part(1, 1), 2);
+        let closed = h.ready();
+        assert_eq!(closed.len(), 1);
+        assert_eq!(closed[0].index, 1);
+        assert_eq!(closed[0].slices, 3);
+        assert_eq!(closed[0].parts.len(), 2);
+    }
+
+    #[test]
+    fn eof_releases_everything_a_producer_held_open() {
+        let mut h = ReorderHorizon::new(8);
+        h.register();
+        h.register();
+        h.offer(part(0, 1), 1);
+        h.offer(part(0, 1), 2);
+        assert!(h.ready().is_empty(), "producer 1 still holds window 1");
+        h.eof(1);
+        // Producer 0 still holds its own watermark window (2) open.
+        let closed = h.ready();
+        assert_eq!(closed.len(), 1);
+        assert_eq!(closed[0].index, 1);
+        h.eof(0);
+        let closed = h.ready();
+        assert_eq!(closed.len(), 1);
+        assert_eq!(closed[0].index, 2);
+        assert_eq!(h.pending_windows(), 0);
+    }
+
+    #[test]
+    fn a_straggler_is_forced_out_at_the_horizon_and_late_parts_are_flagged() {
+        let mut h = ReorderHorizon::new(3);
+        h.register();
+        h.register();
+        h.offer(part(0, 1), 1);
+        // Producer 0 sprints ahead; window 1 must close when the lead
+        // reaches the horizon even though producer 1 never showed up.
+        h.offer(part(0, 1), 2);
+        h.offer(part(0, 1), 3);
+        assert!(h.ready().is_empty());
+        h.offer(part(0, 1), 4);
+        let closed = h.ready();
+        assert_eq!(closed.len(), 1);
+        assert_eq!(closed[0].index, 1);
+        // The straggler's window 1 part now arrives: late, not lost —
+        // it comes back for the caller to fold into the cumulative
+        // total.
+        match h.offer(part(1, 9), 1) {
+            Offer::Late(p) => assert_eq!(p.slices, 9),
+            Offer::Accepted => panic!("window 1 already closed"),
+        }
+        // But its window 2 part is still in time.
+        assert!(matches!(h.offer(part(1, 1), 2), Offer::Accepted));
+    }
+
+    #[test]
+    fn sequential_producers_lose_nothing() {
+        // The CI shape: producer 0 runs to completion, then producer 1
+        // starts. With EOF semantics nothing is late.
+        let mut h = ReorderHorizon::new(4);
+        let mut emitted = 0u64;
+        let mut late = 0u64;
+        let mut feed = |h: &mut ReorderHorizon, slot: usize| {
+            for w in 1..=10u64 {
+                if let Offer::Late(_) = h.offer(part(slot, 1), w) {
+                    // The service folds late parts into the cumulative
+                    // total directly — counted, never lost.
+                    late += 1;
+                }
+                emitted += h.ready().iter().map(|c| c.slices).sum::<u64>();
+            }
+            h.eof(slot);
+            emitted += h.ready().iter().map(|c| c.slices).sum::<u64>();
+        };
+        h.register();
+        feed(&mut h, 0);
+        // A second producer connects only after the first finished: its
+        // windows are all late (the merged stream moved on) but every
+        // one of them still reaches the cumulative total.
+        assert_eq!(h.register(), 1);
+        feed(&mut h, 1);
+        assert_eq!(emitted + late, 20, "every part accounted for");
+        assert!(late > 0, "the sequential producer must be late");
+        assert_eq!(h.pending_windows(), 0);
+    }
+}

@@ -1,0 +1,601 @@
+//! The fleet merge core: re-intern N producers' stack-id namespaces
+//! into one global map and fold their `shard_window` partials into one
+//! cumulative merged session.
+//!
+//! Each producer numbers stacks with its own session-local ids; the
+//! `symbols` event announces `id → frames (+ rendering)` once per id
+//! (the id-stability contract). [`FleetMerge`] re-interns every
+//! announced id through a global userspace [`StackMap`] keyed by the
+//! raw frames — exactly the way the in-process session re-interns
+//! recyclable kernel ids into the stable userspace map under `--lru` —
+//! so two producers that captured the *same call path* merge into one
+//! global path no matter what their local ids were. Producers that
+//! never announce symbols (old captures) fall back to identity-by-raw-
+//! id via a synthetic frame encoding, which reproduces the historical
+//! `gapp aggregate` behaviour byte for byte.
+//!
+//! Everything folded here is associative (sums + `min(first_seen)`),
+//! so the merged result is producer-count-invariant: splitting one
+//! stream's lines across 1, 2, or N producers yields the same report
+//! (property-tested in `tests/fleet_golden.rs`). Quarantine follows
+//! the [`partials`] policy: count per producer, retain the first error
+//! verbatim, never panic, never skip silently.
+
+use crate::ebpf::StackMap;
+use crate::gapp::sink::SymbolEntry;
+use crate::gapp::stream::partials::{
+    parse_envelope, parse_shard_window, parse_symbols, ProducerReport, ProducerStats,
+};
+use crate::gapp::userspace::MergedPath;
+use crate::util::FxHashMap;
+
+/// Sentinel first frame of the synthetic stack that encodes "producer
+/// never announced this id": the global identity of such a path is its
+/// raw local id, `[SYNTHETIC_FRAME, local_id]`. `u64::MAX` is not a
+/// reachable code address in any backend.
+pub const SYNTHETIC_FRAME: u64 = u64::MAX;
+
+/// One producer's namespace and accounting.
+struct Producer {
+    name: String,
+    stats: ProducerStats,
+    /// Windows that arrived after their fleet window had already been
+    /// emitted (still merged into the cumulative total — the final
+    /// report is lossless — but absent from the live merged stream).
+    late: u64,
+    /// Local stack id → global id.
+    id_map: FxHashMap<u32, u32>,
+    /// Local id → announced frames, for the id-stability contract: a
+    /// re-announcement with different frames is a protocol violation.
+    announced: FxHashMap<u32, Vec<u64>>,
+}
+
+/// What one ingested line meant, after validation and re-interning.
+/// All stack ids in the payload are *global*.
+pub enum Ingested {
+    /// A `shard_window` partial: one producer's (window × shard)
+    /// aggregation with ids re-interned and slices attributed to the
+    /// producer (`app_slices` keyed by producer index).
+    Window {
+        index: u64,
+        shard: u64,
+        slices: u64,
+        drained: u64,
+        drops: u64,
+        paths: Vec<MergedPath>,
+    },
+    /// A `symbols` announcement, re-interned: entries carry global ids.
+    Symbols(Vec<SymbolEntry>),
+    /// The producer's `session_start` (used to adopt its app names).
+    Session { apps: Vec<String> },
+    /// Any other valid v1 event kind — skipped by policy.
+    Other,
+}
+
+/// Merges session streams from any number of producers into one
+/// cumulative merged path set over a global stack-id namespace.
+pub struct FleetMerge {
+    stacks: StackMap,
+    /// Global id → the producer-side rendering of its frames. On a
+    /// cross-producer collision (same frames, different rendering) the
+    /// lexicographically smallest rendering wins — deterministic in
+    /// arrival order, so interleaved live ingest and sequential file
+    /// ingest produce the same report.
+    rendered: FxHashMap<u32, Vec<String>>,
+    cumulative: FxHashMap<u32, MergedPath>,
+    producers: Vec<Producer>,
+}
+
+impl Default for FleetMerge {
+    fn default() -> FleetMerge {
+        FleetMerge::new()
+    }
+}
+
+impl FleetMerge {
+    pub fn new() -> FleetMerge {
+        FleetMerge {
+            stacks: StackMap::new("fleet_stacks", 1 << 20),
+            rendered: FxHashMap::default(),
+            cumulative: FxHashMap::default(),
+            producers: Vec::new(),
+        }
+    }
+
+    /// Register a producer slot; returns its index (= `app_slices` key
+    /// in merged paths).
+    pub fn register(&mut self, name: &str) -> usize {
+        self.producers.push(Producer {
+            name: name.to_string(),
+            stats: ProducerStats::default(),
+            late: 0,
+            id_map: FxHashMap::default(),
+            announced: FxHashMap::default(),
+        });
+        self.producers.len() - 1
+    }
+
+    /// Adopt a better display name for a slot (e.g. the app list from
+    /// the producer's `session_start`).
+    pub fn rename(&mut self, slot: usize, name: String) {
+        if let Some(p) = self.producers.get_mut(slot) {
+            p.name = name;
+        }
+    }
+
+    /// Count one late window against a slot (reorder-horizon misses;
+    /// see [`super::horizon`]).
+    pub fn note_late(&mut self, slot: usize) {
+        if let Some(p) = self.producers.get_mut(slot) {
+            p.late += 1;
+        }
+    }
+
+    /// Ingest one line from `slot`'s stream. Returns `None` when the
+    /// line was quarantined (the slot's stats already account for it);
+    /// the caller decides what to do with a validated [`Ingested`].
+    pub fn ingest_line(&mut self, slot: usize, line: &str) -> Option<Ingested> {
+        match self.classify_line(slot, line) {
+            Ok(ing) => {
+                let stats = &mut self.producers[slot].stats;
+                stats.lines_ok += 1;
+                if matches!(ing, Ingested::Window { .. }) {
+                    stats.partials += 1;
+                }
+                Some(ing)
+            }
+            Err(e) => {
+                let stats = &mut self.producers[slot].stats;
+                stats.quarantined += 1;
+                stats.first_error.get_or_insert(e);
+                None
+            }
+        }
+    }
+
+    fn classify_line(&mut self, slot: usize, line: &str) -> Result<Ingested, String> {
+        let env = parse_envelope(line)?;
+        match env.event.as_str() {
+            "symbols" => {
+                // Validate the whole announcement (and the stability
+                // contract) before interning any of it, so a line
+                // corrupt in its third entry does not half-apply.
+                let entries = parse_symbols(&env.value)?;
+                for e in &entries {
+                    if let Some(prev) = self.producers[slot].announced.get(&e.stack_id) {
+                        if prev != &e.frames {
+                            return Err(format!(
+                                "stack id {} re-announced with different frames \
+                                 (id-stability contract violation)",
+                                e.stack_id
+                            ));
+                        }
+                    }
+                }
+                let mut global = Vec::with_capacity(entries.len());
+                for e in entries {
+                    let gid = self.stacks.intern(&e.frames);
+                    let p = &mut self.producers[slot];
+                    p.id_map.insert(e.stack_id, gid);
+                    p.announced.insert(e.stack_id, e.frames.clone());
+                    if !e.rendered.is_empty() {
+                        match self.rendered.get(&gid) {
+                            Some(prev) if *prev <= e.rendered => {}
+                            _ => {
+                                self.rendered.insert(gid, e.rendered.clone());
+                            }
+                        }
+                    }
+                    global.push(SymbolEntry {
+                        stack_id: gid,
+                        frames: e.frames,
+                        rendered: e.rendered,
+                    });
+                }
+                Ok(Ingested::Symbols(global))
+            }
+            "shard_window" => {
+                let wire = parse_shard_window(&env.value)?;
+                let mut paths = Vec::with_capacity(wire.paths.len());
+                for wp in wire.paths {
+                    let gid = match self.producers[slot].id_map.get(&wp.stack_id) {
+                        Some(gid) => *gid,
+                        // Unannounced id (a pre-symbols capture, or a
+                        // stream whose symbols line was quarantined):
+                        // identity is the raw id, so equal raw ids
+                        // across producers merge — the historical
+                        // `gapp aggregate` behaviour.
+                        None => {
+                            let gid = self
+                                .stacks
+                                .intern(&[SYNTHETIC_FRAME, wp.stack_id as u64]);
+                            self.producers[slot].id_map.insert(wp.stack_id, gid);
+                            gid
+                        }
+                    };
+                    let mut p = MergedPath::new(gid);
+                    p.cm_fs = wp.cm_fs;
+                    p.total_cm_ns = p.cm_fs as f64 / 1e6;
+                    p.slices = wp.slices;
+                    p.first_seen = wp.first_seen;
+                    // Per-producer attribution rides the same field
+                    // per-app attribution uses in-process; any per-app
+                    // split the producer shipped is its own, local
+                    // story — the fleet re-keys by producer.
+                    p.app_slices.insert(slot as u16, wp.slices);
+                    paths.push(p);
+                }
+                Ok(Ingested::Window {
+                    index: wire.index,
+                    shard: wire.shard,
+                    slices: wire.slices,
+                    drained: wire.drained,
+                    drops: wire.drops,
+                    paths,
+                })
+            }
+            "session_start" => {
+                let apps = env
+                    .value
+                    .get("session")
+                    .and_then(|s| s.get("apps"))
+                    .and_then(|a| a.as_arr())
+                    .map(|arr| {
+                        arr.iter()
+                            .filter_map(|s| s.as_str().map(|s| s.to_string()))
+                            .collect::<Vec<String>>()
+                    })
+                    .unwrap_or_default();
+                Ok(Ingested::Session { apps })
+            }
+            _ => Ok(Ingested::Other),
+        }
+    }
+
+    /// Fold merged-window paths (global ids) into the cumulative set.
+    pub fn fold(&mut self, paths: &[MergedPath]) {
+        for p in paths {
+            self.cumulative
+                .entry(p.stack_id)
+                .or_insert_with(|| MergedPath::new(p.stack_id))
+                .merge_from(p);
+        }
+    }
+
+    /// One-shot ingestion of a whole captured stream (the `gapp
+    /// aggregate` path): every validated window folds immediately —
+    /// offline replay has no reorder problem. Never fails; malformed
+    /// lines are quarantined into the producer's stats.
+    pub fn ingest(&mut self, producer: &str, text: &str) {
+        let slot = self.register(producer);
+        for line in text.lines() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            if let Some(Ingested::Window { paths, .. }) = self.ingest_line(slot, line) {
+                self.fold(&paths);
+            }
+        }
+    }
+
+    /// Ingest a JSONL file, using its path as the producer name. I/O
+    /// failure is a real error; content failures quarantine per line.
+    pub fn ingest_file(&mut self, path: &str) -> anyhow::Result<()> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("cannot read partials {path:?}: {e}"))?;
+        self.ingest(path, &text);
+        Ok(())
+    }
+
+    /// The frames behind a global id (symbol round-trip surface).
+    pub fn resolve(&self, gid: u32) -> &[u64] {
+        self.stacks.resolve(gid)
+    }
+
+    /// The producer-side rendering of a global id's frames, if any
+    /// producer announced one.
+    pub fn rendering(&self, gid: u32) -> Option<&[String]> {
+        self.rendered.get(&gid).map(|r| r.as_slice())
+    }
+
+    /// Registered producer slots.
+    pub fn producer_count(&self) -> usize {
+        self.producers.len()
+    }
+
+    /// Per-producer accounting, in registration order.
+    pub fn producers(&self) -> Vec<ProducerReport> {
+        self.producers
+            .iter()
+            .map(|p| ProducerReport {
+                name: p.name.clone(),
+                stats: p.stats.clone(),
+            })
+            .collect()
+    }
+
+    /// Total quarantined lines across all producers.
+    pub fn quarantined(&self) -> u64 {
+        self.producers.iter().map(|p| p.stats.quarantined).sum()
+    }
+
+    /// Number of distinct merged paths (global ids).
+    pub fn len(&self) -> usize {
+        self.cumulative.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cumulative.is_empty()
+    }
+
+    /// Merged paths ranked by CMetric (ties: earlier first-seen, then
+    /// the lexicographically smallest *frames* — the identity that is
+    /// invariant to how the streams were split across producers; global
+    /// ids depend on arrival order and must not leak into the order).
+    pub fn top(&self, n: usize) -> Vec<MergedPath> {
+        let mut all: Vec<&MergedPath> = self.cumulative.values().collect();
+        all.sort_by(|a, b| {
+            b.cm_fs
+                .cmp(&a.cm_fs)
+                .then(a.first_seen.cmp(&b.first_seen))
+                .then_with(|| {
+                    self.stacks
+                        .resolve(a.stack_id)
+                        .cmp(self.stacks.resolve(b.stack_id))
+                })
+        });
+        all.truncate(n);
+        all.into_iter().cloned().collect()
+    }
+
+    /// The display label for one merged path: the innermost rendered
+    /// frame when a producer announced symbols, the historical
+    /// `stack <id>` form for raw-id fallback paths. Derived only from
+    /// producer-provided data, never from the global id, so the label
+    /// is split-invariant.
+    pub fn site(&self, gid: u32) -> String {
+        if let Some(r) = self.rendered.get(&gid) {
+            if let Some(first) = r.first() {
+                return first.clone();
+            }
+        }
+        let frames = self.stacks.resolve(gid);
+        match frames {
+            [SYNTHETIC_FRAME, raw] => format!("stack {raw:>6}"),
+            [] => "??".to_string(),
+            _ => format!("0x{:x}", frames[0]),
+        }
+    }
+
+    /// Render the fleet-aggregation report: per-producer accounting
+    /// (quarantine and lateness are *visible*, never silent) followed
+    /// by the merged top-N ([`FleetMerge::render_top`]).
+    pub fn render(&self, n: usize) -> String {
+        use std::fmt::Write;
+        let mut out = String::new();
+        writeln!(
+            out,
+            "fleet partials: {} producer(s), {} merged path(s)",
+            self.producers.len(),
+            self.cumulative.len(),
+        )
+        .unwrap();
+        for p in &self.producers {
+            write!(
+                out,
+                "  {}: {} line(s) ok, {} partial(s), {} quarantined",
+                p.name, p.stats.lines_ok, p.stats.partials, p.stats.quarantined,
+            )
+            .unwrap();
+            if p.late > 0 {
+                write!(out, ", {} late window(s)", p.late).unwrap();
+            }
+            match &p.stats.first_error {
+                Some(e) => writeln!(out, " (first error: {e})").unwrap(),
+                None => writeln!(out).unwrap(),
+            }
+        }
+        out.push_str(&self.render_top(n));
+        out
+    }
+
+    /// The merged top-N section alone — every byte derives from
+    /// producer-provided data, so this section is identical no matter
+    /// how the same windows were split across producers (the accounting
+    /// lines above it legitimately vary with the split). This is the
+    /// surface the golden/property tests and the CI fleet smoke diff.
+    pub fn render_top(&self, n: usize) -> String {
+        use std::fmt::Write;
+        let mut out = String::new();
+        let top = self.top(n);
+        if top.is_empty() {
+            writeln!(out, "no partials merged").unwrap();
+        } else {
+            writeln!(out, "top {} path(s) by CMetric:", top.len()).unwrap();
+            for p in &top {
+                writeln!(
+                    out,
+                    "  {}  cm {:>10.3} ms  slices {:>6}  first seen {}",
+                    self.site(p.stack_id),
+                    p.cm_fs as f64 / 1e12,
+                    p.slices,
+                    p.first_seen,
+                )
+                .unwrap();
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gapp::sink::json::SCHEMA_VERSION;
+    use crate::util::json::Json;
+
+    pub(crate) fn window_line(index: u64, shard: u64, paths: &[(u64, u64, u64, u64)]) -> String {
+        Json::obj(vec![
+            ("schema", Json::u64(SCHEMA_VERSION)),
+            ("event", Json::str("shard_window")),
+            (
+                "shard_window",
+                Json::obj(vec![
+                    ("index", Json::u64(index)),
+                    ("shard", Json::u64(shard)),
+                    ("slices", Json::u64(paths.iter().map(|p| p.2).sum())),
+                    ("drained", Json::u64(paths.iter().map(|p| p.2).sum())),
+                    ("drops", Json::u64(0)),
+                    (
+                        "paths",
+                        Json::Arr(
+                            paths
+                                .iter()
+                                .map(|(id, cm, sl, fs)| {
+                                    Json::obj(vec![
+                                        ("stack_id", Json::u64(*id)),
+                                        ("cm_fs", Json::u64(*cm)),
+                                        ("slices", Json::u64(*sl)),
+                                        ("first_seen", Json::u64(*fs)),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ),
+                ]),
+            ),
+        ])
+        .to_compact()
+    }
+
+    pub(crate) fn symbols_line(entries: &[(u64, &[u64], &[&str])]) -> String {
+        Json::obj(vec![
+            ("schema", Json::u64(SCHEMA_VERSION)),
+            ("event", Json::str("symbols")),
+            (
+                "symbols",
+                Json::obj(vec![(
+                    "entries",
+                    Json::Arr(
+                        entries
+                            .iter()
+                            .map(|(id, frames, rendered)| {
+                                Json::obj(vec![
+                                    ("stack_id", Json::u64(*id)),
+                                    (
+                                        "frames",
+                                        Json::Arr(
+                                            frames.iter().map(|a| Json::u64(*a)).collect(),
+                                        ),
+                                    ),
+                                    (
+                                        "rendered",
+                                        Json::Arr(rendered.iter().map(Json::str).collect()),
+                                    ),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                )]),
+            ),
+        ])
+        .to_compact()
+    }
+
+    #[test]
+    fn same_frames_from_different_local_ids_merge_into_one_global_path() {
+        // Producer A calls the path "id 7"; producer B calls the same
+        // frames "id 3". Symbol exchange must unify them.
+        let a = format!(
+            "{}\n{}\n",
+            symbols_line(&[(7, &[0x40, 0x90], &["emd (emd.c:57)", "main"])]),
+            window_line(1, 0, &[(7, 100, 2, 40)]),
+        );
+        let b = format!(
+            "{}\n{}\n",
+            symbols_line(&[(3, &[0x40, 0x90], &["emd (emd.c:57)", "main"])]),
+            window_line(1, 0, &[(3, 50, 1, 12)]),
+        );
+        let mut fleet = FleetMerge::new();
+        fleet.ingest("nodeA", &a);
+        fleet.ingest("nodeB", &b);
+        assert_eq!(fleet.quarantined(), 0);
+        assert_eq!(fleet.len(), 1, "one global path");
+        let top = fleet.top(10);
+        assert_eq!(top[0].cm_fs, 150);
+        assert_eq!(top[0].slices, 3);
+        assert_eq!(top[0].first_seen, 12);
+        // Symbol round-trip: the merged id resolves to the original
+        // producer frames.
+        assert_eq!(fleet.resolve(top[0].stack_id), &[0x40, 0x90]);
+        assert_eq!(fleet.site(top[0].stack_id), "emd (emd.c:57)");
+        // Per-producer attribution: both producers contributed.
+        assert_eq!(top[0].app_slices.get(&0), Some(&2));
+        assert_eq!(top[0].app_slices.get(&1), Some(&1));
+        assert!(fleet.render(5).contains("emd (emd.c:57)"));
+    }
+
+    #[test]
+    fn unannounced_ids_fall_back_to_raw_id_identity() {
+        // No symbols events at all (an old capture): equal raw ids
+        // merge across producers, and the report renders the raw id.
+        let a = window_line(1, 0, &[(7, 100, 2, 40)]);
+        let b = window_line(1, 1, &[(7, 30, 1, 90)]);
+        let mut fleet = FleetMerge::new();
+        fleet.ingest("nodeA", &a);
+        fleet.ingest("nodeB", &b);
+        assert_eq!(fleet.len(), 1);
+        let top = fleet.top(10);
+        assert_eq!(top[0].cm_fs, 130);
+        let r = fleet.render(5);
+        assert!(r.contains("stack      7"), "{r}");
+    }
+
+    #[test]
+    fn id_stability_violations_are_quarantined() {
+        // Same local id announced twice with different frames: the
+        // second announcement is a protocol violation — quarantined,
+        // and the first meaning stays in force.
+        let text = format!(
+            "{}\n{}\n{}\n",
+            symbols_line(&[(7, &[0x40], &["f"])]),
+            symbols_line(&[(7, &[0x41], &["g"])]),
+            window_line(1, 0, &[(7, 100, 1, 5)]),
+        );
+        let mut fleet = FleetMerge::new();
+        fleet.ingest("p", &text);
+        let reports = fleet.producers();
+        assert_eq!(reports[0].stats.quarantined, 1);
+        let err = reports[0].stats.first_error.clone().unwrap();
+        assert!(err.contains("id-stability"), "{err}");
+        assert_eq!(fleet.resolve(fleet.top(1)[0].stack_id), &[0x40]);
+        // Re-announcing the *same* frames (a resume replay) is a no-op.
+        let text = format!("{0}\n{0}\n", symbols_line(&[(9, &[0x50], &["h"])]));
+        let mut fleet = FleetMerge::new();
+        fleet.ingest("p", &text);
+        assert_eq!(fleet.quarantined(), 0);
+    }
+
+    #[test]
+    fn rendering_collisions_resolve_deterministically() {
+        // Two producers announce the same frames with different
+        // renderings; the lexicographically smaller must win no matter
+        // the ingestion order.
+        let sym_a = symbols_line(&[(1, &[0x40], &["beta"])]);
+        let sym_b = symbols_line(&[(2, &[0x40], &["alpha"])]);
+        let win_a = window_line(1, 0, &[(1, 10, 1, 3)]);
+        let win_b = window_line(1, 0, &[(2, 10, 1, 4)]);
+        for order in [[0usize, 1], [1, 0]] {
+            let mut fleet = FleetMerge::new();
+            let streams = [
+                format!("{sym_a}\n{win_a}\n"),
+                format!("{sym_b}\n{win_b}\n"),
+            ];
+            for i in order {
+                fleet.ingest(&format!("p{i}"), &streams[i]);
+            }
+            let top = fleet.top(1);
+            assert_eq!(fleet.site(top[0].stack_id), "alpha");
+        }
+    }
+}

@@ -1,0 +1,35 @@
+//! Fleet aggregation: merge live session streams from N producer
+//! processes into one merged session (GAPP's "profile the fleet, not
+//! the host" layer — ROADMAP north star, open item 1).
+//!
+//! The subsystem crosses the last serialization boundary the profiler
+//! has: the process. Producers ship their opt-in `shard_window`
+//! partials — plus the additive `symbols` id → frames exchange — as
+//! flush-per-event JSONL over a pipe or Unix socket ([`StreamSink`],
+//! `gapp live --stream PATH`). The service (`gapp serve --listen
+//! PATH`, [`service::serve`]) re-interns every producer's session-local
+//! stack ids through one global map ([`FleetMerge`]), aligns windows
+//! across producers under a bounded reorder horizon
+//! ([`ReorderHorizon`]), folds the partials through the in-process
+//! [`crate::gapp::stream::merge_tree`] at fleet-window close, and
+//! re-emits one merged schema-1 session through the ordinary sink API
+//! — so `gapp aggregate` (offline, [`FleetMerge::ingest_file`]) is the
+//! one-shot special case and merged streams aggregate hierarchically.
+//!
+//! Correctness leans on the same two theorems as every earlier merge
+//! layer: all folded quantities are associative (sums,
+//! `min(first_seen)`) and path identity is producer-invariant (the
+//! announced frames, or the raw id for pre-symbols captures), so the
+//! merged report is byte-identical no matter how the same windows were
+//! split across 1, 2, or N producers — property-tested in
+//! `tests/fleet_golden.rs` and smoke-tested end-to-end in CI.
+
+pub mod horizon;
+pub mod merge;
+pub mod service;
+pub mod stream;
+
+pub use horizon::{Offer, ReorderHorizon, WindowPart};
+pub use merge::{FleetMerge, Ingested};
+pub use service::{serve, serve_on, ServeConfig};
+pub use stream::StreamSink;

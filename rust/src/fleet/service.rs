@@ -1,0 +1,331 @@
+//! The fleet aggregation service: `gapp serve --listen PATH`.
+//!
+//! A long-lived ingest loop in the PR 8 lane shape — one blocking
+//! reader thread per accepted connection, each feeding lines into one
+//! shared channel; a single merge driver on the caller's thread owns
+//! the [`FleetMerge`] core, the [`ReorderHorizon`] and the output
+//! sinks. Producers connect with `gapp live --stream PATH`, the driver
+//! re-interns their id namespaces and folds their `shard_window`
+//! partials through the existing [`merge_tree`] at fleet-window close,
+//! and the result is re-emitted as **one merged session** through the
+//! ordinary sink API: a `symbols` announcement per window of fresh
+//! global ids, then one merged `shard_window` whose paths carry
+//! per-producer attribution (`app_slices` keyed by accept-order slot,
+//! serialized as the additive `"apps"` field). The merged stream is
+//! itself a valid schema-1 capture — feeding it back through `gapp
+//! aggregate` reproduces the same report (hierarchical aggregation).
+//!
+//! Robustness follows the reader-half contract: malformed lines are
+//! quarantined per producer (count + first error, never a panic),
+//! stragglers past the reorder horizon are folded into the cumulative
+//! total and accounted late — the *final* report stays lossless, and
+//! `gapp aggregate` is exactly the one-shot special case of this loop.
+
+use std::io::{BufRead, BufReader};
+use std::os::unix::fs::FileTypeExt;
+use std::os::unix::net::UnixListener;
+use std::path::Path;
+use std::sync::mpsc::{channel, Sender};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::gapp::config::GappConfig;
+use crate::gapp::sink::{
+    ReportEvent, ReportSink, SessionInfo, SessionMode, ShardWindowEvent, SymbolEntry,
+    SymbolsEvent,
+};
+use crate::gapp::stream::merge_tree;
+use crate::util::FxHashSet;
+
+use super::horizon::{ClosedWindow, Offer, ReorderHorizon, WindowPart};
+use super::merge::{FleetMerge, Ingested};
+
+/// Resolved `gapp serve` configuration.
+pub struct ServeConfig {
+    /// Unix socket path to listen on.
+    pub listen: String,
+    /// Number of producer connections to serve before finishing (the
+    /// v1 service is bounded: it exits, renders and returns once every
+    /// expected producer has disconnected).
+    pub producers: usize,
+    /// Top-N paths in the final fleet report.
+    pub top: usize,
+    /// Reorder horizon, in windows (see [`ReorderHorizon`]).
+    pub horizon: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            listen: String::new(),
+            producers: 1,
+            top: 10,
+            horizon: 8,
+        }
+    }
+}
+
+enum Msg {
+    Line { slot: usize, text: String },
+    Eof { slot: usize },
+}
+
+/// Validate and bind the listen address. A stale *socket* left by a
+/// previous serve is replaced; anything else at the path is refused —
+/// never silently clobber an operator's file.
+fn bind(listen: &str) -> Result<UnixListener> {
+    if listen.is_empty() {
+        return Err(anyhow!("--listen needs a non-empty socket path"));
+    }
+    let p = Path::new(listen);
+    if let Some(dir) = p.parent() {
+        if !dir.as_os_str().is_empty() && !dir.is_dir() {
+            return Err(anyhow!(
+                "listen address {listen:?} is malformed: parent directory {dir:?} \
+                 does not exist"
+            ));
+        }
+    }
+    if let Ok(md) = std::fs::symlink_metadata(p) {
+        if md.file_type().is_socket() {
+            std::fs::remove_file(p)
+                .with_context(|| format!("cannot remove stale socket {listen:?}"))?;
+        } else {
+            return Err(anyhow!(
+                "listen address {listen:?} exists and is not a socket; refusing to \
+                 replace it"
+            ));
+        }
+    }
+    UnixListener::bind(p).with_context(|| format!("cannot listen on {listen:?}"))
+}
+
+fn reader_loop(slot: usize, conn: std::os::unix::net::UnixStream, tx: Sender<Msg>) {
+    let mut r = BufReader::new(conn);
+    let mut line = String::new();
+    loop {
+        line.clear();
+        match r.read_line(&mut line) {
+            Ok(0) => break,
+            Ok(_) => {
+                let text = line.trim_end_matches('\n').to_string();
+                if text.trim().is_empty() {
+                    continue;
+                }
+                if tx.send(Msg::Line { slot, text }).is_err() {
+                    return; // driver gone; nothing left to feed
+                }
+            }
+            // A torn connection is an EOF with a reason the per-line
+            // quarantine already covered as far as data goes.
+            Err(_) => break,
+        }
+    }
+    let _ = tx.send(Msg::Eof { slot });
+}
+
+/// The merge driver's per-run emission state.
+struct Driver<'a> {
+    fleet: FleetMerge,
+    horizon: ReorderHorizon,
+    sinks: &'a mut [Box<dyn ReportSink>],
+    /// Global ids already announced downstream.
+    announced: FxHashSet<u32>,
+}
+
+impl Driver<'_> {
+    /// Ensure `slot` exists in both the merge core and the horizon
+    /// (readers are numbered by accept order; their first line may
+    /// arrive in any order).
+    fn ensure(&mut self, slot: usize) {
+        while self.fleet.producer_count() <= slot {
+            let n = self.fleet.producer_count();
+            self.fleet.register(&format!("producer-{n}"));
+        }
+        self.horizon.ensure(slot);
+    }
+
+    fn on_line(&mut self, slot: usize, text: &str) -> Result<()> {
+        self.ensure(slot);
+        match self.fleet.ingest_line(slot, text) {
+            Some(Ingested::Window {
+                index,
+                slices,
+                drained,
+                drops,
+                paths,
+                ..
+            }) => {
+                let part = WindowPart {
+                    producer: slot,
+                    slices,
+                    drained,
+                    drops,
+                    paths,
+                };
+                if let Offer::Late(part) = self.horizon.offer(part, index) {
+                    // Past the horizon: out of the live merged stream,
+                    // but never out of the final report.
+                    self.fleet.note_late(slot);
+                    self.fleet.fold(&part.paths);
+                }
+                self.drain_ready()
+            }
+            Some(Ingested::Session { apps }) => {
+                if !apps.is_empty() {
+                    self.fleet.rename(slot, apps.join("+"));
+                }
+                Ok(())
+            }
+            // Symbol announcements update the merge core's tables as a
+            // side effect of validation; the downstream re-announcement
+            // happens per merged window so it stays paired with the
+            // partials that need it.
+            Some(Ingested::Symbols(_)) | Some(Ingested::Other) | None => Ok(()),
+        }
+    }
+
+    fn on_eof(&mut self, slot: usize) -> Result<()> {
+        self.ensure(slot);
+        self.horizon.eof(slot);
+        self.drain_ready()
+    }
+
+    fn drain_ready(&mut self) -> Result<()> {
+        for w in self.horizon.ready() {
+            self.emit_window(w)?;
+        }
+        Ok(())
+    }
+
+    /// Close one fleet window: pairwise-merge the buffered parts
+    /// (producer-count-invariant by associativity + `first_seen`
+    /// reconciliation), announce any global ids new to the merged
+    /// stream, re-emit as one merged `shard_window`, fold into the
+    /// cumulative total.
+    fn emit_window(&mut self, w: ClosedWindow) -> Result<()> {
+        let merged = merge_tree(w.parts);
+        let mut fresh: Vec<SymbolEntry> = Vec::new();
+        for p in &merged {
+            if !self.announced.insert(p.stack_id) {
+                continue;
+            }
+            fresh.push(SymbolEntry {
+                stack_id: p.stack_id,
+                frames: self.fleet.resolve(p.stack_id).to_vec(),
+                rendered: self
+                    .fleet
+                    .rendering(p.stack_id)
+                    .map(|r| r.to_vec())
+                    .unwrap_or_default(),
+            });
+        }
+        if !fresh.is_empty() {
+            emit(
+                self.sinks,
+                &ReportEvent::Symbols(SymbolsEvent { entries: &fresh }),
+            )?;
+        }
+        emit(
+            self.sinks,
+            &ReportEvent::ShardWindow(ShardWindowEvent {
+                index: w.index,
+                shard: 0,
+                slices: w.slices,
+                drained: w.drained,
+                drops: w.drops,
+                paths: &merged,
+            }),
+        )?;
+        self.fleet.fold(&merged);
+        Ok(())
+    }
+}
+
+fn emit(sinks: &mut [Box<dyn ReportSink>], ev: &ReportEvent<'_>) -> Result<()> {
+    for s in sinks.iter_mut() {
+        s.on_event(ev)?;
+    }
+    Ok(())
+}
+
+/// Run the fleet service: bind, accept `cfg.producers` connections,
+/// merge until every producer disconnects, and return the rendered
+/// fleet report. The merged session streams through `sinks` as it
+/// happens.
+pub fn serve(cfg: &ServeConfig, sinks: &mut [Box<dyn ReportSink>]) -> Result<String> {
+    let listener = bind(&cfg.listen)?;
+    serve_on(listener, cfg, sinks)
+}
+
+/// [`serve`] on an already-bound listener (tests bind their own).
+pub fn serve_on(
+    listener: UnixListener,
+    cfg: &ServeConfig,
+    sinks: &mut [Box<dyn ReportSink>],
+) -> Result<String> {
+    let nproducers = cfg.producers.max(1);
+    let info = SessionInfo {
+        mode: SessionMode::Live,
+        apps: Vec::new(),
+        shards: 1,
+        window_ns: None,
+        config: GappConfig::default(),
+    };
+    emit(sinks, &ReportEvent::SessionStart(&info))?;
+
+    let mut driver = Driver {
+        fleet: FleetMerge::new(),
+        horizon: ReorderHorizon::new(cfg.horizon),
+        sinks,
+        announced: FxHashSet::default(),
+    };
+    // Every expected producer holds the horizon open from the start: a
+    // fleet window may only close once each of them is past it or done.
+    // A producer that merely hasn't connected yet is neither — without
+    // this, a fast peer could close (and late-mark) windows the slow
+    // connector still owes parts for.
+    driver.ensure(nproducers - 1);
+
+    std::thread::scope(|s| -> Result<()> {
+        let (tx, rx) = channel::<Msg>();
+        // Acceptor: number producers by accept order and hand each its
+        // own blocking reader thread (nested scoped spawn — the PR 8
+        // lane shape with connections instead of ring shards). Dropping
+        // the last sender is the shutdown signal for the driver.
+        s.spawn(move || {
+            for slot in 0..nproducers {
+                match listener.accept() {
+                    Ok((conn, _)) => {
+                        let tx = tx.clone();
+                        s.spawn(move || reader_loop(slot, conn, tx));
+                    }
+                    Err(_) => {
+                        let _ = tx.send(Msg::Eof { slot });
+                    }
+                }
+            }
+        });
+        // The merge driver: single-threaded fold over the interleaved
+        // line stream, exactly one merged session out the other side.
+        while let Ok(msg) = rx.recv() {
+            match msg {
+                Msg::Line { slot, text } => driver.on_line(slot, &text)?,
+                Msg::Eof { slot } => driver.on_eof(slot)?,
+            }
+        }
+        Ok(())
+    })?;
+
+    // All producers disconnected: flush whatever the horizon still
+    // holds, then close the merged session.
+    for slot in 0..nproducers {
+        driver.on_eof(slot)?;
+    }
+    let Driver { fleet, sinks, .. } = driver;
+    emit(sinks, &ReportEvent::SessionEnd { runtime_ns: 0 })?;
+    for s in sinks.iter_mut() {
+        s.finish()?;
+    }
+    Ok(fleet.render(cfg.top))
+}

@@ -1,0 +1,147 @@
+//! Producer-side transport: frame the session's event stream as JSONL
+//! over a pipe or Unix socket, one flushed line per event.
+//!
+//! [`StreamSink`] is an ordinary [`ReportSink`], attached through the
+//! session builder like any other (`Session::sink(..)` tees
+//! internally), so a producer streams to a fleet aggregator with no
+//! driver changes: the CLI resolves `--stream PATH` to this sink and
+//! everything else is untouched. The JSONL framing is byte-identical
+//! to `--format jsonl --output FILE` — the aggregator cannot tell a
+//! live socket from a replayed capture — except that every event is
+//! flushed as it is emitted ([`JsonlSink::streaming`]), because a
+//! buffered tail on a live transport would hold the newest windows
+//! back indefinitely.
+
+use std::fs::{File, OpenOptions};
+use std::io;
+use std::os::unix::fs::FileTypeExt;
+use std::os::unix::net::UnixStream;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::gapp::sink::{JsonlSink, ReportEvent, ReportSink};
+
+/// The connected byte stream under the JSONL framing. A Unix socket
+/// when the path names one (the `gapp serve` transport), otherwise an
+/// appended file — which covers FIFOs (`mkfifo`) and plain capture
+/// files with the same open call.
+pub enum StreamConn {
+    Unix(UnixStream),
+    File(File),
+}
+
+impl io::Write for StreamConn {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        match self {
+            StreamConn::Unix(s) => s.write(buf),
+            StreamConn::File(f) => f.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        match self {
+            StreamConn::Unix(s) => s.flush(),
+            StreamConn::File(f) => f.flush(),
+        }
+    }
+}
+
+/// A [`ReportSink`] that ships the session's events to a fleet
+/// aggregator as flush-per-event JSONL.
+pub struct StreamSink {
+    inner: JsonlSink<StreamConn>,
+}
+
+impl StreamSink {
+    /// Connect to a stream target. An existing Unix socket connects as
+    /// a socket; anything else (a FIFO, a plain file, a not-yet-created
+    /// path) opens in append mode so several producers can share one
+    /// FIFO without clobbering each other.
+    pub fn connect(path: &str) -> Result<StreamSink> {
+        if path.is_empty() {
+            return Err(anyhow!("--stream needs a non-empty path"));
+        }
+        let conn = match std::fs::metadata(path) {
+            Ok(md) if md.file_type().is_socket() => StreamConn::Unix(
+                UnixStream::connect(path)
+                    .with_context(|| format!("cannot connect stream socket {path:?}"))?,
+            ),
+            _ => StreamConn::File(
+                OpenOptions::new()
+                    .append(true)
+                    .create(true)
+                    .open(path)
+                    .with_context(|| format!("cannot open stream target {path:?}"))?,
+            ),
+        };
+        Ok(StreamSink {
+            inner: JsonlSink::streaming(conn),
+        })
+    }
+}
+
+impl ReportSink for StreamSink {
+    fn on_event(&mut self, ev: &ReportEvent<'_>) -> Result<()> {
+        self.inner.on_event(ev)
+    }
+
+    fn finish(&mut self) -> Result<()> {
+        self.inner.finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{BufRead, BufReader};
+    use std::os::unix::net::UnixListener;
+
+    #[test]
+    fn stream_sink_appends_jsonl_to_a_file() {
+        let path = std::env::temp_dir().join("gapp_stream_sink_file.jsonl");
+        let path = path.to_str().unwrap().to_string();
+        let _ = std::fs::remove_file(&path);
+        {
+            let mut sink = StreamSink::connect(&path).unwrap();
+            sink.on_event(&ReportEvent::SessionEnd { runtime_ns: 7 }).unwrap();
+            sink.finish().unwrap();
+        }
+        {
+            // A second producer appends, never truncates.
+            let mut sink = StreamSink::connect(&path).unwrap();
+            sink.on_event(&ReportEvent::SessionEnd { runtime_ns: 8 }).unwrap();
+            sink.finish().unwrap();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert!(lines[0].contains("\"session_end\""));
+        assert!(lines[1].contains("\"runtime_ns\":8"));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn stream_sink_connects_to_a_unix_socket_and_each_event_is_readable_immediately() {
+        let path = std::env::temp_dir().join("gapp_stream_sink.sock");
+        let path = path.to_str().unwrap().to_string();
+        let _ = std::fs::remove_file(&path);
+        let listener = UnixListener::bind(&path).unwrap();
+        let mut sink = StreamSink::connect(&path).unwrap();
+        let (conn, _) = listener.accept().unwrap();
+        let mut reader = BufReader::new(conn);
+
+        // The regression this guards: an event must be on the wire as
+        // soon as on_event returns — before finish(), before the
+        // session ends. read_line would block forever on a buffered
+        // writer that held the line back.
+        sink.on_event(&ReportEvent::SessionEnd { runtime_ns: 42 }).unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("\"event\":\"session_end\""), "{line}");
+        assert!(line.contains("\"runtime_ns\":42"), "{line}");
+
+        sink.finish().unwrap();
+        drop(sink);
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -45,6 +45,7 @@ use super::faults::{FaultPlan, DEGRADE_HEADROOM};
 use super::records::Record;
 use super::sink::{
     FinalEvent, ReportEvent, ReportSink, SessionInfo, SessionMode, ShardWindowEvent,
+    SymbolEntry, SymbolsEvent,
 };
 use super::stream::live::live_lines;
 use super::stream::{
@@ -945,6 +946,12 @@ fn run_windowed_inner(
         }
     }
 
+    // Stack ids already announced over the symbol-exchange event
+    // (opt-in, with the partials). Ids are session-stable — the
+    // userspace map never recycles, and without LRU the kernel map
+    // only ever grows — so one announcement per id suffices; a resume
+    // replay may re-announce, which consumers treat as a no-op.
+    let mut announced: crate::util::FxHashSet<u32> = crate::util::FxHashSet::default();
     let runtime_ns = if let Some(t) = finished_in_replay {
         t
     } else {
@@ -1023,6 +1030,43 @@ fn run_windowed_inner(
                         m.insert(old, p.stack_id);
                     }
                     id_remap = Some(m);
+                }
+                // Symbol exchange (opt-in, with the partials): announce
+                // every id this window introduced — frames plus the
+                // producer-side symbolization — *before* the partials
+                // that reference it, so a cross-process consumer can
+                // resolve each id on arrival. Every partial path id
+                // appears in the merged snapshot (same invariant the
+                // remap relies on), so walking the snapshot covers the
+                // window's whole id set.
+                if pending_partials.is_some() {
+                    let stacks =
+                        user_stacks.as_ref().unwrap_or(&core.kernel.stacks);
+                    let mut entries: Vec<SymbolEntry> = Vec::new();
+                    for p in &snapshot {
+                        if !announced.insert(p.stack_id) {
+                            continue;
+                        }
+                        let frames = stacks.resolve(p.stack_id).to_vec();
+                        let owner = p.owner_app(multi_app, syms.len());
+                        let rendered = frames
+                            .iter()
+                            .map(|a| syms[owner].render(*a))
+                            .collect();
+                        entries.push(SymbolEntry {
+                            stack_id: p.stack_id,
+                            frames,
+                            rendered,
+                        });
+                    }
+                    if !entries.is_empty() {
+                        emit(
+                            sinks,
+                            &ReportEvent::Symbols(SymbolsEvent {
+                                entries: &entries,
+                            }),
+                        )?;
+                    }
                 }
                 // Emit the per-shard partials (opt-in), after the
                 // re-key so a cross-process consumer never sees a
@@ -1232,6 +1276,7 @@ mod tests {
                             assert!(i.window_ns.is_none());
                             "start"
                         }
+                        ReportEvent::Symbols(_) => "symbols",
                         ReportEvent::ShardWindow(_) => "shard",
                         ReportEvent::Degraded { .. } => "degraded",
                         ReportEvent::WindowClosed(_) => "window",

@@ -298,9 +298,11 @@ impl<W: io::Write> ReportSink for HumanSink<W> {
             ReportEvent::SessionStart(info) => {
                 self.mode = info.mode;
             }
-            // Shard partials are a machine-transport payload; the text
-            // backend stays byte-identical to the pre-sink CLI whether
-            // or not they are enabled.
+            // Shard partials and the symbol exchange are a
+            // machine-transport payload; the text backend stays
+            // byte-identical to the pre-sink CLI whether or not they
+            // are enabled.
+            ReportEvent::Symbols(_) => {}
             ReportEvent::ShardWindow(_) => {}
             // Degradation is rendered inline on the window line and in
             // the final report's accounting — the standalone notice is

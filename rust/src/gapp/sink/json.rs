@@ -29,6 +29,7 @@ use crate::util::json::Json;
 
 use super::{
     FinalEvent, ReportEvent, ReportSink, ScorecardEvent, SessionInfo, ShardWindowEvent,
+    SymbolsEvent,
 };
 
 /// Schema version stamped on every document and JSONL line.
@@ -98,17 +99,71 @@ pub fn shard_window_json(sw: &ShardWindowEvent<'_>) -> Json {
                 sw.paths
                     .iter()
                     .map(|p| {
-                        Json::obj(vec![
+                        let mut fields = vec![
                             ("stack_id", Json::u64(p.stack_id as u64)),
                             ("cm_fs", Json::u64(p.cm_fs)),
                             ("slices", Json::u64(p.slices)),
                             ("first_seen", Json::u64(p.first_seen)),
-                        ])
+                        ];
+                        // Additive within schema v1: per-app (or, in a
+                        // fleet-merged stream, per-producer) slice
+                        // attribution. Readers that predate the key
+                        // ignore it; the merge math never consumes it
+                        // (sums and stamps above are self-sufficient).
+                        if !p.app_slices.is_empty() {
+                            let mut apps: Vec<(u16, u64)> =
+                                p.app_slices.iter().map(|(a, n)| (*a, *n)).collect();
+                            apps.sort_unstable();
+                            fields.push((
+                                "apps",
+                                Json::Arr(
+                                    apps.into_iter()
+                                        .map(|(a, n)| {
+                                            Json::obj(vec![
+                                                ("app", Json::u64(a as u64)),
+                                                ("slices", Json::u64(n)),
+                                            ])
+                                        })
+                                        .collect(),
+                                ),
+                            ));
+                        }
+                        Json::obj(fields)
                     })
                     .collect(),
             ),
         ),
     ])
+}
+
+/// The symbol-exchange payload: every newly interned stack id with its
+/// raw frames and the producer-side rendering of each frame. Ids are
+/// session-stable by contract (an id, once announced, never changes
+/// meaning), so a consumer needs each entry exactly once — re-announcing
+/// an id with *different* frames is a protocol violation a fleet reader
+/// quarantines.
+pub fn symbols_json(sy: &SymbolsEvent<'_>) -> Json {
+    Json::obj(vec![(
+        "entries",
+        Json::Arr(
+            sy.entries
+                .iter()
+                .map(|e| {
+                    Json::obj(vec![
+                        ("stack_id", Json::u64(e.stack_id as u64)),
+                        (
+                            "frames",
+                            Json::Arr(e.frames.iter().map(|a| Json::u64(*a)).collect()),
+                        ),
+                        (
+                            "rendered",
+                            Json::Arr(e.rendered.iter().map(Json::str).collect()),
+                        ),
+                    ])
+                })
+                .collect(),
+        ),
+    )])
 }
 
 /// One closed window. The in-memory merge snapshot is deliberately not
@@ -557,9 +612,11 @@ impl<W: io::Write> ReportSink for JsonSink<W> {
             ReportEvent::SessionStart(info) => {
                 self.session = session_info_json(info);
             }
-            // Shard partials are a streaming-transport payload; the
-            // one-document session summary keeps its v1 shape (and its
-            // size) whether or not they are enabled.
+            // Shard partials and their symbol exchange are a
+            // streaming-transport payload; the one-document session
+            // summary keeps its v1 shape (and its size) whether or not
+            // they are enabled.
+            ReportEvent::Symbols(_) => {}
             ReportEvent::ShardWindow(_) => {}
             // Same policy for degradation notices: the accounting lands
             // in the window and report objects, so the document already
@@ -619,11 +676,27 @@ impl<W: io::Write> ReportSink for JsonSink<W> {
 /// `Report::window_drops`).
 pub struct JsonlSink<W: io::Write> {
     w: W,
+    /// Flush after every line. File outputs keep the buffered default;
+    /// live transports (pipes, sockets) need each event on the wire the
+    /// moment it is emitted — a buffered writer would hold the tail of
+    /// a live stream until `finish`, which for a long-lived producer is
+    /// indefinitely.
+    flush_each: bool,
 }
 
 impl<W: io::Write> JsonlSink<W> {
     pub fn new(w: W) -> JsonlSink<W> {
-        JsonlSink { w }
+        JsonlSink {
+            w,
+            flush_each: false,
+        }
+    }
+
+    /// Line-buffered transport mode: every event is flushed as soon as
+    /// it is written, so a reader on the other end of a pipe or socket
+    /// sees it immediately.
+    pub fn streaming(w: W) -> JsonlSink<W> {
+        JsonlSink { w, flush_each: true }
     }
 
     pub fn into_inner(self) -> W {
@@ -638,6 +711,9 @@ impl<W: io::Write> JsonlSink<W> {
         all.append(&mut fields);
         self.w.write_all(Json::obj(all).to_compact().as_bytes())?;
         self.w.write_all(b"\n")?;
+        if self.flush_each {
+            self.w.flush()?;
+        }
         Ok(())
     }
 }
@@ -649,6 +725,9 @@ impl<W: io::Write> ReportSink for JsonlSink<W> {
                 "session_start",
                 vec![("session", session_info_json(info))],
             ),
+            ReportEvent::Symbols(sy) => {
+                self.line("symbols", vec![("symbols", symbols_json(sy))])
+            }
             ReportEvent::ShardWindow(sw) => self.line(
                 "shard_window",
                 vec![("shard_window", shard_window_json(sw))],
@@ -1036,6 +1115,97 @@ mod tests {
         doc.finish().unwrap();
         let with = Json::parse(&String::from_utf8(doc.into_inner()).unwrap()).unwrap();
         assert_eq!(with.get("scorecards").unwrap().as_arr().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn symbols_stream_as_schema_stamped_lines_and_stay_out_of_documents() {
+        use crate::gapp::sink::SymbolEntry;
+        let entries = vec![SymbolEntry {
+            stack_id: 7,
+            frames: vec![0x40, 0x90],
+            rendered: vec!["emd (emd.c:57)".to_string(), "main".to_string()],
+        }];
+        let sy = SymbolsEvent { entries: &entries };
+        let mut sink = JsonlSink::new(Vec::new());
+        sink.on_event(&ReportEvent::Symbols(sy)).unwrap();
+        sink.finish().unwrap();
+        let out = String::from_utf8(sink.into_inner()).unwrap();
+        let v = Json::parse(out.lines().next().unwrap()).unwrap();
+        assert_eq!(v.get("schema").unwrap().as_u64(), Some(SCHEMA_VERSION));
+        assert_eq!(v.get("event").unwrap().as_str(), Some("symbols"));
+        let e = &v.get("symbols").unwrap().get("entries").unwrap().as_arr().unwrap()[0];
+        assert_eq!(e.get("stack_id").unwrap().as_u64(), Some(7));
+        assert_eq!(e.get("frames").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(
+            e.get("rendered").unwrap().as_arr().unwrap()[0].as_str(),
+            Some("emd (emd.c:57)")
+        );
+
+        // The one-document sink ignores the exchange (additive event).
+        let mut doc = JsonSink::new(Vec::new());
+        doc.on_event(&ReportEvent::Symbols(sy)).unwrap();
+        doc.on_event(&ReportEvent::SessionEnd { runtime_ns: 1 }).unwrap();
+        doc.finish().unwrap();
+        let parsed =
+            Json::parse(&String::from_utf8(doc.into_inner()).unwrap()).unwrap();
+        assert_eq!(parsed.get("windows").unwrap().as_arr().unwrap().len(), 0);
+    }
+
+    /// An [`io::Write`] that records every flush and how many bytes had
+    /// been written when it happened — the oracle for transport mode.
+    struct FlushProbe {
+        written: usize,
+        flushes: Vec<usize>,
+    }
+
+    impl io::Write for &mut FlushProbe {
+        fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+            self.written += buf.len();
+            Ok(buf.len())
+        }
+
+        fn flush(&mut self) -> io::Result<()> {
+            self.flushes.push(self.written);
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn streaming_jsonl_flushes_every_event_as_it_is_emitted() {
+        // Transport mode: each event is on the wire (flushed) the
+        // moment on_event returns — a reader never waits for finish().
+        let mut probe = FlushProbe { written: 0, flushes: Vec::new() };
+        {
+            let mut sink = JsonlSink::streaming(&mut probe);
+            sink.on_event(&ReportEvent::SessionEnd { runtime_ns: 1 }).unwrap();
+        }
+        assert_eq!(probe.flushes.len(), 1, "one flush per event");
+        assert_eq!(
+            probe.flushes[0], probe.written,
+            "the whole line was flushed, not a prefix"
+        );
+        let after_first = probe.written;
+        {
+            let mut sink = JsonlSink::streaming(&mut probe);
+            sink.on_event(&ReportEvent::SessionEnd { runtime_ns: 2 }).unwrap();
+            sink.on_event(&ReportEvent::SessionEnd { runtime_ns: 3 }).unwrap();
+        }
+        assert_eq!(probe.flushes.len(), 3);
+        assert!(probe.flushes[1] > after_first);
+
+        // The default constructor keeps the buffered behavior: no
+        // flush until finish().
+        let mut probe = FlushProbe { written: 0, flushes: Vec::new() };
+        {
+            let mut sink = JsonlSink::new(&mut probe);
+            sink.on_event(&ReportEvent::SessionEnd { runtime_ns: 1 }).unwrap();
+        }
+        assert!(probe.flushes.is_empty(), "buffered mode must not flush per event");
+        {
+            let mut sink = JsonlSink::new(&mut probe);
+            sink.finish().unwrap();
+        }
+        assert_eq!(probe.flushes.len(), 1);
     }
 
     #[test]

@@ -10,6 +10,10 @@
 //!   shard_partials`, tree strategy only): one event per (window ×
 //!   shard) carrying that shard's partial aggregation before the merge
 //!   tree combines it — the seam a cross-process merge ships as JSONL.
+//! * [`ReportEvent::Symbols`] — *opt-in*, paired with `ShardWindow`:
+//!   newly interned stack ids with frames + symbolization, so a
+//!   cross-process consumer (`gapp serve` / `gapp aggregate`) can
+//!   resolve every id the partials carry.
 //! * [`ReportEvent::WindowClosed`] — one closed epoch window (live
 //!   mode only): the window's top-K, drain/drop accounting, and the
 //!   per-shard drop breakdown.
@@ -110,6 +114,29 @@ pub struct ShardWindowEvent<'a> {
     pub paths: &'a [MergedPath],
 }
 
+/// One newly interned stack: its stable id, raw frame addresses, and
+/// the producer-side symbolization of each address. Shipped once per
+/// id (the id-stability contract: an id, once announced, always means
+/// the same frames for the rest of the session), so a cross-process
+/// consumer can resolve every id in later `shard_window` partials
+/// without access to the producer's symbol tables.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SymbolEntry {
+    pub stack_id: u32,
+    /// Raw frame addresses, innermost first (the interned stack).
+    pub frames: Vec<u64>,
+    /// `frames` rendered by the producer's symbolizer, same order.
+    pub rendered: Vec<String>,
+}
+
+/// The symbol-exchange event: every stack id first interned during the
+/// window about to be emitted (opt-in, with `ShardWindow`; additive
+/// within schema v1 like the other opt-in kinds).
+#[derive(Clone, Copy, Debug)]
+pub struct SymbolsEvent<'a> {
+    pub entries: &'a [SymbolEntry],
+}
+
 /// One per-class row of a classification scorecard. Only the integer
 /// confusion counts are stored; the derived ratios are computed on
 /// demand so merged scorecards stay exact.
@@ -199,13 +226,18 @@ impl ScorecardEvent {
 }
 
 /// One event of a profiling session, in emission order:
-/// `SessionStart ((ShardWindow)* (Degraded)? WindowClosed)* Final
-/// (Scorecard)? SessionEnd` (`ShardWindow` only when opted in;
-/// `Degraded` only under `--on-overflow degrade` and only for windows
-/// that degraded; `Scorecard` only for scenario sessions).
+/// `SessionStart ((Symbols)? (ShardWindow)* (Degraded)? WindowClosed)*
+/// Final (Scorecard)? SessionEnd` (`Symbols`/`ShardWindow` only when
+/// opted in; `Degraded` only under `--on-overflow degrade` and only
+/// for windows that degraded; `Scorecard` only for scenario sessions).
 #[derive(Clone, Copy, Debug)]
 pub enum ReportEvent<'a> {
     SessionStart(&'a SessionInfo),
+    /// Newly interned stack ids with their frames and symbolization
+    /// (additive within schema v1; emitted with `ShardWindow`, before
+    /// the window's partials, so a consumer can resolve every id it is
+    /// about to receive).
+    Symbols(SymbolsEvent<'a>),
     ShardWindow(ShardWindowEvent<'a>),
     /// Graceful-degradation notice (additive within schema v1, like
     /// `ShardWindow`): the window about to close absorbed overflow

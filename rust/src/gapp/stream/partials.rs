@@ -21,6 +21,7 @@
 //! producer per file).
 
 use crate::gapp::sink::json::SCHEMA_VERSION;
+use crate::gapp::sink::SymbolEntry;
 use crate::util::json::Json;
 use crate::util::FxHashMap;
 
@@ -34,6 +35,138 @@ pub struct PartialPath {
     pub slices: u64,
     /// Earliest capture stamp (min across producers).
     pub first_seen: u64,
+}
+
+// ---- wire parsing (shared by the offline aggregator and the live
+// ---- fleet service) ----------------------------------------------------
+
+/// A validated v1 envelope: the event kind plus the parsed line.
+/// Everything past the envelope is event-specific.
+pub struct Envelope {
+    pub event: String,
+    pub value: Json,
+}
+
+/// Parse and validate one JSONL line's envelope: well-formed JSON,
+/// `schema: 1`, a string `event`. The error string is the quarantine
+/// reason, retained verbatim in [`ProducerStats::first_error`].
+pub fn parse_envelope(line: &str) -> Result<Envelope, String> {
+    let v = Json::parse(line)?;
+    let schema = v
+        .get("schema")
+        .ok_or("line carries no \"schema\" field")?
+        .as_u64()
+        .ok_or("\"schema\" is not a u64")?;
+    if schema != SCHEMA_VERSION {
+        return Err(format!(
+            "schema version {schema} (this reader understands {SCHEMA_VERSION})"
+        ));
+    }
+    let event = v
+        .get("event")
+        .ok_or("line carries no \"event\" field")?
+        .as_str()
+        .ok_or("\"event\" is not a string")?
+        .to_string();
+    Ok(Envelope { event, value: v })
+}
+
+/// One `shard_window` line as it crosses the wire: the window/shard
+/// coordinates, the shard accounting, and the partial paths. The whole
+/// line validates before any of it is used (a line corrupt in its third
+/// path must not half-apply).
+pub struct WireWindow {
+    pub index: u64,
+    pub shard: u64,
+    pub slices: u64,
+    pub drained: u64,
+    pub drops: u64,
+    pub paths: Vec<PartialPath>,
+}
+
+fn field_u64(v: &Json, key: &str) -> Result<u64, String> {
+    v.get(key)
+        .ok_or_else(|| format!("shard_window missing {key:?}"))?
+        .as_u64()
+        .ok_or_else(|| format!("field {key:?} is not a u64"))
+}
+
+/// Parse the body of a `shard_window` line (the envelope's `value`).
+pub fn parse_shard_window(v: &Json) -> Result<WireWindow, String> {
+    let body = v
+        .get("shard_window")
+        .ok_or("shard_window line carries no \"shard_window\" body")?;
+    let mut parsed: Vec<PartialPath> = Vec::new();
+    for p in body
+        .get("paths")
+        .and_then(|p| p.as_arr())
+        .ok_or("\"paths\" is missing or not an array")?
+    {
+        let field = |key: &str| -> Result<u64, String> {
+            p.get(key)
+                .ok_or_else(|| format!("path entry missing {key:?}"))?
+                .as_u64()
+                .ok_or_else(|| format!("path field {key:?} is not a u64"))
+        };
+        parsed.push(PartialPath {
+            stack_id: field("stack_id")? as u32,
+            cm_fs: field("cm_fs")?,
+            slices: field("slices")?,
+            first_seen: field("first_seen")?,
+        });
+    }
+    Ok(WireWindow {
+        index: field_u64(body, "index")?,
+        shard: field_u64(body, "shard")?,
+        slices: field_u64(body, "slices")?,
+        drained: field_u64(body, "drained")?,
+        drops: field_u64(body, "drops")?,
+        paths: parsed,
+    })
+}
+
+/// Parse the body of a `symbols` line: the producer's announcement of
+/// newly interned stack ids (id → frames → rendering).
+pub fn parse_symbols(v: &Json) -> Result<Vec<SymbolEntry>, String> {
+    let body = v
+        .get("symbols")
+        .ok_or("symbols line carries no \"symbols\" body")?;
+    let mut out = Vec::new();
+    for e in body
+        .get("entries")
+        .and_then(|e| e.as_arr())
+        .ok_or("\"entries\" is missing or not an array")?
+    {
+        let stack_id = e
+            .get("stack_id")
+            .ok_or("symbol entry missing \"stack_id\"")?
+            .as_u64()
+            .ok_or("symbol \"stack_id\" is not a u64")? as u32;
+        let frames = e
+            .get("frames")
+            .and_then(|f| f.as_arr())
+            .ok_or("symbol entry missing \"frames\" array")?
+            .iter()
+            .map(|a| a.as_u64().ok_or("symbol frame is not a u64".to_string()))
+            .collect::<Result<Vec<u64>, String>>()?;
+        let rendered = e
+            .get("rendered")
+            .and_then(|r| r.as_arr())
+            .ok_or("symbol entry missing \"rendered\" array")?
+            .iter()
+            .map(|s| {
+                s.as_str()
+                    .map(|s| s.to_string())
+                    .ok_or("rendered frame is not a string".to_string())
+            })
+            .collect::<Result<Vec<String>, String>>()?;
+        out.push(SymbolEntry {
+            stack_id,
+            frames,
+            rendered,
+        });
+    }
+    Ok(out)
 }
 
 /// Per-producer ingestion accounting.
@@ -108,51 +241,15 @@ impl PartialAggregator {
     /// `Ok(true)` = a `shard_window` line was merged; `Ok(false)` = a
     /// valid line of another event kind was skipped by policy.
     fn ingest_line(&mut self, line: &str) -> Result<bool, String> {
-        let v = Json::parse(line)?;
-        let schema = v
-            .get("schema")
-            .ok_or("line carries no \"schema\" field")?
-            .as_u64()
-            .ok_or("\"schema\" is not a u64")?;
-        if schema != SCHEMA_VERSION {
-            return Err(format!(
-                "schema version {schema} (this reader understands {SCHEMA_VERSION})"
-            ));
-        }
-        let event = v
-            .get("event")
-            .ok_or("line carries no \"event\" field")?
-            .as_str()
-            .ok_or("\"event\" is not a string")?;
-        if event != "shard_window" {
+        let env = parse_envelope(line)?;
+        if env.event != "shard_window" {
             // Another valid v1 event kind — not partial transport.
             return Ok(false);
         }
-        let body = v
-            .get("shard_window")
-            .ok_or("shard_window line carries no \"shard_window\" body")?;
         // Validate the whole line before merging any of it, so a line
         // corrupt in its third path does not half-apply.
-        let mut parsed: Vec<PartialPath> = Vec::new();
-        for p in body
-            .get("paths")
-            .and_then(|p| p.as_arr())
-            .ok_or("\"paths\" is missing or not an array")?
-        {
-            let field = |key: &str| -> Result<u64, String> {
-                p.get(key)
-                    .ok_or_else(|| format!("path entry missing {key:?}"))?
-                    .as_u64()
-                    .ok_or_else(|| format!("path field {key:?} is not a u64"))
-            };
-            parsed.push(PartialPath {
-                stack_id: field("stack_id")? as u32,
-                cm_fs: field("cm_fs")?,
-                slices: field("slices")?,
-                first_seen: field("first_seen")?,
-            });
-        }
-        for p in parsed {
+        let wire = parse_shard_window(&env.value)?;
+        for p in wire.paths {
             let e = self.paths.entry(p.stack_id).or_insert(PartialPath {
                 stack_id: p.stack_id,
                 cm_fs: 0,

@@ -29,6 +29,7 @@ pub mod simkernel;
 pub mod ebpf;
 pub mod workload;
 pub mod gapp;
+pub mod fleet;
 pub mod runtime;
 pub mod baselines;
 pub mod experiments;

@@ -10,7 +10,7 @@
 //!           [--shards N] [--ring-capacity R] [--merge serial|tree]
 //!           [--lane-threads N] [--shard-partials] [--on-overflow shed|degrade]
 //!           [--checkpoint FILE] [--checkpoint-every N] [--resume FILE]
-//!           [--fault-plan FILE]
+//!           [--fault-plan FILE] [--stream PATH]
 //!           [--format text|json|jsonl] [--output FILE]
 //!                                  # streaming analyzer: epoch-windowed
 //!                                  # per-window top-K; repeat --app for
@@ -19,7 +19,16 @@
 //!                                  # JSONL streams (one producer per
 //!                                  # file); malformed lines are
 //!                                  # quarantined and counted, never
-//!                                  # trusted
+//!                                  # trusted; `symbols` events, when
+//!                                  # present, symbolize the report
+//! gapp serve --listen PATH [--producers N] [--top K] [--horizon W]
+//!            [--format text|json|jsonl] [--output FILE]
+//!                                  # fleet aggregation service: accept
+//!                                  # N `gapp live --stream PATH`
+//!                                  # producers on a Unix socket and
+//!                                  # re-emit ONE merged session (see
+//!                                  # rust/src/fleet/); `aggregate` is
+//!                                  # the one-shot special case
 //! Transport is sharded per CPU (PERF_EVENT_ARRAY-style): one ring of
 //! --ring-capacity records per shard, records routed to the CPU they
 //! fired on and globally re-ordered by timestamp at read time.
@@ -48,6 +57,11 @@
 //! --fault-plan injects deterministic faults (overflow bursts, a
 //! stalled shard, kill points) from a JSON plan — the crash-recovery
 //! test harness, available in production builds on purpose.
+//! --stream PATH (live only) attaches an extra flush-per-event JSONL
+//! sink writing to a file, FIFO or Unix socket — the producer side of
+//! `gapp serve`. It implies --shard-partials so the stream carries the
+//! per-shard partials plus the `symbols` id → frames announcements the
+//! fleet service re-interns by.
 //! gapp scenario run FILE [--seed N] [--format text|json|jsonl]
 //!                        [--output FILE]
 //!                                  # execute a scenarios/*.json spec:
@@ -74,9 +88,9 @@ use gapp::experiments::{
     baselines_cmp, dedup_alloc, fig3, fig4, fig5, fig6, fig7, overhead, scenario_matrix,
     sensitivity, table2, EngineKind,
 };
+use gapp::fleet::{FleetMerge, ServeConfig, StreamSink};
 use gapp::gapp::faults::FaultPlan;
 use gapp::gapp::sink::{self, ReportSink};
-use gapp::gapp::stream::partials::PartialAggregator;
 use gapp::gapp::stream::LiveConfig;
 use gapp::gapp::{
     run_unprofiled, GappConfig, MergeStrategy, OverflowPolicy, ReportFormat, Session,
@@ -107,6 +121,7 @@ fn main() {
         Some("profile") => cmd_profile(&args, engine, threads, seed),
         Some("live") => cmd_live(&args, engine, threads, seed),
         Some("aggregate") => cmd_aggregate(&args),
+        Some("serve") => cmd_serve(&args),
         Some("scenario") => cmd_scenario(&args, engine),
         Some("table2") => table2::run(engine, threads, seed)
             .map(|rows| println!("{}", table2::render(&rows))),
@@ -130,8 +145,9 @@ fn main() {
         _ => {
             eprintln!("usage: see `gapp --help` header in rust/src/main.rs");
             eprintln!(
-                "subcommands: list-apps run profile live aggregate scenario table2 \
-                 fig3 fig4 fig5 fig6 fig7 dedup-alloc sweep overhead baselines all"
+                "subcommands: list-apps run profile live aggregate serve scenario \
+                 table2 fig3 fig4 fig5 fig6 fig7 dedup-alloc sweep overhead \
+                 baselines all"
             );
             eprintln!(
                 "live mode: gapp live --app mysql --app dedup --window-us 5000 \
@@ -147,6 +163,11 @@ fn main() {
             eprintln!(
                 "            gapp aggregate FILE [FILE...] merges shard_window \
                  partials from JSONL streams, quarantining malformed lines"
+            );
+            eprintln!(
+                "fleet:     gapp serve --listen SOCK [--producers N] [--top K] \
+                 [--horizon W] merges live producers started with \
+                 gapp live ... --stream SOCK into one session"
             );
             eprintln!(
                 "output:    profile/live take --format text|json|jsonl and \
@@ -259,6 +280,16 @@ fn report_sink(gcfg: &GappConfig) -> anyhow::Result<Box<dyn ReportSink>> {
 }
 
 fn cmd_profile(args: &Args, engine: EngineKind, threads: usize, seed: u64) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        args.get("stream").is_none(),
+        "--stream is a live-mode transport (batch sessions close no windows to \
+         stream); use gapp live --stream PATH"
+    );
+    anyhow::ensure!(
+        args.get("listen").is_none(),
+        "--listen belongs to gapp serve (the fleet aggregation service); \
+         profile does not accept connections"
+    );
     let name = args.opt_str("app", "blackscholes");
     let app = apps::by_name(&name, threads, seed)
         .ok_or_else(|| anyhow::anyhow!("unknown app {name:?} (try list-apps)"))?;
@@ -293,11 +324,14 @@ fn cmd_live(args: &Args, engine: EngineKind, threads: usize, seed: u64) -> anyho
     let mut gcfg = gapp_config_from(args)?;
     gcfg.stack_lru = args.flag("lru");
     let bad = |e: String| anyhow::anyhow!(e);
+    // --stream implies --shard-partials: a fleet producer has nothing
+    // to ship without its per-shard window partials.
+    let stream = args.get("stream").map(String::from);
     let lcfg = LiveConfig {
         window_ns: args.opt_min1("window-us", 5000).map_err(bad)? * 1000,
         top_k: args.opt_min1("top", 5).map_err(bad)? as usize,
         sketch_entries: args.opt_min1("sketch", 64).map_err(bad)? as usize,
-        shard_partials: args.flag("shard-partials"),
+        shard_partials: args.flag("shard-partials") || stream.is_some(),
     };
     let sink = report_sink(&gcfg)?;
     let mut session = Session::builder(engine.make()?)
@@ -305,6 +339,9 @@ fn cmd_live(args: &Args, engine: EngineKind, threads: usize, seed: u64) -> anyho
         .config(gcfg)
         .live(lcfg)
         .sink(sink);
+    if let Some(path) = &stream {
+        session = session.sink(StreamSink::connect(path)?);
+    }
     for app in &apps {
         session = session.app(app);
     }
@@ -313,23 +350,64 @@ fn cmd_live(args: &Args, engine: EngineKind, threads: usize, seed: u64) -> anyho
 }
 
 /// Merge `shard_window` partials from one or more JSONL files (one
-/// producer per file) and print the fleet-aggregation report. Malformed
-/// lines are quarantined per producer and surfaced in the report;
-/// unreadable files are hard errors.
+/// producer per file) and print the fleet-aggregation report: the
+/// one-shot special case of `gapp serve`. `symbols` events, when the
+/// capture carries them, symbolize the report; captures without them
+/// fall back to raw stack ids, byte-identical to the historical
+/// aggregator. Malformed lines are quarantined per producer and
+/// surfaced in the report; unreadable files are hard errors.
 fn cmd_aggregate(args: &Args) -> anyhow::Result<()> {
     let files = &args.positional[1..];
     anyhow::ensure!(
         !files.is_empty(),
         "aggregate needs at least one JSONL file (gapp aggregate FILE [FILE...])"
     );
-    let mut agg = PartialAggregator::new();
+    let mut fleet = FleetMerge::new();
     for f in files {
-        agg.ingest_file(f)?;
+        fleet.ingest_file(f)?;
     }
     let top = args
         .opt_min1("top", 10)
         .map_err(|e| anyhow::anyhow!(e))? as usize;
-    print!("{}", agg.render(top));
+    print!("{}", fleet.render(top));
+    Ok(())
+}
+
+/// `gapp serve --listen PATH`: the fleet aggregation service. Accepts
+/// `--producers` connections from `gapp live --stream PATH` sessions,
+/// re-interns their stack-id namespaces through one global map, folds
+/// their windows under a bounded reorder horizon and re-emits ONE
+/// merged schema-1 session through the chosen sink (`--format`,
+/// default jsonl; `--output`, default stdout). The final fleet report
+/// prints to stdout when the service finishes.
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let listen = args
+        .get("listen")
+        .ok_or_else(|| {
+            anyhow::anyhow!("serve needs --listen PATH (a Unix socket address)")
+        })?
+        .to_string();
+    let bad = |e: String| anyhow::anyhow!(e);
+    let cfg = ServeConfig {
+        listen,
+        producers: args.opt_min1("producers", 1).map_err(bad)? as usize,
+        top: args.opt_min1("top", 10).map_err(bad)? as usize,
+        horizon: args.opt_min1("horizon", 8).map_err(bad)?,
+    };
+    let format = args
+        .opt_choice("format", &ReportFormat::NAMES, ReportFormat::Jsonl.name())
+        .map_err(bad)?;
+    let format = ReportFormat::from_name(&format).expect("opt_choice vetted the name");
+    let w: Box<dyn std::io::Write> = match args.get("output") {
+        Some(path) => Box::new(
+            std::fs::File::create(path)
+                .with_context(|| format!("cannot create --output {path:?}"))?,
+        ),
+        None => Box::new(std::io::stdout()),
+    };
+    let mut sinks: Vec<Box<dyn ReportSink>> = vec![sink::for_writer(format, w)];
+    let report = gapp::fleet::serve(&cfg, &mut sinks)?;
+    print!("{report}");
     Ok(())
 }
 

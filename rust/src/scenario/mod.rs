@@ -278,6 +278,7 @@ mod tests {
         let sink = FnSink(move |ev: &ReportEvent<'_>| {
             let name = match ev {
                 ReportEvent::SessionStart(_) => "start",
+                ReportEvent::Symbols(_) => "symbols",
                 ReportEvent::ShardWindow(_) => "shard",
                 ReportEvent::Degraded { .. } => "degraded",
                 ReportEvent::WindowClosed(_) => "window",

@@ -1,0 +1,328 @@
+//! Fleet-aggregation goldens: the cross-process merge must be exactly
+//! as trustworthy as the in-process one.
+//!
+//! 1. Split invariance (the acceptance property): the same captured
+//!    windows, split across 1, 2, or N producers — deterministically or
+//!    at random — merge to a byte-identical top-N report, with and
+//!    without symbol exchange.
+//! 2. Raw-id fallback: on a capture with no `symbols` events the new
+//!    [`FleetMerge`] renders byte-identically to the historical
+//!    [`PartialAggregator`].
+//! 3. Quarantine isolation: a corrupt / foreign-schema producer is
+//!    counted and reported without perturbing its peers' merge by a
+//!    byte.
+//! 4. The live service: two producers streaming over a real Unix
+//!    socket through [`serve_on`] produce the same top-N as a one-shot
+//!    offline aggregation, and the *merged stream it re-emits* is
+//!    itself a valid capture — re-aggregating it reproduces the report
+//!    (hierarchical aggregation).
+//! 5. Symbol round-trip: every merged global id resolves back to
+//!    frames some producer announced, and renders by producer-side
+//!    symbolization, not raw ids.
+
+use std::cell::RefCell;
+use std::io;
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::rc::Rc;
+
+use gapp::fleet::{serve_on, FleetMerge, ServeConfig};
+use gapp::gapp::sink::{JsonlSink, ReportSink};
+use gapp::gapp::stream::partials::{parse_envelope, parse_symbols, PartialAggregator};
+use gapp::gapp::stream::LiveConfig;
+use gapp::gapp::{GappConfig, Session};
+use gapp::runtime::AnalysisEngine;
+use gapp::simkernel::KernelConfig;
+use gapp::util::check::property;
+use gapp::workload::apps;
+
+/// An `io::Write` the test can read back after the sink consumed it.
+#[derive(Clone, Default)]
+struct SharedBuf(Rc<RefCell<Vec<u8>>>);
+
+impl SharedBuf {
+    fn take_string(&self) -> String {
+        String::from_utf8(std::mem::take(&mut *self.0.borrow_mut())).unwrap()
+    }
+}
+
+impl io::Write for SharedBuf {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        self.0.borrow_mut().extend_from_slice(buf);
+        Ok(buf.len())
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        Ok(())
+    }
+}
+
+/// Capture one live session as a producer would ship it: JSONL with
+/// per-shard window partials and `symbols` announcements.
+fn capture(seed: u64, shards: usize) -> String {
+    let app = apps::canneal(8, seed);
+    let buf = SharedBuf::default();
+    Session::builder(AnalysisEngine::native())
+        .kernel(KernelConfig::default())
+        .config(GappConfig {
+            shards: Some(shards),
+            ..Default::default()
+        })
+        .app(&app)
+        .live(LiveConfig {
+            window_ns: 2_000_000,
+            shard_partials: true,
+            ..Default::default()
+        })
+        .sink(JsonlSink::new(buf.clone()))
+        .run()
+        .unwrap();
+    buf.take_string()
+}
+
+fn event_kind(line: &str) -> String {
+    parse_envelope(line).expect("capture line must be valid v1").event
+}
+
+/// The split-invariant tail of a fleet report (the accounting lines
+/// above it legitimately vary with how the stream was split).
+fn top_section(report: &str) -> &str {
+    let i = report
+        .find("top ")
+        .or_else(|| report.find("no partials merged"))
+        .expect("report has no top section");
+    &report[i..]
+}
+
+/// Split a capture into `n` producer streams: every producer gets the
+/// full `symbols` prologue (re-announcing identical frames is a no-op
+/// by the id-stability contract) and window `i` goes to the producer
+/// `assign(i)` picks.
+fn split(text: &str, n: usize, mut assign: impl FnMut(usize) -> usize) -> Vec<String> {
+    let symbols: String = text
+        .lines()
+        .filter(|l| !l.trim().is_empty() && event_kind(l) == "symbols")
+        .map(|l| format!("{l}\n"))
+        .collect();
+    let mut streams = vec![symbols; n];
+    for (i, l) in text
+        .lines()
+        .filter(|l| !l.trim().is_empty() && event_kind(l) == "shard_window")
+        .enumerate()
+    {
+        let s = &mut streams[assign(i) % n];
+        s.push_str(l);
+        s.push('\n');
+    }
+    streams
+}
+
+fn merge_streams(streams: &[String]) -> FleetMerge {
+    let mut fleet = FleetMerge::new();
+    for (i, s) in streams.iter().enumerate() {
+        fleet.ingest(&format!("p{i}"), s);
+    }
+    fleet
+}
+
+#[test]
+fn windows_split_across_producers_merge_byte_identically() {
+    let text = capture(5, 4);
+    let reference = merge_streams(&[text.clone()]);
+    assert_eq!(reference.quarantined(), 0);
+    let golden = reference.render_top(10);
+    assert!(golden.starts_with("top "), "{golden}");
+
+    for n in [2usize, 3, 5] {
+        let fleet = merge_streams(&split(&text, n, |i| i));
+        assert_eq!(fleet.quarantined(), 0, "split {n}");
+        assert_eq!(fleet.producer_count(), n);
+        assert_eq!(
+            fleet.render_top(10),
+            golden,
+            "split across {n} producers moved the merged report"
+        );
+    }
+}
+
+#[test]
+fn random_splits_and_symbol_presence_never_move_the_report() {
+    // Property: any split of the same windows across any number of
+    // producers — and stripping the symbol exchange entirely (raw-id
+    // fallback) — yields the same top-N as the unsplit stream of the
+    // same symbol regime.
+    let text = capture(5, 2);
+    let raw: String = text
+        .lines()
+        .filter(|l| !l.trim().is_empty() && event_kind(l) != "symbols")
+        .map(|l| format!("{l}\n"))
+        .collect();
+    let golden = merge_streams(&[text.clone()]).render_top(10);
+    let golden_raw = merge_streams(&[raw.clone()]).render_top(10);
+    assert_ne!(golden, golden_raw, "symbolized sites must differ from raw ids");
+    property("fleet split invariance", 8, |rng| {
+        let n = 1 + rng.pick(4);
+        let symbolized = rng.chance(0.5);
+        let src = if symbolized { &text } else { &raw };
+        let fleet = merge_streams(&split(src, n, |_| rng.pick(n)));
+        assert_eq!(fleet.quarantined(), 0);
+        assert_eq!(
+            fleet.render_top(10),
+            if symbolized { golden.clone() } else { golden_raw.clone() },
+            "random split across {n} producers (symbolized={symbolized})"
+        );
+    });
+}
+
+#[test]
+fn raw_id_captures_render_byte_identically_to_the_historical_aggregator() {
+    // `gapp aggregate` switched engines (PartialAggregator →
+    // FleetMerge); on captures without `symbols` events — everything
+    // recorded before this PR — the full report must not move a byte.
+    let text = capture(5, 4);
+    let raw: String = text
+        .lines()
+        .filter(|l| !l.trim().is_empty() && event_kind(l) != "symbols")
+        .map(|l| format!("{l}\n"))
+        .collect();
+    let mut old = PartialAggregator::new();
+    old.ingest("p0", &raw);
+    let mut new = FleetMerge::new();
+    new.ingest("p0", &raw);
+    assert_eq!(new.render(10), old.render(10));
+    assert_eq!(new.render(3), old.render(3));
+}
+
+#[test]
+fn a_corrupt_producer_is_quarantined_without_perturbing_its_peers() {
+    let a = capture(5, 2);
+    let b = capture(7, 2);
+    let golden = {
+        let mut fleet = FleetMerge::new();
+        fleet.ingest("a", &a);
+        fleet.ingest("b", &b);
+        fleet.render_top(10)
+    };
+    // A producer on a foreign schema version plus assorted bit rot.
+    let corrupt = "{\"schema\": 2, \"event\": \"shard_window\"}\n\
+                   {not json at all\n\
+                   {\"schema\": 1, \"event\": \"shard_window\", \
+                   \"shard_window\": {\"paths\": [{\"stack_id\": \"oops\"}]}}\n";
+    let mut fleet = FleetMerge::new();
+    fleet.ingest("a", &a);
+    fleet.ingest("corrupt", corrupt);
+    fleet.ingest("b", &b);
+    assert_eq!(
+        fleet.render_top(10),
+        golden,
+        "a corrupt peer must not move the merge by a byte"
+    );
+    let reports = fleet.producers();
+    assert_eq!(reports[0].stats.quarantined, 0);
+    assert_eq!(reports[2].stats.quarantined, 0);
+    assert_eq!(reports[1].stats.quarantined, 3);
+    let err = reports[1].stats.first_error.clone().unwrap();
+    assert!(err.contains("schema version 2"), "{err}");
+    let r = fleet.render(10);
+    assert!(r.contains("3 producer(s)"), "{r}");
+    assert!(r.contains("corrupt: 0 line(s) ok, 0 partial(s), 3 quarantined"), "{r}");
+    assert!(r.contains("first error"), "{r}");
+}
+
+#[test]
+fn serve_merges_socket_producers_and_the_merged_stream_reaggregates() {
+    let a = capture(5, 2);
+    let b = capture(7, 2);
+
+    // Offline one-shot reference: the special case `serve` generalizes.
+    let mut oneshot = FleetMerge::new();
+    oneshot.ingest("a", &a);
+    oneshot.ingest("b", &b);
+    let golden = oneshot.render_top(10).to_string();
+
+    let dir = std::env::temp_dir().join(format!("gapp-fleet-golden-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let sock = dir.join("fleet.sock");
+    let _ = std::fs::remove_file(&sock);
+    let listener = UnixListener::bind(&sock).unwrap();
+
+    let buf = SharedBuf::default();
+    let mut sinks: Vec<Box<dyn ReportSink>> = vec![Box::new(JsonlSink::new(buf.clone()))];
+    let cfg = ServeConfig {
+        listen: sock.to_string_lossy().into_owned(),
+        producers: 2,
+        top: 10,
+        // Effectively unbounded: this test wants a lossless merged
+        // stream (no forced-late windows), whatever the thread timing.
+        horizon: 1 << 20,
+    };
+    let report = std::thread::scope(|s| {
+        for text in [a.clone(), b.clone()] {
+            let path = sock.clone();
+            s.spawn(move || {
+                use std::io::Write;
+                let mut c = UnixStream::connect(&path).unwrap();
+                c.write_all(text.as_bytes()).unwrap();
+                // Dropping the stream is the producer's EOF.
+            });
+        }
+        serve_on(listener, &cfg, &mut sinks).unwrap()
+    });
+    let _ = std::fs::remove_file(&sock);
+
+    assert_eq!(
+        top_section(&report),
+        golden,
+        "the live service must merge exactly like the one-shot aggregator"
+    );
+    assert!(report.contains("2 producer(s)"), "{report}");
+
+    // Hierarchical aggregation: the merged session the service
+    // re-emitted is itself a valid capture — aggregating it reproduces
+    // the same report.
+    let merged_stream = buf.take_string();
+    assert!(!merged_stream.is_empty(), "serve must re-emit a merged stream");
+    let mut again = FleetMerge::new();
+    again.ingest("merged", &merged_stream);
+    assert_eq!(again.quarantined(), 0, "{merged_stream}");
+    assert_eq!(
+        again.render_top(10),
+        golden,
+        "re-aggregating the merged stream must reproduce the report"
+    );
+}
+
+#[test]
+fn merged_global_ids_resolve_back_to_producer_announced_frames() {
+    let a = capture(5, 2);
+    let b = capture(7, 2);
+    // Every frame set any producer announced, straight off the wire.
+    let mut announced: Vec<Vec<u64>> = Vec::new();
+    for line in a.lines().chain(b.lines()).filter(|l| !l.trim().is_empty()) {
+        let env = parse_envelope(line).unwrap();
+        if env.event == "symbols" {
+            for e in parse_symbols(&env.value).unwrap() {
+                announced.push(e.frames);
+            }
+        }
+    }
+    assert!(!announced.is_empty(), "captures must carry symbol exchange");
+
+    let mut fleet = FleetMerge::new();
+    fleet.ingest("a", &a);
+    fleet.ingest("b", &b);
+    let top = fleet.top(10);
+    assert!(!top.is_empty());
+    for p in &top {
+        let frames = fleet.resolve(p.stack_id);
+        assert!(
+            announced.iter().any(|f| f == frames),
+            "global id {} resolves to frames no producer announced: {frames:?}",
+            p.stack_id
+        );
+        let site = fleet.site(p.stack_id);
+        assert!(
+            !site.starts_with("stack ") && site != "??",
+            "symbolized capture must not fall back to raw ids: {site}"
+        );
+    }
+}
