@@ -138,6 +138,32 @@ fn main() {
         });
     }
 
+    // Tiered compaction: the tree-merge run again with closed windows
+    // folding into a base-8 tier pyramid instead of the flat per-window
+    // history. Output is byte-identical (golden-tested); read this row
+    // against live_canneal_16t_w5ms_merge_tree to see what the
+    // O(B·log T) bound costs (or saves) per run across PRs.
+    b.bench("live_canneal_16t_w5ms_compact_b8", || {
+        let app = apps::canneal(16, 3);
+        let run = gapp::gapp::stream::run_live(
+            std::slice::from_ref(&app),
+            KernelConfig::default(),
+            GappConfig {
+                merge: MergeStrategy::Tree,
+                compact_base: Some(8),
+                ..Default::default()
+            },
+            AnalysisEngine::native(),
+            gapp::gapp::stream::LiveConfig {
+                window_ns: 5_000_000,
+                ..Default::default()
+            },
+            |w| sink(w.top.len()),
+        )
+        .unwrap();
+        sink(run.report.runtime_ns);
+    });
+
     // Sharded vs single-ring end-to-end pair: same run, transport forced
     // to one shared ring vs 4 per-CPU shards. The outputs are provably
     // byte-identical (golden-tested); this row pair tracks the *cost* of
@@ -246,8 +272,11 @@ fn main() {
             s.on_event(&ReportEvent::Final(FinalEvent {
                 report: &run.report,
                 windows: &run.windows,
+                windows_total: run.report.windows_total,
                 sketch_top: &run.sketch_top,
                 sketch_lines: &run.sketch_lines,
+                recent_top: &[],
+                recent_lines: &[],
             }))
             .unwrap();
             s.on_event(&ReportEvent::SessionEnd {
@@ -341,6 +370,37 @@ fn main() {
         // bias across PRs; regressions in the merge still move it).
         b.bench_items("window_merge_pairwise_S8", 8, || {
             sink(gapp::gapp::stream::merge_tree(partials.clone()));
+        });
+
+        // The same fold through the accumulator pool: every pairwise
+        // merge reuses a drained PathAccumulator instead of allocating
+        // a fresh map. Read against window_merge_pairwise_S8 to see
+        // what the pool buys per window (same clone bias in both rows).
+        let mut pool = gapp::gapp::stream::MergePool::new();
+        b.bench_items("window_merge_pairwise_S8_pooled", 8, || {
+            sink(gapp::gapp::stream::merge_tree_pooled(
+                partials.clone(),
+                &mut pool,
+            ));
+        });
+    }
+
+    // The decayed sketch primitive on its own: 1e5 weighted adds over
+    // 32 distinct keys into a 64-entry DecayedSpaceSaving, advancing
+    // simulated time every 1k adds so the halving path (count decay +
+    // lazy min-heap rebuild) is exercised, not just the hash-hit path.
+    {
+        use gapp::gapp::stream::DecayedSpaceSaving;
+        b.bench_items("decayed_topk_add_1e5", 100_000, || {
+            let mut d: DecayedSpaceSaving<u32> =
+                DecayedSpaceSaving::new(64, 1_000_000_000);
+            for i in 0..100_000u64 {
+                if i % 1_000 == 0 {
+                    d.advance_to(i * 20_000);
+                }
+                d.add((i % 32) as u32, 1_000 + (i % 7));
+            }
+            sink(d.top(16).len());
         });
     }
 

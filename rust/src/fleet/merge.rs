@@ -26,6 +26,7 @@ use crate::gapp::sink::SymbolEntry;
 use crate::gapp::stream::partials::{
     parse_envelope, parse_shard_window, parse_symbols, ProducerReport, ProducerStats,
 };
+use crate::gapp::stream::{TierPyramid, WindowSummary};
 use crate::gapp::userspace::MergedPath;
 use crate::util::FxHashMap;
 
@@ -83,6 +84,9 @@ pub struct FleetMerge {
     /// ingest produce the same report.
     rendered: FxHashMap<u32, Vec<String>>,
     cumulative: FxHashMap<u32, MergedPath>,
+    /// Tier compaction (see [`FleetMerge::compact`]): when set, folded
+    /// windows land here instead of `cumulative`, which stays empty.
+    tiers: Option<TierPyramid>,
     producers: Vec<Producer>,
 }
 
@@ -98,8 +102,29 @@ impl FleetMerge {
             stacks: StackMap::new("fleet_stacks", 1 << 20),
             rendered: FxHashMap::default(),
             cumulative: FxHashMap::default(),
+            tiers: None,
             producers: Vec::new(),
         }
+    }
+
+    /// Bound the cumulative fold for long-lived aggregation: each
+    /// folded window becomes a tier-pyramid entry (base `base`), so the
+    /// retained state is O(base · log T) entry path-sets over T windows
+    /// instead of growing with every distinct path forever at full
+    /// per-window granularity. Everything folded is associative, so the
+    /// merged report is unchanged — [`FleetMerge::top`] re-folds the
+    /// retained entries on demand. Call before the first fold.
+    pub fn compact(&mut self, base: usize) {
+        assert!(
+            self.cumulative.is_empty(),
+            "compact() must be enabled before the first fold"
+        );
+        self.tiers = Some(TierPyramid::new(base));
+    }
+
+    /// Retained tier entries (0 when compaction is off).
+    pub fn tier_entries(&self) -> u64 {
+        self.tiers.as_ref().map(|py| py.entries()).unwrap_or(0)
     }
 
     /// Register a producer slot; returns its index (= `app_slices` key
@@ -252,13 +277,40 @@ impl FleetMerge {
         }
     }
 
-    /// Fold merged-window paths (global ids) into the cumulative set.
+    /// Fold merged-window paths (global ids) into the cumulative set —
+    /// or, under [`FleetMerge::compact`], into the tier pyramid as one
+    /// window. The pyramid numbers windows by fold order (fleet window
+    /// indices can arrive late and out of order; the fold is
+    /// associative and commutative across whole windows, so fold order
+    /// is immaterial to the merged result).
     pub fn fold(&mut self, paths: &[MergedPath]) {
-        for p in paths {
-            self.cumulative
-                .entry(p.stack_id)
-                .or_insert_with(|| MergedPath::new(p.stack_id))
-                .merge_from(p);
+        match self.tiers.as_mut() {
+            Some(py) => {
+                let summary = WindowSummary {
+                    index: py.windows_total() + 1,
+                    slices: paths.iter().map(|p| p.slices).sum(),
+                    drained: 0,
+                    drops: 0,
+                };
+                let _ = py.push(summary, paths.to_vec());
+            }
+            None => {
+                for p in paths {
+                    self.cumulative
+                        .entry(p.stack_id)
+                        .or_insert_with(|| MergedPath::new(p.stack_id))
+                        .merge_from(p);
+                }
+            }
+        }
+    }
+
+    /// The cumulative merged paths, one per distinct global id
+    /// (re-folded from the retained tier entries under compaction).
+    fn merged_cumulative(&self) -> Vec<MergedPath> {
+        match &self.tiers {
+            Some(py) => py.merged_cumulative(),
+            None => self.cumulative.values().cloned().collect(),
         }
     }
 
@@ -319,13 +371,20 @@ impl FleetMerge {
         self.producers.iter().map(|p| p.stats.quarantined).sum()
     }
 
-    /// Number of distinct merged paths (global ids).
+    /// Number of distinct merged paths (global ids). Under compaction
+    /// this re-folds the retained entries — display-path cost only.
     pub fn len(&self) -> usize {
-        self.cumulative.len()
+        match &self.tiers {
+            Some(py) => py.merged_cumulative().len(),
+            None => self.cumulative.len(),
+        }
     }
 
     pub fn is_empty(&self) -> bool {
-        self.cumulative.is_empty()
+        match &self.tiers {
+            Some(py) => py.retained_paths() == 0,
+            None => self.cumulative.is_empty(),
+        }
     }
 
     /// Merged paths ranked by CMetric (ties: earlier first-seen, then
@@ -333,7 +392,7 @@ impl FleetMerge {
     /// invariant to how the streams were split across producers; global
     /// ids depend on arrival order and must not leak into the order).
     pub fn top(&self, n: usize) -> Vec<MergedPath> {
-        let mut all: Vec<&MergedPath> = self.cumulative.values().collect();
+        let mut all = self.merged_cumulative();
         all.sort_by(|a, b| {
             b.cm_fs
                 .cmp(&a.cm_fs)
@@ -345,7 +404,7 @@ impl FleetMerge {
                 })
         });
         all.truncate(n);
-        all.into_iter().cloned().collect()
+        all
     }
 
     /// The display label for one merged path: the innermost rendered
@@ -377,7 +436,7 @@ impl FleetMerge {
             out,
             "fleet partials: {} producer(s), {} merged path(s)",
             self.producers.len(),
-            self.cumulative.len(),
+            self.len(),
         )
         .unwrap();
         for p in &self.producers {
@@ -574,6 +633,50 @@ mod tests {
         let mut fleet = FleetMerge::new();
         fleet.ingest("p", &text);
         assert_eq!(fleet.quarantined(), 0);
+    }
+
+    #[test]
+    fn compacted_fleet_fold_renders_identically_with_bounded_entries() {
+        // Many single-path windows across two producers: the compacted
+        // merge must render the same top section as the flat map while
+        // retaining only O(base · log T) tier entries.
+        let mut streams = Vec::new();
+        for producer in 0..2u64 {
+            let mut text = format!(
+                "{}\n",
+                symbols_line(&[
+                    (1, &[0x40, 0x90], &["emd (emd.c:57)", "main"]),
+                    (2, &[0x50, 0x90], &["fluid (f.c:9)", "main"]),
+                ])
+            );
+            for w in 1..=40u64 {
+                let id = 1 + (w + producer) % 2;
+                text.push_str(&window_line(
+                    w,
+                    0,
+                    &[(id, 100 + w * 7, 1 + w % 3, 10 * w + producer)],
+                ));
+                text.push('\n');
+            }
+            streams.push(text);
+        }
+        let mut flat = FleetMerge::new();
+        let mut compacted = FleetMerge::new();
+        compacted.compact(2);
+        for (i, s) in streams.iter().enumerate() {
+            flat.ingest(&format!("node{i}"), s);
+            compacted.ingest(&format!("node{i}"), s);
+        }
+        assert_eq!(flat.quarantined(), 0);
+        assert_eq!(compacted.len(), flat.len());
+        assert_eq!(compacted.render_top(10), flat.render_top(10));
+        // 80 folded windows in base 2: digit-sum-of-80 entries ≤ 7.
+        let entries = compacted.tier_entries();
+        assert!(
+            (1..=7).contains(&entries),
+            "expected O(log T) entries, got {entries}"
+        );
+        assert_eq!(flat.tier_entries(), 0);
     }
 
     #[test]

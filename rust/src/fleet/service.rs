@@ -52,6 +52,9 @@ pub struct ServeConfig {
     pub top: usize,
     /// Reorder horizon, in windows (see [`ReorderHorizon`]).
     pub horizon: u64,
+    /// Tier-compaction base for the cumulative fold (`None` = flat map;
+    /// see [`FleetMerge::compact`]).
+    pub compact_base: Option<usize>,
 }
 
 impl Default for ServeConfig {
@@ -61,6 +64,7 @@ impl Default for ServeConfig {
             producers: 1,
             top: 10,
             horizon: 8,
+            compact_base: None,
         }
     }
 }
@@ -274,8 +278,12 @@ pub fn serve_on(
     };
     emit(sinks, &ReportEvent::SessionStart(&info))?;
 
+    let mut fleet = FleetMerge::new();
+    if let Some(base) = cfg.compact_base {
+        fleet.compact(base);
+    }
     let mut driver = Driver {
-        fleet: FleetMerge::new(),
+        fleet,
         horizon: ReorderHorizon::new(cfg.horizon),
         sinks,
         announced: FxHashSet::default(),

@@ -31,7 +31,7 @@
 //! changes; unknown keys are ignored on load.
 
 use crate::ebpf::{StackMap, StackMapStats};
-use crate::gapp::stream::WindowSummary;
+use crate::gapp::stream::{DecayedSpaceSaving, TierEntry, TierPyramid, WindowSummary};
 use crate::gapp::userspace::MergedPath;
 use crate::simkernel::WaitKind;
 use crate::util::json::Json;
@@ -67,6 +67,13 @@ pub struct Fingerprint {
     /// `--lane-threads` the writing session ran with. Recorded for
     /// provenance; checked softly (see the struct docs).
     pub lane_threads: u64,
+    /// `--compact-base` (0 = compaction off). Hard-checked: a resume
+    /// that flips compaction would find the wrong history shape
+    /// (tiers vs flat arrays) in the checkpoint.
+    pub compact_base: u64,
+    /// `--decay-half-life-us` (0 = no decayed sketch). Hard-checked: a
+    /// different half-life continues the recent sketch differently.
+    pub decay_half_life_us: u64,
 }
 
 impl Fingerprint {
@@ -134,6 +141,21 @@ impl Fingerprint {
         }
         if self.dt != current.dt {
             return mismatch("dt", self.dt.to_string(), current.dt.to_string());
+        }
+        let onoff = |v: u64| if v == 0 { "off".to_string() } else { v.to_string() };
+        if self.compact_base != current.compact_base {
+            return mismatch(
+                "compact_base",
+                onoff(self.compact_base),
+                onoff(current.compact_base),
+            );
+        }
+        if self.decay_half_life_us != current.decay_half_life_us {
+            return mismatch(
+                "decay_half_life_us",
+                onoff(self.decay_half_life_us),
+                onoff(current.decay_half_life_us),
+            );
         }
         let mut notes = Vec::new();
         if self.lane_threads != current.lane_threads {
@@ -224,6 +246,41 @@ pub struct Checkpoint {
     pub sketch: Vec<(u32, u64, u64)>,
     /// Stable userspace stack map (`Some` iff the run uses `--lru`).
     pub stacks: Option<StackSnapshot>,
+    /// Tier pyramid (`Some` iff the run uses `--compact-base`). When
+    /// present, [`Checkpoint::summaries`], `window_drops` and
+    /// `cumulative` are empty — the pyramid *is* the history, and the
+    /// cumulative merge re-derives from it on restore.
+    pub tiers: Option<TierSnapshot>,
+    /// Decayed top-K sketch (`Some` iff `--decay-half-life-us`).
+    pub recent: Option<RecentSnapshot>,
+}
+
+/// Serialized tier pyramid. Entries are kept as **pre-rendered compact
+/// JSON strings**, chronological (oldest first): a pyramid entry is
+/// immutable once folded, so periodic checkpoint writes splice the
+/// cached rendering verbatim ([`Json::Raw`]) and only entries created
+/// since the previous write pay serialization cost — append-only tier
+/// serialization under the unchanged atomic-rename contract.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct TierSnapshot {
+    pub base: u64,
+    pub windows_total: u64,
+    pub slices_total: u64,
+    pub drained_total: u64,
+    pub drops_total: u64,
+    pub lossy_windows: u64,
+    /// One compact JSON object per retained entry, oldest first.
+    pub entries_json: Vec<String>,
+}
+
+/// Serialized [`DecayedSpaceSaving`] state: capacity, the decay clock,
+/// and the key-sorted counters.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct RecentSnapshot {
+    pub cap: usize,
+    pub now_ns: u64,
+    /// `(stack_id, count, err)` sorted by key.
+    pub counters: Vec<(u32, u64, u64)>,
 }
 
 impl Default for Fingerprint {
@@ -240,6 +297,8 @@ impl Default for Fingerprint {
             drain_threshold: 0,
             dt: 0,
             lane_threads: 1,
+            compact_base: 0,
+            decay_half_life_us: 0,
         }
     }
 }
@@ -324,7 +383,102 @@ fn fingerprint_json(f: &Fingerprint) -> Json {
         ("drain_threshold", Json::u64(f.drain_threshold)),
         ("dt", Json::u64(f.dt)),
         ("lane_threads", Json::u64(f.lane_threads)),
+        ("compact_base", Json::u64(f.compact_base)),
+        ("decay_half_life_us", Json::u64(f.decay_half_life_us)),
     ])
+}
+
+/// Render one pyramid entry as its checkpoint object (compact text —
+/// the shape [`TierSnapshot::parse_entries`] reads back).
+fn tier_entry_json(e: &TierEntry) -> String {
+    Json::obj(vec![
+        ("level", Json::u64(e.level as u64)),
+        ("first", Json::u64(e.first_index)),
+        ("last", Json::u64(e.last_index)),
+        ("slices", Json::u64(e.summary.slices)),
+        ("drained", Json::u64(e.summary.drained)),
+        ("drops", Json::u64(e.summary.drops)),
+        ("lossy", Json::u64(e.lossy_windows)),
+        ("paths", Json::Arr(e.paths.iter().map(path_json).collect())),
+    ])
+    .to_compact()
+}
+
+/// Snapshot a pyramid for checkpointing, filling each entry's
+/// serialization cache in place: entries are immutable once folded, so
+/// after the first write covering an entry, every later periodic write
+/// reuses its cached bytes — serialization cost per write is
+/// O(entries created since the last write), not O(retained state).
+pub fn tier_snapshot_of(p: &mut TierPyramid) -> TierSnapshot {
+    let snap = TierSnapshot {
+        base: p.base() as u64,
+        windows_total: p.windows_total(),
+        slices_total: p.slices_total(),
+        drained_total: p.drained_total(),
+        drops_total: p.drops_total(),
+        lossy_windows: p.lossy_windows(),
+        entries_json: Vec::new(),
+    };
+    let mut entries_json = Vec::new();
+    for e in p.entries_chronological_mut() {
+        if e.cached_json.is_none() {
+            e.cached_json = Some(tier_entry_json(e));
+        }
+        entries_json.push(e.cached_json.clone().unwrap());
+    }
+    TierSnapshot {
+        entries_json,
+        ..snap
+    }
+}
+
+/// Snapshot a decayed sketch for checkpointing.
+pub fn recent_snapshot_of(d: &DecayedSpaceSaving<u32>) -> RecentSnapshot {
+    let (cap, now_ns, counters) = d.export();
+    RecentSnapshot {
+        cap,
+        now_ns,
+        counters,
+    }
+}
+
+impl TierSnapshot {
+    /// Parse the serialized entries back into pyramid entries
+    /// (chronological). Restored entries keep their source text as the
+    /// serialization cache, so the first post-restore checkpoint write
+    /// is as cheap as any other.
+    pub fn parse_entries(&self) -> Result<Vec<TierEntry>, String> {
+        self.entries_json
+            .iter()
+            .map(|text| {
+                let v = Json::parse(text)
+                    .map_err(|e| format!("checkpoint: corrupt tier entry: {e}"))?;
+                let last = get_u64(&v, "tier entry", "last")?;
+                let paths = v
+                    .get("paths")
+                    .and_then(|a| a.as_arr())
+                    .ok_or("checkpoint: tier entry \"paths\" is not an array")?
+                    .iter()
+                    .map(path_from_json)
+                    .collect::<Result<Vec<_>, _>>()?;
+                let mut e = TierEntry::new(
+                    get_u64(&v, "tier entry", "level")? as u32,
+                    get_u64(&v, "tier entry", "first")?,
+                    last,
+                    WindowSummary {
+                        index: last,
+                        slices: get_u64(&v, "tier entry", "slices")?,
+                        drained: get_u64(&v, "tier entry", "drained")?,
+                        drops: get_u64(&v, "tier entry", "drops")?,
+                    },
+                    get_u64(&v, "tier entry", "lossy")?,
+                    paths,
+                );
+                e.cached_json = Some(text.clone());
+                Ok(e)
+            })
+            .collect()
+    }
 }
 
 impl Checkpoint {
@@ -411,6 +565,56 @@ impl Checkpoint {
                     ]),
                 },
             ),
+            (
+                "tiers",
+                match &self.tiers {
+                    None => Json::Null,
+                    Some(t) => Json::obj(vec![
+                        ("base", Json::u64(t.base)),
+                        ("windows", Json::u64(t.windows_total)),
+                        ("slices", Json::u64(t.slices_total)),
+                        ("drained", Json::u64(t.drained_total)),
+                        ("drops", Json::u64(t.drops_total)),
+                        ("lossy", Json::u64(t.lossy_windows)),
+                        (
+                            // Cached pre-rendered entries splice
+                            // verbatim (see `TierSnapshot`).
+                            "entries",
+                            Json::Arr(
+                                t.entries_json
+                                    .iter()
+                                    .map(|s| Json::Raw(s.clone()))
+                                    .collect(),
+                            ),
+                        ),
+                    ]),
+                },
+            ),
+            (
+                "recent",
+                match &self.recent {
+                    None => Json::Null,
+                    Some(r) => Json::obj(vec![
+                        ("cap", Json::usize(r.cap)),
+                        ("now_ns", Json::u64(r.now_ns)),
+                        (
+                            "counters",
+                            Json::Arr(
+                                r.counters
+                                    .iter()
+                                    .map(|(k, c, e)| {
+                                        Json::Arr(vec![
+                                            Json::u64(*k as u64),
+                                            Json::u64(*c),
+                                            Json::u64(*e),
+                                        ])
+                                    })
+                                    .collect(),
+                            ),
+                        ),
+                    ]),
+                },
+            ),
         ])
     }
 
@@ -458,6 +662,15 @@ impl Checkpoint {
                     .get("lane_threads")
                     .and_then(|v| v.as_u64())
                     .unwrap_or(1),
+                // Absent in pre-compaction checkpoints ⇒ both off.
+                compact_base: f
+                    .get("compact_base")
+                    .and_then(|v| v.as_u64())
+                    .unwrap_or(0),
+                decay_half_life_us: f
+                    .get("decay_half_life_us")
+                    .and_then(|v| v.as_u64())
+                    .unwrap_or(0),
             }),
         };
         let summaries = doc
@@ -528,6 +741,44 @@ impl Checkpoint {
                 evictions: get_u64(s, "stacks", "evictions")?,
             }),
         };
+        let tiers = match doc.get("tiers") {
+            None | Some(Json::Null) => None,
+            Some(t) => Some(TierSnapshot {
+                base: get_u64(t, "tiers", "base")?,
+                windows_total: get_u64(t, "tiers", "windows")?,
+                slices_total: get_u64(t, "tiers", "slices")?,
+                drained_total: get_u64(t, "tiers", "drained")?,
+                drops_total: get_u64(t, "tiers", "drops")?,
+                lossy_windows: get_u64(t, "tiers", "lossy")?,
+                // Re-rendering a parsed entry is the identity (keys
+                // keep order, numbers keep their literal text), so the
+                // stored strings equal the written ones byte for byte.
+                entries_json: t
+                    .get("entries")
+                    .and_then(|e| e.as_arr())
+                    .ok_or("checkpoint: \"tiers.entries\" is not an array")?
+                    .iter()
+                    .map(|e| e.to_compact())
+                    .collect(),
+            }),
+        };
+        let recent = match doc.get("recent") {
+            None | Some(Json::Null) => None,
+            Some(r) => Some(RecentSnapshot {
+                cap: get_u64(r, "recent", "cap")? as usize,
+                now_ns: get_u64(r, "recent", "now_ns")?,
+                counters: r
+                    .get("counters")
+                    .and_then(|c| c.as_arr())
+                    .ok_or("checkpoint: \"recent.counters\" is not an array")?
+                    .iter()
+                    .map(|e| {
+                        let t = triple_u64(e, "recent counter")?;
+                        Ok((t.0 as u32, t.1, t.2))
+                    })
+                    .collect::<Result<Vec<_>, String>>()?,
+            }),
+        };
         Ok(Checkpoint {
             epochs: get_u64(doc, "checkpoint", "epochs")?,
             fingerprint,
@@ -539,6 +790,8 @@ impl Checkpoint {
             sketch_cap,
             sketch,
             stacks,
+            tiers,
+            recent,
         })
     }
 
@@ -699,6 +952,8 @@ mod tests {
                 drain_threshold: 1 << 14,
                 dt: 3_000_000,
                 lane_threads: 1,
+                compact_base: 0,
+                decay_half_life_us: 0,
             }),
             summaries: vec![
                 WindowSummary {
@@ -727,6 +982,8 @@ mod tests {
                 drops: 0,
                 evictions: 0,
             }),
+            tiers: None,
+            recent: None,
         }
     }
 
@@ -836,6 +1093,105 @@ mod tests {
         let doc = a.replace(",\"lane_threads\":1", "");
         let old = Checkpoint::from_json(&Json::parse(&doc).unwrap()).unwrap();
         assert_eq!(old.fingerprint.unwrap().lane_threads, 1);
+    }
+
+    #[test]
+    fn tier_snapshots_round_trip_and_reuse_cached_entry_bytes() {
+        // Five windows into a base-2 pyramid: retained entries are the
+        // binary digits of 5 (101₂ → one level-2, one level-0 entry).
+        let mut p = TierPyramid::new(2);
+        for i in 1..=5u64 {
+            let mut path = sample_path(i as u32);
+            path.first_seen = i * 100;
+            p.push(
+                WindowSummary {
+                    index: i,
+                    slices: 3,
+                    drained: 10,
+                    drops: (i == 4) as u64,
+                },
+                vec![path],
+            );
+        }
+        let snap1 = tier_snapshot_of(&mut p);
+        assert_eq!(snap1.entries_json.len() as u64, p.entries());
+        assert_eq!(snap1.entries_json.len(), 2);
+        // Second snapshot splices the cached bytes — identical.
+        let snap2 = tier_snapshot_of(&mut p);
+        assert_eq!(snap1, snap2);
+        // New windows create new entries; pre-existing ones keep their
+        // exact cached rendering (append-only serialization).
+        let mut path6 = sample_path(6);
+        path6.first_seen = 600;
+        p.push(
+            WindowSummary {
+                index: 6,
+                slices: 3,
+                drained: 10,
+                drops: 0,
+            },
+            vec![path6],
+        );
+        let snap3 = tier_snapshot_of(&mut p);
+        assert_eq!(snap3.entries_json[0], snap1.entries_json[0]);
+        // Full checkpoint round trip, Raw splicing included.
+        let mut recent = DecayedSpaceSaving::new(4, 1_000);
+        recent.add(1, 800);
+        recent.advance_to(2_000);
+        recent.add(2, 300);
+        let mut cp = sample_checkpoint();
+        cp.summaries.clear();
+        cp.window_drops.clear();
+        cp.cumulative.clear();
+        {
+            let fp = cp.fingerprint.as_mut().unwrap();
+            fp.compact_base = 2;
+            fp.decay_half_life_us = 1;
+        }
+        cp.tiers = Some(snap3.clone());
+        cp.recent = Some(recent_snapshot_of(&recent));
+        let doc = Json::parse(&cp.to_json().to_compact()).unwrap();
+        let rt = Checkpoint::from_json(&doc).unwrap();
+        assert_eq!(rt.tiers, cp.tiers);
+        assert_eq!(rt.recent, cp.recent);
+        assert_eq!(rt.to_json().to_compact(), cp.to_json().to_compact());
+        // Entries parse back into a pyramid with the identical shape
+        // and serialization (warm cache on the restored side too).
+        let entries = rt.tiers.as_ref().unwrap().parse_entries().unwrap();
+        let mut restored = TierPyramid::restore(2, entries).unwrap();
+        assert!(restored.same_shape(&p));
+        assert_eq!(tier_snapshot_of(&mut restored), snap3);
+        // The decayed sketch restores to identical export state.
+        let r = rt.recent.as_ref().unwrap();
+        let back =
+            DecayedSpaceSaving::from_parts(r.cap, 1_000, r.now_ns, r.counters.clone())
+                .unwrap();
+        assert_eq!(back.export(), recent.export());
+    }
+
+    #[test]
+    fn compaction_knobs_are_hard_fingerprint_checks_and_default_off() {
+        let a = sample_checkpoint().fingerprint.unwrap();
+        let mut b = a.clone();
+        b.compact_base = 8;
+        let err = a.check(&b).unwrap_err();
+        assert!(err.contains("compact_base"), "{err}");
+        assert!(err.contains("off") && err.contains('8'), "{err}");
+        let mut c = a.clone();
+        c.decay_half_life_us = 1_000_000;
+        let err = a.check(&c).unwrap_err();
+        assert!(err.contains("decay_half_life_us"), "{err}");
+        // Pre-compaction checkpoints (no such keys) parse as off, and
+        // absent tiers/recent sections parse as None.
+        let doc = sample_checkpoint()
+            .to_json()
+            .to_compact()
+            .replace(",\"compact_base\":0,\"decay_half_life_us\":0", "")
+            .replace(",\"tiers\":null,\"recent\":null", "");
+        let old = Checkpoint::from_json(&Json::parse(&doc).unwrap()).unwrap();
+        let fp = old.fingerprint.unwrap();
+        assert_eq!((fp.compact_base, fp.decay_half_life_us), (0, 0));
+        assert!(old.tiers.is_none() && old.recent.is_none());
     }
 
     #[test]

@@ -173,6 +173,27 @@ pub struct GappConfig {
     /// folds are shard-local and the merge tree is deterministic);
     /// requires `merge == Tree` and more than one shard.
     pub lane_threads: usize,
+    /// Tiered window compaction base (CLI `--compact-base B`): retain
+    /// closed-window state in a base-B tier pyramid instead of flat
+    /// per-window arrays. Level 0 holds the last B raw window
+    /// snapshots; a full level folds through the associative merge
+    /// tree into one entry of the next level, so retained state is
+    /// O(B·log T) for T windows while the final cumulative report
+    /// stays byte-identical to the uncompacted run. `None` (default)
+    /// keeps the flat history — today's behaviour. Must be >= 2 when
+    /// set (a base-1 pyramid would fold every push and never spread
+    /// windows across a level). Inert for batch sessions, which close
+    /// no windows.
+    pub compact_base: Option<usize>,
+    /// Half-life of the time-decayed "recent" top-K sketch, in
+    /// simulated microseconds (CLI `--decay-half-life-us H`). When
+    /// set, the windowed driver feeds a second space-saving sketch
+    /// whose counts halve every H µs of simulated time, and the final
+    /// report grows an additive `recent` block beside the cumulative
+    /// top-K — "hot in the last hour" next to "hot ever", both in
+    /// O(K). `None` (default) disables the block; must be >= 1 when
+    /// set (a zero half-life decays everything instantly).
+    pub decay_half_life_us: Option<u64>,
 }
 
 impl Default for GappConfig {
@@ -192,6 +213,8 @@ impl Default for GappConfig {
             output: None,
             on_overflow: OverflowPolicy::Shed,
             lane_threads: 1,
+            compact_base: None,
+            decay_half_life_us: None,
         }
     }
 }
@@ -255,6 +278,24 @@ impl GappConfig {
                  would idle; raise --shards or drop --lane-threads)"
             );
         }
+        if let Some(b) = self.compact_base {
+            // Base 0 and 1 are both degenerate: 0 can never hold a
+            // window, 1 would fold on every push and the pyramid would
+            // degenerate to a single ever-rolling entry with no raw
+            // tail to report from.
+            anyhow::ensure!(
+                b >= 2,
+                "compact_base must be >= 2 (a base-{b} pyramid cannot \
+                 spread windows across a tier level)"
+            );
+        }
+        if let Some(h) = self.decay_half_life_us {
+            anyhow::ensure!(
+                h >= 1,
+                "decay_half_life_us must be >= 1 (a zero half-life \
+                 decays every count to nothing instantly)"
+            );
+        }
         Ok(())
     }
 }
@@ -274,6 +315,8 @@ mod tests {
         assert!(c.output.is_none());
         assert_eq!(c.on_overflow, OverflowPolicy::Shed);
         assert_eq!(c.lane_threads, 1); // single-thread tree by default
+        assert!(c.compact_base.is_none()); // flat per-window history
+        assert!(c.decay_half_life_us.is_none()); // no recent block
         assert!(c.validate().is_ok());
     }
 
@@ -427,5 +470,33 @@ mod tests {
             ..Default::default()
         };
         assert!(cfg.validate().is_ok());
+    }
+
+    #[test]
+    fn degenerate_compaction_knobs_are_rejected() {
+        for bad in [0usize, 1] {
+            let cfg = GappConfig {
+                compact_base: Some(bad),
+                ..Default::default()
+            };
+            let err = cfg.validate().unwrap_err().to_string();
+            assert!(err.contains("compact_base"), "{err}");
+            assert!(err.contains(">= 2"), "{err}");
+        }
+        let cfg = GappConfig {
+            decay_half_life_us: Some(0),
+            ..Default::default()
+        };
+        let err = cfg.validate().unwrap_err().to_string();
+        assert!(err.contains("decay_half_life_us"), "{err}");
+        // The working shapes validate, alone and combined.
+        for (b, h) in [(Some(2), None), (Some(8), Some(1)), (None, Some(1_000_000))] {
+            let cfg = GappConfig {
+                compact_base: b,
+                decay_half_life_us: h,
+                ..Default::default()
+            };
+            assert!(cfg.validate().is_ok(), "base {b:?} half-life {h:?}");
+        }
     }
 }

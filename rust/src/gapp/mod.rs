@@ -464,6 +464,12 @@ pub(crate) fn build_report(
 
     let stats = core.kernel.stats.clone();
     let sstats = core.kernel.stacks.stats;
+    // The whole-run window aggregates derive from the per-window vector
+    // here; the compacting streaming driver (which keeps no per-window
+    // vector) overwrites them from its tier pyramid totals afterwards.
+    let windows_total = ctx.window_drops.len() as u64;
+    let windows_lossy = ctx.window_drops.iter().filter(|d| **d > 0).count() as u64;
+    let windows_drop_total = ctx.window_drops.iter().sum();
     Report {
         app: ctx.label,
         backend: core.user.backend_name(),
@@ -480,6 +486,9 @@ pub(crate) fn build_report(
         stack_drops: sstats.drops,
         stack_evictions: sstats.evictions,
         window_drops: ctx.window_drops,
+        windows_total,
+        windows_lossy,
+        windows_drop_total,
         memory_bytes: core.kernel.memory_bytes() + core.consumer_memory_bytes(),
         ppt_seconds: ppt_start.elapsed().as_secs_f64(),
         probe_cost_ns: kernel.stats.probe_ns,

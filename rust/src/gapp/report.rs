@@ -82,8 +82,21 @@ pub struct Report {
     pub stack_evictions: u64,
     /// Streaming analyzer only: ring-buffer drops attributed to the
     /// epoch window in which they occurred (index = window). Empty for
-    /// batch profiles, whose single global figure is `ring_dropped`.
+    /// batch profiles, whose single global figure is `ring_dropped` —
+    /// and empty under `--compact-base`, where the per-window breakdown
+    /// is folded away and only the aggregates below survive.
     pub window_drops: Vec<u64>,
+    /// Streaming analyzer only: windows closed over the whole run.
+    /// Unlike `window_drops.len()` this survives tier compaction, so
+    /// the renderers use it (0 for batch profiles, which render no
+    /// window line at all).
+    pub windows_total: u64,
+    /// Windows that recorded ring drops (count of nonzero
+    /// `window_drops` entries, maintained through compaction).
+    pub windows_lossy: u64,
+    /// Ring drops summed over all windows (equals `window_drops`'s sum
+    /// when that breakdown is retained).
+    pub windows_drop_total: u64,
     /// Graceful degradation (`--on-overflow degrade`): windows that
     /// widened by absorbing the next epoch instead of shedding records.
     /// Zero (and unrendered) for shed-policy and batch runs.
@@ -332,8 +345,15 @@ mod tests {
     fn display_window_drops_line_only_when_streaming() {
         let mut r = report();
         r.window_drops = vec![0, 3, 0, 2];
+        r.windows_total = 4;
+        r.windows_lossy = 2;
+        r.windows_drop_total = 5;
         let s = r.to_string();
         assert!(s.contains("windows 4 | ring drops 5 in 2 window(s)"));
+        // Under --compact-base the per-window breakdown is folded away
+        // but the aggregates survive — the line renders identically.
+        r.window_drops = Vec::new();
+        assert_eq!(r.to_string(), s);
     }
 
     #[test]

@@ -39,7 +39,9 @@ use crate::runtime::AnalysisEngine;
 use crate::simkernel::{Kernel, KernelConfig, RunOutcome};
 use crate::workload::App;
 
-use super::checkpoint::{Checkpoint, Fingerprint, StackSnapshot};
+use super::checkpoint::{
+    recent_snapshot_of, tier_snapshot_of, Checkpoint, Fingerprint, StackSnapshot,
+};
 use super::config::OverflowPolicy;
 use super::faults::{FaultPlan, DEGRADE_HEADROOM};
 use super::records::Record;
@@ -49,9 +51,9 @@ use super::sink::{
 };
 use super::stream::live::live_lines;
 use super::stream::{
-    lanes, merge_pair, merge_tree_parallel, AppRegistry, LiveConfig,
-    RegistryProbe, ShardPartial, ShardedConsumer, SpaceSaving,
-    WindowAccumulator, WindowReport, WindowSummary,
+    lanes, merge_pair, merge_tree_parallel, AppRegistry, DecayedSpaceSaving,
+    LiveConfig, RegistryProbe, ShardPartial, ShardedConsumer, SpaceSaving,
+    TierPyramid, WindowAccumulator, WindowReport, WindowSummary,
 };
 use super::symbolize::Symbolizer;
 use super::userspace::{PathAccumulator, ShardLanes, SliceEntry};
@@ -75,6 +77,11 @@ pub struct SessionOutput {
     pub sketch_top: Vec<(u32, u64, u64)>,
     /// `sketch_top` rendered for display.
     pub sketch_lines: Vec<String>,
+    /// Time-decayed recent top-K (same tuple shape as `sketch_top`;
+    /// empty unless `--decay-half-life-us` is set).
+    pub recent_top: Vec<(u32, u64, u64)>,
+    /// `recent_top` rendered for display.
+    pub recent_lines: Vec<String>,
 }
 
 /// A configured profiling session (see the module docs). Construct
@@ -188,6 +195,23 @@ impl<'a> Session<'a> {
     /// `LiveConfig::shard_partials`).
     pub fn shard_partials(mut self, on: bool) -> Self {
         self.lcfg.shard_partials = on;
+        self
+    }
+
+    /// Tier-compaction base (`GappConfig::compact_base`): retain closed
+    /// windows in a base-`b` tier pyramid instead of a flat list —
+    /// O(b·log T) resident state over T windows, with the cumulative
+    /// report byte-identical to the uncompacted run.
+    pub fn compact_base(mut self, b: usize) -> Self {
+        self.gcfg.compact_base = Some(b);
+        self
+    }
+
+    /// Track a time-decayed recent top-K beside the cumulative sketch
+    /// (`GappConfig::decay_half_life_us`): each site's decayed count
+    /// halves per `us` microseconds of simulated idle time.
+    pub fn decay_half_life_us(mut self, us: u64) -> Self {
+        self.gcfg.decay_half_life_us = Some(us);
         self
     }
 
@@ -333,6 +357,8 @@ fn fingerprint_of(
         drain_threshold: gcfg.drain_threshold as u64,
         dt: gcfg.dt,
         lane_threads: gcfg.lane_threads as u64,
+        compact_base: gcfg.compact_base.map(|b| b as u64).unwrap_or(0),
+        decay_half_life_us: gcfg.decay_half_life_us.unwrap_or(0),
     }
 }
 
@@ -420,7 +446,12 @@ fn inject_bursts(core: &mut GappCore, plan: &FaultPlan, epoch: u64, now_ns: u64)
     }
 }
 
-/// Snapshot the windowed driver's cross-window accumulators.
+/// Snapshot the windowed driver's cross-window accumulators. With tier
+/// compaction on, the pyramid replaces the flat per-window vectors and
+/// the cumulative paths wholesale (they are not maintained in that
+/// mode); serializing it fills each closed entry's JSON cache once, so
+/// periodic checkpoints re-serialize only entries folded since the last
+/// write (append-only tier serialization).
 #[allow(clippy::too_many_arguments)]
 fn build_checkpoint(
     epochs: u64,
@@ -432,19 +463,29 @@ fn build_checkpoint(
     cumulative: &PathAccumulator,
     sketch: &SpaceSaving<u32>,
     user_stacks: Option<&StackMap>,
+    tiers: Option<&mut TierPyramid>,
+    recent: Option<&DecayedSpaceSaving<u32>>,
 ) -> Checkpoint {
     let (sketch_cap, sketch_entries) = sketch.export();
+    let tiers = tiers.map(|p| tier_snapshot_of(p));
+    let compacted = tiers.is_some();
     Checkpoint {
         epochs,
         fingerprint: Some(fp.clone()),
-        summaries: summaries.to_vec(),
-        window_drops: window_drops.to_vec(),
+        summaries: if compacted { Vec::new() } else { summaries.to_vec() },
+        window_drops: if compacted { Vec::new() } else { window_drops.to_vec() },
         degraded_windows,
         degraded_drains: total_drains,
-        cumulative: cumulative.paths().to_vec(),
+        cumulative: if compacted {
+            Vec::new()
+        } else {
+            cumulative.paths().to_vec()
+        },
         sketch_cap,
         sketch: sketch_entries,
         stacks: user_stacks.map(StackSnapshot::of),
+        tiers,
+        recent: recent.map(recent_snapshot_of),
     }
 }
 
@@ -683,8 +724,11 @@ fn run_batch(
             &ReportEvent::Final(FinalEvent {
                 report: &report,
                 windows: &[],
+                windows_total: 0,
                 sketch_top: &[],
                 sketch_lines: &[],
+                recent_top: &[],
+                recent_lines: &[],
             }),
         )?;
         emit(sinks, &ReportEvent::SessionEnd { runtime_ns: end })?;
@@ -695,6 +739,8 @@ fn run_batch(
             windows: Vec::new(),
             sketch_top: Vec::new(),
             sketch_lines: Vec::new(),
+            recent_top: Vec::new(),
+            recent_lines: Vec::new(),
         })
     })
 }
@@ -718,6 +764,8 @@ fn run_windowed(
     let strategy = gcfg.merge;
     let degrade = gcfg.on_overflow == OverflowPolicy::Degrade;
     let lane_threads = gcfg.lane_threads;
+    let compact_base = gcfg.compact_base;
+    let decay_half_life_us = gcfg.decay_half_life_us;
     let shards = gcfg.shards.unwrap_or(kcfg.cpus);
     let session = GappSession::new(gcfg.clone(), kcfg.cpus, engine)?;
     let mut kernel = Kernel::new(kcfg);
@@ -780,6 +828,7 @@ fn run_windowed(
         run_windowed_inner(
             kernel, &session, &registry, &lcfg, apps, sinks, dur, names,
             &fp, resume, top_n, stack_lru, strategy, degrade, lane_threads,
+            compact_base, decay_half_life_us,
         )
     })
 }
@@ -804,6 +853,8 @@ fn run_windowed_inner(
     strategy: MergeStrategy,
     degrade: bool,
     lane_threads: usize,
+    compact_base: Option<usize>,
+    decay_half_life_us: Option<u64>,
 ) -> Result<SessionOutput> {
     let multi_app = apps.len() > 1;
     let mut syms: Vec<Symbolizer<'_>> = apps
@@ -821,6 +872,16 @@ fn run_windowed_inner(
     let mut scratch: Vec<SliceEntry> = Vec::new();
     let mut summaries: Vec<WindowSummary> = Vec::new();
     let mut window_drops: Vec<u64> = Vec::new();
+    // Tier compaction (`--compact-base B`): closed windows fold into a
+    // base-B pyramid instead of the flat `summaries`/`window_drops`/
+    // `cumulative` state, bounding resident memory at O(B·log T) over T
+    // windows. The final cumulative report is byte-identical either way
+    // (golden-tested), so the flat path stays as the oracle.
+    let mut tiers: Option<TierPyramid> = compact_base.map(TierPyramid::new);
+    // Decayed recent top-K (`--decay-half-life-us`): rides beside the
+    // cumulative sketch, decayed to each window's end time.
+    let mut recent: Option<DecayedSpaceSaving<u32>> = decay_half_life_us
+        .map(|us| DecayedSpaceSaving::new(lcfg.sketch_entries, us.saturating_mul(1_000)));
     // Kernel-side LRU recycles stack ids mid-run, so everything that
     // outlives a window (cumulative merge, sketch, final report) must
     // not key on raw kernel ids. Snapshots are re-interned here — at
@@ -851,6 +912,8 @@ fn run_windowed_inner(
                 &cumulative,
                 &sketch,
                 user_stacks.as_ref(),
+                tiers.as_mut(),
+                recent.as_ref(),
             )
             .write_atomic(path)?;
         }
@@ -895,13 +958,25 @@ fn run_windowed_inner(
             if wo.widened {
                 degraded_windows += 1;
             }
-            window_drops.push(wo.drops);
-            summaries.push(WindowSummary {
+            let summary = WindowSummary {
                 index: window_index,
                 slices: wo.slices_in,
                 drained: wo.drained,
                 drops: wo.drops,
-            });
+            };
+            match tiers.as_mut() {
+                // Compaction: replay the fold structure paths-free (the
+                // analysis payload is discarded above); the resulting
+                // shape is checked against the checkpointed pyramid
+                // below, then replaced by it.
+                Some(py) => {
+                    let _ = py.push(summary, Vec::new());
+                }
+                None => {
+                    window_drops.push(wo.drops);
+                    summaries.push(summary);
+                }
+            }
             if wo.done {
                 anyhow::ensure!(
                     epoch >= cp.epochs,
@@ -916,10 +991,39 @@ fn run_windowed_inner(
                 finished_in_replay = Some(wo.end_ns);
             }
         }
+        let windows_match = match tiers.as_ref() {
+            // Compaction: rebuild the checkpointed pyramid (paths and
+            // all) and compare its shape against the paths-free replay.
+            // On a match it replaces the replay pyramid, installing the
+            // folded analysis state the replay skipped.
+            Some(replayed) => {
+                let snap = cp.tiers.as_ref().ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "checkpoint carries no tier pyramid but this session \
+                         compacts (fingerprint should have caught this)"
+                    )
+                })?;
+                let entries = snap.parse_entries().map_err(anyhow::Error::msg)?;
+                let stored = TierPyramid::restore(snap.base as usize, entries)
+                    .map_err(anyhow::Error::msg)?;
+                // The snapshot's stored totals double-check the entry
+                // payload they were computed from.
+                let totals_ok = stored.windows_total() == snap.windows_total
+                    && stored.slices_total() == snap.slices_total
+                    && stored.drained_total() == snap.drained_total
+                    && stored.drops_total() == snap.drops_total
+                    && stored.lossy_windows() == snap.lossy_windows;
+                let ok = totals_ok && replayed.same_shape(&stored);
+                if ok {
+                    tiers = Some(stored);
+                }
+                ok
+            }
+            None => summaries == cp.summaries && window_drops == cp.window_drops,
+        };
         anyhow::ensure!(
             epoch == cp.epochs
-                && summaries == cp.summaries
-                && window_drops == cp.window_drops
+                && windows_match
                 && degraded_windows == cp.degraded_windows
                 && session.core.borrow().hazard.total_drains == cp.degraded_drains,
             "checkpoint integrity check failed: replaying {} epoch(s) \
@@ -938,6 +1042,30 @@ fn run_windowed_inner(
         }
         sketch =
             SpaceSaving::from_parts(cp.sketch_cap, &cp.sketch).map_err(anyhow::Error::msg)?;
+        if let Some(us) = decay_half_life_us {
+            let snap = cp.recent.as_ref().ok_or_else(|| {
+                anyhow::anyhow!(
+                    "checkpoint carries no recent sketch but this session \
+                     decays (fingerprint should have caught this)"
+                )
+            })?;
+            anyhow::ensure!(
+                snap.cap == lcfg.sketch_entries,
+                "checkpoint holds a recent sketch of capacity {} but this \
+                 session is configured for {} entries",
+                snap.cap,
+                lcfg.sketch_entries
+            );
+            recent = Some(
+                DecayedSpaceSaving::from_parts(
+                    snap.cap,
+                    us.saturating_mul(1_000),
+                    snap.now_ns,
+                    &snap.counters,
+                )
+                .map_err(anyhow::Error::msg)?,
+            );
+        }
         if let Some(snap) = &cp.stacks {
             user_stacks = Some(
                 snap.rebuild("live_user_stacks", 1 << 20)
@@ -971,7 +1099,7 @@ fn run_windowed_inner(
                 &mut epoch,
                 nshards,
             )?;
-            let wr = {
+            let mut wr = {
                 let mut core = session.core.borrow_mut();
                 // Tree + shard_partials: partials held back here until
                 // the window's id namespace is settled (LRU re-key
@@ -1129,35 +1257,70 @@ fn run_windowed_inner(
             if wr.widened {
                 degraded_windows += 1;
             }
-            // Fold the window into the cumulative state; the snapshot
-            // dies here, keeping resident memory O(top-K + live stack
-            // ids).
-            for p in &wr.snapshot {
-                cumulative.merge_path(p);
-                sketch.add(p.stack_id, p.cm_fs);
+            // Both sketches are fed per window in either mode — they
+            // are additive, so compaction cannot change them. The
+            // decayed sketch first decays to this window's end time.
+            if let Some(d) = recent.as_mut() {
+                d.advance_to(wr.end_ns);
             }
-            window_drops.push(wr.drops);
-            summaries.push(WindowSummary {
+            for p in &wr.snapshot {
+                sketch.add(p.stack_id, p.cm_fs);
+                if let Some(d) = recent.as_mut() {
+                    d.add(p.stack_id, p.cm_fs);
+                }
+            }
+            let summary = WindowSummary {
                 index: wr.index,
                 slices: wr.slices,
                 drained: wr.drained,
                 drops: wr.drops,
-            });
+            };
+            match tiers.as_mut() {
+                // Compaction: the snapshot moves into the tier pyramid
+                // (folding cascades announce themselves), keeping
+                // resident state O(B·log T) over T windows.
+                Some(py) => {
+                    for f in py.push(summary, std::mem::take(&mut wr.snapshot)) {
+                        emit(
+                            sinks,
+                            &ReportEvent::TierFolded {
+                                level: f.level,
+                                first_window: f.first_index,
+                                last_window: f.last_index,
+                                windows: f.windows,
+                                retained: f.retained,
+                            },
+                        )?;
+                    }
+                }
+                // Flat mode: fold the window into the cumulative state;
+                // the snapshot dies here, keeping resident memory
+                // O(top-K + live stack ids).
+                None => {
+                    for p in &wr.snapshot {
+                        cumulative.merge_path(p);
+                    }
+                    window_drops.push(wr.drops);
+                    summaries.push(summary);
+                }
+            }
             // Publish the snapshot before honouring a kill point, so
             // the injected crash has a checkpoint to recover from.
             if let Some(path) = &dur.checkpoint_path {
                 if window_index % dur.checkpoint_every == 0 {
-                    let core = session.core.borrow();
+                    let total_drains = session.core.borrow().hazard.total_drains;
                     build_checkpoint(
                         epoch,
                         fp,
                         &summaries,
                         &window_drops,
                         degraded_windows,
-                        core.hazard.total_drains,
+                        total_drains,
                         &cumulative,
                         &sketch,
                         user_stacks.as_ref(),
+                        tiers.as_mut(),
+                        recent.as_ref(),
                     )
                     .write_atomic(path)?;
                 }
@@ -1176,40 +1339,52 @@ fn run_windowed_inner(
     let ppt_start = Instant::now();
     let mut core = session.core.borrow_mut();
     core.user.flush_batch();
-    let merged = cumulative.take_paths();
+    // Compacted runs re-fold the retained tier entries oldest-first —
+    // byte-identical (fields and order) to the flat cumulative fold,
+    // because first_seen stamps increase across windows.
+    let merged = match tiers.as_ref() {
+        Some(py) => py.merged_cumulative(),
+        None => cumulative.take_paths(),
+    };
     let ranked = core.user.rank_merged(&merged, top_n);
     // Cumulative sketch tail: the sketch tracks raw stack ids; app
     // ownership comes from the cumulative merge (address spaces may
     // overlap between apps in system-wide mode, so each site must be
     // symbolized through the app that owns the path).
     let sketch_top = sketch.top(lcfg.top_k);
-    let sketch_lines: Vec<String> = {
+    let recent_top: Vec<(u32, u64, u64)> = recent
+        .as_ref()
+        .map(|d| d.top(lcfg.top_k))
+        .unwrap_or_default();
+    let (sketch_lines, recent_lines) = {
         let stacks = user_stacks.as_ref().unwrap_or(&core.kernel.stacks);
         let owner_of: crate::util::FxHashMap<u32, usize> = merged
             .iter()
             .map(|p| (p.stack_id, p.owner_app(multi_app, syms.len())))
             .collect();
-        sketch_top
-            .iter()
-            .map(|(id, cm_fs, err_fs)| {
-                let owner = owner_of.get(id).copied().unwrap_or(0);
-                let site = match stacks.resolve(*id).last() {
-                    Some(a) => syms[owner].render(*a),
-                    None => "<no frames>".to_string(),
-                };
-                let app_name = names
-                    .get(owner)
-                    .cloned()
-                    .unwrap_or_else(|| format!("app{owner}"));
-                format!(
-                    "{:<14} {:>9.3} ms (+{:.3} max over)  {}",
-                    app_name,
-                    *cm_fs as f64 / 1e12,
-                    *err_fs as f64 / 1e12,
-                    site,
-                )
-            })
-            .collect()
+        let mut render = |top: &[(u32, u64, u64)]| -> Vec<String> {
+            top.iter()
+                .map(|(id, cm_fs, err_fs)| {
+                    let owner = owner_of.get(id).copied().unwrap_or(0);
+                    let site = match stacks.resolve(*id).last() {
+                        Some(a) => syms[owner].render(*a),
+                        None => "<no frames>".to_string(),
+                    };
+                    let app_name = names
+                        .get(owner)
+                        .cloned()
+                        .unwrap_or_else(|| format!("app{owner}"));
+                    format!(
+                        "{:<14} {:>9.3} ms (+{:.3} max over)  {}",
+                        app_name,
+                        *cm_fs as f64 / 1e12,
+                        *err_fs as f64 / 1e12,
+                        site,
+                    )
+                })
+                .collect()
+        };
+        (render(&sketch_top), render(&recent_top))
     };
     let ctx = ReportCtx {
         label: names.join("+"),
@@ -1230,14 +1405,32 @@ fn run_windowed_inner(
     }
     report.degraded_windows = degraded_windows;
     report.degraded_drains = core.hazard.total_drains;
+    if let Some(py) = tiers.as_ref() {
+        // The flat per-window vector was never kept; the pyramid's
+        // exact whole-run totals replace the (empty-vector-derived)
+        // aggregates, so the rendered drop line cannot move by a byte.
+        report.windows_total = py.windows_total();
+        report.windows_lossy = py.lossy_windows();
+        report.windows_drop_total = py.drops_total();
+    }
     drop(core);
+    // Under compaction the final event reports the retained tier-entry
+    // summaries (counts summed per entry, index = the span's last
+    // window) instead of the flat per-window list.
+    let summaries = match tiers.as_ref() {
+        Some(py) => py.summaries(),
+        None => summaries,
+    };
     emit(
         sinks,
         &ReportEvent::Final(FinalEvent {
             report: &report,
             windows: &summaries,
+            windows_total: report.windows_total,
             sketch_top: &sketch_top,
             sketch_lines: &sketch_lines,
+            recent_top: &recent_top,
+            recent_lines: &recent_lines,
         }),
     )?;
     emit(sinks, &ReportEvent::SessionEnd { runtime_ns })?;
@@ -1248,6 +1441,8 @@ fn run_windowed_inner(
         windows: summaries,
         sketch_top,
         sketch_lines,
+        recent_top,
+        recent_lines,
     })
 }
 
@@ -1279,6 +1474,7 @@ mod tests {
                         ReportEvent::Symbols(_) => "symbols",
                         ReportEvent::ShardWindow(_) => "shard",
                         ReportEvent::Degraded { .. } => "degraded",
+                        ReportEvent::TierFolded { .. } => "tier",
                         ReportEvent::WindowClosed(_) => "window",
                         ReportEvent::Scorecard(_) => "scorecard",
                         ReportEvent::Final(fe) => {
@@ -1393,6 +1589,98 @@ mod tests {
         for lane_threads in [1, 2, 4, 7] {
             let tree = normalize(run_with(MergeStrategy::Tree, lane_threads));
             assert_eq!(serial, tree, "lane_threads={lane_threads}");
+        }
+    }
+
+    #[test]
+    fn compacted_sessions_report_byte_identically_to_uncompacted() {
+        // The tentpole invariant: `--compact-base B` bounds resident
+        // state but must not move the final cumulative report by a
+        // byte, for any base, merge strategy, or lane count.
+        let run_with = |base: Option<usize>, strategy: MergeStrategy, lanes: usize| {
+            let app = apps::canneal(8, 5);
+            let mut b = Session::builder(AnalysisEngine::native())
+                .app(&app)
+                .window_us(2_000)
+                .shards(4)
+                .merge(strategy)
+                .lane_threads(lanes);
+            if let Some(base) = base {
+                b = b.compact_base(base);
+            }
+            b.run().unwrap()
+        };
+        let normalize = |out: SessionOutput| {
+            let mut r = out.report;
+            r.ppt_seconds = 0.0;
+            r.memory_bytes = 0;
+            (out.runtime_ns, out.sketch_top, out.sketch_lines, r.to_string())
+        };
+        let flat_out = run_with(None, MergeStrategy::Tree, 1);
+        let flat_windows = flat_out.windows.clone();
+        let flat = normalize(flat_out);
+        for base in [2usize, 3, 8] {
+            let out = run_with(Some(base), MergeStrategy::Tree, 1);
+            // Tier-entry summaries cover the same span with the same
+            // totals, in O(base · log T) entries.
+            assert!(
+                out.windows.len() <= flat_windows.len(),
+                "base {base}: compaction must not grow the summary list"
+            );
+            assert_eq!(
+                out.windows.iter().map(|w| w.slices).sum::<u64>(),
+                flat_windows.iter().map(|w| w.slices).sum::<u64>(),
+                "base {base}"
+            );
+            assert_eq!(
+                out.windows.last().map(|w| w.index),
+                flat_windows.last().map(|w| w.index),
+                "base {base}"
+            );
+            assert_eq!(normalize(out), flat, "base {base}");
+        }
+        // Serial merge and threaded lanes agree too (the full matrix
+        // lives in the integration goldens).
+        assert_eq!(normalize(run_with(Some(2), MergeStrategy::Serial, 1)), flat);
+        assert_eq!(normalize(run_with(Some(2), MergeStrategy::Tree, 2)), flat);
+    }
+
+    #[test]
+    fn decayed_recent_topk_rides_along_without_touching_the_report() {
+        let run_with = |half_life: Option<u64>| {
+            let app = apps::canneal(8, 5);
+            let mut b = Session::builder(AnalysisEngine::native())
+                .app(&app)
+                .window_us(2_000)
+                .shards(4);
+            if let Some(us) = half_life {
+                b = b.decay_half_life_us(us);
+            }
+            b.run().unwrap()
+        };
+        let plain = run_with(None);
+        assert!(plain.recent_top.is_empty());
+        assert!(plain.recent_lines.is_empty());
+        let decayed = run_with(Some(1_000));
+        assert!(!decayed.recent_top.is_empty());
+        assert_eq!(decayed.recent_top.len(), decayed.recent_lines.len());
+        // The recent block is purely additive: cumulative sketch and
+        // report are untouched.
+        assert_eq!(decayed.sketch_top, plain.sketch_top);
+        let strip = |mut r: crate::gapp::Report| {
+            r.ppt_seconds = 0.0;
+            r.memory_bytes = 0;
+            r.to_string()
+        };
+        assert_eq!(strip(decayed.report), strip(plain.report));
+        // A fast decay can only shrink a site's count relative to the
+        // undecayed cumulative upper bound.
+        let cum: std::collections::HashMap<u32, u64> =
+            plain.sketch_top.iter().map(|(id, cm, _)| (*id, *cm)).collect();
+        for (id, cm, _) in &decayed.recent_top {
+            if let Some(upper) = cum.get(id) {
+                assert!(cm <= upper, "stack {id}: decayed {cm} > cumulative {upper}");
+            }
         }
     }
 

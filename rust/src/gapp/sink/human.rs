@@ -42,15 +42,15 @@ pub fn render_report(r: &Report) -> String {
         r.ppt_seconds,
     )
     .unwrap();
-    if !r.window_drops.is_empty() {
-        let total: u64 = r.window_drops.iter().sum();
-        let lossy = r.window_drops.iter().filter(|d| **d > 0).count();
+    // Rendered from the O(1) aggregates, never by walking the
+    // O(windows) breakdown (which `--compact-base` folds away
+    // entirely): text is byte-identical either way, and a multi-day
+    // run's report costs the same to render as a short one's.
+    if r.windows_total > 0 {
         writeln!(
             w,
             "windows {} | ring drops {} in {} window(s)",
-            r.window_drops.len(),
-            total,
-            lossy,
+            r.windows_total, r.windows_drop_total, r.windows_lossy,
         )
         .unwrap();
     }
@@ -182,10 +182,13 @@ pub fn render_window(wr: &WindowReport) -> String {
 pub fn render_live_tail(fe: &FinalEvent<'_>) -> String {
     let mut s = String::new();
     s.push('\n');
+    // `windows_total`, not `windows.len()`: under `--compact-base` the
+    // retained summaries are tier entries, but the header still counts
+    // real windows — byte-identical to the uncompacted run.
     let _ = writeln!(
         s,
         "== final (merged from {} windows) ==",
-        fe.windows.len()
+        fe.windows_total
     );
     s.push_str(&render_report(fe.report));
     if !fe.sketch_lines.is_empty() {
@@ -199,6 +202,21 @@ pub fn render_live_tail(fe: &FinalEvent<'_>) -> String {
             let _ = writeln!(s, "  {l}");
         }
     }
+    // The decayed block only exists when `--decay-half-life-us` is on,
+    // so pre-existing output stays byte-stable (golden-enforced).
+    if !fe.recent_lines.is_empty() {
+        s.push('\n');
+        let _ = writeln!(
+            s,
+            "recent top-{} (decayed space-saving; counts are upper bounds):",
+            fe.recent_lines.len()
+        );
+        for l in fe.recent_lines {
+            let _ = writeln!(s, "  {l}");
+        }
+    }
+    // Tier-entry summaries sum their covered windows' drops exactly, so
+    // this figure is compaction-invariant too.
     let lossy: u64 = fe.windows.iter().map(|w| w.drops).sum();
     if lossy > 0 {
         let _ = writeln!(
@@ -308,6 +326,10 @@ impl<W: io::Write> ReportSink for HumanSink<W> {
             // the final report's accounting — the standalone notice is
             // for machine consumers.
             ReportEvent::Degraded { .. } => {}
+            // Tier folds are bookkeeping, not analysis: the text
+            // output stays byte-identical with compaction on or off
+            // (the JSONL sink ships them for machine consumers).
+            ReportEvent::TierFolded { .. } => {}
             ReportEvent::WindowClosed(wr) => {
                 self.w.write_all(render_window(wr).as_bytes())?;
             }
@@ -367,8 +389,11 @@ mod tests {
         sink.on_event(&ReportEvent::Final(FinalEvent {
             report: &report,
             windows: &[],
+            windows_total: 0,
             sketch_top: &[],
             sketch_lines: &[],
+            recent_top: &[],
+            recent_lines: &[],
         }))
         .unwrap();
         sink.on_event(&ReportEvent::SessionEnd { runtime_ns: 0 })
@@ -481,11 +506,51 @@ mod tests {
         let tail = render_live_tail(&FinalEvent {
             report: &report,
             windows: &windows,
+            windows_total: 2,
             sketch_top: &[],
             sketch_lines: &lines,
+            recent_top: &[],
+            recent_lines: &[],
         });
         assert!(tail.starts_with("\n== final (merged from 2 windows) ==\n"));
         assert!(tail.contains("cumulative top-1 (space-saving sketch"));
         assert!(tail.contains("note: 2 ring drops occurred"));
+        // No decayed sketch ⇒ no recent block (byte-stable output).
+        assert!(!tail.contains("recent top-"));
+        // With one, the block lands between the cumulative sketch and
+        // the lossy note.
+        let recent = vec!["appA        0.250 ms  site".to_string()];
+        let with_recent = render_live_tail(&FinalEvent {
+            report: &report,
+            windows: &windows,
+            windows_total: 2,
+            sketch_top: &[],
+            sketch_lines: &lines,
+            recent_top: &[],
+            recent_lines: &recent,
+        });
+        let at = with_recent
+            .find("recent top-1 (decayed space-saving; counts are upper bounds):")
+            .unwrap();
+        assert!(at > with_recent.find("cumulative top-1").unwrap());
+        assert!(at < with_recent.find("note: 2 ring drops").unwrap());
+        // Under compaction the summaries list holds tier entries but
+        // the header still counts true windows.
+        let folded = vec![WindowSummary {
+            index: 2,
+            slices: 4,
+            drained: 14,
+            drops: 2,
+        }];
+        let compacted = render_live_tail(&FinalEvent {
+            report: &report,
+            windows: &folded,
+            windows_total: 2,
+            sketch_top: &[],
+            sketch_lines: &lines,
+            recent_top: &[],
+            recent_lines: &[],
+        });
+        assert_eq!(compacted, tail);
     }
 }

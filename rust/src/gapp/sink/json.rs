@@ -64,6 +64,8 @@ pub fn config_json(c: &GappConfig) -> Json {
         ("output", opt_str(&c.output)),
         ("on_overflow", Json::str(c.on_overflow.name())),
         ("lane_threads", Json::usize(c.lane_threads)),
+        ("compact_base", opt_u64(c.compact_base.map(|b| b as u64))),
+        ("decay_half_life_us", opt_u64(c.decay_half_life_us)),
     ])
 }
 
@@ -342,6 +344,12 @@ pub fn report_json(r: &Report) -> Json {
             "window_drops",
             Json::Arr(r.window_drops.iter().map(|d| Json::u64(*d)).collect()),
         ),
+        // Additive within schema v1: the compaction-surviving window
+        // aggregates (under `--compact-base` the per-window breakdown
+        // above is empty and these carry the whole-run figures).
+        ("windows_total", Json::u64(r.windows_total)),
+        ("windows_lossy", Json::u64(r.windows_lossy)),
+        ("windows_drop_total", Json::u64(r.windows_drop_total)),
         ("degraded_windows", Json::u64(r.degraded_windows)),
         ("degraded_drains", Json::u64(r.degraded_drains)),
         ("memory_bytes", Json::u64(r.memory_bytes)),
@@ -503,6 +511,26 @@ pub fn report_from_json(v: &Json) -> Result<Report> {
             ));
         }
     }
+    let window_drops = u64_arr(v, "window_drops")?;
+    // Older documents predate the compaction-surviving window
+    // aggregates, but they always carry the full per-window vector, so
+    // deriving the totals from it reproduces exactly what a newer
+    // writer would have stamped.
+    let opt_or = |key: &str, derived: u64| -> Result<u64> {
+        match v.get(key) {
+            None => Ok(derived),
+            Some(j) => j
+                .as_u64()
+                .ok_or_else(|| anyhow!("field {key:?} is not a u64")),
+        }
+    };
+    let windows_total = opt_or("windows_total", window_drops.len() as u64)?;
+    let windows_lossy = opt_or(
+        "windows_lossy",
+        window_drops.iter().filter(|d| **d > 0).count() as u64,
+    )?;
+    let windows_drop_total =
+        opt_or("windows_drop_total", window_drops.iter().sum())?;
     Ok(Report {
         app: req_str(v, "app")?,
         backend: backend_from_name(&req_str(v, "backend")?),
@@ -541,7 +569,10 @@ pub fn report_from_json(v: &Json) -> Result<Report> {
         stack_ids: req_u64(v, "stack_ids")?,
         stack_drops: req_u64(v, "stack_drops")?,
         stack_evictions: req_u64(v, "stack_evictions")?,
-        window_drops: u64_arr(v, "window_drops")?,
+        window_drops,
+        windows_total,
+        windows_lossy,
+        windows_drop_total,
         degraded_windows: opt_u64_or_zero(v, "degraded_windows")?,
         degraded_drains: opt_u64_or_zero(v, "degraded_drains")?,
         memory_bytes: req_u64(v, "memory_bytes")?,
@@ -571,8 +602,20 @@ fn sketch_json(top: &[(u32, u64, u64)], lines: &[String]) -> Json {
     ])
 }
 
-fn final_json(fe: &FinalEvent<'_>) -> (Json, Json) {
-    (report_json(fe.report), sketch_json(fe.sketch_top, fe.sketch_lines))
+/// The third element is the decayed recent-window sketch — `None`
+/// unless `--decay-half-life-us` produced one, so documents from plain
+/// runs keep their exact v1 byte shape (additive-fields policy).
+fn final_json(fe: &FinalEvent<'_>) -> (Json, Json, Option<Json>) {
+    let recent = if fe.recent_top.is_empty() && fe.recent_lines.is_empty() {
+        None
+    } else {
+        Some(sketch_json(fe.recent_top, fe.recent_lines))
+    };
+    (
+        report_json(fe.report),
+        sketch_json(fe.sketch_top, fe.sketch_lines),
+        recent,
+    )
 }
 
 // ---- sinks -------------------------------------------------------------
@@ -586,6 +629,7 @@ pub struct JsonSink<W: io::Write> {
     windows: Vec<Json>,
     report: Json,
     cumulative: Json,
+    recent: Option<Json>,
     scorecards: Vec<Json>,
 }
 
@@ -597,6 +641,7 @@ impl<W: io::Write> JsonSink<W> {
             windows: Vec::new(),
             report: Json::Null,
             cumulative: Json::Null,
+            recent: None,
             scorecards: Vec::new(),
         }
     }
@@ -622,13 +667,18 @@ impl<W: io::Write> ReportSink for JsonSink<W> {
             // in the window and report objects, so the document already
             // carries it.
             ReportEvent::Degraded { .. } => {}
+            // Tier folds are compaction bookkeeping for streaming
+            // consumers; the document's report object already carries
+            // the whole-run aggregates.
+            ReportEvent::TierFolded { .. } => {}
             ReportEvent::WindowClosed(wr) => {
                 self.windows.push(window_json(wr));
             }
             ReportEvent::Final(fe) => {
-                let (report, cumulative) = final_json(fe);
+                let (report, cumulative, recent) = final_json(fe);
                 self.report = report;
                 self.cumulative = cumulative;
+                self.recent = recent;
             }
             ReportEvent::Scorecard(sc) => {
                 self.scorecards.push(scorecard_json(sc));
@@ -645,9 +695,14 @@ impl<W: io::Write> ReportSink for JsonSink<W> {
                         std::mem::replace(&mut self.cumulative, Json::Null),
                     ),
                 ];
-                // Additive within schema v1: only scenario sessions emit
-                // Scorecard events, so plain profiling documents keep
-                // their exact byte shape (golden-enforced).
+                // Additive within schema v1: only decayed-top-K runs
+                // carry a recent sketch, so plain profiling documents
+                // keep their exact byte shape (golden-enforced).
+                if let Some(recent) = self.recent.take() {
+                    fields.push(("recent_topk", recent));
+                }
+                // Same policy: only scenario sessions emit Scorecard
+                // events.
                 if !self.scorecards.is_empty() {
                     fields.push((
                         "scorecards",
@@ -750,12 +805,33 @@ impl<W: io::Write> ReportSink for JsonlSink<W> {
             ReportEvent::WindowClosed(wr) => {
                 self.line("window", vec![("window", window_json(wr))])
             }
+            ReportEvent::TierFolded {
+                level,
+                first_window,
+                last_window,
+                windows,
+                retained,
+            } => self.line(
+                "tier",
+                vec![(
+                    "tier",
+                    Json::obj(vec![
+                        ("level", Json::u64(*level as u64)),
+                        ("first_window", Json::u64(*first_window)),
+                        ("last_window", Json::u64(*last_window)),
+                        ("windows", Json::u64(*windows)),
+                        ("retained", Json::u64(*retained)),
+                    ]),
+                )],
+            ),
             ReportEvent::Final(fe) => {
-                let (report, cumulative) = final_json(fe);
-                self.line(
-                    "final",
-                    vec![("report", report), ("cumulative_topk", cumulative)],
-                )
+                let (report, cumulative, recent) = final_json(fe);
+                let mut fields =
+                    vec![("report", report), ("cumulative_topk", cumulative)];
+                if let Some(recent) = recent {
+                    fields.push(("recent_topk", recent));
+                }
+                self.line("final", fields)
             }
             ReportEvent::Scorecard(sc) => {
                 self.line("scorecard", vec![("scorecard", scorecard_json(sc))])
@@ -826,6 +902,9 @@ mod tests {
             stack_drops: 1,
             stack_evictions: 2,
             window_drops: vec![0, 5],
+            windows_total: 2,
+            windows_lossy: 1,
+            windows_drop_total: 5,
             memory_bytes: 4096,
             ppt_seconds: 0.125,
             probe_cost_ns: 777,
@@ -965,8 +1044,11 @@ mod tests {
         sink.on_event(&ReportEvent::Final(FinalEvent {
             report: &r,
             windows: &[],
+            windows_total: 2,
             sketch_top: &[(3, 100, 10)],
             sketch_lines: &["line".to_string()],
+            recent_top: &[],
+            recent_lines: &[],
         }))
         .unwrap();
         sink.on_event(&ReportEvent::SessionEnd { runtime_ns: 42 })
@@ -1224,8 +1306,11 @@ mod tests {
         sink.on_event(&ReportEvent::Final(FinalEvent {
             report: &r,
             windows: &[],
+            windows_total: 2,
             sketch_top: &[],
             sketch_lines: &[],
+            recent_top: &[],
+            recent_lines: &[],
         }))
         .unwrap();
         sink.on_event(&ReportEvent::SessionEnd { runtime_ns: 9 })
@@ -1237,7 +1322,119 @@ mod tests {
         assert_eq!(doc.get("type").unwrap().as_str(), Some("gapp.session"));
         assert_eq!(doc.get("windows").unwrap().as_arr().unwrap().len(), 0);
         assert_eq!(doc.get("runtime_ns").unwrap().as_u64(), Some(9));
+        // A run without the decayed sketch carries no recent_topk key
+        // at all (additive-fields policy keeps plain documents stable).
+        assert!(doc.get("recent_topk").is_none());
         let rt = report_from_json(doc.get("report").unwrap()).unwrap();
         assert_eq!(rt.to_string(), r.to_string());
+    }
+
+    #[test]
+    fn window_aggregates_round_trip_and_old_documents_derive_them() {
+        // New documents stamp the aggregates explicitly…
+        let r = sample_report();
+        let j = report_json(&r);
+        assert_eq!(j.get("windows_total").unwrap().as_u64(), Some(2));
+        assert_eq!(j.get("windows_lossy").unwrap().as_u64(), Some(1));
+        assert_eq!(j.get("windows_drop_total").unwrap().as_u64(), Some(5));
+        let rt = report_from_json(&j).unwrap();
+        assert_eq!(rt.windows_total, 2);
+        assert_eq!(rt.windows_lossy, 1);
+        assert_eq!(rt.windows_drop_total, 5);
+        // …and an old document without them derives the same figures
+        // from the per-window vector it always carried, so re-rendering
+        // stays byte-identical.
+        let mut old = j.to_compact();
+        for key in [
+            "\"windows_total\":2,",
+            "\"windows_lossy\":1,",
+            "\"windows_drop_total\":5,",
+        ] {
+            assert!(old.contains(key), "compact doc should contain {key}");
+            old = old.replace(key, "");
+        }
+        let rt = report_from_json(&Json::parse(&old).unwrap()).unwrap();
+        assert_eq!(rt.windows_total, 2);
+        assert_eq!(rt.windows_lossy, 1);
+        assert_eq!(rt.windows_drop_total, 5);
+        assert_eq!(rt.to_string(), r.to_string());
+    }
+
+    #[test]
+    fn tier_folds_stream_as_jsonl_lines_and_recent_topk_is_additive() {
+        // The JSONL transport frames each fold as a schema-stamped
+        // "tier" line…
+        let mut sink = JsonlSink::new(Vec::new());
+        sink.on_event(&ReportEvent::TierFolded {
+            level: 2,
+            first_window: 1,
+            last_window: 64,
+            windows: 64,
+            retained: 3,
+        })
+        .unwrap();
+        let r = sample_report();
+        let recent_top = [(9u32, 4_000u64, 250u64)];
+        let recent_lines = ["recent line".to_string()];
+        sink.on_event(&ReportEvent::Final(FinalEvent {
+            report: &r,
+            windows: &[],
+            windows_total: 2,
+            sketch_top: &[(3, 100, 10)],
+            sketch_lines: &[],
+            recent_top: &recent_top,
+            recent_lines: &recent_lines,
+        }))
+        .unwrap();
+        sink.finish().unwrap();
+        let out = String::from_utf8(sink.into_inner()).unwrap();
+        let lines: Vec<&str> = out.lines().collect();
+        assert_eq!(lines.len(), 2);
+        let tier = Json::parse(lines[0]).unwrap();
+        assert_eq!(tier.get("schema").unwrap().as_u64(), Some(SCHEMA_VERSION));
+        assert_eq!(tier.get("event").unwrap().as_str(), Some("tier"));
+        let body = tier.get("tier").unwrap();
+        assert_eq!(body.get("level").unwrap().as_u64(), Some(2));
+        assert_eq!(body.get("first_window").unwrap().as_u64(), Some(1));
+        assert_eq!(body.get("last_window").unwrap().as_u64(), Some(64));
+        assert_eq!(body.get("windows").unwrap().as_u64(), Some(64));
+        assert_eq!(body.get("retained").unwrap().as_u64(), Some(3));
+        // …and a final line from a decayed run carries recent_topk
+        // beside the cumulative sketch.
+        let fin = Json::parse(lines[1]).unwrap();
+        let recent = fin.get("recent_topk").unwrap();
+        let top = recent.get("top").unwrap().as_arr().unwrap();
+        assert_eq!(top[0].get("stack_id").unwrap().as_u64(), Some(9));
+        assert_eq!(top[0].get("cm_fs_upper").unwrap().as_u64(), Some(4_000));
+
+        // The one-document sink ignores tier folds (additive event) but
+        // keeps the recent sketch when one was produced.
+        let mut doc = JsonSink::new(Vec::new());
+        doc.on_event(&ReportEvent::TierFolded {
+            level: 1,
+            first_window: 1,
+            last_window: 8,
+            windows: 8,
+            retained: 1,
+        })
+        .unwrap();
+        doc.on_event(&ReportEvent::Final(FinalEvent {
+            report: &r,
+            windows: &[],
+            windows_total: 2,
+            sketch_top: &[],
+            sketch_lines: &[],
+            recent_top: &recent_top,
+            recent_lines: &recent_lines,
+        }))
+        .unwrap();
+        doc.on_event(&ReportEvent::SessionEnd { runtime_ns: 1 }).unwrap();
+        doc.finish().unwrap();
+        let parsed =
+            Json::parse(&String::from_utf8(doc.into_inner()).unwrap()).unwrap();
+        assert_eq!(parsed.get("windows").unwrap().as_arr().unwrap().len(), 0);
+        let recent = parsed.get("recent_topk").unwrap();
+        let lines = recent.get("lines").unwrap().as_arr().unwrap();
+        assert_eq!(lines[0].as_str(), Some("recent line"));
     }
 }

@@ -81,13 +81,25 @@ pub struct SessionInfo {
 #[derive(Clone, Copy, Debug)]
 pub struct FinalEvent<'a> {
     pub report: &'a Report,
-    /// One summary per closed window (empty for batch).
+    /// One summary per closed window (empty for batch). Under
+    /// `--compact-base` these are the retained *tier-entry* summaries
+    /// (each covering a contiguous run of windows, counters summed), so
+    /// the list stays O(B·log T); sums over it are unchanged.
     pub windows: &'a [WindowSummary],
+    /// Windows actually closed (equals `windows.len()` without
+    /// compaction; the true count with it). 0 for batch.
+    pub windows_total: u64,
     /// Cumulative space-saving top-K:
     /// `(stack_id, cm_fs_upper_bound, max_overestimate_fs)`.
     pub sketch_top: &'a [(u32, u64, u64)],
     /// The sketch rendered for display (empty for batch).
     pub sketch_lines: &'a [String],
+    /// Time-decayed top-K (`--decay-half-life-us`): same shape as
+    /// `sketch_top`, counts exponentially decayed toward the end of the
+    /// run. Empty when the knob is off — additive within schema v1.
+    pub recent_top: &'a [(u32, u64, u64)],
+    /// `recent_top` rendered for display (empty when the knob is off).
+    pub recent_lines: &'a [String],
 }
 
 /// One ring shard's partial window aggregation, emitted before the
@@ -226,10 +238,13 @@ impl ScorecardEvent {
 }
 
 /// One event of a profiling session, in emission order:
-/// `SessionStart ((Symbols)? (ShardWindow)* (Degraded)? WindowClosed)*
-/// Final (Scorecard)? SessionEnd` (`Symbols`/`ShardWindow` only when
-/// opted in; `Degraded` only under `--on-overflow degrade` and only
-/// for windows that degraded; `Scorecard` only for scenario sessions).
+/// `SessionStart ((Symbols)? (ShardWindow)* (Degraded)? WindowClosed
+/// (TierFolded)*)* Final (Scorecard)? SessionEnd`
+/// (`Symbols`/`ShardWindow` only when opted in; `Degraded` only under
+/// `--on-overflow degrade` and only for windows that degraded;
+/// `TierFolded` only under `--compact-base` and only after windows
+/// whose close triggered folds; `Scorecard` only for scenario
+/// sessions).
 #[derive(Clone, Copy, Debug)]
 pub enum ReportEvent<'a> {
     SessionStart(&'a SessionInfo),
@@ -253,6 +268,23 @@ pub enum ReportEvent<'a> {
         widened: bool,
     },
     WindowClosed(&'a WindowReport),
+    /// Tier compaction notice (additive within schema v1, like
+    /// `ShardWindow`: only `--compact-base` sessions emit it): the
+    /// window that just closed filled a pyramid level, folding `B`
+    /// entries into one covering `first_window..=last_window`. A
+    /// cascade emits one event per level folded.
+    TierFolded {
+        /// Level the folded entry landed on (≥ 1).
+        level: u32,
+        /// First window the folded entry covers (1-based, inclusive).
+        first_window: u64,
+        /// Last window covered (inclusive).
+        last_window: u64,
+        /// Windows covered (`last_window - first_window + 1`).
+        windows: u64,
+        /// Entries retained across the pyramid after this fold.
+        retained: u64,
+    },
     Final(FinalEvent<'a>),
     /// Classification quality versus injected ground truth (additive
     /// within schema v1, like `ShardWindow`: only scenario sessions

@@ -42,7 +42,13 @@
 //!   SPSC channel and collects one partial per shard at the
 //!   window-close barrier — still byte-identical output at every N.
 //! * [`topk`] — a bounded space-saving sketch for cumulative top-K over
-//!   unbounded runs in O(K) memory.
+//!   unbounded runs in O(K) memory, plus a time-decayed variant
+//!   ([`DecayedSpaceSaving`], `--decay-half-life-us`) answering "hot
+//!   recently" beside "hot ever".
+//! * [`tiers`] — base-B tier pyramid over closed windows
+//!   (`--compact-base`): retained per-window state drops from
+//!   O(windows) to O(B·log T) while the cumulative report stays
+//!   byte-identical to the uncompacted run.
 //! * [`multi`] — system-wide mode: several applications share one
 //!   kernel, with per-app attribution learned from `task_newtask`.
 //! * [`live`] — per-window top-K report rendering.
@@ -60,6 +66,7 @@ pub mod lanes;
 pub mod live;
 pub mod multi;
 pub mod partials;
+pub mod tiers;
 pub mod topk;
 pub mod window;
 
@@ -67,10 +74,12 @@ pub use consumer::{EpochStats, ShardPartial, ShardedConsumer};
 pub use lanes::{spawn_lane_workers, LaneIo, LaneMsg, LaneWindow};
 pub use live::{LiveLine, WindowReport};
 pub use multi::{AppRegistry, RegistryProbe};
-pub use topk::SpaceSaving;
+pub use tiers::{TierEntry, TierFold, TierPyramid};
+pub use topk::{DecayedSpaceSaving, SpaceSaving};
 pub use window::{
-    merge_pair, merge_snapshots, merge_tree, merge_tree_parallel,
-    sort_canonical, WindowAccumulator,
+    merge_pair, merge_pair_pooled, merge_snapshots, merge_tree,
+    merge_tree_parallel, merge_tree_parallel_pooled, merge_tree_pooled,
+    sort_canonical, MergePool, WindowAccumulator,
 };
 
 use anyhow::Result;

@@ -1,0 +1,626 @@
+//! Tiered window compaction — bounded-memory multi-day profiling.
+//!
+//! The flat windowed driver retains one `WindowSummary` (and one drop
+//! counter) per closed window: O(windows) state, which a multi-day
+//! `gapp live` run eventually spends its memory on. This module bounds
+//! that at O(B·log T) for T windows with a **tier pyramid**, the
+//! downsampling-store shape time-series databases use:
+//!
+//! * level 0 holds the last closed windows *raw* — summary plus the
+//!   window's merged path snapshot;
+//! * when a level accumulates `B` entries, they fold through the
+//!   existing associative merge tree ([`merge_tree_pooled`]) into one
+//!   entry of the next level, which covers `B`× the window span.
+//!
+//! The retained entry count is exactly the digit sum of T written in
+//! base B (each level is one digit), so it is ≤ (B−1)·(⌊log_B T⌋+1) —
+//! property-tested. Because every per-path aggregate is associative
+//! and output order reconciles through `first_seen` capture stamps
+//! (proven for the shard merge tree, reused verbatim here), folding
+//! the retained entries chronologically reproduces the uncompacted
+//! cumulative merge **byte for byte**: compaction changes what is
+//! *retained*, never what is *reported*.
+//!
+//! Entries are immutable once created; each caches its serialized
+//! checkpoint rendering (`cached_json`) so periodic checkpoint writes
+//! re-serialize only entries created since the last write — the
+//! append-only serialization contract of checkpoint size governance.
+
+use crate::gapp::stream::window::{merge_tree_pooled, MergePool};
+use crate::gapp::stream::WindowSummary;
+use crate::gapp::userspace::{MergedPath, PathAccumulator};
+
+/// One retained pyramid entry: the fold of a contiguous run of
+/// `last_index - first_index + 1` closed windows (a level-0 entry
+/// covers exactly one). Immutable once created — folds consume entries
+/// and create a new one a level up.
+#[derive(Clone, Debug)]
+pub struct TierEntry {
+    /// Pyramid level (0 = raw window, `l` covers `B^l` windows).
+    pub level: u32,
+    /// First covered window index (1-based, inclusive).
+    pub first_index: u64,
+    /// Last covered window index (inclusive).
+    pub last_index: u64,
+    /// Aggregate of the covered windows: `index` is the last covered
+    /// window, the counters are sums over the span.
+    pub summary: WindowSummary,
+    /// Covered windows that recorded ring drops.
+    pub lossy_windows: u64,
+    /// Folded path snapshot of the span, in canonical
+    /// (ascending-`first_seen`) order.
+    pub paths: Vec<MergedPath>,
+    /// Serialized checkpoint rendering, filled in by the first
+    /// checkpoint write that covers this entry (entries never change,
+    /// so later writes splice the cached bytes instead of re-walking
+    /// the paths).
+    pub(crate) cached_json: Option<String>,
+}
+
+impl TierEntry {
+    /// Assemble an entry (checkpoint restore and tests; the pyramid
+    /// builds its own entries internally).
+    pub fn new(
+        level: u32,
+        first_index: u64,
+        last_index: u64,
+        summary: WindowSummary,
+        lossy_windows: u64,
+        paths: Vec<MergedPath>,
+    ) -> TierEntry {
+        TierEntry {
+            level,
+            first_index,
+            last_index,
+            summary,
+            lossy_windows,
+            paths,
+            cached_json: None,
+        }
+    }
+
+    /// Windows this entry covers.
+    pub fn windows(&self) -> u64 {
+        self.last_index - self.first_index + 1
+    }
+
+    /// The shape key resume integrity compares (everything except the
+    /// folded paths, which a replay deliberately skips rebuilding).
+    fn shape(&self) -> (u32, u64, u64, WindowSummary, u64) {
+        (
+            self.level,
+            self.first_index,
+            self.last_index,
+            self.summary,
+            self.lossy_windows,
+        )
+    }
+}
+
+/// One fold performed by a [`TierPyramid::push`]: `B` entries of
+/// `level - 1` collapsed into one entry at `level`. Surfaced so the
+/// driver can emit an additive `tier` event per fold.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TierFold {
+    /// Level the folded entry landed on (≥ 1).
+    pub level: u32,
+    pub first_index: u64,
+    pub last_index: u64,
+    /// Windows the folded entry covers.
+    pub windows: u64,
+    /// Total entries retained across the pyramid after this fold.
+    pub retained: u64,
+}
+
+/// The pyramid itself (see the module docs). All whole-run aggregates
+/// the final report needs — window count, drop totals, lossy-window
+/// count — are maintained exactly, so the report renders byte-identical
+/// to the flat history it replaces.
+pub struct TierPyramid {
+    base: usize,
+    /// `levels[l]` holds the at-rest entries of level `l`, oldest
+    /// first. At most `base - 1` per level (a `base`-th arrival folds).
+    levels: Vec<Vec<TierEntry>>,
+    pool: MergePool,
+    windows_total: u64,
+    slices_total: u64,
+    drained_total: u64,
+    drops_total: u64,
+    lossy_windows: u64,
+}
+
+impl TierPyramid {
+    /// A pyramid with fold base `B ≥ 2` (user-facing knobs validate
+    /// earlier with a real error; the assert catches library misuse).
+    pub fn new(base: usize) -> TierPyramid {
+        assert!(base >= 2, "tier pyramid base must be >= 2");
+        TierPyramid {
+            base,
+            levels: Vec::new(),
+            pool: MergePool::new(),
+            windows_total: 0,
+            slices_total: 0,
+            drained_total: 0,
+            drops_total: 0,
+            lossy_windows: 0,
+        }
+    }
+
+    pub fn base(&self) -> usize {
+        self.base
+    }
+
+    /// Closed windows pushed so far (the T the pyramid compacts).
+    pub fn windows_total(&self) -> u64 {
+        self.windows_total
+    }
+
+    pub fn slices_total(&self) -> u64 {
+        self.slices_total
+    }
+
+    pub fn drained_total(&self) -> u64 {
+        self.drained_total
+    }
+
+    /// Ring drops summed over every closed window.
+    pub fn drops_total(&self) -> u64 {
+        self.drops_total
+    }
+
+    /// Closed windows that recorded ring drops.
+    pub fn lossy_windows(&self) -> u64 {
+        self.lossy_windows
+    }
+
+    /// Retained entries across all levels — the digit sum of
+    /// [`windows_total`](TierPyramid::windows_total) in base B, so
+    /// O(B·log T).
+    pub fn entries(&self) -> u64 {
+        self.levels.iter().map(|l| l.len() as u64).sum()
+    }
+
+    /// Levels currently materialized (⌊log_B T⌋ + 1 once T ≥ 1).
+    pub fn depth(&self) -> usize {
+        self.levels.len()
+    }
+
+    /// Retained merged paths summed over every entry (the memory-bound
+    /// property tests this against O(entries × live stack ids)).
+    pub fn retained_paths(&self) -> usize {
+        self.levels
+            .iter()
+            .flat_map(|l| l.iter())
+            .map(|e| e.paths.len())
+            .sum()
+    }
+
+    /// Retained entries oldest-first: higher levels strictly predate
+    /// lower ones (a level folds upward before newer windows land), and
+    /// entries within a level are in push order.
+    pub fn entries_chronological(&self) -> impl Iterator<Item = &TierEntry> {
+        self.levels.iter().rev().flat_map(|l| l.iter())
+    }
+
+    /// Mutable chronological walk (the checkpoint writer fills each
+    /// entry's serialization cache in place).
+    pub fn entries_chronological_mut(
+        &mut self,
+    ) -> impl Iterator<Item = &mut TierEntry> {
+        self.levels.iter_mut().rev().flat_map(|l| l.iter_mut())
+    }
+
+    /// Push one closed window (its summary plus merged path snapshot)
+    /// and cascade any folds it triggers, lowest level first. Returns
+    /// the folds performed, for event emission.
+    pub fn push(
+        &mut self,
+        summary: WindowSummary,
+        paths: Vec<MergedPath>,
+    ) -> Vec<TierFold> {
+        self.windows_total += 1;
+        self.slices_total += summary.slices;
+        self.drained_total += summary.drained;
+        self.drops_total += summary.drops;
+        let lossy = u64::from(summary.drops > 0);
+        self.lossy_windows += lossy;
+        if self.levels.is_empty() {
+            self.levels.push(Vec::new());
+        }
+        self.levels[0].push(TierEntry {
+            level: 0,
+            first_index: summary.index,
+            last_index: summary.index,
+            summary,
+            lossy_windows: lossy,
+            paths,
+            cached_json: None,
+        });
+        let mut folds = Vec::new();
+        let mut l = 0;
+        while self.levels[l].len() >= self.base {
+            let drained = std::mem::take(&mut self.levels[l]);
+            let folded = fold_entries(drained, (l + 1) as u32, &mut self.pool);
+            if self.levels.len() <= l + 1 {
+                self.levels.push(Vec::new());
+            }
+            self.levels[l + 1].push(folded);
+            let e = self.levels[l + 1].last().unwrap();
+            folds.push(TierFold {
+                level: e.level,
+                first_index: e.first_index,
+                last_index: e.last_index,
+                windows: e.windows(),
+                retained: self.entries(),
+            });
+            l += 1;
+        }
+        folds
+    }
+
+    /// Fold every retained entry, oldest first, into the cumulative
+    /// merge — byte-identical (fields *and* order) to the uncompacted
+    /// run's per-window fold: entry spans are disjoint and
+    /// chronological, and `first_seen` stamps increase across windows,
+    /// so insertion order reproduces the flat ascending-stamp order
+    /// exactly.
+    pub fn merged_cumulative(&self) -> Vec<MergedPath> {
+        let mut acc = PathAccumulator::new();
+        for e in self.entries_chronological() {
+            for p in &e.paths {
+                acc.merge_path(p);
+            }
+        }
+        acc.take_paths()
+    }
+
+    /// Aggregate summaries of the retained entries, oldest first (what
+    /// the final event reports instead of the flat per-window list).
+    pub fn summaries(&self) -> Vec<WindowSummary> {
+        self.entries_chronological().map(|e| e.summary).collect()
+    }
+
+    /// Structural equality minus the folded paths: what a resume
+    /// replay — which deliberately skips rebuilding analysis state —
+    /// can verify against the checkpointed pyramid.
+    pub fn same_shape(&self, other: &TierPyramid) -> bool {
+        self.base == other.base
+            && self.windows_total == other.windows_total
+            && self.slices_total == other.slices_total
+            && self.drained_total == other.drained_total
+            && self.drops_total == other.drops_total
+            && self.lossy_windows == other.lossy_windows
+            && self
+                .entries_chronological()
+                .map(TierEntry::shape)
+                .eq(other.entries_chronological().map(TierEntry::shape))
+    }
+
+    /// Rebuild a pyramid from checkpointed entries (chronological,
+    /// oldest first). Totals are recomputed from the entries; callers
+    /// cross-check them against the checkpoint's stored totals. Errors
+    /// loudly on shapes no push sequence can produce.
+    pub fn restore(base: usize, entries: Vec<TierEntry>) -> Result<TierPyramid, String> {
+        if base < 2 {
+            return Err("tier pyramid base must be >= 2".to_string());
+        }
+        let mut p = TierPyramid::new(base);
+        let mut next_index = 1u64;
+        let mut prev_level: Option<u32> = None;
+        for e in entries {
+            if e.first_index != next_index {
+                return Err(format!(
+                    "tier checkpoint is not contiguous: entry covering windows \
+                     {}..={} follows window {}",
+                    e.first_index,
+                    e.last_index,
+                    next_index - 1
+                ));
+            }
+            if e.last_index < e.first_index || e.summary.index != e.last_index {
+                return Err(format!(
+                    "tier checkpoint entry covering windows {}..={} is \
+                     inconsistent with its summary (index {})",
+                    e.first_index, e.last_index, e.summary.index
+                ));
+            }
+            if let Some(prev) = prev_level {
+                if e.level > prev {
+                    return Err(format!(
+                        "tier checkpoint levels are not chronological: a \
+                         level-{} entry follows a level-{} entry",
+                        e.level, prev
+                    ));
+                }
+            }
+            prev_level = Some(e.level);
+            next_index = e.last_index + 1;
+            p.windows_total += e.windows();
+            p.slices_total += e.summary.slices;
+            p.drained_total += e.summary.drained;
+            p.drops_total += e.summary.drops;
+            p.lossy_windows += e.lossy_windows;
+            let level = e.level as usize;
+            while p.levels.len() <= level {
+                p.levels.push(Vec::new());
+            }
+            if p.levels[level].len() + 1 >= base {
+                return Err(format!(
+                    "tier checkpoint holds {} entries at level {level}, but a \
+                     base-{base} pyramid folds at {base} — it was written by a \
+                     different configuration",
+                    p.levels[level].len() + 1
+                ));
+            }
+            p.levels[level].push(e);
+        }
+        // Entries landed grouped by level in arrival (chronological)
+        // order; the chronological walk reads highest level first,
+        // which matches because the monotonicity check above
+        // guarantees higher levels exclusively hold older windows.
+        Ok(p)
+    }
+}
+
+/// Collapse a full level (oldest first) into one entry a level up.
+fn fold_entries(entries: Vec<TierEntry>, level: u32, pool: &mut MergePool) -> TierEntry {
+    debug_assert!(entries.len() >= 2, "a fold needs at least two entries");
+    let first_index = entries.first().unwrap().first_index;
+    let last_index = entries.last().unwrap().last_index;
+    let mut summary = WindowSummary {
+        index: last_index,
+        slices: 0,
+        drained: 0,
+        drops: 0,
+    };
+    let mut lossy_windows = 0u64;
+    let mut parts = Vec::with_capacity(entries.len());
+    for e in entries {
+        summary.slices += e.summary.slices;
+        summary.drained += e.summary.drained;
+        summary.drops += e.summary.drops;
+        lossy_windows += e.lossy_windows;
+        parts.push(e.paths);
+    }
+    // The associative merge tree reconciles order through `first_seen`,
+    // so the folded snapshot equals the serial fold of the span.
+    let paths = merge_tree_pooled(parts, pool);
+    TierEntry {
+        level,
+        first_index,
+        last_index,
+        summary,
+        lossy_windows,
+        paths,
+        cached_json: None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gapp::userspace::SliceEntry;
+    use crate::gapp::stream::WindowAccumulator;
+    use crate::simkernel::WaitKind;
+    use crate::util::check::property;
+    use crate::util::Prng;
+
+    /// Synthetic slice with a globally increasing capture stamp, the
+    /// invariant the windowed driver provides (stamps are assigned in
+    /// time order and windows partition time).
+    fn slice(stamp: u64, id_space: u64) -> SliceEntry {
+        SliceEntry {
+            ts_id: stamp,
+            pid: 1 + (stamp % 4) as u32,
+            cm_ns: 5.0 + (stamp % 17) as f64 * 1.375,
+            threads_av: 1.0,
+            stack_id: (stamp % id_space) as u32,
+            addrs: vec![0x100 + stamp % 5],
+            from_stack_top: false,
+            wait: WaitKind::Futex,
+            woken_by: 0,
+        }
+    }
+
+    /// Build `t` windows of `per` slices each; returns the per-window
+    /// (summary, snapshot) pairs plus the flat cumulative fold.
+    fn synth_windows(
+        t: u64,
+        per: u64,
+        id_space: u64,
+        drops_of: impl Fn(u64) -> u64,
+    ) -> (Vec<(WindowSummary, Vec<MergedPath>)>, Vec<MergedPath>) {
+        let mut stamp = 0u64;
+        let mut wacc = WindowAccumulator::new();
+        let mut flat = PathAccumulator::new();
+        let mut windows = Vec::new();
+        for index in 1..=t {
+            for _ in 0..per {
+                stamp += 1;
+                wacc.add_slice(&slice(stamp, id_space), 0);
+            }
+            let snap = wacc.snapshot();
+            for p in &snap {
+                flat.merge_path(p);
+            }
+            windows.push((
+                WindowSummary {
+                    index,
+                    slices: per,
+                    drained: per * 2,
+                    drops: drops_of(index),
+                },
+                snap,
+            ));
+        }
+        (windows, flat.take_paths())
+    }
+
+    /// Digit sum of `n` written in base `b` — the exact retained-entry
+    /// count of a pyramid after `n` pushes.
+    fn digit_sum(mut n: u64, b: u64) -> u64 {
+        let mut s = 0;
+        while n > 0 {
+            s += n % b;
+            n /= b;
+        }
+        s
+    }
+
+    fn assert_paths_equal(a: &[MergedPath], b: &[MergedPath]) {
+        assert_eq!(a.len(), b.len(), "path count diverged");
+        for (x, y) in a.iter().zip(b) {
+            assert_eq!(x.stack_id, y.stack_id, "path order diverged");
+            assert_eq!(x.cm_fs, y.cm_fs);
+            assert_eq!(x.first_seen, y.first_seen);
+            assert_eq!(x.slices, y.slices);
+            assert_eq!(x.addr_freq, y.addr_freq);
+            assert_eq!(x.wait_hist, y.wait_hist);
+            assert_eq!(x.wakers, y.wakers);
+            assert_eq!(x.app_slices, y.app_slices);
+        }
+    }
+
+    #[test]
+    fn compacted_cumulative_is_byte_identical_to_the_flat_fold() {
+        for base in [2usize, 3, 4, 8] {
+            for t in [1u64, 7, 16, 65] {
+                let (windows, flat) =
+                    synth_windows(t, 9, 13, |i| if i % 5 == 0 { 3 } else { 0 });
+                let mut p = TierPyramid::new(base);
+                for (summary, snap) in windows {
+                    p.push(summary, snap);
+                }
+                assert_paths_equal(&flat, &p.merged_cumulative());
+                assert_eq!(p.windows_total(), t, "base {base} t {t}");
+                assert_eq!(p.drops_total(), (t / 5) * 3);
+                assert_eq!(p.lossy_windows(), t / 5);
+                assert_eq!(p.entries(), digit_sum(t, base as u64));
+            }
+        }
+    }
+
+    #[test]
+    fn folds_cascade_and_report_their_spans() {
+        let (windows, _) = synth_windows(8, 4, 7, |_| 0);
+        let mut p = TierPyramid::new(2);
+        let mut all_folds = Vec::new();
+        for (summary, snap) in windows {
+            all_folds.push(p.push(summary, snap));
+        }
+        // Base 2, 8 windows: pushes 2, 4, 6, 8 fold; 4 and 8 cascade.
+        assert!(all_folds[0].is_empty() && all_folds[2].is_empty());
+        assert_eq!(all_folds[1].len(), 1); // windows 1-2 → level 1
+        assert_eq!(all_folds[3].len(), 2); // 3-4 → L1, then 1-4 → L2
+        assert_eq!(all_folds[7].len(), 3); // 7-8 → L1, 5-8 → L2, 1-8 → L3
+        let last = all_folds[7][2];
+        assert_eq!(
+            (last.level, last.first_index, last.last_index, last.windows),
+            (3, 1, 8, 8)
+        );
+        assert_eq!(last.retained, 1); // the whole run collapsed into one
+        assert_eq!(p.depth(), 4);
+        // Chronology: higher levels strictly precede lower ones.
+        let spans: Vec<(u64, u64)> = p
+            .entries_chronological()
+            .map(|e| (e.first_index, e.last_index))
+            .collect();
+        for w in spans.windows(2) {
+            assert_eq!(w[1].0, w[0].1 + 1, "spans must be contiguous");
+        }
+    }
+
+    /// The headline memory bound, against a 10k-window synthetic run:
+    /// retained entries are exactly the base-B digit sum of T (never
+    /// O(T)), and retained paths are bounded by entries × the live id
+    /// space — O(K + live stack ids + B·log T) overall.
+    #[test]
+    fn ten_thousand_windows_retain_logarithmic_state() {
+        let id_space = 17u64;
+        let (windows, flat) = synth_windows(10_000, 3, id_space, |_| 0);
+        let mut p = TierPyramid::new(4);
+        for (summary, snap) in windows {
+            p.push(summary, snap);
+        }
+        assert_eq!(p.windows_total(), 10_000);
+        assert_eq!(p.entries(), digit_sum(10_000, 4));
+        assert!(p.entries() <= 3 * 8, "digit sum of 10k in base 4");
+        assert!(
+            p.retained_paths() as u64 <= p.entries() * id_space,
+            "retained paths {} must be bounded by entries {} × ids {}",
+            p.retained_paths(),
+            p.entries(),
+            id_space
+        );
+        // And the report is still exact.
+        assert_paths_equal(&flat, &p.merged_cumulative());
+    }
+
+    #[test]
+    fn memory_bound_holds_over_randomized_run_lengths() {
+        property("tier pyramid memory bound", 24, |rng: &mut Prng| {
+            let base = 2 + rng.below(7) as usize;
+            let t = 1 + rng.below(600);
+            let id_space = 3 + rng.below(20);
+            let (windows, flat) =
+                synth_windows(t, 1 + rng.below(6), id_space, |i| i % 7);
+            let mut p = TierPyramid::new(base);
+            for (summary, snap) in windows {
+                p.push(summary, snap);
+            }
+            assert_eq!(p.entries(), digit_sum(t, base as u64));
+            assert!(p.entries() <= (base as u64 - 1) * (p.depth() as u64));
+            assert!(p.retained_paths() as u64 <= p.entries() * id_space);
+            assert_paths_equal(&flat, &p.merged_cumulative());
+            // Aggregates survive every fold exactly.
+            assert_eq!(p.windows_total(), t);
+            assert_eq!(p.drops_total(), (1..=t).map(|i| i % 7).sum::<u64>());
+            assert_eq!(
+                p.lossy_windows(),
+                (1..=t).filter(|i| i % 7 != 0).count() as u64
+            );
+            assert_eq!(
+                p.summaries().iter().map(|s| s.slices).sum::<u64>(),
+                p.slices_total()
+            );
+        });
+    }
+
+    #[test]
+    fn restore_round_trips_and_rejects_foreign_shapes() {
+        let (windows, _) = synth_windows(11, 5, 9, |i| i % 3);
+        let mut p = TierPyramid::new(3);
+        for (summary, snap) in windows {
+            p.push(summary, snap);
+        }
+        let entries: Vec<TierEntry> =
+            p.entries_chronological().cloned().collect();
+        let r = TierPyramid::restore(3, entries.clone()).unwrap();
+        assert!(p.same_shape(&r));
+        assert_paths_equal(&p.merged_cumulative(), &r.merged_cumulative());
+        // A replayed (paths-free) pyramid still matches shapes.
+        let mut replay = TierPyramid::new(3);
+        let (windows2, _) = synth_windows(11, 5, 9, |i| i % 3);
+        for (summary, _snap) in windows2 {
+            replay.push(summary, Vec::new());
+        }
+        assert!(replay.same_shape(&p));
+        // …and diverging histories are caught.
+        let mut other = TierPyramid::new(3);
+        let (windows3, _) = synth_windows(11, 5, 9, |_| 0);
+        for (summary, _snap) in windows3 {
+            other.push(summary, Vec::new());
+        }
+        assert!(!other.same_shape(&p));
+        // Impossible restores error loudly.
+        let err = TierPyramid::restore(1, Vec::new()).unwrap_err();
+        assert!(err.contains(">= 2"), "{err}");
+        let mut gap = entries.clone();
+        gap.remove(0);
+        let err = TierPyramid::restore(3, gap).unwrap_err();
+        assert!(err.contains("contiguous"), "{err}");
+        let mut unsorted = entries;
+        unsorted.reverse();
+        assert!(TierPyramid::restore(3, unsorted).is_err());
+    }
+}

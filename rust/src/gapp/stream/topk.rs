@@ -207,6 +207,136 @@ impl<K: Eq + Hash + Copy + Ord> SpaceSaving<K> {
     }
 }
 
+/// Time-decayed space-saving sketch (`--decay-half-life-us`): counts
+/// halve every `half_life_ns` of *simulated* time, so its top-K answers
+/// "hot recently" where [`SpaceSaving`] answers "hot ever". Same
+/// algorithm, same lazy-deletion heap; decay is applied lazily, once
+/// per [`advance_to`] call (the windowed driver advances at each window
+/// close), by scaling every live counter by `0.5^(Δt / half_life)` in
+/// one O(cap) pass and rebuilding the heap from the rescaled counters.
+///
+/// The space-saving guarantees carry over relative to the *decayed*
+/// stream: every tracked count upper-bounds the key's decayed true
+/// weight, off by at most its (equally decayed) `err`. Decayed values
+/// floor to integers, so a key untouched for many half-lives decays to
+/// zero and becomes the natural next victim.
+///
+/// Determinism: the scale factor is computed in f64 (IEEE semantics,
+/// bit-stable for a given binary) and floored back to `u64`, and
+/// [`export`]/[`from_parts`] snapshot the decayed counts themselves —
+/// a restored sketch never re-derives a decay it already applied.
+///
+/// [`advance_to`]: DecayedSpaceSaving::advance_to
+/// [`export`]: DecayedSpaceSaving::export
+/// [`from_parts`]: DecayedSpaceSaving::from_parts
+#[derive(Clone, Debug)]
+pub struct DecayedSpaceSaving<K: Eq + Hash + Copy + Ord> {
+    inner: SpaceSaving<K>,
+    half_life_ns: u64,
+    /// Simulated timestamp the counters are currently decayed to.
+    now_ns: u64,
+}
+
+impl<K: Eq + Hash + Copy + Ord> DecayedSpaceSaving<K> {
+    /// A decayed sketch tracking at most `cap` keys with the given
+    /// half-life (simulated ns). Both knobs validate earlier on the
+    /// user-facing path; the asserts catch library misuse.
+    pub fn new(cap: usize, half_life_ns: u64) -> DecayedSpaceSaving<K> {
+        assert!(half_life_ns >= 1, "decay half-life must be >= 1 ns");
+        DecayedSpaceSaving {
+            inner: SpaceSaving::new(cap),
+            half_life_ns,
+            now_ns: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.inner.capacity()
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.inner.is_empty()
+    }
+
+    pub fn half_life_ns(&self) -> u64 {
+        self.half_life_ns
+    }
+
+    /// Timestamp the counters are decayed to (last `advance_to`).
+    pub fn now_ns(&self) -> u64 {
+        self.now_ns
+    }
+
+    /// Decay every counter to `now_ns`. Monotonic: a stale timestamp
+    /// (at or before the current decay point) is a no-op, so replayed
+    /// or widened windows cannot decay twice.
+    pub fn advance_to(&mut self, now_ns: u64) {
+        if now_ns <= self.now_ns {
+            return;
+        }
+        let dt = (now_ns - self.now_ns) as f64;
+        self.now_ns = now_ns;
+        let factor = (-(dt / self.half_life_ns as f64)).exp2();
+        for c in self.inner.counters.values_mut() {
+            c.count = (c.count as f64 * factor) as u64;
+            c.err = (c.err as f64 * factor) as u64;
+        }
+        // Every counter changed at once: rebuild the heap rather than
+        // pushing `cap` now-stale entries beside the old ones.
+        self.inner.heap.clear();
+        let counters = &self.inner.counters;
+        self.inner
+            .heap
+            .extend(counters.iter().map(|(k, c)| Reverse((c.count, *k, c.gen))));
+    }
+
+    /// Add `weight` to `key` at the current decay point (call
+    /// [`advance_to`] first to decay up to the observation time).
+    ///
+    /// [`advance_to`]: DecayedSpaceSaving::advance_to
+    pub fn add(&mut self, key: K, weight: u64) {
+        self.inner.add(key, weight);
+    }
+
+    /// Top `n` keys by decayed count (see [`SpaceSaving::top`]).
+    pub fn top(&self, n: usize) -> Vec<(K, u64, u64)> {
+        self.inner.top(n)
+    }
+
+    /// Serialize: `(capacity, decayed-to timestamp, counters)` with the
+    /// counters key-sorted (see [`SpaceSaving::export`]). The half-life
+    /// is a configuration knob, not state — the checkpoint fingerprint
+    /// carries it.
+    pub fn export(&self) -> (usize, u64, Vec<(K, u64, u64)>) {
+        let (cap, entries) = self.inner.export();
+        (cap, self.now_ns, entries)
+    }
+
+    /// Rebuild from an [`export`] snapshot; errors loudly on impossible
+    /// shapes like [`SpaceSaving::from_parts`].
+    ///
+    /// [`export`]: DecayedSpaceSaving::export
+    pub fn from_parts(
+        cap: usize,
+        half_life_ns: u64,
+        now_ns: u64,
+        entries: &[(K, u64, u64)],
+    ) -> Result<DecayedSpaceSaving<K>, String> {
+        if half_life_ns < 1 {
+            return Err("decay half-life must be >= 1 ns".to_string());
+        }
+        Ok(DecayedSpaceSaving {
+            inner: SpaceSaving::from_parts(cap, entries)?,
+            half_life_ns,
+            now_ns,
+        })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -371,6 +501,72 @@ mod tests {
                 "stale entries must be compacted away"
             );
         }
+    }
+
+    #[test]
+    fn decay_halves_counts_per_half_life_and_reranks() {
+        let mut s: DecayedSpaceSaving<u32> = DecayedSpaceSaving::new(4, 1_000);
+        s.add(1, 800); // hot early…
+        s.advance_to(2_000); // …then idle for two half-lives: 800 → 200
+        assert_eq!(s.top(1), vec![(1, 200, 0)]);
+        s.add(2, 300); // a newly hot key overtakes the decayed one
+        let top = s.top(2);
+        assert_eq!(top[0], (2, 300, 0));
+        assert_eq!(top[1], (1, 200, 0));
+        // Monotonic: a stale or repeated timestamp is a no-op.
+        s.advance_to(2_000);
+        s.advance_to(1_500);
+        assert_eq!(s.top(2), top);
+        // A key idle long enough decays to zero and is the next victim.
+        s.advance_to(2_000 + 1_000 * 64);
+        assert_eq!(s.top(2), vec![(1, 0, 0), (2, 0, 0)]);
+    }
+
+    #[test]
+    fn decayed_export_restore_preserves_future_behaviour() {
+        let mut rng = Prng::new(0xFADE);
+        let mut original: DecayedSpaceSaving<u32> = DecayedSpaceSaving::new(5, 10_000);
+        let mut now = 0u64;
+        for _ in 0..200 {
+            now += rng.below(5_000);
+            original.advance_to(now);
+            original.add(rng.below(32) as u32, 1 + rng.below(9));
+        }
+        let (cap, snap_now, entries) = original.export();
+        assert_eq!(cap, 5);
+        assert_eq!(snap_now, now);
+        let mut restored =
+            DecayedSpaceSaving::from_parts(cap, 10_000, snap_now, &entries).unwrap();
+        assert_eq!(restored.top(5), original.top(5));
+        // Identical continuation: same decays, same victims.
+        for _ in 0..200 {
+            now += rng.below(5_000);
+            let (k, w) = (rng.below(32) as u32, 1 + rng.below(9));
+            original.advance_to(now);
+            restored.advance_to(now);
+            original.add(k, w);
+            restored.add(k, w);
+        }
+        assert_eq!(restored.export(), original.export());
+        // Impossible shapes stay loud errors.
+        let err =
+            DecayedSpaceSaving::<u32>::from_parts(1, 0, 0, &[]).unwrap_err();
+        assert!(err.contains("half-life"), "{err}");
+    }
+
+    #[test]
+    fn decayed_heap_stays_consistent_across_advances() {
+        // Eviction right after a decay must pick the decayed minimum:
+        // the heap is rebuilt from the rescaled counters, so a stale
+        // pre-decay entry can never elect the victim.
+        let mut s: DecayedSpaceSaving<u32> = DecayedSpaceSaving::new(2, 1_000);
+        s.add(1, 1_000); // will decay to 125
+        s.add(2, 400); // will decay to 50 — the post-decay minimum
+        s.advance_to(3_000);
+        s.add(3, 10); // must seize key 2 (min 50), inheriting err 50
+        let top = s.top(2);
+        assert_eq!(top[0], (1, 125, 0));
+        assert_eq!(top[1], (3, 60, 50));
     }
 
     #[test]

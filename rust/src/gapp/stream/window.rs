@@ -79,17 +79,70 @@ pub fn sort_canonical(paths: &mut [MergedPath]) {
     paths.sort_by_key(|p| (p.first_seen, p.stack_id));
 }
 
-/// Merge two partial snapshots into one canonical-order snapshot —
-/// the binary node of the pairwise merge tree. Associative and
-/// commutative: aggregates combine through [`MergedPath::merge_from`]
-/// (all associative) and the order reconciles via [`sort_canonical`].
-pub fn merge_pair(a: Vec<MergedPath>, b: Vec<MergedPath>) -> Vec<MergedPath> {
-    let mut acc = PathAccumulator::new();
+/// Reusable scratch for the pairwise merges: a pool of
+/// [`PathAccumulator`]s handed out per merge and recycled afterwards
+/// (the lane-worker `LaneMsg::Feed` buffer-recycling pattern). A
+/// long-running tree session that window-closes thousands of times
+/// stops allocating a fresh accumulator — and its slot table — per
+/// pair: `take_paths` resets an accumulator while keeping its
+/// allocations, so a parked accumulator is ready for the next merge.
+#[derive(Default)]
+pub struct MergePool {
+    accs: Vec<PathAccumulator>,
+}
+
+impl MergePool {
+    pub fn new() -> MergePool {
+        MergePool::default()
+    }
+
+    fn take(&mut self) -> PathAccumulator {
+        self.accs.pop().unwrap_or_default()
+    }
+
+    fn put(&mut self, acc: PathAccumulator) {
+        self.accs.push(acc);
+    }
+
+    /// Accumulators currently parked for reuse.
+    pub fn parked(&self) -> usize {
+        self.accs.len()
+    }
+}
+
+/// The binary merge proper, into a caller-provided accumulator. The
+/// accumulator is left reset (via `take_paths`) and reusable.
+fn merge_pair_with(
+    acc: &mut PathAccumulator,
+    a: Vec<MergedPath>,
+    b: Vec<MergedPath>,
+) -> Vec<MergedPath> {
     for p in a.iter().chain(b.iter()) {
         acc.merge_path(p);
     }
     let mut out = acc.take_paths();
     sort_canonical(&mut out);
+    out
+}
+
+/// Merge two partial snapshots into one canonical-order snapshot —
+/// the binary node of the pairwise merge tree. Associative and
+/// commutative: aggregates combine through [`MergedPath::merge_from`]
+/// (all associative) and the order reconciles via [`sort_canonical`].
+pub fn merge_pair(a: Vec<MergedPath>, b: Vec<MergedPath>) -> Vec<MergedPath> {
+    merge_pair_with(&mut PathAccumulator::new(), a, b)
+}
+
+/// [`merge_pair`] with the scratch accumulator drawn from (and parked
+/// back into) `pool` instead of freshly allocated.
+pub fn merge_pair_pooled(
+    a: Vec<MergedPath>,
+    b: Vec<MergedPath>,
+    pool: &mut MergePool,
+) -> Vec<MergedPath> {
+    let mut acc = pool.take();
+    let out = merge_pair_with(&mut acc, a, b);
+    pool.put(acc);
     out
 }
 
@@ -99,7 +152,18 @@ pub fn merge_pair(a: Vec<MergedPath>, b: Vec<MergedPath>) -> Vec<MergedPath> {
 /// stream byte for byte, for every tree shape — associativity plus
 /// stamp-keyed order reconciliation (property-tested in
 /// `rust/tests/streaming_golden.rs`).
-pub fn merge_tree(mut parts: Vec<Vec<MergedPath>>) -> Vec<MergedPath> {
+pub fn merge_tree(parts: Vec<Vec<MergedPath>>) -> Vec<MergedPath> {
+    merge_tree_pooled(parts, &mut MergePool::new())
+}
+
+/// [`merge_tree`] drawing its pairwise scratch from `pool`: one
+/// accumulator serves every pair of every round, and a caller that
+/// merges repeatedly (the window-close path, the tier folds) reuses it
+/// across calls instead of allocating per pair.
+pub fn merge_tree_pooled(
+    mut parts: Vec<Vec<MergedPath>>,
+    pool: &mut MergePool,
+) -> Vec<MergedPath> {
     match parts.len() {
         0 => return Vec::new(),
         1 => {
@@ -117,7 +181,7 @@ pub fn merge_tree(mut parts: Vec<Vec<MergedPath>>) -> Vec<MergedPath> {
         let mut it = parts.into_iter();
         while let Some(a) = it.next() {
             match it.next() {
-                Some(b) => next.push(merge_pair(a, b)),
+                Some(b) => next.push(merge_pair_pooled(a, b, pool)),
                 None => next.push(a), // odd one out rides up a level
             }
         }
@@ -136,11 +200,24 @@ pub fn merge_tree(mut parts: Vec<Vec<MergedPath>>) -> Vec<MergedPath> {
 /// order, which keeps determinism without any cross-thread ordering
 /// protocol.
 pub fn merge_tree_parallel(
-    mut parts: Vec<Vec<MergedPath>>,
+    parts: Vec<Vec<MergedPath>>,
     max_threads: usize,
 ) -> Vec<MergedPath> {
+    merge_tree_parallel_pooled(parts, max_threads, &mut MergePool::new())
+}
+
+/// [`merge_tree_parallel`] drawing per-thread scratch accumulators from
+/// `pool`: each sibling merge of a wave takes one accumulator into its
+/// thread and parks it back after the join, so a persistent caller-held
+/// pool caps allocation at the peak wave width instead of one fresh
+/// accumulator per pair per window.
+pub fn merge_tree_parallel_pooled(
+    mut parts: Vec<Vec<MergedPath>>,
+    max_threads: usize,
+    pool: &mut MergePool,
+) -> Vec<MergedPath> {
     if max_threads <= 1 || parts.len() < 2 {
-        return merge_tree(parts);
+        return merge_tree_pooled(parts, pool);
     }
     while parts.len() > 1 {
         let mut pairs: Vec<(Vec<MergedPath>, Vec<MergedPath>)> = Vec::new();
@@ -163,10 +240,18 @@ pub fn merge_tree_parallel(
             std::thread::scope(|s| {
                 let handles: Vec<_> = wave
                     .into_iter()
-                    .map(|(a, b)| s.spawn(move || merge_pair(a, b)))
+                    .map(|(a, b)| {
+                        let mut acc = pool.take();
+                        s.spawn(move || {
+                            let out = merge_pair_with(&mut acc, a, b);
+                            (out, acc)
+                        })
+                    })
                     .collect();
                 for h in handles {
-                    next.push(h.join().expect("sibling merge panicked"));
+                    let (out, acc) = h.join().expect("sibling merge panicked");
+                    next.push(out);
+                    pool.put(acc);
                 }
             });
         }
@@ -352,6 +437,35 @@ mod tests {
             }
         }
         assert!(merge_tree_parallel(Vec::new(), 4).is_empty());
+    }
+
+    #[test]
+    fn pooled_merges_are_byte_identical_and_recycle_scratch() {
+        let slices: Vec<SliceEntry> = (0..60).map(slice).collect();
+        let mut shards: Vec<WindowAccumulator> =
+            (0..5).map(|_| WindowAccumulator::new()).collect();
+        for (i, s) in slices.iter().enumerate() {
+            shards[i % 5].add_slice(s, 0);
+        }
+        let parts: Vec<Vec<MergedPath>> =
+            shards.iter_mut().map(|w| w.snapshot()).collect();
+        let plain = merge_tree(parts.clone());
+        let mut pool = MergePool::new();
+        // Repeated merges through one pool: identical output every
+        // time (a recycled accumulator must behave like a fresh one)…
+        for round in 0..3 {
+            let pooled = merge_tree_pooled(parts.clone(), &mut pool);
+            assert_snapshots_equal(&plain, &pooled);
+            assert!(pool.parked() >= 1, "round {round}: scratch must park");
+            for threads in [2usize, 4] {
+                let par =
+                    merge_tree_parallel_pooled(parts.clone(), threads, &mut pool);
+                assert_snapshots_equal(&plain, &par);
+            }
+        }
+        // …and the pool never grows past the peak concurrent demand
+        // (sequential tree: 1; parallel waves: at most the wave width).
+        assert!(pool.parked() <= 4, "parked {}", pool.parked());
     }
 
     #[test]

@@ -11,6 +11,7 @@
 //!           [--lane-threads N] [--shard-partials] [--on-overflow shed|degrade]
 //!           [--checkpoint FILE] [--checkpoint-every N] [--resume FILE]
 //!           [--fault-plan FILE] [--stream PATH]
+//!           [--compact-base B] [--decay-half-life-us H]
 //!           [--format text|json|jsonl] [--output FILE]
 //!                                  # streaming analyzer: epoch-windowed
 //!                                  # per-window top-K; repeat --app for
@@ -62,6 +63,12 @@
 //! `gapp serve`. It implies --shard-partials so the stream carries the
 //! per-shard partials plus the `symbols` id → frames announcements the
 //! fleet service re-interns by.
+//! Bounded memory: --compact-base B (B >= 2; default off) folds closed
+//! windows into a tier pyramid so a session retains O(B * log T) state
+//! instead of O(T) — the cumulative report stays byte-identical to the
+//! uncompacted run. --decay-half-life-us H adds a time-decayed "recent"
+//! top-K (counts halve every H simulated µs) beside the cumulative one.
+//! `gapp serve` takes --compact-base too, bounding the fleet fold.
 //! gapp scenario run FILE [--seed N] [--format text|json|jsonl]
 //!                        [--output FILE]
 //!                                  # execute a scenarios/*.json spec:
@@ -153,7 +160,8 @@ fn main() {
                 "live mode: gapp live --app mysql --app dedup --window-us 5000 \
                  [--top 5] [--lru] [--shards N] [--ring-capacity R] \
                  [--merge serial|tree] [--lane-threads N] [--shard-partials] \
-                 [--on-overflow shed|degrade]"
+                 [--on-overflow shed|degrade] [--compact-base B] \
+                 [--decay-half-life-us H]"
             );
             eprintln!(
                 "durability: profile/live take --checkpoint FILE \
@@ -166,8 +174,8 @@ fn main() {
             );
             eprintln!(
                 "fleet:     gapp serve --listen SOCK [--producers N] [--top K] \
-                 [--horizon W] merges live producers started with \
-                 gapp live ... --stream SOCK into one session"
+                 [--horizon W] [--compact-base B] merges live producers \
+                 started with gapp live ... --stream SOCK into one session"
             );
             eprintln!(
                 "output:    profile/live take --format text|json|jsonl and \
@@ -239,6 +247,19 @@ fn gapp_config_from(args: &Args) -> anyhow::Result<GappConfig> {
         .map_err(bad)?;
     gcfg.on_overflow =
         OverflowPolicy::from_name(&overflow).expect("opt_choice vetted the name");
+    if args.get("compact-base").is_some() {
+        let b = args.opt_min1("compact-base", 0).map_err(bad)? as usize;
+        anyhow::ensure!(
+            b >= 2,
+            "--compact-base must be >= 2 (got {b}); a base-{b} pyramid cannot \
+             spread windows across a tier level"
+        );
+        gcfg.compact_base = Some(b);
+    }
+    if args.get("decay-half-life-us").is_some() {
+        gcfg.decay_half_life_us =
+            Some(args.opt_min1("decay-half-life-us", 0).map_err(bad)?);
+    }
     gcfg.output = args.get("output").map(String::from);
     Ok(gcfg)
 }
@@ -388,11 +409,23 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         })?
         .to_string();
     let bad = |e: String| anyhow::anyhow!(e);
+    let compact_base = if args.get("compact-base").is_some() {
+        let b = args.opt_min1("compact-base", 0).map_err(bad)? as usize;
+        anyhow::ensure!(
+            b >= 2,
+            "--compact-base must be >= 2 (got {b}); a base-{b} pyramid cannot \
+             spread windows across a tier level"
+        );
+        Some(b)
+    } else {
+        None
+    };
     let cfg = ServeConfig {
         listen,
         producers: args.opt_min1("producers", 1).map_err(bad)? as usize,
         top: args.opt_min1("top", 10).map_err(bad)? as usize,
         horizon: args.opt_min1("horizon", 8).map_err(bad)?,
+        compact_base,
     };
     let format = args
         .opt_choice("format", &ReportFormat::NAMES, ReportFormat::Jsonl.name())

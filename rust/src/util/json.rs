@@ -25,6 +25,16 @@ pub enum Json {
     Str(String),
     Arr(Vec<Json>),
     Obj(Vec<(String, Json)>),
+    /// **Emit-only**: a pre-serialized JSON value spliced verbatim into
+    /// the output. The checkpoint writer uses this to append cached
+    /// (immutable) tier-entry renderings without re-walking their path
+    /// tables every periodic write. The parser never produces `Raw`,
+    /// the accessors treat it as opaque (`None`), and the caller owns
+    /// the validity of the spliced text — always bytes a previous
+    /// `to_compact` produced. Splicing compact text under `to_pretty`
+    /// keeps the raw value on one line, which is exactly how the
+    /// checkpoint document uses it.
+    Raw(String),
 }
 
 impl Json {
@@ -134,6 +144,7 @@ impl Json {
             Json::Bool(true) => out.push_str("true"),
             Json::Bool(false) => out.push_str("false"),
             Json::Num(s) => out.push_str(s),
+            Json::Raw(s) => out.push_str(s),
             Json::Str(s) => write_escaped(out, s),
             Json::Arr(items) => {
                 if items.is_empty() {
@@ -610,6 +621,34 @@ mod tests {
             let s: String = mutated.into_iter().collect();
             let _ = Json::parse(&s); // must return, never panic
         }
+    }
+
+    #[test]
+    fn raw_values_splice_verbatim_and_parse_back_to_the_source() {
+        let entry = Json::obj(vec![
+            ("level", Json::u64(2)),
+            ("first", Json::u64(1)),
+            ("last", Json::u64(16)),
+        ]);
+        let cached = entry.to_compact();
+        let doc = Json::obj(vec![
+            ("checkpoint", Json::u64(1)),
+            (
+                "tiers",
+                Json::Arr(vec![Json::Raw(cached.clone()), Json::Raw(cached)]),
+            ),
+        ]);
+        // The spliced output parses, and each spliced element parses
+        // back to the document it was rendered from.
+        let parsed = Json::parse(&doc.to_compact()).unwrap();
+        let tiers = parsed.get("tiers").and_then(|t| t.as_arr()).unwrap();
+        assert_eq!(tiers.len(), 2);
+        assert_eq!(tiers[0], entry);
+        // Pretty output keeps raw values on one line but stays valid.
+        assert!(Json::parse(&doc.to_pretty()).is_ok());
+        // Raw is opaque to the accessors.
+        let raw = Json::Raw("{\"a\":1}".to_string());
+        assert!(raw.get("a").is_none() && raw.as_u64().is_none());
     }
 
     #[test]

@@ -65,6 +65,8 @@ struct Spec {
     plan: FaultPlan,
     checkpoint: Option<String>,
     resume: Option<String>,
+    compact_base: Option<usize>,
+    decay_us: Option<u64>,
 }
 
 impl Spec {
@@ -81,6 +83,8 @@ impl Spec {
             plan: FaultPlan::default(),
             checkpoint: None,
             resume: None,
+            compact_base: None,
+            decay_us: None,
         }
     }
 
@@ -125,6 +129,8 @@ fn run_spec(spec: &Spec) -> (anyhow::Result<SessionOutput>, Vec<String>) {
         gcfg.stack_lru = true;
         gcfg.stack_map_entries = 4;
     }
+    gcfg.compact_base = spec.compact_base;
+    gcfg.decay_half_life_us = spec.decay_us;
     let lines = Rc::new(RefCell::new(Vec::<String>::new()));
     let l2 = lines.clone();
     let mut session = Session::builder(AnalysisEngine::native())
@@ -198,6 +204,8 @@ fn assert_recovery_identity(spec: Spec, kill_after: u64, label: &str) -> Session
     assert_eq!(resumed.windows, base.windows, "{label}");
     assert_eq!(resumed.sketch_top, base.sketch_top, "{label}");
     assert_eq!(resumed.sketch_lines, base.sketch_lines, "{label}");
+    assert_eq!(resumed.recent_top, base.recent_top, "{label}");
+    assert_eq!(resumed.recent_lines, base.recent_lines, "{label}");
     assert_eq!(
         normalize(&resumed.report),
         normalize(&base.report),
@@ -431,6 +439,105 @@ fn a_resume_may_change_the_lane_thread_count() {
         );
         let _ = std::fs::remove_file(&ck);
     }
+}
+
+#[test]
+fn recovery_identity_holds_under_tier_compaction_at_a_fold_boundary() {
+    // PR 10: under `--compact-base 2`, window 2 fills level 0 and
+    // cascades into level 1 — a checkpoint published right after it
+    // snapshots a freshly folded pyramid, so killing there exercises
+    // restore *at* a tier boundary. Killing after window 3 restores a
+    // half-full level 0 instead. Both must finish byte-identical to
+    // the uninterrupted compacted run, which itself must report
+    // byte-identically to the flat (uncompacted) run.
+    let mut spec = Spec::new(4, MergeStrategy::Tree);
+    spec.compact_base = Some(2);
+    spec.decay_us = Some(1_000);
+    for kill_after in [2u64, 3] {
+        let label = format!("compact_kill{kill_after}");
+        let base = assert_recovery_identity(spec.clone(), kill_after, &label);
+        assert!(
+            !base.recent_top.is_empty(),
+            "{label}: the decayed sketch should have survived the round trip"
+        );
+        let (flat, _) = run_spec(&Spec::new(4, MergeStrategy::Tree));
+        assert_eq!(
+            normalize(&base.report),
+            normalize(&flat.unwrap().report),
+            "{label}: compaction must not move the report by a byte"
+        );
+    }
+}
+
+#[test]
+fn compacted_checkpoints_carry_tiers_instead_of_flat_vectors() {
+    // Checkpoint-size governance: with compaction on, the snapshot
+    // serializes the O(B·log T) tier pyramid and drops the flat
+    // per-window vectors entirely — that is where the bounded-disk
+    // claim comes from (CI asserts the size ratio on a long run).
+    let ck = tmp("compact_doc");
+    let mut spec = Spec::new(4, MergeStrategy::Tree);
+    spec.compact_base = Some(2);
+    spec.decay_us = Some(1_000);
+    let (crash, _) = run_spec(&spec.clone().kill_at(3, &ck));
+    crash.unwrap_err();
+    let cp = Checkpoint::load(&ck).unwrap();
+    assert!(cp.summaries.is_empty(), "flat summaries must be folded away");
+    assert!(cp.cumulative.is_empty(), "flat cumulative must be folded away");
+    let tiers = cp.tiers.as_ref().expect("a compacting session snapshots tiers");
+    assert_eq!(tiers.base, 2);
+    assert_eq!(tiers.windows_total, 3);
+    assert!(cp.recent.is_some(), "the decayed sketch snapshots too");
+    let fp = cp.fingerprint.as_ref().unwrap();
+    assert_eq!(fp.compact_base, 2);
+    assert_eq!(fp.decay_half_life_us, 1_000);
+    let _ = std::fs::remove_file(&ck);
+}
+
+#[test]
+fn resume_rejects_a_compaction_knob_change() {
+    // The tier pyramid's shape depends on the base and the decayed
+    // sketch on its half-life: a resume under different knobs could
+    // not reproduce the uninterrupted run, so the fingerprint rejects
+    // it, naming the knob both ways (on→off and off→on).
+    let ck = tmp("compact_mismatch");
+    let mut compacted = Spec::new(4, MergeStrategy::Tree);
+    compacted.compact_base = Some(2);
+    compacted.decay_us = Some(1_000);
+    let (crash, _) = run_spec(&compacted.clone().kill_at(2, &ck));
+    crash.unwrap_err();
+
+    // Base change and compaction turned off both name the knob.
+    let mut other = compacted.clone();
+    other.compact_base = Some(3);
+    let (r, _) = run_spec(&other.resume_from(&ck));
+    let err = r.unwrap_err().to_string();
+    assert!(err.contains("compact_base"), "{err}");
+
+    let mut off = compacted.clone();
+    off.compact_base = None;
+    let (r, _) = run_spec(&off.resume_from(&ck));
+    let err = r.unwrap_err().to_string();
+    assert!(err.contains("compact_base"), "{err}");
+
+    // Half-life change likewise.
+    let mut decay = compacted.clone();
+    decay.decay_us = Some(2_000);
+    let (r, _) = run_spec(&decay.resume_from(&ck));
+    let err = r.unwrap_err().to_string();
+    assert!(err.contains("decay_half_life_us"), "{err}");
+
+    // A flat checkpoint cannot seed a compacting session either.
+    let flat_ck = tmp("flat_for_compact");
+    let (crash, _) =
+        run_spec(&Spec::new(4, MergeStrategy::Tree).kill_at(2, &flat_ck));
+    crash.unwrap_err();
+    let (r, _) = run_spec(&compacted.clone().resume_from(&flat_ck));
+    let err = r.unwrap_err().to_string();
+    assert!(err.contains("compact_base"), "{err}");
+
+    let _ = std::fs::remove_file(&ck);
+    let _ = std::fs::remove_file(&flat_ck);
 }
 
 #[test]

@@ -254,6 +254,7 @@ fn serve_merges_socket_producers_and_the_merged_stream_reaggregates() {
         // Effectively unbounded: this test wants a lossless merged
         // stream (no forced-late windows), whatever the thread timing.
         horizon: 1 << 20,
+        compact_base: None,
     };
     let report = std::thread::scope(|s| {
         for text in [a.clone(), b.clone()] {

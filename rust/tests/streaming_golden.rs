@@ -49,6 +49,12 @@ fn normalize(r: &mut Report) {
     r.ppt_seconds = 0.0;
     r.memory_bytes = 0;
     r.window_drops = Vec::new();
+    // The window aggregates key the renderer's "windows N" line; strip
+    // them with the vector so live reports compare against batch ones
+    // (which close no windows) exactly as before the aggregates existed.
+    r.windows_total = 0;
+    r.windows_lossy = 0;
+    r.windows_drop_total = 0;
 }
 
 #[test]
@@ -688,6 +694,114 @@ fn random_workloads_fold_identically_at_every_lane_thread_count() {
             assert_eq!(norm(t.report), serial_text, "{tag}");
         }
     });
+}
+
+#[test]
+fn tier_compaction_is_byte_invisible_across_the_config_matrix() {
+    // The PR 10 acceptance golden: `--compact-base B` bounds retained
+    // state to O(B·log T) and must change *nothing* the session
+    // reports. Every transport shape the profiler offers — serial and
+    // tree merges, single and sharded rings, driver-thread and worker
+    // lanes, drop-new and LRU stack maps — is run flat and compacted
+    // at several bases, and the rendered reports (windows line
+    // included — only host timing normalized) must match byte for
+    // byte, along with the sketch.
+    let run = |base: Option<usize>,
+               merge: MergeStrategy,
+               shards: usize,
+               lane_threads: usize,
+               lru: bool| {
+        let app = apps::canneal(8, 5);
+        run_live(
+            std::slice::from_ref(&app),
+            KernelConfig::default(),
+            GappConfig {
+                shards: Some(shards),
+                merge,
+                lane_threads,
+                stack_lru: lru,
+                stack_map_entries: if lru { 4 } else { 1 << 10 },
+                compact_base: base,
+                ..Default::default()
+            },
+            AnalysisEngine::native(),
+            LiveConfig {
+                window_ns: 2_000_000,
+                ..Default::default()
+            },
+            |_| {},
+        )
+        .unwrap()
+    };
+    // Only host timing is normalized: the window aggregates (and with
+    // them the rendered "windows N" line) must survive compaction
+    // untouched, so this comparison is stricter than `normalize`.
+    let norm = |mut r: Report| {
+        r.ppt_seconds = 0.0;
+        r.memory_bytes = 0;
+        r.to_string()
+    };
+    let matrix = [
+        (MergeStrategy::Serial, 1usize, 1usize, false),
+        (MergeStrategy::Tree, 4, 1, false),
+        (MergeStrategy::Tree, 4, 2, false),
+        (MergeStrategy::Serial, 4, 1, true),
+    ];
+    for (merge, shards, lane_threads, lru) in matrix {
+        let flat = run(None, merge, shards, lane_threads, lru);
+        let flat_text = norm(flat.report.clone());
+        assert!(flat.windows.len() > 1, "run too short for a compaction golden");
+        for base in [2usize, 3, 8] {
+            let c = run(Some(base), merge, shards, lane_threads, lru);
+            let tag = format!(
+                "base={base} {merge:?} shards={shards} lanes={lane_threads} lru={lru}"
+            );
+            assert_eq!(norm(c.report.clone()), flat_text, "{tag}");
+            assert_eq!(c.sketch_top, flat.sketch_top, "{tag}");
+            assert_eq!(c.sketch_lines, flat.sketch_lines, "{tag}");
+            // The summary list is the folded tier view: fewer entries,
+            // same totals, same final window index.
+            assert!(c.windows.len() <= flat.windows.len(), "{tag}");
+            assert_eq!(
+                c.windows.iter().map(|w| w.slices).sum::<u64>(),
+                flat.windows.iter().map(|w| w.slices).sum::<u64>(),
+                "{tag}"
+            );
+            assert_eq!(
+                c.windows.iter().map(|w| w.drops).sum::<u64>(),
+                flat.windows.iter().map(|w| w.drops).sum::<u64>(),
+                "{tag}"
+            );
+            assert_eq!(
+                c.windows.last().map(|w| w.index),
+                flat.windows.last().map(|w| w.index),
+                "{tag}"
+            );
+            // The per-window breakdown is the one thing compaction
+            // folds away; the aggregates stand in for it.
+            assert!(c.report.window_drops.is_empty(), "{tag}");
+            assert_eq!(
+                c.report.windows_drop_total,
+                flat.report.window_drops.iter().sum::<u64>(),
+                "{tag}"
+            );
+        }
+    }
+    // Batch sessions close no windows: the knob must be inert there.
+    let batch = |base: Option<usize>| {
+        profile(
+            &apps::canneal(8, 5),
+            KernelConfig::default(),
+            GappConfig {
+                compact_base: base,
+                ..Default::default()
+            },
+            AnalysisEngine::native(),
+        )
+        .unwrap()
+        .0
+    };
+    assert_eq!(norm(batch(Some(4))), norm(batch(None)));
 }
 
 #[test]
